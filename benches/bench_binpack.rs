@@ -1,0 +1,98 @@
+//! Experiment T7 — §3.1: the Controller "estimates the RAM required to
+//! serve a given model and selects a serving job that has enough memory
+//! capacity".
+//!
+//! Placement quality of best-fit-decreasing (ours) vs first-fit
+//! (baseline) over realistic model-size mixes: many small models, some
+//! large ones ("model accuracy improvements are sometimes won at the
+//! cost of model bloat", §1 fn 1). Metrics: jobs used, utilization of
+//! used jobs, models that failed to place.
+
+use tensorserve::tfs2::binpack::{best_fit_decreasing, first_fit, utilization, Bin};
+use tensorserve::util::bench::Table;
+use tensorserve::util::rng::Rng;
+
+const JOB_CAPACITY: u64 = 16 << 30; // 16 GB serving jobs
+
+/// Model-size mix: 50% small (10-500MB), 30% medium (0.5-4GB),
+/// 20% large (6-14GB) — §1 fn 1: "model bloat".
+fn model_sizes(n: usize, seed: u64) -> Vec<(String, u64)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let mb: u64 = match rng.next_below(100) {
+                0..=49 => 10 + rng.next_below(490),
+                50..=79 => 512 + rng.next_below(3584),
+                _ => 6144 + rng.next_below(8192),
+            };
+            (format!("model-{i}"), mb << 20)
+        })
+        .collect()
+}
+
+struct Outcome {
+    jobs_used: usize,
+    utilization: f64,
+    failed: usize,
+}
+
+fn run_bfd(items: &[(String, u64)], jobs: usize) -> Outcome {
+    let mut bins: Vec<Bin> =
+        (0..jobs).map(|i| Bin::new(format!("job-{i}"), JOB_CAPACITY)).collect();
+    let (_placed, failed) = best_fit_decreasing(&mut bins, items);
+    Outcome {
+        jobs_used: bins.iter().filter(|b| b.used > 0).count(),
+        utilization: utilization(&bins),
+        failed: failed.len(),
+    }
+}
+
+fn run_first_fit(items: &[(String, u64)], jobs: usize) -> Outcome {
+    let mut bins: Vec<Bin> =
+        (0..jobs).map(|i| Bin::new(format!("job-{i}"), JOB_CAPACITY)).collect();
+    let mut failed = 0;
+    // Arrival order (no sorting) — the naive Controller.
+    for (_, size) in items {
+        match first_fit(&bins, *size) {
+            Some(i) => bins[i].used += size,
+            None => failed += 1,
+        }
+    }
+    Outcome {
+        jobs_used: bins.iter().filter(|b| b.used > 0).count(),
+        utilization: utilization(&bins),
+        failed,
+    }
+}
+
+fn main() {
+    let mut t = Table::new(
+        "T7: model placement onto 16GB serving jobs — best-fit-decreasing (ours) vs first-fit",
+        &["models", "jobs avail", "policy", "jobs used", "util of used", "failed"],
+    );
+    for n_models in [50usize, 200, 1000] {
+        let items = model_sizes(n_models, 42 + n_models as u64);
+        // Tight capacity: 2% headroom over the theoretical minimum —
+        // the regime where placement quality decides what fits.
+        let total: u64 = items.iter().map(|(_, s)| s).sum();
+        let n_jobs = ((total as f64 / JOB_CAPACITY as f64) * 1.02).ceil() as usize;
+        for (label, outcome) in [
+            ("best-fit-dec", run_bfd(&items, n_jobs)),
+            ("first-fit", run_first_fit(&items, n_jobs)),
+        ] {
+            t.row(vec![
+                n_models.to_string(),
+                n_jobs.to_string(),
+                label.into(),
+                outcome.jobs_used.to_string(),
+                format!("{:.1}%", outcome.utilization * 100.0),
+                outcome.failed.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nshape check: BFD packs the same models into fewer (or equal) jobs at higher\n\
+         utilization, and strands fewer large models when capacity is tight."
+    );
+}

@@ -1,0 +1,150 @@
+//! End-to-end benchmark: the real AOT-compiled classifier served over
+//! the full stack (RPC → manager → PJRT executable), thread sweep.
+//! Complements T1 (which factors the model and RPC layers out) by
+//! showing where the time goes when they are factored back in — the
+//! paper's own observation: "the main bottlenecks lie in the RPC and
+//! TensorFlow layers".
+
+use std::time::Duration;
+use tensorserve::base::tensor::Tensor;
+use tensorserve::inference::predict::{predict, PredictRequest};
+use tensorserve::lifecycle::source::ServingPolicy;
+use tensorserve::rpc::client::RpcClient;
+use tensorserve::rpc::proto::{Request, Response};
+use tensorserve::runtime::artifacts::{artifacts_available, default_artifacts_root};
+use tensorserve::server::builder::ModelServer;
+use tensorserve::server::config::{ModelConfig, ServerConfig};
+use tensorserve::sim::workload::closed_loop;
+use tensorserve::util::bench::{fmt_count, Table};
+use tensorserve::util::metrics::fmt_nanos;
+
+fn main() {
+    tensorserve::util::logging::set_level(tensorserve::util::logging::Level::Error);
+    if !artifacts_available() {
+        eprintln!("bench_e2e: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let server = ModelServer::start(ServerConfig {
+        models: vec![ModelConfig {
+            name: "mlp_classifier".into(),
+            platform: "hlo".into(),
+            base_path: default_artifacts_root().join("mlp_classifier"),
+            policy: ServingPolicy::Latest(1),
+        }],
+        poll_interval: Some(Duration::from_millis(200)),
+        ..Default::default()
+    })
+    .unwrap();
+    server.wait_until_ready(Duration::from_secs(300)).unwrap();
+    let addr = server.addr().to_string();
+    let dur = Duration::from_secs(3);
+
+    // --- full stack over RPC ------------------------------------------
+    let mut t = Table::new(
+        "E2E: predict(b=1) through RPC + manager + PJRT (real model)",
+        &["threads", "qps", "p50", "p99"],
+    );
+    for threads in [1usize, 4, 8, 16] {
+        let addr = addr.clone();
+        let stats = closed_loop(threads, dur, move |_| {
+            thread_local! {
+                static CLIENT: std::cell::RefCell<Option<RpcClient>> =
+                    const { std::cell::RefCell::new(None) };
+            }
+            CLIENT.with(|c| {
+                let mut c = c.borrow_mut();
+                if c.is_none() {
+                    *c = Some(RpcClient::connect(&addr)?);
+                }
+                let resp = c.as_mut().unwrap().call_ok(&Request::Predict {
+                    model: "mlp_classifier".into(),
+                    version: None,
+                    input: Tensor::zeros(vec![1, 32]),
+                })?;
+                anyhow::ensure!(matches!(resp, Response::Predict { .. }));
+                Ok(())
+            })
+        });
+        let (p50, _, p99, _) = stats.latency.percentiles();
+        t.row(vec![
+            threads.to_string(),
+            fmt_count(stats.qps()),
+            fmt_nanos(p50),
+            fmt_nanos(p99),
+        ]);
+    }
+    t.print();
+
+    // --- layer decomposition at 8 threads ------------------------------
+    let mut t = Table::new(
+        "E2E-b: where the time goes (8 threads) — paper: 'bottlenecks lie in the RPC and TensorFlow layers'",
+        &["path", "qps", "p50"],
+    );
+    // (1) RPC floor: ping only.
+    {
+        let addr = addr.clone();
+        let stats = closed_loop(8, dur, move |_| {
+            thread_local! {
+                static CLIENT: std::cell::RefCell<Option<RpcClient>> =
+                    const { std::cell::RefCell::new(None) };
+            }
+            CLIENT.with(|c| {
+                let mut c = c.borrow_mut();
+                if c.is_none() {
+                    *c = Some(RpcClient::connect(&addr)?);
+                }
+                c.as_mut().unwrap().call_ok(&Request::Ping)?;
+                Ok(())
+            })
+        });
+        let (p50, _, _, _) = stats.latency.percentiles();
+        t.row(vec!["RPC only (ping)".into(), fmt_count(stats.qps()), fmt_nanos(p50)]);
+    }
+    // (2) framework + model, no RPC (in-process predict).
+    {
+        let avm = std::sync::Arc::clone(server.avm());
+        let stats = closed_loop(8, dur, move |_| {
+            predict(
+                avm.as_ref(),
+                &PredictRequest {
+                    model: "mlp_classifier".into(),
+                    version: None,
+                    input: Tensor::zeros(vec![1, 32]),
+                },
+            )?;
+            Ok(())
+        });
+        let (p50, _, _, _) = stats.latency.percentiles();
+        t.row(vec![
+            "manager+model (no RPC)".into(),
+            fmt_count(stats.qps()),
+            fmt_nanos(p50),
+        ]);
+    }
+    // (3) full stack (from the sweep above, rerun for the same config).
+    {
+        let addr = addr.clone();
+        let stats = closed_loop(8, dur, move |_| {
+            thread_local! {
+                static CLIENT: std::cell::RefCell<Option<RpcClient>> =
+                    const { std::cell::RefCell::new(None) };
+            }
+            CLIENT.with(|c| {
+                let mut c = c.borrow_mut();
+                if c.is_none() {
+                    *c = Some(RpcClient::connect(&addr)?);
+                }
+                c.as_mut().unwrap().call_ok(&Request::Predict {
+                    model: "mlp_classifier".into(),
+                    version: None,
+                    input: Tensor::zeros(vec![1, 32]),
+                })?;
+                Ok(())
+            })
+        });
+        let (p50, _, _, _) = stats.latency.percentiles();
+        t.row(vec!["full stack".into(), fmt_count(stats.qps()), fmt_nanos(p50)]);
+    }
+    t.print();
+    server.stop();
+}

@@ -1,0 +1,76 @@
+//! Experiment T9 — §2.1.2: "One-time use of all threads to load the
+//! initial set of servable versions, to speed up server start-up."
+//!
+//! 32 models, each taking ~25ms to load (I/O + deserialize + compile
+//! stand-in). Sequential loading (1 load thread, the steady-state
+//! configuration) vs the parallel initial-load path with all cores.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tensorserve::base::loader::{FnLoader, Loader, ResourceEstimate};
+use tensorserve::base::servable::{ServableBox, ServableId};
+use tensorserve::lifecycle::basic_manager::{BasicManager, ManagerOptions};
+use tensorserve::util::bench::Table;
+
+const N_MODELS: usize = 32;
+const LOAD_TIME: Duration = Duration::from_millis(25);
+
+fn slow_loader() -> Arc<dyn Loader> {
+    Arc::new(FnLoader::new(ResourceEstimate::default(), "slow", || {
+        std::thread::sleep(LOAD_TIME);
+        Ok(Arc::new(0u8) as ServableBox)
+    }))
+}
+
+fn items() -> Vec<(ServableId, Arc<dyn Loader>)> {
+    (0..N_MODELS)
+        .map(|i| (ServableId::new(format!("m{i}"), 1), slow_loader()))
+        .collect()
+}
+
+fn main() {
+    tensorserve::util::logging::set_level(tensorserve::util::logging::Level::Error);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+
+    let mut t = Table::new(
+        &format!("T9: initial load of {N_MODELS} models x {}ms each", LOAD_TIME.as_millis()),
+        &["strategy", "threads", "startup time", "speedup"],
+    );
+
+    // Sequential baseline (steady-state pool size 1).
+    let m = BasicManager::new(ManagerOptions { load_threads: 1, ..Default::default() });
+    let t0 = Instant::now();
+    let results = m.parallel_initial_load(items(), 1);
+    let seq = t0.elapsed();
+    assert!(results.iter().all(|(_, r)| r.is_ok()));
+
+    t.row(vec![
+        "sequential".into(),
+        "1".into(),
+        format!("{:.0} ms", seq.as_secs_f64() * 1e3),
+        "1.0x".into(),
+    ]);
+
+    // Parallel initial load with a few widths up to all cores.
+    for threads in [4usize, 8, cores] {
+        let m = BasicManager::new(ManagerOptions { load_threads: 1, ..Default::default() });
+        let t0 = Instant::now();
+        let results = m.parallel_initial_load(items(), threads);
+        let par = t0.elapsed();
+        assert!(results.iter().all(|(_, r)| r.is_ok()));
+        assert_eq!(m.ready_names().len(), N_MODELS);
+        t.row(vec![
+            "parallel (ours)".into(),
+            threads.to_string(),
+            format!("{:.0} ms", par.as_secs_f64() * 1e3),
+            format!("{:.1}x", seq.as_secs_f64() / par.as_secs_f64()),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nshape check: startup scales ~linearly with threads until N_MODELS/threads\n\
+         rounds up (32 x 25ms = 800ms sequential; ~{}ms at {} threads).",
+        (N_MODELS as f64 / cores as f64).ceil() * LOAD_TIME.as_millis() as f64,
+        cores
+    );
+}

@@ -1,0 +1,107 @@
+//! Experiment T1 — the §4 headline: "TensorFlow-Serving itself can
+//! handle about 100,000 requests per second per core" with the RPC and
+//! model layers factored out (their testbed: 16 vCPU Xeon E5 2.6 GHz).
+//!
+//! We serve [`NullServable`]s: the full framework path runs — RCU
+//! serving-map lookup, version resolution, typed handle checkout with
+//! deferred-drop refcounting, dispatch, metrics — but "inference" is a
+//! counter bump and the RPC layer is absent, exactly the paper's
+//! methodology. Rows report qps and qps/core across a thread sweep, and
+//! scaling with the number of resident models.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tensorserve::base::servable::ServableId;
+use tensorserve::inference::null::{null_loader, NullServable};
+use tensorserve::lifecycle::basic_manager::{BasicManager, VersionRequest};
+use tensorserve::sim::workload::closed_loop;
+use tensorserve::util::bench::{fmt_count, Table};
+
+fn manager_with_models(n: usize) -> Arc<BasicManager> {
+    let m = BasicManager::with_defaults();
+    for i in 0..n {
+        m.load_and_wait(
+            ServableId::new(format!("model-{i}"), 1),
+            null_loader(),
+            Duration::from_secs(10),
+        )
+        .unwrap();
+    }
+    m
+}
+
+fn main() {
+    tensorserve::util::logging::set_level(tensorserve::util::logging::Level::Error);
+    let dur = Duration::from_secs(2);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("testbed: {cores} core(s) (paper testbed: 16 vCPU Xeon E5 2.6GHz)");
+
+    // ---- thread sweep, 1 model -------------------------------------
+    let mut t = Table::new(
+        "T1: framework-only throughput (null servable, no RPC) — paper: ~100k qps/core",
+        &["threads", "qps", "qps/core", "p50", "p99.9"],
+    );
+    for threads in [1usize, 2, 4, 8, 16] {
+        let m = manager_with_models(1);
+        let stats = closed_loop(threads, dur, move |_| {
+            let h = m.handle::<NullServable>("model-0", VersionRequest::Latest)?;
+            h.run(1);
+            Ok(())
+        });
+        let (p50, _, _, p999) = stats.latency.percentiles();
+        // Threads beyond physical cores time-slice: divide by the
+        // smaller of the two for an honest per-core figure.
+        let eff_cores = threads.min(cores) as f64;
+        t.row(vec![
+            threads.to_string(),
+            fmt_count(stats.qps()),
+            fmt_count(stats.qps() / eff_cores),
+            tensorserve::util::metrics::fmt_nanos(p50),
+            tensorserve::util::metrics::fmt_nanos(p999),
+        ]);
+    }
+    t.print();
+
+    // ---- model-count sweep, 8 threads -------------------------------
+    let mut t = Table::new(
+        "T1b: lookup scaling with resident model count (8 threads)",
+        &["models", "qps", "qps/core"],
+    );
+    let eff = 8.0f64.min(cores as f64);
+    for models in [1usize, 10, 100, 1000] {
+        let m = manager_with_models(models);
+        let stats = closed_loop(8, dur, move |tid| {
+            let name = format!("model-{}", tid % models);
+            let h = m.handle::<NullServable>(&name, VersionRequest::Latest)?;
+            h.run(1);
+            Ok(())
+        });
+        t.row(vec![
+            models.to_string(),
+            fmt_count(stats.qps()),
+            fmt_count(stats.qps() / eff),
+        ]);
+    }
+    t.print();
+
+    // ---- specific-version vs latest ---------------------------------
+    let mut t = Table::new(
+        "T1c: version resolution cost (8 threads, 1 model)",
+        &["lookup", "qps/core"],
+    );
+    for (label, specific) in [("latest", false), ("specific", true)] {
+        let m = manager_with_models(1);
+        let stats = closed_loop(8, dur, move |_| {
+            let req = if specific {
+                VersionRequest::Specific(1)
+            } else {
+                VersionRequest::Latest
+            };
+            let h = m.handle::<NullServable>("model-0", req)?;
+            h.run(1);
+            Ok(())
+        });
+        t.row(vec![label.to_string(), fmt_count(stats.qps() / eff)]);
+    }
+    t.print();
+}

@@ -1,0 +1,126 @@
+//! Canary + rollback (§2.1.1) through the canonical server, driving the
+//! full Figure-1 chain: FileSystemSource → platform router → adapters →
+//! AspiredVersionsManager, plus the request logger for prediction
+//! comparison on teed traffic.
+//!
+//! Timeline reproduced:
+//! 1. Serve v1 only (casual default: latest = the only version).
+//! 2. "v2 arrives from training": canary — aspire BOTH, primary traffic
+//!    stays on v1, a sample tees to v2; compare predictions.
+//! 3. Confidence gained: promote v2 (unload v1) — no availability gap.
+//! 4. Flaw "detected": roll back to v1 (aspire the specific older
+//!    version).
+//!
+//! ```text
+//! cargo run --release --example canary_rollback
+//! ```
+
+use std::time::{Duration, Instant};
+use tensorserve::inference::classify::{classify, ClassifyRequest};
+use tensorserve::inference::example::{Example, Feature};
+use tensorserve::lifecycle::source::ServingPolicy;
+use tensorserve::runtime::artifacts::{artifacts_available, default_artifacts_root};
+use tensorserve::server::builder::ModelServer;
+use tensorserve::server::config::{ModelConfig, ServerConfig};
+
+fn example(seed: u64) -> Example {
+    let mut rng = tensorserve::util::rng::Rng::new(seed);
+    let x: Vec<f32> = (0..32).map(|_| rng.normal() as f32 * 2.0).collect();
+    Example::new().with("x", Feature::Floats(x))
+}
+
+fn wait_for_versions(server: &ModelServer, want: &[u64]) -> anyhow::Result<()> {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let ready = server.avm().basic().ready_versions("mlp_classifier");
+        if ready == want {
+            return Ok(());
+        }
+        if Instant::now() > deadline {
+            anyhow::bail!("timed out waiting for versions {want:?}, have {ready:?}");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let base = default_artifacts_root().join("mlp_classifier");
+
+    // Phase 1: casual deployment, latest version only. To simulate "v2
+    // has not been written from training yet", pin v1 explicitly first.
+    let server = ModelServer::start(ServerConfig {
+        models: vec![ModelConfig {
+            name: "mlp_classifier".into(),
+            platform: "hlo".into(),
+            base_path: base,
+            policy: ServingPolicy::Specific(vec![1]),
+        }],
+        poll_interval: Some(Duration::from_millis(50)),
+        ..Default::default()
+    })?;
+    wait_for_versions(&server, &[1])?;
+    println!("phase 1: serving v1 only: {:?}", server.avm().basic().ready_versions("mlp_classifier"));
+
+    // Phase 2: v2 "arrives"; canary = aspire the two newest versions.
+    server.set_serving_policy("mlp_classifier", ServingPolicy::Latest(2));
+    wait_for_versions(&server, &[1, 2])?;
+    println!("phase 2: canary — both versions resident");
+
+    // Primary traffic → v1; tee a sample → v2 and compare predictions.
+    let mut agree = 0;
+    let mut total = 0;
+    let core = server.core();
+    for seed in 0..200u64 {
+        let ex = example(seed);
+        let primary = classify(
+            core.avm().as_ref(),
+            &ClassifyRequest {
+                model: "mlp_classifier".into(),
+                version: Some(1),
+                examples: vec![ex.clone()],
+            },
+        )?;
+        // Tee ~25% of traffic to the canary.
+        if seed % 4 == 0 {
+            let canary = classify(
+                core.avm().as_ref(),
+                &ClassifyRequest {
+                    model: "mlp_classifier".into(),
+                    version: Some(2),
+                    examples: vec![ex],
+                },
+            )?;
+            total += 1;
+            if canary.results[0].class == primary.results[0].class {
+                agree += 1;
+            }
+        }
+    }
+    println!(
+        "phase 2: canary comparison: {agree}/{total} predictions agree \
+         (v1 acc 0.954, v2 acc 1.0 on train — disagreements are v1's mistakes)"
+    );
+
+    // Phase 3: promote v2 — availability-preserving: load-then-unload
+    // already happened, so this just drops v1.
+    server.set_serving_policy("mlp_classifier", ServingPolicy::Latest(1));
+    wait_for_versions(&server, &[2])?;
+    println!("phase 3: promoted — serving v2 only");
+
+    // Phase 4: flaw detected in v2 → rollback to pinned v1 (§2.1.1).
+    server.set_serving_policy("mlp_classifier", ServingPolicy::Specific(vec![1]));
+    wait_for_versions(&server, &[1])?;
+    println!("phase 4: rolled back — serving v1 only");
+
+    // End rollback: a "fixed" version appears (here: v2 again).
+    server.set_serving_policy("mlp_classifier", ServingPolicy::Latest(1));
+    wait_for_versions(&server, &[2])?;
+    println!("phase 5: rollback ended — serving v2");
+
+    server.stop();
+    println!("canary_rollback OK");
+    Ok(())
+}

@@ -1,0 +1,268 @@
+//! END-TO-END driver: every layer composed on a real workload.
+//!
+//! Python (build time) trained the MLPs and AOT-lowered them — through
+//! the Pallas dense kernel — to HLO text; this binary loads them via
+//! PJRT, serves them through the full lifecycle + RPC stack, and
+//! reports the serving metrics the paper cares about:
+//!
+//! 1. RPC serving throughput + latency percentiles (closed loop).
+//! 2. Latency under a fixed-rate open loop (queueing included).
+//! 3. Inter-request batching (§2.2.1): concurrent single-row callers
+//!    merged into device batches — throughput with vs without batching.
+//! 4. Model quality over the served path (regressor correlation vs the
+//!    analytic target; classifier v1/v2 agreement).
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```text
+//! cargo run --release --example e2e_serving
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+use tensorserve::base::tensor::Tensor;
+use tensorserve::batching::scheduler::{QueueOptions, SchedulerOptions, SharedBatchScheduler};
+use tensorserve::batching::session::{BatchRunner, BatchingSession, SessionOptions};
+use tensorserve::inference::example::{Example, Feature};
+use tensorserve::lifecycle::basic_manager::VersionRequest;
+use tensorserve::rpc::client::RpcClient;
+use tensorserve::rpc::proto::{Request, Response};
+use tensorserve::runtime::artifacts::{artifacts_available, default_artifacts_root};
+use tensorserve::runtime::hlo_servable::HloServable;
+use tensorserve::server::builder::ModelServer;
+use tensorserve::server::config::{ModelConfig, ServerConfig};
+use tensorserve::sim::workload::{closed_loop, open_loop};
+use tensorserve::util::rng::Rng;
+
+fn gaussian_example(rng: &mut Rng) -> Example {
+    let x: Vec<f32> = (0..32).map(|_| rng.normal() as f32).collect();
+    Example::new().with("x", Feature::Floats(x))
+}
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let artifacts = default_artifacts_root();
+    let model = |name: &str| ModelConfig {
+        name: name.into(),
+        platform: "hlo".into(),
+        base_path: artifacts.join(name),
+        policy: tensorserve::lifecycle::source::ServingPolicy::Latest(2),
+    };
+
+    println!("=== e2e_serving: full-stack serving run ===");
+    let server = ModelServer::start(ServerConfig {
+        models: vec![model("mlp_classifier"), model("mlp_regressor")],
+        poll_interval: Some(Duration::from_millis(100)),
+        load_threads: 4,
+        ..Default::default()
+    })?;
+    let ready = server.wait_until_ready(Duration::from_secs(300))?;
+    println!("models ready: {ready:?}");
+    let addr = server.addr().to_string();
+
+    // ---------------------------------------------------------------
+    // 1. Closed-loop RPC throughput (8 clients, classify batch of 4).
+    // ---------------------------------------------------------------
+    {
+        let addr = addr.clone();
+        let stats = closed_loop(8, Duration::from_secs(4), move |tid| {
+            thread_local! {
+                static CLIENT: std::cell::RefCell<Option<RpcClient>> =
+                    const { std::cell::RefCell::new(None) };
+            }
+            CLIENT.with(|c| {
+                let mut c = c.borrow_mut();
+                if c.is_none() {
+                    *c = Some(RpcClient::connect(&addr)?);
+                }
+                let mut rng = Rng::new(tid as u64 * 7919);
+                let examples: Vec<Example> =
+                    (0..4).map(|_| gaussian_example(&mut rng)).collect();
+                let resp = c.as_mut().unwrap().call_ok(&Request::Classify {
+                    model: "mlp_classifier".into(),
+                    version: None,
+                    examples,
+                })?;
+                anyhow::ensure!(matches!(resp, Response::Classify { .. }));
+                Ok(())
+            })
+        });
+        println!("[1] closed-loop RPC classify(b=4): {}", stats.summary());
+    }
+
+    // ---------------------------------------------------------------
+    // 2. Open-loop latency at a moderate fixed rate.
+    // ---------------------------------------------------------------
+    {
+        let addr = addr.clone();
+        let stats = open_loop(300.0, Duration::from_secs(4), 8, 42, move || {
+            let mut client = RpcClient::connect(&addr)?;
+            let mut rng = Rng::new(1);
+            let resp = client.call_ok(&Request::Regress {
+                model: "mlp_regressor".into(),
+                version: None,
+                examples: vec![gaussian_example(&mut rng)],
+            })?;
+            anyhow::ensure!(matches!(resp, Response::Regress { .. }));
+            Ok(())
+        });
+        println!("[2] open-loop RPC regress @300qps: {}", stats.summary());
+    }
+
+    // ---------------------------------------------------------------
+    // 3. Inter-request batching: 16 concurrent single-row callers.
+    // ---------------------------------------------------------------
+    {
+        let handle = Arc::new(
+            server
+                .avm()
+                .handle::<HloServable>("mlp_classifier", VersionRequest::Latest)?,
+        );
+        // The device has 2 concurrent streams (like a GPU/TPU with a
+        // small number of execution queues — the regime §2.2.1 batches
+        // for). A counting semaphore models the stream limit.
+        struct Sem(std::sync::Mutex<usize>, std::sync::Condvar);
+        impl Sem {
+            fn run<T>(&self, f: impl FnOnce() -> T) -> T {
+                let mut n = self.0.lock().unwrap();
+                while *n == 0 {
+                    n = self.1.wait(n).unwrap();
+                }
+                *n -= 1;
+                drop(n);
+                let out = f();
+                *self.0.lock().unwrap() += 1;
+                self.1.notify_one();
+                out
+            }
+        }
+        let sem = Arc::new(Sem(std::sync::Mutex::new(2), std::sync::Condvar::new()));
+
+        // (a) Unbatched baseline: 16 callers each running b=1 requests
+        //     through the 2-stream device.
+        let h = Arc::clone(&handle);
+        let sem_a = Arc::clone(&sem);
+        let unbatched = closed_loop(16, Duration::from_secs(3), move |tid| {
+            let mut rng = Rng::new(tid as u64);
+            let x: Vec<f32> = (0..32).map(|_| rng.normal() as f32).collect();
+            let t = Tensor::matrix(vec![x])?;
+            sem_a.run(|| h.run(&t))?;
+            Ok(())
+        });
+
+        // (b) Batched: same callers through a BatchingSession.
+        let scheduler = SharedBatchScheduler::new(SchedulerOptions {
+            num_batch_threads: 2,
+            name: "e2e".into(),
+        });
+        let h = Arc::clone(&handle);
+        let sem_b = Arc::clone(&sem);
+        let runner = Arc::new(move |input: Tensor| {
+            let out = sem_b.run(|| h.run(&input))?;
+            Ok(vec![out[0].as_f32()?.clone()])
+        }) as Arc<dyn BatchRunner>;
+        let session = Arc::new(BatchingSession::new(
+            &scheduler,
+            "mlp_classifier",
+            SessionOptions {
+                // 16 concurrent callers ⇒ a full batch of 16 closes
+                // immediately; the timeout only pads the stragglers.
+                queue: QueueOptions {
+                    max_batch_size: 16,
+                    batch_timeout: Duration::from_micros(200),
+                    max_enqueued_batches: 256,
+                },
+                allowed_batch_sizes: vec![1, 4, 16, 64],
+            },
+            runner,
+        ));
+        let s = Arc::clone(&session);
+        let batched = closed_loop(16, Duration::from_secs(3), move |tid| {
+            let mut rng = Rng::new(tid as u64);
+            let x: Vec<f32> = (0..32).map(|_| rng.normal() as f32).collect();
+            s.run(Tensor::matrix(vec![x])?)?;
+            Ok(())
+        });
+        let merged = session.tasks_processed() as f64
+            / session.batches_processed().max(1) as f64;
+        println!(
+            "[3] batching: unbatched {:.0} qps vs batched {:.0} qps \
+             (mean merged batch {merged:.1}; speedup {:.2}x)",
+            unbatched.qps(),
+            batched.qps(),
+            batched.qps() / unbatched.qps()
+        );
+        println!("    unbatched latency {}", unbatched.latency.summary());
+        println!("    batched   latency {}", batched.latency.summary());
+    }
+
+    // ---------------------------------------------------------------
+    // 4. Served-model quality.
+    // ---------------------------------------------------------------
+    {
+        let mut client = RpcClient::connect(&addr)?;
+        let mut rng = Rng::new(99);
+        let examples: Vec<Example> = (0..256).map(|_| gaussian_example(&mut rng)).collect();
+        let targets: Vec<f32> = examples
+            .iter()
+            .map(|e| {
+                let x = e.floats("x").unwrap();
+                x[0].tanh() + 0.5 * x[1] * x[2]
+            })
+            .collect();
+        // Chunk to the largest compiled batch size (the ladder tops at
+        // 64; bigger requests would go through the splitter).
+        let mut values = Vec::new();
+        for chunk in examples.chunks(64) {
+            let resp = client.call_ok(&Request::Regress {
+                model: "mlp_regressor".into(),
+                version: None,
+                examples: chunk.to_vec(),
+            })?;
+            match resp {
+                Response::Regress { values: v, .. } => values.extend(v),
+                other => anyhow::bail!("unexpected {other:?}"),
+            }
+        }
+        let n = values.len() as f32;
+        let (mp, mt) = (
+            values.iter().sum::<f32>() / n,
+            targets.iter().sum::<f32>() / n,
+        );
+        let cov: f32 = values.iter().zip(&targets).map(|(p, t)| (p - mp) * (t - mt)).sum();
+        let vp: f32 = values.iter().map(|p| (p - mp) * (p - mp)).sum();
+        let vt: f32 = targets.iter().map(|t| (t - mt) * (t - mt)).sum();
+        let corr = cov / (vp.sqrt() * vt.sqrt());
+        println!("[4] served regressor correlation vs analytic target: r={corr:.3}");
+        anyhow::ensure!(corr > 0.6, "served model quality collapsed");
+
+        // classifier v1/v2 agreement over the served path
+        let agree = {
+            let c1 = client.call_ok(&Request::Classify {
+                model: "mlp_classifier".into(),
+                version: Some(1),
+                examples: examples[..64].to_vec(),
+            })?;
+            let c2 = client.call_ok(&Request::Classify {
+                model: "mlp_classifier".into(),
+                version: Some(2),
+                examples: examples[..64].to_vec(),
+            })?;
+            match (c1, c2) {
+                (
+                    Response::Classify { classes: a, .. },
+                    Response::Classify { classes: b, .. },
+                ) => a.iter().zip(&b).filter(|(x, y)| x == y).count(),
+                _ => 0,
+            }
+        };
+        println!("[4] classifier v1/v2 agreement on 64 samples: {agree}/64");
+    }
+
+    println!("server metrics:\n{}", server.registry().dump());
+    server.stop();
+    println!("e2e_serving OK");
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! TFS² hosted serving (§3.1, Figure 2): the full control plane over an
+//! in-process cluster of real serving jobs.
+//!
+//! * Controller: "add model" / "add model version" / canary / rollback,
+//!   RAM-estimate bin-packing onto jobs, state in the transactional
+//!   store (the Spanner stand-in).
+//! * Synchronizer: pushes aspired versions to jobs over RPC, polls
+//!   status, publishes the routing table.
+//! * Router: forwards inference with hedged backup requests.
+//! * Autoscaler: reacts to load by scaling job replicas.
+//!
+//! ```text
+//! cargo run --release --example tfs2_hosted
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+use tensorserve::inference::example::{Example, Feature};
+use tensorserve::rpc::client::ClientPool;
+use tensorserve::rpc::proto::{Request, Response};
+use tensorserve::runtime::artifacts::{artifacts_available, default_artifacts_root, ModelSpec};
+use tensorserve::tfs2::autoscaler::{Autoscaler, AutoscalerConfig};
+use tensorserve::tfs2::cluster::Cluster;
+use tensorserve::tfs2::controller::Controller;
+use tensorserve::tfs2::router::Router;
+use tensorserve::tfs2::store::Store;
+use tensorserve::tfs2::synchronizer::Synchronizer;
+
+fn sync_until_ready(
+    sync: &Synchronizer,
+    controller: &Controller,
+    router: &Router,
+    want_models: usize,
+) -> anyhow::Result<()> {
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let report = sync.sync_once(&controller.desired_state())?;
+        let table = sync.routing_table();
+        if report.ready >= want_models && table.len() >= want_models {
+            router.update_table(table);
+            return Ok(());
+        }
+        if std::time::Instant::now() > deadline {
+            anyhow::bail!("cluster never became ready: {report:?}");
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let artifacts = default_artifacts_root();
+
+    // --- Infrastructure: 3 serving jobs, store, control plane. -------
+    let cluster = Cluster::start(3, 64 << 20, artifacts.clone())?;
+    let store = Store::in_memory(1);
+    let controller = Controller::new(Arc::clone(&store));
+    let pool = Arc::new(ClientPool::new());
+    let sync = Synchronizer::new(Arc::clone(&store), Arc::clone(&pool));
+    let router = Router::new(Duration::from_millis(50));
+
+    for (id, addr, capacity) in cluster.jobs() {
+        controller.register_job(&id, &addr, capacity)?;
+    }
+    println!("cluster up: {:?}", cluster.jobs());
+
+    // --- "add model" x2: Controller estimates RAM from the spec and
+    //     bin-packs (best-fit) onto jobs. ------------------------------
+    for model in ["mlp_classifier", "mlp_regressor"] {
+        let spec = ModelSpec::load(&artifacts.join(model).join("2"))?;
+        let job = controller.add_model(
+            model,
+            artifacts.join(model).to_str().unwrap(),
+            spec.ram_estimate_bytes,
+            1, // start on v1
+        )?;
+        println!("controller placed {model} (est {}B) on {job}", spec.ram_estimate_bytes);
+    }
+
+    // --- Synchronizer reconciles; Router learns the table. -----------
+    sync_until_ready(&sync, &controller, &router, 2)?;
+    println!("routing table: {:?}", router.models());
+
+    // --- Serve through the Router (hedged requests on by default). ---
+    let mut rng = tensorserve::util::rng::Rng::new(7);
+    let examples: Vec<Example> = (0..4)
+        .map(|_| {
+            let x: Vec<f32> = (0..32).map(|_| rng.normal() as f32 * 2.0).collect();
+            Example::new().with("x", Feature::Floats(x))
+        })
+        .collect();
+    let resp = router.route(&Request::Classify {
+        model: "mlp_classifier".into(),
+        version: None,
+        examples: examples.clone(),
+    })?;
+    match &resp {
+        Response::Classify { model_version, classes, .. } => {
+            println!("classify via router: v{model_version} classes={classes:?}");
+            assert_eq!(*model_version, 1);
+        }
+        other => anyhow::bail!("unexpected {other:?}"),
+    }
+
+    // --- "add model version" with canary. ----------------------------
+    controller.set_canary("mlp_classifier", true)?;
+    controller.add_version("mlp_classifier", 2)?;
+    println!(
+        "canary: desired versions now {:?}",
+        controller.desired_versions("mlp_classifier")?
+    );
+    sync_until_ready(&sync, &controller, &router, 2)?;
+    // Promote after comparing (see canary_rollback example for the
+    // prediction-level comparison).
+    controller.promote_canary("mlp_classifier")?;
+    sync_until_ready(&sync, &controller, &router, 2)?;
+    let resp = router.route(&Request::Classify {
+        model: "mlp_classifier".into(),
+        version: None,
+        examples,
+    })?;
+    if let Response::Classify { model_version, .. } = resp {
+        println!("after promote: served by v{model_version}");
+        assert_eq!(model_version, 2);
+    }
+
+    // --- Rollback via the Controller. --------------------------------
+    controller.rollback("mlp_classifier", 1)?;
+    sync_until_ready(&sync, &controller, &router, 2)?;
+    println!(
+        "rollback: desired {:?}",
+        controller.desired_versions("mlp_classifier")?
+    );
+
+    // --- Autoscaler: load spike on the classifier's job. -------------
+    let mut scaler = Autoscaler::new(AutoscalerConfig {
+        target_load_per_replica: 100.0,
+        ..Default::default()
+    });
+    let job = controller.placement("mlp_classifier").unwrap();
+    scaler.track(&job, 1);
+    let decisions = scaler.tick(&HashMap::from([(job.clone(), 350.0)]));
+    for d in &decisions {
+        println!("autoscaler: {} {} -> {} replicas", d.job, d.from, d.to);
+        cluster.scale_to(&d.job, d.to)?;
+    }
+    // Push assignments to the new replicas and route across them.
+    let desired = controller.desired_state();
+    let assignment = desired.iter().find(|a| a.job == job).unwrap();
+    cluster.sync_replicas(&pool, &job, &assignment.models)?;
+    let replicas = cluster.replica_addrs(&job);
+    println!("job {job} now has {} replicas", replicas.len());
+    assert!(replicas.len() > 1);
+
+    println!(
+        "router stats: {} requests, hedge rate {:.3}",
+        router.registry.counter("router.requests").get(),
+        router.hedge_rate()
+    );
+    cluster.stop();
+    println!("tfs2_hosted OK");
+    Ok(())
+}

@@ -1,0 +1,211 @@
+"""AOT compile path: lower the L2 JAX models to HLO *text* artifacts.
+
+This is the only place Python runs — once, at build time (`make
+artifacts`). The rust serving binary is self-contained afterwards.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+XLA (xla_extension 0.5.1) rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifact layout (the rust `FileSystemSource` + `HloSourceAdapter` consume
+exactly this):
+
+    artifacts/
+      <model_name>/
+        <version>/                  # numeric version dirs, larger = newer
+          model_b<N>.hlo.txt        # one fixed-shape module per allowed
+          ...                       #   batch size N (TPU-style static shapes)
+          spec.json                 # signature, shapes, batch sizes, metrics
+      toy_table/1/table.json        # a "BananaFlow" (non-HLO) servable
+
+Fixed-shape executables per allowed batch size mirror what a TPU serving
+deployment does; the rust batcher pads each merged batch up to the
+nearest allowed size (batching/padding.rs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as m
+
+ALLOWED_BATCH_SIZES = (1, 4, 16, 64)
+
+CLASSIFIER_CONFIG = m.MlpConfig(
+    input_dim=32, hidden_dims=(64, 64), output_dim=4, name="mlp_classifier"
+)
+REGRESSOR_CONFIG = m.MlpConfig(
+    input_dim=32, hidden_dims=(64, 64), output_dim=1, name="mlp_regressor"
+)
+
+# version -> training steps. v2 is trained ~10x longer than v1, so canary
+# comparisons in the rust examples observe a real quality difference.
+CLASSIFIER_VERSIONS = {1: 5, 2: 300}
+REGRESSOR_VERSIONS = {1: 100, 2: 1500}
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XlaComputation -> HLO text (see module docstring).
+
+    CRITICAL: default HLO printing *elides* large constants as `{...}`,
+    which the text parser silently reparses as zeros — with weights baked
+    in as constants that made every model output bias-only garbage. Print
+    via HloPrintOptions with print_large_constants=True.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # Modern metadata attributes (source_end_line etc.) are rejected by
+    # xla_extension 0.5.1's HLO parser — strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "elided constants survived printing"
+    return text
+
+
+def lower_servable(forward, params, input_dim: int, batch: int) -> str:
+    """Lower `forward(params, x)` with params *baked in as constants*."""
+    fn = functools.partial(forward, params)  # close over weights
+    spec = jax.ShapeDtypeStruct((batch, input_dim), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def write_model(
+    out_dir: str,
+    name: str,
+    version: int,
+    forward,
+    params,
+    config: m.MlpConfig,
+    signature: str,
+    outputs,
+    metrics,
+) -> None:
+    vdir = os.path.join(out_dir, name, str(version))
+    os.makedirs(vdir, exist_ok=True)
+    for b in ALLOWED_BATCH_SIZES:
+        hlo = lower_servable(forward, params, config.input_dim, b)
+        with open(os.path.join(vdir, f"model_b{b}.hlo.txt"), "w") as f:
+            f.write(hlo)
+    n_params = sum(w.size + b.size for w, b in params)
+    spec = {
+        "platform": "hlo",
+        "signature": signature,
+        "model_name": name,
+        "version": version,
+        "input": {"name": "x", "shape": [-1, config.input_dim], "dtype": "f32"},
+        "outputs": outputs,
+        "allowed_batch_sizes": list(ALLOWED_BATCH_SIZES),
+        "artifact_pattern": "model_b{batch}.hlo.txt",
+        "n_params": int(n_params),
+        # RAM estimate the TFS^2 Controller uses for bin-packing: params
+        # + per-executable compiled-module overhead (coarse, like the paper).
+        "ram_estimate_bytes": int(n_params * 4 * 3 + (1 << 20)),
+        "metrics": metrics,
+    }
+    with open(os.path.join(vdir, "spec.json"), "w") as f:
+        json.dump(spec, f, indent=2)
+    write_golden(vdir, forward, params, config)
+    print(f"  wrote {name}/{version} ({n_params} params, {metrics})")
+
+
+def write_golden(vdir: str, forward, params, config: m.MlpConfig) -> None:
+    """Golden predictions for cross-layer numerics parity.
+
+    rust/tests/numerics_parity.rs replays these inputs through the
+    AOT-compiled HLO on the PJRT CPU client and asserts the outputs
+    match what jax computed here. This is the gate that caught the
+    elided-large-constants bug (weights silently reparsed as zeros).
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(20260711)
+    inputs = rng.standard_normal((4, config.input_dim)).astype(np.float32)
+    outputs = forward(params, jnp.asarray(inputs))
+    golden = {
+        "inputs": [[float(v) for v in row] for row in inputs],
+        "outputs": [
+            {
+                "dtype": str(o.dtype),
+                "values": np.asarray(o).reshape(-1).astype(float).tolist(),
+                "shape": list(o.shape),
+            }
+            for o in outputs
+        ],
+    }
+    with open(os.path.join(vdir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+
+
+def write_toy_table(out_dir: str) -> None:
+    """A non-HLO servable ("BananaFlow"): an embedding lookup table."""
+    vdir = os.path.join(out_dir, "toy_table", "1")
+    os.makedirs(vdir, exist_ok=True)
+    table = {
+        "platform": "table",
+        "model_name": "toy_table",
+        "version": 1,
+        "entries": {str(i): [float(i), float(i * i % 7)] for i in range(100)},
+    }
+    with open(os.path.join(vdir, "table.json"), "w") as f:
+        json.dump(table, f, indent=2)
+    print("  wrote toy_table/1")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts")
+    args = parser.parse_args()
+    out = args.out
+
+    print("training + lowering classifier versions...")
+    for version, steps in CLASSIFIER_VERSIONS.items():
+        params, acc = m.train_classifier(CLASSIFIER_CONFIG, steps)
+        write_model(
+            out,
+            CLASSIFIER_CONFIG.name,
+            version,
+            m.classifier_forward,
+            params,
+            CLASSIFIER_CONFIG,
+            signature="classify",
+            outputs=[
+                {"name": "log_probs", "shape": [-1, CLASSIFIER_CONFIG.output_dim], "dtype": "f32"},
+                {"name": "class", "shape": [-1], "dtype": "s32"},
+            ],
+            metrics={"train_steps": steps, "train_accuracy": round(acc, 4)},
+        )
+
+    print("training + lowering regressor versions...")
+    for version, steps in REGRESSOR_VERSIONS.items():
+        params, mse = m.train_regressor(REGRESSOR_CONFIG, steps)
+        write_model(
+            out,
+            REGRESSOR_CONFIG.name,
+            version,
+            m.regressor_forward,
+            params,
+            REGRESSOR_CONFIG,
+            signature="regress",
+            outputs=[{"name": "value", "shape": [-1], "dtype": "f32"}],
+            metrics={"train_steps": steps, "train_mse": round(mse, 6)},
+        )
+
+    write_toy_table(out)
+    print(f"artifacts written to {out}")
+
+
+if __name__ == "__main__":
+    main()

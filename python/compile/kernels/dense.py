@@ -1,0 +1,125 @@
+"""L1: fused dense-layer Pallas kernel — the inference hot-spot.
+
+The paper's batching machinery (TF-Serving §2.2.1) exists to feed exactly
+this kind of kernel: a *merged* batch of requests streamed through the
+accelerator's matrix unit. We implement ``y = act(x @ W + b)`` as a Pallas
+kernel tiled for the TPU memory hierarchy:
+
+* grid = (batch tiles, output tiles); each program owns a
+  ``(BLOCK_B, BLOCK_N)`` output tile resident in VMEM,
+* the reduction dimension K is kept whole per tile (models here have
+  K <= 512, so an x-tile of BLOCK_B*K f32 and a W-tile of K*BLOCK_N f32
+  both fit VMEM comfortably — see DESIGN.md §Perf for the footprint math),
+* the inner ``jnp.dot`` maps onto the MXU systolic array on real TPUs
+  (bf16/f32); under ``interpret=True`` it runs as numpy on CPU, which is
+  the only mode the CPU PJRT plugin can execute (real TPU lowering emits a
+  Mosaic custom-call).
+
+Correctness oracle: ``kernels.ref.dense_ref`` (pure jnp), enforced by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile shape. 128 matches the MXU lane width; BLOCK_B rides
+# the sublane dimension. (8, 128) * 4B = 4 KiB per f32 output tile.
+BLOCK_B = 8
+BLOCK_N = 128
+
+ACTIVATIONS = ("linear", "relu", "tanh")
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One (BLOCK_B, BLOCK_N) output tile: full-K matmul + bias + act."""
+    x = x_ref[...]  # (BLOCK_B, K)      VMEM
+    w = w_ref[...]  # (K, BLOCK_N)      VMEM
+    b = b_ref[...]  # (1, BLOCK_N)      VMEM
+    # MXU-shaped contraction; accumulate in f32 regardless of input dtype.
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b.astype(jnp.float32)
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "tanh":
+        acc = jnp.tanh(acc)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_b", "block_n", "interpret")
+)
+def dense(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "linear",
+    block_b: int = BLOCK_B,
+    block_n: int = BLOCK_N,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused ``act(x @ w + b)`` via a Pallas kernel.
+
+    x: (B, K), w: (K, N), b: (N,). Returns (B, N) in x.dtype.
+    Shapes that are not multiples of the block sizes are zero-padded into
+    the grid and sliced back out (zero rows/cols do not perturb the valid
+    region of a matmul; bias/activation are elementwise).
+    """
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} w{w.shape} b{b.shape}")
+    B, K = x.shape
+    K2, N = w.shape
+    if K != K2 or b.shape[0] != N:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    bb = min(block_b, _ceil_to(B, 8))
+    bn = min(block_n, _ceil_to(N, 128))
+    Bp, Np = _ceil_to(B, bb), _ceil_to(N, bn)
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0))) if Bp != B else x
+    wp = jnp.pad(w, ((0, 0), (0, Np - N))) if Np != N else w
+    bp = (jnp.pad(b, (0, Np - N)) if Np != N else b).reshape(1, Np)
+
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, activation=activation),
+        grid=(Bp // bb, Np // bn),
+        in_specs=[
+            pl.BlockSpec((bb, K), lambda i, j: (i, 0)),   # x tile: row band
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),   # w tile: col band
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),   # bias tile
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), x.dtype),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:B, :N]
+
+
+def vmem_footprint_bytes(
+    k: int, dtype_bytes: int = 4, block_b: int = BLOCK_B, block_n: int = BLOCK_N
+) -> int:
+    """Static VMEM footprint of one grid step (see DESIGN.md §Perf)."""
+    x_tile = block_b * k * dtype_bytes
+    w_tile = k * block_n * dtype_bytes
+    b_tile = block_n * dtype_bytes
+    o_tile = block_b * block_n * dtype_bytes
+    return x_tile + w_tile + b_tile + o_tile
+
+
+def mxu_utilization_estimate(
+    b: int, k: int, n: int, block_b: int = BLOCK_B, block_n: int = BLOCK_N
+) -> float:
+    """Fraction of MXU-issued MACs that are useful work (non-padding)."""
+    useful = b * k * n
+    issued = _ceil_to(b, block_b) * k * _ceil_to(n, block_n)
+    return useful / issued

@@ -1,0 +1,35 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the kernels are validated against at build
+time (python/tests/test_kernel.py). Keep them boring: no pallas, no
+custom tiling — just the textbook math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, activation: str = "linear"
+) -> jax.Array:
+    """Reference ``act(x @ w + b)`` with f32 accumulation."""
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b.astype(jnp.float32)
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "tanh":
+        acc = jnp.tanh(acc)
+    elif activation != "linear":
+        raise ValueError(f"unknown activation {activation!r}")
+    return acc.astype(x.dtype)
+
+
+def mlp_ref(x, params):
+    """Reference MLP forward: relu hidden layers, linear final layer."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        last = i == len(params) - 1
+        h = dense_ref(h, w, b, activation="linear" if last else "relu")
+    return h

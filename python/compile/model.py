@@ -1,0 +1,146 @@
+"""L2: the models TensorFlow-Serving serves, written in JAX.
+
+The paper treats models as black boxes; for the reproduction we need
+concrete servables, so we define two (mirroring the paper's
+classification + regression APIs, §2.2):
+
+* ``MLPClassifier`` — dense(relu) x2 -> dense -> log-softmax scores.
+* ``MLPRegressor``  — dense(relu) x2 -> dense(1) value head.
+
+Both forward passes route every dense layer through the L1 Pallas kernel
+(``kernels.dense.dense``), so the AOT-lowered HLO exercises the kernel
+end-to-end. Weights are *baked into the lowered module as constants*
+(closed over, not arguments): the serving request path only ships the
+input tensor, matching how TF-Serving ships a frozen SavedModel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import dense as dense_kernel
+from compile.kernels import ref as kernels_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    """Architecture of a small MLP servable."""
+
+    input_dim: int = 32
+    hidden_dims: tuple = (64, 64)
+    output_dim: int = 4  # n classes for classifier; 1 for regressor
+    name: str = "mlp"
+
+    @property
+    def layer_dims(self):
+        dims = (self.input_dim, *self.hidden_dims, self.output_dim)
+        return list(zip(dims[:-1], dims[1:]))
+
+
+def init_params(config: MlpConfig, key: jax.Array):
+    """He-initialized params: list of (w, b) per layer."""
+    params = []
+    for k_in, k_out in config.layer_dims:
+        key, wkey = jax.random.split(key)
+        w = jax.random.normal(wkey, (k_in, k_out), jnp.float32) * jnp.sqrt(
+            2.0 / k_in
+        )
+        b = jnp.zeros((k_out,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def mlp_forward(params, x: jax.Array, *, use_kernel: bool = True) -> jax.Array:
+    """MLP logits/value via the Pallas kernel (or the jnp ref)."""
+    fn = dense_kernel.dense if use_kernel else kernels_ref.dense_ref
+    h = x
+    for i, (w, b) in enumerate(params):
+        last = i == len(params) - 1
+        h = fn(h, w, b, activation="linear" if last else "relu")
+    return h
+
+
+def classifier_forward(params, x: jax.Array, *, use_kernel: bool = True):
+    """Returns (log_probs, predicted_class). This is the servable fn."""
+    logits = mlp_forward(params, x, use_kernel=use_kernel)
+    log_probs = jax.nn.log_softmax(logits, axis=-1)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return log_probs, pred
+
+
+def regressor_forward(params, x: jax.Array, *, use_kernel: bool = True):
+    """Returns (value,) of shape (B,). This is the servable fn."""
+    out = mlp_forward(params, x, use_kernel=use_kernel)
+    return (out[:, 0],)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic data + training (build-time only). v1 vs v2 of a servable are
+# checkpoints at different training lengths, so the canary comparison in
+# the rust examples sees a real quality difference.
+# ---------------------------------------------------------------------------
+
+
+def make_blobs(key, n: int, config: MlpConfig, *, noise: float = 2.5):
+    """Gaussian blobs: one cluster per class, linearly separable-ish."""
+    kc, kx, ky = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (config.output_dim, config.input_dim)) * 3.0
+    labels = jax.random.randint(ky, (n,), 0, config.output_dim)
+    x = centers[labels] + noise * jax.random.normal(kx, (n, config.input_dim))
+    return x.astype(jnp.float32), labels
+
+
+def make_regression_data(key, n: int, config: MlpConfig, *, noise: float = 0.05):
+    """y = tanh(x0) + 0.5*x1*x2 + eps — smooth, nonlinear, high-variance."""
+    kx, ke = jax.random.split(key)
+    x = jax.random.normal(kx, (n, config.input_dim), jnp.float32)
+    y = jnp.tanh(x[:, 0]) + 0.5 * x[:, 1] * x[:, 2]
+    y = y + noise * jax.random.normal(ke, (n,))
+    return x, y.astype(jnp.float32)
+
+
+def _sgd(params, grads, lr):
+    return [(w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(params, grads)]
+
+
+def train_classifier(config: MlpConfig, steps: int, seed: int = 0, lr: float = 0.05):
+    """Full-batch softmax-CE training on blobs. Returns (params, accuracy)."""
+    key = jax.random.PRNGKey(seed)
+    kd, kp = jax.random.split(key)
+    x, y = make_blobs(kd, 1024, config)
+    params = init_params(config, kp)
+
+    def loss_fn(params):
+        # Train with the jnp ref (fast to trace); serve with the kernel.
+        logits = mlp_forward(params, x, use_kernel=False)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+    step = jax.jit(lambda p: _sgd(p, jax.grad(loss_fn)(p), lr))
+    for _ in range(steps):
+        params = step(params)
+    preds = jnp.argmax(mlp_forward(params, x, use_kernel=False), axis=-1)
+    acc = float(jnp.mean(preds == y))
+    return params, acc
+
+
+def train_regressor(config: MlpConfig, steps: int, seed: int = 1, lr: float = 0.05):
+    """Full-batch MSE training. Returns (params, mse)."""
+    key = jax.random.PRNGKey(seed)
+    kd, kp = jax.random.split(key)
+    x, y = make_regression_data(kd, 1024, config)
+    params = init_params(config, kp)
+
+    def loss_fn(params):
+        pred = mlp_forward(params, x, use_kernel=False)[:, 0]
+        return jnp.mean((pred - y) ** 2)
+
+    step = jax.jit(lambda p: _sgd(p, jax.grad(loss_fn)(p), lr))
+    for _ in range(steps):
+        params = step(params)
+    mse = float(loss_fn(params))
+    return params, mse

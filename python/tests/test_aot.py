@@ -1,0 +1,97 @@
+"""AOT pipeline tests: lowered HLO text is parseable-looking, artifacts
+have the layout the rust FileSystemSource/HloSourceAdapter consume, and
+spec.json carries everything the runtime needs."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as m
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = m.MlpConfig(input_dim=8, hidden_dims=(8,), output_dim=2, name="tiny")
+
+
+def test_lower_servable_emits_hlo_text():
+    params = m.init_params(CFG, jax.random.PRNGKey(0))
+    hlo = aot.lower_servable(m.classifier_forward, params, CFG.input_dim, 4)
+    assert "HloModule" in hlo
+    # weights are baked in as constants -> the ENTRY computation takes
+    # exactly one parameter (x). (Sub-computations may have their own.)
+    # (in HLO text, sub-computations precede ENTRY, so everything after
+    # the ENTRY line is the entry body)
+    entry_body = hlo[hlo.index("ENTRY") :]
+    assert entry_body.count(" parameter(") == 1, entry_body
+    # REGRESSION GATE: default HLO printing elides large constants as
+    # `{...}`, which the rust-side parser reparses as ZEROS (weights
+    # vanish silently). to_hlo_text must print full constants.
+    assert "{...}" not in hlo
+    # and metadata must be stripped (xla_extension 0.5.1 parser rejects
+    # modern attributes like source_end_line)
+    assert "metadata=" not in hlo
+    # fixed batch shape appears
+    assert "f32[4,8]" in hlo
+
+
+def test_lower_servable_batch_sizes_differ():
+    params = m.init_params(CFG, jax.random.PRNGKey(0))
+    h1 = aot.lower_servable(m.classifier_forward, params, CFG.input_dim, 1)
+    h16 = aot.lower_servable(m.classifier_forward, params, CFG.input_dim, 16)
+    assert "f32[1,8]" in h1 and "f32[16,8]" in h16
+
+
+def test_write_model_layout(tmp_path):
+    params = m.init_params(CFG, jax.random.PRNGKey(1))
+    aot.write_model(
+        str(tmp_path),
+        "tiny",
+        3,
+        m.classifier_forward,
+        params,
+        CFG,
+        signature="classify",
+        outputs=[{"name": "log_probs", "shape": [-1, 2], "dtype": "f32"}],
+        metrics={"train_steps": 0},
+    )
+    vdir = tmp_path / "tiny" / "3"
+    for b in aot.ALLOWED_BATCH_SIZES:
+        assert (vdir / f"model_b{b}.hlo.txt").exists()
+    spec = json.loads((vdir / "spec.json").read_text())
+    assert spec["platform"] == "hlo"
+    assert spec["signature"] == "classify"
+    assert spec["version"] == 3
+    assert spec["allowed_batch_sizes"] == list(aot.ALLOWED_BATCH_SIZES)
+    assert spec["input"]["shape"] == [-1, CFG.input_dim]
+    assert spec["ram_estimate_bytes"] > 0
+    assert spec["n_params"] == sum(w.size + b_.size for w, b_ in params)
+
+
+def test_write_toy_table_layout(tmp_path):
+    aot.write_toy_table(str(tmp_path))
+    table = json.loads((tmp_path / "toy_table" / "1" / "table.json").read_text())
+    assert table["platform"] == "table"
+    assert len(table["entries"]) == 100
+    assert table["entries"]["3"] == [3.0, 2.0]
+
+
+def test_repo_artifacts_if_built():
+    """When `make artifacts` has run, validate the real tree."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    marker = os.path.join(root, "mlp_classifier")
+    if not os.path.isdir(marker):
+        pytest.skip("artifacts not built yet")
+    for version in aot.CLASSIFIER_VERSIONS:
+        vdir = os.path.join(marker, str(version))
+        spec = json.load(open(os.path.join(vdir, "spec.json")))
+        assert spec["signature"] == "classify"
+        for b in spec["allowed_batch_sizes"]:
+            assert os.path.exists(os.path.join(vdir, f"model_b{b}.hlo.txt"))
+    # v2 must actually be better than v1 (canary premise)
+    s1 = json.load(open(os.path.join(marker, "1", "spec.json")))
+    s2 = json.load(open(os.path.join(marker, "2", "spec.json")))
+    assert s2["metrics"]["train_accuracy"] >= s1["metrics"]["train_accuracy"]

@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas dense kernel vs the pure-jnp oracle.
+
+This is the CORE build-time correctness signal: hypothesis sweeps shapes,
+dtypes, activations and block sizes; every case must match ref.py to
+tight tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense as dk
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("activation", dk.ACTIVATIONS)
+@pytest.mark.parametrize(
+    "b,k,n",
+    [(1, 32, 4), (4, 32, 4), (16, 64, 64), (64, 32, 1), (8, 128, 128)],
+)
+def test_dense_matches_ref_serving_shapes(b, k, n, activation):
+    """The exact shapes the AOT models use."""
+    x, w, bias = rand(0, (b, k), jnp.float32), rand(1, (k, n), jnp.float32), rand(
+        2, (n,), jnp.float32
+    )
+    got = dk.dense(x, w, bias, activation=activation)
+    want = ref.dense_ref(x, w, bias, activation=activation)
+    np.testing.assert_allclose(got, want, **tol(jnp.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 70),
+    k=st.integers(1, 130),
+    n=st.integers(1, 140),
+    activation=st.sampled_from(dk.ACTIVATIONS),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_matches_ref_fuzzed_shapes(b, k, n, activation, seed):
+    """Arbitrary (incl. non-block-multiple) shapes must pad correctly."""
+    x = rand(seed, (b, k), jnp.float32)
+    w = rand(seed + 1, (k, n), jnp.float32)
+    bias = rand(seed + 2, (n,), jnp.float32)
+    got = dk.dense(x, w, bias, activation=activation)
+    want = ref.dense_ref(x, w, bias, activation=activation)
+    assert got.shape == (b, n)
+    np.testing.assert_allclose(got, want, **tol(jnp.float32))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 20),
+    k=st.integers(1, 64),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_bfloat16(b, k, n, seed):
+    """bf16 inputs (the MXU-native dtype) accumulate in f32 like ref."""
+    x = rand(seed, (b, k), jnp.bfloat16)
+    w = rand(seed + 1, (k, n), jnp.bfloat16)
+    bias = rand(seed + 2, (n,), jnp.bfloat16)
+    got = dk.dense(x, w, bias, activation="relu")
+    want = ref.dense_ref(x, w, bias, activation="relu")
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), **tol(jnp.bfloat16)
+    )
+
+
+@pytest.mark.parametrize("block_b,block_n", [(8, 128), (16, 128), (8, 256)])
+def test_dense_block_size_invariance(block_b, block_n):
+    """Tiling is a schedule, not semantics: results identical across blocks."""
+    x, w, bias = rand(5, (24, 48), jnp.float32), rand(6, (48, 200), jnp.float32), rand(
+        7, (200,), jnp.float32
+    )
+    base = ref.dense_ref(x, w, bias, activation="tanh")
+    got = dk.dense(x, w, bias, activation="tanh", block_b=block_b, block_n=block_n)
+    np.testing.assert_allclose(got, base, **tol(jnp.float32))
+
+
+def test_dense_rejects_bad_shapes():
+    x, w, b = jnp.zeros((2, 3)), jnp.zeros((4, 5)), jnp.zeros((5,))
+    with pytest.raises(ValueError):
+        dk.dense(x, w, b)
+    with pytest.raises(ValueError):
+        dk.dense(jnp.zeros((2, 4)), jnp.zeros((4, 5)), jnp.zeros((6,)))
+    with pytest.raises(ValueError):
+        dk.dense(jnp.zeros((2, 4)), jnp.zeros((4, 5)), jnp.zeros((5,)), activation="gelu")
+
+
+def test_vmem_footprint_fits_tpu_budget():
+    """DESIGN.md §Perf: one grid step must fit comfortably in 16 MiB VMEM."""
+    for k in (32, 64, 128, 512):
+        assert dk.vmem_footprint_bytes(k) < 2 * 1024 * 1024
+
+
+def test_mxu_utilization_estimate():
+    assert dk.mxu_utilization_estimate(8, 64, 128) == 1.0
+    # Batch 1 against an 8-row block wastes 7/8 of issued sublanes.
+    assert abs(dk.mxu_utilization_estimate(1, 64, 128) - 1 / 8) < 1e-9
+    assert 0 < dk.mxu_utilization_estimate(3, 64, 100) < 1.0

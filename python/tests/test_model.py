@@ -1,0 +1,75 @@
+"""L2 tests: model forward shapes, kernel-vs-ref parity at the model level,
+training improves quality (v2 > v1 premise of the canary example)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = m.MlpConfig(input_dim=16, hidden_dims=(24, 24), output_dim=3, name="t")
+
+
+def test_init_params_shapes():
+    params = m.init_params(CFG, jax.random.PRNGKey(0))
+    assert [(w.shape, b.shape) for w, b in params] == [
+        ((16, 24), (24,)),
+        ((24, 24), (24,)),
+        ((24, 3), (3,)),
+    ]
+
+
+@pytest.mark.parametrize("batch", [1, 4, 7, 16])
+def test_mlp_kernel_matches_ref(batch):
+    params = m.init_params(CFG, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (batch, CFG.input_dim))
+    got = m.mlp_forward(params, x, use_kernel=True)
+    want = ref.mlp_ref(x, params)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_classifier_forward_outputs():
+    params = m.init_params(CFG, jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (5, CFG.input_dim))
+    log_probs, pred = m.classifier_forward(params, x)
+    assert log_probs.shape == (5, 3) and pred.shape == (5,)
+    assert pred.dtype == jnp.int32
+    # log-probs rows sum to 1 in prob space
+    np.testing.assert_allclose(
+        jnp.exp(log_probs).sum(axis=-1), np.ones(5), rtol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(pred), np.argmax(log_probs, axis=-1))
+
+
+def test_regressor_forward_outputs():
+    cfg = m.MlpConfig(input_dim=16, hidden_dims=(8,), output_dim=1, name="r")
+    params = m.init_params(cfg, jax.random.PRNGKey(5))
+    x = jax.random.normal(jax.random.PRNGKey(6), (9, cfg.input_dim))
+    (value,) = m.regressor_forward(params, x)
+    assert value.shape == (9,)
+
+
+def test_training_improves_classifier():
+    """The v1/v2 canary premise: more steps -> materially better accuracy."""
+    _, acc_short = m.train_classifier(CFG, steps=5, seed=0)
+    _, acc_long = m.train_classifier(CFG, steps=200, seed=0)
+    assert acc_long > acc_short
+    assert acc_long > 0.9
+
+
+def test_training_improves_regressor():
+    cfg = m.MlpConfig(input_dim=8, hidden_dims=(16,), output_dim=1, name="r")
+    _, mse_short = m.train_regressor(cfg, steps=5)
+    _, mse_long = m.train_regressor(cfg, steps=300)
+    assert mse_long < mse_short
+
+
+def test_blobs_are_learnable_data():
+    x, y = m.make_blobs(jax.random.PRNGKey(7), 256, CFG)
+    assert x.shape == (256, CFG.input_dim) and y.shape == (256,)
+    assert int(y.min()) >= 0 and int(y.max()) < CFG.output_dim
+    assert len(set(np.asarray(y).tolist())) == CFG.output_dim

@@ -1,0 +1,136 @@
+//! The *aspired versions* API (§2.1) — the uni-directional, idempotent
+//! contract connecting Sources (via Routers and Adapters) to Managers.
+//!
+//! A call names a servable and the full list of versions the caller
+//! would like memory-resident; versions omitted are implicitly
+//! *un*-aspired. Idempotence lets a Source re-emit its full state on
+//! every poll without knowing what is currently loaded.
+
+use super::servable::ServableId;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// One version travelling down the chain, with payload `T` (`T` starts
+/// as a storage path at the Source and ends as an `Arc<dyn Loader>` at
+/// the Manager — §2.1 "templated by the type of data T").
+pub struct ServableData<T> {
+    pub id: ServableId,
+    /// Payload, or the error that occurred producing it (errors flow to
+    /// the manager so it can surface them per-version).
+    pub payload: anyhow::Result<T>,
+}
+
+impl<T> ServableData<T> {
+    pub fn ok(id: ServableId, payload: T) -> Self {
+        ServableData { id, payload: Ok(payload) }
+    }
+
+    pub fn err(id: ServableId, e: anyhow::Error) -> Self {
+        ServableData { id, payload: Err(e) }
+    }
+}
+
+impl<T> fmt::Debug for ServableData<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "ServableData({}, {})",
+            self.id,
+            if self.payload.is_ok() { "ok" } else { "err" }
+        )
+    }
+}
+
+/// Receiver half of the aspired-versions API.
+pub trait AspiredVersionsCallback<T>: Send + Sync {
+    /// Replace the aspired-version set for `servable_name` with
+    /// `versions`. Empty list = aspire nothing (unload all).
+    fn set_aspired_versions(&self, servable_name: &str, versions: Vec<ServableData<T>>);
+}
+
+/// Emitter half: anything that discovers servable versions.
+///
+/// Sources are connected with [`connect_source`]; after connection they
+/// must (eventually) emit their current aspired state.
+pub trait Source<T>: Send {
+    fn set_aspired_versions_callback(&mut self, cb: Arc<dyn AspiredVersionsCallback<T>>);
+}
+
+/// Wire a source to a downstream callback (adapter, router or manager).
+pub fn connect_source<T, S: Source<T> + ?Sized>(
+    source: &mut S,
+    cb: Arc<dyn AspiredVersionsCallback<T>>,
+) {
+    source.set_aspired_versions_callback(cb);
+}
+
+/// Test/diagnostic sink that records every call.
+#[derive(Default)]
+pub struct RecordingCallback<T> {
+    pub calls: Mutex<Vec<(String, Vec<ServableData<T>>)>>,
+}
+
+impl<T> RecordingCallback<T> {
+    pub fn new() -> Arc<Self> {
+        Arc::new(RecordingCallback { calls: Mutex::new(Vec::new()) })
+    }
+
+    /// Latest aspired version numbers for `name`.
+    pub fn latest_for(&self, name: &str) -> Option<Vec<u64>> {
+        self.calls
+            .lock()
+            .unwrap()
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.iter().map(|d| d.id.version).collect())
+    }
+
+    pub fn call_count(&self) -> usize {
+        self.calls.lock().unwrap().len()
+    }
+}
+
+impl<T: Send> AspiredVersionsCallback<T> for RecordingCallback<T> {
+    fn set_aspired_versions(&self, servable_name: &str, versions: Vec<ServableData<T>>) {
+        self.calls
+            .lock()
+            .unwrap()
+            .push((servable_name.to_string(), versions));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn servable_data_constructors() {
+        let ok = ServableData::ok(ServableId::new("m", 1), 5u32);
+        assert_eq!(*ok.payload.as_ref().unwrap(), 5);
+        let err = ServableData::<u32>::err(
+            ServableId::new("m", 2),
+            anyhow::anyhow!("gone"),
+        );
+        assert!(err.payload.is_err());
+        assert_eq!(format!("{err:?}"), "ServableData(m:2, err)");
+    }
+
+    #[test]
+    fn recording_callback_tracks_latest() {
+        let cb = RecordingCallback::<u32>::new();
+        cb.set_aspired_versions("m", vec![ServableData::ok(ServableId::new("m", 1), 0)]);
+        cb.set_aspired_versions(
+            "m",
+            vec![
+                ServableData::ok(ServableId::new("m", 1), 0),
+                ServableData::ok(ServableId::new("m", 2), 0),
+            ],
+        );
+        cb.set_aspired_versions("other", vec![]);
+        assert_eq!(cb.latest_for("m"), Some(vec![1, 2]));
+        assert_eq!(cb.latest_for("other"), Some(vec![]));
+        assert_eq!(cb.latest_for("absent"), None);
+        assert_eq!(cb.call_count(), 3);
+    }
+}

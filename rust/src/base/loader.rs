@@ -1,0 +1,119 @@
+//! The [`Loader`] contract: how a servable gets into and out of memory.
+//!
+//! Source Adapters emit `Arc<dyn Loader>` per (servable, version); the
+//! Manager sequences calls to `load`/`unload` (§2.1). `estimate` is
+//! consulted *before* load for admission control and by the TFS²
+//! Controller's bin-packing.
+
+use super::servable::ServableBox;
+use anyhow::Result;
+
+/// Resources a servable (version) needs while memory-resident.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ResourceEstimate {
+    pub ram_bytes: u64,
+}
+
+impl ResourceEstimate {
+    pub fn ram(ram_bytes: u64) -> Self {
+        ResourceEstimate { ram_bytes }
+    }
+}
+
+/// Loads one version of one servable.
+///
+/// Implementations must be safe to call from a dedicated *load* thread
+/// pool while inference proceeds on other versions (§2.1.2 isolation).
+pub trait Loader: Send + Sync {
+    /// Resource needs, available *before* loading (used for admission
+    /// control and bin-packing). Estimates should be conservative.
+    fn estimate(&self) -> Result<ResourceEstimate>;
+
+    /// Materialize the servable in memory. Called at most once per
+    /// harness attempt; may be retried on failure with a fresh call.
+    fn load(&self) -> Result<ServableBox>;
+
+    /// Hook invoked with the servable just before its memory is
+    /// reclaimed. Default: nothing (dropping the box is the unload).
+    fn unload(&self, _servable: &ServableBox) {}
+
+    /// Debug name for logs.
+    fn describe(&self) -> String {
+        "loader".to_string()
+    }
+}
+
+/// A [`Loader`] built from closures — the unit-test workhorse and the
+/// basis for simple servables (tables, constants).
+pub struct FnLoader {
+    estimate: ResourceEstimate,
+    load_fn: Box<dyn Fn() -> Result<ServableBox> + Send + Sync>,
+    describe: String,
+}
+
+impl FnLoader {
+    pub fn new<F>(estimate: ResourceEstimate, describe: &str, load_fn: F) -> Self
+    where
+        F: Fn() -> Result<ServableBox> + Send + Sync + 'static,
+    {
+        FnLoader { estimate, load_fn: Box::new(load_fn), describe: describe.to_string() }
+    }
+
+    /// Loader that yields a fixed value.
+    pub fn constant<T: Clone + Send + Sync + 'static>(value: T) -> Self {
+        FnLoader::new(ResourceEstimate::default(), "constant", move || {
+            Ok(std::sync::Arc::new(value.clone()) as ServableBox)
+        })
+    }
+
+    /// Loader that always fails (for error-path tests).
+    pub fn failing(msg: &str) -> Self {
+        let msg = msg.to_string();
+        FnLoader::new(ResourceEstimate::default(), "failing", move || {
+            Err(anyhow::anyhow!("{msg}"))
+        })
+    }
+}
+
+impl Loader for FnLoader {
+    fn estimate(&self) -> Result<ResourceEstimate> {
+        Ok(self.estimate)
+    }
+
+    fn load(&self) -> Result<ServableBox> {
+        (self.load_fn)()
+    }
+
+    fn describe(&self) -> String {
+        self.describe.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_loader_roundtrip() {
+        let l = FnLoader::constant(7u32);
+        let s = l.load().unwrap();
+        assert_eq!(*s.downcast::<u32>().unwrap(), 7);
+        assert_eq!(l.estimate().unwrap().ram_bytes, 0);
+    }
+
+    #[test]
+    fn failing_loader_errors() {
+        let l = FnLoader::failing("nope");
+        assert!(l.load().unwrap_err().to_string().contains("nope"));
+    }
+
+    #[test]
+    fn estimate_is_preload() {
+        let l = FnLoader::new(ResourceEstimate::ram(1024), "big", || {
+            Ok(std::sync::Arc::new(0u8) as ServableBox)
+        });
+        // estimate works without load
+        assert_eq!(l.estimate().unwrap().ram_bytes, 1024);
+        assert_eq!(l.describe(), "big");
+    }
+}

@@ -1,0 +1,14 @@
+//! Core servable abstractions (paper §2.1).
+//!
+//! A *servable* is the black box the library manages: usually an ML
+//! model, but possibly a lookup table or anything else ("the mention of
+//! BananaFlow"). Modules here define the identity type, the type-erased
+//! box ("a safe `void*`-like construct"), reference-counted handles with
+//! deferred destruction, the [`loader::Loader`] contract, and the
+//! *aspired versions* API that connects Sources to Managers.
+
+pub mod aspired;
+pub mod loader;
+pub mod reclaim;
+pub mod servable;
+pub mod tensor;

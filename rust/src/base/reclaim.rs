@@ -1,0 +1,157 @@
+//! Deferred destruction: a dedicated thread that drops what it is sent.
+//!
+//! Freeing a large model is slow (page-table churn, allocator work, and
+//! — per §2.1.2 — `malloc_trim` to hand pages back to the OS). Handles
+//! and managers ship their final `Arc` references here so that work
+//! never rides an inference thread.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+enum Msg {
+    /// Drop this on the reclaim thread.
+    Reclaim(Box<dyn Send>),
+    /// Drop this, then trim the allocator (used on servable unload).
+    ReclaimAndTrim(Box<dyn Send>),
+    /// Reply when everything enqueued before this has been dropped.
+    Flush(Sender<()>),
+}
+
+struct Inner {
+    tx: Mutex<Option<Sender<Msg>>>,
+    joined: Mutex<Option<std::thread::JoinHandle<()>>>,
+    _cv: Condvar,
+}
+
+/// Handle to the reclaim thread. Cheap to clone; the thread stops when
+/// the last clone drops.
+#[derive(Clone)]
+pub struct Reclaimer {
+    inner: Arc<Inner>,
+}
+
+impl Reclaimer {
+    /// Start a reclaim thread named `<name>-reclaim`.
+    pub fn start(name: &str) -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let handle = std::thread::Builder::new()
+            .name(format!("{name}-reclaim"))
+            .spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Reclaim(b) => drop(b),
+                        Msg::ReclaimAndTrim(b) => {
+                            drop(b);
+                            crate::util::mem::release_to_os();
+                        }
+                        Msg::Flush(reply) => {
+                            let _ = reply.send(());
+                        }
+                    }
+                }
+            })
+            .expect("spawn reclaim thread");
+        Reclaimer {
+            inner: Arc::new(Inner {
+                tx: Mutex::new(Some(tx)),
+                joined: Mutex::new(Some(handle)),
+                _cv: Condvar::new(),
+            }),
+        }
+    }
+
+    #[cfg(test)]
+    pub fn start_for_test() -> Self {
+        Self::start("test")
+    }
+
+    /// Defer dropping `value` to the reclaim thread.
+    pub fn defer<T: Send + 'static>(&self, value: T) {
+        self.send(Msg::Reclaim(Box::new(value)));
+    }
+
+    /// Defer dropping `value`, then release freed pages to the OS
+    /// (§2.1.2 "Releasing memory to the operating system upon servable
+    /// unload").
+    pub fn defer_and_trim<T: Send + 'static>(&self, value: T) {
+        self.send(Msg::ReclaimAndTrim(Box::new(value)));
+    }
+
+    fn send(&self, msg: Msg) {
+        let tx = self.inner.tx.lock().unwrap();
+        if let Some(tx) = tx.as_ref() {
+            // If the thread is gone (process teardown) drop inline.
+            let _ = tx.send(msg);
+        }
+    }
+
+    /// Block until everything deferred so far has been dropped.
+    pub fn flush(&self) {
+        let (reply_tx, reply_rx) = channel();
+        self.send(Msg::Flush(reply_tx));
+        let _ = reply_rx.recv();
+    }
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        // Close the channel, then join so deferred drops finish.
+        *self.tx.lock().unwrap() = None;
+        if let Some(h) = self.joined.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static DROPS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counted;
+    impl Drop for Counted {
+        fn drop(&mut self) {
+            DROPS.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn defers_and_flushes() {
+        let r = Reclaimer::start("t1");
+        let before = DROPS.load(Ordering::SeqCst);
+        for _ in 0..10 {
+            r.defer(Counted);
+        }
+        r.flush();
+        assert_eq!(DROPS.load(Ordering::SeqCst), before + 10);
+    }
+
+    #[test]
+    fn defer_and_trim_works() {
+        let r = Reclaimer::start("t2");
+        r.defer_and_trim(vec![0u8; 1 << 20]);
+        r.flush();
+    }
+
+    #[test]
+    fn drop_joins_and_drains() {
+        let before = DROPS.load(Ordering::SeqCst);
+        {
+            let r = Reclaimer::start("t3");
+            for _ in 0..5 {
+                r.defer(Counted);
+            }
+        } // drop joins the thread
+        assert_eq!(DROPS.load(Ordering::SeqCst), before + 5);
+    }
+
+    #[test]
+    fn clones_share_thread() {
+        let r = Reclaimer::start("t4");
+        let r2 = r.clone();
+        r.defer(Counted);
+        r2.flush();
+    }
+}

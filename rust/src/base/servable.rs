@@ -1,0 +1,151 @@
+//! Servable identity, the type-erased servable box, and handles.
+
+use super::reclaim::Reclaimer;
+use std::any::Any;
+use std::fmt;
+use std::sync::Arc;
+
+/// `(name, version)` — the unit of loading, serving and unloading.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ServableId {
+    pub name: String,
+    pub version: u64,
+}
+
+impl ServableId {
+    pub fn new(name: impl Into<String>, version: u64) -> Self {
+        ServableId { name: name.into(), version }
+    }
+}
+
+impl fmt::Display for ServableId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.name, self.version)
+    }
+}
+
+/// The black-box servable: the paper's "safe `void*`-like construct".
+///
+/// Managers and the lifecycle chain never look inside; inference
+/// handlers downcast to the concrete type they expect
+/// (`HloServable`, `TableServable`, …).
+pub type ServableBox = Arc<dyn Any + Send + Sync>;
+
+/// A checked-out reference to a loaded servable.
+///
+/// §2.1.2: *"Custom reference-counted servable handles that ensure the
+/// freeing of memory for no-longer-wanted servables occurs in a manager
+/// thread, not an inference thread."* Dropping a handle never frees the
+/// servable inline: the inner `Arc` is shipped to the manager's
+/// [`Reclaimer`] thread, where the final drop (and the multi-hundred-MB
+/// `free()` it implies) happens off the request path.
+pub struct ServableHandle<T: Send + Sync + 'static> {
+    id: ServableId,
+    // `Option` so Drop can move it out. The typed Arc shares the
+    // allocation with the original box, so it alone keeps the servable
+    // alive (no second reference needed — hot-path optimization, see
+    // EXPERIMENTS.md §Perf).
+    typed: Option<Arc<T>>,
+    reclaimer: Reclaimer,
+}
+
+impl<T: Send + Sync + 'static> ServableHandle<T> {
+    /// Downcast a servable box into a typed handle. On type mismatch
+    /// the box is handed back untouched.
+    pub fn new(
+        id: ServableId,
+        raw: ServableBox,
+        reclaimer: Reclaimer,
+    ) -> Result<Self, ServableBox> {
+        match Arc::downcast::<T>(raw) {
+            Ok(typed) => Ok(ServableHandle { id, typed: Some(typed), reclaimer }),
+            Err(raw) => Err(raw),
+        }
+    }
+
+    pub fn id(&self) -> &ServableId {
+        &self.id
+    }
+}
+
+impl<T: Send + Sync + 'static> std::ops::Deref for ServableHandle<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.typed.as_ref().expect("handle not yet dropped")
+    }
+}
+
+impl<T: Send + Sync + 'static> Drop for ServableHandle<T> {
+    fn drop(&mut self) {
+        // The ref goes to the reclaim thread; if we were the last
+        // holder, the servable's memory is freed there, not here.
+        if let Some(t) = self.typed.take() {
+            self.reclaimer.defer(t);
+        }
+    }
+}
+
+impl<T: Send + Sync + 'static> fmt::Debug for ServableHandle<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ServableHandle({})", self.id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn servable_id_display_order() {
+        let a = ServableId::new("m", 1);
+        let b = ServableId::new("m", 2);
+        assert!(a < b);
+        assert_eq!(a.to_string(), "m:1");
+    }
+
+    #[test]
+    fn handle_derefs_to_value() {
+        let reclaimer = Reclaimer::start_for_test();
+        let raw: ServableBox = Arc::new(42u64);
+        let h =
+            ServableHandle::<u64>::new(ServableId::new("x", 1), raw, reclaimer.clone())
+                .ok()
+                .unwrap();
+        assert_eq!(*h, 42);
+        assert_eq!(h.id().version, 1);
+    }
+
+    #[test]
+    fn downcast_failure_returns_raw() {
+        let reclaimer = Reclaimer::start_for_test();
+        let raw: ServableBox = Arc::new("not a u64".to_string());
+        assert!(ServableHandle::<u64>::new(ServableId::new("x", 1), raw, reclaimer)
+            .is_err());
+    }
+
+    #[test]
+    fn drop_defers_to_reclaimer_thread() {
+        static DROPPED_ON: AtomicUsize = AtomicUsize::new(0);
+        struct Probe;
+        impl Drop for Probe {
+            fn drop(&mut self) {
+                let on_reclaim =
+                    std::thread::current().name().map_or(false, |n| n.contains("reclaim"));
+                DROPPED_ON.store(if on_reclaim { 1 } else { 2 }, Ordering::SeqCst);
+            }
+        }
+        let reclaimer = Reclaimer::start_for_test();
+        let raw: ServableBox = Arc::new(Probe);
+        let h = ServableHandle::<Probe>::new(ServableId::new("p", 1), raw, reclaimer.clone())
+            .ok()
+            .unwrap();
+        drop(h); // last refs -> reclaim thread
+        reclaimer.flush();
+        assert_eq!(
+            DROPPED_ON.load(Ordering::SeqCst),
+            1,
+            "final drop must happen on the reclaim thread"
+        );
+    }
+}

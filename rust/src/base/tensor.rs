@@ -1,0 +1,240 @@
+//! Dense tensors crossing the serving boundary.
+//!
+//! Deliberately minimal: f32/i32 row-major tensors with the operations
+//! the serving path needs — batch-dimension concat/split (the essence of
+//! inter-request batching, §2.2.1) and zero-padding to an allowed batch
+//! size. Heavy math happens inside the AOT-compiled HLO, not here.
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// 1-D tensor from a vec.
+    pub fn vec(data: Vec<f32>) -> Self {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    /// 2-D tensor from rows.
+    pub fn matrix(rows: Vec<Vec<f32>>) -> Result<Self> {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        if rows.iter().any(|x| x.len() != c) {
+            bail!("ragged rows");
+        }
+        Ok(Tensor { shape: vec![r, c], data: rows.into_iter().flatten().collect() })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Leading (batch) dimension, or 0 for rank-0.
+    pub fn batch(&self) -> usize {
+        self.shape.first().copied().unwrap_or(0)
+    }
+
+    /// Elements per batch row.
+    pub fn row_elems(&self) -> usize {
+        self.shape.iter().skip(1).product()
+    }
+
+    /// One batch row as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.row_elems();
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Concatenate along dim 0. All inputs must agree on trailing dims.
+    pub fn concat(parts: &[Tensor]) -> Result<Tensor> {
+        let first = parts.first().ok_or_else(|| anyhow::anyhow!("empty concat"))?;
+        let trailing = &first.shape[1..];
+        let mut batch = 0usize;
+        let mut data = Vec::new();
+        for p in parts {
+            if p.rank() == 0 || &p.shape[1..] != trailing {
+                bail!(
+                    "concat shape mismatch: {:?} vs {:?}",
+                    p.shape,
+                    first.shape
+                );
+            }
+            batch += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![batch];
+        shape.extend_from_slice(trailing);
+        Ok(Tensor { shape, data })
+    }
+
+    /// Split along dim 0 into chunks of the given batch sizes.
+    pub fn split(&self, sizes: &[usize]) -> Result<Vec<Tensor>> {
+        let total: usize = sizes.iter().sum();
+        if total != self.batch() {
+            bail!("split sizes {sizes:?} sum {total} != batch {}", self.batch());
+        }
+        let w = self.row_elems();
+        let mut out = Vec::with_capacity(sizes.len());
+        let mut off = 0usize;
+        for &s in sizes {
+            let mut shape = self.shape.clone();
+            shape[0] = s;
+            out.push(Tensor {
+                shape,
+                data: self.data[off * w..(off + s) * w].to_vec(),
+            });
+            off += s;
+        }
+        Ok(out)
+    }
+
+    /// Zero-pad the batch dimension up to `target` rows.
+    pub fn pad_batch(&self, target: usize) -> Result<Tensor> {
+        if target < self.batch() {
+            bail!("pad target {target} < batch {}", self.batch());
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = target;
+        let mut data = self.data.clone();
+        data.resize(target * self.row_elems(), 0.0);
+        Ok(Tensor { shape, data })
+    }
+
+    /// Take the first `n` batch rows (inverse of `pad_batch`).
+    pub fn truncate_batch(&self, n: usize) -> Result<Tensor> {
+        if n > self.batch() {
+            bail!("truncate {n} > batch {}", self.batch());
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        Ok(Tensor { shape, data: self.data[..n * self.row_elems()].to_vec() })
+    }
+}
+
+/// Row-major i32 tensor (classifier class outputs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(TensorI32 { shape, data })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.shape.first().copied().unwrap_or(0)
+    }
+
+    pub fn truncate_batch(&self, n: usize) -> Result<TensorI32> {
+        let w: usize = self.shape.iter().skip(1).product();
+        if n > self.batch() {
+            bail!("truncate {n} > batch {}", self.batch());
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        Ok(TensorI32 { shape, data: self.data[..n * w].to_vec() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_validates() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::matrix(vec![vec![1.0], vec![2.0, 3.0]]).is_err());
+    }
+
+    #[test]
+    fn concat_and_split_roundtrip() {
+        let a = Tensor::matrix(vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let b = Tensor::matrix(vec![vec![5.0, 6.0]]).unwrap();
+        let c = Tensor::concat(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let parts = c.split(&[2, 1]).unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn concat_rejects_mismatched_trailing() {
+        let a = Tensor::zeros(vec![1, 2]);
+        let b = Tensor::zeros(vec![1, 3]);
+        assert!(Tensor::concat(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn split_validates_sizes() {
+        let t = Tensor::zeros(vec![3, 2]);
+        assert!(t.split(&[1, 1]).is_err());
+        assert!(t.split(&[2, 1]).is_ok());
+    }
+
+    #[test]
+    fn pad_and_truncate() {
+        let t = Tensor::matrix(vec![vec![1.0, 2.0]]).unwrap();
+        let p = t.pad_batch(4).unwrap();
+        assert_eq!(p.shape(), &[4, 2]);
+        assert_eq!(p.row(0), &[1.0, 2.0]);
+        assert_eq!(p.row(3), &[0.0, 0.0]);
+        let back = p.truncate_batch(1).unwrap();
+        assert_eq!(back, t);
+        assert!(t.pad_batch(0).is_err());
+        assert!(t.truncate_batch(2).is_err());
+    }
+
+    #[test]
+    fn rows_and_elems() {
+        let t = Tensor::zeros(vec![4, 3, 2]);
+        assert_eq!(t.batch(), 4);
+        assert_eq!(t.row_elems(), 6);
+        assert_eq!(t.row(2).len(), 6);
+    }
+
+    #[test]
+    fn i32_tensor() {
+        let t = TensorI32::new(vec![3], vec![1, 2, 3]).unwrap();
+        assert_eq!(t.batch(), 3);
+        assert_eq!(t.truncate_batch(2).unwrap().data, vec![1, 2]);
+        assert!(TensorI32::new(vec![2], vec![1]).is_err());
+    }
+}

@@ -1,0 +1,93 @@
+//! Templatized batching primitives: the core library is generic over
+//! "the type of request being batched (be it tensors or some other
+//! data)" — §2.2.1.
+
+/// A unit of batchable work. `size()` is in task-defined units (e.g.
+/// examples in a request); the scheduler packs batches so the summed
+/// size stays within `max_batch_size`.
+pub trait BatchTask: Send + 'static {
+    fn size(&self) -> usize;
+}
+
+/// A merged group of tasks processed in one device invocation.
+pub struct Batch<T: BatchTask> {
+    tasks: Vec<T>,
+    /// Nanos timestamp (scheduler clock) when the first task arrived.
+    opened_at_nanos: u64,
+}
+
+impl<T: BatchTask> Batch<T> {
+    pub fn new(opened_at_nanos: u64) -> Self {
+        Batch { tasks: Vec::new(), opened_at_nanos }
+    }
+
+    pub fn push(&mut self, task: T) {
+        self.tasks.push(task);
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Sum of task sizes (the merged batch size).
+    pub fn size(&self) -> usize {
+        self.tasks.iter().map(|t| t.size()).sum()
+    }
+
+    pub fn opened_at_nanos(&self) -> u64 {
+        self.opened_at_nanos
+    }
+
+    pub fn tasks(&self) -> &[T] {
+        &self.tasks
+    }
+
+    pub fn into_tasks(self) -> Vec<T> {
+        self.tasks
+    }
+}
+
+impl<T: BatchTask> IntoIterator for Batch<T> {
+    type Item = T;
+    type IntoIter = std::vec::IntoIter<T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.tasks.into_iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Sized(usize);
+    impl BatchTask for Sized {
+        fn size(&self) -> usize {
+            self.0
+        }
+    }
+
+    #[test]
+    fn batch_accumulates_size() {
+        let mut b = Batch::new(42);
+        assert!(b.is_empty());
+        b.push(Sized(3));
+        b.push(Sized(5));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.size(), 8);
+        assert_eq!(b.opened_at_nanos(), 42);
+    }
+
+    #[test]
+    fn into_tasks_preserves_order() {
+        let mut b = Batch::new(0);
+        for i in 0..5 {
+            b.push(Sized(i));
+        }
+        let sizes: Vec<usize> = b.into_tasks().iter().map(|t| t.0).collect();
+        assert_eq!(sizes, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Inter-request batching (paper §2.2.1).
+//!
+//! "The key is to combine many inference requests into a single merged
+//! request … managed carefully to avoid unduly hurting latency."
+//!
+//! * [`batch`] — the templatized primitives: [`batch::BatchTask`],
+//!   [`batch::Batch`].
+//! * [`scheduler`] — [`scheduler::SharedBatchScheduler`]: multiple
+//!   dynamic queues (one per servable/version), round-robin onto a
+//!   shared pool of device threads, with `max_batch_size`,
+//!   `batch_timeout` and `max_enqueued` backpressure.
+//! * [`padding`] — pad merged batches up to `allowed_batch_sizes`
+//!   (fixed-shape accelerator executables).
+//! * [`splitter`] — split oversized requests across batches.
+//! * [`session`] — the paper's wrapper (1): a `Session`-like facade that
+//!   concatenates tensor inputs of concurrent `run()` calls and splits
+//!   the merged outputs back per caller.
+
+pub mod batch;
+pub mod padding;
+pub mod scheduler;
+pub mod session;
+pub mod splitter;

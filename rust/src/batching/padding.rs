@@ -1,0 +1,111 @@
+//! Batch padding to `allowed_batch_sizes`.
+//!
+//! Accelerator executables are compiled for fixed shapes; the AOT layer
+//! exports one HLO module per allowed batch size (1, 4, 16, 64 by
+//! default) and the batcher pads each merged batch up to the nearest
+//! allowed size. This trades a bounded amount of wasted compute for
+//! avoiding recompilation — exactly what TPU serving does.
+
+/// Smallest allowed size >= `n`, or `None` if `n` exceeds the largest.
+pub fn pad_to_allowed(n: usize, allowed: &[usize]) -> Option<usize> {
+    allowed.iter().copied().filter(|&a| a >= n).min()
+}
+
+/// Fraction of padded-batch rows that are padding (wasted compute).
+pub fn padding_waste(n: usize, allowed: &[usize]) -> Option<f64> {
+    pad_to_allowed(n, allowed).map(|p| (p - n) as f64 / p as f64)
+}
+
+/// Expected waste over a batch-size distribution (ablation metric for
+/// choosing `allowed_batch_sizes`; see benches/bench_batching.rs).
+pub fn expected_waste(batch_size_counts: &[(usize, u64)], allowed: &[usize]) -> f64 {
+    let mut waste = 0.0;
+    let mut total = 0u64;
+    for &(n, count) in batch_size_counts {
+        if let Some(w) = padding_waste(n, allowed) {
+            waste += w * count as f64;
+            total += count;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        waste / total as f64
+    }
+}
+
+/// Validate an allowed-size ladder: ascending, unique, non-empty, and
+/// the last entry must equal `max_batch_size` so every admissible batch
+/// has a target.
+pub fn validate_allowed(allowed: &[usize], max_batch_size: usize) -> anyhow::Result<()> {
+    if allowed.is_empty() {
+        anyhow::bail!("allowed_batch_sizes is empty");
+    }
+    if !allowed.windows(2).all(|w| w[0] < w[1]) {
+        anyhow::bail!("allowed_batch_sizes must be strictly ascending: {allowed:?}");
+    }
+    if *allowed.last().unwrap() != max_batch_size {
+        anyhow::bail!(
+            "last allowed batch size {} != max_batch_size {max_batch_size}",
+            allowed.last().unwrap()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    const ALLOWED: &[usize] = &[1, 4, 16, 64];
+
+    #[test]
+    fn pads_up() {
+        assert_eq!(pad_to_allowed(1, ALLOWED), Some(1));
+        assert_eq!(pad_to_allowed(2, ALLOWED), Some(4));
+        assert_eq!(pad_to_allowed(4, ALLOWED), Some(4));
+        assert_eq!(pad_to_allowed(17, ALLOWED), Some(64));
+        assert_eq!(pad_to_allowed(65, ALLOWED), None);
+        assert_eq!(pad_to_allowed(0, ALLOWED), Some(1));
+    }
+
+    #[test]
+    fn waste_math() {
+        assert_eq!(padding_waste(4, ALLOWED), Some(0.0));
+        assert_eq!(padding_waste(2, ALLOWED), Some(0.5));
+        assert_eq!(padding_waste(48, ALLOWED), Some(0.25));
+    }
+
+    #[test]
+    fn expected_waste_weighted() {
+        // Half the batches size 4 (no waste), half size 2 (50% waste).
+        let w = expected_waste(&[(4, 100), (2, 100)], ALLOWED);
+        assert!((w - 0.25).abs() < 1e-9);
+        assert_eq!(expected_waste(&[], ALLOWED), 0.0);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(validate_allowed(ALLOWED, 64).is_ok());
+        assert!(validate_allowed(&[], 64).is_err());
+        assert!(validate_allowed(&[4, 1], 4).is_err());
+        assert!(validate_allowed(&[1, 4], 8).is_err());
+        assert!(validate_allowed(&[4, 4], 4).is_err());
+    }
+
+    #[test]
+    fn pad_is_minimal_and_sufficient() {
+        forall::<u64, _>("padding minimal", |n| {
+            let n = (*n % 100) as usize;
+            match pad_to_allowed(n, ALLOWED) {
+                Some(p) => {
+                    p >= n
+                        && ALLOWED.contains(&p)
+                        && ALLOWED.iter().all(|&a| a < n || a >= p)
+                }
+                None => n > *ALLOWED.last().unwrap(),
+            }
+        });
+    }
+}

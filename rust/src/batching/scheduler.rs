@@ -1,0 +1,625 @@
+//! [`SharedBatchScheduler`]: dynamic per-servable queues feeding a
+//! shared pool of device threads, round-robin (§2.2.1).
+//!
+//! "The core library supports multiple batching queues, to batch
+//! requests for multiple servables or versions separately, and schedule
+//! them in a round-robin fashion onto a single shared device e.g. GPU.
+//! The set of queues can be dynamic, added and removed as servable
+//! versions come and go."
+//!
+//! Batch close conditions: summed task size reaching `max_batch_size`,
+//! or the open batch ageing past `batch_timeout` (the latency guard).
+//! Backpressure: a queue holds at most `max_enqueued_batches` closed
+//! batches; beyond that, `enqueue` rejects — callers shed load instead
+//! of growing an unbounded queue.
+
+use super::batch::{Batch, BatchTask};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Scheduler-wide options.
+#[derive(Debug, Clone)]
+pub struct SchedulerOptions {
+    /// Shared device threads executing batches (≈ accelerator streams).
+    pub num_batch_threads: usize,
+    pub name: String,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions { num_batch_threads: 2, name: "batcher".to_string() }
+    }
+}
+
+/// Per-queue options.
+#[derive(Debug, Clone)]
+pub struct QueueOptions {
+    /// Maximum summed task size of one batch.
+    pub max_batch_size: usize,
+    /// Age at which a non-full open batch is closed anyway.
+    pub batch_timeout: Duration,
+    /// Closed-but-unprocessed batch limit (backpressure).
+    pub max_enqueued_batches: usize,
+}
+
+impl Default for QueueOptions {
+    fn default() -> Self {
+        QueueOptions {
+            max_batch_size: 16,
+            batch_timeout: Duration::from_millis(2),
+            max_enqueued_batches: 64,
+        }
+    }
+}
+
+/// Why an enqueue was rejected (the task is returned to the caller).
+#[derive(Debug)]
+pub enum EnqueueError<T> {
+    /// Task size exceeds `max_batch_size` (consider the splitter).
+    TaskTooLarge(T),
+    /// Queue is at `max_enqueued_batches` (shed load).
+    QueueFull(T),
+    /// Queue was removed.
+    QueueClosed(T),
+}
+
+impl<T> std::fmt::Display for EnqueueError<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EnqueueError::TaskTooLarge(_) => write!(f, "task larger than max_batch_size"),
+            EnqueueError::QueueFull(_) => write!(f, "queue full (backpressure)"),
+            EnqueueError::QueueClosed(_) => write!(f, "queue closed"),
+        }
+    }
+}
+
+type ProcessFn<T> = Arc<dyn Fn(Batch<T>) + Send + Sync>;
+
+struct QueueInner<T: BatchTask> {
+    open: Option<Batch<T>>,
+    closed: VecDeque<Batch<T>>,
+}
+
+struct QueueState<T: BatchTask> {
+    name: String,
+    opts: QueueOptions,
+    inner: Mutex<QueueInner<T>>,
+    process: ProcessFn<T>,
+    removed: AtomicBool,
+    batches_processed: AtomicU64,
+    tasks_processed: AtomicU64,
+}
+
+impl<T: BatchTask> QueueState<T> {
+    /// Close the open batch if full or expired. Returns true if a batch
+    /// became available.
+    fn maybe_close_open(&self, inner: &mut QueueInner<T>, now_nanos: u64) -> bool {
+        let close = match &inner.open {
+            Some(open) => {
+                open.size() >= self.opts.max_batch_size
+                    || now_nanos.saturating_sub(open.opened_at_nanos())
+                        >= self.opts.batch_timeout.as_nanos() as u64
+            }
+            None => false,
+        };
+        if close {
+            inner.closed.push_back(inner.open.take().unwrap());
+        }
+        close
+    }
+
+    /// Next deadline (nanos) at which the open batch expires.
+    fn open_deadline(&self, inner: &QueueInner<T>) -> Option<u64> {
+        inner
+            .open
+            .as_ref()
+            .map(|b| b.opened_at_nanos() + self.opts.batch_timeout.as_nanos() as u64)
+    }
+}
+
+struct Shared<T: BatchTask> {
+    queues: Mutex<Vec<Arc<QueueState<T>>>>,
+    work: Condvar,
+    work_lock: Mutex<()>,
+    rr: AtomicUsize,
+    shutdown: AtomicBool,
+    epoch: Instant,
+}
+
+impl<T: BatchTask> Shared<T> {
+    fn now_nanos(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn signal(&self) {
+        let _g = self.work_lock.lock().unwrap();
+        self.work.notify_all();
+    }
+}
+
+/// Handle to one queue; dropping it removes the queue (pending batches
+/// still drain). Created via [`SharedBatchScheduler::add_queue`].
+pub struct BatchQueue<T: BatchTask> {
+    state: Arc<QueueState<T>>,
+    shared: Arc<Shared<T>>,
+}
+
+impl<T: BatchTask> BatchQueue<T> {
+    /// Add `task` to the queue. On success the task will be processed
+    /// as part of a future batch by a scheduler thread.
+    pub fn enqueue(&self, task: T) -> Result<(), EnqueueError<T>> {
+        if self.state.removed.load(Ordering::SeqCst) {
+            return Err(EnqueueError::QueueClosed(task));
+        }
+        if task.size() > self.state.opts.max_batch_size {
+            return Err(EnqueueError::TaskTooLarge(task));
+        }
+        let now = self.shared.now_nanos();
+        {
+            let mut inner = self.state.inner.lock().unwrap();
+            // Close a full/expired open batch first so the size check
+            // below sees fresh state.
+            self.state.maybe_close_open(&mut inner, now);
+            // If the task doesn't fit the current open batch, close it.
+            if let Some(open) = &inner.open {
+                if open.size() + task.size() > self.state.opts.max_batch_size {
+                    let b = inner.open.take().unwrap();
+                    inner.closed.push_back(b);
+                }
+            }
+            if inner.closed.len() >= self.state.opts.max_enqueued_batches {
+                return Err(EnqueueError::QueueFull(task));
+            }
+            let open = inner.open.get_or_insert_with(|| Batch::new(now));
+            open.push(task);
+            if open.size() >= self.state.opts.max_batch_size {
+                let b = inner.open.take().unwrap();
+                inner.closed.push_back(b);
+            }
+        }
+        self.shared.signal();
+        Ok(())
+    }
+
+    /// Tasks sitting in the queue (open + closed), for monitoring.
+    pub fn pending_tasks(&self) -> usize {
+        let inner = self.state.inner.lock().unwrap();
+        inner.open.as_ref().map_or(0, |b| b.len())
+            + inner.closed.iter().map(|b| b.len()).sum::<usize>()
+    }
+
+    pub fn batches_processed(&self) -> u64 {
+        self.state.batches_processed.load(Ordering::Relaxed)
+    }
+
+    pub fn tasks_processed(&self) -> u64 {
+        self.state.tasks_processed.load(Ordering::Relaxed)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.state.name
+    }
+}
+
+impl<T: BatchTask> Drop for BatchQueue<T> {
+    fn drop(&mut self) {
+        self.state.removed.store(true, Ordering::SeqCst);
+        self.shared.signal();
+    }
+}
+
+/// The shared scheduler. Owns the device threads.
+pub struct SharedBatchScheduler<T: BatchTask> {
+    shared: Arc<Shared<T>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl<T: BatchTask> SharedBatchScheduler<T> {
+    pub fn new(options: SchedulerOptions) -> Self {
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(Vec::new()),
+            work: Condvar::new(),
+            work_lock: Mutex::new(()),
+            rr: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            epoch: Instant::now(),
+        });
+        let workers = (0..options.num_batch_threads.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("{}-dev-{i}", options.name))
+                    .spawn(move || Self::worker_loop(shared))
+                    .expect("spawn batch worker")
+            })
+            .collect();
+        SharedBatchScheduler { shared, workers }
+    }
+
+    /// Create a queue whose batches are handed to `process` on a device
+    /// thread. Queues are dynamic: drop the handle to remove.
+    pub fn add_queue<F>(&self, name: &str, opts: QueueOptions, process: F) -> BatchQueue<T>
+    where
+        F: Fn(Batch<T>) + Send + Sync + 'static,
+    {
+        assert!(opts.max_batch_size > 0, "max_batch_size must be positive");
+        let state = Arc::new(QueueState {
+            name: name.to_string(),
+            opts,
+            inner: Mutex::new(QueueInner { open: None, closed: VecDeque::new() }),
+            process: Arc::new(process),
+            removed: AtomicBool::new(false),
+            batches_processed: AtomicU64::new(0),
+            tasks_processed: AtomicU64::new(0),
+        });
+        self.shared.queues.lock().unwrap().push(Arc::clone(&state));
+        BatchQueue { state, shared: Arc::clone(&self.shared) }
+    }
+
+    fn worker_loop(shared: Arc<Shared<T>>) {
+        loop {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let mut next_deadline: Option<u64> = None;
+            let mut picked: Option<(Arc<QueueState<T>>, Batch<T>)> = None;
+            {
+                let mut queues = shared.queues.lock().unwrap();
+                // Prune fully-drained removed queues.
+                queues.retain(|q| {
+                    !q.removed.load(Ordering::SeqCst) || {
+                        let inner = q.inner.lock().unwrap();
+                        inner.open.is_some() || !inner.closed.is_empty()
+                    }
+                });
+                let n = queues.len();
+                if n > 0 {
+                    let start = shared.rr.fetch_add(1, Ordering::Relaxed) % n;
+                    let now = shared.now_nanos();
+                    // Round-robin scan for the next ready batch.
+                    for off in 0..n {
+                        let q = &queues[(start + off) % n];
+                        let mut inner = q.inner.lock().unwrap();
+                        q.maybe_close_open(&mut inner, now);
+                        // Removed queues flush their open batch eagerly.
+                        if q.removed.load(Ordering::SeqCst) {
+                            if let Some(b) = inner.open.take() {
+                                inner.closed.push_back(b);
+                            }
+                        }
+                        if let Some(batch) = inner.closed.pop_front() {
+                            picked = Some((Arc::clone(q), batch));
+                            break;
+                        }
+                        if let Some(d) = q.open_deadline(&inner) {
+                            next_deadline =
+                                Some(next_deadline.map_or(d, |nd: u64| nd.min(d)));
+                        }
+                    }
+                }
+            }
+            match picked {
+                Some((q, batch)) => {
+                    // Execute outside all locks: this is the "device".
+                    q.batches_processed.fetch_add(1, Ordering::Relaxed);
+                    q.tasks_processed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                    (q.process)(batch);
+                }
+                None => {
+                    // Sleep until the nearest open-batch deadline (or a
+                    // signal), capped so shutdown is prompt.
+                    let now = shared.now_nanos();
+                    let wait = match next_deadline {
+                        Some(d) if d > now => Duration::from_nanos((d - now).min(5_000_000)),
+                        Some(_) => continue, // already expired: rescan
+                        None => Duration::from_millis(5),
+                    };
+                    let g = shared.work_lock.lock().unwrap();
+                    let _ = shared.work.wait_timeout(g, wait).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Block until all queues are empty (tests/benches).
+    pub fn quiesce(&self) {
+        loop {
+            let empty = {
+                let queues = self.shared.queues.lock().unwrap();
+                queues.iter().all(|q| {
+                    let inner = q.inner.lock().unwrap();
+                    inner.open.is_none() && inner.closed.is_empty()
+                })
+            };
+            if empty {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+impl<T: BatchTask> Drop for SharedBatchScheduler<T> {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.signal();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[derive(Debug)]
+    struct Task {
+        size: usize,
+        tag: usize,
+    }
+
+    impl BatchTask for Task {
+        fn size(&self) -> usize {
+            self.size
+        }
+    }
+
+    fn collector() -> (
+        impl Fn(Batch<Task>) + Send + Sync + 'static,
+        mpsc::Receiver<Vec<(usize, usize)>>,
+    ) {
+        let (tx, rx) = mpsc::channel();
+        (
+            move |b: Batch<Task>| {
+                let v: Vec<(usize, usize)> =
+                    b.tasks().iter().map(|t| (t.tag, t.size)).collect();
+                let _ = tx.send(v);
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn full_batch_processes_immediately() {
+        let sched = SharedBatchScheduler::new(SchedulerOptions::default());
+        let (f, rx) = collector();
+        let q = sched.add_queue(
+            "q",
+            QueueOptions {
+                max_batch_size: 4,
+                batch_timeout: Duration::from_secs(100), // never by timeout
+                max_enqueued_batches: 8,
+            },
+            f,
+        );
+        for tag in 0..4 {
+            q.enqueue(Task { size: 1, tag }).unwrap();
+        }
+        let batch = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(batch.len(), 4);
+    }
+
+    #[test]
+    fn timeout_closes_partial_batch() {
+        let sched = SharedBatchScheduler::new(SchedulerOptions::default());
+        let (f, rx) = collector();
+        let q = sched.add_queue(
+            "q",
+            QueueOptions {
+                max_batch_size: 100,
+                batch_timeout: Duration::from_millis(5),
+                max_enqueued_batches: 8,
+            },
+            f,
+        );
+        q.enqueue(Task { size: 1, tag: 7 }).unwrap();
+        let batch = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(batch, vec![(7, 1)]);
+    }
+
+    #[test]
+    fn size_units_respected() {
+        // max_batch_size is in task-size units, not task count.
+        let sched = SharedBatchScheduler::new(SchedulerOptions::default());
+        let (f, rx) = collector();
+        let q = sched.add_queue(
+            "q",
+            QueueOptions {
+                max_batch_size: 8,
+                batch_timeout: Duration::from_millis(2),
+                max_enqueued_batches: 8,
+            },
+            f,
+        );
+        q.enqueue(Task { size: 5, tag: 0 }).unwrap();
+        q.enqueue(Task { size: 5, tag: 1 }).unwrap(); // doesn't fit with 0
+        let b0 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let b1 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(b0, vec![(0, 5)]);
+        assert_eq!(b1, vec![(1, 5)]);
+    }
+
+    #[test]
+    fn oversized_task_rejected() {
+        let sched = SharedBatchScheduler::new(SchedulerOptions::default());
+        let (f, _rx) = collector();
+        let q = sched.add_queue(
+            "q",
+            QueueOptions { max_batch_size: 4, ..Default::default() },
+            f,
+        );
+        match q.enqueue(Task { size: 10, tag: 0 }) {
+            Err(EnqueueError::TaskTooLarge(t)) => assert_eq!(t.tag, 0),
+            other => panic!("expected TaskTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let sched = SharedBatchScheduler::new(SchedulerOptions {
+            num_batch_threads: 1,
+            ..Default::default()
+        });
+        // Block the single device thread with a slow first batch.
+        let (slow_tx, slow_rx) = mpsc::channel::<()>();
+        let slow_rx = Mutex::new(slow_rx);
+        let blocker = sched.add_queue(
+            "blocker",
+            QueueOptions {
+                max_batch_size: 1,
+                batch_timeout: Duration::from_millis(0),
+                max_enqueued_batches: 4,
+            },
+            move |_b| {
+                let _ = slow_rx.lock().unwrap().recv();
+            },
+        );
+        blocker.enqueue(Task { size: 1, tag: 0 }).unwrap();
+        std::thread::sleep(Duration::from_millis(30)); // device now blocked
+
+        let (f, _rx) = collector();
+        let q = sched.add_queue(
+            "q",
+            QueueOptions {
+                max_batch_size: 1, // every task closes a batch
+                batch_timeout: Duration::from_millis(0),
+                max_enqueued_batches: 2,
+            },
+            f,
+        );
+        let mut rejected = false;
+        for tag in 0..10 {
+            if matches!(
+                q.enqueue(Task { size: 1, tag }),
+                Err(EnqueueError::QueueFull(_))
+            ) {
+                rejected = true;
+                break;
+            }
+        }
+        assert!(rejected, "backpressure never kicked in");
+        let _ = slow_tx.send(());
+        let _ = slow_tx.send(());
+    }
+
+    #[test]
+    fn round_robin_across_queues() {
+        // One device thread, two queues with pre-loaded batches: the
+        // processing order must interleave.
+        let sched = SharedBatchScheduler::new(SchedulerOptions {
+            num_batch_threads: 1,
+            ..Default::default()
+        });
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mk = |label: &'static str, order: Arc<Mutex<Vec<&'static str>>>| {
+            move |_b: Batch<Task>| {
+                order.lock().unwrap().push(label);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        };
+        let qa = sched.add_queue(
+            "a",
+            QueueOptions {
+                max_batch_size: 1,
+                batch_timeout: Duration::ZERO,
+                max_enqueued_batches: 64,
+            },
+            mk("a", Arc::clone(&order)),
+        );
+        let qb = sched.add_queue(
+            "b",
+            QueueOptions {
+                max_batch_size: 1,
+                batch_timeout: Duration::ZERO,
+                max_enqueued_batches: 64,
+            },
+            mk("b", Arc::clone(&order)),
+        );
+        for tag in 0..8 {
+            qa.enqueue(Task { size: 1, tag }).unwrap();
+            qb.enqueue(Task { size: 1, tag }).unwrap();
+        }
+        sched.quiesce();
+        let order = order.lock().unwrap();
+        assert_eq!(order.len(), 16);
+        // Interleaving check: no long runs of one queue.
+        let max_run = order
+            .windows(4)
+            .map(|w| w.iter().filter(|&&l| l == w[0]).count())
+            .max()
+            .unwrap();
+        assert!(max_run < 4, "not interleaved: {order:?}");
+        assert_eq!(qa.tasks_processed(), 8);
+        assert_eq!(qb.tasks_processed(), 8);
+    }
+
+    #[test]
+    fn dropped_queue_drains_then_disappears() {
+        let sched = SharedBatchScheduler::new(SchedulerOptions::default());
+        let (f, rx) = collector();
+        let q = sched.add_queue(
+            "q",
+            QueueOptions {
+                max_batch_size: 10,
+                batch_timeout: Duration::from_secs(100),
+                max_enqueued_batches: 8,
+            },
+            f,
+        );
+        q.enqueue(Task { size: 1, tag: 1 }).unwrap();
+        drop(q); // open batch must still flush
+        let batch = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(batch, vec![(1, 1)]);
+    }
+
+    #[test]
+    fn enqueue_after_drop_fails() {
+        let sched = SharedBatchScheduler::new(SchedulerOptions::default());
+        let (f, _rx) = collector();
+        let q = sched.add_queue("q", QueueOptions::default(), f);
+        let state = Arc::clone(&q.state);
+        let shared = Arc::clone(&q.shared);
+        drop(q);
+        let q2 = BatchQueue { state, shared };
+        assert!(matches!(
+            q2.enqueue(Task { size: 1, tag: 0 }),
+            Err(EnqueueError::QueueClosed(_))
+        ));
+    }
+
+    #[test]
+    fn many_tasks_all_processed_exactly_once() {
+        let sched = SharedBatchScheduler::<Task>::new(SchedulerOptions {
+            num_batch_threads: 4,
+            ..Default::default()
+        });
+        let seen = Arc::new(Mutex::new(std::collections::HashMap::<usize, usize>::new()));
+        let s2 = Arc::clone(&seen);
+        let q = sched.add_queue(
+            "q",
+            QueueOptions {
+                max_batch_size: 7,
+                batch_timeout: Duration::from_micros(200),
+                max_enqueued_batches: 1_000_000,
+            },
+            move |b| {
+                let mut m = s2.lock().unwrap();
+                for t in b.tasks() {
+                    *m.entry(t.tag).or_default() += 1;
+                }
+            },
+        );
+        const N: usize = 5000;
+        for tag in 0..N {
+            q.enqueue(Task { size: 1, tag }).unwrap();
+        }
+        sched.quiesce();
+        let m = seen.lock().unwrap();
+        assert_eq!(m.len(), N);
+        assert!(m.values().all(|&c| c == 1), "duplicate processing");
+    }
+}

@@ -1,0 +1,326 @@
+//! [`BatchingSession`] — the paper's wrapper (1) around the core
+//! batching library: "an implementation of TensorFlow's `Session`
+//! abstraction that batches multiple `Run()` calls together,
+//! concatenating their input tensors, and then forwards to the wrapped
+//! `Session`'s `Run()`" (§2.2.1).
+//!
+//! Callers issue synchronous `run(input)` calls from many request
+//! threads; the session concatenates concurrent inputs along the batch
+//! dimension, pads to an allowed batch size, invokes the wrapped
+//! [`BatchRunner`] (an AOT-compiled executable) once, splits the merged
+//! outputs, and wakes each caller with its slice.
+
+use super::batch::{Batch, BatchTask};
+use super::padding::pad_to_allowed;
+use super::scheduler::{BatchQueue, EnqueueError, QueueOptions, SharedBatchScheduler};
+use crate::base::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// The wrapped "device": runs one merged batch. Outputs must share the
+/// input's batch dimension.
+pub trait BatchRunner: Send + Sync {
+    fn run_batch(&self, input: Tensor) -> Result<Vec<Tensor>>;
+}
+
+impl<F> BatchRunner for F
+where
+    F: Fn(Tensor) -> Result<Vec<Tensor>> + Send + Sync,
+{
+    fn run_batch(&self, input: Tensor) -> Result<Vec<Tensor>> {
+        self(input)
+    }
+}
+
+/// One caller's pending `run()`.
+pub struct PendingRun {
+    input: Tensor,
+    reply: mpsc::Sender<Result<Vec<Tensor>>>,
+}
+
+impl BatchTask for PendingRun {
+    fn size(&self) -> usize {
+        self.input.batch()
+    }
+}
+
+/// Options for a batching session.
+#[derive(Debug, Clone)]
+pub struct SessionOptions {
+    pub queue: QueueOptions,
+    /// Ladder of compiled batch sizes; merged batches pad up to the
+    /// nearest. Empty = no padding (dynamic-shape device).
+    pub allowed_batch_sizes: Vec<usize>,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions {
+            queue: QueueOptions::default(),
+            allowed_batch_sizes: vec![1, 4, 16],
+        }
+    }
+}
+
+pub struct BatchingSession {
+    queue: BatchQueue<PendingRun>,
+}
+
+impl BatchingSession {
+    /// Attach a new session queue to `scheduler`, executing on `runner`.
+    pub fn new(
+        scheduler: &SharedBatchScheduler<PendingRun>,
+        name: &str,
+        options: SessionOptions,
+        runner: Arc<dyn BatchRunner>,
+    ) -> Self {
+        let allowed = options.allowed_batch_sizes.clone();
+        let queue = scheduler.add_queue(name, options.queue, move |batch| {
+            Self::process(&allowed, runner.as_ref(), batch);
+        });
+        BatchingSession { queue }
+    }
+
+    fn process(allowed: &[usize], runner: &dyn BatchRunner, batch: Batch<PendingRun>) {
+        let tasks = batch.into_tasks();
+        let sizes: Vec<usize> = tasks.iter().map(|t| t.input.batch()).collect();
+        let merged_rows: usize = sizes.iter().sum();
+
+        let result: Result<Vec<Vec<Tensor>>> = (|| {
+            let inputs: Vec<Tensor> = tasks.iter().map(|t| t.input.clone()).collect();
+            let mut merged = Tensor::concat(&inputs)?;
+            // Pad up to the compiled batch-size ladder.
+            if !allowed.is_empty() {
+                let target = pad_to_allowed(merged_rows, allowed)
+                    .ok_or_else(|| anyhow!("batch {merged_rows} exceeds ladder {allowed:?}"))?;
+                merged = merged.pad_batch(target)?;
+            }
+            let outputs = runner.run_batch(merged)?;
+            // Un-pad, then split each output tensor back per caller.
+            let mut per_task: Vec<Vec<Tensor>> = vec![Vec::new(); tasks.len()];
+            for out in outputs {
+                let trimmed = out.truncate_batch(merged_rows)?;
+                for (i, piece) in trimmed.split(&sizes)?.into_iter().enumerate() {
+                    per_task[i].push(piece);
+                }
+            }
+            Ok(per_task)
+        })();
+
+        match result {
+            Ok(per_task) => {
+                for (task, outs) in tasks.into_iter().zip(per_task) {
+                    let _ = task.reply.send(Ok(outs));
+                }
+            }
+            Err(e) => {
+                // Device failure propagates to every caller in the batch.
+                for task in tasks {
+                    let _ = task.reply.send(Err(anyhow!("batch run failed: {e}")));
+                }
+            }
+        }
+    }
+
+    /// Synchronous batched run: blocks until this input's slice of a
+    /// merged batch has been computed.
+    pub fn run(&self, input: Tensor) -> Result<Vec<Tensor>> {
+        let (tx, rx) = mpsc::channel();
+        self.queue
+            .enqueue(PendingRun { input, reply: tx })
+            .map_err(|e| match e {
+                EnqueueError::QueueFull(_) => anyhow!("overloaded: queue full"),
+                EnqueueError::TaskTooLarge(t) => anyhow!(
+                    "request batch {} exceeds max_batch_size (use the splitter)",
+                    t.input.batch()
+                ),
+                EnqueueError::QueueClosed(_) => anyhow!("session closed"),
+            })?;
+        rx.recv().map_err(|_| anyhow!("session dropped reply"))?
+    }
+
+    pub fn batches_processed(&self) -> u64 {
+        self.queue.batches_processed()
+    }
+
+    pub fn tasks_processed(&self) -> u64 {
+        self.queue.tasks_processed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::scheduler::SchedulerOptions;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    /// Device doubling each element; also records batch sizes it saw.
+    struct DoublingRunner {
+        seen_batches: Arc<std::sync::Mutex<Vec<usize>>>,
+    }
+
+    impl BatchRunner for DoublingRunner {
+        fn run_batch(&self, input: Tensor) -> Result<Vec<Tensor>> {
+            self.seen_batches.lock().unwrap().push(input.batch());
+            let doubled: Vec<f32> = input.data().iter().map(|x| x * 2.0).collect();
+            Ok(vec![Tensor::new(input.shape().to_vec(), doubled)?])
+        }
+    }
+
+    fn setup(
+        opts: SessionOptions,
+    ) -> (
+        SharedBatchScheduler<PendingRun>,
+        BatchingSession,
+        Arc<std::sync::Mutex<Vec<usize>>>,
+    ) {
+        let sched = SharedBatchScheduler::new(SchedulerOptions {
+            num_batch_threads: 2,
+            ..Default::default()
+        });
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let runner = Arc::new(DoublingRunner { seen_batches: Arc::clone(&seen) });
+        let session = BatchingSession::new(&sched, "s", opts, runner);
+        (sched, session, seen)
+    }
+
+    #[test]
+    fn single_run_roundtrip() {
+        let (_sched, session, _seen) = setup(SessionOptions {
+            queue: QueueOptions {
+                max_batch_size: 16,
+                batch_timeout: Duration::from_millis(1),
+                max_enqueued_batches: 8,
+            },
+            allowed_batch_sizes: vec![1, 4, 16],
+        });
+        let out = session
+            .run(Tensor::matrix(vec![vec![1.0, 2.0]]).unwrap())
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].data(), &[2.0, 4.0]);
+        assert_eq!(out[0].shape(), &[1, 2]);
+    }
+
+    #[test]
+    fn concurrent_runs_share_one_device_batch() {
+        let (_sched, session, seen) = setup(SessionOptions {
+            queue: QueueOptions {
+                max_batch_size: 8,
+                batch_timeout: Duration::from_millis(20),
+                max_enqueued_batches: 8,
+            },
+            allowed_batch_sizes: vec![1, 4, 8],
+        });
+        let session = Arc::new(session);
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let s = Arc::clone(&session);
+                std::thread::spawn(move || {
+                    s.run(Tensor::matrix(vec![vec![i as f32]]).unwrap()).unwrap()
+                })
+            })
+            .collect();
+        let outs: Vec<Vec<Tensor>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Each caller got its own doubled row back.
+        let mut got: Vec<f32> = outs.iter().map(|o| o[0].data()[0]).collect();
+        got.sort_by(f32::total_cmp);
+        assert_eq!(got, (0..8).map(|i| 2.0 * i as f32).collect::<Vec<_>>());
+        // Fewer device invocations than callers = real merging.
+        let batches = seen.lock().unwrap();
+        assert!(
+            batches.len() < 8,
+            "no batching happened: {batches:?}"
+        );
+    }
+
+    #[test]
+    fn padding_to_allowed_sizes() {
+        let (_sched, session, seen) = setup(SessionOptions {
+            queue: QueueOptions {
+                max_batch_size: 16,
+                batch_timeout: Duration::from_millis(1),
+                max_enqueued_batches: 8,
+            },
+            allowed_batch_sizes: vec![4, 16],
+        });
+        // A 2-row request must execute as a 4-row padded batch.
+        let out = session
+            .run(Tensor::matrix(vec![vec![1.0], vec![3.0]]).unwrap())
+            .unwrap();
+        assert_eq!(out[0].shape(), &[2, 1]);
+        assert_eq!(out[0].data(), &[2.0, 6.0]);
+        assert_eq!(seen.lock().unwrap().as_slice(), &[4]);
+    }
+
+    #[test]
+    fn multi_row_requests_interleave_correctly() {
+        let (_sched, session, _seen) = setup(SessionOptions {
+            queue: QueueOptions {
+                max_batch_size: 8,
+                batch_timeout: Duration::from_millis(10),
+                max_enqueued_batches: 8,
+            },
+            allowed_batch_sizes: vec![8],
+        });
+        let session = Arc::new(session);
+        let a = {
+            let s = Arc::clone(&session);
+            std::thread::spawn(move || {
+                s.run(Tensor::matrix(vec![vec![1.0], vec![2.0], vec![3.0]]).unwrap())
+                    .unwrap()
+            })
+        };
+        let b = {
+            let s = Arc::clone(&session);
+            std::thread::spawn(move || {
+                s.run(Tensor::matrix(vec![vec![10.0], vec![20.0]]).unwrap()).unwrap()
+            })
+        };
+        let ra = a.join().unwrap();
+        let rb = b.join().unwrap();
+        assert_eq!(ra[0].data(), &[2.0, 4.0, 6.0]);
+        assert_eq!(rb[0].data(), &[20.0, 40.0]);
+    }
+
+    #[test]
+    fn device_error_propagates_to_all_callers() {
+        let sched = SharedBatchScheduler::<PendingRun>::new(SchedulerOptions::default());
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let runner = Arc::new(move |_input: Tensor| -> Result<Vec<Tensor>> {
+            c.fetch_add(1, Ordering::SeqCst);
+            anyhow::bail!("device on fire")
+        });
+        let session = BatchingSession::new(
+            &sched,
+            "s",
+            SessionOptions {
+                queue: QueueOptions {
+                    max_batch_size: 4,
+                    batch_timeout: Duration::from_millis(1),
+                    max_enqueued_batches: 8,
+                },
+                allowed_batch_sizes: vec![4],
+            },
+            runner,
+        );
+        let err = session
+            .run(Tensor::matrix(vec![vec![1.0]]).unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("device on fire"));
+    }
+
+    #[test]
+    fn oversized_request_rejected_with_hint() {
+        let (_sched, session, _seen) = setup(SessionOptions {
+            queue: QueueOptions { max_batch_size: 4, ..Default::default() },
+            allowed_batch_sizes: vec![4],
+        });
+        let big = Tensor::zeros(vec![10, 1]);
+        let err = session.run(big).unwrap_err();
+        assert!(err.to_string().contains("splitter"), "{err}");
+    }
+}

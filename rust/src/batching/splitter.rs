@@ -1,0 +1,124 @@
+//! Large-request splitting: a request bigger than `max_batch_size` is
+//! divided into chunks that batch independently, and the caller's
+//! completion fires when the *last* chunk finishes (mirrors TF-Serving's
+//! `split_input_task_func`).
+
+use super::batch::BatchTask;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Tasks that can split themselves into chunks of bounded size.
+pub trait SplittableTask: BatchTask + Sized {
+    /// Split into parts each with `size() <= max_part_size`.
+    /// Order must be preserved (part i precedes part i+1).
+    fn split(self, max_part_size: usize) -> Vec<Self>;
+}
+
+/// Completion rendezvous for a split task: the original completion
+/// callback runs exactly once, when every chunk has completed.
+pub struct SplitCompletion {
+    remaining: AtomicUsize,
+    on_done: Box<dyn Fn() + Send + Sync>,
+}
+
+impl SplitCompletion {
+    pub fn new(parts: usize, on_done: impl Fn() + Send + Sync + 'static) -> Arc<Self> {
+        assert!(parts > 0);
+        Arc::new(SplitCompletion {
+            remaining: AtomicUsize::new(parts),
+            on_done: Box::new(on_done),
+        })
+    }
+
+    /// Mark one chunk done; fires the callback on the last one.
+    pub fn part_done(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            (self.on_done)();
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.remaining.load(Ordering::Acquire)
+    }
+}
+
+/// Split `task` if needed and return the parts (1 part = no split).
+pub fn split_if_needed<T: SplittableTask>(task: T, max_batch_size: usize) -> Vec<T> {
+    if task.size() <= max_batch_size {
+        vec![task]
+    } else {
+        let parts = task.split(max_batch_size);
+        debug_assert!(parts.iter().all(|p| p.size() <= max_batch_size));
+        parts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[derive(Debug, Clone, PartialEq)]
+    struct Rows(Vec<u32>);
+
+    impl BatchTask for Rows {
+        fn size(&self) -> usize {
+            self.0.len()
+        }
+    }
+
+    impl SplittableTask for Rows {
+        fn split(self, max: usize) -> Vec<Self> {
+            self.0.chunks(max).map(|c| Rows(c.to_vec())).collect()
+        }
+    }
+
+    #[test]
+    fn small_task_not_split() {
+        let parts = split_if_needed(Rows(vec![1, 2]), 4);
+        assert_eq!(parts, vec![Rows(vec![1, 2])]);
+    }
+
+    #[test]
+    fn large_task_split_preserving_order() {
+        let parts = split_if_needed(Rows((0..10).collect()), 4);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0], Rows(vec![0, 1, 2, 3]));
+        assert_eq!(parts[2], Rows(vec![8, 9]));
+        let rejoined: Vec<u32> = parts.into_iter().flat_map(|p| p.0).collect();
+        assert_eq!(rejoined, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn completion_fires_once_after_all_parts() {
+        static FIRED: AtomicU32 = AtomicU32::new(0);
+        let c = SplitCompletion::new(3, || {
+            FIRED.fetch_add(1, Ordering::SeqCst);
+        });
+        c.part_done();
+        c.part_done();
+        assert_eq!(FIRED.load(Ordering::SeqCst), 0);
+        assert_eq!(c.remaining(), 1);
+        c.part_done();
+        assert_eq!(FIRED.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn completion_concurrent_parts() {
+        let fired = Arc::new(AtomicU32::new(0));
+        let f = Arc::clone(&fired);
+        let c = SplitCompletion::new(16, move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        });
+        let handles: Vec<_> = (0..16)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || c.part_done())
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+}

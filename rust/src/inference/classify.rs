@@ -1,0 +1,162 @@
+//! The Classification API (§2.2): typed, example-based inference for
+//! models exported with the `classify` signature.
+
+use super::example::{examples_to_tensor, Example};
+use super::predict::HandleSource;
+use anyhow::{bail, Result};
+
+/// Classify request: a batch of canonical examples.
+#[derive(Debug, Clone)]
+pub struct ClassifyRequest {
+    pub model: String,
+    pub version: Option<u64>,
+    pub examples: Vec<Example>,
+}
+
+/// Per-example result: argmax class + per-class log-probabilities.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Classification {
+    pub class: i32,
+    pub log_probs: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ClassifyResponse {
+    pub model_version: u64,
+    pub results: Vec<Classification>,
+}
+
+/// Execute a classification request.
+pub fn classify(handles: &dyn HandleSource, req: &ClassifyRequest) -> Result<ClassifyResponse> {
+    if req.examples.is_empty() {
+        bail!("classify: empty example list");
+    }
+    let handle = handles.hlo_handle(&req.model, req.version)?;
+    let spec = &handle.spec;
+    if spec.signature != "classify" {
+        bail!(
+            "model '{}' has signature '{}', not classify",
+            req.model,
+            spec.signature
+        );
+    }
+    let input = examples_to_tensor(&req.examples, "x", spec.input_dim)?;
+    let outputs = handle.run(&input)?;
+    // Exported as (log_probs f32[B,C], class s32[B]).
+    let log_probs = outputs[0].as_f32()?;
+    let classes = outputs[1].as_i32()?;
+    let results = (0..req.examples.len())
+        .map(|i| Classification {
+            class: classes.data[i],
+            log_probs: log_probs.row(i).to_vec(),
+        })
+        .collect();
+    Ok(ClassifyResponse { model_version: handle.id().version, results })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::loader::Loader;
+    use crate::base::servable::ServableId;
+    use crate::inference::example::Feature;
+    use crate::lifecycle::basic_manager::BasicManager;
+    use crate::runtime::artifacts::{artifacts_available, default_artifacts_root};
+    use crate::runtime::hlo_servable::HloLoader;
+    use crate::runtime::pjrt::XlaRuntime;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn manager() -> Option<Arc<BasicManager>> {
+        if !artifacts_available() {
+            return None;
+        }
+        let rt = XlaRuntime::shared().unwrap();
+        let m = BasicManager::with_defaults();
+        for (name, v) in [("mlp_classifier", 2u64), ("mlp_regressor", 2)] {
+            let dir = default_artifacts_root().join(name).join(v.to_string());
+            m.load_and_wait(
+                ServableId::new(name, v),
+                Arc::new(HloLoader::new(Arc::clone(&rt), dir)) as Arc<dyn Loader>,
+                Duration::from_secs(60),
+            )
+            .unwrap();
+        }
+        Some(m)
+    }
+
+    fn example(seed: usize) -> Example {
+        let x: Vec<f32> = (0..32).map(|j| ((seed * 31 + j) as f32).cos()).collect();
+        Example::new().with("x", Feature::Floats(x))
+    }
+
+    #[test]
+    fn classify_returns_valid_distributions() {
+        let Some(m) = manager() else { return };
+        let resp = classify(
+            m.as_ref(),
+            &ClassifyRequest {
+                model: "mlp_classifier".into(),
+                version: None,
+                examples: (0..5).map(example).collect(),
+            },
+        )
+        .unwrap();
+        assert_eq!(resp.results.len(), 5);
+        for r in &resp.results {
+            assert_eq!(r.log_probs.len(), 4);
+            assert!((0..4).contains(&r.class));
+            let p: f32 = r.log_probs.iter().map(|x| x.exp()).sum();
+            assert!((p - 1.0).abs() < 1e-4);
+            // class is the argmax of log_probs
+            let argmax = r
+                .log_probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0 as i32;
+            assert_eq!(r.class, argmax);
+        }
+    }
+
+    #[test]
+    fn classify_rejects_wrong_signature() {
+        let Some(m) = manager() else { return };
+        let err = classify(
+            m.as_ref(),
+            &ClassifyRequest {
+                model: "mlp_regressor".into(),
+                version: None,
+                examples: vec![example(0)],
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("signature"), "{err}");
+    }
+
+    #[test]
+    fn classify_rejects_empty_and_bad_features() {
+        let Some(m) = manager() else { return };
+        assert!(classify(
+            m.as_ref(),
+            &ClassifyRequest {
+                model: "mlp_classifier".into(),
+                version: None,
+                examples: vec![],
+            },
+        )
+        .is_err());
+        // Wrong feature dimension.
+        let bad = Example::new().with("x", Feature::Floats(vec![1.0; 3]));
+        assert!(classify(
+            m.as_ref(),
+            &ClassifyRequest {
+                model: "mlp_classifier".into(),
+                version: None,
+                examples: vec![bad],
+            },
+        )
+        .is_err());
+    }
+}

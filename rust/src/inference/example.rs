@@ -1,0 +1,432 @@
+//! The canonical example format — our `tf.Example` (§2.2).
+//!
+//! "We have co-designed a canonical data format for examples … we
+//! nevertheless do our best to optimize our standard example
+//! representation (e.g. compressing away features common to a batch of
+//! examples)."
+//!
+//! An [`Example`] is a name → [`Feature`] map. The wire format is a
+//! hand-rolled length-prefixed binary codec ([`Example::encode`]);
+//! batches use [`CompressedBatch`], which stores features shared by
+//! *every* example exactly once.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A typed feature value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Feature {
+    Floats(Vec<f32>),
+    Ints(Vec<i64>),
+    Bytes(Vec<u8>),
+}
+
+impl Feature {
+    fn kind(&self) -> u8 {
+        match self {
+            Feature::Floats(_) => 0,
+            Feature::Ints(_) => 1,
+            Feature::Bytes(_) => 2,
+        }
+    }
+}
+
+/// One example: an ordered feature map.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Example {
+    pub features: BTreeMap<String, Feature>,
+}
+
+// --- wire helpers -----------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    let end = *pos + 4;
+    if end > buf.len() {
+        bail!("truncated u32 at {pos}");
+    }
+    let v = u32::from_le_bytes(buf[*pos..end].try_into().unwrap());
+    *pos = end;
+    Ok(v)
+}
+
+impl Example {
+    pub fn new() -> Self {
+        Example::default()
+    }
+
+    /// Builder-style insert.
+    pub fn with(mut self, name: &str, feature: Feature) -> Self {
+        self.features.insert(name.to_string(), feature);
+        self
+    }
+
+    pub fn floats(&self, name: &str) -> Result<&[f32]> {
+        match self.features.get(name) {
+            Some(Feature::Floats(v)) => Ok(v),
+            Some(_) => bail!("feature '{name}' is not float"),
+            None => bail!("feature '{name}' missing"),
+        }
+    }
+
+    pub fn ints(&self, name: &str) -> Result<&[i64]> {
+        match self.features.get(name) {
+            Some(Feature::Ints(v)) => Ok(v),
+            Some(_) => bail!("feature '{name}' is not int"),
+            None => bail!("feature '{name}' missing"),
+        }
+    }
+
+    // ------------------------------------------------------------ codec
+
+    /// Binary encoding: `[n_features] ( [name_len][name][kind][len][payload] )*`.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u32(&mut out, self.features.len() as u32);
+        for (name, feature) in &self.features {
+            put_u32(&mut out, name.len() as u32);
+            out.extend_from_slice(name.as_bytes());
+            out.push(feature.kind());
+            match feature {
+                Feature::Floats(v) => {
+                    put_u32(&mut out, v.len() as u32);
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                Feature::Ints(v) => {
+                    put_u32(&mut out, v.len() as u32);
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                Feature::Bytes(v) => {
+                    put_u32(&mut out, v.len() as u32);
+                    out.extend_from_slice(v);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Example> {
+        let mut pos = 0usize;
+        let ex = Self::decode_at(buf, &mut pos)?;
+        if pos != buf.len() {
+            bail!("trailing bytes after example");
+        }
+        Ok(ex)
+    }
+
+    fn decode_at(buf: &[u8], pos: &mut usize) -> Result<Example> {
+        let n = get_u32(buf, pos)? as usize;
+        if n > 1_000_000 {
+            bail!("implausible feature count {n}");
+        }
+        let mut features = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = get_u32(buf, pos)? as usize;
+            let name_end = *pos + name_len;
+            if name_end > buf.len() {
+                bail!("truncated name");
+            }
+            let name = std::str::from_utf8(&buf[*pos..name_end])
+                .map_err(|_| anyhow!("name not utf-8"))?
+                .to_string();
+            *pos = name_end;
+            let kind = *buf.get(*pos).ok_or_else(|| anyhow!("truncated kind"))?;
+            *pos += 1;
+            let len = get_u32(buf, pos)? as usize;
+            let feature = match kind {
+                0 => {
+                    let end = *pos + len * 4;
+                    if end > buf.len() {
+                        bail!("truncated floats");
+                    }
+                    let v = buf[*pos..end]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    *pos = end;
+                    Feature::Floats(v)
+                }
+                1 => {
+                    let end = *pos + len * 8;
+                    if end > buf.len() {
+                        bail!("truncated ints");
+                    }
+                    let v = buf[*pos..end]
+                        .chunks_exact(8)
+                        .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    *pos = end;
+                    Feature::Ints(v)
+                }
+                2 => {
+                    let end = *pos + len;
+                    if end > buf.len() {
+                        bail!("truncated bytes");
+                    }
+                    let v = buf[*pos..end].to_vec();
+                    *pos = end;
+                    Feature::Bytes(v)
+                }
+                k => bail!("unknown feature kind {k}"),
+            };
+            features.insert(name, feature);
+        }
+        Ok(Example { features })
+    }
+}
+
+/// A batch of examples with features common to *all* members hoisted
+/// out and stored once (the paper's batch compression).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedBatch {
+    /// Features identical across every example.
+    pub common: Example,
+    /// Per-example residual features.
+    pub rows: Vec<Example>,
+}
+
+impl CompressedBatch {
+    /// Compress by hoisting features that are identical in all examples.
+    pub fn compress(examples: &[Example]) -> CompressedBatch {
+        let mut common = Example::new();
+        if let Some(first) = examples.first() {
+            for (name, feature) in &first.features {
+                if examples
+                    .iter()
+                    .all(|ex| ex.features.get(name) == Some(feature))
+                {
+                    common.features.insert(name.clone(), feature.clone());
+                }
+            }
+        }
+        let rows = examples
+            .iter()
+            .map(|ex| {
+                let mut r = Example::new();
+                for (name, feature) in &ex.features {
+                    if !common.features.contains_key(name) {
+                        r.features.insert(name.clone(), feature.clone());
+                    }
+                }
+                r
+            })
+            .collect();
+        CompressedBatch { common, rows }
+    }
+
+    /// Reconstruct the full examples.
+    pub fn decompress(&self) -> Vec<Example> {
+        self.rows
+            .iter()
+            .map(|row| {
+                let mut ex = self.common.clone();
+                for (name, feature) in &row.features {
+                    ex.features.insert(name.clone(), feature.clone());
+                }
+                ex
+            })
+            .collect()
+    }
+
+    /// Wire encoding: `[common][n_rows][row]*` with length prefixes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        let c = self.common.encode();
+        put_u32(&mut out, c.len() as u32);
+        out.extend_from_slice(&c);
+        put_u32(&mut out, self.rows.len() as u32);
+        for row in &self.rows {
+            let r = row.encode();
+            put_u32(&mut out, r.len() as u32);
+            out.extend_from_slice(&r);
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<CompressedBatch> {
+        let mut pos = 0usize;
+        let clen = get_u32(buf, &mut pos)? as usize;
+        let common = Example::decode(
+            buf.get(pos..pos + clen).ok_or_else(|| anyhow!("truncated common"))?,
+        )?;
+        pos += clen;
+        let n = get_u32(buf, &mut pos)? as usize;
+        if n > 10_000_000 {
+            bail!("implausible row count {n}");
+        }
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rlen = get_u32(buf, &mut pos)? as usize;
+            rows.push(Example::decode(
+                buf.get(pos..pos + rlen).ok_or_else(|| anyhow!("truncated row"))?,
+            )?);
+            pos += rlen;
+        }
+        if pos != buf.len() {
+            bail!("trailing bytes after batch");
+        }
+        Ok(CompressedBatch { common, rows })
+    }
+
+    pub fn encoded_len(&self) -> usize {
+        self.encode().len()
+    }
+}
+
+/// Extract feature `name` from each example into a dense `(B, D)`
+/// tensor (the classify/regress APIs' input path).
+pub fn examples_to_tensor(
+    examples: &[Example],
+    feature: &str,
+    dim: usize,
+) -> Result<crate::base::tensor::Tensor> {
+    let mut data = Vec::with_capacity(examples.len() * dim);
+    for (i, ex) in examples.iter().enumerate() {
+        let f = ex.floats(feature)?;
+        if f.len() != dim {
+            bail!(
+                "example {i}: feature '{feature}' has {} values, want {dim}",
+                f.len()
+            );
+        }
+        data.extend_from_slice(f);
+    }
+    crate::base::tensor::Tensor::new(vec![examples.len(), dim], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    fn sample_example() -> Example {
+        Example::new()
+            .with("x", Feature::Floats(vec![1.5, -2.0, 3.25]))
+            .with("id", Feature::Ints(vec![42]))
+            .with("tag", Feature::Bytes(b"hello".to_vec()))
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let ex = sample_example();
+        let buf = ex.encode();
+        assert_eq!(Example::decode(&buf).unwrap(), ex);
+    }
+
+    #[test]
+    fn empty_example_roundtrip() {
+        let ex = Example::new();
+        assert_eq!(Example::decode(&ex.encode()).unwrap(), ex);
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let buf = sample_example().encode();
+        assert!(Example::decode(&buf[..buf.len() - 1]).is_err());
+        let mut trailing = buf.clone();
+        trailing.push(0);
+        assert!(Example::decode(&trailing).is_err());
+        assert!(Example::decode(&[]).is_err());
+        // absurd feature count
+        assert!(Example::decode(&u32::MAX.to_le_bytes()).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let ex = sample_example();
+        assert_eq!(ex.floats("x").unwrap(), &[1.5, -2.0, 3.25]);
+        assert_eq!(ex.ints("id").unwrap(), &[42]);
+        assert!(ex.floats("id").is_err());
+        assert!(ex.floats("missing").is_err());
+    }
+
+    #[test]
+    fn compression_hoists_common_features() {
+        let mk = |x: f32| {
+            Example::new()
+                .with("x", Feature::Floats(vec![x]))
+                .with("model_cfg", Feature::Bytes(vec![9; 100]))
+        };
+        let examples: Vec<Example> = (0..10).map(|i| mk(i as f32)).collect();
+        let batch = CompressedBatch::compress(&examples);
+        assert!(batch.common.features.contains_key("model_cfg"));
+        assert!(!batch.rows[0].features.contains_key("model_cfg"));
+        assert_eq!(batch.decompress(), examples);
+
+        // Compression actually saves bytes vs naive concatenation.
+        let naive: usize = examples.iter().map(|e| e.encode().len()).sum();
+        assert!(
+            batch.encoded_len() < naive / 2,
+            "compressed {} vs naive {naive}",
+            batch.encoded_len()
+        );
+    }
+
+    #[test]
+    fn compression_keeps_differing_features_per_row() {
+        let a = Example::new().with("x", Feature::Floats(vec![1.0]));
+        let b = Example::new().with("x", Feature::Floats(vec![2.0]));
+        let batch = CompressedBatch::compress(&[a.clone(), b.clone()]);
+        assert!(batch.common.features.is_empty());
+        assert_eq!(batch.decompress(), vec![a, b]);
+    }
+
+    #[test]
+    fn compressed_batch_codec_roundtrip() {
+        let examples: Vec<Example> = (0..5)
+            .map(|i| {
+                Example::new()
+                    .with("x", Feature::Floats(vec![i as f32; 4]))
+                    .with("shared", Feature::Ints(vec![7]))
+            })
+            .collect();
+        let batch = CompressedBatch::compress(&examples);
+        let decoded = CompressedBatch::decode(&batch.encode()).unwrap();
+        assert_eq!(decoded, batch);
+        assert_eq!(decoded.decompress(), examples);
+    }
+
+    #[test]
+    fn examples_to_tensor_builds_batch() {
+        let examples: Vec<Example> = (0..3)
+            .map(|i| Example::new().with("x", Feature::Floats(vec![i as f32, 0.5])))
+            .collect();
+        let t = examples_to_tensor(&examples, "x", 2).unwrap();
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.row(2), &[2.0, 0.5]);
+        assert!(examples_to_tensor(&examples, "x", 3).is_err());
+        assert!(examples_to_tensor(&examples, "y", 2).is_err());
+    }
+
+    #[test]
+    fn property_roundtrip_random_examples() {
+        forall::<(u64, u64), _>("example codec roundtrip", |(seed, nf)| {
+            let mut rng = Rng::new(*seed);
+            let mut ex = Example::new();
+            for i in 0..(nf % 6) {
+                let name = format!("f{i}");
+                let feature = match rng.next_below(3) {
+                    0 => Feature::Floats(
+                        (0..rng.next_below(8)).map(|_| rng.next_f32()).collect(),
+                    ),
+                    1 => Feature::Ints(
+                        (0..rng.next_below(8)).map(|_| rng.next_u64() as i64).collect(),
+                    ),
+                    _ => Feature::Bytes(
+                        (0..rng.next_below(16)).map(|_| rng.next_u64() as u8).collect(),
+                    ),
+                };
+                ex.features.insert(name, feature);
+            }
+            Example::decode(&ex.encode()).map(|d| d == ex).unwrap_or(false)
+        });
+    }
+}

@@ -1,0 +1,156 @@
+//! Sampled inference logging (§2.2): "The handlers are equipped with
+//! logging capability, which is useful for debugging, detecting
+//! training/serving skew, and validating model changes."
+//!
+//! Entries land in a bounded in-memory ring (drainable by an exporter);
+//! the canary example uses the log to compare v1-vs-v2 predictions on
+//! teed traffic.
+
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One logged inference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogEntry {
+    pub model: String,
+    pub version: u64,
+    /// Caller-provided digest of the request (e.g. input checksum).
+    pub request_digest: u64,
+    /// Caller-provided digest/summary of the response (e.g. argmax).
+    pub response_digest: u64,
+}
+
+/// Sampling request/response logger.
+pub struct RequestLogger {
+    sample_rate: f64,
+    capacity: usize,
+    ring: Mutex<(VecDeque<LogEntry>, Rng)>,
+    seen: AtomicU64,
+    logged: AtomicU64,
+}
+
+impl RequestLogger {
+    /// Log ~`sample_rate` of requests, keeping the most recent
+    /// `capacity` entries.
+    pub fn new(sample_rate: f64, capacity: usize, seed: u64) -> Self {
+        RequestLogger {
+            sample_rate,
+            capacity,
+            ring: Mutex::new((VecDeque::with_capacity(capacity), Rng::new(seed))),
+            seen: AtomicU64::new(0),
+            logged: AtomicU64::new(0),
+        }
+    }
+
+    /// Offer an inference for logging; cheap when not sampled.
+    pub fn observe(&self, model: &str, version: u64, request_digest: u64, response_digest: u64) {
+        self.seen.fetch_add(1, Ordering::Relaxed);
+        if self.sample_rate <= 0.0 {
+            return;
+        }
+        let mut g = self.ring.lock().unwrap();
+        let sampled = self.sample_rate >= 1.0 || g.1.chance(self.sample_rate);
+        if !sampled {
+            return;
+        }
+        if g.0.len() == self.capacity {
+            g.0.pop_front();
+        }
+        g.0.push_back(LogEntry {
+            model: model.to_string(),
+            version,
+            request_digest,
+            response_digest,
+        });
+        self.logged.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drain everything logged so far.
+    pub fn drain(&self) -> Vec<LogEntry> {
+        self.ring.lock().unwrap().0.drain(..).collect()
+    }
+
+    /// Entries currently held (without draining).
+    pub fn snapshot(&self) -> Vec<LogEntry> {
+        self.ring.lock().unwrap().0.iter().cloned().collect()
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen.load(Ordering::Relaxed)
+    }
+
+    pub fn logged(&self) -> u64 {
+        self.logged.load(Ordering::Relaxed)
+    }
+}
+
+/// FNV-1a digest helper for request/response summaries.
+pub fn digest_f32s(xs: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_sampling_logs_everything() {
+        let l = RequestLogger::new(1.0, 100, 0);
+        for i in 0..10 {
+            l.observe("m", 1, i, i * 2);
+        }
+        assert_eq!(l.seen(), 10);
+        assert_eq!(l.logged(), 10);
+        let entries = l.drain();
+        assert_eq!(entries.len(), 10);
+        assert_eq!(entries[3].request_digest, 3);
+        assert!(l.drain().is_empty());
+    }
+
+    #[test]
+    fn zero_sampling_logs_nothing() {
+        let l = RequestLogger::new(0.0, 100, 0);
+        for i in 0..100 {
+            l.observe("m", 1, i, i);
+        }
+        assert_eq!(l.seen(), 100);
+        assert_eq!(l.logged(), 0);
+    }
+
+    #[test]
+    fn partial_sampling_is_roughly_proportional() {
+        let l = RequestLogger::new(0.2, 100_000, 7);
+        for i in 0..10_000 {
+            l.observe("m", 1, i, i);
+        }
+        let rate = l.logged() as f64 / l.seen() as f64;
+        assert!((rate - 0.2).abs() < 0.03, "rate={rate}");
+    }
+
+    #[test]
+    fn ring_is_bounded_keeping_recent() {
+        let l = RequestLogger::new(1.0, 5, 0);
+        for i in 0..20 {
+            l.observe("m", 1, i, i);
+        }
+        let entries = l.snapshot();
+        assert_eq!(entries.len(), 5);
+        assert_eq!(entries[0].request_digest, 15);
+        assert_eq!(entries[4].request_digest, 19);
+    }
+
+    #[test]
+    fn digest_distinguishes_inputs() {
+        assert_ne!(digest_f32s(&[1.0, 2.0]), digest_f32s(&[2.0, 1.0]));
+        assert_eq!(digest_f32s(&[1.0, 2.0]), digest_f32s(&[1.0, 2.0]));
+    }
+}

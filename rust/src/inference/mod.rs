@@ -1,0 +1,22 @@
+//! Inference APIs (paper §2.2).
+//!
+//! * [`example`] — the canonical example format (our `tf.Example`):
+//!   typed feature maps with a binary codec and common-feature batch
+//!   compression.
+//! * [`predict`] — the low-level tensor API (mirrors `Session::Run`).
+//! * [`classify`] / [`regress`] — the higher-level typed APIs over
+//!   examples.
+//! * [`logger`] — sampled inference logging (training/serving-skew
+//!   detection hook).
+//! * [`table`] — the "BananaFlow" platform: lookup-table servables,
+//!   proving the manager treats servables as black boxes.
+//! * [`null`] — zero-work servable isolating framework overhead (the
+//!   §4 100k-qps methodology: "if those two layers are factored out").
+
+pub mod classify;
+pub mod example;
+pub mod logger;
+pub mod null;
+pub mod predict;
+pub mod regress;
+pub mod table;

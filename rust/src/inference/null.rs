@@ -1,0 +1,79 @@
+//! [`NullServable`]: a zero-work servable.
+//!
+//! §4's 100k-qps/core figure measures TensorFlow-Serving *itself* — "if
+//! those two layers [RPC and TensorFlow] are factored out". The null
+//! servable factors out the model layer: handle lookup, refcounting,
+//! batching and dispatch all run for real, but "inference" is a counter
+//! bump. `benches/bench_throughput.rs` (experiment T1) serves these.
+
+use crate::base::loader::{FnLoader, Loader, ResourceEstimate};
+use crate::base::servable::ServableBox;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Does nothing, quickly.
+pub struct NullServable {
+    calls: AtomicU64,
+}
+
+impl NullServable {
+    pub fn new() -> Self {
+        NullServable { calls: AtomicU64::new(0) }
+    }
+
+    /// The "inference": count and echo the input size.
+    #[inline]
+    pub fn run(&self, input_rows: usize) -> usize {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        input_rows
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for NullServable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Loader producing a fresh [`NullServable`].
+pub fn null_loader() -> Arc<dyn Loader> {
+    Arc::new(FnLoader::new(ResourceEstimate::default(), "null", || {
+        Ok(Arc::new(NullServable::new()) as ServableBox)
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::servable::ServableId;
+    use crate::lifecycle::basic_manager::{BasicManager, VersionRequest};
+    use std::time::Duration;
+
+    #[test]
+    fn counts_calls() {
+        let s = NullServable::new();
+        assert_eq!(s.run(4), 4);
+        assert_eq!(s.run(1), 1);
+        assert_eq!(s.calls(), 2);
+    }
+
+    #[test]
+    fn serves_through_manager() {
+        let m = BasicManager::with_defaults();
+        m.load_and_wait(
+            ServableId::new("null", 1),
+            null_loader(),
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        let h = m.handle::<NullServable>("null", VersionRequest::Latest).unwrap();
+        for _ in 0..100 {
+            h.run(1);
+        }
+        assert_eq!(h.calls(), 100);
+    }
+}

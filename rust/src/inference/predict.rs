@@ -1,0 +1,135 @@
+//! The low-level tensor Predict API (§2.2: "a low-level tensor
+//! interface that mirrors TensorFlow's `Session::Run()` API").
+//!
+//! The handler pattern is the paper's: fetch a servable handle from the
+//! manager, dereference, run, discard the handle (which defers any
+//! final free to the reclaim thread).
+
+use crate::base::servable::ServableHandle;
+use crate::base::tensor::Tensor;
+use crate::lifecycle::basic_manager::{BasicManager, VersionRequest};
+use crate::lifecycle::manager::AspiredVersionsManager;
+use crate::runtime::hlo_servable::HloServable;
+use crate::runtime::pjrt::OutTensor;
+use anyhow::Result;
+
+/// Anything that can resolve HLO servable handles (both manager layers).
+pub trait HandleSource: Send + Sync {
+    fn hlo_handle(
+        &self,
+        name: &str,
+        version: Option<u64>,
+    ) -> Result<ServableHandle<HloServable>>;
+}
+
+impl HandleSource for BasicManager {
+    fn hlo_handle(
+        &self,
+        name: &str,
+        version: Option<u64>,
+    ) -> Result<ServableHandle<HloServable>> {
+        self.handle(
+            name,
+            version.map_or(VersionRequest::Latest, VersionRequest::Specific),
+        )
+    }
+}
+
+impl HandleSource for AspiredVersionsManager {
+    fn hlo_handle(
+        &self,
+        name: &str,
+        version: Option<u64>,
+    ) -> Result<ServableHandle<HloServable>> {
+        self.handle(
+            name,
+            version.map_or(VersionRequest::Latest, VersionRequest::Specific),
+        )
+    }
+}
+
+/// Predict request: raw input tensor for a (model, version?).
+#[derive(Debug, Clone)]
+pub struct PredictRequest {
+    pub model: String,
+    /// `None` = latest ready version.
+    pub version: Option<u64>,
+    pub input: Tensor,
+}
+
+/// Predict response: output tuple + the version that served it.
+#[derive(Debug, Clone)]
+pub struct PredictResponse {
+    pub model_version: u64,
+    pub outputs: Vec<OutTensor>,
+}
+
+/// Execute a predict request against a manager.
+pub fn predict(handles: &dyn HandleSource, req: &PredictRequest) -> Result<PredictResponse> {
+    let handle = handles.hlo_handle(&req.model, req.version)?;
+    let outputs = handle.run(&req.input)?;
+    Ok(PredictResponse { model_version: handle.id().version, outputs })
+    // handle drops here → refs retired via the reclaim thread
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::loader::Loader;
+    use crate::runtime::artifacts::{artifacts_available, default_artifacts_root};
+    use crate::runtime::hlo_servable::HloLoader;
+    use crate::runtime::pjrt::XlaRuntime;
+    use crate::base::servable::ServableId;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn manager_with_classifier() -> Option<Arc<BasicManager>> {
+        if !artifacts_available() {
+            return None;
+        }
+        let rt = XlaRuntime::shared().unwrap();
+        let m = BasicManager::with_defaults();
+        for v in [1u64, 2] {
+            let dir = default_artifacts_root().join("mlp_classifier").join(v.to_string());
+            m.load_and_wait(
+                ServableId::new("mlp_classifier", v),
+                Arc::new(HloLoader::new(Arc::clone(&rt), dir)) as Arc<dyn Loader>,
+                Duration::from_secs(60),
+            )
+            .unwrap();
+        }
+        Some(m)
+    }
+
+    #[test]
+    fn predict_latest_and_specific() {
+        let Some(m) = manager_with_classifier() else { return };
+        let req = PredictRequest {
+            model: "mlp_classifier".into(),
+            version: None,
+            input: Tensor::zeros(vec![2, 32]),
+        };
+        let resp = predict(m.as_ref(), &req).unwrap();
+        assert_eq!(resp.model_version, 2); // latest
+        assert_eq!(resp.outputs.len(), 2);
+        assert_eq!(resp.outputs[0].as_f32().unwrap().shape(), &[2, 4]);
+
+        let resp1 = predict(
+            m.as_ref(),
+            &PredictRequest { version: Some(1), ..req.clone() },
+        )
+        .unwrap();
+        assert_eq!(resp1.model_version, 1);
+    }
+
+    #[test]
+    fn predict_missing_model_errors() {
+        let Some(m) = manager_with_classifier() else { return };
+        let req = PredictRequest {
+            model: "nope".into(),
+            version: None,
+            input: Tensor::zeros(vec![1, 32]),
+        };
+        assert!(predict(m.as_ref(), &req).is_err());
+    }
+}

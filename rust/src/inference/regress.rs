@@ -1,0 +1,133 @@
+//! The Regression API (§2.2): typed, example-based inference for models
+//! exported with the `regress` signature.
+
+use super::example::{examples_to_tensor, Example};
+use super::predict::HandleSource;
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct RegressRequest {
+    pub model: String,
+    pub version: Option<u64>,
+    pub examples: Vec<Example>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RegressResponse {
+    pub model_version: u64,
+    /// One predicted value per example.
+    pub values: Vec<f32>,
+}
+
+/// Execute a regression request.
+pub fn regress(handles: &dyn HandleSource, req: &RegressRequest) -> Result<RegressResponse> {
+    if req.examples.is_empty() {
+        bail!("regress: empty example list");
+    }
+    let handle = handles.hlo_handle(&req.model, req.version)?;
+    let spec = &handle.spec;
+    if spec.signature != "regress" {
+        bail!(
+            "model '{}' has signature '{}', not regress",
+            req.model,
+            spec.signature
+        );
+    }
+    let input = examples_to_tensor(&req.examples, "x", spec.input_dim)?;
+    let outputs = handle.run(&input)?;
+    let values = outputs[0].as_f32()?.data().to_vec();
+    Ok(RegressResponse { model_version: handle.id().version, values })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::loader::Loader;
+    use crate::base::servable::ServableId;
+    use crate::inference::example::Feature;
+    use crate::lifecycle::basic_manager::BasicManager;
+    use crate::runtime::artifacts::{artifacts_available, default_artifacts_root};
+    use crate::runtime::hlo_servable::HloLoader;
+    use crate::runtime::pjrt::XlaRuntime;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn manager() -> Option<Arc<BasicManager>> {
+        if !artifacts_available() {
+            return None;
+        }
+        let rt = XlaRuntime::shared().unwrap();
+        let m = BasicManager::with_defaults();
+        let dir = default_artifacts_root().join("mlp_regressor").join("2");
+        m.load_and_wait(
+            ServableId::new("mlp_regressor", 2),
+            Arc::new(HloLoader::new(rt, dir)) as Arc<dyn Loader>,
+            Duration::from_secs(60),
+        )
+        .unwrap();
+        Some(m)
+    }
+
+    /// Pseudo-gaussian row (in-distribution for the trained model).
+    fn example(seed: u64, scale: f32) -> Example {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let x: Vec<f32> = (0..32).map(|_| scale * rng.normal() as f32).collect();
+        Example::new().with("x", Feature::Floats(x))
+    }
+
+    #[test]
+    fn regress_predicts_norm_like_values() {
+        let Some(m) = manager() else { return };
+        // Target is tanh(x0) + 0.5*x1*x2; predictions must correlate.
+        let examples: Vec<Example> = (0..64).map(|i| example(i, 1.0)).collect();
+        let targets: Vec<f32> = examples
+            .iter()
+            .map(|e| {
+                let x = e.floats("x").unwrap();
+                x[0].tanh() + 0.5 * x[1] * x[2]
+            })
+            .collect();
+        let resp = regress(
+            m.as_ref(),
+            &RegressRequest {
+                model: "mlp_regressor".into(),
+                version: None,
+                examples,
+            },
+        )
+        .unwrap();
+        assert_eq!(resp.values.len(), 64);
+        assert_eq!(resp.model_version, 2);
+        // Pearson correlation between prediction and target.
+        let n = 64.0f32;
+        let (mp, mt) = (
+            resp.values.iter().sum::<f32>() / n,
+            targets.iter().sum::<f32>() / n,
+        );
+        let cov: f32 = resp
+            .values
+            .iter()
+            .zip(&targets)
+            .map(|(p, t)| (p - mp) * (t - mt))
+            .sum();
+        let vp: f32 = resp.values.iter().map(|p| (p - mp) * (p - mp)).sum();
+        let vt: f32 = targets.iter().map(|t| (t - mt) * (t - mt)).sum();
+        let r = cov / (vp.sqrt() * vt.sqrt());
+        assert!(r > 0.6, "prediction/target correlation too low: r={r}");
+    }
+
+    #[test]
+    fn regress_rejects_classifier() {
+        let Some(m) = manager() else { return };
+        // mlp_classifier isn't even loaded here: missing model error.
+        assert!(regress(
+            m.as_ref(),
+            &RegressRequest {
+                model: "mlp_classifier".into(),
+                version: None,
+                examples: vec![example(0, 1.0)],
+            },
+        )
+        .is_err());
+    }
+}

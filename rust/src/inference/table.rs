@@ -1,0 +1,180 @@
+//! The "BananaFlow" platform: lookup-table servables (§2.1).
+//!
+//! "Servables do not need to be machine learning models at all, e.g.
+//! they could be lookup tables that encode feature transformations."
+//! This second platform proves the lifecycle chain is genuinely
+//! black-box: the same Sources/Routers/Managers serve HLO models and
+//! these tables side by side (see the Figure-1 integration test).
+
+use crate::base::loader::{Loader, ResourceEstimate};
+use crate::base::servable::ServableBox;
+use crate::lifecycle::source_adapter::FnSourceAdapter;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// An embedding/feature lookup table.
+pub struct TableServable {
+    pub name: String,
+    pub version: u64,
+    entries: HashMap<String, Vec<f32>>,
+}
+
+impl TableServable {
+    pub fn from_entries(
+        name: &str,
+        version: u64,
+        entries: HashMap<String, Vec<f32>>,
+    ) -> Self {
+        TableServable { name: name.to_string(), version, entries }
+    }
+
+    /// Parse the `table.json` artifact.
+    pub fn from_json(json: &Json) -> Result<TableServable> {
+        if json.get("platform").and_then(|v| v.as_str()) != Some("table") {
+            bail!("not a table artifact");
+        }
+        let name = json
+            .get("model_name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("table: missing model_name"))?
+            .to_string();
+        let version = json
+            .get("version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("table: missing version"))?;
+        let entries = json
+            .get("entries")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("table: missing entries"))?
+            .iter()
+            .map(|(k, v)| {
+                let vec = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("table entry '{k}' not an array"))?
+                    .iter()
+                    .map(|x| x.as_f64().map(|f| f as f32))
+                    .collect::<Option<Vec<f32>>>()
+                    .ok_or_else(|| anyhow!("table entry '{k}' not numeric"))?;
+                Ok((k.clone(), vec))
+            })
+            .collect::<Result<HashMap<_, _>>>()?;
+        Ok(TableServable { name, version, entries })
+    }
+
+    pub fn lookup(&self, key: &str) -> Option<&[f32]> {
+        self.entries.get(key).map(|v| v.as_slice())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn ram_bytes(&self) -> u64 {
+        self.entries
+            .iter()
+            .map(|(k, v)| (k.len() + v.len() * 4 + 64) as u64)
+            .sum()
+    }
+}
+
+/// Loads a table version from `<version_dir>/table.json`.
+pub struct TableLoader {
+    version_dir: PathBuf,
+}
+
+impl TableLoader {
+    pub fn new(version_dir: PathBuf) -> Self {
+        TableLoader { version_dir }
+    }
+
+    fn read(&self) -> Result<TableServable> {
+        let json = Json::parse_file(&self.version_dir.join("table.json"))?;
+        TableServable::from_json(&json)
+    }
+}
+
+impl Loader for TableLoader {
+    fn estimate(&self) -> Result<ResourceEstimate> {
+        // Tables are small; estimate by parsing (cheap).
+        Ok(ResourceEstimate::ram(self.read()?.ram_bytes()))
+    }
+
+    fn load(&self) -> Result<ServableBox> {
+        Ok(Arc::new(self.read()?) as ServableBox)
+    }
+
+    fn describe(&self) -> String {
+        format!("table:{}", self.version_dir.display())
+    }
+}
+
+/// The BananaFlow Source Adapter: storage path → [`TableLoader`].
+pub fn table_source_adapter() -> Arc<FnSourceAdapter<PathBuf, Arc<dyn Loader>>> {
+    FnSourceAdapter::new(move |data: &crate::base::aspired::ServableData<PathBuf>| {
+        let dir = data.payload.as_ref().unwrap().clone();
+        Ok(Arc::new(TableLoader::new(dir)) as Arc<dyn Loader>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::servable::ServableId;
+    use crate::lifecycle::basic_manager::{BasicManager, VersionRequest};
+    use crate::runtime::artifacts::{artifacts_available, default_artifacts_root};
+    use std::time::Duration;
+
+    #[test]
+    fn from_json_parses() {
+        let json = Json::parse(
+            r#"{"platform":"table","model_name":"t","version":1,
+                "entries":{"a":[1,2],"b":[3]}}"#,
+        )
+        .unwrap();
+        let t = TableServable::from_json(&json).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.lookup("a"), Some(&[1.0, 2.0][..]));
+        assert_eq!(t.lookup("missing"), None);
+        assert!(t.ram_bytes() > 0);
+    }
+
+    #[test]
+    fn from_json_rejects_bad() {
+        for bad in [
+            r#"{"platform":"hlo"}"#,
+            r#"{"platform":"table","version":1,"entries":{}}"#,
+            r#"{"platform":"table","model_name":"t","version":1,"entries":{"a":["x"]}}"#,
+        ] {
+            assert!(TableServable::from_json(&Json::parse(bad).unwrap()).is_err());
+        }
+    }
+
+    #[test]
+    fn real_toy_table_loads_through_manager() {
+        if !artifacts_available() {
+            return;
+        }
+        let dir = default_artifacts_root().join("toy_table").join("1");
+        let m = BasicManager::with_defaults();
+        m.load_and_wait(
+            ServableId::new("toy_table", 1),
+            Arc::new(TableLoader::new(dir)),
+            Duration::from_secs(10),
+        )
+        .unwrap();
+        let h = m
+            .handle::<TableServable>("toy_table", VersionRequest::Latest)
+            .unwrap();
+        assert_eq!(h.len(), 100);
+        // aot.py: entries[i] = [i, i*i % 7]
+        assert_eq!(h.lookup("3"), Some(&[3.0, 2.0][..]));
+        assert_eq!(h.lookup("10"), Some(&[10.0, 2.0][..]));
+    }
+}

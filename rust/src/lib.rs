@@ -1,0 +1,44 @@
+//! # tensorserve
+//!
+//! A Rust + JAX + Pallas reproduction of **TensorFlow-Serving: Flexible,
+//! High-Performance ML Serving** (Olston et al., 2017).
+//!
+//! The crate mirrors the paper's three form factors:
+//!
+//! 1. **Library** — composable modules: model lifecycle management
+//!    ([`lifecycle`]: Sources → Source Routers → Source Adapters →
+//!    Loaders → Managers over the *aspired versions* API), inter-request
+//!    batching ([`batching`]), and typed inference APIs ([`inference`]).
+//! 2. **Canonical binary** — [`server`] assembles the vanilla
+//!    file-system-source → HLO-adapter → `AspiredVersionsManager` stack
+//!    behind an RPC front end (`tensorserve_server`).
+//! 3. **Hosted service (TFS²)** — [`tfs2`]: Controller (bin-packing,
+//!    transactional store), Synchronizer, Router (hedged requests),
+//!    autoscaler, over an in-process multi-job cluster.
+//!
+//! Models are AOT-lowered by the build-time Python layer
+//! (`python/compile/`): a JAX MLP whose dense layers run through a
+//! Pallas kernel, exported as HLO text per (version, batch size) and
+//! executed via the PJRT CPU client ([`runtime`]). Python is never on
+//! the request path.
+//!
+//! The §2.1.2 performance machinery is faithful: wait-free RCU serving
+//! maps ([`util::rcu`]), isolated load thread pools, reference-counted
+//! handles whose final drop happens on a reclaim thread
+//! ([`base::reclaim`]), `malloc_trim` on unload ([`util::mem`]), and
+//! parallel initial load. See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod base;
+pub mod batching;
+pub mod inference;
+pub mod lifecycle;
+pub mod rpc;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tfs2;
+pub mod util;
+
+pub use base::servable::{ServableHandle, ServableId};
+pub use lifecycle::manager::AspiredVersionsManager;

@@ -1,0 +1,552 @@
+//! [`BasicManager`]: executes loads/unloads and serves handles.
+//!
+//! This is the §2.1.2 machinery:
+//! * **RCU serving map** — inference threads resolve `name[:version]` →
+//!   servable with wait-free reads ([`crate::util::rcu`]).
+//! * **Isolated load pool** — loads/unloads run on dedicated threads,
+//!   never on inference threads.
+//! * **Deferred reclamation** — unloaded servables (and handle refs) are
+//!   dropped on a reclaim thread, followed by `malloc_trim`.
+//! * **Resource admission** — a RAM ledger against an optional capacity,
+//!   charged from pre-load [`ResourceEstimate`]s.
+//! * **Parallel initial load** — "one-time use of all threads to load
+//!   the initial set of servable versions, to speed up server start-up".
+//!
+//! [`super::manager::AspiredVersionsManager`] layers aspired-state
+//! reconciliation on top.
+
+use super::harness::{HarnessOptions, LoaderHarness, State};
+use super::monitor::{EventBus, ServableStateMonitor, StateEvent};
+use crate::base::loader::Loader;
+use crate::base::reclaim::Reclaimer;
+use crate::base::servable::{ServableBox, ServableHandle, ServableId};
+use crate::util::rcu::Rcu;
+use crate::util::threadpool::{ThreadPool, WaitGroup};
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Which version of a servable a handle request wants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VersionRequest {
+    Latest,
+    Specific(u64),
+}
+
+/// name → version → ready servable. The value read on every request.
+pub type ServingMap = HashMap<String, BTreeMap<u64, ServableBox>>;
+
+/// Configuration for [`BasicManager`].
+#[derive(Clone)]
+pub struct ManagerOptions {
+    /// Threads in the isolated load/unload pool.
+    pub load_threads: usize,
+    /// RAM capacity for admission control; `None` = unlimited.
+    pub ram_capacity_bytes: Option<u64>,
+    pub harness: HarnessOptions,
+    /// Name used for thread names and logs.
+    pub name: String,
+}
+
+impl Default for ManagerOptions {
+    fn default() -> Self {
+        ManagerOptions {
+            load_threads: 2,
+            ram_capacity_bytes: None,
+            harness: HarnessOptions::default(),
+            name: "manager".to_string(),
+        }
+    }
+}
+
+pub struct BasicManager {
+    serving: Rcu<ServingMap>,
+    harnesses: Mutex<HashMap<ServableId, Arc<LoaderHarness>>>,
+    load_pool: ThreadPool,
+    reclaimer: Reclaimer,
+    bus: Arc<EventBus>,
+    monitor: Arc<ServableStateMonitor>,
+    ram_used: AtomicU64,
+    options: ManagerOptions,
+}
+
+impl BasicManager {
+    pub fn new(options: ManagerOptions) -> Arc<Self> {
+        let bus = EventBus::new();
+        let monitor = ServableStateMonitor::attach(&bus);
+        Arc::new(BasicManager {
+            serving: Rcu::new(ServingMap::new()),
+            harnesses: Mutex::new(HashMap::new()),
+            load_pool: ThreadPool::new(&format!("{}-load", options.name), options.load_threads),
+            reclaimer: Reclaimer::start(&options.name),
+            bus,
+            monitor,
+            ram_used: AtomicU64::new(0),
+            options,
+        })
+    }
+
+    pub fn with_defaults() -> Arc<Self> {
+        Self::new(ManagerOptions::default())
+    }
+
+    pub fn bus(&self) -> &Arc<EventBus> {
+        &self.bus
+    }
+
+    pub fn monitor(&self) -> &Arc<ServableStateMonitor> {
+        &self.monitor
+    }
+
+    pub fn reclaimer(&self) -> &Reclaimer {
+        &self.reclaimer
+    }
+
+    pub fn ram_used_bytes(&self) -> u64 {
+        self.ram_used.load(Ordering::SeqCst)
+    }
+
+    fn publish(&self, id: &ServableId, state: State) {
+        self.bus.publish(StateEvent { id: id.clone(), state });
+    }
+
+    // ------------------------------------------------------------- loads
+
+    /// Start managing `id` and asynchronously load it on the load pool.
+    ///
+    /// Admission control happens here (synchronously): if the loader's
+    /// RAM estimate does not fit the remaining capacity the load is
+    /// rejected and the version goes straight to `Error`.
+    pub fn manage_and_load(self: &Arc<Self>, id: ServableId, loader: Arc<dyn Loader>) -> Result<()> {
+        let est = loader.estimate()?.ram_bytes;
+        if let Some(cap) = self.options.ram_capacity_bytes {
+            // Reserve with a CAS loop so concurrent admissions can't
+            // oversubscribe.
+            loop {
+                let used = self.ram_used.load(Ordering::SeqCst);
+                if used + est > cap {
+                    self.publish(&id, State::Error("over RAM capacity".into()));
+                    bail!(
+                        "{id}: estimate {est}B over capacity ({used}/{cap}B used)"
+                    );
+                }
+                if self
+                    .ram_used
+                    .compare_exchange(used, used + est, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+                {
+                    break;
+                }
+            }
+        } else {
+            self.ram_used.fetch_add(est, Ordering::SeqCst);
+        }
+
+        let harness = Arc::new(LoaderHarness::new(
+            id.clone(),
+            loader,
+            self.options.harness.clone(),
+        ));
+        {
+            let mut hs = self.harnesses.lock().unwrap();
+            if hs.contains_key(&id) {
+                self.ram_used.fetch_sub(est, Ordering::SeqCst);
+                bail!("{id}: already managed");
+            }
+            hs.insert(id.clone(), Arc::clone(&harness));
+        }
+        self.publish(&id, State::New);
+
+        let this = Arc::clone(self);
+        harness.start_loading()?;
+        self.publish(&id, State::Loading);
+        self.load_pool.execute(move || this.run_load(harness, est));
+        Ok(())
+    }
+
+    fn run_load(self: &Arc<Self>, harness: Arc<LoaderHarness>, est: u64) {
+        let id = harness.id().clone();
+        match harness.load() {
+            Ok(servable) => {
+                self.serving.rcu(|m| {
+                    let mut m = m.clone();
+                    m.entry(id.name.clone())
+                        .or_default()
+                        .insert(id.version, servable.clone());
+                    m
+                });
+                self.publish(&id, State::Ready);
+                crate::log_info!("{id} ready ({est}B reserved)");
+            }
+            Err(e) => {
+                self.ram_used.fetch_sub(est, Ordering::SeqCst);
+                self.publish(&id, State::Error(e.to_string()));
+                crate::log_error!("{id} failed to load: {e}");
+            }
+        }
+    }
+
+    /// Synchronous convenience: load and wait until settled.
+    pub fn load_and_wait(
+        self: &Arc<Self>,
+        id: ServableId,
+        loader: Arc<dyn Loader>,
+        timeout: Duration,
+    ) -> Result<()> {
+        self.manage_and_load(id.clone(), loader)?;
+        match self.monitor.wait_until_settled(&id, timeout) {
+            Some(State::Ready) => Ok(()),
+            Some(State::Error(e)) => bail!("{id}: {e}"),
+            other => bail!("{id}: did not settle ({other:?})"),
+        }
+    }
+
+    /// §2.1.2 start-up path: load a batch using *all* available threads
+    /// (a temporary wide pool), blocking until every load settles.
+    pub fn parallel_initial_load(
+        self: &Arc<Self>,
+        items: Vec<(ServableId, Arc<dyn Loader>)>,
+        threads: usize,
+    ) -> Vec<(ServableId, Result<()>)> {
+        let pool = ThreadPool::new(&format!("{}-init", self.options.name), threads.max(1));
+        let wg = WaitGroup::new();
+        let results = Arc::new(Mutex::new(Vec::new()));
+        for (id, loader) in items {
+            // Admission + harness bookkeeping stays on this thread;
+            // the load itself fans out over the temporary pool.
+            let est = match loader.estimate() {
+                Ok(e) => e.ram_bytes,
+                Err(e) => {
+                    results.lock().unwrap().push((id, Err(e)));
+                    continue;
+                }
+            };
+            let harness = Arc::new(LoaderHarness::new(
+                id.clone(),
+                loader,
+                self.options.harness.clone(),
+            ));
+            {
+                let mut hs = self.harnesses.lock().unwrap();
+                if hs.contains_key(&id) {
+                    results
+                        .lock()
+                        .unwrap()
+                        .push((id.clone(), Err(anyhow!("already managed"))));
+                    continue;
+                }
+                hs.insert(id.clone(), Arc::clone(&harness));
+            }
+            self.ram_used.fetch_add(est, Ordering::SeqCst);
+            if harness.start_loading().is_err() {
+                continue;
+            }
+            self.publish(&id, State::Loading);
+            let this = Arc::clone(self);
+            let res = Arc::clone(&results);
+            let token = wg.token();
+            pool.execute(move || {
+                this.run_load(Arc::clone(&harness), est);
+                let outcome = match harness.state() {
+                    State::Ready => Ok(()),
+                    State::Error(e) => Err(anyhow!("{e}")),
+                    s => Err(anyhow!("unexpected state {s:?}")),
+                };
+                res.lock().unwrap().push((harness.id().clone(), outcome));
+                drop(token);
+            });
+        }
+        wg.wait();
+        Arc::try_unwrap(results).ok().unwrap().into_inner().unwrap()
+    }
+
+    // ----------------------------------------------------------- unloads
+
+    /// Asynchronously unload `id` on the load pool.
+    pub fn unload(self: &Arc<Self>, id: ServableId) -> Result<()> {
+        let harness = self
+            .harnesses
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow!("{id}: not managed"))?;
+        harness.start_unloading()?;
+        self.publish(&id, State::Unloading);
+
+        // Remove from the serving map immediately: no new handles.
+        let mut removed: Option<ServableBox> = None;
+        self.serving.rcu(|m| {
+            let mut m = m.clone();
+            if let Some(versions) = m.get_mut(&id.name) {
+                removed = versions.remove(&id.version);
+                if versions.is_empty() {
+                    m.remove(&id.name);
+                }
+            }
+            m
+        });
+
+        let this = Arc::clone(self);
+        self.load_pool.execute(move || {
+            let id = harness.id().clone();
+            if let Some(servable) = removed {
+                harness.loader().unload(&servable);
+                let est = harness
+                    .loader()
+                    .estimate()
+                    .map(|e| e.ram_bytes)
+                    .unwrap_or(0);
+                this.ram_used.fetch_sub(est, Ordering::SeqCst);
+                // Final drop (possibly the big free) on the reclaim
+                // thread, followed by malloc_trim.
+                this.reclaimer.defer_and_trim(servable);
+            }
+            let _ = harness.done_unloading();
+            this.publish(&id, State::Disabled);
+            this.harnesses.lock().unwrap().remove(&id);
+            crate::log_info!("{id} unloaded");
+        });
+        Ok(())
+    }
+
+    /// Synchronous convenience: unload and wait for `Disabled`.
+    pub fn unload_and_wait(self: &Arc<Self>, id: ServableId, timeout: Duration) -> Result<()> {
+        self.unload(id.clone())?;
+        let deadline = std::time::Instant::now() + timeout;
+        while std::time::Instant::now() < deadline {
+            if self.monitor.state_of(&id) == Some(State::Disabled) {
+                return Ok(());
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        bail!("{id}: unload did not complete in {timeout:?}")
+    }
+
+    // ----------------------------------------------------------- lookups
+
+    /// Resolve a typed handle. THE inference hot path: one RCU read, one
+    /// map lookup, one Arc clone pair.
+    pub fn handle<T: Send + Sync + 'static>(
+        &self,
+        name: &str,
+        version: VersionRequest,
+    ) -> Result<ServableHandle<T>> {
+        let guard = self.serving.read();
+        let versions = guard
+            .get(name)
+            .ok_or_else(|| anyhow!("servable '{name}' not found"))?;
+        let (v, servable) = match version {
+            VersionRequest::Latest => {
+                let (v, s) = versions
+                    .iter()
+                    .next_back()
+                    .ok_or_else(|| anyhow!("servable '{name}' has no ready versions"))?;
+                (*v, s)
+            }
+            VersionRequest::Specific(v) => (
+                v,
+                versions
+                    .get(&v)
+                    .ok_or_else(|| anyhow!("servable '{name}' version {v} not ready"))?,
+            ),
+        };
+        let id = ServableId::new(name, v);
+        ServableHandle::new(id.clone(), Arc::clone(servable), self.reclaimer.clone())
+            .map_err(|_| anyhow!("{id}: servable has unexpected type"))
+    }
+
+    /// Ready version numbers for `name` (ascending).
+    pub fn ready_versions(&self, name: &str) -> Vec<u64> {
+        self.serving
+            .read()
+            .get(name)
+            .map(|m| m.keys().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// All ready servable ids.
+    pub fn all_ready(&self) -> Vec<ServableId> {
+        let guard = self.serving.read();
+        let mut out: Vec<ServableId> = guard
+            .iter()
+            .flat_map(|(n, vs)| vs.keys().map(move |v| ServableId::new(n.clone(), *v)))
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// Names with at least one ready version.
+    pub fn ready_names(&self) -> Vec<String> {
+        let guard = self.serving.read();
+        let mut names: Vec<String> = guard.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Wait for the load pool to drain (tests/benches).
+    pub fn quiesce(&self) {
+        self.load_pool.wait_idle();
+        self.reclaimer.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::loader::{FnLoader, ResourceEstimate};
+
+    fn mgr() -> Arc<BasicManager> {
+        BasicManager::with_defaults()
+    }
+
+    fn load_const(m: &Arc<BasicManager>, name: &str, version: u64, value: u32) {
+        m.load_and_wait(
+            ServableId::new(name, version),
+            Arc::new(FnLoader::constant(value)),
+            Duration::from_secs(5),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_then_handle() {
+        let m = mgr();
+        load_const(&m, "m", 1, 41);
+        let h = m.handle::<u32>("m", VersionRequest::Latest).unwrap();
+        assert_eq!(*h, 41);
+        assert_eq!(h.id(), &ServableId::new("m", 1));
+    }
+
+    #[test]
+    fn latest_prefers_highest_version() {
+        let m = mgr();
+        load_const(&m, "m", 1, 1);
+        load_const(&m, "m", 3, 3);
+        load_const(&m, "m", 2, 2);
+        let h = m.handle::<u32>("m", VersionRequest::Latest).unwrap();
+        assert_eq!(*h, 3);
+        let h = m.handle::<u32>("m", VersionRequest::Specific(1)).unwrap();
+        assert_eq!(*h, 1);
+        assert_eq!(m.ready_versions("m"), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn missing_servable_errors() {
+        let m = mgr();
+        assert!(m.handle::<u32>("nope", VersionRequest::Latest).is_err());
+        load_const(&m, "m", 1, 0);
+        assert!(m.handle::<u32>("m", VersionRequest::Specific(9)).is_err());
+    }
+
+    #[test]
+    fn wrong_type_errors() {
+        let m = mgr();
+        load_const(&m, "m", 1, 7);
+        let err = m.handle::<String>("m", VersionRequest::Latest).unwrap_err();
+        assert!(err.to_string().contains("unexpected type"));
+    }
+
+    #[test]
+    fn unload_removes_from_serving() {
+        let m = mgr();
+        load_const(&m, "m", 1, 1);
+        load_const(&m, "m", 2, 2);
+        m.unload_and_wait(ServableId::new("m", 1), Duration::from_secs(5)).unwrap();
+        assert_eq!(m.ready_versions("m"), vec![2]);
+        assert!(m.handle::<u32>("m", VersionRequest::Specific(1)).is_err());
+        // version 2 unaffected
+        assert_eq!(*m.handle::<u32>("m", VersionRequest::Latest).unwrap(), 2);
+    }
+
+    #[test]
+    fn handle_keeps_unloaded_servable_alive() {
+        let m = mgr();
+        load_const(&m, "m", 1, 99);
+        let h = m.handle::<u32>("m", VersionRequest::Latest).unwrap();
+        m.unload_and_wait(ServableId::new("m", 1), Duration::from_secs(5)).unwrap();
+        // The handle still works even though the version is unloaded.
+        assert_eq!(*h, 99);
+    }
+
+    #[test]
+    fn failed_load_reports_error_state() {
+        let m = mgr();
+        let id = ServableId::new("bad", 1);
+        let err = m.load_and_wait(
+            id.clone(),
+            Arc::new(FnLoader::failing("corrupt artifact")),
+            Duration::from_secs(5),
+        );
+        assert!(err.is_err());
+        assert!(matches!(m.monitor().state_of(&id), Some(State::Error(_))));
+        assert!(m.ready_versions("bad").is_empty());
+    }
+
+    #[test]
+    fn ram_admission_control() {
+        let m = BasicManager::new(ManagerOptions {
+            ram_capacity_bytes: Some(1000),
+            ..Default::default()
+        });
+        let big = |bytes: u64, v: u64| {
+            (
+                ServableId::new("m", v),
+                Arc::new(FnLoader::new(ResourceEstimate::ram(bytes), "blob", || {
+                    Ok(Arc::new(0u8) as ServableBox)
+                })) as Arc<dyn Loader>,
+            )
+        };
+        let (id1, l1) = big(600, 1);
+        m.load_and_wait(id1, l1, Duration::from_secs(5)).unwrap();
+        assert_eq!(m.ram_used_bytes(), 600);
+        // Second one doesn't fit.
+        let (id2, l2) = big(600, 2);
+        assert!(m.manage_and_load(id2.clone(), l2).is_err());
+        assert!(matches!(m.monitor().state_of(&id2), Some(State::Error(_))));
+        // Unload frees budget.
+        m.unload_and_wait(ServableId::new("m", 1), Duration::from_secs(5)).unwrap();
+        assert_eq!(m.ram_used_bytes(), 0);
+        let (id3, l3) = big(900, 3);
+        m.load_and_wait(id3, l3, Duration::from_secs(5)).unwrap();
+    }
+
+    #[test]
+    fn duplicate_manage_rejected() {
+        let m = mgr();
+        load_const(&m, "m", 1, 1);
+        let err = m.manage_and_load(
+            ServableId::new("m", 1),
+            Arc::new(FnLoader::constant(2u32)),
+        );
+        assert!(err.unwrap_err().to_string().contains("already managed"));
+    }
+
+    #[test]
+    fn parallel_initial_load_loads_everything() {
+        let m = mgr();
+        let items: Vec<(ServableId, Arc<dyn Loader>)> = (0..16)
+            .map(|i| {
+                (
+                    ServableId::new(format!("m{i}"), 1),
+                    Arc::new(FnLoader::constant(i as u32)) as Arc<dyn Loader>,
+                )
+            })
+            .collect();
+        let results = m.parallel_initial_load(items, 8);
+        assert_eq!(results.len(), 16);
+        assert!(results.iter().all(|(_, r)| r.is_ok()));
+        assert_eq!(m.ready_names().len(), 16);
+    }
+
+    #[test]
+    fn all_ready_sorted() {
+        let m = mgr();
+        load_const(&m, "b", 2, 0);
+        load_const(&m, "a", 1, 0);
+        let ids = m.all_ready();
+        assert_eq!(ids, vec![ServableId::new("a", 1), ServableId::new("b", 2)]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Per-version state machine: `New → Loading → Ready → Unloading →
+//! Disabled`, with error states and bounded load retries.
+//!
+//! Mirrors TF-Serving's `LoaderHarness`: the manager's bookkeeping for
+//! one (servable, version) as it moves through its life.
+
+use crate::base::loader::Loader;
+use crate::base::servable::{ServableBox, ServableId};
+use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex};
+
+/// Lifecycle states of one servable version.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum State {
+    /// Known but not requested to load yet.
+    New,
+    /// Load in progress on the load pool.
+    Loading,
+    /// Serving traffic.
+    Ready,
+    /// Unload in progress.
+    Unloading,
+    /// Fully unloaded; terminal.
+    Disabled,
+    /// Load failed (after retries); terminal.
+    Error(String),
+}
+
+impl State {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, State::Disabled | State::Error(_))
+    }
+
+    /// Short label for events/metrics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            State::New => "new",
+            State::Loading => "loading",
+            State::Ready => "ready",
+            State::Unloading => "unloading",
+            State::Disabled => "disabled",
+            State::Error(_) => "error",
+        }
+    }
+}
+
+/// Options controlling harness behaviour.
+#[derive(Debug, Clone)]
+pub struct HarnessOptions {
+    /// Times a failed load is retried before entering `Error`.
+    pub max_load_retries: u32,
+}
+
+impl Default for HarnessOptions {
+    fn default() -> Self {
+        HarnessOptions { max_load_retries: 1 }
+    }
+}
+
+/// Bookkeeping for one (servable, version).
+pub struct LoaderHarness {
+    id: ServableId,
+    loader: Arc<dyn Loader>,
+    state: Mutex<State>,
+    options: HarnessOptions,
+}
+
+impl LoaderHarness {
+    pub fn new(id: ServableId, loader: Arc<dyn Loader>, options: HarnessOptions) -> Self {
+        LoaderHarness { id, loader, state: Mutex::new(State::New), options }
+    }
+
+    pub fn id(&self) -> &ServableId {
+        &self.id
+    }
+
+    pub fn loader(&self) -> &Arc<dyn Loader> {
+        &self.loader
+    }
+
+    pub fn state(&self) -> State {
+        self.state.lock().unwrap().clone()
+    }
+
+    fn transition(&self, from: &[State], to: State) -> Result<()> {
+        let mut s = self.state.lock().unwrap();
+        if !from.contains(&s) {
+            bail!("{}: illegal transition {s:?} -> {to:?}", self.id);
+        }
+        *s = to;
+        Ok(())
+    }
+
+    /// Mark load started. `New → Loading`.
+    pub fn start_loading(&self) -> Result<()> {
+        self.transition(&[State::New], State::Loading)
+    }
+
+    /// Execute the load with retries. `Loading → Ready | Error`.
+    /// Returns the servable on success.
+    pub fn load(&self) -> Result<ServableBox> {
+        {
+            let s = self.state.lock().unwrap();
+            if *s != State::Loading {
+                bail!("{}: load() in state {s:?}", self.id);
+            }
+        }
+        let mut last_err = None;
+        for attempt in 0..=self.options.max_load_retries {
+            match self.loader.load() {
+                Ok(servable) => {
+                    self.transition(&[State::Loading], State::Ready)?;
+                    if attempt > 0 {
+                        crate::log_info!("{} loaded after {attempt} retries", self.id);
+                    }
+                    return Ok(servable);
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "{} load attempt {attempt} failed: {e}",
+                        self.id
+                    );
+                    last_err = Some(e);
+                }
+            }
+        }
+        let msg = last_err.unwrap().to_string();
+        let _ = self.transition(&[State::Loading], State::Error(msg.clone()));
+        bail!("{}: load failed: {msg}", self.id);
+    }
+
+    /// Mark unload started. `Ready → Unloading`.
+    pub fn start_unloading(&self) -> Result<()> {
+        self.transition(&[State::Ready], State::Unloading)
+    }
+
+    /// Mark unload complete. `Unloading → Disabled`.
+    pub fn done_unloading(&self) -> Result<()> {
+        self.transition(&[State::Unloading], State::Disabled)
+    }
+
+    /// Cancel before any load started. `New → Disabled`.
+    pub fn cancel(&self) -> Result<()> {
+        self.transition(&[State::New], State::Disabled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::loader::FnLoader;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn harness(loader: FnLoader) -> LoaderHarness {
+        LoaderHarness::new(
+            ServableId::new("m", 1),
+            Arc::new(loader),
+            HarnessOptions::default(),
+        )
+    }
+
+    #[test]
+    fn happy_path() {
+        let h = harness(FnLoader::constant(5u8));
+        assert_eq!(h.state(), State::New);
+        h.start_loading().unwrap();
+        assert_eq!(h.state(), State::Loading);
+        let s = h.load().unwrap();
+        assert_eq!(*s.downcast::<u8>().unwrap(), 5);
+        assert_eq!(h.state(), State::Ready);
+        h.start_unloading().unwrap();
+        h.done_unloading().unwrap();
+        assert_eq!(h.state(), State::Disabled);
+        assert!(h.state().is_terminal());
+    }
+
+    #[test]
+    fn load_failure_goes_to_error() {
+        let h = harness(FnLoader::failing("disk gone"));
+        h.start_loading().unwrap();
+        assert!(h.load().is_err());
+        match h.state() {
+            State::Error(msg) => assert!(msg.contains("disk gone")),
+            s => panic!("expected error, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn load_retries_then_succeeds() {
+        let attempts = Arc::new(AtomicU32::new(0));
+        let a = Arc::clone(&attempts);
+        let loader = FnLoader::new(
+            crate::base::loader::ResourceEstimate::default(),
+            "flaky",
+            move || {
+                if a.fetch_add(1, Ordering::SeqCst) == 0 {
+                    anyhow::bail!("transient");
+                }
+                Ok(Arc::new(1u8) as ServableBox)
+            },
+        );
+        let h = LoaderHarness::new(
+            ServableId::new("m", 1),
+            Arc::new(loader),
+            HarnessOptions { max_load_retries: 2 },
+        );
+        h.start_loading().unwrap();
+        assert!(h.load().is_ok());
+        assert_eq!(attempts.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let h = harness(FnLoader::constant(0u8));
+        assert!(h.start_unloading().is_err()); // New -> Unloading
+        assert!(h.done_unloading().is_err());
+        h.start_loading().unwrap();
+        assert!(h.start_loading().is_err()); // Loading -> Loading
+        assert!(h.cancel().is_err()); // cancel only from New
+    }
+
+    #[test]
+    fn cancel_from_new() {
+        let h = harness(FnLoader::constant(0u8));
+        h.cancel().unwrap();
+        assert_eq!(h.state(), State::Disabled);
+    }
+
+    #[test]
+    fn state_labels() {
+        assert_eq!(State::Ready.label(), "ready");
+        assert_eq!(State::Error("x".into()).label(), "error");
+    }
+}

@@ -1,0 +1,449 @@
+//! [`AspiredVersionsManager`] — the paper's flagship Manager (§2.1.2).
+//!
+//! It terminates the aspired-versions chain: Sources (via adapters)
+//! call [`AspiredVersionsCallback::set_aspired_versions`] with
+//! `Arc<dyn Loader>` payloads; a reconciliation thread diffs aspired
+//! state against serving state and executes one [`policy`] action per
+//! servable per tick through the underlying
+//! [`BasicManager`](super::basic_manager::BasicManager) (RCU serving
+//! map, isolated load pool, deferred reclamation).
+
+use super::basic_manager::{BasicManager, ManagerOptions, VersionRequest};
+use super::harness::State;
+use super::monitor::ServableStateMonitor;
+use super::policy::{Action, VersionPolicy};
+use crate::base::aspired::{AspiredVersionsCallback, ServableData};
+use crate::base::loader::Loader;
+use crate::base::servable::{ServableHandle, ServableId};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Aspired state for one servable name.
+struct AspiredEntry {
+    /// version → loader. The full desired set (idempotent API).
+    versions: HashMap<u64, Arc<dyn Loader>>,
+}
+
+/// Options for [`AspiredVersionsManager`].
+#[derive(Clone)]
+pub struct AvmOptions {
+    pub manager: ManagerOptions,
+    /// Period of the background reconcile thread; `None` = manual
+    /// reconciliation only (deterministic tests).
+    pub reconcile_interval: Option<Duration>,
+}
+
+impl Default for AvmOptions {
+    fn default() -> Self {
+        AvmOptions {
+            manager: ManagerOptions::default(),
+            reconcile_interval: Some(Duration::from_millis(20)),
+        }
+    }
+}
+
+pub struct AspiredVersionsManager {
+    basic: Arc<BasicManager>,
+    policy: Arc<dyn VersionPolicy>,
+    aspired: Mutex<HashMap<String, AspiredEntry>>,
+    /// Versions currently mid-action (loading or unloading), so a tick
+    /// doesn't double-issue while the BasicManager works asynchronously.
+    in_flight: Mutex<HashMap<ServableId, Action>>,
+    stop: AtomicBool,
+    ticker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl AspiredVersionsManager {
+    pub fn new(policy: Arc<dyn VersionPolicy>, options: AvmOptions) -> Arc<Self> {
+        let avm = Arc::new(AspiredVersionsManager {
+            basic: BasicManager::new(options.manager.clone()),
+            policy,
+            aspired: Mutex::new(HashMap::new()),
+            in_flight: Mutex::new(HashMap::new()),
+            stop: AtomicBool::new(false),
+            ticker: Mutex::new(None),
+        });
+        if let Some(interval) = options.reconcile_interval {
+            let weak = Arc::downgrade(&avm);
+            let handle = std::thread::Builder::new()
+                .name(format!("{}-reconcile", options.manager.name))
+                .spawn(move || loop {
+                    std::thread::sleep(interval);
+                    match weak.upgrade() {
+                        Some(avm) => {
+                            if avm.stop.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            avm.reconcile();
+                        }
+                        None => return,
+                    }
+                })
+                .expect("spawn reconcile thread");
+            *avm.ticker.lock().unwrap() = Some(handle);
+        }
+        avm
+    }
+
+    /// Underlying executor (for handles, monitor, metrics).
+    pub fn basic(&self) -> &Arc<BasicManager> {
+        &self.basic
+    }
+
+    pub fn monitor(&self) -> &Arc<ServableStateMonitor> {
+        self.basic.monitor()
+    }
+
+    /// One reconciliation pass: for each servable, compare aspired vs
+    /// serving and issue at most one policy action.
+    pub fn reconcile(self: &Arc<Self>) {
+        // Drop finished in-flight actions.
+        {
+            let monitor = self.basic.monitor();
+            let mut inflight = self.in_flight.lock().unwrap();
+            inflight.retain(|id, action| match monitor.state_of(id) {
+                Some(State::Ready) => !matches!(action, Action::Load(_)),
+                Some(State::Disabled) | Some(State::Error(_)) => false,
+                None => false,
+                _ => true, // still loading/unloading
+            });
+        }
+
+        let aspired_snapshot: Vec<(String, Vec<u64>)> = {
+            let aspired = self.aspired.lock().unwrap();
+            aspired
+                .iter()
+                .map(|(name, e)| {
+                    let mut v: Vec<u64> = e.versions.keys().copied().collect();
+                    v.sort_unstable();
+                    (name.clone(), v)
+                })
+                .collect()
+        };
+
+        for (name, mut aspired_versions) in aspired_snapshot {
+            // Versions that terminally failed to load are dropped from
+            // the aspired set (no retry until the source emits a new
+            // state) so one broken version can't wedge the others.
+            let raw_aspired_len = aspired_versions.len();
+            {
+                let monitor = self.basic.monitor();
+                aspired_versions.retain(|v| {
+                    !matches!(
+                        monitor.state_of(&ServableId::new(name.clone(), *v)),
+                        Some(State::Error(_))
+                    )
+                });
+            }
+            // If EVERY aspired version failed (but the source does want
+            // versions), keep serving whatever we have: unloading now
+            // would take availability to zero chasing a broken update.
+            // An explicitly-empty aspired list still unloads everything.
+            if aspired_versions.is_empty() && raw_aspired_len > 0 {
+                continue;
+            }
+            // The policy sees only *actually ready* versions (minus
+            // in-flight unloads). In-flight loads must NOT count as
+            // serving: availability-preserving would otherwise unload
+            // the old version while the new one is still loading (or
+            // about to fail). Double-issue is prevented in `execute`
+            // by the in_flight check instead.
+            let mut serving = self.basic.ready_versions(&name);
+            {
+                let inflight = self.in_flight.lock().unwrap();
+                for (id, action) in inflight.iter() {
+                    if id.name == name {
+                        if let Action::Unload(v) = action {
+                            serving.retain(|x| x != v);
+                        }
+                    }
+                }
+            }
+            serving.sort_unstable();
+
+            if let Some(action) = self.policy.next_action(&aspired_versions, &serving) {
+                self.execute(&name, action);
+            }
+        }
+    }
+
+    fn execute(self: &Arc<Self>, name: &str, action: Action) {
+        let id = match action {
+            Action::Load(v) | Action::Unload(v) => ServableId::new(name, v),
+        };
+        {
+            let mut inflight = self.in_flight.lock().unwrap();
+            if inflight.contains_key(&id) {
+                return;
+            }
+            inflight.insert(id.clone(), action);
+        }
+        let result: Result<()> = match action {
+            Action::Load(v) => {
+                let loader = self
+                    .aspired
+                    .lock()
+                    .unwrap()
+                    .get(name)
+                    .and_then(|e| e.versions.get(&v).cloned());
+                match loader {
+                    Some(loader) => self.basic.manage_and_load(id.clone(), loader),
+                    None => Ok(()), // aspired state changed mid-tick
+                }
+            }
+            Action::Unload(_) => self.basic.unload(id.clone()),
+        };
+        if result.is_err() {
+            self.in_flight.lock().unwrap().remove(&id);
+        }
+    }
+
+    /// Drive reconciliation until aspired == serving or `max_ticks`.
+    /// For deterministic tests and synchronous bring-up.
+    pub fn reconcile_until_stable(self: &Arc<Self>, max_ticks: usize) -> bool {
+        for _ in 0..max_ticks {
+            self.reconcile();
+            self.basic.quiesce();
+            self.reconcile(); // clear finished in-flight entries
+            if self.is_stable() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        self.is_stable()
+    }
+
+    /// True when every aspired version is ready and nothing extra is.
+    pub fn is_stable(&self) -> bool {
+        let aspired = self.aspired.lock().unwrap();
+        for (name, e) in aspired.iter() {
+            let mut want: Vec<u64> = e.versions.keys().copied().collect();
+            want.sort_unstable();
+            let mut have = self.basic.ready_versions(name);
+            // Versions that failed to load permanently don't count
+            // against stability (they're surfaced via the monitor).
+            let monitor = self.basic.monitor();
+            want.retain(|v| {
+                !matches!(
+                    monitor.state_of(&ServableId::new(name.clone(), *v)),
+                    Some(State::Error(_))
+                )
+            });
+            have.sort_unstable();
+            if want != have {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Typed handle lookup (delegates to the RCU map).
+    pub fn handle<T: Send + Sync + 'static>(
+        &self,
+        name: &str,
+        version: VersionRequest,
+    ) -> Result<ServableHandle<T>> {
+        self.basic.handle(name, version)
+    }
+}
+
+impl Drop for AspiredVersionsManager {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.ticker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl AspiredVersionsCallback<Arc<dyn Loader>> for AspiredVersionsManager {
+    fn set_aspired_versions(
+        &self,
+        servable_name: &str,
+        versions: Vec<ServableData<Arc<dyn Loader>>>,
+    ) {
+        let mut map = HashMap::new();
+        for data in versions {
+            match data.payload {
+                Ok(loader) => {
+                    map.insert(data.id.version, loader);
+                }
+                Err(e) => {
+                    crate::log_warn!("{}: dropped errored aspired version: {e}", data.id);
+                }
+            }
+        }
+        self.aspired
+            .lock()
+            .unwrap()
+            .insert(servable_name.to_string(), AspiredEntry { versions: map });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::loader::FnLoader;
+    use crate::lifecycle::policy::{AvailabilityPreservingPolicy, ResourcePreservingPolicy};
+
+    fn avm(policy: Arc<dyn VersionPolicy>) -> Arc<AspiredVersionsManager> {
+        AspiredVersionsManager::new(
+            policy,
+            AvmOptions { reconcile_interval: None, ..Default::default() },
+        )
+    }
+
+    fn aspire(m: &Arc<AspiredVersionsManager>, name: &str, versions: &[(u64, u32)]) {
+        let data = versions
+            .iter()
+            .map(|&(v, val)| {
+                ServableData::ok(
+                    ServableId::new(name, v),
+                    Arc::new(FnLoader::constant(val)) as Arc<dyn Loader>,
+                )
+            })
+            .collect();
+        m.set_aspired_versions(name, data);
+    }
+
+    #[test]
+    fn loads_aspired_versions() {
+        let m = avm(Arc::new(AvailabilityPreservingPolicy));
+        aspire(&m, "m", &[(1, 10)]);
+        assert!(m.reconcile_until_stable(20));
+        assert_eq!(*m.handle::<u32>("m", VersionRequest::Latest).unwrap(), 10);
+    }
+
+    #[test]
+    fn version_transition_availability_preserving() {
+        let m = avm(Arc::new(AvailabilityPreservingPolicy));
+        aspire(&m, "m", &[(1, 10)]);
+        assert!(m.reconcile_until_stable(20));
+
+        // New version arrives; aspire only v2.
+        aspire(&m, "m", &[(2, 20)]);
+        // After ONE action (load v2), both versions must be ready —
+        // availability-preserving keeps v1 until v2 serves.
+        m.reconcile();
+        m.basic().quiesce();
+        assert_eq!(m.basic().ready_versions("m"), vec![1, 2]);
+        assert!(m.reconcile_until_stable(20));
+        assert_eq!(m.basic().ready_versions("m"), vec![2]);
+        assert_eq!(*m.handle::<u32>("m", VersionRequest::Latest).unwrap(), 20);
+    }
+
+    #[test]
+    fn version_transition_resource_preserving() {
+        let m = avm(Arc::new(ResourcePreservingPolicy));
+        aspire(&m, "m", &[(1, 10)]);
+        assert!(m.reconcile_until_stable(20));
+
+        aspire(&m, "m", &[(2, 20)]);
+        // First action unloads v1: availability lapse, bounded memory.
+        m.reconcile();
+        m.basic().quiesce();
+        assert_eq!(m.basic().ready_versions("m"), Vec::<u64>::new());
+        assert!(m.reconcile_until_stable(20));
+        assert_eq!(m.basic().ready_versions("m"), vec![2]);
+    }
+
+    #[test]
+    fn canary_then_end_canary() {
+        let m = avm(Arc::new(AvailabilityPreservingPolicy));
+        aspire(&m, "m", &[(1, 10)]);
+        assert!(m.reconcile_until_stable(20));
+        // Canary: aspire both.
+        aspire(&m, "m", &[(1, 10), (2, 20)]);
+        assert!(m.reconcile_until_stable(20));
+        assert_eq!(m.basic().ready_versions("m"), vec![1, 2]);
+        // Promote: aspire only v2.
+        aspire(&m, "m", &[(2, 20)]);
+        assert!(m.reconcile_until_stable(20));
+        assert_eq!(m.basic().ready_versions("m"), vec![2]);
+    }
+
+    #[test]
+    fn rollback_to_older_version() {
+        let m = avm(Arc::new(AvailabilityPreservingPolicy));
+        aspire(&m, "m", &[(2, 20)]);
+        assert!(m.reconcile_until_stable(20));
+        // Rollback: aspire v1 only.
+        aspire(&m, "m", &[(1, 10)]);
+        assert!(m.reconcile_until_stable(20));
+        assert_eq!(m.basic().ready_versions("m"), vec![1]);
+        assert_eq!(*m.handle::<u32>("m", VersionRequest::Latest).unwrap(), 10);
+    }
+
+    #[test]
+    fn empty_aspired_unloads_all() {
+        let m = avm(Arc::new(AvailabilityPreservingPolicy));
+        aspire(&m, "m", &[(1, 10), (2, 20)]);
+        assert!(m.reconcile_until_stable(20));
+        m.set_aspired_versions("m", vec![]);
+        assert!(m.reconcile_until_stable(20));
+        assert!(m.basic().ready_versions("m").is_empty());
+    }
+
+    #[test]
+    fn failed_loads_do_not_wedge_reconciliation() {
+        let m = avm(Arc::new(AvailabilityPreservingPolicy));
+        m.set_aspired_versions(
+            "m",
+            vec![
+                ServableData::ok(
+                    ServableId::new("m", 1),
+                    Arc::new(FnLoader::constant(10u32)) as Arc<dyn Loader>,
+                ),
+                ServableData::ok(
+                    ServableId::new("m", 2),
+                    Arc::new(FnLoader::failing("broken")) as Arc<dyn Loader>,
+                ),
+            ],
+        );
+        assert!(m.reconcile_until_stable(30));
+        // v1 serves; v2 is in Error.
+        assert_eq!(m.basic().ready_versions("m"), vec![1]);
+        assert!(matches!(
+            m.monitor().state_of(&ServableId::new("m", 2)),
+            Some(State::Error(_))
+        ));
+    }
+
+    #[test]
+    fn multiple_servables_independent() {
+        let m = avm(Arc::new(AvailabilityPreservingPolicy));
+        aspire(&m, "a", &[(1, 1)]);
+        aspire(&m, "b", &[(5, 5)]);
+        assert!(m.reconcile_until_stable(20));
+        assert_eq!(*m.handle::<u32>("a", VersionRequest::Latest).unwrap(), 1);
+        assert_eq!(*m.handle::<u32>("b", VersionRequest::Latest).unwrap(), 5);
+        // Updating `a` leaves `b` alone.
+        aspire(&m, "a", &[(2, 2)]);
+        assert!(m.reconcile_until_stable(20));
+        assert_eq!(*m.handle::<u32>("a", VersionRequest::Latest).unwrap(), 2);
+        assert_eq!(*m.handle::<u32>("b", VersionRequest::Latest).unwrap(), 5);
+    }
+
+    #[test]
+    fn background_ticker_reconciles() {
+        let m = AspiredVersionsManager::new(
+            Arc::new(AvailabilityPreservingPolicy),
+            AvmOptions {
+                reconcile_interval: Some(Duration::from_millis(5)),
+                ..Default::default()
+            },
+        );
+        aspire(&m, "m", &[(1, 10)]);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while std::time::Instant::now() < deadline {
+            if m.basic().ready_versions("m") == vec![1] {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("background reconcile never loaded m:1");
+    }
+}

@@ -1,0 +1,18 @@
+//! Model lifecycle management (paper §2.1, Figure 1).
+//!
+//! The chain: [`source::FileSystemSource`] (or [`source::StaticSource`] /
+//! an RPC-driven source in TFS²) discovers versions →
+//! [`source_router::SourceRouter`] splits streams by platform →
+//! [`source_adapter`]s turn storage paths into `Loader`s →
+//! [`manager::AspiredVersionsManager`] sequences loads/unloads under a
+//! [`policy`] and serves reference-counted handles out of an RCU map
+//! ([`basic_manager::BasicManager`]).
+
+pub mod basic_manager;
+pub mod harness;
+pub mod manager;
+pub mod monitor;
+pub mod policy;
+pub mod source;
+pub mod source_adapter;
+pub mod source_router;

@@ -1,0 +1,195 @@
+//! Servable state events and the [`ServableStateMonitor`].
+//!
+//! The manager publishes every harness state change on an event bus;
+//! the monitor aggregates them so callers can ask "is m:2 ready?" or
+//! block until it is (used at server startup and by the TFS²
+//! Synchronizer's status reports).
+
+use super::harness::State;
+use crate::base::servable::ServableId;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A state-change event.
+#[derive(Debug, Clone)]
+pub struct StateEvent {
+    pub id: ServableId,
+    pub state: State,
+}
+
+/// Subscriber callback.
+pub type EventSubscriber = Arc<dyn Fn(&StateEvent) + Send + Sync>;
+
+/// Fan-out bus for state events.
+#[derive(Default)]
+pub struct EventBus {
+    subscribers: Mutex<Vec<EventSubscriber>>,
+}
+
+impl EventBus {
+    pub fn new() -> Arc<Self> {
+        Arc::new(EventBus::default())
+    }
+
+    pub fn subscribe(&self, sub: EventSubscriber) {
+        self.subscribers.lock().unwrap().push(sub);
+    }
+
+    pub fn publish(&self, event: StateEvent) {
+        let subs = self.subscribers.lock().unwrap().clone();
+        for s in subs {
+            s(&event);
+        }
+    }
+}
+
+/// Live view of every servable version's state, with blocking waits.
+pub struct ServableStateMonitor {
+    states: Mutex<HashMap<ServableId, State>>,
+    changed: Condvar,
+}
+
+impl ServableStateMonitor {
+    /// Create and attach to a bus.
+    pub fn attach(bus: &EventBus) -> Arc<Self> {
+        let monitor = Arc::new(ServableStateMonitor {
+            states: Mutex::new(HashMap::new()),
+            changed: Condvar::new(),
+        });
+        let m = Arc::clone(&monitor);
+        bus.subscribe(Arc::new(move |ev| m.observe(ev)));
+        monitor
+    }
+
+    fn observe(&self, ev: &StateEvent) {
+        let mut s = self.states.lock().unwrap();
+        s.insert(ev.id.clone(), ev.state.clone());
+        self.changed.notify_all();
+    }
+
+    pub fn state_of(&self, id: &ServableId) -> Option<State> {
+        self.states.lock().unwrap().get(id).cloned()
+    }
+
+    /// Version numbers of `name` currently in `Ready`.
+    pub fn ready_versions(&self, name: &str) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .states
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(id, st)| id.name == name && **st == State::Ready)
+            .map(|(id, _)| id.version)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Block until `id` reaches `Ready` or a terminal state, or timeout.
+    /// Returns the final observed state (None on timeout with no info).
+    pub fn wait_until_settled(&self, id: &ServableId, timeout: Duration) -> Option<State> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.states.lock().unwrap();
+        loop {
+            match s.get(id) {
+                Some(st) if *st == State::Ready || st.is_terminal() => {
+                    return Some(st.clone())
+                }
+                _ => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return s.get(id).cloned();
+            }
+            let (ns, res) = self.changed.wait_timeout(s, deadline - now).unwrap();
+            s = ns;
+            if res.timed_out() {
+                return s.get(id).cloned();
+            }
+        }
+    }
+
+    /// Snapshot of all known states (diagnostics endpoint).
+    pub fn snapshot(&self) -> Vec<(ServableId, State)> {
+        let mut v: Vec<_> = self
+            .states
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn ev(name: &str, version: u64, state: State) -> StateEvent {
+        StateEvent { id: ServableId::new(name, version), state }
+    }
+
+    #[test]
+    fn monitor_tracks_states() {
+        let bus = EventBus::new();
+        let mon = ServableStateMonitor::attach(&bus);
+        bus.publish(ev("m", 1, State::Loading));
+        bus.publish(ev("m", 1, State::Ready));
+        bus.publish(ev("m", 2, State::Loading));
+        assert_eq!(mon.state_of(&ServableId::new("m", 1)), Some(State::Ready));
+        assert_eq!(mon.ready_versions("m"), vec![1]);
+        bus.publish(ev("m", 2, State::Ready));
+        assert_eq!(mon.ready_versions("m"), vec![1, 2]);
+        bus.publish(ev("m", 1, State::Unloading));
+        assert_eq!(mon.ready_versions("m"), vec![2]);
+    }
+
+    #[test]
+    fn wait_until_settled_blocks_until_ready() {
+        let bus = EventBus::new();
+        let mon = ServableStateMonitor::attach(&bus);
+        let bus2 = Arc::clone(&bus);
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            bus2.publish(ev("m", 1, State::Ready));
+        });
+        let st = mon.wait_until_settled(&ServableId::new("m", 1), Duration::from_secs(5));
+        t.join().unwrap();
+        assert_eq!(st, Some(State::Ready));
+    }
+
+    #[test]
+    fn wait_times_out() {
+        let bus = EventBus::new();
+        let mon = ServableStateMonitor::attach(&bus);
+        bus.publish(ev("m", 1, State::Loading));
+        let st =
+            mon.wait_until_settled(&ServableId::new("m", 1), Duration::from_millis(30));
+        assert_eq!(st, Some(State::Loading));
+    }
+
+    #[test]
+    fn error_is_settled() {
+        let bus = EventBus::new();
+        let mon = ServableStateMonitor::attach(&bus);
+        bus.publish(ev("m", 3, State::Error("boom".into())));
+        let st = mon.wait_until_settled(&ServableId::new("m", 3), Duration::from_secs(1));
+        assert!(matches!(st, Some(State::Error(_))));
+    }
+
+    #[test]
+    fn multiple_subscribers() {
+        let bus = EventBus::new();
+        let count = Arc::new(Mutex::new(0));
+        for _ in 0..3 {
+            let c = Arc::clone(&count);
+            bus.subscribe(Arc::new(move |_| *c.lock().unwrap() += 1));
+        }
+        bus.publish(ev("m", 1, State::New));
+        assert_eq!(*count.lock().unwrap(), 3);
+    }
+}

@@ -1,0 +1,210 @@
+//! Version transition policies (§2.1.2).
+//!
+//! Given the aspired set and the currently-serving set for one servable,
+//! a policy picks the *next single action* (load X or unload Y). The
+//! [`super::manager::AspiredVersionsManager`] applies actions one at a
+//! time so policies fully control interleaving:
+//!
+//! * [`AvailabilityPreservingPolicy`] — load new versions *before*
+//!   unloading old ones: availability never lapses, at the cost of peak
+//!   RAM holding both versions ("(1)" in the paper).
+//! * [`ResourcePreservingPolicy`] — unload *before* loading: at most one
+//!   version resident, with an availability gap ("(2)"; for models so
+//!   large two versions cannot fit, with replicas or retrying batch
+//!   clients absorbing the lapse).
+
+/// The next lifecycle action for one servable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    Load(u64),
+    Unload(u64),
+}
+
+/// Picks at most one action per reconciliation step.
+pub trait VersionPolicy: Send + Sync {
+    /// `aspired`: versions the source wants resident.
+    /// `serving`: versions currently Ready (or becoming ready).
+    fn next_action(&self, aspired: &[u64], serving: &[u64]) -> Option<Action>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Load-before-unload (paper policy 1).
+pub struct AvailabilityPreservingPolicy;
+
+impl VersionPolicy for AvailabilityPreservingPolicy {
+    fn next_action(&self, aspired: &[u64], serving: &[u64]) -> Option<Action> {
+        // 1. Load any aspired version not yet serving (highest first, so
+        //    the newest becomes available soonest).
+        if let Some(&v) = aspired.iter().filter(|v| !serving.contains(v)).max() {
+            return Some(Action::Load(v));
+        }
+        // 2. Only once every aspired version serves, unload non-aspired
+        //    (lowest first).
+        if let Some(&v) = serving.iter().filter(|v| !aspired.contains(v)).min() {
+            return Some(Action::Unload(v));
+        }
+        None
+    }
+
+    fn name(&self) -> &'static str {
+        "availability_preserving"
+    }
+}
+
+/// Unload-before-load (paper policy 2).
+pub struct ResourcePreservingPolicy;
+
+impl VersionPolicy for ResourcePreservingPolicy {
+    fn next_action(&self, aspired: &[u64], serving: &[u64]) -> Option<Action> {
+        // 1. Unload anything not aspired (free resources first).
+        if let Some(&v) = serving.iter().filter(|v| !aspired.contains(v)).min() {
+            return Some(Action::Unload(v));
+        }
+        // 2. Then load missing aspired versions (highest first).
+        if let Some(&v) = aspired.iter().filter(|v| !serving.contains(v)).max() {
+            return Some(Action::Load(v));
+        }
+        None
+    }
+
+    fn name(&self) -> &'static str {
+        "resource_preserving"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    /// Drive a policy to fixpoint from `serving` toward `aspired`,
+    /// recording the serving set after every action.
+    fn run_to_fixpoint(
+        policy: &dyn VersionPolicy,
+        aspired: &[u64],
+        serving: &[u64],
+    ) -> Vec<Vec<u64>> {
+        let mut serving: Vec<u64> = serving.to_vec();
+        let mut trace = vec![serving.clone()];
+        for _ in 0..100 {
+            match policy.next_action(aspired, &serving) {
+                Some(Action::Load(v)) => serving.push(v),
+                Some(Action::Unload(v)) => serving.retain(|&x| x != v),
+                None => return trace,
+            }
+            serving.sort_unstable();
+            trace.push(serving.clone());
+        }
+        panic!("policy did not converge: aspired={aspired:?}");
+    }
+
+    #[test]
+    fn availability_loads_before_unloading() {
+        let p = AvailabilityPreservingPolicy;
+        // Version transition 1 -> 2.
+        assert_eq!(p.next_action(&[2], &[1]), Some(Action::Load(2)));
+        assert_eq!(p.next_action(&[2], &[1, 2]), Some(Action::Unload(1)));
+        assert_eq!(p.next_action(&[2], &[2]), None);
+    }
+
+    #[test]
+    fn resource_unloads_before_loading() {
+        let p = ResourcePreservingPolicy;
+        assert_eq!(p.next_action(&[2], &[1]), Some(Action::Unload(1)));
+        assert_eq!(p.next_action(&[2], &[]), Some(Action::Load(2)));
+        assert_eq!(p.next_action(&[2], &[2]), None);
+    }
+
+    #[test]
+    fn canary_aspires_two_versions() {
+        // §2.1.1: aspire both newest and second-newest.
+        let p = AvailabilityPreservingPolicy;
+        assert_eq!(p.next_action(&[1, 2], &[1]), Some(Action::Load(2)));
+        assert_eq!(p.next_action(&[1, 2], &[1, 2]), None);
+        // End canary: drop v1.
+        assert_eq!(p.next_action(&[2], &[1, 2]), Some(Action::Unload(1)));
+    }
+
+    #[test]
+    fn rollback_returns_to_older_version() {
+        // §2.1.1: aspire specific older version 1 while 2 is serving.
+        let p = AvailabilityPreservingPolicy;
+        assert_eq!(p.next_action(&[1], &[2]), Some(Action::Load(1)));
+        assert_eq!(p.next_action(&[1], &[1, 2]), Some(Action::Unload(2)));
+    }
+
+    #[test]
+    fn availability_never_empty_during_transition() {
+        // Property: starting non-empty with non-empty aspired set, the
+        // serving set never becomes empty mid-transition.
+        forall::<(Vec<u64>, Vec<u64>), _>("availability preserved", |(a, s)| {
+            let aspired: Vec<u64> = {
+                let mut a: Vec<u64> = a.iter().map(|x| x % 8).collect();
+                a.sort_unstable();
+                a.dedup();
+                a
+            };
+            let serving: Vec<u64> = {
+                let mut s: Vec<u64> = s.iter().map(|x| x % 8).collect();
+                s.sort_unstable();
+                s.dedup();
+                s
+            };
+            if aspired.is_empty() || serving.is_empty() {
+                return true; // vacuous: nothing to keep available
+            }
+            let trace = run_to_fixpoint(&AvailabilityPreservingPolicy, &aspired, &serving);
+            trace.iter().all(|step| !step.is_empty())
+        });
+    }
+
+    #[test]
+    fn resource_never_exceeds_peak_plus_zero() {
+        // Property: resource policy never holds a non-aspired version
+        // and a newly-loaded one simultaneously: serving set size never
+        // exceeds max(|serving ∩ aspired| at start, |aspired|).
+        forall::<(Vec<u64>, Vec<u64>), _>("resource bounded", |(a, s)| {
+            let aspired: Vec<u64> = {
+                let mut a: Vec<u64> = a.iter().map(|x| x % 8).collect();
+                a.sort_unstable();
+                a.dedup();
+                a
+            };
+            let serving: Vec<u64> = {
+                let mut s: Vec<u64> = s.iter().map(|x| x % 8).collect();
+                s.sort_unstable();
+                s.dedup();
+                s
+            };
+            let bound = aspired.len().max(serving.len());
+            let trace = run_to_fixpoint(&ResourcePreservingPolicy, &aspired, &serving);
+            trace.iter().all(|step| step.len() <= bound)
+        });
+    }
+
+    #[test]
+    fn both_policies_converge_to_aspired() {
+        forall::<(Vec<u64>, Vec<u64>, bool), _>("converges", |(a, s, avail)| {
+            let aspired: Vec<u64> = {
+                let mut a: Vec<u64> = a.iter().map(|x| x % 6).collect();
+                a.sort_unstable();
+                a.dedup();
+                a
+            };
+            let serving: Vec<u64> = {
+                let mut s: Vec<u64> = s.iter().map(|x| x % 6).collect();
+                s.sort_unstable();
+                s.dedup();
+                s
+            };
+            let policy: &dyn VersionPolicy = if *avail {
+                &AvailabilityPreservingPolicy
+            } else {
+                &ResourcePreservingPolicy
+            };
+            let trace = run_to_fixpoint(policy, &aspired, &serving);
+            trace.last().unwrap() == &aspired
+        });
+    }
+}

@@ -1,0 +1,356 @@
+//! Sources: discover servable versions in external storage (§2.1).
+//!
+//! * [`FileSystemSource`] — the canonical Source: polls a base directory
+//!   per servable for numeric version subdirectories and aspires
+//!   according to a per-servable [`ServingPolicy`] (latest-N / specific
+//!   versions / all), which is how §2.1.1 canary ("aspire the two
+//!   newest") and rollback ("aspire a specific older version") are
+//!   expressed.
+//! * [`StaticSource`] — emits a fixed set once (tests, embedded use).
+//! * The TFS² RPC-driven source lives in [`crate::tfs2::synchronizer`].
+
+use crate::base::aspired::{AspiredVersionsCallback, ServableData, Source};
+use crate::base::servable::ServableId;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Which versions in a directory a servable should aspire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServingPolicy {
+    /// Serve the N largest version numbers. `Latest(1)` is the default
+    /// casual deployment; `Latest(2)` is the §2.1.1 canary setup.
+    Latest(usize),
+    /// Serve exactly these versions (rollback pins an older one).
+    Specific(Vec<u64>),
+    /// Serve every version present.
+    All,
+}
+
+impl ServingPolicy {
+    /// Apply to the set of versions found on storage (ascending).
+    pub fn select(&self, available: &[u64]) -> Vec<u64> {
+        match self {
+            ServingPolicy::Latest(n) => {
+                let mut v: Vec<u64> =
+                    available.iter().rev().take(*n).copied().collect();
+                v.sort_unstable();
+                v
+            }
+            ServingPolicy::Specific(wanted) => {
+                let set: BTreeSet<u64> = available.iter().copied().collect();
+                let mut v: Vec<u64> =
+                    wanted.iter().filter(|w| set.contains(w)).copied().collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            }
+            ServingPolicy::All => available.to_vec(),
+        }
+    }
+}
+
+/// One servable watched by the file-system source.
+#[derive(Debug, Clone)]
+pub struct WatchedServable {
+    pub name: String,
+    pub base_path: PathBuf,
+    pub policy: ServingPolicy,
+}
+
+/// Scan `base_path` for numeric version subdirectories (ascending).
+pub fn scan_versions(base_path: &Path) -> Vec<u64> {
+    let mut versions: Vec<u64> = match std::fs::read_dir(base_path) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().is_dir())
+            .filter_map(|e| e.file_name().to_string_lossy().parse::<u64>().ok())
+            .collect(),
+        Err(_) => Vec::new(), // not-yet-created base path = no versions
+    };
+    versions.sort_unstable();
+    versions
+}
+
+/// Polls the file system and emits aspired versions (payload = version
+/// directory path).
+pub struct FileSystemSource {
+    watched: Mutex<Vec<WatchedServable>>,
+    callback: Mutex<Option<Arc<dyn AspiredVersionsCallback<PathBuf>>>>,
+    poll_interval: Option<Duration>,
+    stop: Arc<AtomicBool>,
+    poller: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl FileSystemSource {
+    /// `poll_interval = None`: manual polling only ([`Self::poll_once`]).
+    pub fn new(watched: Vec<WatchedServable>, poll_interval: Option<Duration>) -> Arc<Self> {
+        Arc::new(FileSystemSource {
+            watched: Mutex::new(watched),
+            callback: Mutex::new(None),
+            poll_interval,
+            stop: Arc::new(AtomicBool::new(false)),
+            poller: Mutex::new(None),
+        })
+    }
+
+    /// Replace the policy for one servable (canary/rollback controls).
+    pub fn set_policy(&self, name: &str, policy: ServingPolicy) {
+        let mut w = self.watched.lock().unwrap();
+        if let Some(s) = w.iter_mut().find(|s| s.name == name) {
+            s.policy = policy;
+        }
+    }
+
+    /// Add a servable to watch.
+    pub fn watch(&self, servable: WatchedServable) {
+        self.watched.lock().unwrap().push(servable);
+    }
+
+    /// Is `name` already watched?
+    pub fn is_watching(&self, name: &str) -> bool {
+        self.watched.lock().unwrap().iter().any(|s| s.name == name)
+    }
+
+    /// One synchronous poll: scan + emit full aspired state (idempotent
+    /// — §2.1: the source "emits … without needing to know which ones
+    /// currently are in memory").
+    pub fn poll_once(&self) {
+        let cb = match self.callback.lock().unwrap().clone() {
+            Some(cb) => cb,
+            None => return,
+        };
+        let watched = self.watched.lock().unwrap().clone();
+        for s in watched {
+            let available = scan_versions(&s.base_path);
+            let aspired = s.policy.select(&available);
+            let data: Vec<ServableData<PathBuf>> = aspired
+                .into_iter()
+                .map(|v| {
+                    ServableData::ok(
+                        ServableId::new(s.name.clone(), v),
+                        s.base_path.join(v.to_string()),
+                    )
+                })
+                .collect();
+            cb.set_aspired_versions(&s.name, data);
+        }
+    }
+
+    fn start_polling(self: &Arc<Self>) {
+        let interval = match self.poll_interval {
+            Some(i) => i,
+            None => return,
+        };
+        let weak = Arc::downgrade(self);
+        let stop = Arc::clone(&self.stop);
+        let handle = std::thread::Builder::new()
+            .name("fs-source-poll".to_string())
+            .spawn(move || loop {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                match weak.upgrade() {
+                    Some(src) => src.poll_once(),
+                    None => return,
+                }
+                std::thread::sleep(interval);
+            })
+            .expect("spawn source poller");
+        *self.poller.lock().unwrap() = Some(handle);
+    }
+}
+
+impl Source<PathBuf> for Arc<FileSystemSource> {
+    fn set_aspired_versions_callback(
+        &mut self,
+        cb: Arc<dyn AspiredVersionsCallback<PathBuf>>,
+    ) {
+        *self.callback.lock().unwrap() = Some(cb);
+        self.poll_once(); // emit initial state immediately
+        self.start_polling();
+    }
+}
+
+impl Drop for FileSystemSource {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.poller.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Emits a fixed aspired set on connect (and on demand).
+pub struct StaticSource<T: Clone + Send + 'static> {
+    items: Vec<(String, Vec<(u64, T)>)>,
+    callback: Option<Arc<dyn AspiredVersionsCallback<T>>>,
+}
+
+impl<T: Clone + Send + 'static> StaticSource<T> {
+    pub fn new(items: Vec<(String, Vec<(u64, T)>)>) -> Self {
+        StaticSource { items, callback: None }
+    }
+
+    pub fn emit(&self) {
+        if let Some(cb) = &self.callback {
+            for (name, versions) in &self.items {
+                let data = versions
+                    .iter()
+                    .map(|(v, payload)| {
+                        ServableData::ok(ServableId::new(name.clone(), *v), payload.clone())
+                    })
+                    .collect();
+                cb.set_aspired_versions(name, data);
+            }
+        }
+    }
+}
+
+impl<T: Clone + Send + Sync + 'static> Source<T> for StaticSource<T> {
+    fn set_aspired_versions_callback(&mut self, cb: Arc<dyn AspiredVersionsCallback<T>>) {
+        self.callback = Some(cb);
+        self.emit();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::aspired::RecordingCallback;
+
+    fn make_version_dirs(root: &Path, name: &str, versions: &[u64]) -> PathBuf {
+        let base = root.join(name);
+        for v in versions {
+            std::fs::create_dir_all(base.join(v.to_string())).unwrap();
+        }
+        base
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "tensorserve-test-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn policy_selection() {
+        let avail = vec![1, 2, 5, 9];
+        assert_eq!(ServingPolicy::Latest(1).select(&avail), vec![9]);
+        assert_eq!(ServingPolicy::Latest(2).select(&avail), vec![5, 9]);
+        assert_eq!(ServingPolicy::Latest(10).select(&avail), vec![1, 2, 5, 9]);
+        assert_eq!(
+            ServingPolicy::Specific(vec![2, 7, 5]).select(&avail),
+            vec![2, 5]
+        );
+        assert_eq!(ServingPolicy::All.select(&avail), avail);
+        assert_eq!(ServingPolicy::Latest(1).select(&[]), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn scan_versions_numeric_dirs_only() {
+        let root = tmpdir("scan");
+        let base = make_version_dirs(&root, "m", &[3, 1, 12]);
+        std::fs::create_dir_all(base.join("not-a-version")).unwrap();
+        std::fs::write(base.join("7"), b"file not dir").unwrap();
+        assert_eq!(scan_versions(&base), vec![1, 3, 12]);
+        assert_eq!(scan_versions(&root.join("missing")), Vec::<u64>::new());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn fs_source_emits_on_connect_and_poll() {
+        let root = tmpdir("emit");
+        let base = make_version_dirs(&root, "m", &[1, 2]);
+        let mut src = FileSystemSource::new(
+            vec![WatchedServable {
+                name: "m".into(),
+                base_path: base.clone(),
+                policy: ServingPolicy::Latest(1),
+            }],
+            None,
+        );
+        let cb = RecordingCallback::<PathBuf>::new();
+        src.set_aspired_versions_callback(cb.clone());
+        assert_eq!(cb.latest_for("m"), Some(vec![2]));
+
+        // New version appears on storage.
+        std::fs::create_dir_all(base.join("3")).unwrap();
+        src.poll_once();
+        assert_eq!(cb.latest_for("m"), Some(vec![3]));
+        // Payload is the version directory.
+        let calls = cb.calls.lock().unwrap();
+        let last = calls.last().unwrap();
+        assert_eq!(last.1[0].payload.as_ref().unwrap(), &base.join("3"));
+        drop(calls);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn fs_source_canary_policy_switch() {
+        let root = tmpdir("canary");
+        let base = make_version_dirs(&root, "m", &[1, 2]);
+        let mut src = FileSystemSource::new(
+            vec![WatchedServable {
+                name: "m".into(),
+                base_path: base,
+                policy: ServingPolicy::Latest(1),
+            }],
+            None,
+        );
+        let cb = RecordingCallback::<PathBuf>::new();
+        src.set_aspired_versions_callback(cb.clone());
+        assert_eq!(cb.latest_for("m"), Some(vec![2]));
+        // Canary: both newest versions.
+        src.set_policy("m", ServingPolicy::Latest(2));
+        src.poll_once();
+        assert_eq!(cb.latest_for("m"), Some(vec![1, 2]));
+        // Rollback: pin version 1.
+        src.set_policy("m", ServingPolicy::Specific(vec![1]));
+        src.poll_once();
+        assert_eq!(cb.latest_for("m"), Some(vec![1]));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn fs_source_background_polling() {
+        let root = tmpdir("poll");
+        let base = make_version_dirs(&root, "m", &[1]);
+        let mut src = FileSystemSource::new(
+            vec![WatchedServable {
+                name: "m".into(),
+                base_path: base.clone(),
+                policy: ServingPolicy::Latest(1),
+            }],
+            Some(Duration::from_millis(5)),
+        );
+        let cb = RecordingCallback::<PathBuf>::new();
+        src.set_aspired_versions_callback(cb.clone());
+        std::fs::create_dir_all(base.join("2")).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while std::time::Instant::now() < deadline {
+            if cb.latest_for("m") == Some(vec![2]) {
+                let _ = std::fs::remove_dir_all(&root);
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("poller never discovered version 2");
+    }
+
+    #[test]
+    fn static_source_emits_fixed_set() {
+        let mut src =
+            StaticSource::new(vec![("m".into(), vec![(1, "a"), (2, "b")])]);
+        let cb = RecordingCallback::<&str>::new();
+        src.set_aspired_versions_callback(cb.clone());
+        assert_eq!(cb.latest_for("m"), Some(vec![1, 2]));
+    }
+}

@@ -1,0 +1,128 @@
+//! Source Adapters: transform version payloads along the chain (§2.1).
+//!
+//! An adapter is an [`AspiredVersionsCallback<From>`] that converts each
+//! payload to `To` and forwards to a downstream callback. Adapters
+//! compose (the paper: "chains of multiple Source Adapters"); the
+//! platform-specific adapters that turn storage paths into `Loader`s
+//! live with their runtimes ([`crate::runtime::hlo_servable`] for the
+//! HLO platform, [`crate::inference::table`] for "BananaFlow" tables).
+
+use crate::base::aspired::{AspiredVersionsCallback, ServableData};
+use std::sync::{Arc, Mutex};
+
+/// Adapter built from a conversion function.
+pub struct FnSourceAdapter<From, To> {
+    convert: Box<dyn Fn(&ServableData<From>) -> anyhow::Result<To> + Send + Sync>,
+    downstream: Mutex<Option<Arc<dyn AspiredVersionsCallback<To>>>>,
+}
+
+impl<From: Send + 'static, To: Send + 'static> FnSourceAdapter<From, To> {
+    pub fn new<F>(convert: F) -> Arc<Self>
+    where
+        F: Fn(&ServableData<From>) -> anyhow::Result<To> + Send + Sync + 'static,
+    {
+        Arc::new(FnSourceAdapter {
+            convert: Box::new(convert),
+            downstream: Mutex::new(None),
+        })
+    }
+
+    /// Connect the downstream callback (manager, router or next adapter).
+    pub fn connect(&self, downstream: Arc<dyn AspiredVersionsCallback<To>>) {
+        *self.downstream.lock().unwrap() = Some(downstream);
+    }
+}
+
+impl<From: Send + 'static, To: Send + 'static> AspiredVersionsCallback<From>
+    for FnSourceAdapter<From, To>
+{
+    fn set_aspired_versions(&self, servable_name: &str, versions: Vec<ServableData<From>>) {
+        let downstream = match self.downstream.lock().unwrap().clone() {
+            Some(d) => d,
+            None => return,
+        };
+        let converted = versions
+            .into_iter()
+            .map(|data| match &data.payload {
+                // Conversion errors become errored versions so the
+                // manager can surface them (§2.1 error flow).
+                Ok(_) => match (self.convert)(&data) {
+                    Ok(to) => ServableData::ok(data.id, to),
+                    Err(e) => ServableData::err(data.id, e),
+                },
+                Err(_) => ServableData::err(
+                    data.id.clone(),
+                    anyhow::anyhow!("upstream error for {}", data.id),
+                ),
+            })
+            .collect();
+        downstream.set_aspired_versions(servable_name, converted);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::aspired::RecordingCallback;
+    use crate::base::servable::ServableId;
+
+    #[test]
+    fn converts_payloads() {
+        let adapter = FnSourceAdapter::<u32, String>::new(|d| {
+            Ok(format!("v{}", d.payload.as_ref().unwrap()))
+        });
+        let sink = RecordingCallback::<String>::new();
+        adapter.connect(sink.clone());
+        adapter.set_aspired_versions(
+            "m",
+            vec![ServableData::ok(ServableId::new("m", 1), 42u32)],
+        );
+        let calls = sink.calls.lock().unwrap();
+        assert_eq!(calls[0].1[0].payload.as_ref().unwrap(), "v42");
+    }
+
+    #[test]
+    fn conversion_error_becomes_errored_version() {
+        let adapter =
+            FnSourceAdapter::<u32, String>::new(|_| anyhow::bail!("cannot convert"));
+        let sink = RecordingCallback::<String>::new();
+        adapter.connect(sink.clone());
+        adapter.set_aspired_versions(
+            "m",
+            vec![ServableData::ok(ServableId::new("m", 1), 1u32)],
+        );
+        let calls = sink.calls.lock().unwrap();
+        assert!(calls[0].1[0].payload.is_err());
+    }
+
+    #[test]
+    fn adapters_chain() {
+        // path-ish -> length -> string, two adapters deep.
+        let a2 = FnSourceAdapter::<usize, String>::new(|d| {
+            Ok(format!("len={}", d.payload.as_ref().unwrap()))
+        });
+        let a1 = FnSourceAdapter::<String, usize>::new(|d| {
+            Ok(d.payload.as_ref().unwrap().len())
+        });
+        let sink = RecordingCallback::<String>::new();
+        a2.connect(sink.clone());
+        a1.connect(a2);
+        a1.set_aspired_versions(
+            "m",
+            vec![ServableData::ok(ServableId::new("m", 3), "abcd".to_string())],
+        );
+        let calls = sink.calls.lock().unwrap();
+        assert_eq!(calls[0].1[0].payload.as_ref().unwrap(), "len=4");
+        assert_eq!(calls[0].1[0].id, ServableId::new("m", 3));
+    }
+
+    #[test]
+    fn unconnected_adapter_drops_silently() {
+        let adapter = FnSourceAdapter::<u32, u32>::new(|d| Ok(*d.payload.as_ref().unwrap()));
+        // No downstream: must not panic.
+        adapter.set_aspired_versions(
+            "m",
+            vec![ServableData::ok(ServableId::new("m", 1), 1u32)],
+        );
+    }
+}

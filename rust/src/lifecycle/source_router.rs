@@ -1,0 +1,103 @@
+//! Source Routers: split one aspired-version stream into several (§2.1,
+//! Figure 1) — e.g. TensorFlow models to the TensorFlow adapter,
+//! BananaFlow models to the BananaFlow adapter, in the same server.
+
+use crate::base::aspired::{AspiredVersionsCallback, ServableData};
+use std::sync::{Arc, Mutex};
+
+/// Routes each servable's stream to one of N output ports by name.
+pub struct SourceRouter<T> {
+    route: Box<dyn Fn(&str) -> usize + Send + Sync>,
+    ports: Vec<Mutex<Option<Arc<dyn AspiredVersionsCallback<T>>>>>,
+}
+
+impl<T: Send + 'static> SourceRouter<T> {
+    /// `route(name)` returns the output port index; out-of-range values
+    /// drop the stream (with a warning), matching TF-Serving's
+    /// "default port" escape hatch when clamped by the caller.
+    pub fn new<F>(num_ports: usize, route: F) -> Arc<Self>
+    where
+        F: Fn(&str) -> usize + Send + Sync + 'static,
+    {
+        Arc::new(SourceRouter {
+            route: Box::new(route),
+            ports: (0..num_ports).map(|_| Mutex::new(None)).collect(),
+        })
+    }
+
+    pub fn connect_port(&self, port: usize, downstream: Arc<dyn AspiredVersionsCallback<T>>) {
+        *self.ports[port].lock().unwrap() = Some(downstream);
+    }
+
+    pub fn num_ports(&self) -> usize {
+        self.ports.len()
+    }
+}
+
+impl<T: Send + 'static> AspiredVersionsCallback<T> for SourceRouter<T> {
+    fn set_aspired_versions(&self, servable_name: &str, versions: Vec<ServableData<T>>) {
+        let port = (self.route)(servable_name);
+        match self.ports.get(port) {
+            Some(slot) => {
+                if let Some(downstream) = slot.lock().unwrap().clone() {
+                    downstream.set_aspired_versions(servable_name, versions);
+                } else {
+                    crate::log_warn!("router port {port} unconnected; dropping '{servable_name}'");
+                }
+            }
+            None => {
+                crate::log_warn!(
+                    "router: no port {port} for '{servable_name}' (have {})",
+                    self.ports.len()
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::aspired::RecordingCallback;
+    use crate::base::servable::ServableId;
+
+    fn data(name: &str, v: u64) -> Vec<ServableData<u32>> {
+        vec![ServableData::ok(ServableId::new(name, v), 0u32)]
+    }
+
+    #[test]
+    fn routes_by_name() {
+        // Port 0: TensorFlow-ish, port 1: BananaFlow-ish.
+        let router =
+            SourceRouter::<u32>::new(2, |name| usize::from(name.starts_with("banana")));
+        let tf = RecordingCallback::<u32>::new();
+        let banana = RecordingCallback::<u32>::new();
+        router.connect_port(0, tf.clone());
+        router.connect_port(1, banana.clone());
+
+        router.set_aspired_versions("mnist", data("mnist", 1));
+        router.set_aspired_versions("banana_ranker", data("banana_ranker", 2));
+
+        assert_eq!(tf.latest_for("mnist"), Some(vec![1]));
+        assert_eq!(tf.latest_for("banana_ranker"), None);
+        assert_eq!(banana.latest_for("banana_ranker"), Some(vec![2]));
+    }
+
+    #[test]
+    fn out_of_range_port_drops() {
+        let router = SourceRouter::<u32>::new(1, |_| 7);
+        let sink = RecordingCallback::<u32>::new();
+        router.connect_port(0, sink.clone());
+        router.set_aspired_versions("m", data("m", 1));
+        assert_eq!(sink.call_count(), 0);
+    }
+
+    #[test]
+    fn unconnected_port_drops() {
+        let router = SourceRouter::<u32>::new(2, |_| 1);
+        let sink = RecordingCallback::<u32>::new();
+        router.connect_port(0, sink.clone());
+        router.set_aspired_versions("m", data("m", 1));
+        assert_eq!(sink.call_count(), 0);
+    }
+}

@@ -1,0 +1,82 @@
+//! `tensorserve_server` — the canonical model server binary (paper §3).
+//!
+//! ```text
+//! tensorserve_server --config server.json
+//! tensorserve_server --models mlp_classifier,toy_table:table --port 8500
+//! ```
+//!
+//! With `--config`, the JSON file is the full `ModelServerConfig`
+//! (see `server::config`). Without it, `--models` gives a quick
+//! comma-separated list of `name[:platform]` entries served from
+//! `--artifacts` with latest-version policy — the "casual deployment"
+//! default of §2.1.1.
+
+use std::path::PathBuf;
+use std::time::Duration;
+use tensorserve::lifecycle::source::ServingPolicy;
+use tensorserve::server::builder::ModelServer;
+use tensorserve::server::config::{ModelConfig, ServerConfig};
+use tensorserve::util::argparse::Flags;
+
+fn main() -> anyhow::Result<()> {
+    let mut flags = Flags::new(
+        "tensorserve_server",
+        "TensorFlow-Serving reproduction: canonical model server",
+    );
+    flags.flag("config", "", "path to a JSON ModelServerConfig");
+    flags.flag("port", "8500", "listen port (overrides config)");
+    flags.flag(
+        "models",
+        "mlp_classifier,mlp_regressor,toy_table:table",
+        "comma-separated name[:platform] list (used when --config is empty)",
+    );
+    flags.flag("artifacts", "", "artifacts root (default: repo artifacts/)");
+    flags.flag("poll_interval_ms", "500", "file-system source poll interval");
+    flags.bool_flag("resource_preserving", "use the resource-preserving version policy");
+    let parsed = flags.parse_or_exit();
+
+    let mut config = if parsed.get("config").is_empty() {
+        let artifacts_root = if parsed.get("artifacts").is_empty() {
+            tensorserve::runtime::artifacts::default_artifacts_root()
+        } else {
+            PathBuf::from(parsed.get("artifacts"))
+        };
+        let models = parsed
+            .get("models")
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|entry| {
+                let (name, platform) = match entry.split_once(':') {
+                    Some((n, p)) => (n.to_string(), p.to_string()),
+                    None => (entry.to_string(), "hlo".to_string()),
+                };
+                ModelConfig {
+                    base_path: artifacts_root.join(&name),
+                    name,
+                    platform,
+                    policy: ServingPolicy::Latest(1),
+                }
+            })
+            .collect();
+        ServerConfig {
+            artifacts_root,
+            models,
+            poll_interval: Some(Duration::from_millis(parsed.get_u64("poll_interval_ms"))),
+            availability_preserving: !parsed.get_bool("resource_preserving"),
+            ..Default::default()
+        }
+    } else {
+        ServerConfig::load(&PathBuf::from(parsed.get("config")))?
+    };
+    config.port = parsed.get_u64("port") as u16;
+
+    let server = ModelServer::start(config)?;
+    eprintln!("tensorserve_server listening on {}", server.addr());
+    let ready = server.wait_until_ready(Duration::from_secs(300))?;
+    eprintln!("models ready: {ready:?}");
+
+    // Serve until killed.
+    loop {
+        std::thread::park();
+    }
+}

@@ -1,0 +1,154 @@
+//! Synchronous RPC client + a small connection pool.
+
+use super::frame::{read_frame, write_frame};
+use super::proto::{Request, Response};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One connection; one request in flight at a time.
+pub struct RpcClient {
+    stream: TcpStream,
+    addr: String,
+}
+
+impl RpcClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(RpcClient { stream, addr: addr.to_string() })
+    }
+
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<Self> {
+        let sock_addr: std::net::SocketAddr =
+            addr.parse().with_context(|| format!("parse addr {addr}"))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, timeout)
+            .with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(RpcClient { stream, addr: addr.to_string() })
+    }
+
+    /// Issue one request and wait for the response.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        write_frame(&mut self.stream, &req.encode())?;
+        let payload = read_frame(&mut self.stream)?
+            .ok_or_else(|| anyhow!("{}: connection closed mid-call", self.addr))?;
+        Response::decode(&payload)
+    }
+
+    /// `call` + error-response unwrapping.
+    pub fn call_ok(&mut self, req: &Request) -> Result<Response> {
+        self.call(req)?.into_result()
+    }
+
+    /// Set a read deadline for subsequent calls (hedging uses this).
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+}
+
+/// Pool of reusable connections per address.
+#[derive(Default)]
+pub struct ClientPool {
+    idle: Mutex<HashMap<String, Vec<RpcClient>>>,
+}
+
+impl ClientPool {
+    pub fn new() -> Self {
+        ClientPool::default()
+    }
+
+    /// Check out a connection (reusing an idle one if available).
+    pub fn get(&self, addr: &str) -> Result<RpcClient> {
+        if let Some(c) = self
+            .idle
+            .lock()
+            .unwrap()
+            .get_mut(addr)
+            .and_then(|v| v.pop())
+        {
+            return Ok(c);
+        }
+        RpcClient::connect(addr)
+    }
+
+    /// Return a healthy connection for reuse.
+    pub fn put(&self, client: RpcClient) {
+        let mut idle = self.idle.lock().unwrap();
+        let v = idle.entry(client.addr.clone()).or_default();
+        if v.len() < 16 {
+            v.push(client);
+        }
+    }
+
+    /// One-shot convenience: get → call → put (skip put on error).
+    pub fn call(&self, addr: &str, req: &Request) -> Result<Response> {
+        let mut client = self.get(addr)?;
+        match client.call(req) {
+            Ok(resp) => {
+                self.put(client);
+                Ok(resp)
+            }
+            Err(e) => Err(e), // drop broken connection
+        }
+    }
+
+    pub fn idle_count(&self, addr: &str) -> usize {
+        self.idle.lock().unwrap().get(addr).map_or(0, |v| v.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::server::RpcServer;
+    use std::sync::Arc;
+
+    fn server() -> Arc<RpcServer> {
+        RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(|req| match req {
+                Request::Ping => Response::Pong,
+                _ => Response::Error { message: "no".into() },
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn call_ok_unwraps_errors() {
+        let s = server();
+        let mut c = RpcClient::connect(&s.addr().to_string()).unwrap();
+        assert!(c.call_ok(&Request::Ping).is_ok());
+        assert!(c.call_ok(&Request::Status).is_err());
+    }
+
+    #[test]
+    fn pool_reuses_connections() {
+        let s = server();
+        let addr = s.addr().to_string();
+        let pool = ClientPool::new();
+        assert_eq!(pool.idle_count(&addr), 0);
+        pool.call(&addr, &Request::Ping).unwrap();
+        assert_eq!(pool.idle_count(&addr), 1);
+        pool.call(&addr, &Request::Ping).unwrap();
+        assert_eq!(pool.idle_count(&addr), 1); // reused, not grown
+    }
+
+    #[test]
+    fn connect_to_dead_addr_fails() {
+        assert!(RpcClient::connect("127.0.0.1:1").is_err());
+        assert!(RpcClient::connect_timeout(
+            "127.0.0.1:1",
+            Duration::from_millis(100)
+        )
+        .is_err());
+    }
+}

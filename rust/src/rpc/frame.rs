@@ -1,0 +1,94 @@
+//! Length-prefixed framing over a byte stream.
+//!
+//! `[u32 le length][payload]`, with a hard cap to stop a corrupt or
+//! malicious peer from making us allocate gigabytes.
+
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+
+/// Maximum frame payload (64 MiB — far above any batch we serve).
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Write one frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!("frame too large: {} bytes", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. Returns `None` on clean EOF at a frame boundary.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    // Clean EOF only if zero bytes of the header arrive.
+    match r.read(&mut len_buf) {
+        Ok(0) => return Ok(None),
+        Ok(n) if n < 4 => r.read_exact(&mut len_buf[n..])?,
+        Ok(_) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        bail!("incoming frame too large: {len} bytes");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[7u8; 1000]).unwrap();
+        let mut cur = Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), vec![7u8; 1000]);
+        assert!(read_frame(&mut cur).unwrap().is_none()); // clean EOF
+    }
+
+    #[test]
+    fn truncated_frame_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut cur = Cursor::new(buf);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut cur = Cursor::new(buf);
+        assert!(read_frame(&mut cur).is_err());
+        let big = vec![0u8; MAX_FRAME + 1];
+        assert!(write_frame(&mut Vec::new(), &big).is_err());
+    }
+
+    #[test]
+    fn over_tcp_socket() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let got = read_frame(&mut s).unwrap().unwrap();
+            write_frame(&mut s, &got).unwrap(); // echo
+        });
+        let mut c = std::net::TcpStream::connect(addr).unwrap();
+        write_frame(&mut c, b"ping").unwrap();
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), b"ping");
+        t.join().unwrap();
+    }
+}

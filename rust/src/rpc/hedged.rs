@@ -1,0 +1,185 @@
+//! Hedged backup requests (§3.1, after Dean's "tail at scale"):
+//! "The Router uses hedged backup requests to mitigate latency spikes
+//! from transient server issues or inter-request or -model
+//! interference."
+//!
+//! Strategy: send to a primary replica; if no response arrives within
+//! `hedge_delay` (ideally ≈ p95 of healthy latency), send the same
+//! request to a backup replica; first response wins. Costs a bounded
+//! fraction of duplicate work, removes most of the tail. Experiment T6
+//! (`benches/bench_hedging.rs`) reproduces the claim.
+
+use super::client::ClientPool;
+use super::proto::{Request, Response};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+pub struct HedgedClient {
+    pool: Arc<ClientPool>,
+    /// Wait this long before firing the backup request.
+    pub hedge_delay: Duration,
+    hedges_fired: AtomicU64,
+    calls: AtomicU64,
+}
+
+impl HedgedClient {
+    pub fn new(pool: Arc<ClientPool>, hedge_delay: Duration) -> Self {
+        HedgedClient {
+            pool,
+            hedge_delay,
+            hedges_fired: AtomicU64::new(0),
+            calls: AtomicU64::new(0),
+        }
+    }
+
+    /// Call `replicas[0]`, hedging to `replicas[1..]` after the delay.
+    /// First successful response wins; losers are discarded (their
+    /// connections are dropped, not pooled, to avoid response skew).
+    pub fn call(&self, replicas: &[String], req: &Request) -> Result<Response> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let first = replicas
+            .first()
+            .ok_or_else(|| anyhow!("no replicas to call"))?;
+
+        let (tx, rx) = mpsc::channel::<Result<Response>>();
+        self.spawn_attempt(first.clone(), req.clone(), tx.clone());
+
+        // Wait for the primary up to the hedge delay.
+        match rx.recv_timeout(self.hedge_delay) {
+            Ok(Ok(resp)) => return Ok(resp),
+            Ok(Err(primary_err)) => {
+                // Primary failed fast: go straight to a backup if any.
+                match replicas.get(1) {
+                    Some(backup) => {
+                        self.hedges_fired.fetch_add(1, Ordering::Relaxed);
+                        self.spawn_attempt(backup.clone(), req.clone(), tx);
+                        return rx
+                            .recv_timeout(Duration::from_secs(30))
+                            .map_err(|_| anyhow!("backup timed out"))?;
+                    }
+                    None => return Err(primary_err),
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(e) => return Err(anyhow!("hedge channel: {e}")),
+        }
+
+        // Primary is slow: fire the backup, take whichever lands first.
+        if let Some(backup) = replicas.get(1) {
+            self.hedges_fired.fetch_add(1, Ordering::Relaxed);
+            self.spawn_attempt(backup.clone(), req.clone(), tx);
+        }
+        let mut last_err = None;
+        // Up to two outstanding attempts can report.
+        for _ in 0..2 {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Ok(resp)) => return Ok(resp),
+                Ok(Err(e)) => last_err = Some(e),
+                Err(_) => break,
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("all hedged attempts timed out")))
+    }
+
+    fn spawn_attempt(&self, addr: String, req: Request, tx: mpsc::Sender<Result<Response>>) {
+        let pool = Arc::clone(&self.pool);
+        std::thread::Builder::new()
+            .name("hedge-attempt".to_string())
+            .spawn(move || {
+                let result = pool
+                    .get(&addr)
+                    .and_then(|mut c| {
+                        let r = c.call(&req);
+                        if r.is_ok() {
+                            pool.put(c);
+                        }
+                        r
+                    })
+                    .and_then(Response::into_result);
+                let _ = tx.send(result);
+            })
+            .expect("spawn hedge attempt");
+    }
+
+    /// Fraction of calls that fired a backup request.
+    pub fn hedge_rate(&self) -> f64 {
+        let calls = self.calls.load(Ordering::Relaxed);
+        if calls == 0 {
+            0.0
+        } else {
+            self.hedges_fired.load(Ordering::Relaxed) as f64 / calls as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::server::RpcServer;
+    use std::sync::atomic::AtomicBool;
+
+    /// Server whose handler can be made artificially slow.
+    fn server(slow: Arc<AtomicBool>, delay: Duration) -> Arc<RpcServer> {
+        RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(move |req| {
+                if slow.load(Ordering::SeqCst) {
+                    std::thread::sleep(delay);
+                }
+                match req {
+                    Request::Ping => Response::Pong,
+                    _ => Response::Error { message: "no".into() },
+                }
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fast_primary_no_hedge() {
+        let s = server(Arc::new(AtomicBool::new(false)), Duration::ZERO);
+        let h = HedgedClient::new(Arc::new(ClientPool::new()), Duration::from_millis(100));
+        let replicas = vec![s.addr().to_string()];
+        for _ in 0..10 {
+            assert_eq!(h.call(&replicas, &Request::Ping).unwrap(), Response::Pong);
+        }
+        assert_eq!(h.hedge_rate(), 0.0);
+    }
+
+    #[test]
+    fn slow_primary_hedges_to_backup() {
+        let slow = Arc::new(AtomicBool::new(true));
+        let primary = server(Arc::clone(&slow), Duration::from_millis(500));
+        let backup = server(Arc::new(AtomicBool::new(false)), Duration::ZERO);
+        let h = HedgedClient::new(Arc::new(ClientPool::new()), Duration::from_millis(20));
+        let replicas = vec![primary.addr().to_string(), backup.addr().to_string()];
+
+        let t0 = std::time::Instant::now();
+        assert_eq!(h.call(&replicas, &Request::Ping).unwrap(), Response::Pong);
+        // Must return via the backup (~20ms + rtt), far below 500ms.
+        assert!(t0.elapsed() < Duration::from_millis(300), "{:?}", t0.elapsed());
+        assert!(h.hedge_rate() > 0.0);
+    }
+
+    #[test]
+    fn dead_primary_fails_over() {
+        let backup = server(Arc::new(AtomicBool::new(false)), Duration::ZERO);
+        let h = HedgedClient::new(Arc::new(ClientPool::new()), Duration::from_millis(50));
+        let replicas = vec!["127.0.0.1:1".to_string(), backup.addr().to_string()];
+        assert_eq!(h.call(&replicas, &Request::Ping).unwrap(), Response::Pong);
+    }
+
+    #[test]
+    fn no_replicas_errors() {
+        let h = HedgedClient::new(Arc::new(ClientPool::new()), Duration::from_millis(1));
+        assert!(h.call(&[], &Request::Ping).is_err());
+    }
+
+    #[test]
+    fn single_dead_replica_errors() {
+        let h = HedgedClient::new(Arc::new(ClientPool::new()), Duration::from_millis(10));
+        assert!(h.call(&["127.0.0.1:1".to_string()], &Request::Ping).is_err());
+    }
+}

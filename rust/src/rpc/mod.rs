@@ -1,0 +1,13 @@
+//! RPC substrate: framed TCP transport, hand-rolled codecs, threaded
+//! server, pooled client, and hedged backup requests (§3.1).
+//!
+//! The paper's deployments sit behind Google RPC infrastructure, which
+//! §4 explicitly factors out of the serving-overhead claim; this module
+//! is the swappable stand-in. Wire format: 4-byte little-endian length
+//! prefix + binary message ([`proto`]).
+
+pub mod client;
+pub mod frame;
+pub mod hedged;
+pub mod proto;
+pub mod server;

@@ -1,0 +1,559 @@
+//! Wire messages and their binary codecs.
+//!
+//! Inference messages mirror §2.2's three APIs (Predict / Classify /
+//! Regress) plus a BananaFlow table lookup; admin messages carry the
+//! TFS² control plane (SetAspired from the Synchronizer, ModelStatus
+//! back). Codec style matches `inference::example`: u8 tags + u32 le
+//! length prefixes, no self-description.
+
+use crate::base::tensor::{Tensor, TensorI32};
+use crate::inference::example::Example;
+use crate::runtime::pjrt::OutTensor;
+use anyhow::{anyhow, bail, Result};
+
+/// A request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Predict { model: String, version: Option<u64>, input: Tensor },
+    Classify { model: String, version: Option<u64>, examples: Vec<Example> },
+    Regress { model: String, version: Option<u64>, examples: Vec<Example> },
+    Lookup { table: String, key: String },
+    /// Admin: full aspired-version set for one servable (RPC source).
+    SetAspired { model: String, versions: Vec<u64> },
+    /// Admin: which versions of `model` are in which state?
+    ModelStatus { model: String },
+    /// Admin: server metrics/status dump.
+    Status,
+    /// Liveness probe / no-op (used by benches to measure RPC floor).
+    Ping,
+}
+
+/// A response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Predict { model_version: u64, outputs: Vec<OutTensor> },
+    Classify { model_version: u64, classes: Vec<i32>, log_probs: Vec<Vec<f32>> },
+    Regress { model_version: u64, values: Vec<f32> },
+    Lookup { values: Option<Vec<f32>> },
+    Ack,
+    ModelStatus { versions: Vec<(u64, String)> },
+    Status { text: String },
+    Pong,
+    Error { message: String },
+}
+
+// ------------------------------------------------------------ helpers
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_version(out: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        Some(v) => {
+            out.push(1);
+            put_u64(out, v);
+        }
+        None => out.push(0),
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    put_u32(out, t.shape().len() as u32);
+    for &d in t.shape() {
+        put_u32(out, d as u32);
+    }
+    put_f32s(out, t.data());
+}
+
+fn put_examples(out: &mut Vec<u8>, examples: &[Example]) {
+    put_u32(out, examples.len() as u32);
+    for ex in examples {
+        let enc = ex.encode();
+        put_u32(out, enc.len() as u32);
+        out.extend_from_slice(&enc);
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        let v = *self.buf.get(self.pos).ok_or_else(|| anyhow!("truncated u8"))?;
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let end = self.pos + 4;
+        if end > self.buf.len() {
+            bail!("truncated u32");
+        }
+        let v = u32::from_le_bytes(self.buf[self.pos..end].try_into().unwrap());
+        self.pos = end;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let end = self.pos + 8;
+        if end > self.buf.len() {
+            bail!("truncated u64");
+        }
+        let v = u64::from_le_bytes(self.buf[self.pos..end].try_into().unwrap());
+        self.pos = end;
+        Ok(v)
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos + n;
+        if end > self.buf.len() {
+            bail!("truncated bytes({n})");
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > 1 << 20 {
+            bail!("implausible string length {n}");
+        }
+        Ok(std::str::from_utf8(self.bytes(n)?)?.to_string())
+    }
+
+    fn opt_version(&mut self) -> Result<Option<u64>> {
+        Ok(match self.u8()? {
+            0 => None,
+            1 => Some(self.u64()?),
+            t => bail!("bad option tag {t}"),
+        })
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let rank = self.u32()? as usize;
+        if rank > 8 {
+            bail!("implausible rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(self.u32()? as usize);
+        }
+        let data = self.f32s()?;
+        Tensor::new(shape, data)
+    }
+
+    fn examples(&mut self) -> Result<Vec<Example>> {
+        let n = self.u32()? as usize;
+        if n > 1 << 20 {
+            bail!("implausible example count {n}");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let len = self.u32()? as usize;
+            out.push(Example::decode(self.bytes(len)?)?);
+        }
+        Ok(out)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("trailing bytes in message");
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------------- codecs
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Request::Predict { model, version, input } => {
+                out.push(0);
+                put_str(&mut out, model);
+                put_opt_version(&mut out, *version);
+                put_tensor(&mut out, input);
+            }
+            Request::Classify { model, version, examples } => {
+                out.push(1);
+                put_str(&mut out, model);
+                put_opt_version(&mut out, *version);
+                put_examples(&mut out, examples);
+            }
+            Request::Regress { model, version, examples } => {
+                out.push(2);
+                put_str(&mut out, model);
+                put_opt_version(&mut out, *version);
+                put_examples(&mut out, examples);
+            }
+            Request::Lookup { table, key } => {
+                out.push(3);
+                put_str(&mut out, table);
+                put_str(&mut out, key);
+            }
+            Request::SetAspired { model, versions } => {
+                out.push(4);
+                put_str(&mut out, model);
+                put_u32(&mut out, versions.len() as u32);
+                for v in versions {
+                    put_u64(&mut out, *v);
+                }
+            }
+            Request::ModelStatus { model } => {
+                out.push(5);
+                put_str(&mut out, model);
+            }
+            Request::Status => out.push(6),
+            Request::Ping => out.push(7),
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Request> {
+        let mut r = Reader::new(buf);
+        let req = match r.u8()? {
+            0 => Request::Predict {
+                model: r.str()?,
+                version: r.opt_version()?,
+                input: r.tensor()?,
+            },
+            1 => Request::Classify {
+                model: r.str()?,
+                version: r.opt_version()?,
+                examples: r.examples()?,
+            },
+            2 => Request::Regress {
+                model: r.str()?,
+                version: r.opt_version()?,
+                examples: r.examples()?,
+            },
+            3 => Request::Lookup { table: r.str()?, key: r.str()? },
+            4 => {
+                let model = r.str()?;
+                let n = r.u32()? as usize;
+                if n > 1 << 16 {
+                    bail!("implausible version count {n}");
+                }
+                let mut versions = Vec::with_capacity(n);
+                for _ in 0..n {
+                    versions.push(r.u64()?);
+                }
+                Request::SetAspired { model, versions }
+            }
+            5 => Request::ModelStatus { model: r.str()? },
+            6 => Request::Status,
+            7 => Request::Ping,
+            t => bail!("unknown request tag {t}"),
+        };
+        r.done()?;
+        Ok(req)
+    }
+}
+
+fn put_out_tensor(out: &mut Vec<u8>, t: &OutTensor) {
+    match t {
+        OutTensor::F32(t) => {
+            out.push(0);
+            put_tensor(out, t);
+        }
+        OutTensor::I32(t) => {
+            out.push(1);
+            put_u32(out, t.shape.len() as u32);
+            for &d in &t.shape {
+                put_u32(out, d as u32);
+            }
+            put_u32(out, t.data.len() as u32);
+            for x in &t.data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn read_out_tensor(r: &mut Reader<'_>) -> Result<OutTensor> {
+    Ok(match r.u8()? {
+        0 => OutTensor::F32(r.tensor()?),
+        1 => {
+            let rank = r.u32()? as usize;
+            if rank > 8 {
+                bail!("implausible rank {rank}");
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(r.u32()? as usize);
+            }
+            let n = r.u32()? as usize;
+            let raw = r.bytes(n * 4)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            OutTensor::I32(TensorI32::new(shape, data)?)
+        }
+        t => bail!("unknown tensor tag {t}"),
+    })
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Response::Predict { model_version, outputs } => {
+                out.push(0);
+                put_u64(&mut out, *model_version);
+                put_u32(&mut out, outputs.len() as u32);
+                for t in outputs {
+                    put_out_tensor(&mut out, t);
+                }
+            }
+            Response::Classify { model_version, classes, log_probs } => {
+                out.push(1);
+                put_u64(&mut out, *model_version);
+                put_u32(&mut out, classes.len() as u32);
+                for c in classes {
+                    out.extend_from_slice(&c.to_le_bytes());
+                }
+                put_u32(&mut out, log_probs.len() as u32);
+                for row in log_probs {
+                    put_f32s(&mut out, row);
+                }
+            }
+            Response::Regress { model_version, values } => {
+                out.push(2);
+                put_u64(&mut out, *model_version);
+                put_f32s(&mut out, values);
+            }
+            Response::Lookup { values } => {
+                out.push(3);
+                match values {
+                    Some(v) => {
+                        out.push(1);
+                        put_f32s(&mut out, v);
+                    }
+                    None => out.push(0),
+                }
+            }
+            Response::Ack => out.push(4),
+            Response::ModelStatus { versions } => {
+                out.push(5);
+                put_u32(&mut out, versions.len() as u32);
+                for (v, state) in versions {
+                    put_u64(&mut out, *v);
+                    put_str(&mut out, state);
+                }
+            }
+            Response::Status { text } => {
+                out.push(6);
+                put_str(&mut out, text);
+            }
+            Response::Pong => out.push(7),
+            Response::Error { message } => {
+                out.push(255);
+                put_str(&mut out, message);
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Response> {
+        let mut r = Reader::new(buf);
+        let resp = match r.u8()? {
+            0 => {
+                let model_version = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut outputs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    outputs.push(read_out_tensor(&mut r)?);
+                }
+                Response::Predict { model_version, outputs }
+            }
+            1 => {
+                let model_version = r.u64()?;
+                let n = r.u32()? as usize;
+                let raw = r.bytes(n * 4)?;
+                let classes = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let m = r.u32()? as usize;
+                if m > 1 << 20 {
+                    bail!("implausible row count {m}");
+                }
+                let mut log_probs = Vec::with_capacity(m);
+                for _ in 0..m {
+                    log_probs.push(r.f32s()?);
+                }
+                Response::Classify { model_version, classes, log_probs }
+            }
+            2 => Response::Regress { model_version: r.u64()?, values: r.f32s()? },
+            3 => Response::Lookup {
+                values: match r.u8()? {
+                    0 => None,
+                    1 => Some(r.f32s()?),
+                    t => bail!("bad option tag {t}"),
+                },
+            },
+            4 => Response::Ack,
+            5 => {
+                let n = r.u32()? as usize;
+                if n > 1 << 16 {
+                    bail!("implausible version count {n}");
+                }
+                let mut versions = Vec::with_capacity(n);
+                for _ in 0..n {
+                    versions.push((r.u64()?, r.str()?));
+                }
+                Response::ModelStatus { versions }
+            }
+            6 => Response::Status { text: r.str()? },
+            7 => Response::Pong,
+            255 => Response::Error { message: r.str()? },
+            t => bail!("unknown response tag {t}"),
+        };
+        r.done()?;
+        Ok(resp)
+    }
+
+    /// Convert an error response to a Result.
+    pub fn into_result(self) -> Result<Response> {
+        match self {
+            Response::Error { message } => bail!("{message}"),
+            other => Ok(other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::example::Feature;
+
+    fn roundtrip_req(req: Request) {
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+    }
+
+    fn roundtrip_resp(resp: Response) {
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_req(Request::Predict {
+            model: "m".into(),
+            version: Some(3),
+            input: Tensor::matrix(vec![vec![1.0, 2.0]]).unwrap(),
+        });
+        roundtrip_req(Request::Predict {
+            model: "m".into(),
+            version: None,
+            input: Tensor::zeros(vec![2, 3, 4]),
+        });
+        roundtrip_req(Request::Classify {
+            model: "c".into(),
+            version: None,
+            examples: vec![
+                Example::new().with("x", Feature::Floats(vec![1.0])),
+                Example::new().with("y", Feature::Ints(vec![-5])),
+            ],
+        });
+        roundtrip_req(Request::Regress {
+            model: "r".into(),
+            version: Some(1),
+            examples: vec![Example::new()],
+        });
+        roundtrip_req(Request::Lookup { table: "t".into(), key: "k".into() });
+        roundtrip_req(Request::SetAspired { model: "m".into(), versions: vec![1, 2, 9] });
+        roundtrip_req(Request::SetAspired { model: "m".into(), versions: vec![] });
+        roundtrip_req(Request::ModelStatus { model: "m".into() });
+        roundtrip_req(Request::Status);
+        roundtrip_req(Request::Ping);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_resp(Response::Predict {
+            model_version: 2,
+            outputs: vec![
+                OutTensor::F32(Tensor::matrix(vec![vec![0.5, -1.5]]).unwrap()),
+                OutTensor::I32(TensorI32::new(vec![1], vec![3]).unwrap()),
+            ],
+        });
+        roundtrip_resp(Response::Classify {
+            model_version: 1,
+            classes: vec![0, 3, -1],
+            log_probs: vec![vec![-0.1, -2.0], vec![], vec![1.0]],
+        });
+        roundtrip_resp(Response::Regress { model_version: 1, values: vec![1.5] });
+        roundtrip_resp(Response::Lookup { values: Some(vec![1.0, 2.0]) });
+        roundtrip_resp(Response::Lookup { values: None });
+        roundtrip_resp(Response::Ack);
+        roundtrip_resp(Response::ModelStatus {
+            versions: vec![(1, "ready".into()), (2, "loading".into())],
+        });
+        roundtrip_resp(Response::Status { text: "ok\nqps 12".into() });
+        roundtrip_resp(Response::Pong);
+        roundtrip_resp(Response::Error { message: "boom".into() });
+    }
+
+    #[test]
+    fn error_into_result() {
+        assert!(Response::Pong.into_result().is_ok());
+        let err = Response::Error { message: "nope".into() }.into_result();
+        assert!(err.unwrap_err().to_string().contains("nope"));
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Request::decode(&[]).is_err());
+        assert!(Request::decode(&[99]).is_err());
+        assert!(Response::decode(&[42]).is_err());
+        // trailing bytes
+        let mut buf = Request::Ping.encode();
+        buf.push(0);
+        assert!(Request::decode(&buf).is_err());
+        // truncation at every prefix must error, not panic
+        let full = Request::Predict {
+            model: "model".into(),
+            version: Some(1),
+            input: Tensor::matrix(vec![vec![1.0, 2.0]]).unwrap(),
+        }
+        .encode();
+        for cut in 0..full.len() {
+            assert!(Request::decode(&full[..cut]).is_err(), "cut={cut}");
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Threaded RPC server: accept loop + one handler thread per
+//! connection, framed request/response, graceful shutdown.
+
+use super::frame::{read_frame, write_frame};
+use super::proto::{Request, Response};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Request handler: pure function from request to response. Handlers
+/// run on connection threads; anything shared must be Sync.
+pub type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync>;
+
+pub struct RpcServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    requests_served: Arc<AtomicU64>,
+}
+
+impl RpcServer {
+    /// Bind and start serving `handler` on `addr` (use port 0 for an
+    /// ephemeral port; read it back from [`RpcServer::addr`]).
+    pub fn start(addr: &str, handler: Handler) -> anyhow::Result<Arc<Self>> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let requests_served = Arc::new(AtomicU64::new(0));
+
+        let accept_shutdown = Arc::clone(&shutdown);
+        let accept_counter = Arc::clone(&requests_served);
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("rpc-accept-{}", local.port()))
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if accept_shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    match stream {
+                        Ok(stream) => {
+                            let handler = Arc::clone(&handler);
+                            let counter = Arc::clone(&accept_counter);
+                            let sd = Arc::clone(&accept_shutdown);
+                            let _ = std::thread::Builder::new()
+                                .name("rpc-conn".to_string())
+                                .spawn(move || {
+                                    Self::serve_connection(stream, handler, counter, sd)
+                                });
+                        }
+                        Err(e) => {
+                            crate::log_warn!("accept error: {e}");
+                        }
+                    }
+                }
+            })?;
+
+        crate::log_info!("rpc server listening on {local}");
+        Ok(Arc::new(RpcServer {
+            addr: local,
+            shutdown,
+            accept_thread: Mutex::new(Some(accept_thread)),
+            requests_served,
+        }))
+    }
+
+    fn serve_connection(
+        mut stream: TcpStream,
+        handler: Handler,
+        counter: Arc<AtomicU64>,
+        shutdown: Arc<AtomicBool>,
+    ) {
+        let _ = stream.set_nodelay(true);
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let payload = match read_frame(&mut stream) {
+                Ok(Some(p)) => p,
+                Ok(None) => return, // client hung up
+                Err(e) => {
+                    crate::log_debug!("connection read error: {e}");
+                    return;
+                }
+            };
+            let response = match Request::decode(&payload) {
+                Ok(req) => handler(req),
+                Err(e) => Response::Error { message: format!("bad request: {e}") },
+            };
+            counter.fetch_add(1, Ordering::Relaxed);
+            if let Err(e) = write_frame(&mut stream, &response.encode()) {
+                crate::log_debug!("connection write error: {e}");
+                return;
+            }
+        }
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn requests_served(&self) -> u64 {
+        self.requests_served.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting. In-flight connections finish their current
+    /// request and exit on next read.
+    pub fn stop(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Poke the accept loop awake.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::client::RpcClient;
+
+    fn echo_server() -> Arc<RpcServer> {
+        RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(|req| match req {
+                Request::Ping => Response::Pong,
+                Request::Status => Response::Status { text: "ok".into() },
+                _ => Response::Error { message: "unsupported".into() },
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ping_pong() {
+        let server = echo_server();
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+        assert_eq!(client.call(&Request::Ping).unwrap(), Response::Pong);
+        assert_eq!(
+            client.call(&Request::Status).unwrap(),
+            Response::Status { text: "ok".into() }
+        );
+        assert_eq!(server.requests_served(), 2);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = echo_server();
+        let addr = server.addr().to_string();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = RpcClient::connect(&addr).unwrap();
+                    for _ in 0..50 {
+                        assert_eq!(c.call(&Request::Ping).unwrap(), Response::Pong);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.requests_served(), 400);
+    }
+
+    #[test]
+    fn malformed_request_gets_error_response() {
+        let server = echo_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        write_frame(&mut stream, &[42, 42, 42]).unwrap();
+        let resp = Response::decode(&read_frame(&mut stream).unwrap().unwrap()).unwrap();
+        assert!(matches!(resp, Response::Error { .. }));
+    }
+
+    #[test]
+    fn stop_then_connect_fails_eventually() {
+        let server = echo_server();
+        let addr = server.addr();
+        server.stop();
+        // The listener socket is closed after stop; new connections
+        // must fail (immediately or after the OS backlog drains).
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let ok = TcpStream::connect(addr)
+            .map(|mut s| {
+                write_frame(&mut s, &Request::Ping.encode()).ok();
+                read_frame(&mut s).ok().flatten().is_some()
+            })
+            .unwrap_or(false);
+        assert!(!ok, "server still serving after stop");
+    }
+}

@@ -1,0 +1,187 @@
+//! Artifact layout and `spec.json` sidecars (the contract with
+//! `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed `spec.json` for one model version.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub platform: String,
+    pub signature: String, // "classify" | "regress" | "predict"
+    pub model_name: String,
+    pub version: u64,
+    pub input_dim: usize,
+    pub output_names: Vec<String>,
+    pub allowed_batch_sizes: Vec<usize>,
+    pub artifact_pattern: String,
+    pub ram_estimate_bytes: u64,
+    pub n_params: u64,
+    /// Training metrics (accuracy/mse), for canary comparisons.
+    pub metrics: Json,
+}
+
+impl ModelSpec {
+    pub fn parse(json: &Json, origin: &str) -> Result<ModelSpec> {
+        let get_str = |k: &str| -> Result<String> {
+            Ok(json
+                .get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("{origin}: missing string '{k}'"))?
+                .to_string())
+        };
+        let input_dim = json
+            .get_path("input.shape")
+            .and_then(|v| v.as_arr())
+            .and_then(|a| a.last())
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow!("{origin}: bad input.shape"))? as usize;
+        let output_names = json
+            .get("outputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("{origin}: missing outputs"))?
+            .iter()
+            .map(|o| {
+                o.get("name")
+                    .and_then(|n| n.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("{origin}: output without name"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let allowed_batch_sizes: Vec<usize> = json
+            .get("allowed_batch_sizes")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("{origin}: missing allowed_batch_sizes"))?
+            .iter()
+            .map(|v| v.as_u64().map(|x| x as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("{origin}: bad allowed_batch_sizes"))?;
+        if allowed_batch_sizes.is_empty() {
+            bail!("{origin}: empty allowed_batch_sizes");
+        }
+        Ok(ModelSpec {
+            platform: get_str("platform")?,
+            signature: get_str("signature")?,
+            model_name: get_str("model_name")?,
+            version: json
+                .get("version")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("{origin}: missing version"))?,
+            input_dim,
+            output_names,
+            allowed_batch_sizes,
+            artifact_pattern: get_str("artifact_pattern")?,
+            ram_estimate_bytes: json
+                .get("ram_estimate_bytes")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0),
+            n_params: json.get("n_params").and_then(|v| v.as_u64()).unwrap_or(0),
+            metrics: json.get("metrics").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    pub fn load(version_dir: &Path) -> Result<ModelSpec> {
+        let path = version_dir.join("spec.json");
+        let json = Json::parse_file(&path).context("loading spec")?;
+        Self::parse(&json, &path.display().to_string())
+    }
+
+    /// HLO file for a given compiled batch size.
+    pub fn artifact_path(&self, version_dir: &Path, batch: usize) -> PathBuf {
+        version_dir.join(self.artifact_pattern.replace("{batch}", &batch.to_string()))
+    }
+
+    pub fn max_batch_size(&self) -> usize {
+        *self.allowed_batch_sizes.last().unwrap()
+    }
+}
+
+/// The artifacts root used by tests/examples: `$TS_ARTIFACTS` or
+/// `<repo>/artifacts`.
+pub fn default_artifacts_root() -> PathBuf {
+    if let Ok(p) = std::env::var("TS_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if `make artifacts` has produced the models examples need.
+pub fn artifacts_available() -> bool {
+    default_artifacts_root().join("mlp_classifier").is_dir()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"{
+      "platform": "hlo", "signature": "classify",
+      "model_name": "m", "version": 3,
+      "input": {"name": "x", "shape": [-1, 32], "dtype": "f32"},
+      "outputs": [{"name": "log_probs", "shape": [-1, 4], "dtype": "f32"},
+                  {"name": "class", "shape": [-1], "dtype": "s32"}],
+      "allowed_batch_sizes": [1, 4, 16],
+      "artifact_pattern": "model_b{batch}.hlo.txt",
+      "ram_estimate_bytes": 123456, "n_params": 999,
+      "metrics": {"train_accuracy": 0.98}
+    }"#;
+
+    #[test]
+    fn parse_full_spec() {
+        let spec = ModelSpec::parse(&Json::parse(SPEC).unwrap(), "test").unwrap();
+        assert_eq!(spec.model_name, "m");
+        assert_eq!(spec.version, 3);
+        assert_eq!(spec.input_dim, 32);
+        assert_eq!(spec.output_names, vec!["log_probs", "class"]);
+        assert_eq!(spec.allowed_batch_sizes, vec![1, 4, 16]);
+        assert_eq!(spec.max_batch_size(), 16);
+        assert_eq!(spec.ram_estimate_bytes, 123456);
+        assert_eq!(
+            spec.metrics.get("train_accuracy").unwrap().as_f64(),
+            Some(0.98)
+        );
+    }
+
+    #[test]
+    fn artifact_path_substitution() {
+        let spec = ModelSpec::parse(&Json::parse(SPEC).unwrap(), "test").unwrap();
+        assert_eq!(
+            spec.artifact_path(Path::new("/a/b/3"), 16),
+            PathBuf::from("/a/b/3/model_b16.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn parse_rejects_incomplete() {
+        let bad = Json::parse(r#"{"platform": "hlo"}"#).unwrap();
+        assert!(ModelSpec::parse(&bad, "t").is_err());
+        let no_sizes = Json::parse(
+            r#"{"platform":"hlo","signature":"s","model_name":"m","version":1,
+                "input":{"shape":[-1,4]},"outputs":[],"allowed_batch_sizes":[],
+                "artifact_pattern":"x"}"#,
+        )
+        .unwrap();
+        assert!(ModelSpec::parse(&no_sizes, "t").is_err());
+    }
+
+    #[test]
+    fn real_artifacts_parse_if_present() {
+        let root = default_artifacts_root();
+        if !artifacts_available() {
+            return; // make artifacts not run yet
+        }
+        for model in ["mlp_classifier", "mlp_regressor"] {
+            for v in [1u64, 2] {
+                let dir = root.join(model).join(v.to_string());
+                let spec = ModelSpec::load(&dir).unwrap();
+                assert_eq!(spec.model_name, model);
+                assert_eq!(spec.version, v);
+                assert_eq!(spec.input_dim, 32);
+                for &b in &spec.allowed_batch_sizes {
+                    assert!(spec.artifact_path(&dir, b).exists());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Model runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! This plays the role TensorFlow's `Session::Run()` plays in the paper:
+//! the opaque executable behind a servable. Artifacts are HLO *text*
+//! emitted by `python/compile/aot.py` (HLO text is the interchange
+//! format because the bundled xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit-id serialized protos); [`pjrt`] compiles them on the PJRT CPU
+//! client, [`artifacts`] reads the `spec.json` sidecars, and
+//! [`hlo_servable`] packages one executable per allowed batch size into
+//! the servable the manager hands out.
+
+pub mod artifacts;
+pub mod hlo_servable;
+pub mod pjrt;

@@ -1,0 +1,436 @@
+//! [`ModelServer`]: the assembled canonical server.
+//!
+//! Wiring (paper Figure 1 made concrete):
+//!
+//! ```text
+//! FileSystemSource ──► SourceRouter (by platform)
+//!                        ├─ port 0 ─► HloSourceAdapter ──► AVM
+//!                        └─ port 1 ─► TableSourceAdapter ─► AVM
+//! RPC front end ──► Predict/Classify/Regress/Lookup over AVM handles
+//!              └──► admin: SetAspired (RPC source), ModelStatus, Status
+//! ```
+
+use super::config::ServerConfig;
+use crate::base::aspired::{AspiredVersionsCallback, Source};
+use crate::inference::classify::{classify, ClassifyRequest};
+use crate::inference::example::Feature;
+use crate::inference::logger::{digest_f32s, RequestLogger};
+use crate::inference::predict::{predict, PredictRequest};
+use crate::inference::regress::{regress, RegressRequest};
+use crate::inference::table::{table_source_adapter, TableServable};
+use crate::lifecycle::basic_manager::{ManagerOptions, VersionRequest};
+use crate::lifecycle::manager::{AspiredVersionsManager, AvmOptions};
+use crate::lifecycle::policy::{
+    AvailabilityPreservingPolicy, ResourcePreservingPolicy, VersionPolicy,
+};
+use crate::lifecycle::source::{FileSystemSource, ServingPolicy, WatchedServable};
+use crate::lifecycle::source_router::SourceRouter;
+use crate::rpc::proto::{Request, Response};
+use crate::rpc::server::RpcServer;
+use crate::runtime::hlo_servable::hlo_source_adapter;
+use crate::runtime::pjrt::XlaRuntime;
+use crate::util::metrics::Registry;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Handler-visible server state (shared with the RPC closure).
+pub struct ServerCore {
+    pub config: ServerConfig,
+    avm: Arc<AspiredVersionsManager>,
+    source: Arc<FileSystemSource>,
+    pub registry: Arc<Registry>,
+    pub logger: Arc<RequestLogger>,
+}
+
+/// The running canonical server.
+pub struct ModelServer {
+    core: Arc<ServerCore>,
+    rpc: Arc<RpcServer>,
+}
+
+impl ModelServer {
+    /// Build and start everything; returns once the RPC server is
+    /// listening (models may still be loading — see
+    /// [`ModelServer::wait_until_ready`]).
+    pub fn start(config: ServerConfig) -> Result<Arc<Self>> {
+        // Manager.
+        let policy: Arc<dyn VersionPolicy> = if config.availability_preserving {
+            Arc::new(AvailabilityPreservingPolicy)
+        } else {
+            Arc::new(ResourcePreservingPolicy)
+        };
+        let avm = AspiredVersionsManager::new(
+            policy,
+            AvmOptions {
+                manager: ManagerOptions {
+                    load_threads: config.load_threads,
+                    ram_capacity_bytes: if config.ram_capacity_bytes == 0 {
+                        None
+                    } else {
+                        Some(config.ram_capacity_bytes)
+                    },
+                    name: "server".into(),
+                    ..Default::default()
+                },
+                reconcile_interval: Some(Duration::from_millis(20)),
+            },
+        );
+
+        // Platform router + adapters (Figure 1). Models added at
+        // runtime (TFS² SetAspired) aren't in the config map: sniff the
+        // platform from the artifact layout (table.json ⇒ BananaFlow).
+        // This runs on the lifecycle path, never per-request.
+        let platform_of: HashMap<String, usize> = config
+            .models
+            .iter()
+            .map(|m| (m.name.clone(), usize::from(m.platform == "table")))
+            .collect();
+        let sniff_root = config.artifacts_root.clone();
+        let router = SourceRouter::<PathBuf>::new(2, move |name| {
+            if let Some(&port) = platform_of.get(name) {
+                return port;
+            }
+            let base = sniff_root.join(name);
+            let is_table = crate::lifecycle::source::scan_versions(&base)
+                .last()
+                .map(|v| base.join(v.to_string()).join("table.json").exists())
+                .unwrap_or(false);
+            usize::from(is_table)
+        });
+        let runtime = XlaRuntime::shared()?;
+        let hlo_adapter = hlo_source_adapter(runtime);
+        let table_adapter = table_source_adapter();
+        hlo_adapter.connect(Arc::clone(&avm) as Arc<dyn AspiredVersionsCallback<_>>);
+        table_adapter.connect(Arc::clone(&avm) as Arc<dyn AspiredVersionsCallback<_>>);
+        router.connect_port(0, hlo_adapter);
+        router.connect_port(1, table_adapter);
+
+        // File-system source.
+        let watched = config
+            .models
+            .iter()
+            .map(|m| WatchedServable {
+                name: m.name.clone(),
+                base_path: m.base_path.clone(),
+                policy: m.policy.clone(),
+            })
+            .collect();
+        let mut source = FileSystemSource::new(watched, config.poll_interval);
+        source.set_aspired_versions_callback(router);
+
+        let core = Arc::new(ServerCore {
+            config: config.clone(),
+            avm,
+            source,
+            registry: Registry::new(),
+            logger: Arc::new(RequestLogger::new(0.1, 4096, 42)),
+        });
+
+        // RPC front end.
+        let handler_core = Arc::clone(&core);
+        let rpc = RpcServer::start(
+            &format!("0.0.0.0:{}", config.port),
+            Arc::new(move |req| handler_core.handle(req)),
+        )?;
+        Ok(Arc::new(ModelServer { core, rpc }))
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.rpc.addr()
+    }
+
+    pub fn core(&self) -> &Arc<ServerCore> {
+        &self.core
+    }
+
+    pub fn avm(&self) -> &Arc<AspiredVersionsManager> {
+        &self.core.avm
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.core.registry
+    }
+
+    /// Canary/rollback control (§2.1.1).
+    pub fn set_serving_policy(&self, model: &str, policy: ServingPolicy) {
+        self.core.set_serving_policy(model, policy);
+    }
+
+    /// Block until every configured model has at least one ready
+    /// version (or timeout). Returns the ready map.
+    pub fn wait_until_ready(&self, timeout: Duration) -> Result<HashMap<String, Vec<u64>>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let ready: HashMap<String, Vec<u64>> = self
+                .core
+                .config
+                .models
+                .iter()
+                .map(|m| (m.name.clone(), self.core.avm.basic().ready_versions(&m.name)))
+                .collect();
+            if ready.values().all(|v| !v.is_empty()) {
+                return Ok(ready);
+            }
+            if Instant::now() >= deadline {
+                return Err(anyhow!("models not ready after {timeout:?}: {ready:?}"));
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    pub fn stop(&self) {
+        self.rpc.stop();
+    }
+}
+
+impl ServerCore {
+    pub fn avm(&self) -> &Arc<AspiredVersionsManager> {
+        &self.avm
+    }
+
+    /// Canary/rollback control (§2.1.1): change the serving policy for
+    /// one model and re-poll immediately. Models not yet watched (TFS²
+    /// assigns them at runtime) are added, served from
+    /// `<artifacts_root>/<model>`.
+    pub fn set_serving_policy(&self, model: &str, policy: ServingPolicy) {
+        if !self.source.is_watching(model) {
+            self.source.watch(crate::lifecycle::source::WatchedServable {
+                name: model.to_string(),
+                base_path: self.config.artifacts_root.join(model),
+                policy: policy.clone(),
+            });
+        }
+        self.source.set_policy(model, policy);
+        self.source.poll_once();
+    }
+
+    /// The RPC request handler (one call per request frame).
+    pub fn handle(&self, req: Request) -> Response {
+        let t0 = Instant::now();
+        let (api, resp) = match req {
+            Request::Ping => ("ping", Response::Pong),
+            Request::Predict { model, version, input } => {
+                let r = predict(
+                    self.avm.as_ref(),
+                    &PredictRequest { model: model.clone(), version, input },
+                );
+                (
+                    "predict",
+                    match r {
+                        Ok(r) => {
+                            self.log(&model, r.model_version, &r);
+                            Response::Predict {
+                                model_version: r.model_version,
+                                outputs: r.outputs,
+                            }
+                        }
+                        Err(e) => Response::Error { message: e.to_string() },
+                    },
+                )
+            }
+            Request::Classify { model, version, examples } => {
+                let r = classify(
+                    self.avm.as_ref(),
+                    &ClassifyRequest { model, version, examples },
+                );
+                (
+                    "classify",
+                    match r {
+                        Ok(r) => Response::Classify {
+                            model_version: r.model_version,
+                            classes: r.results.iter().map(|c| c.class).collect(),
+                            log_probs: r.results.into_iter().map(|c| c.log_probs).collect(),
+                        },
+                        Err(e) => Response::Error { message: e.to_string() },
+                    },
+                )
+            }
+            Request::Regress { model, version, examples } => {
+                let r = regress(
+                    self.avm.as_ref(),
+                    &RegressRequest { model, version, examples },
+                );
+                (
+                    "regress",
+                    match r {
+                        Ok(r) => Response::Regress {
+                            model_version: r.model_version,
+                            values: r.values,
+                        },
+                        Err(e) => Response::Error { message: e.to_string() },
+                    },
+                )
+            }
+            Request::Lookup { table, key } => (
+                "lookup",
+                match self
+                    .avm
+                    .handle::<TableServable>(&table, VersionRequest::Latest)
+                {
+                    Ok(h) => Response::Lookup {
+                        values: h.lookup(&key).map(|v| v.to_vec()),
+                    },
+                    Err(e) => Response::Error { message: e.to_string() },
+                },
+            ),
+            Request::SetAspired { model, versions } => {
+                // Footnote 6: the RPC-based Source for TFS². The
+                // Synchronizer pins exact versions; artifacts still come
+                // from the shared filesystem.
+                self.set_serving_policy(&model, ServingPolicy::Specific(versions));
+                ("set_aspired", Response::Ack)
+            }
+            Request::ModelStatus { model } => {
+                let snapshot = self.avm.monitor().snapshot();
+                let versions = snapshot
+                    .into_iter()
+                    .filter(|(id, _)| id.name == model)
+                    .map(|(id, st)| (id.version, st.label().to_string()))
+                    .collect();
+                ("model_status", Response::ModelStatus { versions })
+            }
+            Request::Status => {
+                let mut text = self.registry.dump();
+                text.push_str(&format!("ready {:?}\n", self.avm.basic().all_ready()));
+                ("status", Response::Status { text })
+            }
+        };
+        self.registry.counter(&format!("rpc.{api}.requests")).inc();
+        if matches!(resp, Response::Error { .. }) {
+            self.registry.counter(&format!("rpc.{api}.errors")).inc();
+        }
+        self.registry
+            .histogram(&format!("rpc.{api}.latency_ns"))
+            .record_duration(t0.elapsed());
+        resp
+    }
+
+    fn log(&self, model: &str, version: u64, resp: &crate::inference::predict::PredictResponse) {
+        let digest = resp
+            .outputs
+            .first()
+            .and_then(|o| o.as_f32().ok())
+            .map(|t| digest_f32s(t.data()))
+            .unwrap_or(0);
+        self.logger.observe(model, version, 0, digest);
+    }
+}
+
+/// Helper: build a classify/regress example from a raw feature vector.
+pub fn example_from_features(x: Vec<f32>) -> crate::inference::example::Example {
+    crate::inference::example::Example::new().with("x", Feature::Floats(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::tensor::Tensor;
+    use crate::rpc::client::RpcClient;
+    use crate::runtime::artifacts::{artifacts_available, default_artifacts_root};
+
+    fn test_config() -> ServerConfig {
+        ServerConfig {
+            port: 0,
+            artifacts_root: default_artifacts_root(),
+            poll_interval: Some(Duration::from_millis(50)),
+            availability_preserving: true,
+            load_threads: 2,
+            ram_capacity_bytes: 0,
+            models: vec![
+                super::super::config::ModelConfig {
+                    name: "mlp_classifier".into(),
+                    platform: "hlo".into(),
+                    base_path: default_artifacts_root().join("mlp_classifier"),
+                    policy: ServingPolicy::Latest(1),
+                },
+                super::super::config::ModelConfig {
+                    name: "toy_table".into(),
+                    platform: "table".into(),
+                    base_path: default_artifacts_root().join("toy_table"),
+                    policy: ServingPolicy::Latest(1),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn full_server_serves_both_platforms() {
+        if !artifacts_available() {
+            return;
+        }
+        let server = ModelServer::start(test_config()).unwrap();
+        server.wait_until_ready(Duration::from_secs(60)).unwrap();
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+
+        // HLO platform over RPC.
+        let resp = client
+            .call_ok(&Request::Predict {
+                model: "mlp_classifier".into(),
+                version: None,
+                input: Tensor::zeros(vec![2, 32]),
+            })
+            .unwrap();
+        match resp {
+            Response::Predict { model_version, outputs } => {
+                assert_eq!(model_version, 2); // latest
+                assert_eq!(outputs.len(), 2);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // BananaFlow platform over the same server.
+        let resp = client
+            .call_ok(&Request::Lookup { table: "toy_table".into(), key: "3".into() })
+            .unwrap();
+        assert_eq!(resp, Response::Lookup { values: Some(vec![3.0, 2.0]) });
+
+        // Status carries metrics.
+        match client.call_ok(&Request::Status).unwrap() {
+            Response::Status { text } => {
+                assert!(text.contains("rpc.predict.requests 1"), "{text}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn rpc_driven_aspired_versions() {
+        if !artifacts_available() {
+            return;
+        }
+        let server = ModelServer::start(test_config()).unwrap();
+        server.wait_until_ready(Duration::from_secs(60)).unwrap();
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+        // Pin version 1 via the RPC source (the TFS² path).
+        client
+            .call_ok(&Request::SetAspired {
+                model: "mlp_classifier".into(),
+                versions: vec![1],
+            })
+            .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let ready = server.avm().basic().ready_versions("mlp_classifier");
+            if ready == vec![1] {
+                break;
+            }
+            assert!(Instant::now() < deadline, "never pinned to v1: {ready:?}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // Model status over RPC reflects the transition.
+        match client
+            .call_ok(&Request::ModelStatus { model: "mlp_classifier".into() })
+            .unwrap()
+        {
+            Response::ModelStatus { versions } => {
+                assert!(versions.iter().any(|(v, s)| *v == 1 && s == "ready"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        server.stop();
+    }
+}

@@ -1,0 +1,197 @@
+//! Model-server configuration (the analogue of TF-Serving's
+//! `ModelServerConfig` / `model_config_list` proto, as JSON).
+//!
+//! ```json
+//! {
+//!   "port": 8500,
+//!   "artifacts_root": "artifacts",
+//!   "poll_interval_ms": 500,
+//!   "version_policy": "availability_preserving",
+//!   "load_threads": 2,
+//!   "ram_capacity_bytes": 0,
+//!   "models": [
+//!     {"name": "mlp_classifier", "platform": "hlo", "serve_latest": 1},
+//!     {"name": "toy_table", "platform": "table", "serve_latest": 1}
+//!   ]
+//! }
+//! ```
+
+use crate::lifecycle::source::ServingPolicy;
+use crate::util::config::Conf;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// One served model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// "hlo" (the TensorFlow analogue) or "table" (BananaFlow).
+    pub platform: String,
+    /// Base path holding numeric version subdirectories. Defaults to
+    /// `<artifacts_root>/<name>`.
+    pub base_path: PathBuf,
+    pub policy: ServingPolicy,
+}
+
+/// Full server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub port: u16,
+    pub artifacts_root: PathBuf,
+    /// `None` = manual polling (tests).
+    pub poll_interval: Option<Duration>,
+    /// true = availability-preserving transitions; false = resource-.
+    pub availability_preserving: bool,
+    pub load_threads: usize,
+    /// 0 = unlimited.
+    pub ram_capacity_bytes: u64,
+    pub models: Vec<ModelConfig>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            port: 0,
+            artifacts_root: crate::runtime::artifacts::default_artifacts_root(),
+            poll_interval: Some(Duration::from_millis(500)),
+            availability_preserving: true,
+            load_threads: 2,
+            ram_capacity_bytes: 0,
+            models: Vec::new(),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Parse from a JSON config document.
+    pub fn from_conf(conf: &Conf) -> Result<ServerConfig> {
+        conf.allow_keys(&[
+            "port",
+            "artifacts_root",
+            "poll_interval_ms",
+            "version_policy",
+            "load_threads",
+            "ram_capacity_bytes",
+            "models",
+        ])?;
+        let artifacts_root = PathBuf::from(conf.str_or(
+            "artifacts_root",
+            crate::runtime::artifacts::default_artifacts_root()
+                .to_str()
+                .unwrap_or("artifacts"),
+        ));
+        let policy_name = conf.str_or("version_policy", "availability_preserving");
+        let availability_preserving = match policy_name {
+            "availability_preserving" => true,
+            "resource_preserving" => false,
+            other => bail!("unknown version_policy '{other}'"),
+        };
+        let poll_ms = conf.u64_or("poll_interval_ms", 500);
+        let mut models = Vec::new();
+        for m in conf.list("models")? {
+            let name = m.str("name")?.to_string();
+            let platform = m.str_or("platform", "hlo").to_string();
+            if !["hlo", "table"].contains(&platform.as_str()) {
+                bail!("model '{name}': unknown platform '{platform}'");
+            }
+            let base_path = m
+                .root()
+                .get("base_path")
+                .and_then(|v| v.as_str())
+                .map(PathBuf::from)
+                .unwrap_or_else(|| artifacts_root.join(&name));
+            let policy = if let Some(versions) = m.root().get("serve_versions") {
+                let vs = versions
+                    .as_arr()
+                    .and_then(|a| {
+                        a.iter().map(|v| v.as_u64()).collect::<Option<Vec<u64>>>()
+                    })
+                    .ok_or_else(|| anyhow::anyhow!("model '{name}': bad serve_versions"))?;
+                ServingPolicy::Specific(vs)
+            } else {
+                ServingPolicy::Latest(m.u64_or("serve_latest", 1) as usize)
+            };
+            models.push(ModelConfig { name, platform, base_path, policy });
+        }
+        if models.is_empty() {
+            bail!("config declares no models");
+        }
+        Ok(ServerConfig {
+            port: conf.u64_or("port", 0) as u16,
+            artifacts_root,
+            poll_interval: if poll_ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(poll_ms))
+            },
+            availability_preserving,
+            load_threads: conf.u64_or("load_threads", 2) as usize,
+            ram_capacity_bytes: conf.u64_or("ram_capacity_bytes", 0),
+            models,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ServerConfig> {
+        Self::from_conf(&Conf::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "port": 8500,
+      "artifacts_root": "/a",
+      "poll_interval_ms": 100,
+      "version_policy": "resource_preserving",
+      "models": [
+        {"name": "c", "platform": "hlo", "serve_latest": 2},
+        {"name": "t", "platform": "table", "base_path": "/elsewhere/t"},
+        {"name": "pinned", "serve_versions": [3, 5]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = ServerConfig::from_conf(&Conf::parse(SAMPLE, "t").unwrap()).unwrap();
+        assert_eq!(cfg.port, 8500);
+        assert!(!cfg.availability_preserving);
+        assert_eq!(cfg.poll_interval, Some(Duration::from_millis(100)));
+        assert_eq!(cfg.models.len(), 3);
+        assert_eq!(cfg.models[0].policy, ServingPolicy::Latest(2));
+        assert_eq!(cfg.models[0].base_path, PathBuf::from("/a/c"));
+        assert_eq!(cfg.models[1].base_path, PathBuf::from("/elsewhere/t"));
+        assert_eq!(cfg.models[2].platform, "hlo"); // default
+        assert_eq!(cfg.models[2].policy, ServingPolicy::Specific(vec![3, 5]));
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        for (bad, needle) in [
+            (r#"{"models": []}"#, "no models"),
+            (r#"{"models": [{"name":"x","platform":"gpu"}]}"#, "platform"),
+            (r#"{"version_policy":"yolo","models":[{"name":"x"}]}"#, "version_policy"),
+            (r#"{"prot": 1, "models":[{"name":"x"}]}"#, "unknown key"),
+        ] {
+            let err = ServerConfig::from_conf(&Conf::parse(bad, "t").unwrap())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn zero_poll_means_manual() {
+        let cfg = ServerConfig::from_conf(
+            &Conf::parse(
+                r#"{"poll_interval_ms": 0, "models":[{"name":"x"}]}"#,
+                "t",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.poll_interval, None);
+    }
+}

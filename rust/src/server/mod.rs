@@ -1,0 +1,11 @@
+//! The canonical server binary's building blocks (paper §3):
+//! "a 'vanilla' set-up consisting of a file-system-monitoring Source, a
+//! TensorFlow Source Adapter and a Manager", packaged so "most users do
+//! not need to fuss with our lower-level library offering".
+//!
+//! [`config`] parses the model-server config; [`builder`] assembles
+//! Source → Router → Adapters → AspiredVersionsManager behind the RPC
+//! front end, with metrics and request logging.
+
+pub mod builder;
+pub mod config;

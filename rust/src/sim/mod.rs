@@ -1,0 +1,3 @@
+//! Workload generation and measurement for benches and examples.
+
+pub mod workload;

@@ -1,0 +1,193 @@
+//! Serving-benchmark workloads: open-loop (Poisson arrivals, the
+//! standard for latency measurement — queueing effects included) and
+//! closed-loop (N clients back-to-back, the standard for peak
+//! throughput), plus a latency recorder.
+
+use crate::util::metrics::Histogram;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Aggregated result of a run.
+pub struct RunStats {
+    pub requests: u64,
+    pub errors: u64,
+    pub elapsed: Duration,
+    pub latency: Arc<Histogram>,
+}
+
+impl RunStats {
+    pub fn qps(&self) -> f64 {
+        self.requests as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:.0} qps ({} reqs, {} errs, {:.2}s) latency {}",
+            self.qps(),
+            self.requests,
+            self.errors,
+            self.elapsed.as_secs_f64(),
+            self.latency.summary()
+        )
+    }
+}
+
+/// Closed loop: `threads` clients issue requests back-to-back for
+/// `duration`. `op` returns Ok to count a success.
+pub fn closed_loop<F>(threads: usize, duration: Duration, op: F) -> RunStats
+where
+    F: Fn(usize) -> anyhow::Result<()> + Send + Sync + 'static,
+{
+    let op = Arc::new(op);
+    let latency = Arc::new(Histogram::new());
+    let requests = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..threads.max(1))
+        .map(|tid| {
+            let op = Arc::clone(&op);
+            let latency = Arc::clone(&latency);
+            let requests = Arc::clone(&requests);
+            let errors = Arc::clone(&errors);
+            std::thread::spawn(move || {
+                while t0.elapsed() < duration {
+                    let s = Instant::now();
+                    let ok = op(tid).is_ok();
+                    latency.record_duration(s.elapsed());
+                    requests.fetch_add(1, Ordering::Relaxed);
+                    if !ok {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        let _ = h.join();
+    }
+    RunStats {
+        requests: requests.load(Ordering::Relaxed),
+        errors: errors.load(Ordering::Relaxed),
+        elapsed: t0.elapsed(),
+        latency,
+    }
+}
+
+/// Open loop: Poisson arrivals at `rate_qps` for `duration`, dispatched
+/// onto `workers` threads through an unbounded queue. Latency includes
+/// queueing (the honest tail).
+pub fn open_loop<F>(rate_qps: f64, duration: Duration, workers: usize, seed: u64, op: F) -> RunStats
+where
+    F: Fn() -> anyhow::Result<()> + Send + Sync + 'static,
+{
+    use std::sync::mpsc;
+    let op = Arc::new(op);
+    let latency = Arc::new(Histogram::new());
+    let requests = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let (tx, rx) = mpsc::channel::<Instant>();
+    let rx = Arc::new(std::sync::Mutex::new(rx));
+
+    let handles: Vec<_> = (0..workers.max(1))
+        .map(|_| {
+            let op = Arc::clone(&op);
+            let latency = Arc::clone(&latency);
+            let requests = Arc::clone(&requests);
+            let errors = Arc::clone(&errors);
+            let rx = Arc::clone(&rx);
+            std::thread::spawn(move || loop {
+                let arrival = match rx.lock().unwrap().recv() {
+                    Ok(a) => a,
+                    Err(_) => return,
+                };
+                let ok = op().is_ok();
+                // Latency from *arrival*, not from dispatch: includes
+                // the time spent waiting for a free worker.
+                latency.record_duration(arrival.elapsed());
+                requests.fetch_add(1, Ordering::Relaxed);
+                if !ok {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut next = t0;
+    while t0.elapsed() < duration {
+        let now = Instant::now();
+        if now < next {
+            std::thread::sleep(next - now);
+        }
+        let _ = tx.send(next);
+        next += Duration::from_secs_f64(rng.exponential(1.0 / rate_qps));
+    }
+    drop(tx);
+    for h in handles {
+        let _ = h.join();
+    }
+    RunStats {
+        requests: requests.load(Ordering::Relaxed),
+        errors: errors.load(Ordering::Relaxed),
+        elapsed: t0.elapsed(),
+        latency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_loop_counts_and_times() {
+        let stats = closed_loop(4, Duration::from_millis(100), |_| {
+            std::thread::sleep(Duration::from_micros(100));
+            Ok(())
+        });
+        assert!(stats.requests > 100, "{}", stats.summary());
+        assert_eq!(stats.errors, 0);
+        assert!(stats.latency.quantile(0.5) >= 100_000); // >= 100us
+        assert!(stats.qps() > 1000.0);
+    }
+
+    #[test]
+    fn closed_loop_counts_errors() {
+        let stats = closed_loop(2, Duration::from_millis(50), |tid| {
+            if tid == 0 {
+                anyhow::bail!("boom");
+            }
+            Ok(())
+        });
+        assert!(stats.errors > 0);
+        assert!(stats.errors < stats.requests);
+    }
+
+    #[test]
+    fn open_loop_rate_approximately_honored() {
+        let stats = open_loop(2000.0, Duration::from_millis(500), 4, 42, || Ok(()));
+        let rate = stats.requests as f64 / stats.elapsed.as_secs_f64();
+        assert!(
+            (rate - 2000.0).abs() < 400.0,
+            "rate={rate} ({})",
+            stats.summary()
+        );
+    }
+
+    #[test]
+    fn open_loop_latency_includes_queueing() {
+        // 1 worker, 10ms service, arrivals at 200/s: heavy overload, so
+        // tail latency must blow far past the 10ms service time.
+        let stats = open_loop(200.0, Duration::from_millis(300), 1, 7, || {
+            std::thread::sleep(Duration::from_millis(10));
+            Ok(())
+        });
+        assert!(
+            stats.latency.quantile(0.99) > 50_000_000,
+            "{}",
+            stats.summary()
+        );
+    }
+}

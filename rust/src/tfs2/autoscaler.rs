@@ -1,0 +1,192 @@
+//! Reactive autoscaling (§3.1): "experimental launches and gradual
+//! production traffic variations are handled automatically by a
+//! separate system that reactively autoscales each serving job
+//! (dynamically adding and removing job replicas as load fluctuates)".
+//!
+//! Pure decision logic (the cluster applies the decisions): per-job
+//! target replica counts from observed load, with hysteresis and
+//! cooldown so flapping traffic doesn't flap replicas.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct AutoscalerConfig {
+    /// Target per-replica load (e.g. qps) the scaler aims for.
+    pub target_load_per_replica: f64,
+    /// Scale up when load/replica exceeds target * up_threshold.
+    pub up_threshold: f64,
+    /// Scale down when load/replica falls below target * down_threshold.
+    pub down_threshold: f64,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Ticks to wait after a scaling action before acting again.
+    pub cooldown_ticks: u32,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            target_load_per_replica: 100.0,
+            up_threshold: 1.2,
+            down_threshold: 0.5,
+            min_replicas: 1,
+            max_replicas: 16,
+            cooldown_ticks: 3,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct JobState {
+    replicas: usize,
+    cooldown: u32,
+}
+
+/// One scaling decision.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Decision {
+    pub job: String,
+    pub from: usize,
+    pub to: usize,
+}
+
+pub struct Autoscaler {
+    config: AutoscalerConfig,
+    jobs: HashMap<String, JobState>,
+}
+
+impl Autoscaler {
+    pub fn new(config: AutoscalerConfig) -> Self {
+        Autoscaler { config, jobs: HashMap::new() }
+    }
+
+    /// Register a job with its current replica count.
+    pub fn track(&mut self, job: &str, replicas: usize) {
+        self.jobs.insert(
+            job.to_string(),
+            JobState { replicas: replicas.max(self.config.min_replicas), cooldown: 0 },
+        );
+    }
+
+    pub fn replicas(&self, job: &str) -> usize {
+        self.jobs.get(job).map_or(0, |s| s.replicas)
+    }
+
+    /// One tick: feed per-job total load, get scaling decisions.
+    pub fn tick(&mut self, loads: &HashMap<String, f64>) -> Vec<Decision> {
+        let mut decisions = Vec::new();
+        for (job, state) in self.jobs.iter_mut() {
+            if state.cooldown > 0 {
+                state.cooldown -= 1;
+                continue;
+            }
+            let load = loads.get(job).copied().unwrap_or(0.0);
+            let per_replica = load / state.replicas.max(1) as f64;
+            let target = self.config.target_load_per_replica;
+            let to = if per_replica > target * self.config.up_threshold {
+                // Scale to the count that brings per-replica load to
+                // target (ceil), bounded.
+                ((load / target).ceil() as usize)
+                    .clamp(state.replicas + 1, self.config.max_replicas)
+            } else if per_replica < target * self.config.down_threshold
+                && state.replicas > self.config.min_replicas
+            {
+                ((load / target).ceil() as usize)
+                    .clamp(self.config.min_replicas, state.replicas - 1)
+            } else {
+                continue;
+            };
+            if to != state.replicas {
+                decisions.push(Decision { job: job.clone(), from: state.replicas, to });
+                state.replicas = to;
+                state.cooldown = self.config.cooldown_ticks;
+            }
+        }
+        decisions.sort_by(|a, b| a.job.cmp(&b.job));
+        decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler() -> Autoscaler {
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            target_load_per_replica: 100.0,
+            up_threshold: 1.2,
+            down_threshold: 0.5,
+            min_replicas: 1,
+            max_replicas: 8,
+            cooldown_ticks: 2,
+        });
+        a.track("j", 1);
+        a
+    }
+
+    fn load(v: f64) -> HashMap<String, f64> {
+        HashMap::from([("j".to_string(), v)])
+    }
+
+    #[test]
+    fn scales_up_under_load() {
+        let mut a = scaler();
+        let d = a.tick(&load(450.0));
+        assert_eq!(d, vec![Decision { job: "j".into(), from: 1, to: 5 }]);
+        assert_eq!(a.replicas("j"), 5);
+    }
+
+    #[test]
+    fn steady_load_no_action() {
+        let mut a = scaler();
+        assert!(a.tick(&load(100.0)).is_empty());
+        assert!(a.tick(&load(110.0)).is_empty()); // within hysteresis band
+    }
+
+    #[test]
+    fn scales_down_when_idle() {
+        let mut a = scaler();
+        a.tick(&load(800.0)); // up to 8
+        assert_eq!(a.replicas("j"), 8);
+        // wait out cooldown
+        a.tick(&load(100.0));
+        a.tick(&load(100.0));
+        let d = a.tick(&load(100.0));
+        assert_eq!(d.len(), 1);
+        assert!(d[0].to < 8);
+    }
+
+    #[test]
+    fn cooldown_suppresses_flapping() {
+        let mut a = scaler();
+        assert_eq!(a.tick(&load(450.0)).len(), 1);
+        // Immediately dropping load must NOT scale down during cooldown.
+        assert!(a.tick(&load(10.0)).is_empty());
+        assert!(a.tick(&load(10.0)).is_empty());
+        // Cooldown expired: now it may act.
+        assert_eq!(a.tick(&load(10.0)).len(), 1);
+    }
+
+    #[test]
+    fn respects_min_max() {
+        let mut a = scaler();
+        a.tick(&load(1e9));
+        assert_eq!(a.replicas("j"), 8); // max
+        for _ in 0..20 {
+            a.tick(&load(0.0));
+        }
+        assert_eq!(a.replicas("j"), 1); // min, never 0
+    }
+
+    #[test]
+    fn multiple_jobs_independent() {
+        let mut a = Autoscaler::new(AutoscalerConfig::default());
+        a.track("a", 1);
+        a.track("b", 1);
+        let loads =
+            HashMap::from([("a".to_string(), 1000.0), ("b".to_string(), 50.0)]);
+        let d = a.tick(&loads);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].job, "a");
+    }
+}

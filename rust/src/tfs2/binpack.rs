@@ -1,0 +1,176 @@
+//! RAM-fit placement (§3.1: the Controller "estimates the RAM required
+//! to serve a given model and selects a serving job that has enough
+//! memory capacity").
+//!
+//! Primary policy: **best-fit** (tightest remaining capacity that
+//! fits) with a decreasing-size batch variant; **first-fit** is the
+//! baseline for experiment T7 (`benches/bench_binpack.rs`).
+
+/// A serving job's capacity view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bin {
+    pub id: String,
+    pub capacity: u64,
+    pub used: u64,
+}
+
+impl Bin {
+    pub fn new(id: impl Into<String>, capacity: u64) -> Self {
+        Bin { id: id.into(), capacity, used: 0 }
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity.saturating_sub(self.used)
+    }
+}
+
+/// Best-fit: the job whose remaining capacity is smallest but still
+/// fits. Returns the chosen bin index.
+pub fn best_fit(bins: &[Bin], size: u64) -> Option<usize> {
+    bins.iter()
+        .enumerate()
+        .filter(|(_, b)| b.free() >= size)
+        .min_by_key(|(_, b)| b.free())
+        .map(|(i, _)| i)
+}
+
+/// First-fit baseline: the first job that fits.
+pub fn first_fit(bins: &[Bin], size: u64) -> Option<usize> {
+    bins.iter().position(|b| b.free() >= size)
+}
+
+/// Place a batch of (item id, size) with best-fit-decreasing.
+/// Returns (item id → bin id) for placed items and the ids that did
+/// not fit anywhere.
+pub fn best_fit_decreasing(
+    bins: &mut [Bin],
+    items: &[(String, u64)],
+) -> (Vec<(String, String)>, Vec<String>) {
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(items[i].1));
+    let mut placed = Vec::new();
+    let mut failed = Vec::new();
+    for i in order {
+        let (id, size) = &items[i];
+        match best_fit(bins, *size) {
+            Some(b) => {
+                bins[b].used += size;
+                placed.push((id.clone(), bins[b].id.clone()));
+            }
+            None => failed.push(id.clone()),
+        }
+    }
+    (placed, failed)
+}
+
+/// Aggregate utilization of used bins (placed volume / capacity of
+/// bins that hold at least one item).
+pub fn utilization(bins: &[Bin]) -> f64 {
+    let (used, cap) = bins
+        .iter()
+        .filter(|b| b.used > 0)
+        .fold((0u64, 0u64), |(u, c), b| (u + b.used, c + b.capacity));
+    if cap == 0 {
+        0.0
+    } else {
+        used as f64 / cap as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    fn bins(caps: &[u64]) -> Vec<Bin> {
+        caps.iter()
+            .enumerate()
+            .map(|(i, &c)| Bin::new(format!("job-{i}"), c))
+            .collect()
+    }
+
+    #[test]
+    fn best_fit_picks_tightest() {
+        let b = bins(&[100, 50, 80]);
+        assert_eq!(best_fit(&b, 40), Some(1)); // 50 is tightest fit
+        assert_eq!(best_fit(&b, 60), Some(2));
+        assert_eq!(best_fit(&b, 90), Some(0));
+        assert_eq!(best_fit(&b, 200), None);
+    }
+
+    #[test]
+    fn first_fit_picks_first() {
+        let b = bins(&[100, 50, 80]);
+        assert_eq!(first_fit(&b, 40), Some(0));
+    }
+
+    #[test]
+    fn bfd_places_all_when_space_exists() {
+        let mut b = bins(&[100, 100]);
+        let items: Vec<(String, u64)> =
+            [60u64, 60, 40, 40].iter().enumerate().map(|(i, &s)| (format!("m{i}"), s)).collect();
+        let (placed, failed) = best_fit_decreasing(&mut b, &items);
+        // 60+40 in each bin: BFD succeeds where naive order can fail.
+        assert_eq!(placed.len(), 4);
+        assert!(failed.is_empty());
+        assert!(b.iter().all(|bin| bin.used == 100));
+        assert_eq!(utilization(&b), 1.0);
+    }
+
+    #[test]
+    fn bfd_reports_misfits() {
+        let mut b = bins(&[50]);
+        let items = vec![("big".to_string(), 80u64), ("ok".to_string(), 30)];
+        let (placed, failed) = best_fit_decreasing(&mut b, &items);
+        assert_eq!(placed, vec![("ok".to_string(), "job-0".to_string())]);
+        assert_eq!(failed, vec!["big".to_string()]);
+    }
+
+    #[test]
+    fn capacity_never_exceeded_property() {
+        forall::<(u64, Vec<u64>), _>("binpack respects capacity", |(seed, sizes)| {
+            let mut rng = Rng::new(*seed);
+            let mut b: Vec<Bin> = (0..rng.range(1, 6))
+                .map(|i| Bin::new(format!("j{i}"), rng.next_below(1000) + 1))
+                .collect();
+            let items: Vec<(String, u64)> = sizes
+                .iter()
+                .take(20)
+                .enumerate()
+                .map(|(i, s)| (format!("m{i}"), s % 500))
+                .collect();
+            let (placed, failed) = best_fit_decreasing(&mut b, &items);
+            placed.len() + failed.len() == items.len()
+                && b.iter().all(|bin| bin.used <= bin.capacity)
+        });
+    }
+
+    #[test]
+    fn bfd_beats_or_matches_first_fit_on_fragmentation() {
+        // Classic case: first-fit in arrival order wastes space that
+        // best-fit-decreasing recovers.
+        let items: Vec<(String, u64)> = [35u64, 60, 35, 60, 30, 40]
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| (format!("m{i}"), s))
+            .collect();
+        let mut bfd_bins = bins(&[100, 100, 100]);
+        let (bfd_placed, bfd_failed) = best_fit_decreasing(&mut bfd_bins, &items);
+        assert!(bfd_failed.is_empty());
+        assert_eq!(bfd_placed.len(), 6);
+
+        // First-fit in arrival order.
+        let mut ff_bins = bins(&[100, 100, 100]);
+        let mut ff_failed = 0;
+        for (_, size) in &items {
+            match first_fit(&ff_bins, *size) {
+                Some(i) => ff_bins[i].used += size,
+                None => ff_failed += 1,
+            }
+        }
+        let bins_used_bfd = bfd_bins.iter().filter(|b| b.used > 0).count();
+        let bins_used_ff = ff_bins.iter().filter(|b| b.used > 0).count() + ff_failed;
+        assert!(bins_used_bfd <= bins_used_ff);
+    }
+}

@@ -1,0 +1,200 @@
+//! In-process TFS² cluster simulation: each "serving job" is a real
+//! [`ModelServer`] listening on a loopback port, so the Controller /
+//! Synchronizer / Router stack exercises real sockets end to end
+//! (substituting for Borg jobs across datacenters — see DESIGN.md).
+
+use crate::server::builder::ModelServer;
+use crate::server::config::ServerConfig;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One serving job (possibly with scaled-out replicas).
+pub struct ClusterJob {
+    pub id: String,
+    pub capacity_bytes: u64,
+    /// Primary + replicas; all serve the same assignments.
+    pub servers: Vec<Arc<ModelServer>>,
+}
+
+impl ClusterJob {
+    pub fn addr(&self) -> String {
+        self.servers[0].addr().to_string()
+    }
+
+    pub fn replica_addrs(&self) -> Vec<String> {
+        self.servers.iter().map(|s| s.addr().to_string()).collect()
+    }
+}
+
+pub struct Cluster {
+    pub artifacts_root: PathBuf,
+    jobs: Mutex<HashMap<String, ClusterJob>>,
+}
+
+fn empty_job_config(artifacts_root: &PathBuf) -> ServerConfig {
+    ServerConfig {
+        port: 0,
+        artifacts_root: artifacts_root.clone(),
+        // Jobs get models only via SetAspired (the RPC source);
+        // fast polling so new versions appear promptly.
+        poll_interval: Some(Duration::from_millis(50)),
+        availability_preserving: true,
+        load_threads: 2,
+        ram_capacity_bytes: 0,
+        models: Vec::new(),
+    }
+}
+
+impl Cluster {
+    /// Start `n` empty serving jobs with the given RAM capacity each.
+    pub fn start(n: usize, capacity_bytes: u64, artifacts_root: PathBuf) -> Result<Cluster> {
+        let mut jobs = HashMap::new();
+        for i in 0..n {
+            let id = format!("job-{i}");
+            let server = ModelServer::start(empty_job_config(&artifacts_root))?;
+            jobs.insert(
+                id.clone(),
+                ClusterJob { id, capacity_bytes, servers: vec![server] },
+            );
+        }
+        Ok(Cluster { artifacts_root, jobs: Mutex::new(jobs) })
+    }
+
+    /// Job ids + primary addresses (for Controller registration).
+    pub fn jobs(&self) -> Vec<(String, String, u64)> {
+        let mut out: Vec<(String, String, u64)> = self
+            .jobs
+            .lock()
+            .unwrap()
+            .values()
+            .map(|j| (j.id.clone(), j.addr(), j.capacity_bytes))
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// All replica addresses of a job (for hedged routing).
+    pub fn replica_addrs(&self, job: &str) -> Vec<String> {
+        self.jobs
+            .lock()
+            .unwrap()
+            .get(job)
+            .map(|j| j.replica_addrs())
+            .unwrap_or_default()
+    }
+
+    /// Apply an autoscaler decision: grow or shrink a job's replicas.
+    /// New replicas start empty; the Synchronizer's next pass loads
+    /// them (callers should re-sync after scaling).
+    pub fn scale_to(&self, job: &str, replicas: usize) -> Result<()> {
+        let mut jobs = self.jobs.lock().unwrap();
+        let j = jobs
+            .get_mut(job)
+            .ok_or_else(|| anyhow::anyhow!("unknown job '{job}'"))?;
+        while j.servers.len() < replicas.max(1) {
+            j.servers
+                .push(ModelServer::start(empty_job_config(&self.artifacts_root))?);
+        }
+        while j.servers.len() > replicas.max(1) {
+            if let Some(s) = j.servers.pop() {
+                s.stop();
+            }
+        }
+        Ok(())
+    }
+
+    /// Push the same aspired state to every replica of a job (the
+    /// Synchronizer handles the primary; this covers scale-outs).
+    pub fn sync_replicas(
+        &self,
+        pool: &crate::rpc::client::ClientPool,
+        job: &str,
+        models: &[(String, String, Vec<u64>)],
+    ) -> Result<()> {
+        for addr in self.replica_addrs(job) {
+            for (model, _base, versions) in models {
+                pool.call(
+                    &addr,
+                    &crate::rpc::proto::Request::SetAspired {
+                        model: model.clone(),
+                        versions: versions.clone(),
+                    },
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stop(&self) {
+        for job in self.jobs.lock().unwrap().values() {
+            for s in &job.servers {
+                s.stop();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{artifacts_available, default_artifacts_root};
+
+    #[test]
+    fn cluster_starts_and_lists_jobs() {
+        let cluster = Cluster::start(3, 1 << 30, default_artifacts_root()).unwrap();
+        let jobs = cluster.jobs();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].0, "job-0");
+        assert!(jobs.iter().all(|(_, addr, _)| addr.contains(':')));
+        cluster.stop();
+    }
+
+    #[test]
+    fn scaling_changes_replica_count() {
+        let cluster = Cluster::start(1, 1 << 30, default_artifacts_root()).unwrap();
+        assert_eq!(cluster.replica_addrs("job-0").len(), 1);
+        cluster.scale_to("job-0", 3).unwrap();
+        assert_eq!(cluster.replica_addrs("job-0").len(), 3);
+        cluster.scale_to("job-0", 1).unwrap();
+        assert_eq!(cluster.replica_addrs("job-0").len(), 1);
+        assert!(cluster.scale_to("nope", 2).is_err());
+        cluster.stop();
+    }
+
+    #[test]
+    fn jobs_accept_rpc_assignments() {
+        if !artifacts_available() {
+            return;
+        }
+        let cluster = Cluster::start(1, 1 << 30, default_artifacts_root()).unwrap();
+        let pool = crate::rpc::client::ClientPool::new();
+        cluster
+            .sync_replicas(
+                &pool,
+                "job-0",
+                &[("toy_table".into(), String::new(), vec![1])],
+            )
+            .unwrap();
+        // The job should load the table within a few poll cycles.
+        let addr = cluster.replica_addrs("job-0")[0].clone();
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        loop {
+            if let Ok(crate::rpc::proto::Response::Lookup { values: Some(v) }) = pool.call(
+                &addr,
+                &crate::rpc::proto::Request::Lookup {
+                    table: "toy_table".into(),
+                    key: "3".into(),
+                },
+            ) {
+                assert_eq!(v, vec![3.0, 2.0]);
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "table never loaded");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        cluster.stop();
+    }
+}

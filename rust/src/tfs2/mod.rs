@@ -1,0 +1,28 @@
+//! TFS² — the hosted model-serving service (paper §3.1, Figure 2).
+//!
+//! "Users issue high-level commands such as 'add model', 'remove
+//! model', and 'add model version'. The TFS² infrastructure takes care
+//! of the rest, including assigning each model to one of a suite of
+//! serving jobs based on resource fit."
+//!
+//! * [`store`] — the Spanner stand-in: durable (WAL + snapshot),
+//!   transactional, leader + simulated replicas.
+//! * [`binpack`] — RAM-estimate bin-packing (best-fit-decreasing, with
+//!   a first-fit baseline for experiment T7).
+//! * [`controller`] — add/remove model & version, canary/rollback,
+//!   placement; all state transactional in the store.
+//! * [`synchronizer`] — per-DC reconciler: pushes aspired versions to
+//!   serving jobs over RPC, collects load status, publishes the routing
+//!   table.
+//! * [`router`] — forwards inference requests to the right job, with
+//!   hedged backup requests (§3.1).
+//! * [`autoscaler`] — reactive replica scaling on per-job load.
+//! * [`cluster`] — in-process multi-job cluster over real sockets.
+
+pub mod autoscaler;
+pub mod binpack;
+pub mod cluster;
+pub mod controller;
+pub mod router;
+pub mod store;
+pub mod synchronizer;

@@ -1,0 +1,175 @@
+//! The TFS² Router (§3.1): forwards inference RPCs to whichever serving
+//! job holds the model, "using hedged backup requests to mitigate
+//! latency spikes from transient server issues or inter-request or
+//! -model interference".
+
+use crate::rpc::hedged::HedgedClient;
+use crate::rpc::proto::{Request, Response};
+use crate::util::metrics::Registry;
+use crate::util::rcu::Rcu;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Routing table: model → replica addresses (primary rotation applied
+/// per request).
+type Table = HashMap<String, Vec<String>>;
+
+pub struct Router {
+    /// RCU: the table is read per request, replaced by the Synchronizer.
+    table: Rcu<Table>,
+    hedged: HedgedClient,
+    rr: AtomicUsize,
+    pub registry: Arc<Registry>,
+}
+
+impl Router {
+    pub fn new(hedge_delay: Duration) -> Arc<Self> {
+        Arc::new(Router {
+            table: Rcu::new(Table::new()),
+            hedged: HedgedClient::new(
+                Arc::new(crate::rpc::client::ClientPool::new()),
+                hedge_delay,
+            ),
+            rr: AtomicUsize::new(0),
+            registry: Registry::new(),
+        })
+    }
+
+    /// Install a new routing table (from [`super::synchronizer`]).
+    pub fn update_table(&self, entries: Vec<(String, Vec<String>)>) {
+        self.table.update(entries.into_iter().collect());
+    }
+
+    /// Replicas for a model, rotated so load spreads round-robin.
+    fn replicas_for(&self, model: &str) -> Result<Vec<String>> {
+        let guard = self.table.read();
+        let replicas = guard
+            .get(model)
+            .filter(|r| !r.is_empty())
+            .ok_or_else(|| anyhow!("model '{model}' not loaded anywhere"))?;
+        let n = replicas.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        Ok((0..n).map(|i| replicas[(start + i) % n].clone()).collect())
+    }
+
+    /// Route one inference request. The model name is extracted from
+    /// the request; admin requests are rejected (they go through the
+    /// Controller, not the data plane).
+    pub fn route(&self, req: &Request) -> Result<Response> {
+        let model = match req {
+            Request::Predict { model, .. }
+            | Request::Classify { model, .. }
+            | Request::Regress { model, .. } => model.clone(),
+            Request::Lookup { table, .. } => table.clone(),
+            _ => return Err(anyhow!("router only forwards inference requests")),
+        };
+        let t0 = std::time::Instant::now();
+        let replicas = self.replicas_for(&model)?;
+        let result = self.hedged.call(&replicas, req);
+        self.registry.counter("router.requests").inc();
+        if result.is_err() {
+            self.registry.counter("router.errors").inc();
+        }
+        self.registry
+            .histogram("router.latency_ns")
+            .record_duration(t0.elapsed());
+        result
+    }
+
+    pub fn hedge_rate(&self) -> f64 {
+        self.hedged.hedge_rate()
+    }
+
+    /// Models currently routable.
+    pub fn models(&self) -> Vec<String> {
+        let mut m: Vec<String> = self.table.read().keys().cloned().collect();
+        m.sort();
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::server::RpcServer;
+    use std::sync::atomic::AtomicU64;
+
+    fn counting_job() -> (Arc<RpcServer>, Arc<AtomicU64>) {
+        let count = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&count);
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(move |req| match req {
+                Request::Regress { .. } => {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    Response::Regress { model_version: 1, values: vec![0.0] }
+                }
+                _ => Response::Error { message: "no".into() },
+            }),
+        )
+        .unwrap();
+        (server, count)
+    }
+
+    fn regress_req() -> Request {
+        Request::Regress {
+            model: "m".into(),
+            version: None,
+            examples: vec![crate::inference::example::Example::new()],
+        }
+    }
+
+    #[test]
+    fn routes_to_loaded_job() {
+        let (job, count) = counting_job();
+        let router = Router::new(Duration::from_millis(100));
+        router.update_table(vec![("m".into(), vec![job.addr().to_string()])]);
+        let resp = router.route(&regress_req()).unwrap();
+        assert!(matches!(resp, Response::Regress { .. }));
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+        assert_eq!(router.models(), vec!["m".to_string()]);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let router = Router::new(Duration::from_millis(10));
+        let err = router.route(&regress_req()).unwrap_err();
+        assert!(err.to_string().contains("not loaded"), "{err}");
+    }
+
+    #[test]
+    fn round_robin_spreads_over_replicas() {
+        let (a, ca) = counting_job();
+        let (b, cb) = counting_job();
+        let router = Router::new(Duration::from_millis(200));
+        router.update_table(vec![(
+            "m".into(),
+            vec![a.addr().to_string(), b.addr().to_string()],
+        )]);
+        for _ in 0..10 {
+            router.route(&regress_req()).unwrap();
+        }
+        let (na, nb) = (ca.load(Ordering::SeqCst), cb.load(Ordering::SeqCst));
+        assert_eq!(na + nb, 10);
+        assert!(na >= 4 && nb >= 4, "not balanced: {na}/{nb}");
+    }
+
+    #[test]
+    fn admin_requests_rejected() {
+        let router = Router::new(Duration::from_millis(10));
+        assert!(router.route(&Request::Status).is_err());
+    }
+
+    #[test]
+    fn table_update_swaps_atomically() {
+        let (a, _) = counting_job();
+        let router = Router::new(Duration::from_millis(100));
+        router.update_table(vec![("m".into(), vec![a.addr().to_string()])]);
+        assert!(router.route(&regress_req()).is_ok());
+        router.update_table(vec![]); // model withdrawn
+        assert!(router.route(&regress_req()).is_err());
+    }
+}

@@ -1,0 +1,465 @@
+//! The Controller's state store — our Spanner stand-in (§3.1: "The
+//! Controller keeps all its state in Spanner, a globally-replicated
+//! database system, and manages it transactionally").
+//!
+//! What the Controller actually needs from Spanner: durable,
+//! transactional (serializable) metadata with replicated reads. We
+//! provide exactly that, scaled to one process:
+//!
+//! * **Serializable transactions** — writers run one at a time under a
+//!   commit lock over a `BTreeMap<String, Json>`, with buffered writes
+//!   applied atomically.
+//! * **Durability** — a write-ahead log (JSON lines) fsynced per commit
+//!   plus snapshot compaction; `open` recovers snapshot + WAL replay.
+//! * **Replication (simulated)** — N follower maps apply the log
+//!   asynchronously; follower reads can be stale until `tick` runs,
+//!   modelling cross-DC lag for the Synchronizer tests.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+type Map = BTreeMap<String, Json>;
+
+/// One committed mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    Put(String, Json),
+    Delete(String),
+}
+
+impl Op {
+    fn to_json(&self) -> Json {
+        match self {
+            Op::Put(k, v) => Json::obj(vec![("put", Json::str(k.clone())), ("v", v.clone())]),
+            Op::Delete(k) => Json::obj(vec![("del", Json::str(k.clone()))]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Op> {
+        if let Some(k) = j.get("put").and_then(|v| v.as_str()) {
+            Ok(Op::Put(
+                k.to_string(),
+                j.get("v").cloned().ok_or_else(|| anyhow!("put without value"))?,
+            ))
+        } else if let Some(k) = j.get("del").and_then(|v| v.as_str()) {
+            Ok(Op::Delete(k.to_string()))
+        } else {
+            Err(anyhow!("bad wal op: {j}"))
+        }
+    }
+
+    fn apply(&self, map: &mut Map) {
+        match self {
+            Op::Put(k, v) => {
+                map.insert(k.clone(), v.clone());
+            }
+            Op::Delete(k) => {
+                map.remove(k);
+            }
+        }
+    }
+}
+
+struct Follower {
+    map: Map,
+    /// Log index this follower has applied up to.
+    applied: usize,
+}
+
+struct Inner {
+    leader: Map,
+    /// Committed ops since the snapshot (the in-memory tail of the WAL).
+    log: Vec<Op>,
+    followers: Vec<Follower>,
+    commits: u64,
+}
+
+/// The store handle (leader).
+pub struct Store {
+    inner: Mutex<Inner>,
+    /// Commit lock: one transaction at a time = serializable.
+    commit: Mutex<()>,
+    wal_path: Option<PathBuf>,
+    wal: Mutex<Option<std::fs::File>>,
+}
+
+/// Buffered transaction view.
+pub struct Txn<'a> {
+    base: &'a Map,
+    writes: Vec<Op>,
+}
+
+impl<'a> Txn<'a> {
+    pub fn get(&self, key: &str) -> Option<Json> {
+        // Read-your-writes within the txn.
+        for op in self.writes.iter().rev() {
+            match op {
+                Op::Put(k, v) if k == key => return Some(v.clone()),
+                Op::Delete(k) if k == key => return None,
+                _ => {}
+            }
+        }
+        self.base.get(key).cloned()
+    }
+
+    pub fn put(&mut self, key: &str, value: Json) {
+        self.writes.push(Op::Put(key.to_string(), value));
+    }
+
+    pub fn delete(&mut self, key: &str) {
+        self.writes.push(Op::Delete(key.to_string()));
+    }
+
+    pub fn scan_prefix(&self, prefix: &str) -> Vec<(String, Json)> {
+        let mut out: BTreeMap<String, Json> = self
+            .base
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        for op in &self.writes {
+            match op {
+                Op::Put(k, v) if k.starts_with(prefix) => {
+                    out.insert(k.clone(), v.clone());
+                }
+                Op::Delete(k) => {
+                    out.remove(k);
+                }
+                _ => {}
+            }
+        }
+        out.into_iter().collect()
+    }
+}
+
+impl Store {
+    /// In-memory store with `followers` simulated replicas.
+    pub fn in_memory(followers: usize) -> Arc<Store> {
+        Arc::new(Store {
+            inner: Mutex::new(Inner {
+                leader: Map::new(),
+                log: Vec::new(),
+                followers: (0..followers)
+                    .map(|_| Follower { map: Map::new(), applied: 0 })
+                    .collect(),
+                commits: 0,
+            }),
+            commit: Mutex::new(()),
+            wal_path: None,
+            wal: Mutex::new(None),
+        })
+    }
+
+    /// Durable store: recovers `<path>.snap` + `<path>.wal` if present.
+    pub fn open(path: &PathBuf, followers: usize) -> Result<Arc<Store>> {
+        let snap_path = path.with_extension("snap");
+        let wal_path = path.with_extension("wal");
+        let mut leader = Map::new();
+        if snap_path.exists() {
+            let json = Json::parse_file(&snap_path).context("reading snapshot")?;
+            if let Some(obj) = json.as_obj() {
+                leader = obj.clone();
+            }
+        }
+        if wal_path.exists() {
+            let text = std::fs::read_to_string(&wal_path)?;
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                let op = Op::from_json(&Json::parse(line).context("parsing wal line")?)?;
+                op.apply(&mut leader);
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&wal_path)?;
+        Ok(Arc::new(Store {
+            inner: Mutex::new(Inner {
+                followers: (0..followers)
+                    .map(|_| Follower { map: leader.clone(), applied: 0 })
+                    .collect(),
+                leader,
+                log: Vec::new(),
+                commits: 0,
+            }),
+            commit: Mutex::new(()),
+            wal_path: Some(wal_path),
+            wal: Mutex::new(Some(file)),
+        }))
+    }
+
+    /// Run a serializable transaction. The closure may read its own
+    /// writes; returning Err aborts with no effects.
+    pub fn txn<T, F>(&self, f: F) -> Result<T>
+    where
+        F: FnOnce(&mut Txn<'_>) -> Result<T>,
+    {
+        let _commit = self.commit.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap();
+        // Split borrow: Txn borrows the leader map immutably.
+        let base_ptr: *const Map = &inner.leader;
+        let mut txn = Txn { base: unsafe { &*base_ptr }, writes: Vec::new() };
+        let result = f(&mut txn)?;
+        let writes = txn.writes;
+        // Commit: WAL first (durability), then apply.
+        if let Some(file) = self.wal.lock().unwrap().as_mut() {
+            for op in &writes {
+                writeln!(file, "{}", op.to_json()).context("wal append")?;
+            }
+            file.sync_data().context("wal fsync")?;
+        }
+        for op in &writes {
+            op.apply(&mut inner.leader);
+        }
+        inner.log.extend(writes);
+        inner.commits += 1;
+        Ok(result)
+    }
+
+    /// Leader read (serializable with respect to transactions).
+    pub fn get(&self, key: &str) -> Option<Json> {
+        self.inner.lock().unwrap().leader.get(key).cloned()
+    }
+
+    /// Leader prefix scan.
+    pub fn scan_prefix(&self, prefix: &str) -> Vec<(String, Json)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .leader
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// Convenience CAS: put `value` iff current value of `key` == `expect`.
+    pub fn compare_and_set(&self, key: &str, expect: Option<&Json>, value: Json) -> Result<bool> {
+        self.txn(|t| {
+            let cur = t.get(key);
+            if cur.as_ref() == expect {
+                t.put(key, value.clone());
+                Ok(true)
+            } else {
+                Ok(false)
+            }
+        })
+    }
+
+    /// Possibly-stale follower read.
+    pub fn get_follower(&self, follower: usize, key: &str) -> Option<Json> {
+        self.inner.lock().unwrap().followers[follower].map.get(key).cloned()
+    }
+
+    /// Advance replication: each follower applies up to `batch` log ops.
+    pub fn tick_replication(&self, batch: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        let log_ptr: *const Vec<Op> = &inner.log;
+        let log = unsafe { &*log_ptr };
+        for f in &mut inner.followers {
+            let end = (f.applied + batch).min(log.len());
+            for op in &log[f.applied..end] {
+                op.apply(&mut f.map);
+            }
+            f.applied = end;
+        }
+    }
+
+    /// Write a snapshot and truncate the WAL (compaction).
+    pub fn checkpoint(&self) -> Result<()> {
+        let _commit = self.commit.lock().unwrap();
+        let inner = self.inner.lock().unwrap();
+        if let Some(wal_path) = &self.wal_path {
+            let snap_path = wal_path.with_extension("snap");
+            let snapshot = Json::Obj(inner.leader.clone());
+            std::fs::write(&snap_path, snapshot.to_string())?;
+            // Truncate the WAL: snapshot now covers it.
+            let file = std::fs::OpenOptions::new()
+                .write(true)
+                .truncate(true)
+                .open(wal_path)?;
+            *self.wal.lock().unwrap() = Some(
+                std::fs::OpenOptions::new().append(true).open(wal_path)?,
+            );
+            drop(file);
+        }
+        Ok(())
+    }
+
+    pub fn commits(&self) -> u64 {
+        self.inner.lock().unwrap().commits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ts-store-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d.join("store")
+    }
+
+    #[test]
+    fn txn_read_write() {
+        let s = Store::in_memory(0);
+        s.txn(|t| {
+            t.put("a", Json::num(1.0));
+            t.put("b", Json::str("x"));
+            assert_eq!(t.get("a"), Some(Json::num(1.0))); // read-your-writes
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(s.get("a"), Some(Json::num(1.0)));
+        assert_eq!(s.get("missing"), None);
+    }
+
+    #[test]
+    fn aborted_txn_has_no_effect() {
+        let s = Store::in_memory(0);
+        let r: Result<()> = s.txn(|t| {
+            t.put("a", Json::num(1.0));
+            anyhow::bail!("abort");
+        });
+        assert!(r.is_err());
+        assert_eq!(s.get("a"), None);
+    }
+
+    #[test]
+    fn delete_and_scan() {
+        let s = Store::in_memory(0);
+        s.txn(|t| {
+            t.put("model/a", Json::num(1.0));
+            t.put("model/b", Json::num(2.0));
+            t.put("job/x", Json::num(3.0));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(s.scan_prefix("model/").len(), 2);
+        s.txn(|t| {
+            t.delete("model/a");
+            assert_eq!(t.scan_prefix("model/").len(), 1); // txn sees delete
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(s.scan_prefix("model/").len(), 1);
+    }
+
+    #[test]
+    fn compare_and_set() {
+        let s = Store::in_memory(0);
+        assert!(s.compare_and_set("k", None, Json::num(1.0)).unwrap());
+        assert!(!s.compare_and_set("k", None, Json::num(2.0)).unwrap());
+        assert!(s
+            .compare_and_set("k", Some(&Json::num(1.0)), Json::num(2.0))
+            .unwrap());
+        assert_eq!(s.get("k"), Some(Json::num(2.0)));
+    }
+
+    #[test]
+    fn durability_across_reopen() {
+        let path = tmp("durable");
+        {
+            let s = Store::open(&path, 0).unwrap();
+            s.txn(|t| {
+                t.put("model/a", Json::obj(vec![("v", Json::num(3.0))]));
+                Ok(())
+            })
+            .unwrap();
+            s.txn(|t| {
+                t.delete("model/a");
+                t.put("model/b", Json::num(7.0));
+                Ok(())
+            })
+            .unwrap();
+        }
+        let s = Store::open(&path, 0).unwrap();
+        assert_eq!(s.get("model/a"), None);
+        assert_eq!(s.get("model/b"), Some(Json::num(7.0)));
+    }
+
+    #[test]
+    fn checkpoint_compacts_and_recovers() {
+        let path = tmp("ckpt");
+        {
+            let s = Store::open(&path, 0).unwrap();
+            for i in 0..50 {
+                s.txn(|t| {
+                    t.put(&format!("k{i}"), Json::num(i as f64));
+                    Ok(())
+                })
+                .unwrap();
+            }
+            s.checkpoint().unwrap();
+            // Post-checkpoint writes land in the fresh WAL.
+            s.txn(|t| {
+                t.put("after", Json::Bool(true));
+                Ok(())
+            })
+            .unwrap();
+            let wal_len = std::fs::read_to_string(path.with_extension("wal"))
+                .unwrap()
+                .lines()
+                .count();
+            assert_eq!(wal_len, 1, "wal should be compacted");
+        }
+        let s = Store::open(&path, 0).unwrap();
+        assert_eq!(s.get("k42"), Some(Json::num(42.0)));
+        assert_eq!(s.get("after"), Some(Json::Bool(true)));
+    }
+
+    #[test]
+    fn followers_lag_until_tick() {
+        let s = Store::in_memory(2);
+        s.txn(|t| {
+            t.put("a", Json::num(1.0));
+            Ok(())
+        })
+        .unwrap();
+        // Followers are stale (replication hasn't run).
+        assert_eq!(s.get_follower(0, "a"), None);
+        s.tick_replication(10);
+        assert_eq!(s.get_follower(0, "a"), Some(Json::num(1.0)));
+        assert_eq!(s.get_follower(1, "a"), Some(Json::num(1.0)));
+    }
+
+    #[test]
+    fn concurrent_txns_serialize() {
+        let s = Store::in_memory(0);
+        s.txn(|t| {
+            t.put("counter", Json::num(0.0));
+            Ok(())
+        })
+        .unwrap();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        s.txn(|t| {
+                            let cur = t.get("counter").unwrap().as_f64().unwrap();
+                            t.put("counter", Json::num(cur + 1.0));
+                            Ok(())
+                        })
+                        .unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Serializable: no lost updates.
+        assert_eq!(s.get("counter"), Some(Json::num(400.0)));
+        assert_eq!(s.commits(), 401);
+    }
+}

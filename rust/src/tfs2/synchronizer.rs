@@ -1,0 +1,223 @@
+//! The TFS² Synchronizer (§3.1): "models are disseminated to a
+//! Synchronizer job in each data center… The Synchronizer instructs
+//! serving jobs which models/versions to keep loaded at a given time,
+//! via a special RPC-based Source library component… and reports back
+//! status. The Synchronizer informs a Router job which models are
+//! successfully loaded in which serving jobs."
+
+use super::controller::JobAssignment;
+use super::store::Store;
+use crate::rpc::client::ClientPool;
+use crate::rpc::proto::{Request, Response};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Loaded-state record published for the Router:
+/// `loaded/<model>` = array of job addrs with that model ready.
+pub struct Synchronizer {
+    store: Arc<Store>,
+    pool: Arc<ClientPool>,
+}
+
+/// Result of one reconciliation pass.
+#[derive(Debug, Default, PartialEq)]
+pub struct SyncReport {
+    /// (job, model) pairs instructed this pass.
+    pub instructed: usize,
+    /// (model, job addr) pairs observed fully ready.
+    pub ready: usize,
+    /// Jobs that could not be reached.
+    pub unreachable: Vec<String>,
+}
+
+impl Synchronizer {
+    pub fn new(store: Arc<Store>, pool: Arc<ClientPool>) -> Self {
+        Synchronizer { store, pool }
+    }
+
+    /// One pass: push desired versions to every job (idempotent, like
+    /// the aspired-versions API it drives), poll status, publish the
+    /// routing table.
+    pub fn sync_once(&self, desired: &[JobAssignment]) -> Result<SyncReport> {
+        let mut report = SyncReport::default();
+        let mut loaded: Vec<(String, String)> = Vec::new(); // (model, addr)
+
+        for job in desired {
+            if job.addr.is_empty() {
+                continue;
+            }
+            let mut job_ok = true;
+            for (model, _base, versions) in &job.models {
+                let req = Request::SetAspired {
+                    model: model.clone(),
+                    versions: versions.clone(),
+                };
+                match self.pool.call(&job.addr, &req) {
+                    Ok(Response::Ack) => report.instructed += 1,
+                    Ok(other) => {
+                        crate::log_warn!("{}: unexpected {other:?}", job.job);
+                        job_ok = false;
+                    }
+                    Err(e) => {
+                        crate::log_warn!("{}: unreachable: {e}", job.job);
+                        job_ok = false;
+                        break;
+                    }
+                }
+            }
+            if !job_ok {
+                report.unreachable.push(job.job.clone());
+                continue;
+            }
+            // Poll status: a model counts as loaded when every desired
+            // version reports ready.
+            for (model, _base, versions) in &job.models {
+                let status = self
+                    .pool
+                    .call(&job.addr, &Request::ModelStatus { model: model.clone() });
+                if let Ok(Response::ModelStatus { versions: states }) = status {
+                    let all_ready = versions.iter().all(|v| {
+                        states.iter().any(|(sv, st)| sv == v && st == "ready")
+                    });
+                    if all_ready && !versions.is_empty() {
+                        loaded.push((model.clone(), job.addr.clone()));
+                        report.ready += 1;
+                    }
+                }
+            }
+        }
+
+        // Publish the routing table transactionally.
+        self.store.txn(|t| {
+            // Clear stale entries for models we manage.
+            for (key, _) in t.scan_prefix("loaded/") {
+                t.delete(&key);
+            }
+            let mut by_model: std::collections::BTreeMap<String, Vec<Json>> =
+                Default::default();
+            for (model, addr) in &loaded {
+                by_model
+                    .entry(model.clone())
+                    .or_default()
+                    .push(Json::str(addr.clone()));
+            }
+            for (model, addrs) in by_model {
+                t.put(&format!("loaded/{model}"), Json::Arr(addrs));
+            }
+            Ok(())
+        })?;
+        Ok(report)
+    }
+
+    /// The routing table the Router consumes.
+    pub fn routing_table(&self) -> Vec<(String, Vec<String>)> {
+        self.store
+            .scan_prefix("loaded/")
+            .into_iter()
+            .map(|(k, v)| {
+                (
+                    k.trim_start_matches("loaded/").to_string(),
+                    v.as_arr()
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|x| x.as_str().map(str::to_string))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::server::RpcServer;
+    use std::sync::Mutex;
+
+    /// Fake serving job: acks SetAspired, reports everything ready.
+    fn fake_job(ready: bool) -> (Arc<RpcServer>, Arc<Mutex<Vec<(String, Vec<u64>)>>>) {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let seen2 = Arc::clone(&seen);
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(move |req| match req {
+                Request::SetAspired { model, versions } => {
+                    seen2.lock().unwrap().push((model, versions));
+                    Response::Ack
+                }
+                Request::ModelStatus { .. } => Response::ModelStatus {
+                    versions: if ready {
+                        vec![(1, "ready".into()), (2, "ready".into())]
+                    } else {
+                        vec![(1, "loading".into())]
+                    },
+                },
+                _ => Response::Error { message: "no".into() },
+            }),
+        )
+        .unwrap();
+        (server, seen)
+    }
+
+    fn assignment(addr: &str) -> Vec<JobAssignment> {
+        vec![JobAssignment {
+            job: "job-0".into(),
+            addr: addr.into(),
+            models: vec![("m".into(), "/m".into(), vec![1])],
+        }]
+    }
+
+    #[test]
+    fn instructs_and_publishes_ready_models() {
+        let (job, seen) = fake_job(true);
+        let store = Store::in_memory(0);
+        let sync = Synchronizer::new(Arc::clone(&store), Arc::new(ClientPool::new()));
+        let report = sync.sync_once(&assignment(&job.addr().to_string())).unwrap();
+        assert_eq!(report.instructed, 1);
+        assert_eq!(report.ready, 1);
+        assert!(report.unreachable.is_empty());
+        assert_eq!(seen.lock().unwrap().as_slice(), &[("m".to_string(), vec![1])]);
+        let table = sync.routing_table();
+        assert_eq!(table.len(), 1);
+        assert_eq!(table[0].0, "m");
+        assert_eq!(table[0].1, vec![job.addr().to_string()]);
+    }
+
+    #[test]
+    fn not_ready_models_stay_out_of_routing_table() {
+        let (job, _) = fake_job(false);
+        let store = Store::in_memory(0);
+        let sync = Synchronizer::new(store, Arc::new(ClientPool::new()));
+        let report = sync.sync_once(&assignment(&job.addr().to_string())).unwrap();
+        assert_eq!(report.ready, 0);
+        assert!(sync.routing_table().is_empty());
+    }
+
+    #[test]
+    fn unreachable_job_reported() {
+        let store = Store::in_memory(0);
+        let sync = Synchronizer::new(store, Arc::new(ClientPool::new()));
+        let report = sync.sync_once(&assignment("127.0.0.1:1")).unwrap();
+        assert_eq!(report.unreachable, vec!["job-0".to_string()]);
+        assert!(sync.routing_table().is_empty());
+    }
+
+    #[test]
+    fn stale_routing_entries_cleared() {
+        let (job, _) = fake_job(true);
+        let store = Store::in_memory(0);
+        store
+            .txn(|t| {
+                t.put("loaded/old_model", Json::Arr(vec![Json::str("dead:1")]));
+                Ok(())
+            })
+            .unwrap();
+        let sync = Synchronizer::new(store, Arc::new(ClientPool::new()));
+        sync.sync_once(&assignment(&job.addr().to_string())).unwrap();
+        let table = sync.routing_table();
+        assert!(table.iter().all(|(m, _)| m != "old_model"));
+    }
+}

@@ -1,0 +1,213 @@
+//! Tiny CLI flag parser (`--flag=value` / `--flag value` / `--bool`).
+//!
+//! clap is not in the offline crate set; this covers what the canonical
+//! binary, examples and benches need: typed flags with defaults, help
+//! text, and unknown-flag errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    help: String,
+    default: String,
+    is_bool: bool,
+}
+
+/// Declarative flag set.
+///
+/// ```no_run
+/// # use tensorserve::util::argparse::Flags;
+/// let mut f = Flags::new("demo", "a demo");
+/// f.flag("port", "8500", "listen port");
+/// f.bool_flag("verbose", "chatty output");
+/// let parsed = f.parse(vec!["--port=9000".into(), "--verbose".into()]).unwrap();
+/// assert_eq!(parsed.get_u64("port"), 9000);
+/// assert!(parsed.get_bool("verbose"));
+/// ```
+pub struct Flags {
+    program: String,
+    about: String,
+    specs: BTreeMap<String, FlagSpec>,
+}
+
+/// Parsed result: flag values + positional arguments.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Flags {
+    pub fn new(program: &str, about: &str) -> Self {
+        Flags { program: program.into(), about: about.into(), specs: BTreeMap::new() }
+    }
+
+    /// Declare a value flag with a default.
+    pub fn flag(&mut self, name: &str, default: &str, help: &str) -> &mut Self {
+        self.specs.insert(
+            name.to_string(),
+            FlagSpec { help: help.into(), default: default.into(), is_bool: false },
+        );
+        self
+    }
+
+    /// Declare a boolean flag (defaults to false).
+    pub fn bool_flag(&mut self, name: &str, help: &str) -> &mut Self {
+        self.specs.insert(
+            name.to_string(),
+            FlagSpec { help: help.into(), default: "false".into(), is_bool: true },
+        );
+        self
+    }
+
+    /// Usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nFlags:\n", self.program, self.about);
+        for (name, spec) in &self.specs {
+            s.push_str(&format!(
+                "  --{name}{}  {} (default: {})\n",
+                if spec.is_bool { "" } else { "=<value>" },
+                spec.help,
+                spec.default
+            ));
+        }
+        s
+    }
+
+    /// Parse argv (without the program name).
+    pub fn parse(&self, args: Vec<String>) -> Result<Parsed, String> {
+        let mut values: BTreeMap<String, String> =
+            self.specs.iter().map(|(k, v)| (k.clone(), v.default.clone())).collect();
+        let mut positional = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .get(&name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                let val = if spec.is_bool {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else {
+                    match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("flag --{name} needs a value"))?,
+                    }
+                };
+                values.insert(name, val);
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Parsed { values, positional })
+    }
+
+    /// Parse `std::env::args()`, printing usage and exiting on error.
+    pub fn parse_or_exit(&self) -> Parsed {
+        match self.parse(std::env::args().skip(1).collect()) {
+            Ok(p) => p,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag {name} not declared"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("flag --{name} is not an integer: {}", self.get(name)))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get_u64(name) as usize
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("flag --{name} is not a number: {}", self.get(name)))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), "true" | "1" | "yes")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags() -> Flags {
+        let mut f = Flags::new("t", "test");
+        f.flag("port", "8500", "port");
+        f.flag("name", "x", "name");
+        f.bool_flag("verbose", "verbose");
+        f
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults() {
+        let p = flags().parse(vec![]).unwrap();
+        assert_eq!(p.get_u64("port"), 8500);
+        assert!(!p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn inline_and_separate_values() {
+        let p = flags().parse(args(&["--port=9000", "--name", "abc"])).unwrap();
+        assert_eq!(p.get_u64("port"), 9000);
+        assert_eq!(p.get("name"), "abc");
+    }
+
+    #[test]
+    fn bool_flag_forms() {
+        let p = flags().parse(args(&["--verbose"])).unwrap();
+        assert!(p.get_bool("verbose"));
+        let p = flags().parse(args(&["--verbose=false"])).unwrap();
+        assert!(!p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let p = flags().parse(args(&["cmd", "--port=1", "extra"])).unwrap();
+        assert_eq!(p.positional, vec!["cmd", "extra"]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(flags().parse(args(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(flags().parse(args(&["--name"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = flags().parse(args(&["--help"])).unwrap_err();
+        assert!(err.contains("--port"));
+    }
+}

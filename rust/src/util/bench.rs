@@ -1,0 +1,122 @@
+//! Shared micro-benchmark harness for `benches/` (criterion is not in
+//! the offline crate set). Provides warmup+measure loops and aligned
+//! table output so every bench prints paper-style rows.
+
+use std::time::{Duration, Instant};
+
+/// Run `f` for ~`duration` after a warmup, returning (iterations, elapsed).
+pub fn measure<F: FnMut()>(warmup: Duration, duration: Duration, mut f: F) -> (u64, Duration) {
+    let w0 = Instant::now();
+    while w0.elapsed() < warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    while t0.elapsed() < duration {
+        f();
+        iters += 1;
+    }
+    (iters, t0.elapsed())
+}
+
+/// Nanoseconds per iteration from a `measure` result.
+pub fn ns_per_iter(iters: u64, elapsed: Duration) -> f64 {
+    elapsed.as_nanos() as f64 / iters.max(1) as f64
+}
+
+/// Aligned ASCII table, one per experiment.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Print the table (benches call this at the end of each section).
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("--"));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+/// Format a f64 with thousands separators (qps columns).
+pub fn fmt_count(x: f64) -> String {
+    let v = x.round() as i64;
+    let s = v.abs().to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    if v < 0 {
+        format!("-{out}")
+    } else {
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let (iters, elapsed) = measure(
+            Duration::from_millis(1),
+            Duration::from_millis(20),
+            || {
+                std::hint::black_box(1 + 1);
+            },
+        );
+        assert!(iters > 1000);
+        assert!(elapsed >= Duration::from_millis(20));
+        assert!(ns_per_iter(iters, elapsed) < 100_000.0);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new("t", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // just must not panic
+    }
+
+    #[test]
+    fn fmt_count_separators() {
+        assert_eq!(fmt_count(1234567.0), "1,234,567");
+        assert_eq!(fmt_count(999.0), "999");
+        assert_eq!(fmt_count(1000.0), "1,000");
+    }
+}

@@ -1,0 +1,235 @@
+//! quickcheck-lite: property testing with generation and shrinking.
+//!
+//! proptest is not in the offline crate set; this harness covers what
+//! the invariant tests need — random structured inputs, failure
+//! shrinking, deterministic seeds (`TS_CHECK_SEED`), case counts
+//! (`TS_CHECK_CASES`).
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Values generatable from randomness with a size hint, and shrinkable
+/// toward "smaller" counterexamples.
+pub trait Arbitrary: Sized + Clone + Debug {
+    fn arbitrary(g: &mut Rng, size: usize) -> Self;
+
+    /// Candidate smaller values (tried in order during shrinking).
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+macro_rules! impl_arbitrary_uint {
+    ($($t:ty),*) => {$(
+        impl Arbitrary for $t {
+            fn arbitrary(g: &mut Rng, size: usize) -> Self {
+                // Mix small values (edge-case rich) with the full range.
+                match g.next_below(4) {
+                    0 => (g.next_below(8)) as $t,
+                    1 => g.next_below((size.max(1) as u64).min(<$t>::MAX as u64) ) as $t,
+                    _ => (g.next_u64() & (<$t>::MAX as u64)) as $t,
+                }
+            }
+            fn shrink(&self) -> Vec<Self> {
+                let mut out = Vec::new();
+                if *self > 0 { out.push(0); }
+                if *self > 1 { out.push(self / 2); out.push(self - 1); }
+                out
+            }
+        }
+    )*};
+}
+
+impl_arbitrary_uint!(u8, u16, u32, u64, usize);
+
+impl Arbitrary for bool {
+    fn arbitrary(g: &mut Rng, _size: usize) -> Self {
+        g.next_below(2) == 1
+    }
+    fn shrink(&self) -> Vec<Self> {
+        if *self { vec![false] } else { vec![] }
+    }
+}
+
+impl Arbitrary for i64 {
+    fn arbitrary(g: &mut Rng, size: usize) -> Self {
+        let mag = u64::arbitrary(g, size) as i64 & i64::MAX;
+        if bool::arbitrary(g, size) { -mag } else { mag }
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 { out.push(0); out.push(self / 2); }
+        if *self < 0 { out.push(-self); }
+        out
+    }
+}
+
+impl Arbitrary for f64 {
+    fn arbitrary(g: &mut Rng, _size: usize) -> Self {
+        match g.next_below(5) {
+            0 => 0.0,
+            1 => 1.0,
+            2 => -1.0,
+            _ => (g.next_f64() - 0.5) * 2e6,
+        }
+    }
+    fn shrink(&self) -> Vec<Self> {
+        if *self != 0.0 { vec![0.0, self / 2.0] } else { vec![] }
+    }
+}
+
+impl<T: Arbitrary> Arbitrary for Vec<T> {
+    fn arbitrary(g: &mut Rng, size: usize) -> Self {
+        let len = g.next_below((size as u64).max(1)) as usize;
+        (0..len).map(|_| T::arbitrary(g, size)).collect()
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(Vec::new());
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+            // Shrink one element.
+            for (i, x) in self.iter().enumerate().take(4) {
+                for sx in x.shrink().into_iter().take(2) {
+                    let mut v = self.clone();
+                    v[i] = sx;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Arbitrary for String {
+    fn arbitrary(g: &mut Rng, size: usize) -> Self {
+        let len = g.next_below((size as u64).max(1).min(64)) as usize;
+        (0..len)
+            .map(|_| {
+                let c = g.next_below(96) as u8 + 32; // printable ascii
+                c as char
+            })
+            .collect()
+    }
+    fn shrink(&self) -> Vec<Self> {
+        if self.is_empty() {
+            vec![]
+        } else {
+            vec![String::new(), self[..self.len() / 2].to_string()]
+        }
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary> Arbitrary for (A, B) {
+    fn arbitrary(g: &mut Rng, size: usize) -> Self {
+        (A::arbitrary(g, size), B::arbitrary(g, size))
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary, C: Arbitrary> Arbitrary for (A, B, C) {
+    fn arbitrary(g: &mut Rng, size: usize) -> Self {
+        (A::arbitrary(g, size), B::arbitrary(g, size), C::arbitrary(g, size))
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Run `prop` against `cases` random inputs; on failure, shrink and panic
+/// with the minimal counterexample.
+pub fn forall<T: Arbitrary, F: Fn(&T) -> bool>(label: &str, prop: F) {
+    let cases = env_u64("TS_CHECK_CASES", 200);
+    let seed = env_u64("TS_CHECK_SEED", 0xC0FFEE);
+    let mut g = Rng::new(seed);
+    for case in 0..cases {
+        let size = (case as usize / 4 + 2).min(100);
+        let input = T::arbitrary(&mut g, size);
+        if !prop(&input) {
+            let minimal = shrink_failure(input, &prop);
+            panic!(
+                "property '{label}' failed (case {case}, seed {seed}).\n\
+                 minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_failure<T: Arbitrary, F: Fn(&T) -> bool>(mut failing: T, prop: &F) -> T {
+    // Greedy descent, bounded to avoid pathological shrink graphs.
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in failing.shrink() {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall::<(u32, u32), _>("add commutes", |(a, b)| {
+            a.wrapping_add(*b) == b.wrapping_add(*a)
+        });
+    }
+
+    #[test]
+    fn vec_reverse_involution() {
+        forall::<Vec<u16>, _>("reverse twice is identity", |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            w == *v
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            forall::<u64, _>("all values below 10", |x| *x < 10);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink should land on exactly 10.
+        assert!(msg.contains("minimal counterexample: 10"), "{msg}");
+    }
+
+    #[test]
+    fn string_generation_printable() {
+        forall::<String, _>("strings are printable ascii", |s| {
+            s.chars().all(|c| (' '..='\u{7f}').contains(&c))
+        });
+    }
+}

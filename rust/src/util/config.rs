@@ -1,0 +1,147 @@
+//! Typed configuration over [`Json`](super::json::Json) documents.
+//!
+//! The canonical server binary reads a `model_config_list` file shaped
+//! like TF-Serving's ModelServerConfig; [`Conf`] wraps a parsed JSON
+//! value with path-based typed getters, defaults and error context.
+
+use super::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// A configuration view over a JSON document.
+#[derive(Debug, Clone)]
+pub struct Conf {
+    root: Json,
+    origin: String,
+}
+
+impl Conf {
+    pub fn from_json(root: Json, origin: &str) -> Self {
+        Conf { root, origin: origin.to_string() }
+    }
+
+    pub fn parse(text: &str, origin: &str) -> Result<Self> {
+        let root = Json::parse(text).with_context(|| format!("parsing {origin}"))?;
+        Ok(Conf::from_json(root, origin))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, &path.display().to_string())
+    }
+
+    pub fn root(&self) -> &Json {
+        &self.root
+    }
+
+    fn lookup(&self, path: &str) -> Result<&Json> {
+        self.root
+            .get_path(path)
+            .ok_or_else(|| anyhow!("{}: missing key '{path}'", self.origin))
+    }
+
+    pub fn str(&self, path: &str) -> Result<&str> {
+        self.lookup(path)?
+            .as_str()
+            .ok_or_else(|| anyhow!("{}: '{path}' is not a string", self.origin))
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.root.get_path(path).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, path: &str) -> Result<u64> {
+        self.lookup(path)?
+            .as_u64()
+            .ok_or_else(|| anyhow!("{}: '{path}' is not a non-negative integer", self.origin))
+    }
+
+    pub fn u64_or(&self, path: &str, default: u64) -> u64 {
+        self.root.get_path(path).and_then(|v| v.as_u64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.root.get_path(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.root.get_path(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Array of sub-configs (e.g. `model_config_list`).
+    pub fn list(&self, path: &str) -> Result<Vec<Conf>> {
+        let arr = self
+            .lookup(path)?
+            .as_arr()
+            .ok_or_else(|| anyhow!("{}: '{path}' is not an array", self.origin))?;
+        Ok(arr
+            .iter()
+            .enumerate()
+            .map(|(i, v)| Conf::from_json(v.clone(), &format!("{}:{path}[{i}]", self.origin)))
+            .collect())
+    }
+
+    /// Validate that only known keys appear at the top level (catches
+    /// typos in config files early, like TF-Serving's proto parsing).
+    pub fn allow_keys(&self, keys: &[&str]) -> Result<()> {
+        if let Some(obj) = self.root.as_obj() {
+            for k in obj.keys() {
+                if !keys.contains(&k.as_str()) {
+                    bail!("{}: unknown key '{k}' (allowed: {keys:?})", self.origin);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "port": 8500,
+      "batching": {"max_batch_size": 16, "timeout_ms": 2.5},
+      "model_config_list": [
+        {"name": "m1", "base_path": "/models/m1", "platform": "hlo"},
+        {"name": "m2", "base_path": "/models/m2", "platform": "table"}
+      ]
+    }"#;
+
+    #[test]
+    fn typed_getters() {
+        let c = Conf::parse(SAMPLE, "test").unwrap();
+        assert_eq!(c.u64("port").unwrap(), 8500);
+        assert_eq!(c.u64_or("batching.max_batch_size", 0), 16);
+        assert_eq!(c.f64_or("batching.timeout_ms", 0.0), 2.5);
+        assert_eq!(c.str_or("missing", "dflt"), "dflt");
+        assert!(!c.bool_or("verbose", false));
+    }
+
+    #[test]
+    fn list_of_models() {
+        let c = Conf::parse(SAMPLE, "test").unwrap();
+        let models = c.list("model_config_list").unwrap();
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].str("name").unwrap(), "m1");
+        assert_eq!(models[1].str("platform").unwrap(), "table");
+    }
+
+    #[test]
+    fn missing_and_wrong_type_errors() {
+        let c = Conf::parse(SAMPLE, "test").unwrap();
+        assert!(c.str("port").is_err());
+        assert!(c.u64("nope").is_err());
+        assert!(c.list("port").is_err());
+        let err = c.u64("nope.deep").unwrap_err().to_string();
+        assert!(err.contains("nope.deep"), "{err}");
+    }
+
+    #[test]
+    fn allow_keys_catches_typos() {
+        let c = Conf::parse(r#"{"prot": 1}"#, "test").unwrap();
+        assert!(c.allow_keys(&["port"]).is_err());
+        assert!(c.allow_keys(&["prot", "port"]).is_ok());
+    }
+}

@@ -1,0 +1,125 @@
+//! Leveled logging to stderr with a global level from `TS_LOG`.
+//!
+//! `TS_LOG=debug|info|warn|error|off` (default `info`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+    Off = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+
+fn level_from_env() -> Level {
+    match std::env::var("TS_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        Ok("off") => Level::Off,
+        _ => Level::Info,
+    }
+}
+
+/// Current log level (lazy-initialized from env).
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != u8::MAX {
+        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+    }
+    let l = level_from_env();
+    LEVEL.store(l as u8, Ordering::Relaxed);
+    l
+}
+
+/// Override the level programmatically (tests, benches).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l >= level()
+}
+
+#[doc(hidden)]
+pub fn emit(l: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let tag = match l {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+        Level::Off => return,
+    };
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default();
+    eprintln!("{tag} {:>10.3}s {module}: {args}", t.as_secs_f64() % 100_000.0);
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Error < Level::Off);
+    }
+
+    #[test]
+    fn set_level_controls_enabled() {
+        let prev = level();
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(prev);
+    }
+
+    #[test]
+    fn macros_compile_and_run() {
+        let prev = level();
+        set_level(Level::Off);
+        log_debug!("d {}", 1);
+        log_info!("i");
+        log_warn!("w");
+        log_error!("e");
+        set_level(prev);
+    }
+}

@@ -1,0 +1,23 @@
+//! Infrastructure substrates the serving stack is built on.
+//!
+//! The build environment has no network access, so everything that would
+//! normally come from a crate (tokio, serde, clap, criterion, proptest,
+//! arc-swap, …) is implemented here from scratch: a wait-free
+//! read-copy-update cell ([`rcu`] — the §2.1.2 optimization), thread
+//! pools ([`threadpool`]), metrics with log-bucketed histograms
+//! ([`metrics`]), JSON ([`json`]), a virtual/real clock ([`clock`]),
+//! deterministic PRNG ([`rng`]), a property-testing harness ([`check`]),
+//! logging, CLI flags, and OS-memory helpers ([`mem`]).
+
+pub mod argparse;
+pub mod bench;
+pub mod check;
+pub mod clock;
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod mem;
+pub mod metrics;
+pub mod rcu;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,279 @@
+//! Fixed-size named thread pools.
+//!
+//! TF-Serving §2.1.2 isolates *load* threads from *inference* threads so
+//! a model being loaded can never steal cycles from requests in flight.
+//! The managers in [`crate::lifecycle`] therefore own two `ThreadPool`s;
+//! the RPC server and batch executor own their own.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    /// Signalled when the queue drains AND no job is running.
+    idle: Condvar,
+    running: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+/// A fixed pool of worker threads consuming a FIFO job queue.
+pub struct ThreadPool {
+    name: String,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `threads` workers named `<name>-<i>`.
+    pub fn new(name: &str, threads: usize) -> Self {
+        assert!(threads > 0, "thread pool needs at least one thread");
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            idle: Condvar::new(),
+            running: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                let tname = format!("{name}-{i}");
+                std::thread::Builder::new()
+                    .name(tname)
+                    .spawn(move || Self::worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { name: name.to_string(), shared, workers }
+    }
+
+    fn worker_loop(shared: Arc<Shared>) {
+        loop {
+            let job = {
+                let mut q = shared.queue.lock().unwrap();
+                loop {
+                    if let Some(job) = q.pop_front() {
+                        break job;
+                    }
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    q = shared.available.wait(q).unwrap();
+                }
+            };
+            shared.running.fetch_add(1, Ordering::SeqCst);
+            // Panics in jobs are isolated to the job, not the worker.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            shared.running.fetch_sub(1, Ordering::SeqCst);
+            // Wake joiners whether the job succeeded or panicked.
+            {
+                let _q = shared.queue.lock().unwrap();
+                shared.idle.notify_all();
+            }
+            if result.is_err() {
+                // Already reported by the panic hook; keep serving.
+            }
+        }
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            assert!(
+                !self.shared.shutdown.load(Ordering::SeqCst),
+                "execute on shut-down pool {}",
+                self.name
+            );
+            q.push_back(Box::new(f));
+        }
+        self.shared.available.notify_one();
+    }
+
+    /// Block until the queue is empty and all workers are idle.
+    pub fn wait_idle(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !q.is_empty() || self.shared.running.load(Ordering::SeqCst) > 0 {
+            q = self.shared.idle.wait(q).unwrap();
+        }
+    }
+
+    /// Number of queued (not yet started) jobs.
+    pub fn queued(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.available.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Drain jobs that never ran (shutdown drops them).
+    }
+}
+
+/// Completion counter for fan-out/fan-in over a pool.
+///
+/// ```no_run
+/// # use tensorserve::util::threadpool::{ThreadPool, WaitGroup};
+/// let pool = ThreadPool::new("w", 4);
+/// let wg = WaitGroup::new();
+/// for _ in 0..16 {
+///     let t = wg.token();
+///     pool.execute(move || { drop(t); });
+/// }
+/// wg.wait();
+/// ```
+pub struct WaitGroup {
+    state: Arc<(Mutex<usize>, Condvar)>,
+}
+
+/// RAII token; dropping it signals completion of one task.
+pub struct WaitToken {
+    state: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl WaitGroup {
+    pub fn new() -> Self {
+        WaitGroup { state: Arc::new((Mutex::new(0), Condvar::new())) }
+    }
+
+    /// Register one outstanding task.
+    pub fn token(&self) -> WaitToken {
+        *self.state.0.lock().unwrap() += 1;
+        WaitToken { state: Arc::clone(&self.state) }
+    }
+
+    /// Block until every token has been dropped.
+    pub fn wait(&self) {
+        let mut n = self.state.0.lock().unwrap();
+        while *n > 0 {
+            n = self.state.1.wait(n).unwrap();
+        }
+    }
+}
+
+impl Default for WaitGroup {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for WaitToken {
+    fn drop(&mut self) {
+        let mut n = self.state.0.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.state.1.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new("t", 4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_idle_when_already_idle() {
+        let pool = ThreadPool::new("t", 2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_worker() {
+        let pool = ThreadPool::new("t", 1);
+        pool.execute(|| panic!("boom"));
+        let done = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&done);
+        pool.execute(move || {
+            d.store(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        let pool = ThreadPool::new("t", 4);
+        let wg = WaitGroup::new();
+        let t0 = std::time::Instant::now();
+        for _ in 0..4 {
+            let t = wg.token();
+            pool.execute(move || {
+                std::thread::sleep(Duration::from_millis(50));
+                drop(t);
+            });
+        }
+        wg.wait();
+        // 4 x 50ms on 4 threads should be well under 4*50ms.
+        assert!(t0.elapsed() < Duration::from_millis(150));
+    }
+
+    #[test]
+    fn waitgroup_counts() {
+        let wg = WaitGroup::new();
+        let t1 = wg.token();
+        let t2 = wg.token();
+        drop(t1);
+        let done = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&done);
+        let state_done = std::thread::spawn(move || {
+            d.store(1, Ordering::SeqCst);
+        });
+        drop(t2);
+        wg.wait();
+        state_done.join().unwrap();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new("t", 2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

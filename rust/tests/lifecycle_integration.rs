@@ -1,0 +1,220 @@
+//! Figure-1 integration: the full lifecycle chain over a live directory
+//! tree — FileSystemSource → SourceRouter → platform adapters →
+//! AspiredVersionsManager — including version discovery, multi-platform
+//! serving, failure injection, and recovery.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tensorserve::base::aspired::{AspiredVersionsCallback, Source};
+use tensorserve::base::servable::ServableId;
+use tensorserve::base::tensor::Tensor;
+use tensorserve::inference::table::{table_source_adapter, TableServable};
+use tensorserve::lifecycle::basic_manager::{ManagerOptions, VersionRequest};
+use tensorserve::lifecycle::harness::State;
+use tensorserve::lifecycle::manager::{AspiredVersionsManager, AvmOptions};
+use tensorserve::lifecycle::policy::AvailabilityPreservingPolicy;
+use tensorserve::lifecycle::source::{FileSystemSource, ServingPolicy, WatchedServable};
+use tensorserve::lifecycle::source_router::SourceRouter;
+use tensorserve::runtime::artifacts::{artifacts_available, default_artifacts_root};
+use tensorserve::runtime::hlo_servable::{hlo_source_adapter, HloServable};
+use tensorserve::runtime::pjrt::XlaRuntime;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ts-it-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn copy_dir(src: &PathBuf, dst: &PathBuf) {
+    std::fs::create_dir_all(dst).unwrap();
+    for e in std::fs::read_dir(src).unwrap() {
+        let e = e.unwrap();
+        let to = dst.join(e.file_name());
+        if e.path().is_dir() {
+            copy_dir(&e.path(), &to);
+        } else {
+            std::fs::copy(e.path(), &to).unwrap();
+        }
+    }
+}
+
+/// Assemble the Figure-1 chain over `root` and return (source, avm).
+fn chain(root: &PathBuf) -> (Arc<FileSystemSource>, Arc<AspiredVersionsManager>) {
+    let avm = AspiredVersionsManager::new(
+        Arc::new(AvailabilityPreservingPolicy),
+        AvmOptions {
+            manager: ManagerOptions { load_threads: 2, name: "it".into(), ..Default::default() },
+            reconcile_interval: Some(Duration::from_millis(10)),
+        },
+    );
+    let sniff = root.clone();
+    let router = SourceRouter::<PathBuf>::new(2, move |name| {
+        // TensorFlow-vs-BananaFlow split, sniffed from artifact layout.
+        let base = sniff.join(name);
+        let is_table = tensorserve::lifecycle::source::scan_versions(&base)
+            .last()
+            .map(|v| base.join(v.to_string()).join("table.json").exists())
+            .unwrap_or(false);
+        usize::from(is_table)
+    });
+    let hlo = hlo_source_adapter(XlaRuntime::shared().unwrap());
+    let table = table_source_adapter();
+    hlo.connect(Arc::clone(&avm) as Arc<dyn AspiredVersionsCallback<_>>);
+    table.connect(Arc::clone(&avm) as Arc<dyn AspiredVersionsCallback<_>>);
+    router.connect_port(0, hlo);
+    router.connect_port(1, table);
+
+    let mut source = FileSystemSource::new(
+        vec![
+            WatchedServable {
+                name: "mlp_classifier".into(),
+                base_path: root.join("mlp_classifier"),
+                policy: ServingPolicy::Latest(1),
+            },
+            WatchedServable {
+                name: "toy_table".into(),
+                base_path: root.join("toy_table"),
+                policy: ServingPolicy::Latest(1),
+            },
+        ],
+        Some(Duration::from_millis(20)),
+    );
+    source.set_aspired_versions_callback(router);
+    (source, avm)
+}
+
+fn wait_versions(avm: &Arc<AspiredVersionsManager>, name: &str, want: &[u64]) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        if avm.basic().ready_versions(name) == want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{name}: wanted {want:?}, have {:?}",
+            avm.basic().ready_versions(name)
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn figure1_multi_platform_discovery_and_transitions() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let root = tmpdir("fig1");
+    let art = default_artifacts_root();
+    // Start with classifier v1 only + the table.
+    copy_dir(&art.join("mlp_classifier").join("1"), &root.join("mlp_classifier").join("1"));
+    copy_dir(&art.join("toy_table").join("1"), &root.join("toy_table").join("1"));
+
+    let (_source, avm) = chain(&root);
+
+    // Both platforms load through the same chain.
+    wait_versions(&avm, "mlp_classifier", &[1]);
+    wait_versions(&avm, "toy_table", &[1]);
+    let h = avm
+        .handle::<HloServable>("mlp_classifier", VersionRequest::Latest)
+        .unwrap();
+    assert_eq!(h.spec.version, 1);
+    let out = h.run(&Tensor::zeros(vec![2, 32])).unwrap();
+    assert_eq!(out[0].as_f32().unwrap().shape(), &[2, 4]);
+    let t = avm
+        .handle::<TableServable>("toy_table", VersionRequest::Latest)
+        .unwrap();
+    assert_eq!(t.lookup("3"), Some(&[3.0, 2.0][..]));
+
+    // "A new version is written from training": v2 appears on storage.
+    copy_dir(&art.join("mlp_classifier").join("2"), &root.join("mlp_classifier").join("2"));
+    // Latest(1) policy: v2 replaces v1 (availability-preserving).
+    wait_versions(&avm, "mlp_classifier", &[2]);
+    assert_eq!(
+        avm.handle::<HloServable>("mlp_classifier", VersionRequest::Latest)
+            .unwrap()
+            .spec
+            .version,
+        2
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn corrupt_version_quarantined_old_version_keeps_serving() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let root = tmpdir("corrupt");
+    let art = default_artifacts_root();
+    copy_dir(&art.join("mlp_classifier").join("1"), &root.join("mlp_classifier").join("1"));
+    copy_dir(&art.join("toy_table").join("1"), &root.join("toy_table").join("1"));
+    let (_source, avm) = chain(&root);
+    wait_versions(&avm, "mlp_classifier", &[1]);
+
+    // A corrupt v2 lands: spec.json present but HLO garbage.
+    let bad = root.join("mlp_classifier").join("2");
+    copy_dir(&art.join("mlp_classifier").join("2"), &bad);
+    for b in [1, 4, 16, 64] {
+        std::fs::write(bad.join(format!("model_b{b}.hlo.txt")), "corrupt!").unwrap();
+    }
+    // v2 must end in Error; v1 must keep serving (availability).
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let st = avm.monitor().state_of(&ServableId::new("mlp_classifier", 2));
+        if matches!(st, Some(State::Error(_))) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "v2 never errored: {st:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(avm.basic().ready_versions("mlp_classifier"), vec![1]);
+    assert!(avm
+        .handle::<HloServable>("mlp_classifier", VersionRequest::Latest)
+        .is_ok());
+
+    // The fixed v3 arrives; it loads and replaces v1.
+    copy_dir(&art.join("mlp_classifier").join("2"), &root.join("mlp_classifier").join("3"));
+    wait_versions(&avm, "mlp_classifier", &[3]);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn handles_survive_unload_and_free_off_request_thread() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let root = tmpdir("handles");
+    let art = default_artifacts_root();
+    copy_dir(&art.join("mlp_classifier").join("1"), &root.join("mlp_classifier").join("1"));
+    copy_dir(&art.join("toy_table").join("1"), &root.join("toy_table").join("1"));
+    let (source, avm) = chain(&root);
+    wait_versions(&avm, "mlp_classifier", &[1]);
+
+    let h = avm
+        .handle::<HloServable>("mlp_classifier", VersionRequest::Latest)
+        .unwrap();
+    // Unload everything (empty aspired set via policy change).
+    source.set_policy("mlp_classifier", ServingPolicy::Specific(vec![]));
+    source.poll_once();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !avm.basic().ready_versions("mlp_classifier").is_empty() {
+        assert!(Instant::now() < deadline);
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // The checked-out handle still serves (refcounted, §2.1.2)...
+    let out = h.run(&Tensor::zeros(vec![1, 32])).unwrap();
+    assert_eq!(out[0].as_f32().unwrap().shape(), &[1, 4]);
+    // ...and its final drop happens via the reclaim thread.
+    drop(h);
+    avm.basic().reclaimer().flush();
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,0 +1,87 @@
+//! Cross-layer numerics parity: the AOT-compiled HLO executed from rust
+//! via PJRT must reproduce jax's own predictions bit-for-bit (within f32
+//! tolerance) on golden inputs written by `python/compile/aot.py`.
+//!
+//! This gate exists because HLO-text interchange has a silent failure
+//! mode: default printing elides large constants as `{...}`, which the
+//! parser reparses as zeros — models then "work" (valid shapes, valid
+//! distributions) while computing garbage. Structural tests cannot catch
+//! that; golden values do.
+
+use tensorserve::base::tensor::Tensor;
+use tensorserve::runtime::artifacts::{artifacts_available, default_artifacts_root};
+use tensorserve::runtime::hlo_servable::HloServable;
+use tensorserve::runtime::pjrt::{OutTensor, XlaRuntime};
+use tensorserve::util::json::Json;
+
+fn check_version(model: &str, version: u64) {
+    let dir = default_artifacts_root().join(model).join(version.to_string());
+    let golden = Json::parse_file(&dir.join("golden.json")).unwrap();
+    let inputs: Vec<Vec<f32>> = golden
+        .get("inputs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| {
+            row.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect()
+        })
+        .collect();
+
+    let rt = XlaRuntime::shared().unwrap();
+    let servable = HloServable::load(&rt, &dir).unwrap();
+    let got = servable.run(&Tensor::matrix(inputs).unwrap()).unwrap();
+
+    let want = golden.get("outputs").unwrap().as_arr().unwrap();
+    assert_eq!(got.len(), want.len(), "{model}:{version} output arity");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let values: Vec<f64> = w
+            .get("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        match g {
+            OutTensor::F32(t) => {
+                assert_eq!(t.data().len(), values.len());
+                for (j, (a, b)) in t.data().iter().zip(&values).enumerate() {
+                    assert!(
+                        (*a as f64 - b).abs() < 1e-4,
+                        "{model}:{version} output {i}[{j}]: rust {a} vs jax {b}"
+                    );
+                }
+            }
+            OutTensor::I32(t) => {
+                assert_eq!(t.data.len(), values.len());
+                for (j, (a, b)) in t.data.iter().zip(&values).enumerate() {
+                    assert_eq!(
+                        *a as f64, *b,
+                        "{model}:{version} output {i}[{j}]: rust {a} vs jax {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn classifier_versions_match_jax() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    check_version("mlp_classifier", 1);
+    check_version("mlp_classifier", 2);
+}
+
+#[test]
+fn regressor_versions_match_jax() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    check_version("mlp_regressor", 1);
+    check_version("mlp_regressor", 2);
+}

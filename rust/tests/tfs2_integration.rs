@@ -1,0 +1,246 @@
+//! Figure-2 integration: the TFS² control plane (Controller →
+//! Synchronizer → serving jobs → Router) over real sockets, including
+//! canary/rollback commands, capacity-aware placement, store
+//! durability, and hedged routing under an injected slow replica.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tensorserve::inference::example::{Example, Feature};
+use tensorserve::rpc::client::ClientPool;
+use tensorserve::rpc::proto::{Request, Response};
+use tensorserve::runtime::artifacts::{artifacts_available, default_artifacts_root, ModelSpec};
+use tensorserve::tfs2::cluster::Cluster;
+use tensorserve::tfs2::controller::Controller;
+use tensorserve::tfs2::router::Router;
+use tensorserve::tfs2::store::Store;
+use tensorserve::tfs2::synchronizer::Synchronizer;
+
+fn gaussian_examples(n: usize, seed: u64) -> Vec<Example> {
+    let mut rng = tensorserve::util::rng::Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let x: Vec<f32> = (0..32).map(|_| rng.normal() as f32 * 2.0).collect();
+            Example::new().with("x", Feature::Floats(x))
+        })
+        .collect()
+}
+
+fn sync_until(
+    sync: &Synchronizer,
+    controller: &Controller,
+    router: &Router,
+    want: usize,
+) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(180);
+    loop {
+        let report = sync.sync_once(&controller.desired_state()).unwrap();
+        let table = sync.routing_table();
+        if report.ready >= want && table.len() >= want {
+            router.update_table(table);
+            return;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "cluster never ready: {report:?}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+#[test]
+fn figure2_end_to_end_control_plane() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let artifacts = default_artifacts_root();
+    let cluster = Cluster::start(2, 64 << 20, artifacts.clone()).unwrap();
+    let store = Store::in_memory(1);
+    let controller = Controller::new(Arc::clone(&store));
+    let pool = Arc::new(ClientPool::new());
+    let sync = Synchronizer::new(Arc::clone(&store), Arc::clone(&pool));
+    let router = Router::new(Duration::from_millis(50));
+
+    for (id, addr, cap) in cluster.jobs() {
+        controller.register_job(&id, &addr, cap).unwrap();
+    }
+
+    // add model → placement → sync → route.
+    let spec = ModelSpec::load(&artifacts.join("mlp_classifier").join("2")).unwrap();
+    let job = controller
+        .add_model(
+            "mlp_classifier",
+            artifacts.join("mlp_classifier").to_str().unwrap(),
+            spec.ram_estimate_bytes,
+            1,
+        )
+        .unwrap();
+    assert!(job.starts_with("job-"));
+    sync_until(&sync, &controller, &router, 1);
+
+    let resp = router
+        .route(&Request::Classify {
+            model: "mlp_classifier".into(),
+            version: None,
+            examples: gaussian_examples(4, 1),
+        })
+        .unwrap();
+    match resp {
+        Response::Classify { model_version, classes, .. } => {
+            assert_eq!(model_version, 1);
+            assert_eq!(classes.len(), 4);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // canary: add v2 alongside v1; both must serve.
+    controller.set_canary("mlp_classifier", true).unwrap();
+    controller.add_version("mlp_classifier", 2).unwrap();
+    assert_eq!(controller.desired_versions("mlp_classifier").unwrap(), vec![1, 2]);
+    sync_until(&sync, &controller, &router, 1);
+    for want_version in [1u64, 2] {
+        let resp = router
+            .route(&Request::Classify {
+                model: "mlp_classifier".into(),
+                version: Some(want_version),
+                examples: gaussian_examples(2, 2),
+            })
+            .unwrap();
+        match resp {
+            Response::Classify { model_version, .. } => {
+                assert_eq!(model_version, want_version)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    // promote → only v2; rollback → only v1.
+    controller.promote_canary("mlp_classifier").unwrap();
+    sync_until(&sync, &controller, &router, 1);
+    controller.rollback("mlp_classifier", 1).unwrap();
+    assert_eq!(controller.desired_versions("mlp_classifier").unwrap(), vec![1]);
+    sync_until(&sync, &controller, &router, 1);
+    // v2 drains asynchronously after v1 is pinned; poll until the
+    // latest-version route lands on v1.
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let resp = router
+            .route(&Request::Classify {
+                model: "mlp_classifier".into(),
+                version: None,
+                examples: gaussian_examples(1, 3),
+            })
+            .unwrap();
+        match resp {
+            Response::Classify { model_version: 1, .. } => break,
+            Response::Classify { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "rollback never completed"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    cluster.stop();
+}
+
+#[test]
+fn placement_respects_capacity_and_spreads() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let artifacts = default_artifacts_root();
+    let store = Store::in_memory(0);
+    let controller = Controller::new(Arc::clone(&store));
+    // Tiny jobs: each fits exactly one model (~1.1MB estimates).
+    controller.register_job("job-0", "", 2 << 20).unwrap();
+    controller.register_job("job-1", "", 2 << 20).unwrap();
+
+    let spec_c = ModelSpec::load(&artifacts.join("mlp_classifier").join("2")).unwrap();
+    let spec_r = ModelSpec::load(&artifacts.join("mlp_regressor").join("2")).unwrap();
+    let j1 = controller
+        .add_model("mlp_classifier", "x", spec_c.ram_estimate_bytes, 1)
+        .unwrap();
+    let j2 = controller
+        .add_model("mlp_regressor", "x", spec_r.ram_estimate_bytes, 1)
+        .unwrap();
+    assert_ne!(j1, j2, "second model must spill to the other job");
+    // A third model does not fit anywhere.
+    assert!(controller.add_model("third", "x", 2 << 20, 1).is_err());
+}
+
+#[test]
+fn store_durability_survives_controller_restart() {
+    let dir = std::env::temp_dir().join(format!("ts-tfs2-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("controller");
+    {
+        let store = Store::open(&path, 0).unwrap();
+        let c = Controller::new(store);
+        c.register_job("j", "addr:1", 100).unwrap();
+        c.add_model("m", "/m", 50, 3).unwrap();
+        c.set_canary("m", true).unwrap();
+        c.add_version("m", 4).unwrap();
+    } // process "dies"
+    let store = Store::open(&path, 0).unwrap();
+    let c = Controller::new(store);
+    assert_eq!(c.desired_versions("m").unwrap(), vec![3, 4]);
+    assert_eq!(c.placement("m"), Some("j".into()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hedged_routing_masks_slow_replica() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // A fast real job + a blackholed "replica" (a bound-but-unserved
+    // port responds to connect but never to requests... simplest: a
+    // dead address fails fast, exercising failover; the slow-replica
+    // latency shape is measured in benches/bench_hedging.rs).
+    let artifacts = default_artifacts_root();
+    let cluster = Cluster::start(1, 64 << 20, artifacts.clone()).unwrap();
+    let pool = Arc::new(ClientPool::new());
+    cluster
+        .sync_replicas(&pool, "job-0", &[("mlp_regressor".into(), String::new(), vec![2])])
+        .unwrap();
+    // Wait until loaded.
+    let addr = cluster.replica_addrs("job-0")[0].clone();
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        if let Ok(Response::ModelStatus { versions }) =
+            pool.call(&addr, &Request::ModelStatus { model: "mlp_regressor".into() })
+        {
+            if versions.iter().any(|(v, s)| *v == 2 && s == "ready") {
+                break;
+            }
+        }
+        assert!(std::time::Instant::now() < deadline);
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    let router = Router::new(Duration::from_millis(30));
+    // Dead primary, healthy backup: hedging must fail over.
+    router.update_table(vec![(
+        "mlp_regressor".into(),
+        vec!["127.0.0.1:1".into(), addr],
+    )]);
+    let mut served = 0;
+    for i in 0..6 {
+        if let Ok(Response::Regress { .. }) = router.route(&Request::Regress {
+            model: "mlp_regressor".into(),
+            version: None,
+            examples: gaussian_examples(1, i),
+        }) {
+            served += 1;
+        }
+    }
+    assert_eq!(served, 6, "hedged router failed to mask the dead replica");
+    assert!(router.hedge_rate() > 0.0);
+    cluster.stop();
+}
