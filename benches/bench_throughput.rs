@@ -16,6 +16,7 @@ use tensorserve::inference::null::{null_loader, NullServable};
 use tensorserve::lifecycle::basic_manager::{BasicManager, VersionRequest};
 use tensorserve::sim::workload::closed_loop;
 use tensorserve::util::bench::{fmt_count, Table};
+use tensorserve::util::json::Json;
 
 fn manager_with_models(n: usize) -> Arc<BasicManager> {
     let m = BasicManager::with_defaults();
@@ -41,6 +42,7 @@ fn main() {
         "T1: framework-only throughput (null servable, no RPC) — paper: ~100k qps/core",
         &["threads", "qps", "qps/core", "p50", "p99.9"],
     );
+    let mut sweep_json = Vec::new();
     for threads in [1usize, 2, 4, 8, 16] {
         let m = manager_with_models(1);
         let stats = closed_loop(threads, dur, move |_| {
@@ -52,6 +54,14 @@ fn main() {
         // Threads beyond physical cores time-slice: divide by the
         // smaller of the two for an honest per-core figure.
         let eff_cores = threads.min(cores) as f64;
+        sweep_json.push(Json::obj(vec![
+            ("threads", Json::num(threads as f64)),
+            ("qps", Json::num(stats.qps())),
+            ("qps_per_core", Json::num(stats.qps() / eff_cores)),
+            ("ns_per_request_mean", Json::num(stats.latency.mean())),
+            ("p50_ns", Json::num(p50 as f64)),
+            ("p999_ns", Json::num(p999 as f64)),
+        ]));
         t.row(vec![
             threads.to_string(),
             fmt_count(stats.qps()),
@@ -68,6 +78,7 @@ fn main() {
         &["models", "qps", "qps/core"],
     );
     let eff = 8.0f64.min(cores as f64);
+    let mut models_json = Vec::new();
     for models in [1usize, 10, 100, 1000] {
         let m = manager_with_models(models);
         let stats = closed_loop(8, dur, move |tid| {
@@ -76,6 +87,12 @@ fn main() {
             h.run(1);
             Ok(())
         });
+        models_json.push(Json::obj(vec![
+            ("models", Json::num(models as f64)),
+            ("qps", Json::num(stats.qps())),
+            ("qps_per_core", Json::num(stats.qps() / eff)),
+            ("ns_per_request_mean", Json::num(stats.latency.mean())),
+        ]));
         t.row(vec![
             models.to_string(),
             fmt_count(stats.qps()),
@@ -104,4 +121,17 @@ fn main() {
         t.row(vec![label.to_string(), fmt_count(stats.qps() / eff)]);
     }
     t.print();
+
+    // ---- machine-readable trajectory: BENCH_throughput.json ---------
+    let json = Json::obj(vec![
+        ("bench", Json::str("bench_throughput")),
+        ("cores", Json::num(cores as f64)),
+        ("thread_sweep", Json::Arr(sweep_json)),
+        ("model_sweep", Json::Arr(models_json)),
+    ]);
+    let out = "BENCH_throughput.json";
+    match std::fs::write(out, json.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
 }

@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "served by version {}, classes = {:?}",
         resp.model_version,
-        resp.outputs[1].as_i32()?.data
+        resp.outputs[1].as_i32()?.data()
     );
     assert_eq!(resp.model_version, 2);
 
@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "served by version {}, classes = {:?}",
         resp1.model_version,
-        resp1.outputs[1].as_i32()?.data
+        resp1.outputs[1].as_i32()?.data()
     );
     assert_eq!(resp1.model_version, 1);
 

@@ -42,6 +42,10 @@ impl Reclaimer {
                         Msg::Reclaim(b) => drop(b),
                         Msg::ReclaimAndTrim(b) => {
                             drop(b);
+                            // Pooled tensor buffers would keep trimmed
+                            // pages resident: empty the shelves first
+                            // so malloc_trim can hand them back.
+                            crate::util::pool::BufferPool::global().clear();
                             crate::util::mem::release_to_os();
                         }
                         Msg::Flush(reply) => {

@@ -1,17 +1,47 @@
-//! Dense tensors crossing the serving boundary.
+//! Dense tensors crossing the serving boundary — **views over shared
+//! storage**.
 //!
-//! Deliberately minimal: f32/i32 row-major tensors with the operations
-//! the serving path needs — batch-dimension concat/split (the essence of
-//! inter-request batching, §2.2.1) and zero-padding to an allowed batch
-//! size. Heavy math happens inside the AOT-compiled HLO, not here.
+//! A [`Tensor`] is `(Arc<[f32]> storage, element offset, shape)`: a
+//! row-major window into a reference-counted buffer. The representation
+//! exists for the §2.1.2 promise that "the core code paths … have been
+//! carefully optimized": the batch-dimension operations the serving hot
+//! path leans on are metadata-only —
+//!
+//! * [`Tensor::split`] returns per-caller views of the merged output
+//!   buffer (no copies; one `Arc` bump per part),
+//! * [`Tensor::truncate_batch`] un-pads by shrinking the leading dim in
+//!   place (no copy at all),
+//! * [`Tensor::row`] is a slice into storage.
+//!
+//! Operations that genuinely materialize bytes — [`Tensor::concat`],
+//! [`Tensor::pad_batch`], [`Tensor::build_with`] — write once into a
+//! single exactly-sized allocation, optionally recycled through
+//! [`crate::util::pool::BufferPool`]. The batching layer
+//! ([`crate::batching::session`]) composes these into a
+//! one-copy-per-request pipeline: request rows are written straight
+//! into a pooled device buffer and results come back as views.
+//!
+//! Heavy math happens inside the AOT-compiled HLO, not here.
 
+use crate::util::pool::BufferPool;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
-/// Row-major f32 tensor.
-#[derive(Debug, Clone, PartialEq)]
+/// Row-major f32 tensor: a view over shared storage.
+#[derive(Debug, Clone)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    storage: Arc<[f32]>,
+    /// Element offset of this view's first element within `storage`.
+    offset: usize,
+}
+
+/// Logical equality: shape and element contents (storage identity and
+/// offsets are representation details).
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data() == other.data()
+    }
 }
 
 impl Tensor {
@@ -20,17 +50,56 @@ impl Tensor {
         if n != data.len() {
             bail!("shape {shape:?} wants {n} elements, got {}", data.len());
         }
-        Ok(Tensor { shape, data })
+        Ok(Tensor { shape, storage: data.into(), offset: 0 })
+    }
+
+    /// View over an existing shared buffer: `shape.product()` elements
+    /// starting at `offset`. General-purpose zero-copy constructor for
+    /// callers that manage their own storage (the in-tree hot paths use
+    /// [`Tensor::build_with`] plus `split`/`truncate_batch` views).
+    pub fn from_shared(shape: Vec<usize>, storage: Arc<[f32]>, offset: usize) -> Result<Self> {
+        let end = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .and_then(|n| offset.checked_add(n));
+        match end {
+            Some(end) if end <= storage.len() => Ok(Tensor { shape, storage, offset }),
+            _ => bail!(
+                "view at offset {offset} with shape {shape:?} exceeds storage of {} elements",
+                storage.len()
+            ),
+        }
+    }
+
+    /// Allocate storage for `shape` (recycled from `pool` when
+    /// possible) and fill it in place — one allocation, no intermediate
+    /// `Vec`. The pool hands back a size-class buffer of at least
+    /// `shape.product()` elements; `fill` sees (and the view exposes)
+    /// exactly the first `shape.product()`.
+    pub fn build_with(
+        shape: Vec<usize>,
+        pool: &BufferPool,
+        fill: impl FnOnce(&mut [f32]),
+    ) -> Self {
+        let n: usize = shape.iter().product();
+        let mut storage = pool.acquire(n);
+        // The pool guarantees a uniquely-owned buffer.
+        fill(&mut Arc::get_mut(&mut storage).expect("pool buffer uniquely owned")[..n]);
+        Tensor { shape, storage, offset: 0 }
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
-        let n = shape.iter().product();
-        Tensor { shape, data: vec![0.0; n] }
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape,
+            storage: std::iter::repeat(0.0).take(n).collect(),
+            offset: 0,
+        }
     }
 
     /// 1-D tensor from a vec.
     pub fn vec(data: Vec<f32>) -> Self {
-        Tensor { shape: vec![data.len()], data }
+        Tensor { shape: vec![data.len()], storage: data.into(), offset: 0 }
     }
 
     /// 2-D tensor from rows.
@@ -40,19 +109,31 @@ impl Tensor {
         if rows.iter().any(|x| x.len() != c) {
             bail!("ragged rows");
         }
-        Ok(Tensor { shape: vec![r, c], data: rows.into_iter().flatten().collect() })
+        let data: Vec<f32> = rows.into_iter().flatten().collect();
+        Ok(Tensor { shape: vec![r, c], storage: data.into(), offset: 0 })
     }
 
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
-    pub fn data(&self) -> &[f32] {
-        &self.data
+    /// Number of elements in this view.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
     }
 
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.storage[self.offset..self.offset + self.len()]
+    }
+
+    /// Copy the elements out. (Views cannot give the buffer away — the
+    /// storage may be shared with sibling views.)
     pub fn into_data(self) -> Vec<f32> {
-        self.data
+        self.data().to_vec()
     }
 
     pub fn rank(&self) -> usize {
@@ -69,18 +150,45 @@ impl Tensor {
         self.shape.iter().skip(1).product()
     }
 
-    /// One batch row as a slice.
+    /// One batch row as a slice (O(1); no copy).
     pub fn row(&self, i: usize) -> &[f32] {
         let w = self.row_elems();
-        &self.data[i * w..(i + 1) * w]
+        &self.data()[i * w..(i + 1) * w]
     }
 
-    /// Concatenate along dim 0. All inputs must agree on trailing dims.
-    pub fn concat(parts: &[Tensor]) -> Result<Tensor> {
+    /// True if both views window the same backing allocation (the
+    /// zero-copy invariant checked by tests).
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        Arc::ptr_eq(&self.storage, &other.storage)
+    }
+
+    /// The shared backing buffer (offset 0 of the whole allocation).
+    pub fn storage(&self) -> &Arc<[f32]> {
+        &self.storage
+    }
+
+    /// Recycle this tensor's backing buffer into `pool` if this view
+    /// starts at the allocation's origin. The pool itself declines
+    /// buffers that are still shared (live sibling views) or not
+    /// class-sized, so this is always safe; a declined buffer just
+    /// drops normally.
+    pub fn recycle_into(self, pool: &BufferPool) {
+        if self.offset == 0 {
+            pool.release(self.storage);
+        }
+    }
+
+    /// Batching-compatibility check shared by [`Tensor::concat`] and
+    /// the fused assembly in [`crate::batching::session`]: every part
+    /// must have rank >= 1 and identical trailing dims. Returns the
+    /// summed batch rows and the trailing dims.
+    pub fn concat_shape(parts: &[Tensor]) -> Result<(usize, Vec<usize>)> {
         let first = parts.first().ok_or_else(|| anyhow::anyhow!("empty concat"))?;
+        if first.rank() == 0 {
+            bail!("concat shape mismatch: rank-0 tensor {:?}", first.shape);
+        }
         let trailing = &first.shape[1..];
         let mut batch = 0usize;
-        let mut data = Vec::new();
         for p in parts {
             if p.rank() == 0 || &p.shape[1..] != trailing {
                 bail!(
@@ -90,14 +198,26 @@ impl Tensor {
                 );
             }
             batch += p.shape[0];
-            data.extend_from_slice(&p.data);
         }
+        Ok((batch, trailing.to_vec()))
+    }
+
+    /// Concatenate along dim 0. All inputs must agree on trailing dims.
+    /// One exactly-sized allocation; one copy of each input.
+    pub fn concat(parts: &[Tensor]) -> Result<Tensor> {
+        let (batch, trailing) = Self::concat_shape(parts)?;
         let mut shape = vec![batch];
-        shape.extend_from_slice(trailing);
-        Ok(Tensor { shape, data })
+        shape.extend_from_slice(&trailing);
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            data.extend_from_slice(p.data());
+        }
+        Ok(Tensor { shape, storage: data.into(), offset: 0 })
     }
 
     /// Split along dim 0 into chunks of the given batch sizes.
+    ///
+    /// Zero-copy: every part is a view sharing this tensor's storage.
     pub fn split(&self, sizes: &[usize]) -> Result<Vec<Tensor>> {
         let total: usize = sizes.iter().sum();
         if total != self.batch() {
@@ -111,41 +231,59 @@ impl Tensor {
             shape[0] = s;
             out.push(Tensor {
                 shape,
-                data: self.data[off * w..(off + s) * w].to_vec(),
+                storage: Arc::clone(&self.storage),
+                offset: self.offset + off * w,
             });
             off += s;
         }
         Ok(out)
     }
 
-    /// Zero-pad the batch dimension up to `target` rows.
+    /// Zero-pad the batch dimension up to `target` rows. Allocates (via
+    /// the global buffer pool) — padding must materialize new bytes.
     pub fn pad_batch(&self, target: usize) -> Result<Tensor> {
         if target < self.batch() {
             bail!("pad target {target} < batch {}", self.batch());
         }
         let mut shape = self.shape.clone();
         shape[0] = target;
-        let mut data = self.data.clone();
-        data.resize(target * self.row_elems(), 0.0);
-        Ok(Tensor { shape, data })
+        let src = self.data();
+        Ok(Tensor::build_with(shape, &BufferPool::global(), |buf| {
+            buf[..src.len()].copy_from_slice(src);
+            buf[src.len()..].fill(0.0);
+        }))
     }
 
     /// Take the first `n` batch rows (inverse of `pad_batch`).
+    ///
+    /// Zero-copy: returns a view sharing this tensor's storage.
     pub fn truncate_batch(&self, n: usize) -> Result<Tensor> {
         if n > self.batch() {
             bail!("truncate {n} > batch {}", self.batch());
         }
         let mut shape = self.shape.clone();
         shape[0] = n;
-        Ok(Tensor { shape, data: self.data[..n * self.row_elems()].to_vec() })
+        Ok(Tensor {
+            shape,
+            storage: Arc::clone(&self.storage),
+            offset: self.offset,
+        })
     }
 }
 
-/// Row-major i32 tensor (classifier class outputs).
-#[derive(Debug, Clone, PartialEq)]
+/// Row-major i32 tensor (classifier class outputs) — same view
+/// representation as [`Tensor`].
+#[derive(Debug, Clone)]
 pub struct TensorI32 {
-    pub shape: Vec<usize>,
-    pub data: Vec<i32>,
+    shape: Vec<usize>,
+    storage: Arc<[i32]>,
+    offset: usize,
+}
+
+impl PartialEq for TensorI32 {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data() == other.data()
+    }
 }
 
 impl TensorI32 {
@@ -154,21 +292,67 @@ impl TensorI32 {
         if n != data.len() {
             bail!("shape {shape:?} wants {n} elements, got {}", data.len());
         }
-        Ok(TensorI32 { shape, data })
+        Ok(TensorI32 { shape, storage: data.into(), offset: 0 })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.storage[self.offset..self.offset + self.len()]
     }
 
     pub fn batch(&self) -> usize {
         self.shape.first().copied().unwrap_or(0)
     }
 
+    pub fn shares_storage(&self, other: &TensorI32) -> bool {
+        Arc::ptr_eq(&self.storage, &other.storage)
+    }
+
+    /// Zero-copy view of the first `n` batch rows.
     pub fn truncate_batch(&self, n: usize) -> Result<TensorI32> {
-        let w: usize = self.shape.iter().skip(1).product();
         if n > self.batch() {
             bail!("truncate {n} > batch {}", self.batch());
         }
         let mut shape = self.shape.clone();
         shape[0] = n;
-        Ok(TensorI32 { shape, data: self.data[..n * w].to_vec() })
+        Ok(TensorI32 {
+            shape,
+            storage: Arc::clone(&self.storage),
+            offset: self.offset,
+        })
+    }
+
+    /// Zero-copy split along dim 0 (mirrors [`Tensor::split`]).
+    pub fn split(&self, sizes: &[usize]) -> Result<Vec<TensorI32>> {
+        let total: usize = sizes.iter().sum();
+        if total != self.batch() {
+            bail!("split sizes {sizes:?} sum {total} != batch {}", self.batch());
+        }
+        let w: usize = self.shape.iter().skip(1).product();
+        let mut out = Vec::with_capacity(sizes.len());
+        let mut off = 0usize;
+        for &s in sizes {
+            let mut shape = self.shape.clone();
+            shape[0] = s;
+            out.push(TensorI32 {
+                shape,
+                storage: Arc::clone(&self.storage),
+                offset: self.offset + off * w,
+            });
+            off += s;
+        }
+        Ok(out)
     }
 }
 
@@ -234,7 +418,101 @@ mod tests {
     fn i32_tensor() {
         let t = TensorI32::new(vec![3], vec![1, 2, 3]).unwrap();
         assert_eq!(t.batch(), 3);
-        assert_eq!(t.truncate_batch(2).unwrap().data, vec![1, 2]);
+        assert_eq!(t.truncate_batch(2).unwrap().data(), &[1, 2]);
         assert!(TensorI32::new(vec![2], vec![1]).is_err());
+    }
+
+    // ---------------------------------------- zero-copy invariants
+
+    #[test]
+    fn split_returns_views_sharing_storage() {
+        let t = Tensor::matrix(vec![
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![5.0, 6.0],
+        ])
+        .unwrap();
+        let parts = t.split(&[1, 2]).unwrap();
+        for p in &parts {
+            assert!(p.shares_storage(&t), "split part copied its data");
+        }
+        // Pointer-level check: each part's slice aims into the parent.
+        let base = t.data().as_ptr() as usize;
+        assert_eq!(parts[0].data().as_ptr() as usize, base);
+        assert_eq!(
+            parts[1].data().as_ptr() as usize,
+            base + 2 * std::mem::size_of::<f32>()
+        );
+        assert_eq!(parts[1].data(), &[3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn truncate_batch_is_a_view() {
+        let t = Tensor::zeros(vec![8, 4]);
+        let v = t.truncate_batch(3).unwrap();
+        assert!(v.shares_storage(&t));
+        assert_eq!(v.data().as_ptr(), t.data().as_ptr());
+        assert_eq!(v.shape(), &[3, 4]);
+    }
+
+    #[test]
+    fn nested_views_compose() {
+        let t = Tensor::matrix((0..6).map(|i| vec![i as f32]).collect()).unwrap();
+        let padded_view = t.truncate_batch(5).unwrap();
+        let parts = padded_view.split(&[2, 3]).unwrap();
+        assert!(parts[1].shares_storage(&t));
+        assert_eq!(parts[1].data(), &[2.0, 3.0, 4.0]);
+        // Views outlive the tensor they were split from.
+        drop(t);
+        drop(padded_view);
+        assert_eq!(parts[0].data(), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn i32_truncate_and_split_are_views() {
+        let t = TensorI32::new(vec![4, 2], vec![0, 1, 2, 3, 4, 5, 6, 7]).unwrap();
+        let v = t.truncate_batch(2).unwrap();
+        assert!(v.shares_storage(&t));
+        assert_eq!(v.data(), &[0, 1, 2, 3]);
+        let parts = t.split(&[1, 3]).unwrap();
+        assert!(parts[0].shares_storage(&t));
+        assert_eq!(parts[1].data(), &[2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn from_shared_validates_bounds() {
+        let storage: Arc<[f32]> = vec![0.0; 8].into();
+        assert!(Tensor::from_shared(vec![2, 2], Arc::clone(&storage), 4).is_ok());
+        assert!(Tensor::from_shared(vec![2, 2], Arc::clone(&storage), 5).is_err());
+        assert!(Tensor::from_shared(vec![3, 3], storage, 0).is_err());
+    }
+
+    #[test]
+    fn build_with_fills_in_place() {
+        let pool = BufferPool::new(8, 1 << 20);
+        let t = Tensor::build_with(vec![2, 3], &pool, |buf| {
+            for (i, x) in buf.iter_mut().enumerate() {
+                *x = i as f32;
+            }
+        });
+        assert_eq!(t.data(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        // Recycle → next build of the same size reuses the allocation.
+        let ptr = t.data().as_ptr();
+        t.recycle_into(&pool);
+        let t2 = Tensor::build_with(vec![6], &pool, |buf| buf.fill(9.0));
+        assert_eq!(t2.data().as_ptr(), ptr, "pool did not recycle");
+        assert_eq!(t2.data(), &[9.0; 6]);
+    }
+
+    #[test]
+    fn recycle_declines_shared_storage() {
+        let pool = BufferPool::new(8, 1 << 20);
+        let t = Tensor::build_with(vec![4], &pool, |b| b.fill(1.0));
+        let view = t.truncate_batch(2).unwrap();
+        // Two owners: recycling must not shelve the buffer while the
+        // sibling view is alive.
+        t.recycle_into(&pool);
+        assert_eq!(view.data(), &[1.0, 1.0]);
+        assert_eq!(pool.stats().buffers_pooled, 0);
     }
 }

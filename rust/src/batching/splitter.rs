@@ -53,6 +53,42 @@ pub fn split_if_needed<T: SplittableTask>(task: T, max_batch_size: usize) -> Vec
     }
 }
 
+/// Row-chunk sizes covering `total` rows with parts of at most `max`:
+/// `chunk_sizes(10, 4) == [4, 4, 2]`. The shared shape arithmetic
+/// behind tensor splitting (`BatchingSession::run` uses it to divide
+/// oversized requests into zero-copy views).
+pub fn chunk_sizes(total: usize, max: usize) -> Vec<usize> {
+    assert!(max > 0, "chunk size must be positive");
+    let mut out = Vec::with_capacity((total + max - 1) / max);
+    let mut left = total;
+    while left > 0 {
+        let s = left.min(max);
+        out.push(s);
+        left -= s;
+    }
+    if out.is_empty() {
+        out.push(0); // a 0-row task still needs one (empty) part
+    }
+    out
+}
+
+impl BatchTask for crate::base::tensor::Tensor {
+    fn size(&self) -> usize {
+        self.batch()
+    }
+}
+
+/// Tensors split along the batch dimension into **views**: every part
+/// shares the parent's storage — splitting a request costs O(parts)
+/// metadata, never a copy.
+impl SplittableTask for crate::base::tensor::Tensor {
+    fn split(self, max_part_size: usize) -> Vec<Self> {
+        let sizes = chunk_sizes(self.batch(), max_part_size);
+        // Infallible: chunk sizes sum to the batch by construction.
+        crate::base::tensor::Tensor::split(&self, &sizes).expect("chunk sizes cover batch")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +137,36 @@ mod tests {
         assert_eq!(c.remaining(), 1);
         c.part_done();
         assert_eq!(FIRED.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn chunk_sizes_cover_exactly() {
+        assert_eq!(chunk_sizes(10, 4), vec![4, 4, 2]);
+        assert_eq!(chunk_sizes(8, 4), vec![4, 4]);
+        assert_eq!(chunk_sizes(3, 4), vec![3]);
+        assert_eq!(chunk_sizes(0, 4), vec![0]);
+        for (total, max) in [(1usize, 1usize), (17, 5), (100, 7)] {
+            let c = chunk_sizes(total, max);
+            assert_eq!(c.iter().sum::<usize>(), total);
+            assert!(c.iter().all(|&s| s <= max));
+        }
+    }
+
+    #[test]
+    fn tensor_split_parts_are_views() {
+        use crate::base::tensor::Tensor;
+        let t = Tensor::matrix((0..10).map(|i| vec![i as f32, 0.0]).collect()).unwrap();
+        let parent = t.clone();
+        let parts = split_if_needed(t, 4);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(
+            parts.iter().map(|p| p.batch()).collect::<Vec<_>>(),
+            vec![4, 4, 2]
+        );
+        for p in &parts {
+            assert!(p.shares_storage(&parent), "splitter copied tensor rows");
+        }
+        assert_eq!(parts[2].row(1), &[9.0, 0.0]);
     }
 
     #[test]

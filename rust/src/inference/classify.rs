@@ -42,12 +42,15 @@ pub fn classify(handles: &dyn HandleSource, req: &ClassifyRequest) -> Result<Cla
     }
     let input = examples_to_tensor(&req.examples, "x", spec.input_dim)?;
     let outputs = handle.run(&input)?;
+    // The feature tensor came from the global pool; recycle it now
+    // that the model has consumed it.
+    input.recycle_into(&crate::util::pool::BufferPool::global());
     // Exported as (log_probs f32[B,C], class s32[B]).
     let log_probs = outputs[0].as_f32()?;
     let classes = outputs[1].as_i32()?;
     let results = (0..req.examples.len())
         .map(|i| Classification {
-            class: classes.data[i],
+            class: classes.data()[i],
             log_probs: log_probs.row(i).to_vec(),
         })
         .collect();

@@ -281,13 +281,15 @@ impl CompressedBatch {
 }
 
 /// Extract feature `name` from each example into a dense `(B, D)`
-/// tensor (the classify/regress APIs' input path).
+/// tensor (the classify/regress APIs' input path). Rows are written
+/// straight into pooled tensor storage — one allocation (or none, on a
+/// pool hit), no intermediate `Vec`.
 pub fn examples_to_tensor(
     examples: &[Example],
     feature: &str,
     dim: usize,
 ) -> Result<crate::base::tensor::Tensor> {
-    let mut data = Vec::with_capacity(examples.len() * dim);
+    let mut rows = Vec::with_capacity(examples.len());
     for (i, ex) in examples.iter().enumerate() {
         let f = ex.floats(feature)?;
         if f.len() != dim {
@@ -296,9 +298,17 @@ pub fn examples_to_tensor(
                 f.len()
             );
         }
-        data.extend_from_slice(f);
+        rows.push(f);
     }
-    crate::base::tensor::Tensor::new(vec![examples.len(), dim], data)
+    Ok(crate::base::tensor::Tensor::build_with(
+        vec![examples.len(), dim],
+        &crate::util::pool::BufferPool::global(),
+        |buf| {
+            for (i, row) in rows.iter().enumerate() {
+                buf[i * dim..(i + 1) * dim].copy_from_slice(row);
+            }
+        },
+    ))
 }
 
 #[cfg(test)]

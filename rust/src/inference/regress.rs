@@ -35,6 +35,9 @@ pub fn regress(handles: &dyn HandleSource, req: &RegressRequest) -> Result<Regre
     }
     let input = examples_to_tensor(&req.examples, "x", spec.input_dim)?;
     let outputs = handle.run(&input)?;
+    // The feature tensor came from the global pool; recycle it now
+    // that the model has consumed it.
+    input.recycle_into(&crate::util::pool::BufferPool::global());
     let values = outputs[0].as_f32()?.data().to_vec();
     Ok(RegressResponse { model_version: handle.id().version, values })
 }

@@ -1,6 +1,6 @@
 //! Synchronous RPC client + a small connection pool.
 
-use super::frame::{read_frame, write_frame};
+use super::frame::{read_frame_into, write_frame};
 use super::proto::{Request, Response};
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
@@ -8,17 +8,26 @@ use std::net::TcpStream;
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// One connection; one request in flight at a time.
+/// One connection; one request in flight at a time. Encode/decode
+/// scratch buffers persist across calls, so a pooled connection issues
+/// steady-state requests without per-call allocations.
 pub struct RpcClient {
     stream: TcpStream,
     addr: String,
+    encode_buf: Vec<u8>,
+    payload_buf: Vec<u8>,
 }
 
 impl RpcClient {
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
         stream.set_nodelay(true)?;
-        Ok(RpcClient { stream, addr: addr.to_string() })
+        Ok(RpcClient {
+            stream,
+            addr: addr.to_string(),
+            encode_buf: Vec::new(),
+            payload_buf: Vec::new(),
+        })
     }
 
     pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<Self> {
@@ -27,15 +36,22 @@ impl RpcClient {
         let stream = TcpStream::connect_timeout(&sock_addr, timeout)
             .with_context(|| format!("connect {addr}"))?;
         stream.set_nodelay(true)?;
-        Ok(RpcClient { stream, addr: addr.to_string() })
+        Ok(RpcClient {
+            stream,
+            addr: addr.to_string(),
+            encode_buf: Vec::new(),
+            payload_buf: Vec::new(),
+        })
     }
 
     /// Issue one request and wait for the response.
     pub fn call(&mut self, req: &Request) -> Result<Response> {
-        write_frame(&mut self.stream, &req.encode())?;
-        let payload = read_frame(&mut self.stream)?
-            .ok_or_else(|| anyhow!("{}: connection closed mid-call", self.addr))?;
-        Response::decode(&payload)
+        req.encode_into(&mut self.encode_buf);
+        write_frame(&mut self.stream, &self.encode_buf)?;
+        if !read_frame_into(&mut self.stream, &mut self.payload_buf)? {
+            return Err(anyhow!("{}: connection closed mid-call", self.addr));
+        }
+        Response::decode(&self.payload_buf)
     }
 
     /// `call` + error-response unwrapping.

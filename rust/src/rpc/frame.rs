@@ -22,22 +22,37 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
 
 /// Read one frame. Returns `None` on clean EOF at a frame boundary.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut payload = Vec::new();
+    Ok(read_frame_into(r, &mut payload)?.then_some(payload))
+}
+
+/// Read one frame into a caller-owned buffer, reusing its capacity
+/// (the connection-loop variant: one allocation per connection, not
+/// per request). Returns `false` on clean EOF at a frame boundary;
+/// `true` means `buf` holds exactly one frame's payload.
+pub fn read_frame_into<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<bool> {
     let mut len_buf = [0u8; 4];
     // Clean EOF only if zero bytes of the header arrive.
     match r.read(&mut len_buf) {
-        Ok(0) => return Ok(None),
+        Ok(0) => return Ok(false),
         Ok(n) if n < 4 => r.read_exact(&mut len_buf[n..])?,
         Ok(_) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(false),
         Err(e) => return Err(e.into()),
     }
     let len = u32::from_le_bytes(len_buf) as usize;
     if len > MAX_FRAME {
         bail!("incoming frame too large: {len} bytes");
     }
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload)?;
-    Ok(Some(payload))
+    buf.clear();
+    buf.reserve(len);
+    // read_to_end appends into spare capacity without the full-payload
+    // zero-fill a resize + read_exact would pay.
+    let got = r.by_ref().take(len as u64).read_to_end(buf)?;
+    if got < len {
+        bail!("truncated frame: got {got} of {len} payload bytes");
+    }
+    Ok(true)
 }
 
 #[cfg(test)]
@@ -56,6 +71,25 @@ mod tests {
         assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"");
         assert_eq!(read_frame(&mut cur).unwrap().unwrap(), vec![7u8; 1000]);
         assert!(read_frame(&mut cur).unwrap().is_none()); // clean EOF
+    }
+
+    #[test]
+    fn read_into_reuses_capacity() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[9u8; 4096]).unwrap();
+        write_frame(&mut buf, b"tiny").unwrap();
+        write_frame(&mut buf, &[1u8; 100]).unwrap();
+        let mut cur = Cursor::new(buf);
+        let mut payload = Vec::new();
+        assert!(read_frame_into(&mut cur, &mut payload).unwrap());
+        assert_eq!(payload, vec![9u8; 4096]);
+        let cap = payload.capacity();
+        assert!(read_frame_into(&mut cur, &mut payload).unwrap());
+        assert_eq!(payload, b"tiny");
+        assert!(read_frame_into(&mut cur, &mut payload).unwrap());
+        assert_eq!(payload, vec![1u8; 100]);
+        assert_eq!(payload.capacity(), cap, "buffer was reallocated");
+        assert!(!read_frame_into(&mut cur, &mut payload).unwrap()); // clean EOF
     }
 
     #[test]

@@ -5,8 +5,16 @@
 //! TFS² control plane (SetAspired from the Synchronizer, ModelStatus
 //! back). Codec style matches `inference::example`: u8 tags + u32 le
 //! length prefixes, no self-description.
+//!
+//! Hot-path codec properties: request tensors decode **straight into
+//! pooled tensor storage** (wire bytes → the buffer the serving layer
+//! will read, no intermediate `Vec<f32>`), responses encode from
+//! tensor views without materializing owned copies, and
+//! [`Request::encode_into`]/[`Response::encode_into`] let connection
+//! loops reuse one scratch buffer across frames.
 
 use crate::base::tensor::{Tensor, TensorI32};
+use crate::util::pool::BufferPool;
 use crate::inference::example::Example;
 use crate::runtime::pjrt::OutTensor;
 use anyhow::{anyhow, bail, Result};
@@ -162,6 +170,9 @@ impl<'a> Reader<'a> {
             .collect())
     }
 
+    /// Decode a tensor by writing wire bytes directly into pooled
+    /// storage — the buffer handed to the serving layer, zero
+    /// intermediate copies.
     fn tensor(&mut self) -> Result<Tensor> {
         let rank = self.u32()? as usize;
         if rank > 8 {
@@ -171,8 +182,20 @@ impl<'a> Reader<'a> {
         for _ in 0..rank {
             shape.push(self.u32()? as usize);
         }
-        let data = self.f32s()?;
-        Tensor::new(shape, data)
+        let want = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| anyhow!("tensor shape {shape:?} overflows"))?;
+        let n = self.u32()? as usize;
+        if n != want {
+            bail!("tensor data length {n} != shape {shape:?} product {want}");
+        }
+        let raw = self.bytes(n * 4)?;
+        Ok(Tensor::build_with(shape, &BufferPool::global(), |buf| {
+            for (dst, src) in buf.iter_mut().zip(raw.chunks_exact(4)) {
+                *dst = f32::from_le_bytes(src.try_into().unwrap());
+            }
+        }))
     }
 
     fn examples(&mut self) -> Result<Vec<Example>> {
@@ -201,46 +224,53 @@ impl<'a> Reader<'a> {
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Encode into a caller-owned scratch buffer (cleared first), so
+    /// connection loops reuse one allocation across requests.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
         match self {
             Request::Predict { model, version, input } => {
                 out.push(0);
-                put_str(&mut out, model);
-                put_opt_version(&mut out, *version);
-                put_tensor(&mut out, input);
+                put_str(out, model);
+                put_opt_version(out, *version);
+                put_tensor(out, input);
             }
             Request::Classify { model, version, examples } => {
                 out.push(1);
-                put_str(&mut out, model);
-                put_opt_version(&mut out, *version);
-                put_examples(&mut out, examples);
+                put_str(out, model);
+                put_opt_version(out, *version);
+                put_examples(out, examples);
             }
             Request::Regress { model, version, examples } => {
                 out.push(2);
-                put_str(&mut out, model);
-                put_opt_version(&mut out, *version);
-                put_examples(&mut out, examples);
+                put_str(out, model);
+                put_opt_version(out, *version);
+                put_examples(out, examples);
             }
             Request::Lookup { table, key } => {
                 out.push(3);
-                put_str(&mut out, table);
-                put_str(&mut out, key);
+                put_str(out, table);
+                put_str(out, key);
             }
             Request::SetAspired { model, versions } => {
                 out.push(4);
-                put_str(&mut out, model);
-                put_u32(&mut out, versions.len() as u32);
+                put_str(out, model);
+                put_u32(out, versions.len() as u32);
                 for v in versions {
-                    put_u64(&mut out, *v);
+                    put_u64(out, *v);
                 }
             }
             Request::ModelStatus { model } => {
                 out.push(5);
-                put_str(&mut out, model);
+                put_str(out, model);
             }
             Request::Status => out.push(6),
             Request::Ping => out.push(7),
         }
-        out
     }
 
     pub fn decode(buf: &[u8]) -> Result<Request> {
@@ -292,12 +322,12 @@ fn put_out_tensor(out: &mut Vec<u8>, t: &OutTensor) {
         }
         OutTensor::I32(t) => {
             out.push(1);
-            put_u32(out, t.shape.len() as u32);
-            for &d in &t.shape {
+            put_u32(out, t.shape().len() as u32);
+            for &d in t.shape() {
                 put_u32(out, d as u32);
             }
-            put_u32(out, t.data.len() as u32);
-            for x in &t.data {
+            put_u32(out, t.data().len() as u32);
+            for x in t.data() {
                 out.extend_from_slice(&x.to_le_bytes());
             }
         }
@@ -331,38 +361,46 @@ fn read_out_tensor(r: &mut Reader<'_>) -> Result<OutTensor> {
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Encode into a caller-owned scratch buffer (cleared first), so
+    /// connection loops reuse one allocation across responses.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
         match self {
             Response::Predict { model_version, outputs } => {
                 out.push(0);
-                put_u64(&mut out, *model_version);
-                put_u32(&mut out, outputs.len() as u32);
+                put_u64(out, *model_version);
+                put_u32(out, outputs.len() as u32);
                 for t in outputs {
-                    put_out_tensor(&mut out, t);
+                    put_out_tensor(out, t);
                 }
             }
             Response::Classify { model_version, classes, log_probs } => {
                 out.push(1);
-                put_u64(&mut out, *model_version);
-                put_u32(&mut out, classes.len() as u32);
+                put_u64(out, *model_version);
+                put_u32(out, classes.len() as u32);
                 for c in classes {
                     out.extend_from_slice(&c.to_le_bytes());
                 }
-                put_u32(&mut out, log_probs.len() as u32);
+                put_u32(out, log_probs.len() as u32);
                 for row in log_probs {
-                    put_f32s(&mut out, row);
+                    put_f32s(out, row);
                 }
             }
             Response::Regress { model_version, values } => {
                 out.push(2);
-                put_u64(&mut out, *model_version);
-                put_f32s(&mut out, values);
+                put_u64(out, *model_version);
+                put_f32s(out, values);
             }
             Response::Lookup { values } => {
                 out.push(3);
                 match values {
                     Some(v) => {
                         out.push(1);
-                        put_f32s(&mut out, v);
+                        put_f32s(out, v);
                     }
                     None => out.push(0),
                 }
@@ -370,23 +408,22 @@ impl Response {
             Response::Ack => out.push(4),
             Response::ModelStatus { versions } => {
                 out.push(5);
-                put_u32(&mut out, versions.len() as u32);
+                put_u32(out, versions.len() as u32);
                 for (v, state) in versions {
-                    put_u64(&mut out, *v);
-                    put_str(&mut out, state);
+                    put_u64(out, *v);
+                    put_str(out, state);
                 }
             }
             Response::Status { text } => {
                 out.push(6);
-                put_str(&mut out, text);
+                put_str(out, text);
             }
             Response::Pong => out.push(7),
             Response::Error { message } => {
                 out.push(255);
-                put_str(&mut out, message);
+                put_str(out, message);
             }
         }
-        out
     }
 
     pub fn decode(buf: &[u8]) -> Result<Response> {
@@ -527,6 +564,45 @@ mod tests {
         roundtrip_resp(Response::Status { text: "ok\nqps 12".into() });
         roundtrip_resp(Response::Pong);
         roundtrip_resp(Response::Error { message: "boom".into() });
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer() {
+        let mut buf = Vec::new();
+        Request::Ping.encode_into(&mut buf);
+        assert_eq!(Request::decode(&buf).unwrap(), Request::Ping);
+        buf.reserve(1024);
+        let cap = buf.capacity();
+        Request::ModelStatus { model: "m".into() }.encode_into(&mut buf);
+        assert_eq!(buf.capacity(), cap, "encode_into reallocated");
+        assert_eq!(
+            Request::decode(&buf).unwrap(),
+            Request::ModelStatus { model: "m".into() }
+        );
+        let mut rbuf = Vec::new();
+        Response::Pong.encode_into(&mut rbuf);
+        assert_eq!(Response::decode(&rbuf).unwrap(), Response::Pong);
+    }
+
+    #[test]
+    fn decoded_tensor_uses_pooled_class_storage() {
+        // The decode path writes into a dedicated pool-class buffer
+        // at offset 0 (so the serving layer can recycle it after batch
+        // assembly or inference consumes it).
+        let req = Request::Predict {
+            model: "m".into(),
+            version: None,
+            input: Tensor::matrix(vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap(),
+        };
+        match Request::decode(&req.encode()).unwrap() {
+            Request::Predict { input, .. } => {
+                assert_eq!(input.data(), &[1.0, 2.0, 3.0, 4.0]);
+                let class = crate::util::pool::size_class(input.len());
+                assert_eq!(input.storage().len(), class);
+                assert_eq!(input.data().as_ptr(), input.storage().as_ptr());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

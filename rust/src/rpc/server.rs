@@ -1,7 +1,7 @@
 //! Threaded RPC server: accept loop + one handler thread per
 //! connection, framed request/response, graceful shutdown.
 
-use super::frame::{read_frame, write_frame};
+use super::frame::{read_frame_into, write_frame};
 use super::proto::{Request, Response};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -70,24 +70,30 @@ impl RpcServer {
         shutdown: Arc<AtomicBool>,
     ) {
         let _ = stream.set_nodelay(true);
+        // Per-connection scratch: frame payloads land in `payload` and
+        // responses serialize into `encoded` — both reuse their
+        // capacity across every request on this connection.
+        let mut payload = Vec::new();
+        let mut encoded = Vec::new();
         loop {
             if shutdown.load(Ordering::SeqCst) {
                 return;
             }
-            let payload = match read_frame(&mut stream) {
-                Ok(Some(p)) => p,
-                Ok(None) => return, // client hung up
+            match read_frame_into(&mut stream, &mut payload) {
+                Ok(true) => {}
+                Ok(false) => return, // client hung up
                 Err(e) => {
                     crate::log_debug!("connection read error: {e}");
                     return;
                 }
-            };
+            }
             let response = match Request::decode(&payload) {
                 Ok(req) => handler(req),
                 Err(e) => Response::Error { message: format!("bad request: {e}") },
             };
             counter.fetch_add(1, Ordering::Relaxed);
-            if let Err(e) = write_frame(&mut stream, &response.encode()) {
+            response.encode_into(&mut encoded);
+            if let Err(e) = write_frame(&mut stream, &encoded) {
                 crate::log_debug!("connection write error: {e}");
                 return;
             }
@@ -126,6 +132,7 @@ impl Drop for RpcServer {
 mod tests {
     use super::*;
     use crate::rpc::client::RpcClient;
+    use crate::rpc::frame::read_frame;
 
     fn echo_server() -> Arc<RpcServer> {
         RpcServer::start(

@@ -106,9 +106,12 @@ pub fn default_artifacts_root() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// True if `make artifacts` has produced the models examples need.
+/// True if `make artifacts` has produced the models examples need AND
+/// this build can execute them. Without the `xla` feature the PJRT
+/// backend is a stub, so artifact-driven tests/examples must skip even
+/// when the files exist — loading would fail, not run.
 pub fn artifacts_available() -> bool {
-    default_artifacts_root().join("mlp_classifier").is_dir()
+    cfg!(feature = "xla") && default_artifacts_root().join("mlp_classifier").is_dir()
 }
 
 #[cfg(test)]

@@ -38,6 +38,12 @@ impl HloServable {
 
     /// Run a batch: pads the batch dimension up to the nearest compiled
     /// size, executes, and un-pads the outputs.
+    ///
+    /// Ladder-sized inputs (what [`crate::batching::session`] always
+    /// delivers) run with **zero** copies here: no pad materializes and
+    /// the un-padded outputs are O(1) views of the device buffers. Off-
+    /// ladder inputs pad once through the global buffer pool, and the
+    /// padded buffer recycles as soon as the executable is done with it.
     pub fn run(&self, input: &Tensor) -> Result<Vec<OutTensor>> {
         let rows = input.batch();
         if input.rank() != 2 || input.shape()[1] != self.spec.input_dim {
@@ -51,23 +57,15 @@ impl HloServable {
         let ladder: Vec<usize> = self.execs.keys().copied().collect();
         let target = pad_to_allowed(rows, &ladder)
             .ok_or_else(|| anyhow!("batch {rows} exceeds compiled ladder {ladder:?}"))?;
-        let padded;
-        let to_run = if target == rows {
-            input
+        let outputs = if target == rows {
+            self.execs[&target].run(input)?
         } else {
-            padded = input.pad_batch(target)?;
-            &padded
+            let padded = input.pad_batch(target)?;
+            let outputs = self.execs[&target].run(&padded)?;
+            padded.recycle_into(&crate::util::pool::BufferPool::global());
+            outputs
         };
-        let outputs = self.execs[&target].run(to_run)?;
-        outputs
-            .into_iter()
-            .map(|o| {
-                Ok(match o {
-                    OutTensor::F32(t) => OutTensor::F32(t.truncate_batch(rows)?),
-                    OutTensor::I32(t) => OutTensor::I32(t.truncate_batch(rows)?),
-                })
-            })
-            .collect()
+        outputs.into_iter().map(|o| o.truncate_batch(rows)).collect()
     }
 
     pub fn allowed_batch_sizes(&self) -> Vec<usize> {
@@ -147,7 +145,7 @@ mod tests {
         let log_probs = out[0].as_f32().unwrap();
         let class = out[1].as_i32().unwrap();
         assert_eq!(log_probs.shape(), &[3, 4]);
-        assert_eq!(class.shape, vec![3]);
+        assert_eq!(class.shape(), &[3]);
         // log-probs exponentiate to a distribution
         for r in 0..3 {
             let s: f32 = log_probs.row(r).iter().map(|x| x.exp()).sum();

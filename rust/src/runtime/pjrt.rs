@@ -5,13 +5,20 @@
 //! ids, sidestepping the 64-bit-id proto incompatibility), wrap it in an
 //! `XlaComputation`, compile on `PjRtClient::cpu()`, execute with
 //! `Literal` inputs, and unpack the result tuple.
+//!
+//! The `xla` crate is only present in the full build environment, so
+//! the real backend is gated behind the `xla` cargo feature (see
+//! `rust/Cargo.toml`). Without it, [`XlaRuntime`] still constructs —
+//! the rest of the stack (lifecycle, batching, RPC, TFS²) is fully
+//! testable — but compiling/executing HLO returns a clear error.
 
 use crate::base::tensor::{Tensor, TensorI32};
-use anyhow::{anyhow, bail, Context, Result};
-use std::path::Path;
-use std::sync::{Arc, Mutex};
+use anyhow::{bail, Result};
 
 /// An output tensor from a model run.
+///
+/// Both variants are view types: batch-dimension trims and splits on an
+/// `OutTensor` share the device buffer's storage instead of copying.
 #[derive(Debug, Clone, PartialEq)]
 pub enum OutTensor {
     F32(Tensor),
@@ -39,113 +46,189 @@ impl OutTensor {
             OutTensor::I32(t) => t.batch(),
         }
     }
+
+    /// Zero-copy view of the first `n` batch rows (un-padding).
+    pub fn truncate_batch(&self, n: usize) -> Result<OutTensor> {
+        Ok(match self {
+            OutTensor::F32(t) => OutTensor::F32(t.truncate_batch(n)?),
+            OutTensor::I32(t) => OutTensor::I32(t.truncate_batch(n)?),
+        })
+    }
 }
 
-/// The process-wide PJRT client.
-///
-/// Safety: XLA's PJRT CPU client is thread-safe (it is shared across
-/// server threads in TF-Serving itself); the `xla` crate just never
-/// asserted it. We wrap and assert. Compilation is serialized by a
-/// mutex out of caution; execution is concurrent.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    compile_lock: Mutex<()>,
-}
+pub use backend::{CompiledModel, XlaRuntime};
 
-unsafe impl Send for XlaRuntime {}
-unsafe impl Sync for XlaRuntime {}
+#[cfg(feature = "xla")]
+mod backend {
+    use super::{literal_to_tensor, OutTensor};
+    use crate::base::tensor::Tensor;
+    use anyhow::{anyhow, Context, Result};
+    use std::path::Path;
+    use std::sync::{Arc, Mutex};
 
-impl XlaRuntime {
-    /// Create a CPU runtime.
-    pub fn cpu() -> Result<Arc<Self>> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
-        crate::log_info!(
-            "PJRT client up: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Arc::new(XlaRuntime { client, compile_lock: Mutex::new(()) }))
+    /// The process-wide PJRT client.
+    ///
+    /// Safety: XLA's PJRT CPU client is thread-safe (it is shared across
+    /// server threads in TF-Serving itself); the `xla` crate just never
+    /// asserted it. We wrap and assert. Compilation is serialized by a
+    /// mutex out of caution; execution is concurrent.
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        compile_lock: Mutex<()>,
     }
 
-    /// Shared singleton (compiling a client per test is expensive).
-    pub fn shared() -> Result<Arc<Self>> {
-        static SHARED: once_cell::sync::Lazy<Mutex<Option<Arc<XlaRuntime>>>> =
-            once_cell::sync::Lazy::new(|| Mutex::new(None));
-        let mut g = SHARED.lock().unwrap();
-        if let Some(rt) = g.as_ref() {
-            return Ok(Arc::clone(rt));
+    unsafe impl Send for XlaRuntime {}
+    unsafe impl Sync for XlaRuntime {}
+
+    impl XlaRuntime {
+        /// Create a CPU runtime.
+        pub fn cpu() -> Result<Arc<Self>> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+            crate::log_info!(
+                "PJRT client up: platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
+            );
+            Ok(Arc::new(XlaRuntime { client, compile_lock: Mutex::new(()) }))
         }
-        let rt = Self::cpu()?;
-        *g = Some(Arc::clone(&rt));
-        Ok(rt)
+
+        /// Shared singleton (compiling a client per test is expensive).
+        pub fn shared() -> Result<Arc<Self>> {
+            static SHARED: once_cell::sync::Lazy<Mutex<Option<Arc<XlaRuntime>>>> =
+                once_cell::sync::Lazy::new(|| Mutex::new(None));
+            let mut g = SHARED.lock().unwrap();
+            if let Some(rt) = g.as_ref() {
+                return Ok(Arc::clone(rt));
+            }
+            let rt = Self::cpu()?;
+            *g = Some(Arc::clone(&rt));
+            Ok(rt)
+        }
+
+        pub fn platform_name(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile an HLO-text file into an executable.
+        pub fn compile_hlo_file(self: &Arc<Self>, path: &Path) -> Result<CompiledModel> {
+            let _g = self.compile_lock.lock().unwrap();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+            Ok(CompiledModel { exe, _runtime: Arc::clone(self) })
+        }
+
+        /// Compile HLO text from a string (tests).
+        pub fn compile_hlo_text(self: &Arc<Self>, text: &str) -> Result<CompiledModel> {
+            let tmp = std::env::temp_dir().join(format!(
+                "tensorserve-hlo-{}-{:?}.txt",
+                std::process::id(),
+                std::thread::current().id()
+            ));
+            std::fs::write(&tmp, text).context("write temp hlo")?;
+            let result = self.compile_hlo_file(&tmp);
+            let _ = std::fs::remove_file(&tmp);
+            result
+        }
     }
 
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
+    /// One compiled, loaded executable (fixed input shape).
+    pub struct CompiledModel {
+        exe: xla::PjRtLoadedExecutable,
+        /// Keeps the client alive as long as its executables.
+        _runtime: Arc<XlaRuntime>,
     }
 
-    /// Compile an HLO-text file into an executable.
-    pub fn compile_hlo_file(self: &Arc<Self>, path: &Path) -> Result<CompiledModel> {
-        let _g = self.compile_lock.lock().unwrap();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
-        Ok(CompiledModel { exe, _runtime: Arc::clone(self) })
-    }
+    unsafe impl Send for CompiledModel {}
+    unsafe impl Sync for CompiledModel {}
 
-    /// Compile HLO text from a string (tests).
-    pub fn compile_hlo_text(self: &Arc<Self>, text: &str) -> Result<CompiledModel> {
-        let tmp = std::env::temp_dir().join(format!(
-            "tensorserve-hlo-{}-{:?}.txt",
-            std::process::id(),
-            std::thread::current().id()
-        ));
-        std::fs::write(&tmp, text).context("write temp hlo")?;
-        let result = self.compile_hlo_file(&tmp);
-        let _ = std::fs::remove_file(&tmp);
-        result
+    impl CompiledModel {
+        /// Execute with one f32 input tensor; returns the output tuple.
+        pub fn run(&self, input: &Tensor) -> Result<Vec<OutTensor>> {
+            let literal = xla::Literal::vec1(input.data())
+                .reshape(&input.shape().iter().map(|&d| d as i64).collect::<Vec<_>>())
+                .map_err(|e| anyhow!("reshape input: {e}"))?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[literal])
+                .map_err(|e| anyhow!("execute: {e}"))?;
+            let out = result
+                .first()
+                .and_then(|d| d.first())
+                .ok_or_else(|| anyhow!("no output buffer"))?
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch output: {e}"))?;
+            // aot.py lowers with return_tuple=True: unpack the tuple.
+            let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+            parts.into_iter().map(literal_to_tensor).collect()
+        }
     }
 }
 
-/// One compiled, loaded executable (fixed input shape).
-pub struct CompiledModel {
-    exe: xla::PjRtLoadedExecutable,
-    /// Keeps the client alive as long as its executables.
-    _runtime: Arc<XlaRuntime>,
-}
+#[cfg(not(feature = "xla"))]
+mod backend {
+    use super::OutTensor;
+    use crate::base::tensor::Tensor;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+    use std::sync::Arc;
 
-unsafe impl Send for CompiledModel {}
-unsafe impl Sync for CompiledModel {}
+    const UNAVAILABLE: &str =
+        "HLO execution requires the 'xla' feature (offline build has no PJRT backend)";
 
-impl CompiledModel {
-    /// Execute with one f32 input tensor; returns the output tuple.
-    pub fn run(&self, input: &Tensor) -> Result<Vec<OutTensor>> {
-        let literal = xla::Literal::vec1(input.data())
-            .reshape(&input.shape().iter().map(|&d| d as i64).collect::<Vec<_>>())
-            .map_err(|e| anyhow!("reshape input: {e}"))?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[literal])
-            .map_err(|e| anyhow!("execute: {e}"))?;
-        let out = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| anyhow!("no output buffer"))?
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch output: {e}"))?;
-        // aot.py lowers with return_tuple=True: unpack the tuple.
-        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
-        parts.into_iter().map(literal_to_tensor).collect()
+    /// Stub runtime: constructible (so servers and tests that never
+    /// execute HLO keep working), but compilation reports the missing
+    /// backend.
+    pub struct XlaRuntime {
+        _private: (),
+    }
+
+    impl XlaRuntime {
+        pub fn cpu() -> Result<Arc<Self>> {
+            Ok(Arc::new(XlaRuntime { _private: () }))
+        }
+
+        pub fn shared() -> Result<Arc<Self>> {
+            static SHARED: once_cell::sync::Lazy<Arc<XlaRuntime>> =
+                once_cell::sync::Lazy::new(|| Arc::new(XlaRuntime { _private: () }));
+            Ok(Arc::clone(&SHARED))
+        }
+
+        pub fn platform_name(&self) -> String {
+            "stub (no xla feature)".to_string()
+        }
+
+        pub fn compile_hlo_file(self: &Arc<Self>, path: &Path) -> Result<CompiledModel> {
+            bail!("{UNAVAILABLE}: cannot compile {}", path.display())
+        }
+
+        pub fn compile_hlo_text(self: &Arc<Self>, _text: &str) -> Result<CompiledModel> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+
+    /// Never constructed in stub builds; `run` exists so callers
+    /// type-check identically with and without the feature.
+    pub struct CompiledModel {
+        _private: std::convert::Infallible,
+    }
+
+    impl CompiledModel {
+        pub fn run(&self, _input: &Tensor) -> Result<Vec<OutTensor>> {
+            bail!("{UNAVAILABLE}")
+        }
     }
 }
 
+#[cfg(feature = "xla")]
 fn literal_to_tensor(lit: xla::Literal) -> Result<OutTensor> {
+    use anyhow::anyhow;
     let shape = lit
         .array_shape()
         .map_err(|e| anyhow!("output shape: {e}"))?;
@@ -167,8 +250,46 @@ fn literal_to_tensor(lit: xla::Literal) -> Result<OutTensor> {
 mod tests {
     use super::*;
 
-    /// Tiny hand-written HLO: f(x) = x + 1 over f32[2,2], as a 1-tuple.
-    const ADD_ONE_HLO: &str = r#"
+    #[test]
+    fn out_tensor_accessors() {
+        let f = OutTensor::F32(Tensor::zeros(vec![2, 2]));
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+        assert_eq!(f.batch(), 2);
+        let i = OutTensor::I32(TensorI32::new(vec![3], vec![1, 2, 3]).unwrap());
+        assert!(i.as_i32().is_ok());
+        assert_eq!(i.batch(), 3);
+    }
+
+    #[test]
+    fn out_tensor_truncate_is_view() {
+        let t = Tensor::zeros(vec![4, 2]);
+        let o = OutTensor::F32(t.clone());
+        let v = o.truncate_batch(2).unwrap();
+        assert_eq!(v.batch(), 2);
+        assert!(v.as_f32().unwrap().shares_storage(&t));
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_constructs_but_cannot_compile() {
+        let rt = XlaRuntime::shared().unwrap();
+        assert!(rt.platform_name().contains("stub"));
+        let err = rt.compile_hlo_text("HloModule x").unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+        assert!(rt
+            .compile_hlo_file(std::path::Path::new("/nonexistent/x.hlo.txt"))
+            .is_err());
+    }
+
+    #[cfg(feature = "xla")]
+    mod with_backend {
+        use super::*;
+        use std::path::Path;
+        use std::sync::Arc;
+
+        /// Tiny hand-written HLO: f(x) = x + 1 over f32[2,2], as a 1-tuple.
+        const ADD_ONE_HLO: &str = r#"
 HloModule addone, entry_computation_layout={(f32[2,2]{1,0})->(f32[2,2]{1,0})}
 
 ENTRY main {
@@ -180,58 +301,48 @@ ENTRY main {
 }
 "#;
 
-    #[test]
-    fn compile_and_run_hlo_text() {
-        let rt = XlaRuntime::shared().unwrap();
-        let model = rt.compile_hlo_text(ADD_ONE_HLO).unwrap();
-        let input = Tensor::matrix(vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
-        let out = model.run(&input).unwrap();
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].as_f32().unwrap().data(), &[2.0, 3.0, 4.0, 5.0]);
-    }
-
-    #[test]
-    fn run_is_reusable_and_thread_safe() {
-        let rt = XlaRuntime::shared().unwrap();
-        let model = Arc::new(rt.compile_hlo_text(ADD_ONE_HLO).unwrap());
-        let handles: Vec<_> = (0..4)
-            .map(|t| {
-                let m = Arc::clone(&model);
-                std::thread::spawn(move || {
-                    for i in 0..50 {
-                        let v = (t * 50 + i) as f32;
-                        let input = Tensor::new(vec![2, 2], vec![v; 4]).unwrap();
-                        let out = m.run(&input).unwrap();
-                        assert_eq!(out[0].as_f32().unwrap().data(), &[v + 1.0; 4]);
-                    }
-                })
-            })
-            .collect();
-        for h in handles {
-            h.join().unwrap();
+        #[test]
+        fn compile_and_run_hlo_text() {
+            let rt = XlaRuntime::shared().unwrap();
+            let model = rt.compile_hlo_text(ADD_ONE_HLO).unwrap();
+            let input = Tensor::matrix(vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+            let out = model.run(&input).unwrap();
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0].as_f32().unwrap().data(), &[2.0, 3.0, 4.0, 5.0]);
         }
-    }
 
-    #[test]
-    fn bad_hlo_fails_cleanly() {
-        let rt = XlaRuntime::shared().unwrap();
-        assert!(rt.compile_hlo_text("not hlo at all").is_err());
-    }
+        #[test]
+        fn run_is_reusable_and_thread_safe() {
+            let rt = XlaRuntime::shared().unwrap();
+            let model = Arc::new(rt.compile_hlo_text(ADD_ONE_HLO).unwrap());
+            let handles: Vec<_> = (0..4)
+                .map(|t| {
+                    let m = Arc::clone(&model);
+                    std::thread::spawn(move || {
+                        for i in 0..50 {
+                            let v = (t * 50 + i) as f32;
+                            let input = Tensor::new(vec![2, 2], vec![v; 4]).unwrap();
+                            let out = m.run(&input).unwrap();
+                            assert_eq!(out[0].as_f32().unwrap().data(), &[v + 1.0; 4]);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
 
-    #[test]
-    fn missing_file_fails_cleanly() {
-        let rt = XlaRuntime::shared().unwrap();
-        assert!(rt.compile_hlo_file(Path::new("/nonexistent/x.hlo.txt")).is_err());
-    }
+        #[test]
+        fn bad_hlo_fails_cleanly() {
+            let rt = XlaRuntime::shared().unwrap();
+            assert!(rt.compile_hlo_text("not hlo at all").is_err());
+        }
 
-    #[test]
-    fn out_tensor_accessors() {
-        let f = OutTensor::F32(Tensor::zeros(vec![2, 2]));
-        assert!(f.as_f32().is_ok());
-        assert!(f.as_i32().is_err());
-        assert_eq!(f.batch(), 2);
-        let i = OutTensor::I32(TensorI32::new(vec![3], vec![1, 2, 3]).unwrap());
-        assert!(i.as_i32().is_ok());
-        assert_eq!(i.batch(), 3);
+        #[test]
+        fn missing_file_fails_cleanly() {
+            let rt = XlaRuntime::shared().unwrap();
+            assert!(rt.compile_hlo_file(Path::new("/nonexistent/x.hlo.txt")).is_err());
+        }
     }
 }

@@ -213,10 +213,12 @@ impl ServerCore {
         let (api, resp) = match req {
             Request::Ping => ("ping", Response::Pong),
             Request::Predict { model, version, input } => {
-                let r = predict(
-                    self.avm.as_ref(),
-                    &PredictRequest { model: model.clone(), version, input },
-                );
+                let preq = PredictRequest { model: model.clone(), version, input };
+                let r = predict(self.avm.as_ref(), &preq);
+                // The decoded request buffer came from the global pool;
+                // hand it back now that inference has consumed it.
+                preq.input
+                    .recycle_into(&crate::util::pool::BufferPool::global());
                 (
                     "predict",
                     match r {
@@ -293,7 +295,14 @@ impl ServerCore {
                 ("model_status", Response::ModelStatus { versions })
             }
             Request::Status => {
+                // Snapshot buffer-pool state into gauges so the dump
+                // shows the zero-allocation hot path working.
+                crate::util::pool::BufferPool::global().export(&self.registry, "tensor_pool");
                 let mut text = self.registry.dump();
+                text.push_str(&format!(
+                    "pooled_buffer_bytes {}\n",
+                    crate::util::mem::pooled_buffer_bytes()
+                ));
                 text.push_str(&format!("ready {:?}\n", self.avm.basic().all_ready()));
                 ("status", Response::Status { text })
             }

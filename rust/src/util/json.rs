@@ -20,12 +20,19 @@ pub enum Json {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Json {
     // ---------------------------------------------------------- accessors

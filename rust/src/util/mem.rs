@@ -1,9 +1,23 @@
 //! OS-memory helpers backing two §2.1.2 optimizations:
 //!
 //! * *"Releasing memory to the operating system upon servable unload"* —
-//!   [`release_to_os`] (glibc `malloc_trim`).
+//!   [`release_to_os`] (glibc `malloc_trim`, declared directly so no
+//!   `libc` crate is needed in the offline build).
 //! * RSS probing so the transition-policy bench (experiment T4) and the
 //!   TFS² Controller's RAM ledger can observe real memory.
+//!
+//! Plus the process-wide ledger of bytes parked in buffer pools
+//! ([`pooled_buffer_bytes`]): pooled tensor storage shows up in RSS but
+//! is instantly reusable, so capacity accounting and leak triage want
+//! it broken out.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+
+#[cfg(all(target_os = "linux", target_env = "gnu"))]
+extern "C" {
+    // glibc malloc.h; thread-safe (not async-signal-safe).
+    fn malloc_trim(pad: usize) -> i32;
+}
 
 /// Ask the allocator to return free heap pages to the OS.
 ///
@@ -13,8 +27,7 @@
 pub fn release_to_os() -> bool {
     #[cfg(all(target_os = "linux", target_env = "gnu"))]
     {
-        // Safety: malloc_trim is async-signal-unsafe but thread-safe.
-        unsafe { libc::malloc_trim(0) != 0 }
+        unsafe { malloc_trim(0) != 0 }
     }
     #[cfg(not(all(target_os = "linux", target_env = "gnu")))]
     {
@@ -29,8 +42,7 @@ pub fn current_rss_bytes() -> u64 {
         if let Ok(statm) = std::fs::read_to_string("/proc/self/statm") {
             if let Some(rss_pages) = statm.split_whitespace().nth(1) {
                 if let Ok(pages) = rss_pages.parse::<u64>() {
-                    let page = unsafe { libc::sysconf(libc::_SC_PAGESIZE) } as u64;
-                    return pages * page;
+                    return pages * page_size();
                 }
             }
         }
@@ -40,6 +52,41 @@ pub fn current_rss_bytes() -> u64 {
     {
         0
     }
+}
+
+/// System page size in bytes via `sysconf(_SC_PAGESIZE)` (value 30 on
+/// every Linux libc this repo targets), falling back to 4096.
+#[cfg(target_os = "linux")]
+fn page_size() -> u64 {
+    extern "C" {
+        // C `long` return: isize matches long's width on every Linux
+        // target (ILP32 and LP64 alike).
+        fn sysconf(name: i32) -> isize;
+    }
+    const SC_PAGESIZE: i32 = 30;
+    let v = unsafe { sysconf(SC_PAGESIZE) };
+    if v > 0 {
+        v as u64
+    } else {
+        4096
+    }
+}
+
+// ----------------------------------------------------- pool accounting
+
+/// Bytes currently parked in [`crate::util::pool::BufferPool`] shelves,
+/// process-wide. Signed internally so concurrent add/sub never wraps.
+static POOL_BYTES: AtomicI64 = AtomicI64::new(0);
+
+/// Called by buffer pools when they shelve (+) or hand out (-) storage.
+pub fn note_pool_bytes(delta: i64) {
+    POOL_BYTES.fetch_add(delta, Ordering::Relaxed);
+}
+
+/// Bytes of tensor storage currently held by buffer pools (counted in
+/// RSS but free for reuse).
+pub fn pooled_buffer_bytes() -> u64 {
+    POOL_BYTES.load(Ordering::Relaxed).max(0) as u64
 }
 
 /// A deliberately large heap allocation standing in for model weights in

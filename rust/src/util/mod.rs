@@ -7,7 +7,9 @@
 //! pools ([`threadpool`]), metrics with log-bucketed histograms
 //! ([`metrics`]), JSON ([`json`]), a virtual/real clock ([`clock`]),
 //! deterministic PRNG ([`rng`]), a property-testing harness ([`check`]),
-//! logging, CLI flags, and OS-memory helpers ([`mem`]).
+//! logging, CLI flags, OS-memory helpers ([`mem`]), and the size-keyed
+//! tensor-storage recycling pool behind the zero-allocation batching
+//! hot path ([`pool`]).
 
 pub mod argparse;
 pub mod bench;
@@ -18,6 +20,7 @@ pub mod json;
 pub mod logging;
 pub mod mem;
 pub mod metrics;
+pub mod pool;
 pub mod rcu;
 pub mod rng;
 pub mod threadpool;

@@ -1,0 +1,310 @@
+//! Size-class recycling pool for tensor storage buffers.
+//!
+//! The batching hot path allocates one device buffer per merged batch,
+//! and the RPC layer allocates one buffer per decoded request tensor.
+//! [`BufferPool`] shelves uniquely-owned `Arc<[f32]>` allocations in
+//! **power-of-two size classes** (floor [`MIN_CLASS`] elements):
+//! `acquire(len)` rounds up to the class and hands back any shelved
+//! buffer of that class, so steady-state serving performs **zero**
+//! buffer allocations on these paths. Classes rather than exact sizes
+//! keep the shelf count tiny (≤ ~19 classes under the 64 MiB frame
+//! cap) and make every recycled buffer reusable by every future
+//! request — a client sweeping arbitrary tensor sizes cannot pin
+//! unreusable shelves.
+//!
+//! Safety/uniqueness: a buffer is only shelved when the pool would be
+//! its sole owner (`Arc::get_mut` succeeds), and an acquired buffer is
+//! always uniquely owned, so callers may fill it via `Arc::get_mut`.
+//! Contents of a recycled buffer are unspecified; acquirers must write
+//! every element they expose (the assembly path writes rows + zeroes
+//! the padding tail). Releases of non-class-sized buffers (anything
+//! that didn't come from a pool) are declined, not shelved.
+//!
+//! Accounting: bytes shelved are tracked process-wide in
+//! [`crate::util::mem::pooled_buffer_bytes`] (so RSS investigations can
+//! subtract pool-held memory), and hit/miss/recycle counters use
+//! [`crate::util::metrics::Counter`] for lock-free recording.
+
+use crate::util::metrics::Counter;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Smallest buffer class in elements (256 bytes): tiny tensors all
+/// share one shelf instead of fragmenting into per-length shelves.
+pub const MIN_CLASS: usize = 64;
+
+/// Round a requested element count up to its pool class.
+pub fn size_class(len: usize) -> usize {
+    len.next_power_of_two().max(MIN_CLASS)
+}
+
+/// Counter snapshot for tests, the Status dump, and benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Acquires served from a shelved buffer.
+    pub hits: u64,
+    /// Acquires that had to allocate fresh storage.
+    pub misses: u64,
+    /// Releases accepted onto a shelf.
+    pub recycled: u64,
+    /// Releases declined (buffer still shared, or pool at capacity).
+    pub declined: u64,
+    /// Buffers currently shelved.
+    pub buffers_pooled: usize,
+    /// Bytes currently shelved.
+    pub bytes_pooled: usize,
+}
+
+pub struct BufferPool {
+    shelves: Mutex<BTreeMap<usize, Vec<Arc<[f32]>>>>,
+    max_buffers_per_size: usize,
+    max_total_bytes: usize,
+    bytes_pooled: AtomicUsize,
+    buffers_pooled: AtomicUsize,
+    hits: Counter,
+    misses: Counter,
+    recycled: Counter,
+    declined: Counter,
+}
+
+impl BufferPool {
+    pub fn new(max_buffers_per_size: usize, max_total_bytes: usize) -> Self {
+        BufferPool {
+            shelves: Mutex::new(BTreeMap::new()),
+            max_buffers_per_size,
+            max_total_bytes,
+            bytes_pooled: AtomicUsize::new(0),
+            buffers_pooled: AtomicUsize::new(0),
+            hits: Counter::default(),
+            misses: Counter::default(),
+            recycled: Counter::default(),
+            declined: Counter::default(),
+        }
+    }
+
+    /// The process-wide pool the serving stack shares (batch assembly,
+    /// padding, RPC tensor decode).
+    pub fn global() -> Arc<BufferPool> {
+        static GLOBAL: once_cell::sync::Lazy<Arc<BufferPool>> =
+            once_cell::sync::Lazy::new(|| Arc::new(BufferPool::new(32, 256 << 20)));
+        Arc::clone(&GLOBAL)
+    }
+
+    /// A uniquely-owned buffer of **at least** `len` elements (rounded
+    /// up to the size class). Served from the class shelf when
+    /// available, else freshly allocated (zeroed). Recycled contents
+    /// are unspecified — write before read.
+    pub fn acquire(&self, len: usize) -> Arc<[f32]> {
+        if len > 0 {
+            let class = size_class(len);
+            // Counter updates stay inside the shelves lock so they can
+            // never interleave with a concurrent `clear()`'s accounting.
+            let mut shelves = self.shelves.lock().unwrap();
+            if let Some(buf) = shelves.get_mut(&class).and_then(Vec::pop) {
+                self.buffers_pooled.fetch_sub(1, Ordering::Relaxed);
+                self.bytes_pooled
+                    .fetch_sub(class * std::mem::size_of::<f32>(), Ordering::Relaxed);
+                crate::util::mem::note_pool_bytes(
+                    -((class * std::mem::size_of::<f32>()) as i64),
+                );
+                drop(shelves);
+                self.hits.inc();
+                debug_assert_eq!(Arc::strong_count(&buf), 1);
+                return buf;
+            }
+            drop(shelves);
+            self.misses.inc();
+            return std::iter::repeat(0.0).take(class).collect();
+        }
+        self.misses.inc();
+        std::iter::repeat(0.0).take(len).collect()
+    }
+
+    /// Offer a buffer back. Shelved only if it is class-sized (i.e.
+    /// pool-compatible), the pool would be its sole owner, and capacity
+    /// limits allow; otherwise the Arc just drops.
+    pub fn release(&self, mut buf: Arc<[f32]>) {
+        let len = buf.len();
+        // Class + uniqueness gates: arbitrary-length buffers would
+        // fragment the shelves, and a shared buffer may still back
+        // live views.
+        if len < MIN_CLASS || !len.is_power_of_two() || Arc::get_mut(&mut buf).is_none() {
+            self.declined.inc();
+            return;
+        }
+        let bytes = len * std::mem::size_of::<f32>();
+        if self.bytes_pooled.load(Ordering::Relaxed) + bytes > self.max_total_bytes {
+            self.declined.inc();
+            return;
+        }
+        let mut shelves = self.shelves.lock().unwrap();
+        let shelf = shelves.entry(len).or_default();
+        if shelf.len() >= self.max_buffers_per_size {
+            self.declined.inc();
+            return;
+        }
+        shelf.push(buf);
+        // Under the lock: a concurrent `clear()` must observe the push
+        // and this accounting together or not at all.
+        self.buffers_pooled.fetch_add(1, Ordering::Relaxed);
+        self.bytes_pooled.fetch_add(bytes, Ordering::Relaxed);
+        crate::util::mem::note_pool_bytes(bytes as i64);
+        drop(shelves);
+        self.recycled.inc();
+    }
+
+    /// Drop every shelved buffer (e.g. after servable unload, before
+    /// `mem::release_to_os`).
+    pub fn clear(&self) {
+        let mut shelves = self.shelves.lock().unwrap();
+        let bytes: usize = shelves
+            .values()
+            .flat_map(|v| v.iter())
+            .map(|b| b.len() * std::mem::size_of::<f32>())
+            .sum();
+        let count: usize = shelves.values().map(Vec::len).sum();
+        shelves.clear();
+        self.buffers_pooled.fetch_sub(count, Ordering::Relaxed);
+        self.bytes_pooled.fetch_sub(bytes, Ordering::Relaxed);
+        crate::util::mem::note_pool_bytes(-(bytes as i64));
+        drop(shelves);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            recycled: self.recycled.get(),
+            declined: self.declined.get(),
+            buffers_pooled: self.buffers_pooled.load(Ordering::Relaxed),
+            bytes_pooled: self.bytes_pooled.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Publish current pool state into a metrics registry (the server's
+    /// Status dump calls this right before dumping).
+    pub fn export(&self, registry: &crate::util::metrics::Registry, prefix: &str) {
+        let s = self.stats();
+        registry.gauge(&format!("{prefix}.hits")).set(s.hits as i64);
+        registry.gauge(&format!("{prefix}.misses")).set(s.misses as i64);
+        registry.gauge(&format!("{prefix}.recycled")).set(s.recycled as i64);
+        registry.gauge(&format!("{prefix}.declined")).set(s.declined as i64);
+        registry
+            .gauge(&format!("{prefix}.buffers_pooled"))
+            .set(s.buffers_pooled as i64);
+        registry
+            .gauge(&format!("{prefix}.bytes_pooled"))
+            .set(s.bytes_pooled as i64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit_roundtrip() {
+        let pool = BufferPool::new(4, 1 << 20);
+        let a = pool.acquire(16);
+        assert_eq!(a.len(), size_class(16)); // rounded up to the class
+        assert!(a.len() >= 16);
+        assert_eq!(pool.stats().misses, 1);
+        let ptr = a.as_ptr();
+        pool.release(a);
+        assert_eq!(pool.stats().recycled, 1);
+        assert_eq!(pool.stats().buffers_pooled, 1);
+        let b = pool.acquire(16);
+        assert_eq!(b.as_ptr(), ptr, "did not recycle the same allocation");
+        assert_eq!(pool.stats().hits, 1);
+        assert_eq!(pool.stats().buffers_pooled, 0);
+    }
+
+    #[test]
+    fn size_classes() {
+        assert_eq!(size_class(1), MIN_CLASS);
+        assert_eq!(size_class(MIN_CLASS), MIN_CLASS);
+        assert_eq!(size_class(MIN_CLASS + 1), MIN_CLASS * 2);
+        assert_eq!(size_class(100), 128);
+        assert_eq!(size_class(128), 128);
+    }
+
+    #[test]
+    fn classes_do_not_cross() {
+        let pool = BufferPool::new(4, 1 << 20);
+        pool.release(pool.acquire(8)); // class 64
+        let b = pool.acquire(100); // class 128
+        assert_eq!(b.len(), 128);
+        assert_eq!(pool.stats().hits, 0, "wrong-class buffer handed out");
+        // …but same-class different lengths share a shelf by design.
+        let c = pool.acquire(3); // class 64 → hit
+        assert_eq!(c.len(), 64);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn non_class_releases_declined() {
+        let pool = BufferPool::new(4, 1 << 20);
+        // A buffer that didn't come from a pool (arbitrary length).
+        let odd: Arc<[f32]> = vec![0.0; 100].into();
+        pool.release(odd);
+        assert_eq!(pool.stats().buffers_pooled, 0);
+        assert_eq!(pool.stats().declined, 1);
+    }
+
+    #[test]
+    fn shared_buffers_declined() {
+        let pool = BufferPool::new(4, 1 << 20);
+        let a = pool.acquire(4);
+        let clone = Arc::clone(&a);
+        pool.release(a);
+        assert_eq!(pool.stats().declined, 1);
+        assert_eq!(pool.stats().buffers_pooled, 0);
+        drop(clone);
+    }
+
+    #[test]
+    fn capacity_limits_enforced() {
+        let pool = BufferPool::new(2, 1 << 20);
+        let bufs: Vec<_> = (0..3).map(|_| pool.acquire(4)).collect();
+        for b in bufs {
+            pool.release(b);
+        }
+        // Per-class shelf cap = 2: third release declined.
+        assert_eq!(pool.stats().buffers_pooled, 2);
+        assert_eq!(pool.stats().declined, 1);
+
+        // Total-byte cap sized for exactly one MIN_CLASS buffer.
+        let tiny = BufferPool::new(8, MIN_CLASS * std::mem::size_of::<f32>());
+        tiny.release(tiny.acquire(4));
+        tiny.release(tiny.acquire(4));
+        assert_eq!(tiny.stats().buffers_pooled, 1, "byte cap ignored");
+    }
+
+    #[test]
+    fn zero_len_and_clear() {
+        let pool = BufferPool::new(4, 1 << 20);
+        let z = pool.acquire(0);
+        assert_eq!(z.len(), 0);
+        pool.release(z); // declined, not shelved
+        assert_eq!(pool.stats().buffers_pooled, 0);
+        pool.release(pool.acquire(8)); // class 64
+        pool.release(pool.acquire(100)); // class 128
+        assert_eq!(pool.stats().buffers_pooled, 2);
+        pool.clear();
+        let s = pool.stats();
+        assert_eq!(s.buffers_pooled, 0);
+        assert_eq!(s.bytes_pooled, 0);
+    }
+
+    #[test]
+    fn acquired_buffers_are_unique_and_writable() {
+        let pool = BufferPool::new(4, 1 << 20);
+        pool.release(pool.acquire(4));
+        let mut b = pool.acquire(4);
+        let m = Arc::get_mut(&mut b).expect("pooled buffer not unique");
+        m.fill(3.0);
+        assert_eq!(&b[..4], &[3.0; 4]);
+        assert_eq!(b.len(), MIN_CLASS);
+    }
+}

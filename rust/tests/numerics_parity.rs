@@ -54,8 +54,8 @@ fn check_version(model: &str, version: u64) {
                 }
             }
             OutTensor::I32(t) => {
-                assert_eq!(t.data.len(), values.len());
-                for (j, (a, b)) in t.data.iter().zip(&values).enumerate() {
+                assert_eq!(t.data().len(), values.len());
+                for (j, (a, b)) in t.data().iter().zip(&values).enumerate() {
                     assert_eq!(
                         *a as f64, *b,
                         "{model}:{version} output {i}[{j}]: rust {a} vs jax {b}"
