@@ -1,0 +1,17 @@
+# Convenience targets. `make check` is the tier-1 gate CI and PRs run.
+
+.PHONY: check bench artifacts
+
+check:
+	./scripts/check.sh
+
+# Perf trajectory: emits BENCH_batching.json / BENCH_throughput.json
+# (the latter includes request-codec ns/op for API-overhead tracking).
+bench:
+	cargo bench --bench bench_batching
+	cargo bench --bench bench_throughput
+
+# AOT-compile model artifacts (requires the full Python/JAX build
+# environment; see python/compile/aot.py).
+artifacts:
+	python3 python/compile/aot.py

@@ -56,11 +56,11 @@ fn main() {
                 if c.is_none() {
                     *c = Some(RpcClient::connect(&addr)?);
                 }
-                let resp = c.as_mut().unwrap().call_ok(&Request::Predict {
-                    model: "mlp_classifier".into(),
-                    version: None,
-                    input: Tensor::zeros(vec![1, 32]),
-                })?;
+                let resp = c.as_mut().unwrap().call_ok(&Request::predict(
+                    "mlp_classifier",
+                    None,
+                    Tensor::zeros(vec![1, 32]),
+                ))?;
                 anyhow::ensure!(matches!(resp, Response::Predict { .. }));
                 Ok(())
             })
@@ -106,11 +106,7 @@ fn main() {
         let stats = closed_loop(8, dur, move |_| {
             predict(
                 avm.as_ref(),
-                &PredictRequest {
-                    model: "mlp_classifier".into(),
-                    version: None,
-                    input: Tensor::zeros(vec![1, 32]),
-                },
+                &PredictRequest::single("mlp_classifier", None, Tensor::zeros(vec![1, 32])),
             )?;
             Ok(())
         });
@@ -134,11 +130,11 @@ fn main() {
                 if c.is_none() {
                     *c = Some(RpcClient::connect(&addr)?);
                 }
-                c.as_mut().unwrap().call_ok(&Request::Predict {
-                    model: "mlp_classifier".into(),
-                    version: None,
-                    input: Tensor::zeros(vec![1, 32]),
-                })?;
+                c.as_mut().unwrap().call_ok(&Request::predict(
+                    "mlp_classifier",
+                    None,
+                    Tensor::zeros(vec![1, 32]),
+                ))?;
                 Ok(())
             })
         });

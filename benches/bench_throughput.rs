@@ -122,12 +122,55 @@ fn main() {
     }
     t.print();
 
+    // ---- request codec cost (API overhead tracking) ------------------
+    // The signature-addressed wire format adds structure to every
+    // Predict frame; decode ns/op is tracked here so API redesigns
+    // show up in the trajectory.
+    let mut t = Table::new(
+        "T1d: request codec cost (Predict b=4, 32 features, named input)",
+        &["op", "ns/op", "bytes"],
+    );
+    let mut codec_json = Vec::new();
+    {
+        use tensorserve::base::tensor::Tensor;
+        use tensorserve::rpc::proto::Request;
+        let req = Request::predict("model-0", None, Tensor::zeros(vec![4, 32]));
+        let encoded = req.encode();
+        let iters = 100_000u32;
+        let t0 = std::time::Instant::now();
+        let mut buf = Vec::new();
+        for _ in 0..iters {
+            req.encode_framed_into(&mut buf);
+            std::hint::black_box(&buf);
+        }
+        let encode_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(Request::decode(&encoded).unwrap());
+        }
+        let decode_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        for (op, ns) in [("encode_framed", encode_ns), ("decode", decode_ns)] {
+            t.row(vec![
+                op.to_string(),
+                format!("{ns:.0}"),
+                encoded.len().to_string(),
+            ]);
+            codec_json.push(Json::obj(vec![
+                ("op", Json::str(op)),
+                ("ns_per_op", Json::num(ns)),
+                ("frame_bytes", Json::num(encoded.len() as f64)),
+            ]));
+        }
+    }
+    t.print();
+
     // ---- machine-readable trajectory: BENCH_throughput.json ---------
     let json = Json::obj(vec![
         ("bench", Json::str("bench_throughput")),
         ("cores", Json::num(cores as f64)),
         ("thread_sweep", Json::Arr(sweep_json)),
         ("model_sweep", Json::Arr(models_json)),
+        ("request_codec", Json::Arr(codec_json)),
     ]);
     let out = "BENCH_throughput.json";
     match std::fs::write(out, json.to_string_pretty()) {

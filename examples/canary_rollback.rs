@@ -77,21 +77,13 @@ fn main() -> anyhow::Result<()> {
         let ex = example(seed);
         let primary = classify(
             core.avm().as_ref(),
-            &ClassifyRequest {
-                model: "mlp_classifier".into(),
-                version: Some(1),
-                examples: vec![ex.clone()],
-            },
+            &ClassifyRequest::simple("mlp_classifier", Some(1), vec![ex.clone()]),
         )?;
         // Tee ~25% of traffic to the canary.
         if seed % 4 == 0 {
             let canary = classify(
                 core.avm().as_ref(),
-                &ClassifyRequest {
-                    model: "mlp_classifier".into(),
-                    version: Some(2),
-                    examples: vec![ex],
-                },
+                &ClassifyRequest::simple("mlp_classifier", Some(2), vec![ex]),
             )?;
             total += 1;
             if canary.results[0].class == primary.results[0].class {

@@ -80,11 +80,10 @@ fn main() -> anyhow::Result<()> {
                 let mut rng = Rng::new(tid as u64 * 7919);
                 let examples: Vec<Example> =
                     (0..4).map(|_| gaussian_example(&mut rng)).collect();
-                let resp = c.as_mut().unwrap().call_ok(&Request::Classify {
-                    model: "mlp_classifier".into(),
-                    version: None,
-                    examples,
-                })?;
+                let resp = c
+                    .as_mut()
+                    .unwrap()
+                    .call_ok(&Request::classify("mlp_classifier", None, examples))?;
                 anyhow::ensure!(matches!(resp, Response::Classify { .. }));
                 Ok(())
             })
@@ -100,11 +99,11 @@ fn main() -> anyhow::Result<()> {
         let stats = open_loop(300.0, Duration::from_secs(4), 8, 42, move || {
             let mut client = RpcClient::connect(&addr)?;
             let mut rng = Rng::new(1);
-            let resp = client.call_ok(&Request::Regress {
-                model: "mlp_regressor".into(),
-                version: None,
-                examples: vec![gaussian_example(&mut rng)],
-            })?;
+            let resp = client.call_ok(&Request::regress(
+                "mlp_regressor",
+                None,
+                vec![gaussian_example(&mut rng)],
+            ))?;
             anyhow::ensure!(matches!(resp, Response::Regress { .. }));
             Ok(())
         });
@@ -216,11 +215,8 @@ fn main() -> anyhow::Result<()> {
         // 64; bigger requests would go through the splitter).
         let mut values = Vec::new();
         for chunk in examples.chunks(64) {
-            let resp = client.call_ok(&Request::Regress {
-                model: "mlp_regressor".into(),
-                version: None,
-                examples: chunk.to_vec(),
-            })?;
+            let resp =
+                client.call_ok(&Request::regress("mlp_regressor", None, chunk.to_vec()))?;
             match resp {
                 Response::Regress { values: v, .. } => values.extend(v),
                 other => anyhow::bail!("unexpected {other:?}"),
@@ -240,16 +236,16 @@ fn main() -> anyhow::Result<()> {
 
         // classifier v1/v2 agreement over the served path
         let agree = {
-            let c1 = client.call_ok(&Request::Classify {
-                model: "mlp_classifier".into(),
-                version: Some(1),
-                examples: examples[..64].to_vec(),
-            })?;
-            let c2 = client.call_ok(&Request::Classify {
-                model: "mlp_classifier".into(),
-                version: Some(2),
-                examples: examples[..64].to_vec(),
-            })?;
+            let c1 = client.call_ok(&Request::classify(
+                "mlp_classifier",
+                Some(1),
+                examples[..64].to_vec(),
+            ))?;
+            let c2 = client.call_ok(&Request::classify(
+                "mlp_classifier",
+                Some(2),
+                examples[..64].to_vec(),
+            ))?;
             match (c1, c2) {
                 (
                     Response::Classify { classes: a, .. },

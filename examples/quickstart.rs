@@ -14,6 +14,7 @@ use tensorserve::base::loader::Loader;
 use tensorserve::base::servable::ServableId;
 use tensorserve::base::tensor::Tensor;
 use tensorserve::inference::predict::{predict, PredictRequest};
+use tensorserve::inference::ModelSpec;
 use tensorserve::lifecycle::basic_manager::BasicManager;
 use tensorserve::runtime::artifacts::{artifacts_available, default_artifacts_root};
 use tensorserve::runtime::hlo_servable::HloLoader;
@@ -42,31 +43,37 @@ fn main() -> anyhow::Result<()> {
     }
     println!("ready versions: {:?}", manager.ready_versions("mlp_classifier"));
 
-    // 3. Serve: latest version by default.
+    // 3. Serve: latest version by default, named input against the
+    //    default serving signature, named outputs back.
     let input = Tensor::matrix(vec![
         (0..32).map(|j| (j as f32 * 0.3).sin()).collect(),
         (0..32).map(|j| (j as f32 * 0.7).cos()).collect(),
     ])?;
     let resp = predict(
         manager.as_ref(),
-        &PredictRequest { model: "mlp_classifier".into(), version: None, input: input.clone() },
+        &PredictRequest {
+            spec: ModelSpec::latest("mlp_classifier"),
+            signature: String::new(), // = "serving_default"
+            inputs: vec![("x".into(), input.clone())],
+        },
     )?;
     println!(
         "served by version {}, classes = {:?}",
         resp.model_version,
-        resp.outputs[1].as_i32()?.data()
+        resp.output("class")?.as_i32()?.data()
     );
     assert_eq!(resp.model_version, 2);
 
-    // 4. Pin an explicit version (what a rollback would serve).
+    // 4. Pin an explicit version (what a rollback would serve) — the
+    //    legacy single-tensor constructor still works.
     let resp1 = predict(
         manager.as_ref(),
-        &PredictRequest { model: "mlp_classifier".into(), version: Some(1), input },
+        &PredictRequest::single("mlp_classifier", Some(1), input),
     )?;
     println!(
         "served by version {}, classes = {:?}",
         resp1.model_version,
-        resp1.outputs[1].as_i32()?.data()
+        resp1.output("class")?.as_i32()?.data()
     );
     assert_eq!(resp1.model_version, 1);
 

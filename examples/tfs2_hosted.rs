@@ -19,7 +19,7 @@ use std::time::Duration;
 use tensorserve::inference::example::{Example, Feature};
 use tensorserve::rpc::client::ClientPool;
 use tensorserve::rpc::proto::{Request, Response};
-use tensorserve::runtime::artifacts::{artifacts_available, default_artifacts_root, ModelSpec};
+use tensorserve::runtime::artifacts::{artifacts_available, default_artifacts_root, ArtifactSpec};
 use tensorserve::tfs2::autoscaler::{Autoscaler, AutoscalerConfig};
 use tensorserve::tfs2::cluster::Cluster;
 use tensorserve::tfs2::controller::Controller;
@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
     // --- "add model" x2: Controller estimates RAM from the spec and
     //     bin-packs (best-fit) onto jobs. ------------------------------
     for model in ["mlp_classifier", "mlp_regressor"] {
-        let spec = ModelSpec::load(&artifacts.join(model).join("2"))?;
+        let spec = ArtifactSpec::load(&artifacts.join(model).join("2"))?;
         let job = controller.add_model(
             model,
             artifacts.join(model).to_str().unwrap(),
@@ -92,11 +92,7 @@ fn main() -> anyhow::Result<()> {
             Example::new().with("x", Feature::Floats(x))
         })
         .collect();
-    let resp = router.route(&Request::Classify {
-        model: "mlp_classifier".into(),
-        version: None,
-        examples: examples.clone(),
-    })?;
+    let resp = router.route(&Request::classify("mlp_classifier", None, examples.clone()))?;
     match &resp {
         Response::Classify { model_version, classes, .. } => {
             println!("classify via router: v{model_version} classes={classes:?}");
@@ -117,11 +113,7 @@ fn main() -> anyhow::Result<()> {
     // prediction-level comparison).
     controller.promote_canary("mlp_classifier")?;
     sync_until_ready(&sync, &controller, &router, 2)?;
-    let resp = router.route(&Request::Classify {
-        model: "mlp_classifier".into(),
-        version: None,
-        examples,
-    })?;
+    let resp = router.route(&Request::classify("mlp_classifier", None, examples))?;
     if let Response::Classify { model_version, .. } = resp {
         println!("after promote: served by v{model_version}");
         assert_eq!(model_version, 2);

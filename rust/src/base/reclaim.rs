@@ -43,9 +43,11 @@ impl Reclaimer {
                         Msg::ReclaimAndTrim(b) => {
                             drop(b);
                             // Pooled tensor buffers would keep trimmed
-                            // pages resident: empty the shelves first
-                            // so malloc_trim can hand them back.
+                            // pages resident: empty the shelves (both
+                            // element types) first so malloc_trim can
+                            // hand them back.
                             crate::util::pool::BufferPool::global().clear();
+                            crate::util::pool::BufferPool::global_i32().clear();
                             crate::util::mem::release_to_os();
                         }
                         Msg::Flush(reply) => {

@@ -295,6 +295,32 @@ impl TensorI32 {
         Ok(TensorI32 { shape, storage: data.into(), offset: 0 })
     }
 
+    /// Allocate storage for `shape` (recycled from `pool` when
+    /// possible) and fill it in place — the i32 mirror of
+    /// [`Tensor::build_with`], so classifier class outputs go through
+    /// the pool like f32 tensors.
+    pub fn build_with(
+        shape: Vec<usize>,
+        pool: &BufferPool<i32>,
+        fill: impl FnOnce(&mut [i32]),
+    ) -> Self {
+        let n: usize = shape.iter().product();
+        let mut storage = pool.acquire(n);
+        // The pool guarantees a uniquely-owned buffer.
+        fill(&mut Arc::get_mut(&mut storage).expect("pool buffer uniquely owned")[..n]);
+        TensorI32 { shape, storage, offset: 0 }
+    }
+
+    /// Recycle this tensor's backing buffer into `pool` if this view
+    /// starts at the allocation's origin (mirror of
+    /// [`Tensor::recycle_into`]; the pool declines shared or
+    /// non-class-sized buffers).
+    pub fn recycle_into(self, pool: &BufferPool<i32>) {
+        if self.offset == 0 {
+            pool.release(self.storage);
+        }
+    }
+
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
@@ -502,6 +528,27 @@ mod tests {
         let t2 = Tensor::build_with(vec![6], &pool, |buf| buf.fill(9.0));
         assert_eq!(t2.data().as_ptr(), ptr, "pool did not recycle");
         assert_eq!(t2.data(), &[9.0; 6]);
+    }
+
+    #[test]
+    fn i32_build_with_recycles_through_pool() {
+        let pool: BufferPool<i32> = BufferPool::new(8, 1 << 20);
+        let t = TensorI32::build_with(vec![3], &pool, |buf| {
+            for (i, x) in buf.iter_mut().enumerate() {
+                *x = i as i32;
+            }
+        });
+        assert_eq!(t.data(), &[0, 1, 2]);
+        let ptr = t.data().as_ptr();
+        t.recycle_into(&pool);
+        let t2 = TensorI32::build_with(vec![4], &pool, |buf| buf.fill(7));
+        assert_eq!(t2.data().as_ptr(), ptr, "i32 pool did not recycle");
+        assert_eq!(t2.data(), &[7; 4]);
+        // Shared storage is declined, same as f32.
+        let view = t2.truncate_batch(2).unwrap();
+        t2.recycle_into(&pool);
+        assert_eq!(view.data(), &[7, 7]);
+        assert_eq!(pool.stats().buffers_pooled, 0);
     }
 
     #[test]

@@ -1,16 +1,35 @@
 //! The Classification API (§2.2): typed, example-based inference for
-//! models exported with the `classify` signature.
+//! signatures exported with the `classify` method.
 
-use super::example::{examples_to_tensor, Example};
-use super::predict::HandleSource;
-use anyhow::{bail, Result};
+use super::example::Example;
+use super::predict::{run_example_signature, HandleSource};
+use super::ModelSpec;
+use crate::runtime::pjrt::OutTensor;
+use anyhow::{anyhow, bail, Result};
 
-/// Classify request: a batch of canonical examples.
+/// Classify request: a batch of canonical examples against one
+/// classify signature of a model.
 #[derive(Debug, Clone)]
 pub struct ClassifyRequest {
-    pub model: String,
-    pub version: Option<u64>,
+    pub spec: ModelSpec,
+    /// Signature to invoke; `""` means the default serving signature.
+    pub signature: String,
     pub examples: Vec<Example>,
+}
+
+impl ClassifyRequest {
+    /// Legacy constructor: default signature, (model, version?) addressing.
+    pub fn simple(
+        model: impl Into<String>,
+        version: Option<u64>,
+        examples: Vec<Example>,
+    ) -> Self {
+        ClassifyRequest {
+            spec: ModelSpec::named(model, version),
+            signature: String::new(),
+            examples,
+        }
+    }
 }
 
 /// Per-example result: argmax class + per-class log-probabilities.
@@ -26,35 +45,78 @@ pub struct ClassifyResponse {
     pub results: Vec<Classification>,
 }
 
+/// The signature's sole output matching `pred` — ambiguity (two
+/// matching outputs) is an error naming the candidates, never a silent
+/// first-match binding.
+pub(crate) fn sole_matching_output<'a>(
+    sig_name: &str,
+    named: &'a [(String, OutTensor)],
+    what: &str,
+    pred: impl Fn(&OutTensor) -> bool,
+) -> Result<&'a OutTensor> {
+    let mut hits = named.iter().filter(|(_, t)| pred(t));
+    let first = hits
+        .next()
+        .ok_or_else(|| anyhow!("signature '{sig_name}' has no {what} output"))?;
+    if let Some(second) = hits.next() {
+        bail!(
+            "signature '{sig_name}' is ambiguous: both '{}' and '{}' are {what} outputs \
+             — declare a narrower signature",
+            first.0,
+            second.0
+        );
+    }
+    Ok(&first.1)
+}
+
+/// Extract per-example classifications from a signature's named
+/// outputs: the s32 output carries classes, the rank-2 f32 output the
+/// per-class log-probabilities.
+pub(crate) fn classification_results(
+    sig_name: &str,
+    named: &[(String, OutTensor)],
+    n: usize,
+) -> Result<Vec<Classification>> {
+    let classes = sole_matching_output(sig_name, named, "s32 class", |t| {
+        t.as_i32().is_ok()
+    })?
+    .as_i32()?;
+    let log_probs = sole_matching_output(
+        sig_name,
+        named,
+        "f32 [batch, classes] scores",
+        |t| t.as_f32().map(|t| t.rank() == 2).unwrap_or(false),
+    )?
+    .as_f32()?;
+    if classes.len() < n || log_probs.batch() < n {
+        bail!(
+            "signature '{sig_name}': outputs cover {} classes / {} score rows, want {n}",
+            classes.len(),
+            log_probs.batch()
+        );
+    }
+    Ok((0..n)
+        .map(|i| Classification {
+            class: classes.data()[i],
+            log_probs: log_probs.row(i).to_vec(),
+        })
+        .collect())
+}
+
 /// Execute a classification request.
 pub fn classify(handles: &dyn HandleSource, req: &ClassifyRequest) -> Result<ClassifyResponse> {
     if req.examples.is_empty() {
         bail!("classify: empty example list");
     }
-    let handle = handles.hlo_handle(&req.model, req.version)?;
-    let spec = &handle.spec;
-    if spec.signature != "classify" {
-        bail!(
-            "model '{}' has signature '{}', not classify",
-            req.model,
-            spec.signature
-        );
-    }
-    let input = examples_to_tensor(&req.examples, "x", spec.input_dim)?;
-    let outputs = handle.run(&input)?;
-    // The feature tensor came from the global pool; recycle it now
-    // that the model has consumed it.
-    input.recycle_into(&crate::util::pool::BufferPool::global());
-    // Exported as (log_probs f32[B,C], class s32[B]).
-    let log_probs = outputs[0].as_f32()?;
-    let classes = outputs[1].as_i32()?;
-    let results = (0..req.examples.len())
-        .map(|i| Classification {
-            class: classes.data()[i],
-            log_probs: log_probs.row(i).to_vec(),
-        })
-        .collect();
-    Ok(ClassifyResponse { model_version: handle.id().version, results })
+    let (model_version, results) = run_example_signature(
+        handles,
+        &req.spec,
+        &req.signature,
+        "classify",
+        &req.examples,
+        |sig_name, named| classification_results(sig_name, named, req.examples.len()),
+    )?;
+    Ok(ClassifyResponse { model_version, results })
 }
 
 #[cfg(test)]
@@ -64,8 +126,10 @@ mod tests {
     use crate::base::servable::ServableId;
     use crate::inference::example::Feature;
     use crate::lifecycle::basic_manager::BasicManager;
-    use crate::runtime::artifacts::{artifacts_available, default_artifacts_root};
-    use crate::runtime::hlo_servable::HloLoader;
+    use crate::runtime::artifacts::{
+        artifacts_available, default_artifacts_root, ArtifactSpec,
+    };
+    use crate::runtime::hlo_servable::{synthetic_loader, HloLoader};
     use crate::runtime::pjrt::XlaRuntime;
     use std::sync::Arc;
     use std::time::Duration;
@@ -98,11 +162,7 @@ mod tests {
         let Some(m) = manager() else { return };
         let resp = classify(
             m.as_ref(),
-            &ClassifyRequest {
-                model: "mlp_classifier".into(),
-                version: None,
-                examples: (0..5).map(example).collect(),
-            },
+            &ClassifyRequest::simple("mlp_classifier", None, (0..5).map(example).collect()),
         )
         .unwrap();
         assert_eq!(resp.results.len(), 5);
@@ -128,11 +188,7 @@ mod tests {
         let Some(m) = manager() else { return };
         let err = classify(
             m.as_ref(),
-            &ClassifyRequest {
-                model: "mlp_regressor".into(),
-                version: None,
-                examples: vec![example(0)],
-            },
+            &ClassifyRequest::simple("mlp_regressor", None, vec![example(0)]),
         )
         .unwrap_err();
         assert!(err.to_string().contains("signature"), "{err}");
@@ -143,23 +199,58 @@ mod tests {
         let Some(m) = manager() else { return };
         assert!(classify(
             m.as_ref(),
-            &ClassifyRequest {
-                model: "mlp_classifier".into(),
-                version: None,
-                examples: vec![],
-            },
+            &ClassifyRequest::simple("mlp_classifier", None, vec![]),
         )
         .is_err());
         // Wrong feature dimension.
         let bad = Example::new().with("x", Feature::Floats(vec![1.0; 3]));
         assert!(classify(
             m.as_ref(),
-            &ClassifyRequest {
-                model: "mlp_classifier".into(),
-                version: None,
-                examples: vec![bad],
-            },
+            &ClassifyRequest::simple("mlp_classifier", None, vec![bad]),
         )
         .is_err());
+    }
+
+    #[test]
+    fn classify_synthetic_end_to_end() {
+        // Runs in every build: the synthetic engine honors the same
+        // signature contract as compiled artifacts.
+        let m = BasicManager::with_defaults();
+        m.load_and_wait(
+            ServableId::new("syn", 1),
+            synthetic_loader(ArtifactSpec::synthetic_classifier("syn", 1, 8, 3)),
+            Duration::from_secs(10),
+        )
+        .unwrap();
+        let ex = |i: usize| {
+            Example::new().with(
+                "x",
+                Feature::Floats((0..8).map(|j| ((i * 3 + j) as f32).sin()).collect()),
+            )
+        };
+        let resp = classify(
+            m.as_ref(),
+            &ClassifyRequest::simple("syn", None, (0..4).map(ex).collect()),
+        )
+        .unwrap();
+        assert_eq!(resp.model_version, 1);
+        assert_eq!(resp.results.len(), 4);
+        for r in &resp.results {
+            assert_eq!(r.log_probs.len(), 3);
+            assert!((0..3).contains(&r.class));
+        }
+        // Method mismatch reported clearly: classify against a
+        // regress-only signature name.
+        let err = classify(
+            m.as_ref(),
+            &ClassifyRequest {
+                spec: ModelSpec::latest("syn"),
+                signature: "nope".into(),
+                examples: vec![ex(0)],
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("nope"), "{err}");
     }
 }

@@ -1,11 +1,21 @@
 //! Inference APIs (paper §2.2).
 //!
+//! Every inference request addresses a model through a [`ModelSpec`]
+//! — name plus an optional pinned version **or** version label
+//! ("canary"/"stable", resolved by
+//! [`crate::lifecycle::labels::LabelResolver`]) — and a named
+//! signature of that model's servable.
+//!
 //! * [`example`] — the canonical example format (our `tf.Example`):
 //!   typed feature maps with a binary codec and common-feature batch
 //!   compression.
-//! * [`predict`] — the low-level tensor API (mirrors `Session::Run`).
+//! * [`predict`] — the low-level tensor API (mirrors `Session::Run`):
+//!   named input tensors validated against the servable's declared
+//!   signature, named outputs back.
 //! * [`classify`] / [`regress`] — the higher-level typed APIs over
 //!   examples.
+//! * [`multi`] — MultiInference: one decoded example batch fanned out
+//!   to several classify/regress heads in a single model run.
 //! * [`logger`] — sampled inference logging (training/serving-skew
 //!   detection hook).
 //! * [`table`] — the "BananaFlow" platform: lookup-table servables,
@@ -16,7 +26,57 @@
 pub mod classify;
 pub mod example;
 pub mod logger;
+pub mod multi;
 pub mod null;
 pub mod predict;
 pub mod regress;
 pub mod table;
+
+/// Which model (and which of its versions) a request addresses.
+///
+/// Resolution precedence: an explicit `version` pins exactly that
+/// version; otherwise a `label` is resolved through the serving
+/// stack's label map; otherwise the latest ready version serves.
+/// Carrying **both** a version and a label is rejected at lookup time.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ModelSpec {
+    pub name: String,
+    pub version: Option<u64>,
+    pub label: Option<String>,
+}
+
+impl ModelSpec {
+    /// Latest ready version of `name`.
+    pub fn latest(name: impl Into<String>) -> ModelSpec {
+        ModelSpec { name: name.into(), version: None, label: None }
+    }
+
+    /// Exactly version `version` of `name`.
+    pub fn at_version(name: impl Into<String>, version: u64) -> ModelSpec {
+        ModelSpec { name: name.into(), version: Some(version), label: None }
+    }
+
+    /// Whichever version currently carries `label`.
+    pub fn with_label(name: impl Into<String>, label: impl Into<String>) -> ModelSpec {
+        ModelSpec { name: name.into(), version: None, label: Some(label.into()) }
+    }
+
+    /// Legacy constructor mirroring the old `(model, Option<version>)`
+    /// addressing.
+    pub fn named(name: impl Into<String>, version: Option<u64>) -> ModelSpec {
+        ModelSpec { name: name.into(), version, label: None }
+    }
+}
+
+impl std::fmt::Display for ModelSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name)?;
+        if let Some(v) = self.version {
+            write!(f, ":{v}")?;
+        }
+        if let Some(l) = &self.label {
+            write!(f, "@{l}")?;
+        }
+        Ok(())
+    }
+}

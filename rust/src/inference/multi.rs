@@ -1,0 +1,333 @@
+//! MultiInference (§2.2 / TF-Serving's `MultiInferenceRequest`): run
+//! several classify/regress heads over **one** decoded example batch.
+//!
+//! The examples are decoded into a feature tensor once and the
+//! servable executes once — no per-head re-decode or re-run. Each
+//! head selects its tensors from the shared output tuple as view
+//! clones (PR 1's view tensors); materializing the typed
+//! `HeadResult` (per-example class/value vectors) then copies the
+//! selected rows out, same as the single-head classify/regress APIs.
+
+use super::classify::{classification_results, Classification};
+use super::example::{examples_to_tensor, Example};
+use super::predict::{name_outputs, recycle_out_tensors, sole_input, HandleSource};
+use super::regress::regression_values;
+use super::ModelSpec;
+use anyhow::{bail, Result};
+
+/// Which typed API a task invokes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InferenceMethod {
+    Classify,
+    Regress,
+}
+
+impl InferenceMethod {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            InferenceMethod::Classify => "classify",
+            InferenceMethod::Regress => "regress",
+        }
+    }
+}
+
+/// One head of a multi-inference request: a signature name plus the
+/// method it must carry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InferenceTask {
+    pub signature: String,
+    pub method: InferenceMethod,
+}
+
+impl InferenceTask {
+    pub fn classify(signature: impl Into<String>) -> InferenceTask {
+        InferenceTask { signature: signature.into(), method: InferenceMethod::Classify }
+    }
+
+    pub fn regress(signature: impl Into<String>) -> InferenceTask {
+        InferenceTask { signature: signature.into(), method: InferenceMethod::Regress }
+    }
+}
+
+/// One head's result.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HeadResult {
+    Classify { classes: Vec<i32>, log_probs: Vec<Vec<f32>> },
+    Regress { values: Vec<f32> },
+}
+
+/// N heads over one shared example batch of one model.
+#[derive(Debug, Clone)]
+pub struct MultiInferenceRequest {
+    pub spec: ModelSpec,
+    pub tasks: Vec<InferenceTask>,
+    pub examples: Vec<Example>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MultiInferenceResponse {
+    pub model_version: u64,
+    /// `(signature name, result)` per task, in request order.
+    pub results: Vec<(String, HeadResult)>,
+}
+
+/// Execute a multi-inference request: decode once, run once, fan the
+/// shared outputs out to every head.
+pub fn multi_inference(
+    handles: &dyn HandleSource,
+    req: &MultiInferenceRequest,
+) -> Result<MultiInferenceResponse> {
+    if req.tasks.is_empty() {
+        bail!("multi_inference: empty task list");
+    }
+    if req.examples.is_empty() {
+        bail!("multi_inference: empty example list");
+    }
+    let handle = handles.hlo_handle(&req.spec)?;
+    let spec = &handle.spec;
+
+    // Validate every head up front: signature exists, method matches,
+    // and all heads share the model's single input.
+    let mut sigs = Vec::with_capacity(req.tasks.len());
+    let mut shared_input: Option<&crate::runtime::artifacts::TensorInfo> = None;
+    for task in &req.tasks {
+        let (sig_name, sig) = spec.signature_def(&task.signature)?;
+        if sig.method != task.method.as_str() {
+            bail!(
+                "model '{}' signature '{sig_name}' has method '{}', task wants '{}'",
+                req.spec.name,
+                sig.method,
+                task.method.as_str()
+            );
+        }
+        let input = sole_input(&req.spec.name, sig_name, sig)?;
+        match shared_input {
+            None => shared_input = Some(input),
+            Some(prev) if prev == input => {}
+            Some(prev) => bail!(
+                "multi_inference: heads disagree on the shared input \
+                 ('{}' vs '{}') — one decoded batch cannot feed both",
+                prev.name,
+                input.name
+            ),
+        }
+        sigs.push((sig_name, sig));
+    }
+    let input_info = shared_input.expect("at least one task");
+
+    // Decode the example batch ONCE, run the servable ONCE. The
+    // feature tensor recycles whether or not the run succeeded.
+    let input = examples_to_tensor(&req.examples, &input_info.name, spec.input_dim)?;
+    let run = handle.run(&input);
+    input.recycle_into(&crate::util::pool::BufferPool::global());
+    let outputs = run?;
+
+    // Fan out: each head selects its outputs from the shared tuple
+    // (view clones; the typed result rows copy out below).
+    let n = req.examples.len();
+    let results = req
+        .tasks
+        .iter()
+        .zip(&sigs)
+        .map(|(task, (sig_name, sig))| {
+            let named = name_outputs(spec, sig_name, sig, &outputs)?;
+            let result = match task.method {
+                InferenceMethod::Classify => {
+                    let results = classification_results(sig_name, &named, n)?;
+                    HeadResult::Classify {
+                        classes: results.iter().map(|c| c.class).collect(),
+                        log_probs: results.into_iter().map(|c| c.log_probs).collect(),
+                    }
+                }
+                InferenceMethod::Regress => {
+                    HeadResult::Regress { values: regression_values(sig_name, &named, n)? }
+                }
+            };
+            Ok((sig_name.to_string(), result))
+        })
+        .collect::<Result<Vec<_>>>();
+    // Typed results are owned copies: hand the shared output storage
+    // back to the pools (error paths included).
+    recycle_out_tensors(outputs);
+    Ok(MultiInferenceResponse { model_version: handle.id().version, results: results? })
+}
+
+/// Re-shape a classify-style head back into per-example results
+/// (convenience for callers migrating from the single-head API).
+pub fn classifications(head: &HeadResult) -> Option<Vec<Classification>> {
+    match head {
+        HeadResult::Classify { classes, log_probs } => Some(
+            classes
+                .iter()
+                .zip(log_probs)
+                .map(|(&class, lp)| Classification { class, log_probs: lp.clone() })
+                .collect(),
+        ),
+        HeadResult::Regress { .. } => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::servable::ServableId;
+    use crate::inference::example::Feature;
+    use crate::lifecycle::basic_manager::BasicManager;
+    use crate::runtime::artifacts::ArtifactSpec;
+    use crate::runtime::hlo_servable::synthetic_loader;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn manager() -> Arc<BasicManager> {
+        let m = BasicManager::with_defaults();
+        m.load_and_wait(
+            ServableId::new("multi", 3),
+            synthetic_loader(ArtifactSpec::synthetic_multi_head("multi", 3, 8, 4)),
+            Duration::from_secs(10),
+        )
+        .unwrap();
+        m
+    }
+
+    fn examples(n: usize) -> Vec<Example> {
+        (0..n)
+            .map(|i| {
+                Example::new().with(
+                    "x",
+                    Feature::Floats((0..8).map(|j| ((i * 5 + j) as f32).cos()).collect()),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn two_heads_over_one_batch() {
+        let m = manager();
+        let resp = multi_inference(
+            m.as_ref(),
+            &MultiInferenceRequest {
+                spec: ModelSpec::latest("multi"),
+                tasks: vec![InferenceTask::classify("classify"), InferenceTask::regress("regress")],
+                examples: examples(5),
+            },
+        )
+        .unwrap();
+        assert_eq!(resp.model_version, 3);
+        assert_eq!(resp.results.len(), 2);
+        let (cname, chead) = &resp.results[0];
+        assert_eq!(cname, "classify");
+        match chead {
+            HeadResult::Classify { classes, log_probs } => {
+                assert_eq!(classes.len(), 5);
+                assert_eq!(log_probs.len(), 5);
+                for (c, lp) in classes.iter().zip(log_probs) {
+                    assert_eq!(lp.len(), 4);
+                    assert!((0..4).contains(c));
+                    let p: f32 = lp.iter().map(|x| x.exp()).sum();
+                    assert!((p - 1.0).abs() < 1e-4);
+                }
+                assert_eq!(classifications(chead).unwrap().len(), 5);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let (rname, rhead) = &resp.results[1];
+        assert_eq!(rname, "regress");
+        match rhead {
+            HeadResult::Regress { values } => assert_eq!(values.len(), 5),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn head_results_match_single_head_apis() {
+        // The fan-out must agree with calling classify/regress alone.
+        let m = manager();
+        let exs = examples(3);
+        let multi = multi_inference(
+            m.as_ref(),
+            &MultiInferenceRequest {
+                spec: ModelSpec::latest("multi"),
+                tasks: vec![InferenceTask::classify("classify"), InferenceTask::regress("regress")],
+                examples: exs.clone(),
+            },
+        )
+        .unwrap();
+        let solo_c = crate::inference::classify::classify(
+            m.as_ref(),
+            &crate::inference::classify::ClassifyRequest {
+                spec: ModelSpec::latest("multi"),
+                signature: "classify".into(),
+                examples: exs.clone(),
+            },
+        )
+        .unwrap();
+        let solo_r = crate::inference::regress::regress(
+            m.as_ref(),
+            &crate::inference::regress::RegressRequest {
+                spec: ModelSpec::latest("multi"),
+                signature: "regress".into(),
+                examples: exs,
+            },
+        )
+        .unwrap();
+        match &multi.results[0].1 {
+            HeadResult::Classify { classes, .. } => {
+                let solo: Vec<i32> = solo_c.results.iter().map(|c| c.class).collect();
+                assert_eq!(classes, &solo);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match &multi.results[1].1 {
+            HeadResult::Regress { values } => assert_eq!(values, &solo_r.values),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_errors() {
+        let m = manager();
+        // Empty tasks / examples.
+        assert!(multi_inference(
+            m.as_ref(),
+            &MultiInferenceRequest {
+                spec: ModelSpec::latest("multi"),
+                tasks: vec![],
+                examples: examples(1),
+            },
+        )
+        .is_err());
+        assert!(multi_inference(
+            m.as_ref(),
+            &MultiInferenceRequest {
+                spec: ModelSpec::latest("multi"),
+                tasks: vec![InferenceTask::classify("classify")],
+                examples: vec![],
+            },
+        )
+        .is_err());
+        // Method mismatch: regress task against the classify signature.
+        let err = multi_inference(
+            m.as_ref(),
+            &MultiInferenceRequest {
+                spec: ModelSpec::latest("multi"),
+                tasks: vec![InferenceTask::regress("classify")],
+                examples: examples(1),
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("classify") && err.contains("regress"), "{err}");
+        // Unknown signature.
+        let err = multi_inference(
+            m.as_ref(),
+            &MultiInferenceRequest {
+                spec: ModelSpec::latest("multi"),
+                tasks: vec![InferenceTask::classify("ghost")],
+                examples: examples(1),
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("ghost"), "{err}");
+    }
+}

@@ -1,74 +1,328 @@
 //! The low-level tensor Predict API (§2.2: "a low-level tensor
-//! interface that mirrors TensorFlow's `Session::Run()` API").
+//! interface that mirrors TensorFlow's `Session::Run()` API"), redesigned
+//! around [`ModelSpec`] + named signatures:
+//!
+//! * requests carry a **map of named input tensors** validated against
+//!   the servable's declared [`SignatureDef`] (per-tensor error
+//!   messages name the offending tensor),
+//! * responses return **named outputs** (the signature's output names
+//!   zipped with the executable's output tuple),
+//! * the model is addressed by name + version **or version label**
+//!   (labels resolve through [`LabeledSource`]).
 //!
 //! The handler pattern is the paper's: fetch a servable handle from the
 //! manager, dereference, run, discard the handle (which defers any
 //! final free to the reclaim thread).
 
+use super::example::{examples_to_tensor, Example};
+use super::ModelSpec;
 use crate::base::servable::ServableHandle;
 use crate::base::tensor::Tensor;
 use crate::lifecycle::basic_manager::{BasicManager, VersionRequest};
+use crate::lifecycle::labels::LabelResolver;
 use crate::lifecycle::manager::AspiredVersionsManager;
+use crate::runtime::artifacts::{ArtifactSpec, SignatureDef, TensorInfo};
 use crate::runtime::hlo_servable::HloServable;
 use crate::runtime::pjrt::OutTensor;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-/// Anything that can resolve HLO servable handles (both manager layers).
+/// Anything that can resolve HLO servable handles from a [`ModelSpec`]
+/// (both manager layers, plus [`LabeledSource`] for label-aware
+/// paths).
 pub trait HandleSource: Send + Sync {
-    fn hlo_handle(
-        &self,
-        name: &str,
-        version: Option<u64>,
-    ) -> Result<ServableHandle<HloServable>>;
+    fn hlo_handle(&self, spec: &ModelSpec) -> Result<ServableHandle<HloServable>>;
+}
+
+/// Reject labels on lookup paths that have no resolver, and map the
+/// spec onto a concrete [`VersionRequest`].
+fn version_request(spec: &ModelSpec) -> Result<VersionRequest> {
+    if let Some(label) = &spec.label {
+        bail!(
+            "model '{}': version label '{label}' cannot be resolved on this lookup path \
+             (no label resolver)",
+            spec.name
+        );
+    }
+    Ok(spec
+        .version
+        .map_or(VersionRequest::Latest, VersionRequest::Specific))
 }
 
 impl HandleSource for BasicManager {
-    fn hlo_handle(
-        &self,
-        name: &str,
-        version: Option<u64>,
-    ) -> Result<ServableHandle<HloServable>> {
-        self.handle(
-            name,
-            version.map_or(VersionRequest::Latest, VersionRequest::Specific),
-        )
+    fn hlo_handle(&self, spec: &ModelSpec) -> Result<ServableHandle<HloServable>> {
+        self.handle(&spec.name, version_request(spec)?)
     }
 }
 
 impl HandleSource for AspiredVersionsManager {
-    fn hlo_handle(
-        &self,
-        name: &str,
-        version: Option<u64>,
-    ) -> Result<ServableHandle<HloServable>> {
-        self.handle(
-            name,
-            version.map_or(VersionRequest::Latest, VersionRequest::Specific),
-        )
+    fn hlo_handle(&self, spec: &ModelSpec) -> Result<ServableHandle<HloServable>> {
+        self.handle(&spec.name, version_request(spec)?)
     }
 }
 
-/// Predict request: raw input tensor for a (model, version?).
-#[derive(Debug, Clone)]
-pub struct PredictRequest {
-    pub model: String,
-    /// `None` = latest ready version.
-    pub version: Option<u64>,
-    pub input: Tensor,
+/// Resolve a spec to a concrete version choice through a label
+/// resolver: pinning **both** a version and a label is rejected, a
+/// label resolves to its pinned version, and `None` means "latest".
+/// Shared by the lookup path ([`LabeledSource`]) and
+/// `GetModelMetadata`, so both enforce the same rule.
+pub fn resolve_spec_version(
+    labels: &LabelResolver,
+    spec: &ModelSpec,
+) -> Result<Option<u64>> {
+    match (spec.version, &spec.label) {
+        (Some(v), Some(label)) => bail!(
+            "model '{}': request pins both version {v} and label '{label}' — use one",
+            spec.name
+        ),
+        (Some(v), None) => Ok(Some(v)),
+        (None, Some(label)) => Ok(Some(labels.resolve(&spec.name, label)?)),
+        (None, None) => Ok(None),
+    }
 }
 
-/// Predict response: output tuple + the version that served it.
+/// A [`HandleSource`] that resolves version labels through a
+/// [`LabelResolver`] before delegating — the lookup path the server's
+/// RPC handlers use. Consulted on every labeled lookup; unlabeled
+/// lookups pass straight through.
+pub struct LabeledSource<'a> {
+    pub inner: &'a dyn HandleSource,
+    pub labels: &'a LabelResolver,
+}
+
+impl HandleSource for LabeledSource<'_> {
+    fn hlo_handle(&self, spec: &ModelSpec) -> Result<ServableHandle<HloServable>> {
+        if spec.label.is_none() {
+            return self.inner.hlo_handle(spec);
+        }
+        let version = resolve_spec_version(self.labels, spec)?;
+        self.inner.hlo_handle(&ModelSpec {
+            name: spec.name.clone(),
+            version,
+            label: None,
+        })
+    }
+}
+
+/// Predict request: named input tensors for a (model spec, signature).
+#[derive(Debug, Clone)]
+pub struct PredictRequest {
+    pub spec: ModelSpec,
+    /// Signature to invoke; `""` means the default serving signature.
+    pub signature: String,
+    /// Named inputs. A single entry with an empty name binds
+    /// positionally to the signature's sole declared input (the legacy
+    /// single-tensor form).
+    pub inputs: Vec<(String, Tensor)>,
+}
+
+impl PredictRequest {
+    /// Thin legacy constructor: one unnamed tensor against the default
+    /// serving signature (what the sim/workload layer and benches
+    /// issue).
+    pub fn single(name: impl Into<String>, version: Option<u64>, input: Tensor) -> Self {
+        PredictRequest {
+            spec: ModelSpec::named(name, version),
+            signature: String::new(),
+            inputs: vec![(String::new(), input)],
+        }
+    }
+}
+
+/// Predict response: named output tensors + the version that served it.
 #[derive(Debug, Clone)]
 pub struct PredictResponse {
     pub model_version: u64,
-    pub outputs: Vec<OutTensor>,
+    pub outputs: Vec<(String, OutTensor)>,
 }
 
-/// Execute a predict request against a manager.
+impl PredictResponse {
+    /// Fetch one output by name.
+    pub fn output(&self, name: &str) -> Result<&OutTensor> {
+        self.outputs
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no output named '{name}' (outputs: {:?})",
+                    self.outputs.iter().map(|(n, _)| n).collect::<Vec<_>>()
+                )
+            })
+    }
+}
+
+/// The signature's single declared input (the HLO runtime compiles
+/// single-input executables; multi-input signatures are rejected with
+/// a clear error rather than silently misbound).
+pub(crate) fn sole_input<'a>(
+    model: &str,
+    sig_name: &str,
+    sig: &'a SignatureDef,
+) -> Result<&'a TensorInfo> {
+    match sig.inputs.as_slice() {
+        [one] => Ok(one),
+        many => bail!(
+            "model '{model}' signature '{sig_name}': {} declared inputs; the HLO runtime \
+             serves single-input signatures only",
+            many.len()
+        ),
+    }
+}
+
+/// Validate the request's named inputs against the signature and
+/// return the tensor bound to its sole declared input. Every error
+/// names the offending tensor.
+pub(crate) fn bind_input<'a>(
+    model: &str,
+    sig_name: &str,
+    sig: &SignatureDef,
+    inputs: &'a [(String, Tensor)],
+) -> Result<&'a Tensor> {
+    let declared = sole_input(model, sig_name, sig)?;
+    let bound = match inputs {
+        [] => bail!(
+            "model '{model}' signature '{sig_name}': missing input tensor '{}'",
+            declared.name
+        ),
+        // Positional single-tensor form.
+        [(name, t)] if name.is_empty() => t,
+        named => {
+            let mut found = None;
+            for (name, t) in named {
+                if name == &declared.name {
+                    if found.is_some() {
+                        bail!(
+                            "model '{model}' signature '{sig_name}': input tensor \
+                             '{name}' supplied more than once"
+                        );
+                    }
+                    found = Some(t);
+                } else {
+                    bail!(
+                        "model '{model}' signature '{sig_name}': unexpected input tensor \
+                         '{name}' (declared inputs: [\"{}\"])",
+                        declared.name
+                    );
+                }
+            }
+            found.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "model '{model}' signature '{sig_name}': missing input tensor '{}'",
+                    declared.name
+                )
+            })?
+        }
+    };
+    if !declared.matches_shape(bound.shape()) {
+        bail!(
+            "model '{model}' signature '{sig_name}': input tensor '{}' has shape {:?}, \
+             want {:?}",
+            declared.name,
+            bound.shape(),
+            declared.shape
+        );
+    }
+    Ok(bound)
+}
+
+/// Zip a signature's output names with the executable's output tuple
+/// (cheap: each output is an O(1) view clone).
+pub(crate) fn name_outputs(
+    spec: &ArtifactSpec,
+    sig_name: &str,
+    sig: &SignatureDef,
+    outputs: &[OutTensor],
+) -> Result<Vec<(String, OutTensor)>> {
+    sig.outputs
+        .iter()
+        .map(|info| {
+            let idx = spec.output_index(&info.name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "model '{}' signature '{sig_name}': output '{}' not in executable \
+                     outputs {:?}",
+                    spec.model_name,
+                    info.name,
+                    spec.output_names()
+                )
+            })?;
+            match outputs.get(idx) {
+                Some(t) => Ok((info.name.clone(), t.clone())),
+                None => bail!(
+                    "model '{}': executable returned {} outputs, signature '{sig_name}' \
+                     expects index {idx} ('{}')",
+                    spec.model_name,
+                    outputs.len(),
+                    info.name
+                ),
+            }
+        })
+        .collect()
+}
+
+/// Hand output-tensor storage back to the global pools (the pool
+/// declines anything shared or not class-sized, so this is always
+/// safe).
+pub(crate) fn recycle_out_tensors(outputs: Vec<OutTensor>) {
+    for t in outputs {
+        match t {
+            OutTensor::F32(t) => t.recycle_into(&crate::util::pool::BufferPool::global()),
+            OutTensor::I32(t) => {
+                t.recycle_into(&crate::util::pool::BufferPool::global_i32())
+            }
+        }
+    }
+}
+
+/// The shared classify/regress pipeline: validate the signature's
+/// method, build the feature tensor from the examples, run the
+/// servable, extract the typed result from the named outputs, and
+/// recycle both the input and the output storage (error paths
+/// included). Returns `(serving version, extracted result)`.
+pub(crate) fn run_example_signature<T>(
+    handles: &dyn HandleSource,
+    spec: &ModelSpec,
+    signature: &str,
+    method: &str,
+    examples: &[Example],
+    extract: impl FnOnce(&str, &[(String, OutTensor)]) -> Result<T>,
+) -> Result<(u64, T)> {
+    let handle = handles.hlo_handle(spec)?;
+    let (sig_name, sig) = handle.spec.signature_def(signature)?;
+    if sig.method != method {
+        bail!(
+            "model '{}' signature '{sig_name}' has method '{}', not {method}",
+            spec.name,
+            sig.method
+        );
+    }
+    let input_info = sole_input(&spec.name, sig_name, sig)?;
+    let input = examples_to_tensor(examples, &input_info.name, handle.spec.input_dim)?;
+    let run = handle.run(&input);
+    // The feature tensor came from the global pool; recycle it whether
+    // or not the run succeeded (error paths must not leak pool misses).
+    input.recycle_into(&crate::util::pool::BufferPool::global());
+    let outputs = run?;
+    let named = name_outputs(&handle.spec, sig_name, sig, &outputs)?;
+    let result = extract(sig_name, &named);
+    // The view clones in `named` drop first so the sole-owner gate
+    // accepts the output storage back.
+    drop(named);
+    recycle_out_tensors(outputs);
+    Ok((handle.id().version, result?))
+}
+
+/// Execute a predict request against a handle source.
 pub fn predict(handles: &dyn HandleSource, req: &PredictRequest) -> Result<PredictResponse> {
-    let handle = handles.hlo_handle(&req.model, req.version)?;
-    let outputs = handle.run(&req.input)?;
-    Ok(PredictResponse { model_version: handle.id().version, outputs })
+    let handle = handles.hlo_handle(&req.spec)?;
+    let (sig_name, sig) = handle.spec.signature_def(&req.signature)?;
+    let input = bind_input(&req.spec.name, sig_name, sig, &req.inputs)?;
+    let raw = handle.run(input)?;
+    let named = name_outputs(&handle.spec, sig_name, sig, &raw)?;
+    // Recycle outputs the signature did not select (sole owners);
+    // selected ones are still referenced by `named` and the pool
+    // declines them.
+    recycle_out_tensors(raw);
+    Ok(PredictResponse { model_version: handle.id().version, outputs: named })
     // handle drops here → refs retired via the reclaim thread
 }
 
@@ -76,10 +330,10 @@ pub fn predict(handles: &dyn HandleSource, req: &PredictRequest) -> Result<Predi
 mod tests {
     use super::*;
     use crate::base::loader::Loader;
-    use crate::runtime::artifacts::{artifacts_available, default_artifacts_root};
-    use crate::runtime::hlo_servable::HloLoader;
-    use crate::runtime::pjrt::XlaRuntime;
     use crate::base::servable::ServableId;
+    use crate::runtime::artifacts::{artifacts_available, default_artifacts_root};
+    use crate::runtime::hlo_servable::{synthetic_loader, HloLoader};
+    use crate::runtime::pjrt::XlaRuntime;
     use std::sync::Arc;
     use std::time::Duration;
 
@@ -101,22 +355,33 @@ mod tests {
         Some(m)
     }
 
+    /// Synthetic two-version manager: runs in every build.
+    fn manager_with_synthetic() -> Arc<BasicManager> {
+        let m = BasicManager::with_defaults();
+        for v in [1u64, 2] {
+            m.load_and_wait(
+                ServableId::new("syn", v),
+                synthetic_loader(ArtifactSpec::synthetic_classifier("syn", v, 8, 3)),
+                Duration::from_secs(10),
+            )
+            .unwrap();
+        }
+        m
+    }
+
     #[test]
     fn predict_latest_and_specific() {
         let Some(m) = manager_with_classifier() else { return };
-        let req = PredictRequest {
-            model: "mlp_classifier".into(),
-            version: None,
-            input: Tensor::zeros(vec![2, 32]),
-        };
+        let req = PredictRequest::single("mlp_classifier", None, Tensor::zeros(vec![2, 32]));
         let resp = predict(m.as_ref(), &req).unwrap();
         assert_eq!(resp.model_version, 2); // latest
         assert_eq!(resp.outputs.len(), 2);
-        assert_eq!(resp.outputs[0].as_f32().unwrap().shape(), &[2, 4]);
+        assert_eq!(resp.output("log_probs").unwrap().as_f32().unwrap().shape(), &[2, 4]);
+        assert_eq!(resp.output("class").unwrap().as_i32().unwrap().shape(), &[2]);
 
         let resp1 = predict(
             m.as_ref(),
-            &PredictRequest { version: Some(1), ..req.clone() },
+            &PredictRequest::single("mlp_classifier", Some(1), Tensor::zeros(vec![2, 32])),
         )
         .unwrap();
         assert_eq!(resp1.model_version, 1);
@@ -124,12 +389,153 @@ mod tests {
 
     #[test]
     fn predict_missing_model_errors() {
-        let Some(m) = manager_with_classifier() else { return };
-        let req = PredictRequest {
-            model: "nope".into(),
-            version: None,
-            input: Tensor::zeros(vec![1, 32]),
-        };
+        let m = manager_with_synthetic();
+        let req = PredictRequest::single("nope", None, Tensor::zeros(vec![1, 8]));
         assert!(predict(m.as_ref(), &req).is_err());
+    }
+
+    #[test]
+    fn predict_synthetic_named_inputs_and_outputs() {
+        let m = manager_with_synthetic();
+        // Explicitly named input "x" against the default signature.
+        let req = PredictRequest {
+            spec: ModelSpec::latest("syn"),
+            signature: String::new(),
+            inputs: vec![("x".into(), Tensor::zeros(vec![3, 8]))],
+        };
+        let resp = predict(m.as_ref(), &req).unwrap();
+        assert_eq!(resp.model_version, 2);
+        assert_eq!(
+            resp.outputs.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            vec!["log_probs", "class"]
+        );
+        assert!(resp.output("missing").is_err());
+    }
+
+    #[test]
+    fn predict_validation_names_the_offending_tensor() {
+        let m = manager_with_synthetic();
+        // Unknown input name.
+        let err = predict(
+            m.as_ref(),
+            &PredictRequest {
+                spec: ModelSpec::latest("syn"),
+                signature: String::new(),
+                inputs: vec![("bogus".into(), Tensor::zeros(vec![1, 8]))],
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("bogus") && err.contains('x'), "{err}");
+        // Wrong shape, named input.
+        let err = predict(
+            m.as_ref(),
+            &PredictRequest {
+                spec: ModelSpec::latest("syn"),
+                signature: String::new(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 5]))],
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("'x'") && err.contains("[1, 5]"), "{err}");
+        // Unknown signature.
+        let err = predict(
+            m.as_ref(),
+            &PredictRequest {
+                spec: ModelSpec::latest("syn"),
+                signature: "nope".into(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("nope") && err.contains("serving_default"), "{err}");
+        // No inputs at all.
+        let err = predict(
+            m.as_ref(),
+            &PredictRequest {
+                spec: ModelSpec::latest("syn"),
+                signature: String::new(),
+                inputs: vec![],
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("missing input tensor 'x'"), "{err}");
+        // Duplicate named input rejected, not silently last-wins.
+        let err = predict(
+            m.as_ref(),
+            &PredictRequest {
+                spec: ModelSpec::latest("syn"),
+                signature: String::new(),
+                inputs: vec![
+                    ("x".into(), Tensor::zeros(vec![1, 8])),
+                    ("x".into(), Tensor::zeros(vec![1, 8])),
+                ],
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("more than once"), "{err}");
+    }
+
+    #[test]
+    fn labels_resolve_through_labeled_source() {
+        let m = manager_with_synthetic();
+        let labels = LabelResolver::new();
+        labels.set("syn", "stable", 1, &[1, 2]).unwrap();
+        labels.set("syn", "canary", 2, &[1, 2]).unwrap();
+        let source = LabeledSource { inner: m.as_ref(), labels: &labels };
+        for (label, want) in [("stable", 1u64), ("canary", 2)] {
+            let resp = predict(
+                &source,
+                &PredictRequest {
+                    spec: ModelSpec::with_label("syn", label),
+                    signature: String::new(),
+                    inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+                },
+            )
+            .unwrap();
+            assert_eq!(resp.model_version, want, "label {label}");
+        }
+        // Unknown label surfaces the resolver's error.
+        let err = predict(
+            &source,
+            &PredictRequest {
+                spec: ModelSpec::with_label("syn", "ghost"),
+                signature: String::new(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("ghost"), "{err}");
+        // Version + label together rejected.
+        let mut spec = ModelSpec::with_label("syn", "stable");
+        spec.version = Some(2);
+        let err = predict(
+            &source,
+            &PredictRequest {
+                spec,
+                signature: String::new(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("both"), "{err}");
+        // Labels on a resolver-less path are rejected, not ignored.
+        let err = predict(
+            m.as_ref(),
+            &PredictRequest {
+                spec: ModelSpec::with_label("syn", "stable"),
+                signature: String::new(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("no label resolver"), "{err}");
     }
 }

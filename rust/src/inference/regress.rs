@@ -1,15 +1,33 @@
-//! The Regression API (§2.2): typed, example-based inference for models
-//! exported with the `regress` signature.
+//! The Regression API (§2.2): typed, example-based inference for
+//! signatures exported with the `regress` method.
 
-use super::example::{examples_to_tensor, Example};
-use super::predict::HandleSource;
+use super::example::Example;
+use super::predict::{run_example_signature, HandleSource};
+use super::ModelSpec;
+use crate::runtime::pjrt::OutTensor;
 use anyhow::{bail, Result};
 
 #[derive(Debug, Clone)]
 pub struct RegressRequest {
-    pub model: String,
-    pub version: Option<u64>,
+    pub spec: ModelSpec,
+    /// Signature to invoke; `""` means the default serving signature.
+    pub signature: String,
     pub examples: Vec<Example>,
+}
+
+impl RegressRequest {
+    /// Legacy constructor: default signature, (model, version?) addressing.
+    pub fn simple(
+        model: impl Into<String>,
+        version: Option<u64>,
+        examples: Vec<Example>,
+    ) -> Self {
+        RegressRequest {
+            spec: ModelSpec::named(model, version),
+            signature: String::new(),
+            examples,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -19,27 +37,44 @@ pub struct RegressResponse {
     pub values: Vec<f32>,
 }
 
+/// Extract per-example regression values from a signature's named
+/// outputs (the sole rank-1 f32 output; two candidates is an error,
+/// never a silent first-match binding).
+pub(crate) fn regression_values(
+    sig_name: &str,
+    named: &[(String, OutTensor)],
+    n: usize,
+) -> Result<Vec<f32>> {
+    let values = super::classify::sole_matching_output(
+        sig_name,
+        named,
+        "f32 [batch] value",
+        |t| t.as_f32().map(|t| t.rank() == 1).unwrap_or(false),
+    )?
+    .as_f32()?;
+    if values.len() < n {
+        bail!(
+            "signature '{sig_name}': value output covers {} rows, want {n}",
+            values.len()
+        );
+    }
+    Ok(values.data()[..n].to_vec())
+}
+
 /// Execute a regression request.
 pub fn regress(handles: &dyn HandleSource, req: &RegressRequest) -> Result<RegressResponse> {
     if req.examples.is_empty() {
         bail!("regress: empty example list");
     }
-    let handle = handles.hlo_handle(&req.model, req.version)?;
-    let spec = &handle.spec;
-    if spec.signature != "regress" {
-        bail!(
-            "model '{}' has signature '{}', not regress",
-            req.model,
-            spec.signature
-        );
-    }
-    let input = examples_to_tensor(&req.examples, "x", spec.input_dim)?;
-    let outputs = handle.run(&input)?;
-    // The feature tensor came from the global pool; recycle it now
-    // that the model has consumed it.
-    input.recycle_into(&crate::util::pool::BufferPool::global());
-    let values = outputs[0].as_f32()?.data().to_vec();
-    Ok(RegressResponse { model_version: handle.id().version, values })
+    let (model_version, values) = run_example_signature(
+        handles,
+        &req.spec,
+        &req.signature,
+        "regress",
+        &req.examples,
+        |sig_name, named| regression_values(sig_name, named, req.examples.len()),
+    )?;
+    Ok(RegressResponse { model_version, values })
 }
 
 #[cfg(test)]
@@ -92,11 +127,7 @@ mod tests {
             .collect();
         let resp = regress(
             m.as_ref(),
-            &RegressRequest {
-                model: "mlp_regressor".into(),
-                version: None,
-                examples,
-            },
+            &RegressRequest::simple("mlp_regressor", None, examples),
         )
         .unwrap();
         assert_eq!(resp.values.len(), 64);
@@ -125,11 +156,7 @@ mod tests {
         // mlp_classifier isn't even loaded here: missing model error.
         assert!(regress(
             m.as_ref(),
-            &RegressRequest {
-                model: "mlp_classifier".into(),
-                version: None,
-                examples: vec![example(0, 1.0)],
-            },
+            &RegressRequest::simple("mlp_classifier", None, vec![example(0, 1.0)]),
         )
         .is_err());
     }

@@ -1,0 +1,181 @@
+//! [`LabelResolver`]: version labels ("canary", "stable", …) over
+//! serving versions — how TFS² does safe rollouts (§2.1.1 / Olston et
+//! al. 2017). A label is an indirection clients address instead of a
+//! numeric version; flipping `canary → v7` is one admin RPC, no client
+//! redeploy.
+//!
+//! Invariants:
+//! * a label may only be attached to a version that is **loaded and
+//!   serving** at set time (callers pass the current ready set), so a
+//!   labeled lookup never lands on an unloaded version at flip time;
+//! * relabeling while serving is allowed and atomic (readers see the
+//!   old or the new version, never nothing);
+//! * resolution is a read-lock map lookup, consulted only for labeled
+//!   requests — unlabeled lookups never touch it.
+//!
+//! The serving guarantee is **set-time only** (checked against a
+//! snapshot of the ready set): if the labeled version later unloads,
+//! labeled lookups fail loudly ("no version N") until an operator
+//! re-issues `SetVersionLabel` — the resolver does not track the
+//! lifecycle. Automatic invalidation/remap on unload (and label
+//! persistence in the TFS² store) is a ROADMAP follow-on.
+
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::RwLock;
+
+/// model → (label → version).
+#[derive(Default)]
+pub struct LabelResolver {
+    map: RwLock<HashMap<String, BTreeMap<String, u64>>>,
+}
+
+impl LabelResolver {
+    pub fn new() -> LabelResolver {
+        LabelResolver::default()
+    }
+
+    /// Attach (or move) `label` on `model` to `version`. `serving` is
+    /// the caller's current ready-version set; labeling anything
+    /// outside it is rejected so labels always point at servable
+    /// versions.
+    pub fn set(&self, model: &str, label: &str, version: u64, serving: &[u64]) -> Result<()> {
+        if label.is_empty() {
+            bail!("model '{model}': empty version label");
+        }
+        if !serving.contains(&version) {
+            bail!(
+                "cannot label {model}:{version} as '{label}': version is not loaded and \
+                 serving (serving versions: {serving:?})"
+            );
+        }
+        self.map
+            .write()
+            .unwrap()
+            .entry(model.to_string())
+            .or_default()
+            .insert(label.to_string(), version);
+        Ok(())
+    }
+
+    /// Resolve `label` on `model` to its pinned version.
+    pub fn resolve(&self, model: &str, label: &str) -> Result<u64> {
+        let map = self.map.read().unwrap();
+        match map.get(model).and_then(|labels| labels.get(label)) {
+            Some(&v) => Ok(v),
+            None => {
+                let known: Vec<String> = map
+                    .get(model)
+                    .map(|l| l.keys().cloned().collect())
+                    .unwrap_or_default();
+                bail!(
+                    "model '{model}' has no version labeled '{label}' (known labels: {known:?})"
+                )
+            }
+        }
+    }
+
+    /// Remove one label. Returns whether it existed.
+    pub fn remove(&self, model: &str, label: &str) -> bool {
+        self.map
+            .write()
+            .unwrap()
+            .get_mut(model)
+            .map(|labels| labels.remove(label).is_some())
+            .unwrap_or(false)
+    }
+
+    /// All `(label, version)` pairs for a model, sorted by label.
+    pub fn labels(&self, model: &str) -> Vec<(String, u64)> {
+        self.map
+            .read()
+            .unwrap()
+            .get(model)
+            .map(|l| l.iter().map(|(k, &v)| (k.clone(), v)).collect())
+            .unwrap_or_default()
+    }
+
+    /// Labels currently attached to one specific version of a model.
+    pub fn labels_of_version(&self, model: &str, version: u64) -> Vec<String> {
+        self.map
+            .read()
+            .unwrap()
+            .get(model)
+            .map(|l| {
+                l.iter()
+                    .filter(|(_, &v)| v == version)
+                    .map(|(k, _)| k.clone())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_resolve_roundtrip() {
+        let r = LabelResolver::new();
+        r.set("m", "stable", 1, &[1, 2]).unwrap();
+        r.set("m", "canary", 2, &[1, 2]).unwrap();
+        assert_eq!(r.resolve("m", "stable").unwrap(), 1);
+        assert_eq!(r.resolve("m", "canary").unwrap(), 2);
+        assert_eq!(
+            r.labels("m"),
+            vec![("canary".to_string(), 2), ("stable".to_string(), 1)]
+        );
+        assert_eq!(r.labels_of_version("m", 2), vec!["canary".to_string()]);
+    }
+
+    #[test]
+    fn unknown_label_errors_and_lists_known() {
+        let r = LabelResolver::new();
+        r.set("m", "stable", 1, &[1]).unwrap();
+        let err = r.resolve("m", "canary").unwrap_err().to_string();
+        assert!(err.contains("canary") && err.contains("stable"), "{err}");
+        // Unknown model too.
+        let err = r.resolve("ghost", "stable").unwrap_err().to_string();
+        assert!(err.contains("ghost"), "{err}");
+    }
+
+    #[test]
+    fn labeling_unserved_version_rejected() {
+        let r = LabelResolver::new();
+        let err = r.set("m", "canary", 9, &[1, 2]).unwrap_err().to_string();
+        assert!(err.contains("not loaded and serving"), "{err}");
+        assert!(r.resolve("m", "canary").is_err());
+        // Empty label rejected too.
+        assert!(r.set("m", "", 1, &[1]).is_err());
+    }
+
+    #[test]
+    fn relabel_during_serving_moves_the_pointer() {
+        let r = LabelResolver::new();
+        r.set("m", "stable", 1, &[1, 2]).unwrap();
+        assert_eq!(r.resolve("m", "stable").unwrap(), 1);
+        // Promote: stable now points at v2.
+        r.set("m", "stable", 2, &[1, 2]).unwrap();
+        assert_eq!(r.resolve("m", "stable").unwrap(), 2);
+        assert_eq!(r.labels("m").len(), 1);
+    }
+
+    #[test]
+    fn remove_label() {
+        let r = LabelResolver::new();
+        r.set("m", "canary", 1, &[1]).unwrap();
+        assert!(r.remove("m", "canary"));
+        assert!(!r.remove("m", "canary"));
+        assert!(r.resolve("m", "canary").is_err());
+    }
+
+    #[test]
+    fn models_are_independent() {
+        let r = LabelResolver::new();
+        r.set("a", "stable", 1, &[1]).unwrap();
+        r.set("b", "stable", 2, &[2]).unwrap();
+        assert_eq!(r.resolve("a", "stable").unwrap(), 1);
+        assert_eq!(r.resolve("b", "stable").unwrap(), 2);
+    }
+}

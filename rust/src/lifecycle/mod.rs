@@ -10,6 +10,7 @@
 
 pub mod basic_manager;
 pub mod harness;
+pub mod labels;
 pub mod manager;
 pub mod monitor;
 pub mod policy;

@@ -1,6 +1,6 @@
 //! Synchronous RPC client + a small connection pool.
 
-use super::frame::{read_frame_into, write_frame};
+use super::frame::{read_frame_into, write_framed};
 use super::proto::{Request, Response};
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
@@ -46,8 +46,9 @@ impl RpcClient {
 
     /// Issue one request and wait for the response.
     pub fn call(&mut self, req: &Request) -> Result<Response> {
-        req.encode_into(&mut self.encode_buf);
-        write_frame(&mut self.stream, &self.encode_buf)?;
+        // Header reserved in the scratch buffer: one write syscall.
+        req.encode_framed_into(&mut self.encode_buf);
+        write_framed(&mut self.stream, &mut self.encode_buf)?;
         if !read_frame_into(&mut self.stream, &mut self.payload_buf)? {
             return Err(anyhow!("{}: connection closed mid-call", self.addr));
         }

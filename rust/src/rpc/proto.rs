@@ -1,33 +1,52 @@
 //! Wire messages and their binary codecs.
 //!
-//! Inference messages mirror §2.2's three APIs (Predict / Classify /
-//! Regress) plus a BananaFlow table lookup; admin messages carry the
-//! TFS² control plane (SetAspired from the Synchronizer, ModelStatus
-//! back). Codec style matches `inference::example`: u8 tags + u32 le
-//! length prefixes, no self-description.
+//! Inference messages mirror §2.2's APIs redesigned around
+//! signature-addressed inference: every data-plane request carries a
+//! [`ModelSpec`] (name + version **or version label**), `Predict`
+//! carries a named-input tensor map against a named signature and
+//! returns named outputs, `GetModelMetadata` reports per-version
+//! [`SignatureDef`]s, and `MultiInference` fans several
+//! classify/regress heads over one example batch. Admin messages carry
+//! the TFS² control plane (SetAspired from the Synchronizer,
+//! SetVersionLabel for canary/stable rollouts, ModelStatus back).
+//! Codec style matches `inference::example`: u8 tags + u32 le length
+//! prefixes, no self-description.
 //!
 //! Hot-path codec properties: request tensors decode **straight into
 //! pooled tensor storage** (wire bytes → the buffer the serving layer
-//! will read, no intermediate `Vec<f32>`), responses encode from
-//! tensor views without materializing owned copies, and
-//! [`Request::encode_into`]/[`Response::encode_into`] let connection
-//! loops reuse one scratch buffer across frames.
+//! will read, no intermediate `Vec`; f32 and i32 alike), responses
+//! encode from tensor views without materializing owned copies, and
+//! [`Request::encode_framed_into`]/[`Response::encode_framed_into`]
+//! reserve the 4-byte frame header inside the scratch buffer so
+//! connection loops reuse one allocation **and** reply with a single
+//! `write` syscall ([`super::frame::write_framed`]).
 
 use crate::base::tensor::{Tensor, TensorI32};
-use crate::util::pool::BufferPool;
 use crate::inference::example::Example;
+use crate::inference::multi::{HeadResult, InferenceMethod, InferenceTask};
+use crate::inference::ModelSpec;
+use crate::runtime::artifacts::{SignatureDef, TensorInfo};
 use crate::runtime::pjrt::OutTensor;
+use crate::util::pool::BufferPool;
 use anyhow::{anyhow, bail, Result};
 
 /// A request frame.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Predict { model: String, version: Option<u64>, input: Tensor },
-    Classify { model: String, version: Option<u64>, examples: Vec<Example> },
-    Regress { model: String, version: Option<u64>, examples: Vec<Example> },
+    /// Named input tensors against a named signature (`""` = default
+    /// serving signature); returns named outputs.
+    Predict { spec: ModelSpec, signature: String, inputs: Vec<(String, Tensor)> },
+    Classify { spec: ModelSpec, signature: String, examples: Vec<Example> },
+    Regress { spec: ModelSpec, signature: String, examples: Vec<Example> },
+    /// N classify/regress heads over one shared example batch.
+    MultiInference { spec: ModelSpec, tasks: Vec<InferenceTask>, examples: Vec<Example> },
+    /// Per-version signature defs, labels, and state for a model.
+    GetModelMetadata { spec: ModelSpec },
     Lookup { table: String, key: String },
     /// Admin: full aspired-version set for one servable (RPC source).
     SetAspired { model: String, versions: Vec<u64> },
+    /// Admin: attach (or move) a version label to a serving version.
+    SetVersionLabel { model: String, label: String, version: u64 },
     /// Admin: which versions of `model` are in which state?
     ModelStatus { model: String },
     /// Admin: server metrics/status dump.
@@ -36,12 +55,64 @@ pub enum Request {
     Ping,
 }
 
+impl Request {
+    /// Legacy-shaped Predict: one unnamed tensor, default signature.
+    pub fn predict(model: impl Into<String>, version: Option<u64>, input: Tensor) -> Request {
+        Request::Predict {
+            spec: ModelSpec::named(model, version),
+            signature: String::new(),
+            inputs: vec![(String::new(), input)],
+        }
+    }
+
+    /// Legacy-shaped Classify: default signature.
+    pub fn classify(
+        model: impl Into<String>,
+        version: Option<u64>,
+        examples: Vec<Example>,
+    ) -> Request {
+        Request::Classify {
+            spec: ModelSpec::named(model, version),
+            signature: String::new(),
+            examples,
+        }
+    }
+
+    /// Legacy-shaped Regress: default signature.
+    pub fn regress(
+        model: impl Into<String>,
+        version: Option<u64>,
+        examples: Vec<Example>,
+    ) -> Request {
+        Request::Regress {
+            spec: ModelSpec::named(model, version),
+            signature: String::new(),
+            examples,
+        }
+    }
+}
+
+/// Per-version metadata in a `ModelMetadata` response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VersionMetadata {
+    pub version: u64,
+    /// Lifecycle state label ("ready", "loading", …).
+    pub state: String,
+    /// Version labels currently attached ("canary", "stable", …).
+    pub labels: Vec<String>,
+    /// Named signatures this version serves (empty for non-HLO
+    /// platforms, which have no tensor signatures).
+    pub signatures: Vec<(String, SignatureDef)>,
+}
+
 /// A response frame.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    Predict { model_version: u64, outputs: Vec<OutTensor> },
+    Predict { model_version: u64, outputs: Vec<(String, OutTensor)> },
     Classify { model_version: u64, classes: Vec<i32>, log_probs: Vec<Vec<f32>> },
     Regress { model_version: u64, values: Vec<f32> },
+    MultiInference { model_version: u64, results: Vec<(String, HeadResult)> },
+    ModelMetadata { model: String, versions: Vec<VersionMetadata> },
     Lookup { values: Option<Vec<f32>> },
     Ack,
     ModelStatus { versions: Vec<(u64, String)> },
@@ -75,6 +146,18 @@ fn put_opt_version(out: &mut Vec<u8>, v: Option<u64>) {
     }
 }
 
+fn put_model_spec(out: &mut Vec<u8>, spec: &ModelSpec) {
+    put_str(out, &spec.name);
+    put_opt_version(out, spec.version);
+    match &spec.label {
+        Some(l) => {
+            out.push(1);
+            put_str(out, l);
+        }
+        None => out.push(0),
+    }
+}
+
 fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
     put_u32(out, xs.len() as u32);
     for x in xs {
@@ -90,12 +173,86 @@ fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
     put_f32s(out, t.data());
 }
 
+fn put_named_tensors(out: &mut Vec<u8>, inputs: &[(String, Tensor)]) {
+    put_u32(out, inputs.len() as u32);
+    for (name, t) in inputs {
+        put_str(out, name);
+        put_tensor(out, t);
+    }
+}
+
 fn put_examples(out: &mut Vec<u8>, examples: &[Example]) {
     put_u32(out, examples.len() as u32);
     for ex in examples {
         let enc = ex.encode();
         put_u32(out, enc.len() as u32);
         out.extend_from_slice(&enc);
+    }
+}
+
+fn put_tasks(out: &mut Vec<u8>, tasks: &[InferenceTask]) {
+    put_u32(out, tasks.len() as u32);
+    for task in tasks {
+        out.push(match task.method {
+            InferenceMethod::Classify => 0,
+            InferenceMethod::Regress => 1,
+        });
+        put_str(out, &task.signature);
+    }
+}
+
+fn put_tensor_info(out: &mut Vec<u8>, info: &TensorInfo) {
+    put_str(out, &info.name);
+    put_str(out, &info.dtype);
+    put_u32(out, info.shape.len() as u32);
+    for &d in &info.shape {
+        put_u64(out, d as u64);
+    }
+}
+
+fn put_signature_def(out: &mut Vec<u8>, def: &SignatureDef) {
+    put_str(out, &def.method);
+    put_u32(out, def.inputs.len() as u32);
+    for i in &def.inputs {
+        put_tensor_info(out, i);
+    }
+    put_u32(out, def.outputs.len() as u32);
+    for o in &def.outputs {
+        put_tensor_info(out, o);
+    }
+}
+
+fn put_version_metadata(out: &mut Vec<u8>, vm: &VersionMetadata) {
+    put_u64(out, vm.version);
+    put_str(out, &vm.state);
+    put_u32(out, vm.labels.len() as u32);
+    for l in &vm.labels {
+        put_str(out, l);
+    }
+    put_u32(out, vm.signatures.len() as u32);
+    for (name, def) in &vm.signatures {
+        put_str(out, name);
+        put_signature_def(out, def);
+    }
+}
+
+fn put_head_result(out: &mut Vec<u8>, head: &HeadResult) {
+    match head {
+        HeadResult::Classify { classes, log_probs } => {
+            out.push(0);
+            put_u32(out, classes.len() as u32);
+            for c in classes {
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+            put_u32(out, log_probs.len() as u32);
+            for row in log_probs {
+                put_f32s(out, row);
+            }
+        }
+        HeadResult::Regress { values } => {
+            out.push(1);
+            put_f32s(out, values);
+        }
     }
 }
 
@@ -161,6 +318,17 @@ impl<'a> Reader<'a> {
         })
     }
 
+    fn model_spec(&mut self) -> Result<ModelSpec> {
+        let name = self.str()?;
+        let version = self.opt_version()?;
+        let label = match self.u8()? {
+            0 => None,
+            1 => Some(self.str()?),
+            t => bail!("bad option tag {t}"),
+        };
+        Ok(ModelSpec { name, version, label })
+    }
+
     fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
         let raw = self.bytes(n * 4)?;
@@ -170,10 +338,7 @@ impl<'a> Reader<'a> {
             .collect())
     }
 
-    /// Decode a tensor by writing wire bytes directly into pooled
-    /// storage — the buffer handed to the serving layer, zero
-    /// intermediate copies.
-    fn tensor(&mut self) -> Result<Tensor> {
+    fn shape(&mut self) -> Result<Vec<usize>> {
         let rank = self.u32()? as usize;
         if rank > 8 {
             bail!("implausible rank {rank}");
@@ -182,6 +347,14 @@ impl<'a> Reader<'a> {
         for _ in 0..rank {
             shape.push(self.u32()? as usize);
         }
+        Ok(shape)
+    }
+
+    /// Decode a tensor by writing wire bytes directly into pooled
+    /// storage — the buffer handed to the serving layer, zero
+    /// intermediate copies.
+    fn tensor(&mut self) -> Result<Tensor> {
+        let shape = self.shape()?;
         let want = shape
             .iter()
             .try_fold(1usize, |acc, &d| acc.checked_mul(d))
@@ -198,6 +371,19 @@ impl<'a> Reader<'a> {
         }))
     }
 
+    fn named_tensors(&mut self) -> Result<Vec<(String, Tensor)>> {
+        let n = self.u32()? as usize;
+        if n > 1 << 16 {
+            bail!("implausible input count {n}");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = self.str()?;
+            out.push((name, self.tensor()?));
+        }
+        Ok(out)
+    }
+
     fn examples(&mut self) -> Result<Vec<Example>> {
         let n = self.u32()? as usize;
         if n > 1 << 20 {
@@ -209,6 +395,105 @@ impl<'a> Reader<'a> {
             out.push(Example::decode(self.bytes(len)?)?);
         }
         Ok(out)
+    }
+
+    fn tasks(&mut self) -> Result<Vec<InferenceTask>> {
+        let n = self.u32()? as usize;
+        if n > 1 << 16 {
+            bail!("implausible task count {n}");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let method = match self.u8()? {
+                0 => InferenceMethod::Classify,
+                1 => InferenceMethod::Regress,
+                t => bail!("unknown inference method {t}"),
+            };
+            out.push(InferenceTask { signature: self.str()?, method });
+        }
+        Ok(out)
+    }
+
+    fn tensor_info(&mut self) -> Result<TensorInfo> {
+        let name = self.str()?;
+        let dtype = self.str()?;
+        let rank = self.u32()? as usize;
+        if rank > 8 {
+            bail!("implausible rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(self.u64()? as i64);
+        }
+        Ok(TensorInfo { name, dtype, shape })
+    }
+
+    fn signature_def(&mut self) -> Result<SignatureDef> {
+        let method = self.str()?;
+        let ni = self.u32()? as usize;
+        if ni > 1 << 10 {
+            bail!("implausible input count {ni}");
+        }
+        let mut inputs = Vec::with_capacity(ni);
+        for _ in 0..ni {
+            inputs.push(self.tensor_info()?);
+        }
+        let no = self.u32()? as usize;
+        if no > 1 << 10 {
+            bail!("implausible output count {no}");
+        }
+        let mut outputs = Vec::with_capacity(no);
+        for _ in 0..no {
+            outputs.push(self.tensor_info()?);
+        }
+        Ok(SignatureDef { method, inputs, outputs })
+    }
+
+    fn version_metadata(&mut self) -> Result<VersionMetadata> {
+        let version = self.u64()?;
+        let state = self.str()?;
+        let nl = self.u32()? as usize;
+        if nl > 1 << 10 {
+            bail!("implausible label count {nl}");
+        }
+        let mut labels = Vec::with_capacity(nl);
+        for _ in 0..nl {
+            labels.push(self.str()?);
+        }
+        let ns = self.u32()? as usize;
+        if ns > 1 << 10 {
+            bail!("implausible signature count {ns}");
+        }
+        let mut signatures = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            let name = self.str()?;
+            signatures.push((name, self.signature_def()?));
+        }
+        Ok(VersionMetadata { version, state, labels, signatures })
+    }
+
+    fn head_result(&mut self) -> Result<HeadResult> {
+        Ok(match self.u8()? {
+            0 => {
+                let n = self.u32()? as usize;
+                let raw = self.bytes(n * 4)?;
+                let classes = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let m = self.u32()? as usize;
+                if m > 1 << 20 {
+                    bail!("implausible row count {m}");
+                }
+                let mut log_probs = Vec::with_capacity(m);
+                for _ in 0..m {
+                    log_probs.push(self.f32s()?);
+                }
+                HeadResult::Classify { classes, log_probs }
+            }
+            1 => HeadResult::Regress { values: self.f32s()? },
+            t => bail!("unknown head result tag {t}"),
+        })
     }
 
     fn done(&self) -> Result<()> {
@@ -232,23 +517,35 @@ impl Request {
     /// connection loops reuse one allocation across requests.
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.clear();
+        self.encode_body(out);
+    }
+
+    /// Encode with 4 reserved header bytes at the front, ready for
+    /// [`super::frame::write_framed`]'s single-syscall frame write.
+    pub fn encode_framed_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(&[0u8; super::frame::HEADER]);
+        self.encode_body(out);
+    }
+
+    fn encode_body(&self, out: &mut Vec<u8>) {
         match self {
-            Request::Predict { model, version, input } => {
+            Request::Predict { spec, signature, inputs } => {
                 out.push(0);
-                put_str(out, model);
-                put_opt_version(out, *version);
-                put_tensor(out, input);
+                put_model_spec(out, spec);
+                put_str(out, signature);
+                put_named_tensors(out, inputs);
             }
-            Request::Classify { model, version, examples } => {
+            Request::Classify { spec, signature, examples } => {
                 out.push(1);
-                put_str(out, model);
-                put_opt_version(out, *version);
+                put_model_spec(out, spec);
+                put_str(out, signature);
                 put_examples(out, examples);
             }
-            Request::Regress { model, version, examples } => {
+            Request::Regress { spec, signature, examples } => {
                 out.push(2);
-                put_str(out, model);
-                put_opt_version(out, *version);
+                put_model_spec(out, spec);
+                put_str(out, signature);
                 put_examples(out, examples);
             }
             Request::Lookup { table, key } => {
@@ -270,6 +567,22 @@ impl Request {
             }
             Request::Status => out.push(6),
             Request::Ping => out.push(7),
+            Request::GetModelMetadata { spec } => {
+                out.push(8);
+                put_model_spec(out, spec);
+            }
+            Request::MultiInference { spec, tasks, examples } => {
+                out.push(9);
+                put_model_spec(out, spec);
+                put_tasks(out, tasks);
+                put_examples(out, examples);
+            }
+            Request::SetVersionLabel { model, label, version } => {
+                out.push(10);
+                put_str(out, model);
+                put_str(out, label);
+                put_u64(out, *version);
+            }
         }
     }
 
@@ -277,18 +590,18 @@ impl Request {
         let mut r = Reader::new(buf);
         let req = match r.u8()? {
             0 => Request::Predict {
-                model: r.str()?,
-                version: r.opt_version()?,
-                input: r.tensor()?,
+                spec: r.model_spec()?,
+                signature: r.str()?,
+                inputs: r.named_tensors()?,
             },
             1 => Request::Classify {
-                model: r.str()?,
-                version: r.opt_version()?,
+                spec: r.model_spec()?,
+                signature: r.str()?,
                 examples: r.examples()?,
             },
             2 => Request::Regress {
-                model: r.str()?,
-                version: r.opt_version()?,
+                spec: r.model_spec()?,
+                signature: r.str()?,
                 examples: r.examples()?,
             },
             3 => Request::Lookup { table: r.str()?, key: r.str()? },
@@ -307,6 +620,17 @@ impl Request {
             5 => Request::ModelStatus { model: r.str()? },
             6 => Request::Status,
             7 => Request::Ping,
+            8 => Request::GetModelMetadata { spec: r.model_spec()? },
+            9 => Request::MultiInference {
+                spec: r.model_spec()?,
+                tasks: r.tasks()?,
+                examples: r.examples()?,
+            },
+            10 => Request::SetVersionLabel {
+                model: r.str()?,
+                label: r.str()?,
+                version: r.u64()?,
+            },
             t => bail!("unknown request tag {t}"),
         };
         r.done()?;
@@ -338,21 +662,26 @@ fn read_out_tensor(r: &mut Reader<'_>) -> Result<OutTensor> {
     Ok(match r.u8()? {
         0 => OutTensor::F32(r.tensor()?),
         1 => {
-            let rank = r.u32()? as usize;
-            if rank > 8 {
-                bail!("implausible rank {rank}");
-            }
-            let mut shape = Vec::with_capacity(rank);
-            for _ in 0..rank {
-                shape.push(r.u32()? as usize);
-            }
+            let shape = r.shape()?;
+            let want = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| anyhow!("tensor shape {shape:?} overflows"))?;
             let n = r.u32()? as usize;
+            if n != want {
+                bail!("tensor data length {n} != shape {shape:?} product {want}");
+            }
             let raw = r.bytes(n * 4)?;
-            let data = raw
-                .chunks_exact(4)
-                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
-                .collect();
-            OutTensor::I32(TensorI32::new(shape, data)?)
+            // i32 wire tensors land in pooled storage too.
+            OutTensor::I32(TensorI32::build_with(
+                shape,
+                &BufferPool::global_i32(),
+                |buf| {
+                    for (dst, src) in buf.iter_mut().zip(raw.chunks_exact(4)) {
+                        *dst = i32::from_le_bytes(src.try_into().unwrap());
+                    }
+                },
+            ))
         }
         t => bail!("unknown tensor tag {t}"),
     })
@@ -369,12 +698,25 @@ impl Response {
     /// connection loops reuse one allocation across responses.
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.clear();
+        self.encode_body(out);
+    }
+
+    /// Encode with 4 reserved header bytes at the front, ready for
+    /// [`super::frame::write_framed`]'s single-syscall frame write.
+    pub fn encode_framed_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(&[0u8; super::frame::HEADER]);
+        self.encode_body(out);
+    }
+
+    fn encode_body(&self, out: &mut Vec<u8>) {
         match self {
             Response::Predict { model_version, outputs } => {
                 out.push(0);
                 put_u64(out, *model_version);
                 put_u32(out, outputs.len() as u32);
-                for t in outputs {
+                for (name, t) in outputs {
+                    put_str(out, name);
                     put_out_tensor(out, t);
                 }
             }
@@ -419,6 +761,23 @@ impl Response {
                 put_str(out, text);
             }
             Response::Pong => out.push(7),
+            Response::ModelMetadata { model, versions } => {
+                out.push(8);
+                put_str(out, model);
+                put_u32(out, versions.len() as u32);
+                for vm in versions {
+                    put_version_metadata(out, vm);
+                }
+            }
+            Response::MultiInference { model_version, results } => {
+                out.push(9);
+                put_u64(out, *model_version);
+                put_u32(out, results.len() as u32);
+                for (name, head) in results {
+                    put_str(out, name);
+                    put_head_result(out, head);
+                }
+            }
             Response::Error { message } => {
                 out.push(255);
                 put_str(out, message);
@@ -432,9 +791,13 @@ impl Response {
             0 => {
                 let model_version = r.u64()?;
                 let n = r.u32()? as usize;
+                if n > 1 << 16 {
+                    bail!("implausible output count {n}");
+                }
                 let mut outputs = Vec::with_capacity(n);
                 for _ in 0..n {
-                    outputs.push(read_out_tensor(&mut r)?);
+                    let name = r.str()?;
+                    outputs.push((name, read_out_tensor(&mut r)?));
                 }
                 Response::Predict { model_version, outputs }
             }
@@ -478,6 +841,31 @@ impl Response {
             }
             6 => Response::Status { text: r.str()? },
             7 => Response::Pong,
+            8 => {
+                let model = r.str()?;
+                let n = r.u32()? as usize;
+                if n > 1 << 16 {
+                    bail!("implausible version count {n}");
+                }
+                let mut versions = Vec::with_capacity(n);
+                for _ in 0..n {
+                    versions.push(r.version_metadata()?);
+                }
+                Response::ModelMetadata { model, versions }
+            }
+            9 => {
+                let model_version = r.u64()?;
+                let n = r.u32()? as usize;
+                if n > 1 << 16 {
+                    bail!("implausible result count {n}");
+                }
+                let mut results = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name = r.str()?;
+                    results.push((name, r.head_result()?));
+                }
+                Response::MultiInference { model_version, results }
+            }
             255 => Response::Error { message: r.str()? },
             t => bail!("unknown response tag {t}"),
         };
@@ -492,12 +880,25 @@ impl Response {
             other => Ok(other),
         }
     }
+
+    /// Hand output-tensor storage back to the global pools. Called by
+    /// the server's connection loop after serialization, when the
+    /// response holds the sole reference: the pool declines anything
+    /// still shared or not class-sized, so this is always safe.
+    pub fn recycle_buffers(self) {
+        if let Response::Predict { outputs, .. } = self {
+            crate::inference::predict::recycle_out_tensors(
+                outputs.into_iter().map(|(_, t)| t).collect(),
+            );
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::inference::example::Feature;
+    use crate::runtime::artifacts::ArtifactSpec;
 
     fn roundtrip_req(req: Request) {
         assert_eq!(Request::decode(&req.encode()).unwrap(), req);
@@ -507,30 +908,56 @@ mod tests {
         assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
     }
 
+    fn full_spec() -> ModelSpec {
+        ModelSpec { name: "m".into(), version: Some(3), label: None }
+    }
+
     #[test]
     fn request_roundtrips() {
         roundtrip_req(Request::Predict {
-            model: "m".into(),
-            version: Some(3),
-            input: Tensor::matrix(vec![vec![1.0, 2.0]]).unwrap(),
+            spec: full_spec(),
+            signature: "serving_default".into(),
+            inputs: vec![
+                ("x".into(), Tensor::matrix(vec![vec![1.0, 2.0]]).unwrap()),
+                ("mask".into(), Tensor::zeros(vec![2, 3, 4])),
+            ],
         });
+        roundtrip_req(Request::predict("m", None, Tensor::zeros(vec![2, 3, 4])));
         roundtrip_req(Request::Predict {
-            model: "m".into(),
-            version: None,
-            input: Tensor::zeros(vec![2, 3, 4]),
+            spec: ModelSpec::with_label("m", "canary"),
+            signature: String::new(),
+            inputs: vec![("x".into(), Tensor::vec(vec![1.0]))],
         });
-        roundtrip_req(Request::Classify {
-            model: "c".into(),
-            version: None,
-            examples: vec![
+        roundtrip_req(Request::classify(
+            "c",
+            None,
+            vec![
                 Example::new().with("x", Feature::Floats(vec![1.0])),
                 Example::new().with("y", Feature::Ints(vec![-5])),
             ],
-        });
-        roundtrip_req(Request::Regress {
-            model: "r".into(),
-            version: Some(1),
+        ));
+        roundtrip_req(Request::Classify {
+            spec: ModelSpec::with_label("c", "stable"),
+            signature: "heads".into(),
             examples: vec![Example::new()],
+        });
+        roundtrip_req(Request::regress("r", Some(1), vec![Example::new()]));
+        roundtrip_req(Request::MultiInference {
+            spec: ModelSpec::latest("m"),
+            tasks: vec![
+                InferenceTask::classify("classify"),
+                InferenceTask::regress("regress"),
+            ],
+            examples: vec![Example::new().with("x", Feature::Floats(vec![0.5; 4]))],
+        });
+        roundtrip_req(Request::GetModelMetadata { spec: ModelSpec::latest("m") });
+        roundtrip_req(Request::GetModelMetadata {
+            spec: ModelSpec::with_label("m", "canary"),
+        });
+        roundtrip_req(Request::SetVersionLabel {
+            model: "m".into(),
+            label: "canary".into(),
+            version: 7,
         });
         roundtrip_req(Request::Lookup { table: "t".into(), key: "k".into() });
         roundtrip_req(Request::SetAspired { model: "m".into(), versions: vec![1, 2, 9] });
@@ -545,8 +972,11 @@ mod tests {
         roundtrip_resp(Response::Predict {
             model_version: 2,
             outputs: vec![
-                OutTensor::F32(Tensor::matrix(vec![vec![0.5, -1.5]]).unwrap()),
-                OutTensor::I32(TensorI32::new(vec![1], vec![3]).unwrap()),
+                (
+                    "log_probs".into(),
+                    OutTensor::F32(Tensor::matrix(vec![vec![0.5, -1.5]]).unwrap()),
+                ),
+                ("class".into(), OutTensor::I32(TensorI32::new(vec![1], vec![3]).unwrap())),
             ],
         });
         roundtrip_resp(Response::Classify {
@@ -555,6 +985,41 @@ mod tests {
             log_probs: vec![vec![-0.1, -2.0], vec![], vec![1.0]],
         });
         roundtrip_resp(Response::Regress { model_version: 1, values: vec![1.5] });
+        roundtrip_resp(Response::MultiInference {
+            model_version: 4,
+            results: vec![
+                (
+                    "classify".into(),
+                    HeadResult::Classify {
+                        classes: vec![1, 0],
+                        log_probs: vec![vec![-0.5, -1.0], vec![-0.1, -2.3]],
+                    },
+                ),
+                ("regress".into(), HeadResult::Regress { values: vec![0.25, -4.0] }),
+            ],
+        });
+        let spec = ArtifactSpec::synthetic_multi_head("syn", 2, 8, 3);
+        roundtrip_resp(Response::ModelMetadata {
+            model: "syn".into(),
+            versions: vec![
+                VersionMetadata {
+                    version: 1,
+                    state: "ready".into(),
+                    labels: vec!["stable".into()],
+                    signatures: spec
+                        .signatures
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.clone()))
+                        .collect(),
+                },
+                VersionMetadata {
+                    version: 2,
+                    state: "loading".into(),
+                    labels: vec![],
+                    signatures: vec![],
+                },
+            ],
+        });
         roundtrip_resp(Response::Lookup { values: Some(vec![1.0, 2.0]) });
         roundtrip_resp(Response::Lookup { values: None });
         roundtrip_resp(Response::Ack);
@@ -585,17 +1050,44 @@ mod tests {
     }
 
     #[test]
-    fn decoded_tensor_uses_pooled_class_storage() {
+    fn framed_encoding_reserves_header() {
+        use crate::rpc::frame::{read_frame, write_framed, HEADER};
+        let req = Request::predict("m", Some(1), Tensor::zeros(vec![2, 4]));
+        let mut framed = Vec::new();
+        req.encode_framed_into(&mut framed);
+        // Body after the header matches the plain encoding.
+        assert_eq!(&framed[HEADER..], &req.encode()[..]);
+        // One write_framed call produces a stream read_frame understands.
+        let mut wire = Vec::new();
+        write_framed(&mut wire, &mut framed).unwrap();
+        let payload = read_frame(&mut std::io::Cursor::new(wire)).unwrap().unwrap();
+        assert_eq!(Request::decode(&payload).unwrap(), req);
+        // Response side too.
+        let resp = Response::Status { text: "ok".into() };
+        let mut framed = Vec::new();
+        resp.encode_framed_into(&mut framed);
+        let mut wire = Vec::new();
+        write_framed(&mut wire, &mut framed).unwrap();
+        let payload = read_frame(&mut std::io::Cursor::new(wire)).unwrap().unwrap();
+        assert_eq!(Response::decode(&payload).unwrap(), resp);
+    }
+
+    #[test]
+    fn decoded_tensors_use_pooled_class_storage() {
         // The decode path writes into a dedicated pool-class buffer
         // at offset 0 (so the serving layer can recycle it after batch
-        // assembly or inference consumes it).
+        // assembly or inference consumes it) — f32 and i32 alike.
         let req = Request::Predict {
-            model: "m".into(),
-            version: None,
-            input: Tensor::matrix(vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap(),
+            spec: ModelSpec::latest("m"),
+            signature: String::new(),
+            inputs: vec![(
+                "x".into(),
+                Tensor::matrix(vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap(),
+            )],
         };
         match Request::decode(&req.encode()).unwrap() {
-            Request::Predict { input, .. } => {
+            Request::Predict { inputs, .. } => {
+                let input = &inputs[0].1;
                 assert_eq!(input.data(), &[1.0, 2.0, 3.0, 4.0]);
                 let class = crate::util::pool::size_class(input.len());
                 assert_eq!(input.storage().len(), class);
@@ -603,6 +1095,44 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+        let resp = Response::Predict {
+            model_version: 1,
+            outputs: vec![(
+                "class".into(),
+                OutTensor::I32(TensorI32::new(vec![3], vec![1, 2, 3]).unwrap()),
+            )],
+        };
+        match Response::decode(&resp.encode()).unwrap() {
+            Response::Predict { outputs, .. } => {
+                let t = outputs[0].1.as_i32().unwrap().clone();
+                assert_eq!(t.data(), &[1, 2, 3]);
+                // Recycling the decoded i32 tensor lands it in the
+                // global i32 pool (sole owner, class-sized).
+                let before = BufferPool::global_i32().stats().recycled;
+                drop(outputs);
+                t.recycle_into(&BufferPool::global_i32());
+                // >= rather than == : other tests share the global pool.
+                assert!(BufferPool::global_i32().stats().recycled >= before + 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn predict_response_recycles_into_pools() {
+        let f32_before = BufferPool::global().stats().recycled;
+        let t = Tensor::build_with(vec![4, 4], &BufferPool::global(), |b| b.fill(1.0));
+        let resp = Response::Predict {
+            model_version: 1,
+            outputs: vec![("y".into(), OutTensor::F32(t))],
+        };
+        let mut buf = Vec::new();
+        resp.encode_framed_into(&mut buf);
+        resp.recycle_buffers();
+        // >= rather than == : other tests share the global pool.
+        assert!(BufferPool::global().stats().recycled >= f32_before + 1);
+        // Non-predict responses are a no-op.
+        Response::Pong.recycle_buffers();
     }
 
     #[test]
@@ -621,15 +1151,34 @@ mod tests {
         let mut buf = Request::Ping.encode();
         buf.push(0);
         assert!(Request::decode(&buf).is_err());
-        // truncation at every prefix must error, not panic
-        let full = Request::Predict {
-            model: "model".into(),
-            version: Some(1),
-            input: Tensor::matrix(vec![vec![1.0, 2.0]]).unwrap(),
+        // truncation at every prefix must error, not panic — exercised
+        // over the most structure-heavy request and response frames.
+        let full = Request::MultiInference {
+            spec: ModelSpec::with_label("model", "canary"),
+            tasks: vec![InferenceTask::classify("c"), InferenceTask::regress("r")],
+            examples: vec![Example::new().with("x", Feature::Floats(vec![1.0, 2.0]))],
         }
         .encode();
         for cut in 0..full.len() {
-            assert!(Request::decode(&full[..cut]).is_err(), "cut={cut}");
+            assert!(Request::decode(&full[..cut]).is_err(), "request cut={cut}");
+        }
+        let spec = ArtifactSpec::synthetic_classifier("s", 1, 4, 2);
+        let full = Response::ModelMetadata {
+            model: "s".into(),
+            versions: vec![VersionMetadata {
+                version: 1,
+                state: "ready".into(),
+                labels: vec!["stable".into()],
+                signatures: spec
+                    .signatures
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect(),
+            }],
+        }
+        .encode();
+        for cut in 0..full.len() {
+            assert!(Response::decode(&full[..cut]).is_err(), "response cut={cut}");
         }
     }
 }

@@ -1,7 +1,7 @@
 //! Threaded RPC server: accept loop + one handler thread per
 //! connection, framed request/response, graceful shutdown.
 
-use super::frame::{read_frame_into, write_frame};
+use super::frame::{read_frame_into, write_framed};
 use super::proto::{Request, Response};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -92,8 +92,12 @@ impl RpcServer {
                 Err(e) => Response::Error { message: format!("bad request: {e}") },
             };
             counter.fetch_add(1, Ordering::Relaxed);
-            response.encode_into(&mut encoded);
-            if let Err(e) = write_frame(&mut stream, &encoded) {
+            // Header bytes are reserved inside the scratch buffer, so
+            // the reply is ONE write syscall; once the bytes are in
+            // `encoded`, sole-owner output tensors go back to the pool.
+            response.encode_framed_into(&mut encoded);
+            response.recycle_buffers();
+            if let Err(e) = write_framed(&mut stream, &mut encoded) {
                 crate::log_debug!("connection write error: {e}");
                 return;
             }
@@ -132,7 +136,7 @@ impl Drop for RpcServer {
 mod tests {
     use super::*;
     use crate::rpc::client::RpcClient;
-    use crate::rpc::frame::read_frame;
+    use crate::rpc::frame::{read_frame, write_frame};
 
     fn echo_server() -> Arc<RpcServer> {
         RpcServer::start(

@@ -1,19 +1,82 @@
-//! Artifact layout and `spec.json` sidecars (the contract with
-//! `python/compile/aot.py`).
+//! Artifact layout, `spec.json` sidecars (the contract with
+//! `python/compile/aot.py`), and the signature metadata derived from
+//! them.
+//!
+//! A servable's callable surface is described by named
+//! [`SignatureDef`]s (the paper's signature-addressed inference): each
+//! maps a method ("predict" / "classify" / "regress") to named, typed,
+//! shaped input and output tensors. Specs that don't declare a
+//! `signatures` object get a default serving signature synthesized
+//! from their top-level input/outputs, so every existing artifact is
+//! addressable as `"serving_default"`.
 
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+
+/// The signature name every servable answers to when the client does
+/// not name one.
+pub const DEFAULT_SIGNATURE: &str = "serving_default";
+
+/// Name + dtype + shape of one signature input or output tensor
+/// (`-1` = dynamic dimension, in practice the batch dimension).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorInfo {
+    pub name: String,
+    /// "f32" or "s32".
+    pub dtype: String,
+    pub shape: Vec<i64>,
+}
+
+impl TensorInfo {
+    pub fn f32(name: &str, shape: Vec<i64>) -> TensorInfo {
+        TensorInfo { name: name.to_string(), dtype: "f32".into(), shape }
+    }
+
+    pub fn s32(name: &str, shape: Vec<i64>) -> TensorInfo {
+        TensorInfo { name: name.to_string(), dtype: "s32".into(), shape }
+    }
+
+    /// True if a concrete tensor shape is compatible: same rank, and
+    /// every non-dynamic declared dim matches.
+    pub fn matches_shape(&self, shape: &[usize]) -> bool {
+        self.shape.len() == shape.len()
+            && self
+                .shape
+                .iter()
+                .zip(shape)
+                .all(|(&want, &got)| want < 0 || want as usize == got)
+    }
+}
+
+/// One named way to call a servable: a method plus its typed tensors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SignatureDef {
+    /// "predict" | "classify" | "regress".
+    pub method: String,
+    pub inputs: Vec<TensorInfo>,
+    /// Subset (often all) of the executable's outputs, by name.
+    pub outputs: Vec<TensorInfo>,
+}
 
 /// Parsed `spec.json` for one model version.
 #[derive(Debug, Clone, PartialEq)]
-pub struct ModelSpec {
+pub struct ArtifactSpec {
     pub platform: String,
-    pub signature: String, // "classify" | "regress" | "predict"
+    /// Default method ("classify" | "regress" | "predict") — the
+    /// method of the default serving signature.
+    pub signature: String,
     pub model_name: String,
     pub version: u64,
+    /// The executable's single input.
+    pub input: TensorInfo,
     pub input_dim: usize,
-    pub output_names: Vec<String>,
+    /// The executable's outputs, in tuple order.
+    pub outputs: Vec<TensorInfo>,
+    /// Named signatures clients can address. Always contains
+    /// [`DEFAULT_SIGNATURE`].
+    pub signatures: BTreeMap<String, SignatureDef>,
     pub allowed_batch_sizes: Vec<usize>,
     pub artifact_pattern: String,
     pub ram_estimate_bytes: u64,
@@ -22,8 +85,8 @@ pub struct ModelSpec {
     pub metrics: Json,
 }
 
-impl ModelSpec {
-    pub fn parse(json: &Json, origin: &str) -> Result<ModelSpec> {
+impl ArtifactSpec {
+    pub fn parse(json: &Json, origin: &str) -> Result<ArtifactSpec> {
         let get_str = |k: &str| -> Result<String> {
             Ok(json
                 .get(k)
@@ -31,22 +94,63 @@ impl ModelSpec {
                 .ok_or_else(|| anyhow!("{origin}: missing string '{k}'"))?
                 .to_string())
         };
-        let input_dim = json
+        let input_dims: Vec<i64> = json
             .get_path("input.shape")
             .and_then(|v| v.as_arr())
-            .and_then(|a| a.last())
-            .and_then(|v| v.as_i64())
-            .ok_or_else(|| anyhow!("{origin}: bad input.shape"))? as usize;
-        let output_names = json
+            .ok_or_else(|| anyhow!("{origin}: bad input.shape"))?
+            .iter()
+            .map(|d| d.as_i64())
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("{origin}: non-integer input.shape dim"))?;
+        let input_dim = *input_dims
+            .last()
+            .ok_or_else(|| anyhow!("{origin}: empty input.shape"))? as usize;
+        // Declared shape, batch dim dynamic — preserved at full rank,
+        // not collapsed to [-1, input_dim].
+        let mut input_shape = input_dims;
+        input_shape[0] = -1;
+        let input = TensorInfo {
+            name: json
+                .get_path("input.name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("x")
+                .to_string(),
+            dtype: json
+                .get_path("input.dtype")
+                .and_then(|v| v.as_str())
+                .unwrap_or("f32")
+                .to_string(),
+            shape: input_shape,
+        };
+        let outputs = json
             .get("outputs")
             .and_then(|v| v.as_arr())
             .ok_or_else(|| anyhow!("{origin}: missing outputs"))?
             .iter()
             .map(|o| {
-                o.get("name")
+                let name = o
+                    .get("name")
                     .and_then(|n| n.as_str())
                     .map(str::to_string)
-                    .ok_or_else(|| anyhow!("{origin}: output without name"))
+                    .ok_or_else(|| anyhow!("{origin}: output without name"))?;
+                let dtype = o
+                    .get("dtype")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("f32")
+                    .to_string();
+                let shape = match o.get("shape") {
+                    None => vec![-1],
+                    Some(v) => v
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("{origin}: output '{name}': bad shape"))?
+                        .iter()
+                        .map(|d| d.as_i64())
+                        .collect::<Option<Vec<_>>>()
+                        .ok_or_else(|| {
+                            anyhow!("{origin}: output '{name}': non-integer shape dim")
+                        })?,
+                };
+                Ok(TensorInfo { name, dtype, shape })
             })
             .collect::<Result<Vec<_>>>()?;
         let allowed_batch_sizes: Vec<usize> = json
@@ -60,16 +164,22 @@ impl ModelSpec {
         if allowed_batch_sizes.is_empty() {
             bail!("{origin}: empty allowed_batch_sizes");
         }
-        Ok(ModelSpec {
+        let signature = get_str("signature")?;
+        let mut signatures =
+            parse_signatures(json.get("signatures"), &input, &outputs, origin)?;
+        ensure_default_signatures(&mut signatures, &signature, &input, &outputs);
+        Ok(ArtifactSpec {
             platform: get_str("platform")?,
-            signature: get_str("signature")?,
+            signature,
             model_name: get_str("model_name")?,
             version: json
                 .get("version")
                 .and_then(|v| v.as_u64())
                 .ok_or_else(|| anyhow!("{origin}: missing version"))?,
+            input,
             input_dim,
-            output_names,
+            outputs,
+            signatures,
             allowed_batch_sizes,
             artifact_pattern: get_str("artifact_pattern")?,
             ram_estimate_bytes: json
@@ -81,7 +191,7 @@ impl ModelSpec {
         })
     }
 
-    pub fn load(version_dir: &Path) -> Result<ModelSpec> {
+    pub fn load(version_dir: &Path) -> Result<ArtifactSpec> {
         let path = version_dir.join("spec.json");
         let json = Json::parse_file(&path).context("loading spec")?;
         Self::parse(&json, &path.display().to_string())
@@ -94,6 +204,178 @@ impl ModelSpec {
 
     pub fn max_batch_size(&self) -> usize {
         *self.allowed_batch_sizes.last().unwrap()
+    }
+
+    pub fn output_names(&self) -> Vec<&str> {
+        self.outputs.iter().map(|o| o.name.as_str()).collect()
+    }
+
+    /// Position of a named output in the executable's output tuple.
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|o| o.name == name)
+    }
+
+    /// Look up a signature by name (empty = [`DEFAULT_SIGNATURE`]),
+    /// with an error that lists what is available.
+    pub fn signature_def(&self, name: &str) -> Result<(&str, &SignatureDef)> {
+        let want = if name.is_empty() { DEFAULT_SIGNATURE } else { name };
+        match self.signatures.get_key_value(want) {
+            Some((k, v)) => Ok((k.as_str(), v)),
+            None => bail!(
+                "model '{}' has no signature '{}' (available: {:?})",
+                self.model_name,
+                want,
+                self.signatures.keys().collect::<Vec<_>>()
+            ),
+        }
+    }
+
+    /// In-memory spec for a synthetic servable (no artifact files, no
+    /// PJRT backend): one classify signature over `classes` classes.
+    /// Used by tests/benches that exercise the full serving stack
+    /// without compiled models.
+    pub fn synthetic_classifier(
+        name: &str,
+        version: u64,
+        input_dim: usize,
+        classes: usize,
+    ) -> ArtifactSpec {
+        let input = TensorInfo::f32("x", vec![-1, input_dim as i64]);
+        let outputs = vec![
+            TensorInfo::f32("log_probs", vec![-1, classes as i64]),
+            TensorInfo::s32("class", vec![-1]),
+        ];
+        let mut signatures = BTreeMap::new();
+        ensure_default_signatures(&mut signatures, "classify", &input, &outputs);
+        ArtifactSpec {
+            platform: "hlo".into(),
+            signature: "classify".into(),
+            model_name: name.to_string(),
+            version,
+            input,
+            input_dim,
+            outputs,
+            signatures,
+            allowed_batch_sizes: vec![64],
+            artifact_pattern: "synthetic".into(),
+            ram_estimate_bytes: 1 << 16,
+            n_params: 0,
+            metrics: Json::Null,
+        }
+    }
+
+    /// Two-headed synthetic spec: a classify head (`log_probs`,
+    /// `class`) and a regress head (`value`) over one shared input —
+    /// the MultiInference test fixture.
+    pub fn synthetic_multi_head(
+        name: &str,
+        version: u64,
+        input_dim: usize,
+        classes: usize,
+    ) -> ArtifactSpec {
+        let mut spec = Self::synthetic_classifier(name, version, input_dim, classes);
+        spec.outputs.push(TensorInfo::f32("value", vec![-1]));
+        spec.signatures.insert(
+            "classify".into(),
+            SignatureDef {
+                method: "classify".into(),
+                inputs: vec![spec.input.clone()],
+                outputs: vec![spec.outputs[0].clone(), spec.outputs[1].clone()],
+            },
+        );
+        spec.signatures.insert(
+            "regress".into(),
+            SignatureDef {
+                method: "regress".into(),
+                inputs: vec![spec.input.clone()],
+                outputs: vec![spec.outputs[2].clone()],
+            },
+        );
+        // serving_default keeps the classify heads only; the full
+        // output tuple stays reachable through "predict_all".
+        spec.signatures.insert(
+            "predict_all".into(),
+            SignatureDef {
+                method: "predict".into(),
+                inputs: vec![spec.input.clone()],
+                outputs: spec.outputs.clone(),
+            },
+        );
+        spec
+    }
+}
+
+/// Parse an optional `signatures` JSON object:
+/// `{"name": {"method": "classify", "outputs": ["log_probs","class"]}}`.
+/// Output names must reference the executable's top-level outputs;
+/// inputs are implicitly the model input.
+fn parse_signatures(
+    json: Option<&Json>,
+    input: &TensorInfo,
+    outputs: &[TensorInfo],
+    origin: &str,
+) -> Result<BTreeMap<String, SignatureDef>> {
+    let mut map = BTreeMap::new();
+    // Key absent is fine (defaults synthesize); key present but not an
+    // object is a spec error, reported at load time not request time.
+    let Some(json) = json else {
+        return Ok(map);
+    };
+    let obj = json
+        .as_obj()
+        .ok_or_else(|| anyhow!("{origin}: 'signatures' must be an object"))?;
+    for (name, def) in obj {
+        let method = def
+            .get("method")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("{origin}: signature '{name}' missing method"))?
+            .to_string();
+        let out_names = def
+            .get("outputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("{origin}: signature '{name}' missing outputs"))?;
+        let sig_outputs = out_names
+            .iter()
+            .map(|n| {
+                let n = n
+                    .as_str()
+                    .ok_or_else(|| anyhow!("{origin}: signature '{name}': non-string output"))?;
+                outputs
+                    .iter()
+                    .find(|o| o.name == n)
+                    .cloned()
+                    .ok_or_else(|| {
+                        anyhow!("{origin}: signature '{name}' references unknown output '{n}'")
+                    })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        map.insert(
+            name.clone(),
+            SignatureDef { method, inputs: vec![input.clone()], outputs: sig_outputs },
+        );
+    }
+    Ok(map)
+}
+
+/// Guarantee [`DEFAULT_SIGNATURE`] exists (full output tuple, the
+/// spec's default method) and alias it under the method name so
+/// `signature: "classify"` stays addressable as `"classify"`.
+fn ensure_default_signatures(
+    signatures: &mut BTreeMap<String, SignatureDef>,
+    method: &str,
+    input: &TensorInfo,
+    outputs: &[TensorInfo],
+) {
+    let def = SignatureDef {
+        method: method.to_string(),
+        inputs: vec![input.clone()],
+        outputs: outputs.to_vec(),
+    };
+    if !signatures.contains_key(DEFAULT_SIGNATURE) {
+        signatures.insert(DEFAULT_SIGNATURE.into(), def.clone());
+    }
+    if !signatures.contains_key(method) {
+        signatures.insert(method.to_string(), def);
     }
 }
 
@@ -132,11 +414,13 @@ mod tests {
 
     #[test]
     fn parse_full_spec() {
-        let spec = ModelSpec::parse(&Json::parse(SPEC).unwrap(), "test").unwrap();
+        let spec = ArtifactSpec::parse(&Json::parse(SPEC).unwrap(), "test").unwrap();
         assert_eq!(spec.model_name, "m");
         assert_eq!(spec.version, 3);
         assert_eq!(spec.input_dim, 32);
-        assert_eq!(spec.output_names, vec!["log_probs", "class"]);
+        assert_eq!(spec.input.name, "x");
+        assert_eq!(spec.output_names(), vec!["log_probs", "class"]);
+        assert_eq!(spec.outputs[1].dtype, "s32");
         assert_eq!(spec.allowed_batch_sizes, vec![1, 4, 16]);
         assert_eq!(spec.max_batch_size(), 16);
         assert_eq!(spec.ram_estimate_bytes, 123456);
@@ -147,8 +431,74 @@ mod tests {
     }
 
     #[test]
+    fn default_signature_synthesized() {
+        let spec = ArtifactSpec::parse(&Json::parse(SPEC).unwrap(), "test").unwrap();
+        let (name, def) = spec.signature_def("").unwrap();
+        assert_eq!(name, DEFAULT_SIGNATURE);
+        assert_eq!(def.method, "classify");
+        assert_eq!(def.inputs.len(), 1);
+        assert_eq!(def.inputs[0].shape, vec![-1, 32]);
+        assert_eq!(def.outputs.len(), 2);
+        // Aliased under the method name too.
+        let (_, alias) = spec.signature_def("classify").unwrap();
+        assert_eq!(alias, def);
+        // Unknown signatures error and list what exists.
+        let err = spec.signature_def("nope").unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("serving_default"), "{err}");
+    }
+
+    #[test]
+    fn explicit_signatures_parsed_and_validated() {
+        let with_sigs = SPEC.replace(
+            "\"metrics\": {\"train_accuracy\": 0.98}",
+            r#""metrics": {},
+               "signatures": {"heads": {"method": "classify",
+                                        "outputs": ["class"]}}"#,
+        );
+        let spec = ArtifactSpec::parse(&Json::parse(&with_sigs).unwrap(), "t").unwrap();
+        let (_, heads) = spec.signature_def("heads").unwrap();
+        assert_eq!(heads.outputs.len(), 1);
+        assert_eq!(heads.outputs[0].name, "class");
+        // serving_default still synthesized alongside.
+        assert!(spec.signatures.contains_key(DEFAULT_SIGNATURE));
+
+        let bad = with_sigs.replace("[\"class\"]", "[\"missing_output\"]");
+        let err = ArtifactSpec::parse(&Json::parse(&bad).unwrap(), "t").unwrap_err();
+        assert!(err.to_string().contains("missing_output"), "{err}");
+    }
+
+    #[test]
+    fn malformed_output_dims_error_loudly() {
+        // A non-integer dim must fail parse, not silently shrink rank.
+        let bad = SPEC.replace(r#""shape": [-1, 4]"#, r#""shape": [-1, "4"]"#);
+        let err = ArtifactSpec::parse(&Json::parse(&bad).unwrap(), "t").unwrap_err();
+        assert!(err.to_string().contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn tensor_info_shape_matching() {
+        let info = TensorInfo::f32("x", vec![-1, 32]);
+        assert!(info.matches_shape(&[7, 32]));
+        assert!(!info.matches_shape(&[7, 31]));
+        assert!(!info.matches_shape(&[32]));
+    }
+
+    #[test]
+    fn synthetic_specs_have_heads() {
+        let spec = ArtifactSpec::synthetic_multi_head("syn", 2, 8, 3);
+        assert_eq!(spec.output_index("value"), Some(2));
+        let (_, c) = spec.signature_def("classify").unwrap();
+        assert_eq!(c.method, "classify");
+        let (_, r) = spec.signature_def("regress").unwrap();
+        assert_eq!(r.method, "regress");
+        assert_eq!(r.outputs[0].name, "value");
+        let (_, d) = spec.signature_def("").unwrap();
+        assert_eq!(d.method, "classify");
+    }
+
+    #[test]
     fn artifact_path_substitution() {
-        let spec = ModelSpec::parse(&Json::parse(SPEC).unwrap(), "test").unwrap();
+        let spec = ArtifactSpec::parse(&Json::parse(SPEC).unwrap(), "test").unwrap();
         assert_eq!(
             spec.artifact_path(Path::new("/a/b/3"), 16),
             PathBuf::from("/a/b/3/model_b16.hlo.txt")
@@ -158,14 +508,14 @@ mod tests {
     #[test]
     fn parse_rejects_incomplete() {
         let bad = Json::parse(r#"{"platform": "hlo"}"#).unwrap();
-        assert!(ModelSpec::parse(&bad, "t").is_err());
+        assert!(ArtifactSpec::parse(&bad, "t").is_err());
         let no_sizes = Json::parse(
             r#"{"platform":"hlo","signature":"s","model_name":"m","version":1,
                 "input":{"shape":[-1,4]},"outputs":[],"allowed_batch_sizes":[],
                 "artifact_pattern":"x"}"#,
         )
         .unwrap();
-        assert!(ModelSpec::parse(&no_sizes, "t").is_err());
+        assert!(ArtifactSpec::parse(&no_sizes, "t").is_err());
     }
 
     #[test]
@@ -177,10 +527,11 @@ mod tests {
         for model in ["mlp_classifier", "mlp_regressor"] {
             for v in [1u64, 2] {
                 let dir = root.join(model).join(v.to_string());
-                let spec = ModelSpec::load(&dir).unwrap();
+                let spec = ArtifactSpec::load(&dir).unwrap();
                 assert_eq!(spec.model_name, model);
                 assert_eq!(spec.version, v);
                 assert_eq!(spec.input_dim, 32);
+                assert!(spec.signatures.contains_key(DEFAULT_SIGNATURE));
                 for &b in &spec.allowed_batch_sizes {
                     assert!(spec.artifact_path(&dir, b).exists());
                 }

@@ -2,29 +2,50 @@
 //! one compiled executable per allowed batch size plus its spec — and
 //! the [`HloLoader`]/[`hlo_source_adapter`] that plug it into the
 //! lifecycle chain (§2.1's TensorFlow Source Adapter analogue).
+//!
+//! A servable also exposes its callable surface as a map of named
+//! [`SignatureDef`]s ([`HloServable::signatures`]) derived from the
+//! artifact metadata — what `GetModelMetadata` reports and what the
+//! inference layer validates named inputs against.
+//!
+//! Besides the compiled engine there is a **synthetic** engine
+//! ([`HloServable::synthetic`] / [`synthetic_loader`]): a pure-Rust
+//! deterministic model that honors the same spec/signature contract.
+//! It lets the full serving stack — lifecycle, RPC, signatures,
+//! labels, MultiInference — run end-to-end in builds without the PJRT
+//! backend or artifact files.
 
-use super::artifacts::ModelSpec;
+use super::artifacts::{ArtifactSpec, SignatureDef};
 use super::pjrt::{CompiledModel, OutTensor, XlaRuntime};
 use crate::base::loader::{Loader, ResourceEstimate};
 use crate::base::servable::ServableBox;
-use crate::base::tensor::Tensor;
+use crate::base::tensor::{Tensor, TensorI32};
 use crate::batching::padding::pad_to_allowed;
 use crate::lifecycle::source_adapter::FnSourceAdapter;
+use crate::util::pool::BufferPool;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
+/// How a servable executes a batch.
+enum Engine {
+    /// AOT-compiled executables on the batch-size ladder.
+    Compiled(BTreeMap<usize, CompiledModel>),
+    /// Deterministic pure-Rust model (tests/benches; no backend).
+    Synthetic,
+}
+
 /// A loaded HLO model: fixed-shape executables on the batch-size ladder.
 pub struct HloServable {
-    pub spec: ModelSpec,
-    execs: BTreeMap<usize, CompiledModel>,
+    pub spec: ArtifactSpec,
+    engine: Engine,
 }
 
 impl HloServable {
     /// Compile every ladder executable from a version directory.
     pub fn load(runtime: &Arc<XlaRuntime>, version_dir: &PathBuf) -> Result<HloServable> {
-        let spec = ModelSpec::load(version_dir)?;
+        let spec = ArtifactSpec::load(version_dir)?;
         if spec.platform != "hlo" {
             bail!("{}: platform '{}' is not hlo", version_dir.display(), spec.platform);
         }
@@ -33,7 +54,19 @@ impl HloServable {
             let path = spec.artifact_path(version_dir, b);
             execs.insert(b, runtime.compile_hlo_file(&path)?);
         }
-        Ok(HloServable { spec, execs })
+        Ok(HloServable { spec, engine: Engine::Compiled(execs) })
+    }
+
+    /// A servable backed by the synthetic engine: same spec/signature
+    /// contract, no compiled artifacts required.
+    pub fn synthetic(spec: ArtifactSpec) -> HloServable {
+        HloServable { spec, engine: Engine::Synthetic }
+    }
+
+    /// The servable's named signatures (what `GetModelMetadata`
+    /// reports).
+    pub fn signatures(&self) -> &BTreeMap<String, SignatureDef> {
+        &self.spec.signatures
     }
 
     /// Run a batch: pads the batch dimension up to the nearest compiled
@@ -54,22 +87,134 @@ impl HloServable {
                 self.spec.input_dim
             );
         }
-        let ladder: Vec<usize> = self.execs.keys().copied().collect();
+        let execs = match &self.engine {
+            Engine::Synthetic => {
+                // Contract parity with the compiled engine: batches
+                // beyond the ladder are rejected, not silently served.
+                let ladder = &self.spec.allowed_batch_sizes;
+                if pad_to_allowed(rows, ladder).is_none() {
+                    bail!("batch {rows} exceeds compiled ladder {ladder:?}");
+                }
+                return self.run_synthetic(input);
+            }
+            Engine::Compiled(execs) => execs,
+        };
+        let ladder: Vec<usize> = execs.keys().copied().collect();
         let target = pad_to_allowed(rows, &ladder)
             .ok_or_else(|| anyhow!("batch {rows} exceeds compiled ladder {ladder:?}"))?;
         let outputs = if target == rows {
-            self.execs[&target].run(input)?
+            execs[&target].run(input)?
         } else {
             let padded = input.pad_batch(target)?;
-            let outputs = self.execs[&target].run(&padded)?;
-            padded.recycle_into(&crate::util::pool::BufferPool::global());
-            outputs
+            let run = execs[&target].run(&padded);
+            // Recycle the pad buffer on the error path too.
+            padded.recycle_into(&BufferPool::global());
+            run?
         };
         outputs.into_iter().map(|o| o.truncate_batch(rows)).collect()
     }
 
+    /// The synthetic model: one deterministic output tensor per spec
+    /// output, built through the buffer pools (f32 and i32 alike).
+    ///
+    /// * f32 rank-2 `[-1, C]` → row-wise log-softmax of per-class
+    ///   scores (a valid distribution, version-dependent),
+    /// * s32 rank-1 `[-1]` → argmax class of those scores,
+    /// * f32 rank-1 `[-1]` → a regression value per row.
+    fn run_synthetic(&self, input: &Tensor) -> Result<Vec<OutTensor>> {
+        let rows = input.batch();
+        let dim = self.spec.input_dim;
+        let ver = self.spec.version as f32;
+        let classes = self
+            .spec
+            .outputs
+            .iter()
+            .find(|o| o.dtype == "f32" && o.shape.len() == 2 && o.shape[1] > 0)
+            .map(|o| o.shape[1] as usize)
+            .unwrap_or(2);
+        let score = |row: &[f32], c: usize| -> f32 {
+            row.iter()
+                .enumerate()
+                .map(|(j, x)| x * (((j + 7 * c) as f32 + ver) * 0.37).sin())
+                .sum()
+        };
+        // One [rows, classes] score pass shared by the log-probs and
+        // argmax outputs, computed only when an output needs it.
+        let needs_scores = self.spec.outputs.iter().any(|o| {
+            (o.dtype == "f32" && o.shape.len() == 2) || (o.dtype == "s32" && o.shape.len() == 1)
+        });
+        let mut scores = Vec::new();
+        if needs_scores {
+            scores.reserve(rows * classes);
+            for i in 0..rows {
+                let row = input.row(i);
+                for c in 0..classes {
+                    scores.push(score(row, c));
+                }
+            }
+        }
+        let mut outs = Vec::with_capacity(self.spec.outputs.len());
+        for info in &self.spec.outputs {
+            let out = match (info.dtype.as_str(), info.shape.len()) {
+                ("f32", 2) => OutTensor::F32(Tensor::build_with(
+                    vec![rows, classes],
+                    &BufferPool::global(),
+                    |buf| {
+                        for i in 0..rows {
+                            let src = &scores[i * classes..(i + 1) * classes];
+                            let dst = &mut buf[i * classes..(i + 1) * classes];
+                            dst.copy_from_slice(src);
+                            // log-softmax for a valid distribution
+                            let max = dst.iter().copied().fold(f32::MIN, f32::max);
+                            let lse =
+                                dst.iter().map(|s| (s - max).exp()).sum::<f32>().ln() + max;
+                            for d in dst.iter_mut() {
+                                *d -= lse;
+                            }
+                        }
+                    },
+                )),
+                ("s32", 1) => OutTensor::I32(TensorI32::build_with(
+                    vec![rows],
+                    &BufferPool::global_i32(),
+                    |buf| {
+                        for (i, b) in buf.iter_mut().enumerate() {
+                            let row = &scores[i * classes..(i + 1) * classes];
+                            *b = row
+                                .iter()
+                                .enumerate()
+                                .max_by(|a, b| a.1.total_cmp(b.1))
+                                .map(|(c, _)| c)
+                                .unwrap_or(0) as i32;
+                        }
+                    },
+                )),
+                ("f32", 1) => OutTensor::F32(Tensor::build_with(
+                    vec![rows],
+                    &BufferPool::global(),
+                    |buf| {
+                        for (i, b) in buf.iter_mut().enumerate() {
+                            let row = input.row(i);
+                            *b = row.iter().sum::<f32>() / dim as f32 + 0.5 * ver;
+                        }
+                    },
+                )),
+                (dt, rank) => bail!(
+                    "{}: synthetic engine cannot produce output '{}' ({dt}, rank {rank})",
+                    self.spec.model_name,
+                    info.name
+                ),
+            };
+            outs.push(out);
+        }
+        Ok(outs)
+    }
+
     pub fn allowed_batch_sizes(&self) -> Vec<usize> {
-        self.execs.keys().copied().collect()
+        match &self.engine {
+            Engine::Compiled(execs) => execs.keys().copied().collect(),
+            Engine::Synthetic => self.spec.allowed_batch_sizes.clone(),
+        }
     }
 }
 
@@ -89,7 +234,7 @@ impl Loader for HloLoader {
     fn estimate(&self) -> Result<ResourceEstimate> {
         // Pre-load estimate straight from the spec sidecar (what the
         // TFS² Controller bin-packs on).
-        let spec = ModelSpec::load(&self.version_dir)?;
+        let spec = ArtifactSpec::load(&self.version_dir)?;
         Ok(ResourceEstimate::ram(spec.ram_estimate_bytes))
     }
 
@@ -101,6 +246,17 @@ impl Loader for HloLoader {
     fn describe(&self) -> String {
         format!("hlo:{}", self.version_dir.display())
     }
+}
+
+/// Loader producing a synthetic servable from an in-memory spec (the
+/// no-backend counterpart of [`HloLoader`]).
+pub fn synthetic_loader(spec: ArtifactSpec) -> Arc<dyn Loader> {
+    let describe = format!("synthetic:{}:{}", spec.model_name, spec.version);
+    Arc::new(crate::base::loader::FnLoader::new(
+        ResourceEstimate::ram(spec.ram_estimate_bytes),
+        &describe,
+        move || Ok(Arc::new(HloServable::synthetic(spec.clone())) as ServableBox),
+    ))
 }
 
 /// The HLO platform's Source Adapter: storage path → [`HloLoader`]
@@ -208,5 +364,66 @@ mod tests {
         let a1 = v1.spec.metrics.get("train_accuracy").unwrap().as_f64().unwrap();
         let a2 = v2.spec.metrics.get("train_accuracy").unwrap().as_f64().unwrap();
         assert!(a2 >= a1, "v2 acc {a2} < v1 acc {a1}");
+    }
+
+    // ----------------------------------------------- synthetic engine
+
+    #[test]
+    fn synthetic_classifier_runs_without_backend() {
+        let servable =
+            HloServable::synthetic(ArtifactSpec::synthetic_classifier("syn", 1, 8, 3));
+        let input = Tensor::matrix(vec![
+            (0..8).map(|j| (j as f32 * 0.3).sin()).collect(),
+            (0..8).map(|j| (j as f32 * 0.9).cos()).collect(),
+        ])
+        .unwrap();
+        let out = servable.run(&input).unwrap();
+        assert_eq!(out.len(), 2);
+        let log_probs = out[0].as_f32().unwrap();
+        let class = out[1].as_i32().unwrap();
+        assert_eq!(log_probs.shape(), &[2, 3]);
+        assert_eq!(class.shape(), &[2]);
+        for i in 0..2 {
+            let p: f32 = log_probs.row(i).iter().map(|x| x.exp()).sum();
+            assert!((p - 1.0).abs() < 1e-4, "row {i} sums to {p}");
+            let argmax = log_probs
+                .row(i)
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0 as i32;
+            assert_eq!(class.data()[i], argmax);
+        }
+        // Deterministic across calls.
+        let again = servable.run(&input).unwrap();
+        assert_eq!(again[0].as_f32().unwrap(), log_probs);
+        // Wrong input dim still rejected, and so are batches beyond
+        // the ladder — contract parity with the compiled engine.
+        assert!(servable.run(&Tensor::zeros(vec![1, 5])).is_err());
+        let over = servable.spec.max_batch_size() + 1;
+        assert!(servable.run(&Tensor::zeros(vec![over, 8])).is_err());
+    }
+
+    #[test]
+    fn synthetic_versions_differ() {
+        let v1 = HloServable::synthetic(ArtifactSpec::synthetic_classifier("s", 1, 8, 3));
+        let v2 = HloServable::synthetic(ArtifactSpec::synthetic_classifier("s", 2, 8, 3));
+        let input = Tensor::matrix(vec![(0..8).map(|j| j as f32).collect()]).unwrap();
+        let o1 = v1.run(&input).unwrap();
+        let o2 = v2.run(&input).unwrap();
+        assert_ne!(o1[0].as_f32().unwrap(), o2[0].as_f32().unwrap());
+    }
+
+    #[test]
+    fn synthetic_multi_head_produces_all_outputs() {
+        let servable =
+            HloServable::synthetic(ArtifactSpec::synthetic_multi_head("syn", 2, 8, 3));
+        let out = servable.run(&Tensor::zeros(vec![4, 8])).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].as_f32().unwrap().shape(), &[4, 3]);
+        assert_eq!(out[1].as_i32().unwrap().shape(), &[4]);
+        assert_eq!(out[2].as_f32().unwrap().shape(), &[4]);
+        assert!(servable.signatures().contains_key("regress"));
     }
 }

@@ -6,8 +6,11 @@
 //! FileSystemSource ──► SourceRouter (by platform)
 //!                        ├─ port 0 ─► HloSourceAdapter ──► AVM
 //!                        └─ port 1 ─► TableSourceAdapter ─► AVM
-//! RPC front end ──► Predict/Classify/Regress/Lookup over AVM handles
-//!              └──► admin: SetAspired (RPC source), ModelStatus, Status
+//! RPC front end ──► Predict/Classify/Regress/MultiInference/Lookup
+//!              │     over AVM handles (ModelSpec: version or label,
+//!              │     signatures validated) + GetModelMetadata
+//!              └──► admin: SetAspired (RPC source), SetVersionLabel,
+//!                   ModelStatus, Status
 //! ```
 
 use super::config::ServerConfig;
@@ -15,19 +18,22 @@ use crate::base::aspired::{AspiredVersionsCallback, Source};
 use crate::inference::classify::{classify, ClassifyRequest};
 use crate::inference::example::Feature;
 use crate::inference::logger::{digest_f32s, RequestLogger};
-use crate::inference::predict::{predict, PredictRequest};
+use crate::inference::multi::{multi_inference, MultiInferenceRequest};
+use crate::inference::predict::{predict, LabeledSource, PredictRequest};
 use crate::inference::regress::{regress, RegressRequest};
 use crate::inference::table::{table_source_adapter, TableServable};
+use crate::inference::ModelSpec;
 use crate::lifecycle::basic_manager::{ManagerOptions, VersionRequest};
+use crate::lifecycle::labels::LabelResolver;
 use crate::lifecycle::manager::{AspiredVersionsManager, AvmOptions};
 use crate::lifecycle::policy::{
     AvailabilityPreservingPolicy, ResourcePreservingPolicy, VersionPolicy,
 };
 use crate::lifecycle::source::{FileSystemSource, ServingPolicy, WatchedServable};
 use crate::lifecycle::source_router::SourceRouter;
-use crate::rpc::proto::{Request, Response};
+use crate::rpc::proto::{Request, Response, VersionMetadata};
 use crate::rpc::server::RpcServer;
-use crate::runtime::hlo_servable::hlo_source_adapter;
+use crate::runtime::hlo_servable::{hlo_source_adapter, HloServable};
 use crate::runtime::pjrt::XlaRuntime;
 use crate::util::metrics::Registry;
 use anyhow::{anyhow, Result};
@@ -41,6 +47,9 @@ pub struct ServerCore {
     pub config: ServerConfig,
     avm: Arc<AspiredVersionsManager>,
     source: Arc<FileSystemSource>,
+    /// Version labels ("canary"/"stable" → version), consulted on
+    /// every labeled lookup.
+    pub labels: Arc<LabelResolver>,
     pub registry: Arc<Registry>,
     pub logger: Arc<RequestLogger>,
 }
@@ -125,6 +134,7 @@ impl ModelServer {
             config: config.clone(),
             avm,
             source,
+            labels: Arc::new(LabelResolver::new()),
             registry: Registry::new(),
             logger: Arc::new(RequestLogger::new(0.1, 4096, 42)),
         });
@@ -210,15 +220,23 @@ impl ServerCore {
     /// The RPC request handler (one call per request frame).
     pub fn handle(&self, req: Request) -> Response {
         let t0 = Instant::now();
+        // Label-aware lookups: labeled specs resolve through the
+        // resolver, unlabeled ones pass straight to the AVM.
+        let labeled = LabeledSource {
+            inner: self.avm.as_ref(),
+            labels: self.labels.as_ref(),
+        };
         let (api, resp) = match req {
             Request::Ping => ("ping", Response::Pong),
-            Request::Predict { model, version, input } => {
-                let preq = PredictRequest { model: model.clone(), version, input };
-                let r = predict(self.avm.as_ref(), &preq);
-                // The decoded request buffer came from the global pool;
-                // hand it back now that inference has consumed it.
-                preq.input
-                    .recycle_into(&crate::util::pool::BufferPool::global());
+            Request::Predict { spec, signature, inputs } => {
+                let model = spec.name.clone();
+                let preq = PredictRequest { spec, signature, inputs };
+                let r = predict(&labeled, &preq);
+                // The decoded request buffers came from the global
+                // pool; hand them back now that inference consumed them.
+                for (_, input) in preq.inputs {
+                    input.recycle_into(&crate::util::pool::BufferPool::global());
+                }
                 (
                     "predict",
                     match r {
@@ -233,11 +251,8 @@ impl ServerCore {
                     },
                 )
             }
-            Request::Classify { model, version, examples } => {
-                let r = classify(
-                    self.avm.as_ref(),
-                    &ClassifyRequest { model, version, examples },
-                );
+            Request::Classify { spec, signature, examples } => {
+                let r = classify(&labeled, &ClassifyRequest { spec, signature, examples });
                 (
                     "classify",
                     match r {
@@ -250,11 +265,8 @@ impl ServerCore {
                     },
                 )
             }
-            Request::Regress { model, version, examples } => {
-                let r = regress(
-                    self.avm.as_ref(),
-                    &RegressRequest { model, version, examples },
-                );
+            Request::Regress { spec, signature, examples } => {
+                let r = regress(&labeled, &RegressRequest { spec, signature, examples });
                 (
                     "regress",
                     match r {
@@ -262,6 +274,36 @@ impl ServerCore {
                             model_version: r.model_version,
                             values: r.values,
                         },
+                        Err(e) => Response::Error { message: e.to_string() },
+                    },
+                )
+            }
+            Request::MultiInference { spec, tasks, examples } => {
+                let r = multi_inference(
+                    &labeled,
+                    &MultiInferenceRequest { spec, tasks, examples },
+                );
+                (
+                    "multi_inference",
+                    match r {
+                        Ok(r) => Response::MultiInference {
+                            model_version: r.model_version,
+                            results: r.results,
+                        },
+                        Err(e) => Response::Error { message: e.to_string() },
+                    },
+                )
+            }
+            Request::GetModelMetadata { spec } => {
+                ("get_model_metadata", self.model_metadata(&spec))
+            }
+            Request::SetVersionLabel { model, label, version } => {
+                // Only loaded-and-serving versions may carry a label.
+                let serving = self.avm.basic().ready_versions(&model);
+                (
+                    "set_version_label",
+                    match self.labels.set(&model, &label, version, &serving) {
+                        Ok(()) => Response::Ack,
                         Err(e) => Response::Error { message: e.to_string() },
                     },
                 )
@@ -298,6 +340,8 @@ impl ServerCore {
                 // Snapshot buffer-pool state into gauges so the dump
                 // shows the zero-allocation hot path working.
                 crate::util::pool::BufferPool::global().export(&self.registry, "tensor_pool");
+                crate::util::pool::BufferPool::global_i32()
+                    .export(&self.registry, "tensor_pool_i32");
                 let mut text = self.registry.dump();
                 text.push_str(&format!(
                     "pooled_buffer_bytes {}\n",
@@ -321,10 +365,67 @@ impl ServerCore {
         let digest = resp
             .outputs
             .first()
-            .and_then(|o| o.as_f32().ok())
+            .and_then(|(_, o)| o.as_f32().ok())
             .map(|t| digest_f32s(t.data()))
             .unwrap_or(0);
         self.logger.observe(model, version, 0, digest);
+    }
+
+    /// `GetModelMetadata`: per-version state, labels, and signature
+    /// defs. A pinned version or label narrows the report to that one
+    /// version; otherwise every version the monitor knows is listed.
+    fn model_metadata(&self, spec: &ModelSpec) -> Response {
+        let mut states: std::collections::BTreeMap<u64, String> = self
+            .avm
+            .monitor()
+            .snapshot()
+            .into_iter()
+            .filter(|(id, _)| id.name == spec.name)
+            .map(|(id, st)| (id.version, st.label().to_string()))
+            .collect();
+        // Same version/label resolution rule as the lookup path.
+        let wanted: Vec<u64> =
+            match crate::inference::predict::resolve_spec_version(&self.labels, spec) {
+                Err(e) => return Response::Error { message: e.to_string() },
+                Ok(Some(v)) => {
+                    if !states.contains_key(&v) {
+                        return Response::Error {
+                            message: format!("model '{}' has no version {v}", spec.name),
+                        };
+                    }
+                    vec![v]
+                }
+                Ok(None) => states.keys().copied().collect(),
+            };
+        if wanted.is_empty() {
+            return Response::Error {
+                message: format!("model '{}' has no versions", spec.name),
+            };
+        }
+        let versions = wanted
+            .into_iter()
+            .map(|v| {
+                // Signatures come from the servable itself; non-HLO
+                // platforms (tables) have none to report.
+                let signatures = self
+                    .avm
+                    .handle::<HloServable>(&spec.name, VersionRequest::Specific(v))
+                    .map(|h| {
+                        h.signatures()
+                            .iter()
+                            .map(|(k, s)| (k.clone(), s.clone()))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                VersionMetadata {
+                    version: v,
+                    state: states.remove(&v).unwrap_or_else(|| "unknown".into()),
+                    labels: self.labels.labels_of_version(&spec.name, v),
+                    signatures,
+                }
+            })
+            .collect();
+        Response::ModelMetadata { model: spec.name.clone(), versions }
     }
 }
 
@@ -374,18 +475,20 @@ mod tests {
         server.wait_until_ready(Duration::from_secs(60)).unwrap();
         let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
 
-        // HLO platform over RPC.
+        // HLO platform over RPC (legacy single-tensor Predict form).
         let resp = client
-            .call_ok(&Request::Predict {
-                model: "mlp_classifier".into(),
-                version: None,
-                input: Tensor::zeros(vec![2, 32]),
-            })
+            .call_ok(&Request::predict(
+                "mlp_classifier",
+                None,
+                Tensor::zeros(vec![2, 32]),
+            ))
             .unwrap();
         match resp {
             Response::Predict { model_version, outputs } => {
                 assert_eq!(model_version, 2); // latest
                 assert_eq!(outputs.len(), 2);
+                assert_eq!(outputs[0].0, "log_probs");
+                assert_eq!(outputs[1].0, "class");
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -440,6 +543,266 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+        server.stop();
+    }
+
+    // ------------------------------------------------- synthetic e2e
+    //
+    // These run in every build (no artifacts, no PJRT backend): the
+    // synthetic engine serves real signatures through the real
+    // lifecycle + RPC stack.
+
+    use crate::base::servable::ServableId;
+    use crate::inference::multi::{HeadResult, InferenceTask};
+    use crate::runtime::artifacts::ArtifactSpec;
+    use crate::runtime::hlo_servable::synthetic_loader;
+
+    fn empty_config() -> ServerConfig {
+        ServerConfig {
+            port: 0,
+            artifacts_root: std::env::temp_dir(),
+            poll_interval: None,
+            availability_preserving: true,
+            load_threads: 2,
+            ram_capacity_bytes: 0,
+            models: vec![],
+        }
+    }
+
+    /// A running server with synthetic multi-head versions of "syn"
+    /// loaded straight into the manager.
+    fn synthetic_server(versions: &[u64]) -> Arc<ModelServer> {
+        let server = ModelServer::start(empty_config()).unwrap();
+        for &v in versions {
+            server
+                .avm()
+                .basic()
+                .load_and_wait(
+                    ServableId::new("syn", v),
+                    synthetic_loader(ArtifactSpec::synthetic_multi_head("syn", v, 8, 3)),
+                    Duration::from_secs(30),
+                )
+                .unwrap();
+        }
+        server
+    }
+
+    #[test]
+    fn labeled_predict_resolves_canary_and_stable() {
+        let server = synthetic_server(&[1, 2]);
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+
+        // Labels attach only to loaded-and-serving versions.
+        client
+            .call_ok(&Request::SetVersionLabel {
+                model: "syn".into(),
+                label: "stable".into(),
+                version: 1,
+            })
+            .unwrap();
+        client
+            .call_ok(&Request::SetVersionLabel {
+                model: "syn".into(),
+                label: "canary".into(),
+                version: 2,
+            })
+            .unwrap();
+        let err = client
+            .call_ok(&Request::SetVersionLabel {
+                model: "syn".into(),
+                label: "next".into(),
+                version: 9,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("not loaded and serving"), "{err}");
+
+        // The same labeled Predict resolves to different versions.
+        for (label, want) in [("stable", 1u64), ("canary", 2)] {
+            let resp = client
+                .call_ok(&Request::Predict {
+                    spec: crate::inference::ModelSpec::with_label("syn", label),
+                    signature: String::new(),
+                    inputs: vec![("x".into(), Tensor::zeros(vec![2, 8]))],
+                })
+                .unwrap();
+            match resp {
+                Response::Predict { model_version, outputs } => {
+                    assert_eq!(model_version, want, "label {label}");
+                    assert_eq!(outputs[0].0, "log_probs");
+                    assert_eq!(outputs[1].0, "class");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+
+        // Unknown label is a clear error, not a silent fallback.
+        let err = client
+            .call_ok(&Request::Predict {
+                spec: crate::inference::ModelSpec::with_label("syn", "ghost"),
+                signature: String::new(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
+
+        // Named-input validation errors name the offending tensor.
+        let err = client
+            .call_ok(&Request::Predict {
+                spec: crate::inference::ModelSpec::latest("syn"),
+                signature: String::new(),
+                inputs: vec![("bogus".into(), Tensor::zeros(vec![1, 8]))],
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("bogus"), "{err}");
+        let err = client
+            .call_ok(&Request::Predict {
+                spec: crate::inference::ModelSpec::latest("syn"),
+                signature: String::new(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 5]))],
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("'x'"), "{err}");
+        server.stop();
+    }
+
+    #[test]
+    fn get_model_metadata_reports_signatures_and_labels() {
+        let server = synthetic_server(&[1, 2]);
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+        client
+            .call_ok(&Request::SetVersionLabel {
+                model: "syn".into(),
+                label: "canary".into(),
+                version: 2,
+            })
+            .unwrap();
+
+        match client
+            .call_ok(&Request::GetModelMetadata {
+                spec: crate::inference::ModelSpec::latest("syn"),
+            })
+            .unwrap()
+        {
+            Response::ModelMetadata { model, versions } => {
+                assert_eq!(model, "syn");
+                assert_eq!(versions.len(), 2);
+                let v2 = versions.iter().find(|v| v.version == 2).unwrap();
+                assert_eq!(v2.state, "ready");
+                assert_eq!(v2.labels, vec!["canary".to_string()]);
+                let names: Vec<&str> =
+                    v2.signatures.iter().map(|(n, _)| n.as_str()).collect();
+                assert!(names.contains(&"serving_default"), "{names:?}");
+                let (_, reg) =
+                    v2.signatures.iter().find(|(n, _)| n == "regress").unwrap();
+                assert_eq!(reg.method, "regress");
+                assert_eq!(reg.inputs[0].name, "x");
+                assert_eq!(reg.inputs[0].shape, vec![-1, 8]);
+                assert_eq!(reg.outputs[0].name, "value");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // A labeled metadata request narrows to the labeled version.
+        match client
+            .call_ok(&Request::GetModelMetadata {
+                spec: crate::inference::ModelSpec::with_label("syn", "canary"),
+            })
+            .unwrap()
+        {
+            Response::ModelMetadata { versions, .. } => {
+                assert_eq!(versions.len(), 1);
+                assert_eq!(versions[0].version, 2);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // Unknown model, unknown pinned version, and version+label
+        // together all error.
+        assert!(client
+            .call_ok(&Request::GetModelMetadata {
+                spec: crate::inference::ModelSpec::latest("ghost"),
+            })
+            .is_err());
+        assert!(client
+            .call_ok(&Request::GetModelMetadata {
+                spec: crate::inference::ModelSpec::at_version("syn", 99),
+            })
+            .is_err());
+        let mut both = crate::inference::ModelSpec::with_label("syn", "canary");
+        both.version = Some(2);
+        let err = client
+            .call_ok(&Request::GetModelMetadata { spec: both })
+            .unwrap_err();
+        assert!(err.to_string().contains("use one"), "{err}");
+        server.stop();
+    }
+
+    #[test]
+    fn multi_inference_two_heads_over_rpc() {
+        let server = synthetic_server(&[2]);
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+        let examples: Vec<_> = (0..3)
+            .map(|i| {
+                example_from_features((0..8).map(|j| ((i * 8 + j) as f32) * 0.1).collect())
+            })
+            .collect();
+
+        let resp = client
+            .call_ok(&Request::MultiInference {
+                spec: crate::inference::ModelSpec::latest("syn"),
+                tasks: vec![
+                    InferenceTask::classify("classify"),
+                    InferenceTask::regress("regress"),
+                ],
+                examples: examples.clone(),
+            })
+            .unwrap();
+        let multi_classes = match resp {
+            Response::MultiInference { model_version, results } => {
+                assert_eq!(model_version, 2);
+                assert_eq!(results.len(), 2);
+                assert_eq!(results[0].0, "classify");
+                assert_eq!(results[1].0, "regress");
+                match &results[1].1 {
+                    HeadResult::Regress { values } => assert_eq!(values.len(), 3),
+                    other => panic!("unexpected {other:?}"),
+                }
+                match &results[0].1 {
+                    HeadResult::Classify { classes, log_probs } => {
+                        assert_eq!(classes.len(), 3);
+                        assert_eq!(log_probs.len(), 3);
+                        classes.clone()
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        };
+
+        // The classify head agrees with a standalone Classify call
+        // through the same server.
+        match client
+            .call_ok(&Request::Classify {
+                spec: crate::inference::ModelSpec::latest("syn"),
+                signature: "classify".into(),
+                examples,
+            })
+            .unwrap()
+        {
+            Response::Classify { classes, .. } => assert_eq!(classes, multi_classes),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // A task against a missing signature fails the whole request
+        // with a clear error.
+        let err = client
+            .call_ok(&Request::MultiInference {
+                spec: crate::inference::ModelSpec::latest("syn"),
+                tasks: vec![InferenceTask::classify("ghost")],
+                examples: vec![example_from_features(vec![0.0; 8])],
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
         server.stop();
     }
 }

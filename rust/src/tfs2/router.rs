@@ -60,9 +60,11 @@ impl Router {
     /// Controller, not the data plane).
     pub fn route(&self, req: &Request) -> Result<Response> {
         let model = match req {
-            Request::Predict { model, .. }
-            | Request::Classify { model, .. }
-            | Request::Regress { model, .. } => model.clone(),
+            Request::Predict { spec, .. }
+            | Request::Classify { spec, .. }
+            | Request::Regress { spec, .. }
+            | Request::MultiInference { spec, .. }
+            | Request::GetModelMetadata { spec } => spec.name.clone(),
             Request::Lookup { table, .. } => table.clone(),
             _ => return Err(anyhow!("router only forwards inference requests")),
         };
@@ -115,11 +117,7 @@ mod tests {
     }
 
     fn regress_req() -> Request {
-        Request::Regress {
-            model: "m".into(),
-            version: None,
-            examples: vec![crate::inference::example::Example::new()],
-        }
+        Request::regress("m", None, vec![crate::inference::example::Example::new()])
     }
 
     #[test]

@@ -2,8 +2,10 @@
 //!
 //! The batching hot path allocates one device buffer per merged batch,
 //! and the RPC layer allocates one buffer per decoded request tensor.
-//! [`BufferPool`] shelves uniquely-owned `Arc<[f32]>` allocations in
-//! **power-of-two size classes** (floor [`MIN_CLASS`] elements):
+//! [`BufferPool`] shelves uniquely-owned `Arc<[T]>` allocations
+//! (`T = f32` by default; an `i32` pool backs classifier class
+//! outputs) in **power-of-two size classes** (floor [`MIN_CLASS`]
+//! elements):
 //! `acquire(len)` rounds up to the class and hands back any shelved
 //! buffer of that class, so steady-state serving performs **zero**
 //! buffer allocations on these paths. Classes rather than exact sizes
@@ -56,8 +58,8 @@ pub struct PoolStats {
     pub bytes_pooled: usize,
 }
 
-pub struct BufferPool {
-    shelves: Mutex<BTreeMap<usize, Vec<Arc<[f32]>>>>,
+pub struct BufferPool<T = f32> {
+    shelves: Mutex<BTreeMap<usize, Vec<Arc<[T]>>>>,
     max_buffers_per_size: usize,
     max_total_bytes: usize,
     bytes_pooled: AtomicUsize,
@@ -68,7 +70,27 @@ pub struct BufferPool {
     declined: Counter,
 }
 
-impl BufferPool {
+impl BufferPool<f32> {
+    /// The process-wide f32 pool the serving stack shares (batch
+    /// assembly, padding, RPC tensor decode).
+    pub fn global() -> Arc<BufferPool> {
+        static GLOBAL: once_cell::sync::Lazy<Arc<BufferPool>> =
+            once_cell::sync::Lazy::new(|| Arc::new(BufferPool::new(32, 256 << 20)));
+        Arc::clone(&GLOBAL)
+    }
+}
+
+impl BufferPool<i32> {
+    /// The process-wide i32 pool (classifier class outputs and decoded
+    /// i32 wire tensors).
+    pub fn global_i32() -> Arc<BufferPool<i32>> {
+        static GLOBAL: once_cell::sync::Lazy<Arc<BufferPool<i32>>> =
+            once_cell::sync::Lazy::new(|| Arc::new(BufferPool::new(32, 64 << 20)));
+        Arc::clone(&GLOBAL)
+    }
+}
+
+impl<T: Copy + Default + Send + Sync + 'static> BufferPool<T> {
     pub fn new(max_buffers_per_size: usize, max_total_bytes: usize) -> Self {
         BufferPool {
             shelves: Mutex::new(BTreeMap::new()),
@@ -83,19 +105,11 @@ impl BufferPool {
         }
     }
 
-    /// The process-wide pool the serving stack shares (batch assembly,
-    /// padding, RPC tensor decode).
-    pub fn global() -> Arc<BufferPool> {
-        static GLOBAL: once_cell::sync::Lazy<Arc<BufferPool>> =
-            once_cell::sync::Lazy::new(|| Arc::new(BufferPool::new(32, 256 << 20)));
-        Arc::clone(&GLOBAL)
-    }
-
     /// A uniquely-owned buffer of **at least** `len` elements (rounded
     /// up to the size class). Served from the class shelf when
     /// available, else freshly allocated (zeroed). Recycled contents
     /// are unspecified — write before read.
-    pub fn acquire(&self, len: usize) -> Arc<[f32]> {
+    pub fn acquire(&self, len: usize) -> Arc<[T]> {
         if len > 0 {
             let class = size_class(len);
             // Counter updates stay inside the shelves lock so they can
@@ -104,9 +118,9 @@ impl BufferPool {
             if let Some(buf) = shelves.get_mut(&class).and_then(Vec::pop) {
                 self.buffers_pooled.fetch_sub(1, Ordering::Relaxed);
                 self.bytes_pooled
-                    .fetch_sub(class * std::mem::size_of::<f32>(), Ordering::Relaxed);
+                    .fetch_sub(class * std::mem::size_of::<T>(), Ordering::Relaxed);
                 crate::util::mem::note_pool_bytes(
-                    -((class * std::mem::size_of::<f32>()) as i64),
+                    -((class * std::mem::size_of::<T>()) as i64),
                 );
                 drop(shelves);
                 self.hits.inc();
@@ -115,16 +129,16 @@ impl BufferPool {
             }
             drop(shelves);
             self.misses.inc();
-            return std::iter::repeat(0.0).take(class).collect();
+            return std::iter::repeat(T::default()).take(class).collect();
         }
         self.misses.inc();
-        std::iter::repeat(0.0).take(len).collect()
+        std::iter::repeat(T::default()).take(len).collect()
     }
 
     /// Offer a buffer back. Shelved only if it is class-sized (i.e.
     /// pool-compatible), the pool would be its sole owner, and capacity
     /// limits allow; otherwise the Arc just drops.
-    pub fn release(&self, mut buf: Arc<[f32]>) {
+    pub fn release(&self, mut buf: Arc<[T]>) {
         let len = buf.len();
         // Class + uniqueness gates: arbitrary-length buffers would
         // fragment the shelves, and a shared buffer may still back
@@ -133,7 +147,7 @@ impl BufferPool {
             self.declined.inc();
             return;
         }
-        let bytes = len * std::mem::size_of::<f32>();
+        let bytes = len * std::mem::size_of::<T>();
         if self.bytes_pooled.load(Ordering::Relaxed) + bytes > self.max_total_bytes {
             self.declined.inc();
             return;
@@ -161,7 +175,7 @@ impl BufferPool {
         let bytes: usize = shelves
             .values()
             .flat_map(|v| v.iter())
-            .map(|b| b.len() * std::mem::size_of::<f32>())
+            .map(|b| b.len() * std::mem::size_of::<T>())
             .sum();
         let count: usize = shelves.values().map(Vec::len).sum();
         shelves.clear();
@@ -205,7 +219,7 @@ mod tests {
 
     #[test]
     fn miss_then_hit_roundtrip() {
-        let pool = BufferPool::new(4, 1 << 20);
+        let pool: BufferPool = BufferPool::new(4, 1 << 20);
         let a = pool.acquire(16);
         assert_eq!(a.len(), size_class(16)); // rounded up to the class
         assert!(a.len() >= 16);
@@ -231,7 +245,7 @@ mod tests {
 
     #[test]
     fn classes_do_not_cross() {
-        let pool = BufferPool::new(4, 1 << 20);
+        let pool: BufferPool = BufferPool::new(4, 1 << 20);
         pool.release(pool.acquire(8)); // class 64
         let b = pool.acquire(100); // class 128
         assert_eq!(b.len(), 128);
@@ -244,7 +258,7 @@ mod tests {
 
     #[test]
     fn non_class_releases_declined() {
-        let pool = BufferPool::new(4, 1 << 20);
+        let pool: BufferPool = BufferPool::new(4, 1 << 20);
         // A buffer that didn't come from a pool (arbitrary length).
         let odd: Arc<[f32]> = vec![0.0; 100].into();
         pool.release(odd);
@@ -254,7 +268,7 @@ mod tests {
 
     #[test]
     fn shared_buffers_declined() {
-        let pool = BufferPool::new(4, 1 << 20);
+        let pool: BufferPool = BufferPool::new(4, 1 << 20);
         let a = pool.acquire(4);
         let clone = Arc::clone(&a);
         pool.release(a);
@@ -265,7 +279,7 @@ mod tests {
 
     #[test]
     fn capacity_limits_enforced() {
-        let pool = BufferPool::new(2, 1 << 20);
+        let pool: BufferPool = BufferPool::new(2, 1 << 20);
         let bufs: Vec<_> = (0..3).map(|_| pool.acquire(4)).collect();
         for b in bufs {
             pool.release(b);
@@ -275,7 +289,7 @@ mod tests {
         assert_eq!(pool.stats().declined, 1);
 
         // Total-byte cap sized for exactly one MIN_CLASS buffer.
-        let tiny = BufferPool::new(8, MIN_CLASS * std::mem::size_of::<f32>());
+        let tiny: BufferPool = BufferPool::new(8, MIN_CLASS * std::mem::size_of::<f32>());
         tiny.release(tiny.acquire(4));
         tiny.release(tiny.acquire(4));
         assert_eq!(tiny.stats().buffers_pooled, 1, "byte cap ignored");
@@ -283,7 +297,7 @@ mod tests {
 
     #[test]
     fn zero_len_and_clear() {
-        let pool = BufferPool::new(4, 1 << 20);
+        let pool: BufferPool = BufferPool::new(4, 1 << 20);
         let z = pool.acquire(0);
         assert_eq!(z.len(), 0);
         pool.release(z); // declined, not shelved
@@ -299,12 +313,27 @@ mod tests {
 
     #[test]
     fn acquired_buffers_are_unique_and_writable() {
-        let pool = BufferPool::new(4, 1 << 20);
+        let pool: BufferPool = BufferPool::new(4, 1 << 20);
         pool.release(pool.acquire(4));
         let mut b = pool.acquire(4);
         let m = Arc::get_mut(&mut b).expect("pooled buffer not unique");
         m.fill(3.0);
         assert_eq!(&b[..4], &[3.0; 4]);
         assert_eq!(b.len(), MIN_CLASS);
+    }
+
+    #[test]
+    fn i32_pool_recycles_like_f32() {
+        let pool: BufferPool<i32> = BufferPool::new(4, 1 << 20);
+        let a = pool.acquire(16);
+        assert_eq!(a.len(), size_class(16));
+        let ptr = a.as_ptr();
+        pool.release(a);
+        let b = pool.acquire(10); // same class
+        assert_eq!(b.as_ptr(), ptr, "i32 pool did not recycle");
+        assert_eq!(pool.stats().hits, 1);
+        // The i32 global singleton constructs alongside the f32 one.
+        let _ = BufferPool::global_i32();
+        let _ = BufferPool::global();
     }
 }

@@ -8,7 +8,7 @@ use std::time::Duration;
 use tensorserve::inference::example::{Example, Feature};
 use tensorserve::rpc::client::ClientPool;
 use tensorserve::rpc::proto::{Request, Response};
-use tensorserve::runtime::artifacts::{artifacts_available, default_artifacts_root, ModelSpec};
+use tensorserve::runtime::artifacts::{artifacts_available, default_artifacts_root, ArtifactSpec};
 use tensorserve::tfs2::cluster::Cluster;
 use tensorserve::tfs2::controller::Controller;
 use tensorserve::tfs2::router::Router;
@@ -66,7 +66,7 @@ fn figure2_end_to_end_control_plane() {
     }
 
     // add model → placement → sync → route.
-    let spec = ModelSpec::load(&artifacts.join("mlp_classifier").join("2")).unwrap();
+    let spec = ArtifactSpec::load(&artifacts.join("mlp_classifier").join("2")).unwrap();
     let job = controller
         .add_model(
             "mlp_classifier",
@@ -79,11 +79,7 @@ fn figure2_end_to_end_control_plane() {
     sync_until(&sync, &controller, &router, 1);
 
     let resp = router
-        .route(&Request::Classify {
-            model: "mlp_classifier".into(),
-            version: None,
-            examples: gaussian_examples(4, 1),
-        })
+        .route(&Request::classify("mlp_classifier", None, gaussian_examples(4, 1)))
         .unwrap();
     match resp {
         Response::Classify { model_version, classes, .. } => {
@@ -100,11 +96,11 @@ fn figure2_end_to_end_control_plane() {
     sync_until(&sync, &controller, &router, 1);
     for want_version in [1u64, 2] {
         let resp = router
-            .route(&Request::Classify {
-                model: "mlp_classifier".into(),
-                version: Some(want_version),
-                examples: gaussian_examples(2, 2),
-            })
+            .route(&Request::classify(
+                "mlp_classifier",
+                Some(want_version),
+                gaussian_examples(2, 2),
+            ))
             .unwrap();
         match resp {
             Response::Classify { model_version, .. } => {
@@ -125,11 +121,7 @@ fn figure2_end_to_end_control_plane() {
     let deadline = std::time::Instant::now() + Duration::from_secs(120);
     loop {
         let resp = router
-            .route(&Request::Classify {
-                model: "mlp_classifier".into(),
-                version: None,
-                examples: gaussian_examples(1, 3),
-            })
+            .route(&Request::classify("mlp_classifier", None, gaussian_examples(1, 3)))
             .unwrap();
         match resp {
             Response::Classify { model_version: 1, .. } => break,
@@ -159,8 +151,8 @@ fn placement_respects_capacity_and_spreads() {
     controller.register_job("job-0", "", 2 << 20).unwrap();
     controller.register_job("job-1", "", 2 << 20).unwrap();
 
-    let spec_c = ModelSpec::load(&artifacts.join("mlp_classifier").join("2")).unwrap();
-    let spec_r = ModelSpec::load(&artifacts.join("mlp_regressor").join("2")).unwrap();
+    let spec_c = ArtifactSpec::load(&artifacts.join("mlp_classifier").join("2")).unwrap();
+    let spec_r = ArtifactSpec::load(&artifacts.join("mlp_regressor").join("2")).unwrap();
     let j1 = controller
         .add_model("mlp_classifier", "x", spec_c.ram_estimate_bytes, 1)
         .unwrap();
@@ -232,11 +224,11 @@ fn hedged_routing_masks_slow_replica() {
     )]);
     let mut served = 0;
     for i in 0..6 {
-        if let Ok(Response::Regress { .. }) = router.route(&Request::Regress {
-            model: "mlp_regressor".into(),
-            version: None,
-            examples: gaussian_examples(1, i),
-        }) {
+        if let Ok(Response::Regress { .. }) = router.route(&Request::regress(
+            "mlp_regressor",
+            None,
+            gaussian_examples(1, i),
+        )) {
             served += 1;
         }
     }

@@ -1,0 +1,21 @@
+#!/usr/bin/env sh
+# Tier-1 verification gate: build, tests, and (when rustfmt is
+# installed) formatting. Run via `make check` or directly.
+set -eu
+
+cd "$(dirname "$0")/.."
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "==> cargo fmt --check"
+    cargo fmt --check
+else
+    echo "==> rustfmt unavailable in this toolchain; skipping fmt check"
+fi
+
+echo "check OK"
