@@ -5,11 +5,13 @@
 check:
 	./scripts/check.sh
 
-# Perf trajectory: emits BENCH_batching.json / BENCH_throughput.json
-# (the latter includes request-codec ns/op for API-overhead tracking).
+# Perf trajectory: emits BENCH_batching.json / BENCH_throughput.json /
+# BENCH_http.json (request-codec and JSON-ingress ns/op for
+# API-overhead tracking).
 bench:
 	cargo bench --bench bench_batching
 	cargo bench --bench bench_throughput
+	cargo bench --bench bench_http
 
 # AOT-compile model artifacts (requires the full Python/JAX build
 # environment; see python/compile/aot.py).

@@ -1,0 +1,215 @@
+//! Experiment H1 — the REST gateway's JSON-ingress cost.
+//!
+//! De Rosa et al. ("On the Cost of Model-Serving Frameworks") show the
+//! REST path is where serving stacks typically lose most of their
+//! throughput, so this bench tracks it as a first-class perf surface:
+//!
+//! * **codec**: ns/op to translate JSON instance rows into pooled wire
+//!   tensors (`http::codec::parse_predict_body`) and to serialize a
+//!   Predict response back to JSON, at several batch sizes;
+//! * **e2e**: requests/sec through the full gateway (HTTP parse →
+//!   router → ServerCore → synthetic servable → JSON reply) over
+//!   kept-alive loopback connections, against the binary-RPC path on
+//!   the same server for comparison.
+//!
+//! Emits BENCH_http.json for the perf trajectory.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tensorserve::base::servable::ServableId;
+use tensorserve::base::tensor::Tensor;
+use tensorserve::http::client::HttpClient;
+use tensorserve::http::codec;
+use tensorserve::inference::ModelSpec;
+use tensorserve::rpc::client::RpcClient;
+use tensorserve::rpc::proto::Request;
+use tensorserve::runtime::artifacts::ArtifactSpec;
+use tensorserve::runtime::hlo_servable::synthetic_loader;
+use tensorserve::server::builder::ModelServer;
+use tensorserve::server::config::ServerConfig;
+use tensorserve::util::bench::{fmt_count, measure, ns_per_iter, Table};
+use tensorserve::util::json::Json;
+use tensorserve::util::metrics::Histogram;
+use tensorserve::util::pool::BufferPool;
+
+const INPUT_DIM: usize = 32;
+
+fn instances_body(rows: usize) -> String {
+    let row: Vec<String> = (0..INPUT_DIM).map(|j| format!("{}", j as f64 * 0.125)).collect();
+    let row = format!("[{}]", row.join(","));
+    format!("{{\"instances\": [{}]}}", vec![row; rows].join(","))
+}
+
+fn server_with_synthetic() -> Arc<ModelServer> {
+    let server = ModelServer::start(ServerConfig {
+        http_addr: Some("127.0.0.1:0".to_string()),
+        poll_interval: None,
+        artifacts_root: std::env::temp_dir(),
+        models: Vec::new(),
+        ..Default::default()
+    })
+    .unwrap();
+    server
+        .avm()
+        .basic()
+        .load_and_wait(
+            ServableId::new("syn", 1),
+            synthetic_loader(ArtifactSpec::synthetic_classifier("syn", 1, INPUT_DIM, 4)),
+            Duration::from_secs(30),
+        )
+        .unwrap();
+    server
+}
+
+fn main() {
+    tensorserve::util::logging::set_level(tensorserve::util::logging::Level::Error);
+    let warmup = Duration::from_millis(200);
+    let dur = Duration::from_secs(1);
+
+    // ---- codec ns/op -------------------------------------------------
+    let mut t = Table::new(
+        "H1: JSON ingress codec (row format, pooled decode)",
+        &["rows", "decode ns/op", "encode ns/op", "body bytes"],
+    );
+    let mut codec_json = Vec::new();
+    for rows in [1usize, 8, 64] {
+        let body = instances_body(rows);
+        let bytes = body.as_bytes();
+        let (iters, elapsed) = measure(warmup, dur, || {
+            let parsed = codec::parse_predict_body(bytes).unwrap();
+            // Steady state: the decoded tensor goes back to the pool,
+            // exactly as ServerCore::handle does after inference.
+            for (_, tensor) in parsed.inputs {
+                tensor.recycle_into(&BufferPool::global());
+            }
+        });
+        let decode_ns = ns_per_iter(iters, elapsed);
+
+        // Response encode over a representative 2-output reply.
+        let resp = tensorserve::rpc::proto::Response::Predict {
+            model_version: 1,
+            outputs: vec![
+                (
+                    "log_probs".into(),
+                    tensorserve::runtime::pjrt::OutTensor::F32(Tensor::zeros(vec![rows, 4])),
+                ),
+                (
+                    "class".into(),
+                    tensorserve::runtime::pjrt::OutTensor::I32(
+                        tensorserve::base::tensor::TensorI32::new(
+                            vec![rows],
+                            vec![0; rows],
+                        )
+                        .unwrap(),
+                    ),
+                ),
+            ],
+        };
+        let (iters, elapsed) = measure(warmup, dur, || {
+            let json = codec::predict_response_json(&resp, true).unwrap();
+            std::hint::black_box(json.to_string());
+        });
+        let encode_ns = ns_per_iter(iters, elapsed);
+
+        t.row(vec![
+            rows.to_string(),
+            format!("{decode_ns:.0}"),
+            format!("{encode_ns:.0}"),
+            bytes.len().to_string(),
+        ]);
+        codec_json.push(Json::obj(vec![
+            ("rows", Json::num(rows as f64)),
+            ("decode_ns_per_op", Json::num(decode_ns)),
+            ("encode_ns_per_op", Json::num(encode_ns)),
+            ("body_bytes", Json::num(bytes.len() as f64)),
+        ]));
+    }
+    t.print();
+
+    // ---- e2e requests/sec: REST vs binary RPC ------------------------
+    let server = server_with_synthetic();
+    let http_addr = server.http_addr().unwrap().to_string();
+    let rpc_addr = server.addr().to_string();
+    let mut t = Table::new(
+        "H1b: end-to-end gateway throughput (8-row predict, keep-alive)",
+        &["plane", "threads", "req/s", "p50", "p99"],
+    );
+    let mut e2e_json = Vec::new();
+    for threads in [1usize, 4] {
+        for plane in ["rest", "rpc"] {
+            let latency = Arc::new(Histogram::new());
+            let deadline = Instant::now() + Duration::from_secs(2);
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    let http_addr = http_addr.clone();
+                    let rpc_addr = rpc_addr.clone();
+                    let latency = Arc::clone(&latency);
+                    let body = instances_body(8);
+                    std::thread::spawn(move || -> u64 {
+                        let mut count = 0u64;
+                        if plane == "rest" {
+                            let mut c = HttpClient::connect(&http_addr).unwrap();
+                            while Instant::now() < deadline {
+                                let t0 = Instant::now();
+                                let (status, _) =
+                                    c.post_json("/v1/models/syn:predict", &body).unwrap();
+                                latency.record_duration(t0.elapsed());
+                                assert_eq!(status, 200);
+                                count += 1;
+                            }
+                        } else {
+                            let mut c = RpcClient::connect(&rpc_addr).unwrap();
+                            let req = Request::Predict {
+                                spec: ModelSpec::latest("syn"),
+                                signature: String::new(),
+                                inputs: vec![(
+                                    "x".into(),
+                                    Tensor::zeros(vec![8, INPUT_DIM]),
+                                )],
+                            };
+                            while Instant::now() < deadline {
+                                let t0 = Instant::now();
+                                c.call_ok(&req).unwrap();
+                                latency.record_duration(t0.elapsed());
+                                count += 1;
+                            }
+                        }
+                        count
+                    })
+                })
+                .collect();
+            let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            let qps = total as f64 / 2.0;
+            let (p50, _, p99, _) = latency.percentiles();
+            t.row(vec![
+                plane.to_string(),
+                threads.to_string(),
+                fmt_count(qps),
+                tensorserve::util::metrics::fmt_nanos(p50),
+                tensorserve::util::metrics::fmt_nanos(p99),
+            ]);
+            e2e_json.push(Json::obj(vec![
+                ("plane", Json::str(plane)),
+                ("threads", Json::num(threads as f64)),
+                ("requests_per_sec", Json::num(qps)),
+                ("p50_ns", Json::num(p50 as f64)),
+                ("p99_ns", Json::num(p99 as f64)),
+            ]));
+        }
+    }
+    t.print();
+    server.stop();
+
+    // ---- machine-readable trajectory: BENCH_http.json ----------------
+    let json = Json::obj(vec![
+        ("bench", Json::str("bench_http")),
+        ("input_dim", Json::num(INPUT_DIM as f64)),
+        ("codec", Json::Arr(codec_json)),
+        ("e2e", Json::Arr(e2e_json)),
+    ]);
+    let out = "BENCH_http.json";
+    match std::fs::write(out, json.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

@@ -1,0 +1,104 @@
+//! REST quickstart: the HTTP/JSON path end-to-end, no artifacts or
+//! PJRT backend required (synthetic servable).
+//!
+//! Starts a `ModelServer` with both listeners, loads two synthetic
+//! versions of a multi-head model, and drives the TF-Serving-style
+//! REST surface: predict in row and column formats, labeled
+//! addressing, classify/regress, model status, label delete, and the
+//! /metrics exposition.
+//!
+//! ```text
+//! cargo run --release --example rest_quickstart
+//! ```
+//!
+//! The same surface works with curl against `tensorserve_server
+//! --http_port 8501`; every request below prints its curl equivalent.
+
+use std::time::Duration;
+use tensorserve::base::servable::ServableId;
+use tensorserve::http::client::HttpClient;
+use tensorserve::rpc::proto::{Request, Response};
+use tensorserve::runtime::artifacts::ArtifactSpec;
+use tensorserve::runtime::hlo_servable::synthetic_loader;
+use tensorserve::server::builder::ModelServer;
+use tensorserve::server::config::ServerConfig;
+
+fn show(method: &str, path: &str, body: Option<&str>, status: u16, reply: &[u8]) {
+    match body {
+        Some(b) => println!("\n$ curl -X {method} localhost:8501{path} -d '{b}'"),
+        None => println!("\n$ curl -X {method} localhost:8501{path}"),
+    }
+    println!("  → {status} {}", String::from_utf8_lossy(reply));
+}
+
+fn main() -> anyhow::Result<()> {
+    // 1. A server with the REST gateway enabled (ephemeral ports).
+    let server = ModelServer::start(ServerConfig {
+        http_addr: Some("127.0.0.1:0".to_string()),
+        poll_interval: None,
+        artifacts_root: std::env::temp_dir(),
+        models: Vec::new(),
+        ..Default::default()
+    })?;
+    for version in [1u64, 2] {
+        server.avm().basic().load_and_wait(
+            ServableId::new("syn", version),
+            synthetic_loader(ArtifactSpec::synthetic_multi_head("syn", version, 8, 3)),
+            Duration::from_secs(30),
+        )?;
+    }
+    // Label v2 as canary through the admin surface (same core).
+    match server.core().handle(Request::SetVersionLabel {
+        model: "syn".into(),
+        label: "canary".into(),
+        version: 2,
+    }) {
+        Response::Ack => {}
+        other => anyhow::bail!("set label failed: {other:?}"),
+    }
+    let addr = server.http_addr().unwrap().to_string();
+    println!("REST gateway on http://{addr}");
+    let mut c = HttpClient::connect(&addr)?;
+
+    // 2. Predict, row format: one entry per batch row.
+    let body = r#"{"instances": [[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]]}"#;
+    let (status, reply) = c.post_json("/v1/models/syn:predict", body)?;
+    show("POST", "/v1/models/syn:predict", Some(body), status, &reply);
+
+    // 3. Predict, column format: named tensors in, tensors out.
+    let body = r#"{"inputs": {"x": [[1, 1, 1, 1, 1, 1, 1, 1]]}}"#;
+    let (status, reply) = c.post_json("/v1/models/syn:predict", body)?;
+    show("POST", "/v1/models/syn:predict", Some(body), status, &reply);
+
+    // 4. Labeled addressing: the canary label resolves to v2.
+    let body = r#"{"instances": [[0, 0, 0, 0, 0, 0, 0, 0]]}"#;
+    let (status, reply) = c.post_json("/v1/models/syn/labels/canary:predict", body)?;
+    show("POST", "/v1/models/syn/labels/canary:predict", Some(body), status, &reply);
+
+    // 5. Classify and regress over canonical examples.
+    let body = r#"{"examples": [{"x": [0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5]}], "signature_name": "classify"}"#;
+    let (status, reply) = c.post_json("/v1/models/syn:classify", body)?;
+    show("POST", "/v1/models/syn:classify", Some(body), status, &reply);
+    let body = r#"{"examples": [{"x": [0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5]}], "signature_name": "regress"}"#;
+    let (status, reply) = c.post_json("/v1/models/syn:regress", body)?;
+    show("POST", "/v1/models/syn:regress", Some(body), status, &reply);
+
+    // 6. Model status: per-version state, labels, signatures.
+    let (status, reply) = c.get("/v1/models/syn")?;
+    show("GET", "/v1/models/syn", None, status, &reply);
+
+    // 7. Retire the canary label.
+    let (status, reply) = c.delete("/v1/models/syn/labels/canary")?;
+    show("DELETE", "/v1/models/syn/labels/canary", None, status, &reply);
+
+    // 8. Metrics: first lines of the exposition.
+    let (status, reply) = c.get("/metrics")?;
+    let text = String::from_utf8_lossy(&reply);
+    println!("\n$ curl localhost:8501/metrics   ({status})");
+    for line in text.lines().filter(|l| l.contains("http_requests") || l.contains("batch_rows_count")) {
+        println!("  {line}");
+    }
+
+    server.stop();
+    Ok(())
+}

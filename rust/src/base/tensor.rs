@@ -88,6 +88,26 @@ impl Tensor {
         Tensor { shape, storage, offset: 0 }
     }
 
+    /// Fallible [`Tensor::build_with`]: when `fill` errors, the
+    /// acquired buffer goes straight back to the pool and the error
+    /// propagates — callers decoding untrusted input (the HTTP JSON
+    /// codec) never have to remember the recycle-on-error step.
+    pub fn try_build_with(
+        shape: Vec<usize>,
+        pool: &BufferPool,
+        fill: impl FnOnce(&mut [f32]) -> Result<()>,
+    ) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        let mut storage = pool.acquire(n);
+        match fill(&mut Arc::get_mut(&mut storage).expect("pool buffer uniquely owned")[..n]) {
+            Ok(()) => Ok(Tensor { shape, storage, offset: 0 }),
+            Err(e) => {
+                pool.release(storage);
+                Err(e)
+            }
+        }
+    }
+
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n: usize = shape.iter().product();
         Tensor {
@@ -528,6 +548,26 @@ mod tests {
         let t2 = Tensor::build_with(vec![6], &pool, |buf| buf.fill(9.0));
         assert_eq!(t2.data().as_ptr(), ptr, "pool did not recycle");
         assert_eq!(t2.data(), &[9.0; 6]);
+    }
+
+    #[test]
+    fn try_build_with_recycles_on_error() {
+        let pool = BufferPool::new(8, 1 << 20);
+        let t = Tensor::try_build_with(vec![4], &pool, |buf| {
+            buf.fill(2.0);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(t.data(), &[2.0; 4]);
+        t.recycle_into(&pool);
+        let shelved = pool.stats().buffers_pooled;
+        // A failing fill hands the buffer back to the pool itself.
+        let err = Tensor::try_build_with(vec![4], &pool, |_| {
+            anyhow::bail!("bad input")
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("bad input"));
+        assert_eq!(pool.stats().buffers_pooled, shelved);
     }
 
     #[test]

@@ -1,0 +1,97 @@
+//! Minimal blocking HTTP/1.1 client.
+//!
+//! Just enough to drive the gateway from tests, benches and examples
+//! over a kept-alive connection: one request in flight at a time,
+//! `Content-Length` responses (all this server ever sends). Not a
+//! general-purpose client.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    addr: String,
+    /// Request-assembly scratch reused across calls.
+    scratch: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(HttpClient {
+            reader: BufReader::new(stream),
+            addr: addr.to_string(),
+            scratch: Vec::new(),
+        })
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<(u16, Vec<u8>)> {
+        self.request("GET", path, None, &[])
+    }
+
+    pub fn delete(&mut self, path: &str) -> Result<(u16, Vec<u8>)> {
+        self.request("DELETE", path, None, &[])
+    }
+
+    pub fn post_json(&mut self, path: &str, body: &str) -> Result<(u16, Vec<u8>)> {
+        self.request("POST", path, Some("application/json"), body.as_bytes())
+    }
+
+    /// Issue one request on the kept-alive connection; returns
+    /// `(status, body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: Option<&str>,
+        body: &[u8],
+    ) -> Result<(u16, Vec<u8>)> {
+        self.scratch.clear();
+        self.scratch
+            .extend_from_slice(format!("{method} {path} HTTP/1.1\r\nHost: {}\r\n", self.addr).as_bytes());
+        if let Some(ct) = content_type {
+            self.scratch
+                .extend_from_slice(format!("Content-Type: {ct}\r\n").as_bytes());
+        }
+        self.scratch
+            .extend_from_slice(format!("Content-Length: {}\r\n\r\n", body.len()).as_bytes());
+        self.scratch.extend_from_slice(body);
+        let stream = self.reader.get_mut();
+        stream.write_all(&self.scratch)?;
+        stream.flush()?;
+
+        // Status line.
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("{}: connection closed mid-call", self.addr);
+        }
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("malformed status line {line:?}"))?;
+        // Headers; the server always frames with Content-Length.
+        let mut content_length: Option<usize> = None;
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                bail!("{}: connection closed mid-headers", self.addr);
+            }
+            let trimmed = line.trim_end();
+            if trimmed.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = trimmed.split_once(':') {
+                if name.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse().ok();
+                }
+            }
+        }
+        let len = content_length.ok_or_else(|| anyhow!("response without content-length"))?;
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body)?;
+        Ok((status, body))
+    }
+}

@@ -1,0 +1,732 @@
+//! JSON ⇄ wire-message translation for the REST gateway.
+//!
+//! Modeled on TF-Serving's REST payloads:
+//!
+//! * **row format** — `{"instances": [row, …]}`: one entry per batch
+//!   row; a row is a number (shape `[n, 1]`), an array of numbers
+//!   (shape `[n, d]`), or a one-entry `{input_name: row}` object.
+//!   Replies come back as `{"predictions": [row, …]}`.
+//! * **column format** — `{"inputs": {name: tensor} | tensor}` with
+//!   tensors as (possibly nested, rectangular) number arrays. Replies
+//!   come back as `{"outputs": {name: tensor}}`.
+//! * `:classify` / `:regress` take `{"examples": [{feature: value}]}`
+//!   and return `{"results": …}`.
+//!
+//! Hot-path property: instance rows decode **straight into pooled
+//! [`BufferPool`] storage** ([`Tensor::try_build_with`]) — the same
+//! buffers the serving layer's zero-copy batch assembly consumes and
+//! [`crate::server::builder::ServerCore::handle`] recycles after
+//! inference — so JSON ingress costs one parse plus exactly one
+//! buffer write, never an intermediate `Vec<f32>`.
+
+use crate::base::tensor::Tensor;
+use crate::inference::example::{Example, Feature};
+use crate::rpc::proto::{Response, VersionMetadata};
+use crate::runtime::artifacts::{SignatureDef, TensorInfo};
+use crate::runtime::pjrt::OutTensor;
+use crate::util::json::Json;
+use crate::util::pool::BufferPool;
+use anyhow::{anyhow, bail, Result};
+
+/// Cap on decoded tensor elements (64 MiB of f32 — the body cap). A
+/// JSON body can *claim* a huge shape in a few hundred bytes (deep
+/// nesting whose first spine multiplies out to terabytes); the
+/// element count is bounded **before** any buffer is acquired so a
+/// tiny request can never drive a giant allocation.
+pub const MAX_TENSOR_ELEMS: usize = 16 << 20;
+
+fn checked_elems(n: usize, width: usize) -> Result<usize> {
+    match n.checked_mul(width) {
+        Some(total) if total <= MAX_TENSOR_ELEMS => Ok(total),
+        _ => bail!(
+            "tensor of {n} x {width} elements exceeds the {MAX_TENSOR_ELEMS}-element limit"
+        ),
+    }
+}
+
+// ------------------------------------------------------------ parsing
+
+/// A parsed `:predict` body.
+pub struct PredictBody {
+    pub signature: String,
+    pub inputs: Vec<(String, Tensor)>,
+    /// Row format ("instances") replies with "predictions"; column
+    /// format ("inputs") replies with "outputs".
+    pub row_format: bool,
+}
+
+/// A parsed `:classify` / `:regress` body.
+pub struct ExamplesBody {
+    pub signature: String,
+    pub examples: Vec<Example>,
+}
+
+fn parse_root(body: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(body).map_err(|_| anyhow!("request body is not utf-8"))?;
+    let v = Json::parse(text)?;
+    if v.as_obj().is_none() {
+        bail!("request body must be a JSON object");
+    }
+    Ok(v)
+}
+
+fn signature_name(root: &Json) -> Result<String> {
+    match root.get("signature_name") {
+        None => Ok(String::new()),
+        Some(Json::Str(s)) => Ok(s.clone()),
+        Some(_) => bail!("\"signature_name\" must be a string"),
+    }
+}
+
+pub fn parse_predict_body(body: &[u8]) -> Result<PredictBody> {
+    let root = parse_root(body)?;
+    let signature = signature_name(&root)?;
+    match (root.get("instances"), root.get("inputs")) {
+        (Some(_), Some(_)) => {
+            bail!("body carries both \"instances\" and \"inputs\" — use one format")
+        }
+        (Some(instances), None) => {
+            let (name, tensor) = decode_instances(instances)?;
+            Ok(PredictBody { signature, inputs: vec![(name, tensor)], row_format: true })
+        }
+        (None, Some(inputs)) => Ok(PredictBody {
+            signature,
+            inputs: decode_columns(inputs)?,
+            row_format: false,
+        }),
+        (None, None) => {
+            bail!("body must carry \"instances\" (row format) or \"inputs\" (column format)")
+        }
+    }
+}
+
+/// Row format: every instance must match the first one's shape; rows
+/// are written straight into one pooled buffer.
+fn decode_instances(instances: &Json) -> Result<(String, Tensor)> {
+    let rows = instances
+        .as_arr()
+        .ok_or_else(|| anyhow!("\"instances\" must be an array"))?;
+    if rows.is_empty() {
+        bail!("\"instances\" is empty");
+    }
+    // Unwrap the optional one-entry {input_name: row} envelope.
+    let name = match &rows[0] {
+        Json::Obj(o) if o.len() == 1 => o.keys().next().unwrap().clone(),
+        Json::Obj(o) => bail!("instance 0 must name exactly one input (has {})", o.len()),
+        _ => String::new(),
+    };
+    let mut unwrapped: Vec<&Json> = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        if name.is_empty() {
+            if row.as_obj().is_some() {
+                bail!("instance {i} is an object but instance 0 was a bare row");
+            }
+            unwrapped.push(row);
+        } else {
+            match row.get(&name) {
+                Some(v) if row.as_obj().unwrap().len() == 1 => unwrapped.push(v),
+                _ => bail!("instance {i} does not name input '{name}' like instance 0"),
+            }
+        }
+    }
+    let (width, scalar) = match unwrapped[0] {
+        Json::Num(_) => (1usize, true),
+        Json::Arr(a) => (a.len(), false),
+        _ => bail!("instance 0 must be a number or an array of numbers"),
+    };
+    let n = unwrapped.len();
+    checked_elems(n, width)?;
+    let tensor = Tensor::try_build_with(vec![n, width], &BufferPool::global(), |buf| {
+        for (i, row) in unwrapped.iter().enumerate() {
+            match row {
+                Json::Num(x) if scalar => buf[i] = *x as f32,
+                Json::Arr(xs) if !scalar => {
+                    if xs.len() != width {
+                        bail!(
+                            "instance {i} has {} values, instance 0 has {width}",
+                            xs.len()
+                        );
+                    }
+                    for (j, x) in xs.iter().enumerate() {
+                        buf[i * width + j] = x
+                            .as_f64()
+                            .ok_or_else(|| anyhow!("instance {i} holds a non-number"))?
+                            as f32;
+                    }
+                }
+                _ => bail!("instance {i} does not match instance 0's shape"),
+            }
+        }
+        Ok(())
+    })?;
+    Ok((name, tensor))
+}
+
+/// Column format: `{name: tensor}` (named) or a bare tensor
+/// (positional, binding the signature's sole input).
+fn decode_columns(inputs: &Json) -> Result<Vec<(String, Tensor)>> {
+    match inputs {
+        Json::Obj(o) => {
+            if o.is_empty() {
+                bail!("\"inputs\" names no tensors");
+            }
+            o.iter()
+                .map(|(k, v)| {
+                    Ok((
+                        k.clone(),
+                        decode_tensor(v).map_err(|e| anyhow!("input '{k}': {e}"))?,
+                    ))
+                })
+                .collect()
+        }
+        other => Ok(vec![(String::new(), decode_tensor(other)?)]),
+    }
+}
+
+/// Nested-array → [`Tensor`]: the shape comes from the first spine of
+/// the nesting (which the fill pass then enforces as rectangular), and
+/// every number lands directly in one pooled buffer.
+pub fn decode_tensor(v: &Json) -> Result<Tensor> {
+    let mut shape = Vec::new();
+    let mut cur = v;
+    loop {
+        match cur {
+            Json::Arr(a) => {
+                if shape.len() >= 8 {
+                    bail!("tensor nesting deeper than rank 8");
+                }
+                shape.push(a.len());
+                match a.first() {
+                    Some(first) => cur = first,
+                    None => break,
+                }
+            }
+            Json::Num(_) => break,
+            _ => bail!("tensor elements must be numbers"),
+        }
+    }
+    if shape.is_empty() {
+        bail!("tensor must be an array");
+    }
+    // Bound the claimed element count before acquiring any buffer —
+    // the shape came from the first spine only and is untrusted.
+    shape
+        .iter()
+        .try_fold(1usize, |acc, &d| checked_elems(acc, d.max(1)))?;
+    Tensor::try_build_with(shape.clone(), &BufferPool::global(), |buf| {
+        let mut idx = 0usize;
+        fill_nested(v, &shape, 0, buf, &mut idx)
+    })
+}
+
+fn fill_nested(
+    v: &Json,
+    shape: &[usize],
+    depth: usize,
+    buf: &mut [f32],
+    idx: &mut usize,
+) -> Result<()> {
+    if depth == shape.len() {
+        buf[*idx] = v
+            .as_f64()
+            .ok_or_else(|| anyhow!("tensor elements must be numbers"))? as f32;
+        *idx += 1;
+        return Ok(());
+    }
+    match v {
+        Json::Arr(a) if a.len() == shape[depth] => {
+            for e in a {
+                fill_nested(e, shape, depth + 1, buf, idx)?;
+            }
+            Ok(())
+        }
+        Json::Arr(a) => bail!(
+            "ragged tensor: {} elements at depth {depth}, want {}",
+            a.len(),
+            shape[depth]
+        ),
+        _ => bail!("ragged tensor nesting at depth {depth}"),
+    }
+}
+
+pub fn parse_examples_body(body: &[u8]) -> Result<ExamplesBody> {
+    let root = parse_root(body)?;
+    let signature = signature_name(&root)?;
+    let rows = root
+        .get("examples")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("body must carry an \"examples\" array"))?;
+    if rows.is_empty() {
+        bail!("\"examples\" is empty");
+    }
+    let mut examples = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let obj = row
+            .as_obj()
+            .ok_or_else(|| anyhow!("example {i} must be a {{feature: value}} object"))?;
+        let mut ex = Example::new();
+        for (name, value) in obj {
+            let feature = match value {
+                Json::Num(x) => Feature::Floats(vec![*x as f32]),
+                Json::Str(s) => Feature::Bytes(s.as_bytes().to_vec()),
+                Json::Arr(xs) => {
+                    let floats: Option<Vec<f32>> =
+                        xs.iter().map(|x| x.as_f64().map(|v| v as f32)).collect();
+                    match floats {
+                        Some(f) => Feature::Floats(f),
+                        None => bail!(
+                            "example {i} feature '{name}' must be a flat number array"
+                        ),
+                    }
+                }
+                _ => bail!("example {i} feature '{name}' has an unsupported type"),
+            };
+            ex = ex.with(name, feature);
+        }
+        examples.push(ex);
+    }
+    Ok(ExamplesBody { signature, examples })
+}
+
+// ----------------------------------------------------------- encoding
+
+fn num_u64(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Nested-array JSON of a numeric slice with the given shape (shared
+/// by the f32 and i32 tensor paths).
+fn nest<T: Copy + Into<f64>>(data: &[T], shape: &[usize]) -> Json {
+    match shape.split_first() {
+        None => data
+            .first()
+            .map(|x| Json::Num((*x).into()))
+            .unwrap_or(Json::Null),
+        Some((&d, rest)) if rest.is_empty() => {
+            Json::Arr(data.iter().take(d).map(|x| Json::Num((*x).into())).collect())
+        }
+        Some((&d, rest)) => {
+            let w: usize = rest.iter().product();
+            Json::Arr(
+                (0..d)
+                    .map(|i| nest(&data[i * w..(i + 1) * w], rest))
+                    .collect(),
+            )
+        }
+    }
+}
+
+/// One batch row: rank-1 yields a scalar, higher ranks the row's
+/// nested array.
+fn nest_row<T: Copy + Into<f64>>(data: &[T], shape: &[usize], i: usize) -> Json {
+    if shape.len() <= 1 {
+        Json::Num(data[i].into())
+    } else {
+        let w: usize = shape[1..].iter().product();
+        nest(&data[i * w..(i + 1) * w], &shape[1..])
+    }
+}
+
+/// Full tensor as nested arrays.
+fn out_tensor_json(t: &OutTensor) -> Json {
+    match t {
+        OutTensor::F32(t) => nest(t.data(), t.shape()),
+        OutTensor::I32(t) => nest(t.data(), t.shape()),
+    }
+}
+
+fn out_tensor_row_json(t: &OutTensor, i: usize) -> Json {
+    match t {
+        OutTensor::F32(t) => nest_row(t.data(), t.shape(), i),
+        OutTensor::I32(t) => nest_row(t.data(), t.shape(), i),
+    }
+}
+
+/// `:predict` reply. Row format: `predictions[i]` is row `i` — the
+/// bare output row when the signature has one output, else a
+/// `{output_name: row}` object. Column format: full tensors under
+/// `"outputs"`.
+pub fn predict_response_json(resp: &Response, row_format: bool) -> Result<Json> {
+    let (version, outputs) = match resp {
+        Response::Predict { model_version, outputs } => (*model_version, outputs),
+        _ => bail!("predict produced an unexpected response variant"),
+    };
+    let payload = if row_format {
+        let n = outputs.first().map(|(_, t)| t.batch()).unwrap_or(0);
+        if let Some((name, t)) = outputs.iter().find(|(_, t)| t.batch() != n) {
+            bail!(
+                "output '{name}' has batch {} but the first output has {n} — \
+                 column format (\"inputs\") reports per-output tensors",
+                t.batch()
+            );
+        }
+        let predictions: Vec<Json> = (0..n)
+            .map(|i| {
+                if outputs.len() == 1 {
+                    out_tensor_row_json(&outputs[0].1, i)
+                } else {
+                    Json::Obj(
+                        outputs
+                            .iter()
+                            .map(|(name, t)| (name.clone(), out_tensor_row_json(t, i)))
+                            .collect(),
+                    )
+                }
+            })
+            .collect();
+        ("predictions", Json::Arr(predictions))
+    } else {
+        (
+            "outputs",
+            Json::Obj(
+                outputs
+                    .iter()
+                    .map(|(name, t)| (name.clone(), out_tensor_json(t)))
+                    .collect(),
+            ),
+        )
+    };
+    Ok(Json::obj(vec![
+        ("model_version", num_u64(version)),
+        payload,
+    ]))
+}
+
+/// `:classify` reply: `results[i]` lists `[class, log_prob]` pairs for
+/// every class of example `i`; `classes[i]` is the argmax.
+pub fn classify_response_json(
+    model_version: u64,
+    classes: &[i32],
+    log_probs: &[Vec<f32>],
+) -> Json {
+    let results: Vec<Json> = log_probs
+        .iter()
+        .map(|row| {
+            Json::Arr(
+                row.iter()
+                    .enumerate()
+                    .map(|(c, lp)| {
+                        Json::Arr(vec![Json::Num(c as f64), Json::Num(*lp as f64)])
+                    })
+                    .collect(),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("model_version", num_u64(model_version)),
+        ("classes", Json::Arr(classes.iter().map(|c| Json::Num(*c as f64)).collect())),
+        ("results", Json::Arr(results)),
+    ])
+}
+
+/// `:regress` reply: one value per example.
+pub fn regress_response_json(model_version: u64, values: &[f32]) -> Json {
+    Json::obj(vec![
+        ("model_version", num_u64(model_version)),
+        ("results", Json::Arr(values.iter().map(|v| Json::Num(*v as f64)).collect())),
+    ])
+}
+
+fn tensor_info_json(info: &TensorInfo) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&info.name)),
+        ("dtype", Json::str(&info.dtype)),
+        (
+            "shape",
+            Json::Arr(info.shape.iter().map(|d| Json::Num(*d as f64)).collect()),
+        ),
+    ])
+}
+
+fn signature_json(def: &SignatureDef) -> Json {
+    Json::obj(vec![
+        ("method", Json::str(&def.method)),
+        ("inputs", Json::Arr(def.inputs.iter().map(tensor_info_json).collect())),
+        ("outputs", Json::Arr(def.outputs.iter().map(tensor_info_json).collect())),
+    ])
+}
+
+/// `GET /v1/models/...` reply: per-version state, labels and signature
+/// defs — the REST mirror of `GetModelMetadata`.
+pub fn metadata_json(model: &str, versions: &[VersionMetadata]) -> Json {
+    let versions: Vec<Json> = versions
+        .iter()
+        .map(|vm| {
+            Json::obj(vec![
+                ("version", num_u64(vm.version)),
+                ("state", Json::str(&vm.state)),
+                (
+                    "labels",
+                    Json::Arr(vm.labels.iter().map(Json::str).collect()),
+                ),
+                (
+                    "signatures",
+                    Json::Obj(
+                        vm.signatures
+                            .iter()
+                            .map(|(name, def)| (name.clone(), signature_json(def)))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("model", Json::str(model)),
+        ("versions", Json::Arr(versions)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::tensor::TensorI32;
+    use crate::util::pool::size_class;
+
+    #[test]
+    fn row_format_decodes_into_pooled_storage() {
+        let body = br#"{"instances": [[1, 2, 3], [4, 5, 6]]}"#;
+        let parsed = parse_predict_body(body).unwrap();
+        assert!(parsed.row_format);
+        assert_eq!(parsed.signature, "");
+        let (name, t) = &parsed.inputs[0];
+        assert_eq!(name, "");
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // The decode wrote into a size-class pool buffer at offset 0 —
+        // exactly what the serving layer recycles after inference.
+        assert_eq!(t.storage().len(), size_class(6));
+        assert_eq!(t.data().as_ptr(), t.storage().as_ptr());
+    }
+
+    #[test]
+    fn row_format_named_and_scalar_instances() {
+        let parsed =
+            parse_predict_body(br#"{"instances": [{"x": [1, 2]}, {"x": [3, 4]}], "signature_name": "s"}"#)
+                .unwrap();
+        assert_eq!(parsed.signature, "s");
+        assert_eq!(parsed.inputs[0].0, "x");
+        assert_eq!(parsed.inputs[0].1.shape(), &[2, 2]);
+
+        // Scalar instances become a [n, 1] tensor.
+        let parsed = parse_predict_body(br#"{"instances": [1.5, 2.5]}"#).unwrap();
+        assert_eq!(parsed.inputs[0].1.shape(), &[2, 1]);
+        assert_eq!(parsed.inputs[0].1.data(), &[1.5, 2.5]);
+    }
+
+    #[test]
+    fn row_format_rejects_bad_bodies() {
+        for (body, needle) in [
+            (&br#"{"instances": []}"#[..], "empty"),
+            (br#"{"instances": [[1, 2], [3]]}"#, "instance 1"),
+            (br#"{"instances": [[1], "x"]}"#, "instance 1"),
+            (br#"{"instances": [{"x": [1]}, {"y": [1]}]}"#, "instance 1"),
+            (br#"{"instances": [{"x": [1], "y": [2]}]}"#, "exactly one"),
+            (br#"{"instances": [[1, "a"]]}"#, "non-number"),
+            (br#"{"instances": 5}"#, "array"),
+            (br#"{"inputs": {"x": [1]}, "instances": [[1]]}"#, "both"),
+            (br#"{}"#, "must carry"),
+            (br#"[1]"#, "object"),
+            (b"\xff\xfe", "utf-8"),
+            (br#"{"instances": [[1]], "signature_name": 3}"#, "signature_name"),
+        ] {
+            let err = parse_predict_body(body).unwrap_err().to_string();
+            assert!(err.contains(needle), "{body:?} → {err}");
+        }
+    }
+
+    #[test]
+    fn column_format_decodes_named_tensors() {
+        let parsed =
+            parse_predict_body(br#"{"inputs": {"x": [[1, 2], [3, 4], [5, 6]]}}"#).unwrap();
+        assert!(!parsed.row_format);
+        let (name, t) = &parsed.inputs[0];
+        assert_eq!(name, "x");
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.storage().len(), size_class(6));
+
+        // Bare tensor binds positionally.
+        let parsed = parse_predict_body(br#"{"inputs": [[1, 2]]}"#).unwrap();
+        assert_eq!(parsed.inputs[0].0, "");
+        assert_eq!(parsed.inputs[0].1.shape(), &[1, 2]);
+    }
+
+    #[test]
+    fn column_format_rejects_ragged_and_deep() {
+        let err = parse_predict_body(br#"{"inputs": {"x": [[1, 2], [3]]}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ragged") && err.contains("'x'"), "{err}");
+        let err = parse_predict_body(br#"{"inputs": {"x": [[1], 2]}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ragged"), "{err}");
+        // Rank > 8 rejected before any allocation.
+        let deep = format!(r#"{{"inputs": {{"x": {}1{}}}}}"#, "[".repeat(9), "]".repeat(9));
+        assert!(parse_predict_body(deep.as_bytes()).is_err());
+        let err = parse_predict_body(br#"{"inputs": {}}"#).unwrap_err().to_string();
+        assert!(err.contains("no tensors"), "{err}");
+    }
+
+    #[test]
+    fn claimed_giant_shapes_rejected_before_allocation() {
+        // A small JSON body must never drive a giant zeroed
+        // allocation. Column format: the shape comes from the first
+        // spine, so only the first child of each level needs depth —
+        // ~4 KB of JSON claims [32; 8] ≈ 1.1e12 elements.
+        let mut t = format!("[{}]", vec!["1"; 32].join(","));
+        for _ in 0..7 {
+            t = format!("[{},{}]", t, vec!["0"; 31].join(","));
+        }
+        let body = format!(r#"{{"inputs": {{"x": {t}}}}}"#);
+        assert!(body.len() < 16 << 10, "test body unexpectedly large");
+        let err = parse_predict_body(body.as_bytes()).unwrap_err().to_string();
+        assert!(err.contains("element limit"), "{err}");
+        // Row format: width comes from instance 0, so one wide row
+        // plus many tiny ones claims n × width before any row-length
+        // validation could trip.
+        let wide = format!("[{}]", vec!["1"; 100_000].join(","));
+        let body = format!(
+            r#"{{"instances": [{wide},{}]}}"#,
+            vec!["[1]"; 199].join(",")
+        );
+        let err = parse_predict_body(body.as_bytes()).unwrap_err().to_string();
+        assert!(err.contains("element limit"), "{err}");
+    }
+
+    #[test]
+    fn examples_body_decodes_features() {
+        let parsed = parse_examples_body(
+            br#"{"examples": [{"x": [1, 2], "tag": "a"}, {"x": 3}], "signature_name": "classify"}"#,
+        )
+        .unwrap();
+        assert_eq!(parsed.signature, "classify");
+        assert_eq!(parsed.examples.len(), 2);
+        assert_eq!(parsed.examples[0].floats("x").unwrap(), &[1.0, 2.0]);
+        assert_eq!(parsed.examples[1].floats("x").unwrap(), &[3.0]);
+        for (body, needle) in [
+            (&br#"{"examples": []}"#[..], "empty"),
+            (br#"{"examples": [5]}"#, "object"),
+            (br#"{"examples": [{"x": [[1]]}]}"#, "flat number array"),
+            (br#"{"examples": [{"x": null}]}"#, "unsupported"),
+            (br#"{}"#, "examples"),
+        ] {
+            let err = parse_examples_body(body).unwrap_err().to_string();
+            assert!(err.contains(needle), "{body:?} → {err}");
+        }
+    }
+
+    #[test]
+    fn predict_response_row_and_column_shapes() {
+        let resp = Response::Predict {
+            model_version: 2,
+            outputs: vec![
+                (
+                    "log_probs".into(),
+                    OutTensor::F32(
+                        Tensor::matrix(vec![vec![-0.5, -1.0], vec![-0.25, -2.0]]).unwrap(),
+                    ),
+                ),
+                (
+                    "class".into(),
+                    OutTensor::I32(TensorI32::new(vec![2], vec![0, 1]).unwrap()),
+                ),
+            ],
+        };
+        // Row format: one {name: row} object per instance.
+        let json = predict_response_json(&resp, true).unwrap();
+        assert_eq!(json.get("model_version").unwrap().as_u64(), Some(2));
+        let preds = json.get("predictions").unwrap().as_arr().unwrap();
+        assert_eq!(preds.len(), 2);
+        assert_eq!(preds[1].get("class").unwrap().as_i64(), Some(1));
+        assert_eq!(
+            preds[0].get("log_probs").unwrap(),
+            &Json::Arr(vec![Json::Num(-0.5), Json::Num(-1.0)])
+        );
+        // Column format: full tensors under "outputs".
+        let json = predict_response_json(&resp, false).unwrap();
+        let outs = json.get("outputs").unwrap();
+        assert_eq!(
+            outs.get("class").unwrap(),
+            &Json::Arr(vec![Json::Num(0.0), Json::Num(1.0)])
+        );
+        assert_eq!(
+            outs.get("log_probs").unwrap().as_arr().unwrap().len(),
+            2
+        );
+
+        // Single output in row format: bare rows, no object wrapper.
+        let solo = Response::Predict {
+            model_version: 1,
+            outputs: vec![(
+                "value".into(),
+                OutTensor::F32(Tensor::vec(vec![0.5, 1.5])),
+            )],
+        };
+        let json = predict_response_json(&solo, true).unwrap();
+        assert_eq!(
+            json.get("predictions").unwrap(),
+            &Json::Arr(vec![Json::Num(0.5), Json::Num(1.5)])
+        );
+    }
+
+    #[test]
+    fn classify_regress_and_metadata_json() {
+        // Dyadic values only: f32 → f64 widening must stay exact for
+        // the equality below.
+        let json = classify_response_json(3, &[1, 0], &[vec![-1.0, -0.25], vec![-0.5, -2.0]]);
+        assert_eq!(json.get("model_version").unwrap().as_u64(), Some(3));
+        let results = json.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(
+            results[0].as_arr().unwrap()[1],
+            Json::Arr(vec![Json::Num(1.0), Json::Num(-0.25)])
+        );
+        let json = regress_response_json(1, &[0.25]);
+        assert_eq!(json.get("results").unwrap(), &Json::Arr(vec![Json::Num(0.25)]));
+
+        let spec = crate::runtime::artifacts::ArtifactSpec::synthetic_multi_head("syn", 2, 8, 3);
+        let vm = VersionMetadata {
+            version: 2,
+            state: "ready".into(),
+            labels: vec!["canary".into()],
+            signatures: spec.signatures.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+        };
+        let json = metadata_json("syn", &[vm]);
+        assert_eq!(json.get("model").unwrap().as_str(), Some("syn"));
+        let v = &json.get("versions").unwrap().as_arr().unwrap()[0];
+        assert_eq!(v.get("state").unwrap().as_str(), Some("ready"));
+        assert_eq!(
+            v.get("labels").unwrap(),
+            &Json::Arr(vec![Json::str("canary")])
+        );
+        let sig = v.get_path("signatures.regress").unwrap();
+        assert_eq!(sig.get("method").unwrap().as_str(), Some("regress"));
+        assert_eq!(
+            sig.get("inputs").unwrap().as_arr().unwrap()[0]
+                .get("shape")
+                .unwrap(),
+            &Json::Arr(vec![Json::Num(-1.0), Json::Num(8.0)])
+        );
+        // The whole reply serializes to parseable JSON.
+        assert!(Json::parse(&json.to_string()).is_ok());
+    }
+
+    #[test]
+    fn non_finite_outputs_stay_valid_json() {
+        let resp = Response::Predict {
+            model_version: 1,
+            outputs: vec![(
+                "y".into(),
+                OutTensor::F32(Tensor::vec(vec![f32::NAN, 1.0])),
+            )],
+        };
+        let json = predict_response_json(&resp, true).unwrap();
+        let text = json.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("predictions").unwrap(),
+            &Json::Arr(vec![Json::Null, Json::Num(1.0)])
+        );
+    }
+}

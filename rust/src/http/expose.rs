@@ -1,0 +1,92 @@
+//! `/metrics` text exposition.
+//!
+//! Snapshots process-level state (buffer pools, pooled bytes) into the
+//! server's [`Registry`] gauges and renders everything in Prometheus
+//! text format — the same registry the RPC `Status` dump reads, so
+//! both planes report one set of numbers (request counters, per-API
+//! latency summaries, `predict.batch_rows` batch-size stats, pool
+//! hit/miss gauges).
+
+use crate::server::builder::ServerCore;
+use crate::util::pool::BufferPool;
+
+/// Everything a scraper needs, as `tensorserve_*` metrics.
+pub fn metrics_text(core: &ServerCore) -> String {
+    BufferPool::global().export(&core.registry, "tensor_pool");
+    BufferPool::global_i32().export(&core.registry, "tensor_pool_i32");
+    core.registry
+        .gauge("pooled_buffer_bytes")
+        .set(crate::util::mem::pooled_buffer_bytes() as i64);
+    let mut text = core.registry.render_prometheus("tensorserve");
+    // Serving state is rendered fresh each scrape (never via
+    // persistent gauges): a version that unloads simply stops
+    // appearing, instead of reporting 1 forever.
+    text.push_str("# TYPE tensorserve_serving gauge\n");
+    for id in core.avm().basic().all_ready() {
+        text.push_str(&format!(
+            "tensorserve_serving{{model=\"{}\",version=\"{}\"}} 1\n",
+            id.name.replace('\\', "\\\\").replace('"', "\\\""),
+            id.version
+        ));
+    }
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::builder::ModelServer;
+    use crate::server::config::ServerConfig;
+
+    #[test]
+    fn exposition_covers_requests_pools_and_batch_sizes() {
+        let server = ModelServer::start(ServerConfig {
+            poll_interval: None,
+            models: Vec::new(),
+            ..Default::default()
+        })
+        .unwrap();
+        let core = server.core();
+        core.registry.counter("rpc.predict.requests").inc();
+        core.registry.histogram("predict.batch_rows").record(4);
+        let text = metrics_text(core);
+        assert!(text.contains("tensorserve_rpc_predict_requests 1\n"), "{text}");
+        assert!(text.contains("tensorserve_predict_batch_rows_count 1\n"), "{text}");
+        assert!(text.contains("tensorserve_tensor_pool_hits"), "{text}");
+        assert!(text.contains("tensorserve_pooled_buffer_bytes"), "{text}");
+        server.stop();
+    }
+
+    #[test]
+    fn serving_lines_track_the_ready_set() {
+        use crate::base::servable::ServableId;
+        use crate::runtime::artifacts::ArtifactSpec;
+        use crate::runtime::hlo_servable::synthetic_loader;
+        use std::time::Duration;
+        let server = ModelServer::start(ServerConfig {
+            poll_interval: None,
+            models: Vec::new(),
+            ..Default::default()
+        })
+        .unwrap();
+        server
+            .avm()
+            .basic()
+            .load_and_wait(
+                ServableId::new("exp", 1),
+                synthetic_loader(ArtifactSpec::synthetic_classifier("exp", 1, 4, 2)),
+                Duration::from_secs(30),
+            )
+            .unwrap();
+        let line = "tensorserve_serving{model=\"exp\",version=\"1\"} 1\n";
+        assert!(metrics_text(server.core()).contains(line));
+        // After unload the line disappears — no stale gauge.
+        server
+            .avm()
+            .basic()
+            .unload_and_wait(ServableId::new("exp", 1), Duration::from_secs(30))
+            .unwrap();
+        assert!(!metrics_text(server.core()).contains(line));
+        server.stop();
+    }
+}

@@ -1,0 +1,29 @@
+//! The HTTP/REST gateway (paper §1: "flexible … in ways to integrate
+//! with systems").
+//!
+//! A second, JSON data plane over the exact same
+//! [`crate::server::builder::ServerCore`] the binary RPC server uses —
+//! labels, signatures, batching and lifecycle come for free; only the
+//! wire format differs. De Rosa et al. ("On the Cost of Model-Serving
+//! Frameworks") show REST ingress is where naive serving stacks lose
+//! most of their throughput, so the JSON path keeps the PR 1
+//! zero-copy contract: instance rows decode straight into pooled
+//! buffers and response tensors recycle right after serialization.
+//!
+//! * [`server`] — dependency-free threaded HTTP/1.1 server
+//!   (keep-alive, content-length + chunked bodies, size limits).
+//! * [`router`] — TF-Serving-style URL surface
+//!   (`/v1/models/{name}[/versions/{v}|/labels/{l}]:predict|…`,
+//!   metadata GETs, label DELETE, `/healthz`).
+//! * [`codec`] — JSON row/column formats ⇄ [`crate::rpc::proto`]
+//!   messages.
+//! * [`expose`] — `/metrics` Prometheus-style text exposition from
+//!   [`crate::util::metrics`].
+//! * [`client`] — a minimal blocking client for tests, benches and
+//!   examples.
+
+pub mod client;
+pub mod codec;
+pub mod expose;
+pub mod router;
+pub mod server;

@@ -1,0 +1,314 @@
+//! REST routing: TF-Serving-shaped URLs dispatched through the same
+//! [`ServerCore::handle`] the binary RPC server uses, so signatures,
+//! version labels, batching and lifecycle behave identically on both
+//! planes.
+//!
+//! ```text
+//! POST   /v1/models/{name}[/versions/{v}|/labels/{l}]:predict
+//! POST   /v1/models/{name}[/versions/{v}|/labels/{l}]:classify
+//! POST   /v1/models/{name}[/versions/{v}|/labels/{l}]:regress
+//! GET    /v1/models/{name}[/versions/{v}|/labels/{l}]     (metadata)
+//! DELETE /v1/models/{name}/labels/{l}                     (drop label)
+//! GET    /healthz
+//! GET    /metrics
+//! ```
+//!
+//! Errors use one envelope, `{"error": "..."}`: lookup failures
+//! (unknown model/version/label) are 404, everything else the core
+//! rejects (validation, shape, signature method) is 400.
+
+use super::codec;
+use super::expose;
+use super::server::{HttpHandler, HttpRequest, HttpResponse};
+use crate::inference::ModelSpec;
+use crate::rpc::proto::{Request, Response};
+use crate::server::builder::ServerCore;
+use crate::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Data-plane verb carried as a `:suffix` on the model path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Verb {
+    Predict,
+    Classify,
+    Regress,
+}
+
+/// A parsed `/v1/models/...` URL.
+#[derive(Debug, PartialEq)]
+pub(crate) struct Route {
+    pub spec: ModelSpec,
+    pub verb: Option<Verb>,
+}
+
+/// Build the gateway's request handler over a shared [`ServerCore`].
+pub fn gateway(core: Arc<ServerCore>) -> HttpHandler {
+    Arc::new(move |req: &HttpRequest| {
+        let t0 = Instant::now();
+        let resp = route(&core, req);
+        core.registry.counter("http.requests").inc();
+        if resp.status >= 400 {
+            core.registry.counter("http.errors").inc();
+        }
+        core.registry
+            .histogram("http.latency_ns")
+            .record_duration(t0.elapsed());
+        resp
+    })
+}
+
+fn route(core: &ServerCore, req: &HttpRequest) -> HttpResponse {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => HttpResponse::text(200, "ok\n"),
+        ("GET", "/metrics") => HttpResponse::text(200, &expose::metrics_text(core)),
+        _ if req.path.starts_with("/v1/models/") => models_route(core, req),
+        (method, path) => {
+            HttpResponse::error(404, &format!("no route for {method} {path}"))
+        }
+    }
+}
+
+fn models_route(core: &ServerCore, req: &HttpRequest) -> HttpResponse {
+    let route = match parse_model_path(&req.path) {
+        Ok(r) => r,
+        Err((status, message)) => return HttpResponse::error(status, &message),
+    };
+    match (req.method.as_str(), route.verb) {
+        ("POST", Some(verb)) => data_plane(core, &req.body, route.spec, verb),
+        ("GET", None) => metadata(core, route.spec),
+        ("DELETE", None) if route.spec.label.is_some() => delete_label(core, route.spec),
+        ("POST", None) => HttpResponse::error(
+            400,
+            "POST requires a :predict, :classify or :regress suffix",
+        ),
+        (method, _) => HttpResponse::error(
+            405,
+            &format!("method {method} not allowed for {}", req.path),
+        ),
+    }
+}
+
+/// Parse `/v1/models/{name}[/versions/{v}|/labels/{l}]` with an
+/// optional `:verb` suffix. Errors carry the HTTP status to answer.
+pub(crate) fn parse_model_path(path: &str) -> Result<Route, (u16, String)> {
+    let rest = path
+        .strip_prefix("/v1/models/")
+        .ok_or_else(|| (404, format!("no route for {path}")))?;
+    let (target, verb) = match rest.rsplit_once(':') {
+        Some((t, v)) => {
+            let verb = match v {
+                "predict" => Verb::Predict,
+                "classify" => Verb::Classify,
+                "regress" => Verb::Regress,
+                other => return Err((400, format!("unknown method ':{other}'"))),
+            };
+            (t, Some(verb))
+        }
+        None => (rest, None),
+    };
+    let segments: Option<Vec<String>> = target.split('/').map(percent_decode).collect();
+    let segments = segments.ok_or_else(|| (400, format!("bad percent-encoding in {path}")))?;
+    let spec = match segments.as_slice() {
+        [name] if !name.is_empty() => ModelSpec::latest(name.clone()),
+        [name, kind, version] if kind.as_str() == "versions" && !name.is_empty() => {
+            let v: u64 = version
+                .parse()
+                .map_err(|_| (400, format!("bad version number {version:?}")))?;
+            ModelSpec::at_version(name.clone(), v)
+        }
+        [name, kind, label]
+            if kind.as_str() == "labels" && !name.is_empty() && !label.is_empty() =>
+        {
+            ModelSpec::with_label(name.clone(), label.clone())
+        }
+        _ => return Err((404, format!("no route for {path}"))),
+    };
+    Ok(Route { spec, verb })
+}
+
+fn percent_decode(s: &str) -> Option<String> {
+    if !s.contains('%') {
+        return Some(s.to_string());
+    }
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            let hex = bytes.get(i + 1..i + 3)?;
+            let v = u8::from_str_radix(std::str::from_utf8(hex).ok()?, 16).ok()?;
+            out.push(v);
+            i += 3;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).ok()
+}
+
+/// Lookup failures are 404; everything else the core rejects is a 400.
+fn error_status(message: &str) -> u16 {
+    const NOT_FOUND: [&str; 4] = ["not found", "no ready versions", "not ready", "no version"];
+    if NOT_FOUND.iter().any(|n| message.contains(n)) {
+        404
+    } else {
+        400
+    }
+}
+
+fn core_error(message: &str) -> HttpResponse {
+    HttpResponse::error(error_status(message), message)
+}
+
+fn data_plane(core: &ServerCore, body: &[u8], spec: ModelSpec, verb: Verb) -> HttpResponse {
+    match verb {
+        Verb::Predict => {
+            let parsed = match codec::parse_predict_body(body) {
+                Ok(p) => p,
+                Err(e) => return HttpResponse::error(400, &e.to_string()),
+            };
+            let row_format = parsed.row_format;
+            let resp = core.handle(Request::Predict {
+                spec,
+                signature: parsed.signature,
+                inputs: parsed.inputs,
+            });
+            if let Response::Error { message } = &resp {
+                return core_error(message);
+            }
+            if !matches!(resp, Response::Predict { .. }) {
+                return HttpResponse::error(500, &format!("unexpected response {resp:?}"));
+            }
+            let result = match codec::predict_response_json(&resp, row_format) {
+                Ok(json) => HttpResponse::json(200, &json),
+                Err(e) => HttpResponse::error(500, &e.to_string()),
+            };
+            // JSON is built; sole-owner output storage goes back to
+            // the pools, same as the RPC reply path.
+            resp.recycle_buffers();
+            result
+        }
+        Verb::Classify => {
+            let parsed = match codec::parse_examples_body(body) {
+                Ok(p) => p,
+                Err(e) => return HttpResponse::error(400, &e.to_string()),
+            };
+            match core.handle(Request::Classify {
+                spec,
+                signature: parsed.signature,
+                examples: parsed.examples,
+            }) {
+                Response::Classify { model_version, classes, log_probs } => HttpResponse::json(
+                    200,
+                    &codec::classify_response_json(model_version, &classes, &log_probs),
+                ),
+                Response::Error { message } => core_error(&message),
+                other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
+            }
+        }
+        Verb::Regress => {
+            let parsed = match codec::parse_examples_body(body) {
+                Ok(p) => p,
+                Err(e) => return HttpResponse::error(400, &e.to_string()),
+            };
+            match core.handle(Request::Regress {
+                spec,
+                signature: parsed.signature,
+                examples: parsed.examples,
+            }) {
+                Response::Regress { model_version, values } => HttpResponse::json(
+                    200,
+                    &codec::regress_response_json(model_version, &values),
+                ),
+                Response::Error { message } => core_error(&message),
+                other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
+            }
+        }
+    }
+}
+
+fn metadata(core: &ServerCore, spec: ModelSpec) -> HttpResponse {
+    match core.handle(Request::GetModelMetadata { spec }) {
+        Response::ModelMetadata { model, versions } => {
+            HttpResponse::json(200, &codec::metadata_json(&model, &versions))
+        }
+        Response::Error { message } => core_error(&message),
+        other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
+    }
+}
+
+fn delete_label(core: &ServerCore, spec: ModelSpec) -> HttpResponse {
+    let label = spec.label.unwrap_or_default();
+    match core.handle(Request::DeleteVersionLabel { model: spec.name, label }) {
+        Response::Ack => HttpResponse::json(200, &Json::obj(vec![("ok", Json::Bool(true))])),
+        Response::Error { message } => core_error(&message),
+        other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(path: &str) -> Result<Route, (u16, String)> {
+        parse_model_path(path)
+    }
+
+    #[test]
+    fn model_paths_parse() {
+        let r = parse("/v1/models/mnist").unwrap();
+        assert_eq!(r.spec, ModelSpec::latest("mnist"));
+        assert_eq!(r.verb, None);
+
+        let r = parse("/v1/models/mnist:predict").unwrap();
+        assert_eq!(r.verb, Some(Verb::Predict));
+        assert_eq!(r.spec, ModelSpec::latest("mnist"));
+
+        let r = parse("/v1/models/mnist/versions/3:classify").unwrap();
+        assert_eq!(r.spec, ModelSpec::at_version("mnist", 3));
+        assert_eq!(r.verb, Some(Verb::Classify));
+
+        let r = parse("/v1/models/mnist/labels/canary:regress").unwrap();
+        assert_eq!(r.spec, ModelSpec::with_label("mnist", "canary"));
+        assert_eq!(r.verb, Some(Verb::Regress));
+
+        // Percent-encoded model names decode per segment.
+        let r = parse("/v1/models/my%20model").unwrap();
+        assert_eq!(r.spec.name, "my model");
+    }
+
+    #[test]
+    fn bad_paths_rejected_with_status() {
+        assert_eq!(parse("/v2/models/m").unwrap_err().0, 404);
+        assert_eq!(parse("/v1/models/").unwrap_err().0, 404);
+        assert_eq!(parse("/v1/models/m/other/1").unwrap_err().0, 404);
+        assert_eq!(parse("/v1/models/m/versions/x:predict").unwrap_err().0, 400);
+        assert_eq!(parse("/v1/models/m:transmogrify").unwrap_err().0, 400);
+        assert_eq!(parse("/v1/models/m/labels/").unwrap_err().0, 404);
+        assert_eq!(parse("/v1/models/m%zz").unwrap_err().0, 400);
+    }
+
+    #[test]
+    fn error_status_mapping() {
+        for message in [
+            "servable 'ghost' not found",
+            "servable 'm' has no ready versions",
+            "servable 'm' version 9 not ready",
+            "model 'm' has no version labeled 'canary' (known labels: [])",
+            "model 'm' has no version 9",
+            "model 'm' has no versions",
+        ] {
+            assert_eq!(error_status(message), 404, "{message}");
+        }
+        for message in [
+            "model 'm' signature '' : input tensor 'x' has shape [1, 5], want [-1, 8]",
+            "batch 65 exceeds compiled ladder [1, 4]",
+            "model 'm': request pins both version 1 and label 'x' — use one",
+            "signature 'regress' has no s32 class output",
+        ] {
+            assert_eq!(error_status(message), 400, "{message}");
+        }
+    }
+}

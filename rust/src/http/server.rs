@@ -1,0 +1,711 @@
+//! Minimal threaded HTTP/1.1 server — the REST gateway's front door.
+//!
+//! Dependency-free by necessity (the offline crate set has no HTTP
+//! stack): an accept loop plus one handler thread per connection, the
+//! same shape as [`crate::rpc::server::RpcServer`]. Implements the
+//! slice of HTTP/1.1 a serving data plane needs:
+//!
+//! * **keep-alive** (default on 1.1, honoring `Connection:` headers),
+//!   so load generators and proxies reuse connections;
+//! * request bodies via **`Content-Length`** or **chunked**
+//!   transfer-encoding (what `curl -T`/streaming clients send);
+//! * `Expect: 100-continue` handshake;
+//! * hard **size limits** on the request line, header count/length and
+//!   body (the body cap matches the RPC frame cap), so an
+//!   internet-facing listener cannot be ballooned;
+//! * single-`write` responses: status line + headers + body are
+//!   assembled in a per-connection scratch buffer and leave in one
+//!   syscall, mirroring the RPC server's framed reply path.
+//!
+//! Routing and JSON live elsewhere ([`super::router`],
+//! [`super::codec`]); the handler here is a pure
+//! `HttpRequest → HttpResponse` function.
+
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Maximum request-line length (method + target + version).
+pub const MAX_REQUEST_LINE: usize = 8 << 10;
+/// Maximum length of a single header line.
+pub const MAX_HEADER_LINE: usize = 8 << 10;
+/// Maximum number of headers per request.
+pub const MAX_HEADERS: usize = 100;
+/// Maximum request body, matching the RPC layer's frame cap.
+pub const MAX_BODY: usize = crate::rpc::frame::MAX_FRAME;
+/// Socket read timeout: bounds how long an idle keep-alive connection
+/// can pin its handler thread (and lets those threads observe
+/// shutdown instead of blocking in `read` forever).
+pub const READ_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(60);
+
+/// A parsed request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpRequest {
+    /// Upper-case method as sent ("GET", "POST", "DELETE", …).
+    pub method: String,
+    /// Percent-encoded path with the query string split off.
+    pub path: String,
+    /// Raw query string (without the '?'); empty when absent.
+    pub query: String,
+    /// Headers in arrival order, names lower-cased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header with this (lower-case) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A response the handler hands back; the server adds framing headers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, body: &Json) -> HttpResponse {
+        HttpResponse {
+            status,
+            content_type: "application/json",
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> HttpResponse {
+        HttpResponse {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    /// The gateway's uniform error envelope: `{"error": "..."}`.
+    pub fn error(status: u16, message: &str) -> HttpResponse {
+        HttpResponse::json(status, &Json::obj(vec![("error", Json::str(message))]))
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        100 => "Continue",
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        _ => "",
+    }
+}
+
+/// Parse failure carrying the status the peer should see.
+#[derive(Debug)]
+struct HttpError {
+    status: u16,
+    message: String,
+}
+
+fn herr(status: u16, message: impl Into<String>) -> HttpError {
+    HttpError { status, message: message.into() }
+}
+
+/// Handler: pure function from request to response; runs on connection
+/// threads, so shared state must be Sync.
+pub type HttpHandler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
+
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    requests_served: Arc<AtomicU64>,
+}
+
+impl HttpServer {
+    /// Bind and serve `handler` on `addr` (port 0 = ephemeral; read the
+    /// bound address back from [`HttpServer::addr`]).
+    pub fn start(addr: &str, handler: HttpHandler) -> anyhow::Result<Arc<Self>> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let requests_served = Arc::new(AtomicU64::new(0));
+
+        let accept_shutdown = Arc::clone(&shutdown);
+        let accept_counter = Arc::clone(&requests_served);
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("http-accept-{}", local.port()))
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if accept_shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    match stream {
+                        Ok(stream) => {
+                            let handler = Arc::clone(&handler);
+                            let counter = Arc::clone(&accept_counter);
+                            let sd = Arc::clone(&accept_shutdown);
+                            let _ = std::thread::Builder::new()
+                                .name("http-conn".to_string())
+                                .spawn(move || {
+                                    Self::serve_connection(stream, handler, counter, sd)
+                                });
+                        }
+                        Err(e) => {
+                            crate::log_warn!("http accept error: {e}");
+                        }
+                    }
+                }
+            })?;
+
+        crate::log_info!("http server listening on {local}");
+        Ok(Arc::new(HttpServer {
+            addr: local,
+            shutdown,
+            accept_thread: Mutex::new(Some(accept_thread)),
+            requests_served,
+        }))
+    }
+
+    fn serve_connection(
+        stream: TcpStream,
+        handler: HttpHandler,
+        counter: Arc<AtomicU64>,
+        shutdown: Arc<AtomicBool>,
+    ) {
+        let _ = stream.set_nodelay(true);
+        // Idle connections wake from `read` every READ_TIMEOUT: they
+        // either observe shutdown or are dropped, so `stop()` never
+        // strands a thread blocked on a silent keep-alive peer.
+        let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+        let mut reader = BufReader::new(stream);
+        // Per-connection scratch for the assembled response: one
+        // allocation reused across every request on this connection.
+        let mut write_buf: Vec<u8> = Vec::new();
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let mut req = match read_head(&mut reader) {
+                Ok(Some(req)) => req,
+                Ok(None) => return, // clean close at a request boundary
+                Err(e) if e.status == 408 => return, // idle timeout: just close
+                Err(e) => {
+                    let resp = HttpResponse::error(e.status, &e.message);
+                    let _ = write_response(&mut reader, &mut write_buf, &resp, false);
+                    return;
+                }
+            };
+            // A client waiting on 100-continue will not send the body
+            // until told to. Don't invite an upload the framing checks
+            // are about to reject (RFC 9110 §10.1.1): only confirm
+            // when the declared length fits and the framing is sane;
+            // read_body still makes the authoritative decision.
+            let framing_plausible = req.header("transfer-encoding").is_none()
+                || req.header("content-length").is_none();
+            let length_plausible = req
+                .header("content-length")
+                .map_or(true, |v| matches!(v.parse::<usize>(), Ok(n) if n <= MAX_BODY));
+            if req
+                .header("expect")
+                .map(|v| v.eq_ignore_ascii_case("100-continue"))
+                .unwrap_or(false)
+                && framing_plausible
+                && length_plausible
+            {
+                if reader
+                    .get_mut()
+                    .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            req.body = match read_body(&mut reader, &req) {
+                Ok(body) => body,
+                Err(e) => {
+                    let resp = HttpResponse::error(e.status, &e.message);
+                    let _ = write_response(&mut reader, &mut write_buf, &resp, false);
+                    return;
+                }
+            };
+            let keep_alive = wants_keep_alive(&req);
+            let resp = handler(&req);
+            counter.fetch_add(1, Ordering::Relaxed);
+            if let Err(e) = write_response(&mut reader, &mut write_buf, &resp, keep_alive) {
+                crate::log_debug!("http write error: {e}");
+                return;
+            }
+            if !keep_alive {
+                return;
+            }
+        }
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn requests_served(&self) -> u64 {
+        self.requests_served.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting. In-flight connections finish their current
+    /// request and exit on the next read; idle keep-alive connections
+    /// exit within [`READ_TIMEOUT`] (their threads wake from `read`
+    /// and observe the shutdown flag).
+    pub fn stop(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Poke the accept loop awake.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// ----------------------------------------------------------- parsing
+
+/// Read one line (up to `cap` bytes before the newline) from `r`,
+/// stripping the trailing CRLF. `Ok(None)` = EOF before any byte.
+fn read_line_limited<R: BufRead>(r: &mut R, cap: usize) -> Result<Option<String>, HttpError> {
+    let mut raw = Vec::new();
+    let got = r
+        .by_ref()
+        .take((cap + 2) as u64) // room for the CRLF itself
+        .read_until(b'\n', &mut raw)
+        .map_err(|e| {
+            use std::io::ErrorKind;
+            if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+                herr(408, "read timeout")
+            } else {
+                herr(400, format!("read error: {e}"))
+            }
+        })?;
+    if got == 0 {
+        return Ok(None);
+    }
+    if raw.last() != Some(&b'\n') {
+        if raw.len() >= cap {
+            return Err(herr(431, format!("line exceeds {cap} bytes")));
+        }
+        return Err(herr(400, "truncated request"));
+    }
+    raw.pop();
+    if raw.last() == Some(&b'\r') {
+        raw.pop();
+    }
+    if raw.len() > cap {
+        return Err(herr(431, format!("line exceeds {cap} bytes")));
+    }
+    String::from_utf8(raw).map(Some).map_err(|_| herr(400, "non-utf8 request bytes"))
+}
+
+/// Read and parse the request line + headers; the body stays unread
+/// (`req.body` comes back empty). `Ok(None)` = clean EOF before a
+/// request started (keep-alive close).
+fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpRequest>, HttpError> {
+    // Tolerate stray CRLF between pipelined requests (RFC 9112 §2.2).
+    let mut line = loop {
+        match read_line_limited(r, MAX_REQUEST_LINE)? {
+            None => return Ok(None),
+            Some(l) if l.is_empty() => continue,
+            Some(l) => break l,
+        }
+    };
+    let mut parts = line.split_whitespace();
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) => {
+                (m.to_string(), t.to_string(), v.to_string())
+            }
+            _ => return Err(herr(400, format!("malformed request line {line:?}"))),
+        };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(herr(400, format!("unsupported protocol version {version:?}")));
+    }
+    let (path, query) = match target.find('?') {
+        Some(i) => (target[..i].to_string(), target[i + 1..].to_string()),
+        None => (target, String::new()),
+    };
+    let mut headers = Vec::new();
+    loop {
+        line = match read_line_limited(r, MAX_HEADER_LINE)? {
+            None => return Err(herr(400, "connection closed mid-headers")),
+            Some(l) => l,
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(herr(431, format!("more than {MAX_HEADERS} headers")));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| herr(400, format!("malformed header {line:?}")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    // The HTTP version rides along as a pseudo-header so the keep-alive
+    // decision (and tests) can see it without widening the struct.
+    headers.push((":version".to_string(), version));
+    Ok(Some(HttpRequest { method, path, query, headers, body: Vec::new() }))
+}
+
+/// Read the request body according to its framing headers.
+fn read_body<R: BufRead>(r: &mut R, req: &HttpRequest) -> Result<Vec<u8>, HttpError> {
+    // Ambiguous framing is rejected, never resolved (RFC 9112 §6):
+    // a proxy and this server disagreeing on where a request ends is
+    // the request-smuggling precondition.
+    let lengths: Vec<&str> = req
+        .headers
+        .iter()
+        .filter(|(n, _)| n == "content-length")
+        .map(|(_, v)| v.as_str())
+        .collect();
+    if lengths.len() > 1 && lengths.iter().any(|&v| v != lengths[0]) {
+        return Err(herr(400, "conflicting content-length headers"));
+    }
+    if let Some(te) = req.header("transfer-encoding") {
+        if !lengths.is_empty() {
+            return Err(herr(400, "both transfer-encoding and content-length present"));
+        }
+        if !te.eq_ignore_ascii_case("chunked") {
+            return Err(herr(501, format!("unsupported transfer-encoding {te:?}")));
+        }
+        return read_chunked(r);
+    }
+    let len = match lengths.first() {
+        None => return Ok(Vec::new()),
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| herr(400, format!("bad content-length {v:?}")))?,
+    };
+    if len > MAX_BODY {
+        return Err(herr(413, format!("body of {len} bytes exceeds {MAX_BODY}")));
+    }
+    // Grow as bytes actually arrive: an attacker claiming a 64 MiB
+    // Content-Length and then stalling must not pin 64 MiB per
+    // connection up front.
+    let mut body = Vec::with_capacity(len.min(64 << 10));
+    let got = r
+        .by_ref()
+        .take(len as u64)
+        .read_to_end(&mut body)
+        .map_err(|e| herr(400, format!("read error: {e}")))?;
+    if got < len {
+        return Err(herr(400, "truncated body"));
+    }
+    Ok(body)
+}
+
+fn read_chunked<R: BufRead>(r: &mut R) -> Result<Vec<u8>, HttpError> {
+    let mut body = Vec::new();
+    loop {
+        let line = read_line_limited(r, 1024)?
+            .ok_or_else(|| herr(400, "connection closed mid-chunk"))?;
+        // Chunk extensions after ';' are allowed and ignored.
+        let size_str = line.split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_str, 16)
+            .map_err(|_| herr(400, format!("bad chunk size {size_str:?}")))?;
+        if body.len().saturating_add(size) > MAX_BODY {
+            return Err(herr(413, format!("chunked body exceeds {MAX_BODY} bytes")));
+        }
+        if size == 0 {
+            // Trailers (ignored) until the blank line.
+            loop {
+                match read_line_limited(r, MAX_HEADER_LINE)? {
+                    None => return Err(herr(400, "connection closed mid-trailers")),
+                    Some(l) if l.is_empty() => return Ok(body),
+                    Some(_) => continue,
+                }
+            }
+        }
+        // Incremental append for the same reason as read_body: the
+        // claimed chunk size must not drive a large upfront alloc.
+        let start = body.len();
+        let got = r
+            .by_ref()
+            .take(size as u64)
+            .read_to_end(&mut body)
+            .map_err(|e| herr(400, format!("read error: {e}")))?;
+        if got < size || body.len() != start + size {
+            return Err(herr(400, "truncated chunk"));
+        }
+        let mut crlf = [0u8; 2];
+        r.read_exact(&mut crlf).map_err(|_| herr(400, "truncated chunk"))?;
+        if &crlf != b"\r\n" {
+            return Err(herr(400, "chunk missing CRLF terminator"));
+        }
+    }
+}
+
+fn wants_keep_alive(req: &HttpRequest) -> bool {
+    let default = req.header(":version") != Some("HTTP/1.0");
+    match req.header("connection") {
+        Some(v) if v.eq_ignore_ascii_case("close") => false,
+        Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+        _ => default,
+    }
+}
+
+/// Assemble and send one response in a single `write` syscall.
+fn write_response(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    resp: &HttpResponse,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    buf.clear();
+    // write! straight into the scratch Vec: no intermediate header
+    // String on the per-request path (Vec<u8>'s io::Write is
+    // infallible).
+    let _ = write!(
+        buf,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status,
+        reason(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    buf.extend_from_slice(&resp.body);
+    let stream = reader.get_mut();
+    stream.write_all(buf)?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::client::HttpClient;
+    use std::io::Cursor;
+
+    // ------------------------------------------------ parser (no I/O)
+
+    fn head(text: &str) -> Result<Option<HttpRequest>, String> {
+        read_head(&mut Cursor::new(text.as_bytes())).map_err(|e| format!("{}:{}", e.status, e.message))
+    }
+
+    #[test]
+    fn parses_request_line_and_headers() {
+        let req = head(
+            "POST /v1/models/m:predict?debug=1 HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/models/m:predict");
+        assert_eq!(req.query, "debug=1");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.header(":version"), Some("HTTP/1.1"));
+        assert!(wants_keep_alive(&req));
+    }
+
+    #[test]
+    fn clean_eof_and_malformed_lines() {
+        assert_eq!(head("").unwrap(), None);
+        assert!(head("GET\r\n\r\n").is_err());
+        assert!(head("GET / HTTP/1.1 extra\r\n\r\n").is_err());
+        assert!(head("GET / SPDY/3\r\n\r\n").is_err());
+        assert!(head("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n").is_err());
+        // EOF mid-headers is an error, not a clean close.
+        assert!(head("GET / HTTP/1.1\r\nHost: x\r\n").is_err());
+    }
+
+    #[test]
+    fn header_limits_enforced() {
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_REQUEST_LINE));
+        let err = head(&long).unwrap_err();
+        assert!(err.starts_with("431"), "{err}");
+        let many = format!(
+            "GET / HTTP/1.1\r\n{}\r\n",
+            (0..MAX_HEADERS + 1)
+                .map(|i| format!("h{i}: v\r\n"))
+                .collect::<String>()
+        );
+        let err = head(&many).unwrap_err();
+        assert!(err.starts_with("431"), "{err}");
+    }
+
+    #[test]
+    fn keep_alive_rules() {
+        let mk = |version: &str, conn: Option<&str>| {
+            let mut headers = vec![(":version".to_string(), version.to_string())];
+            if let Some(c) = conn {
+                headers.push(("connection".to_string(), c.to_string()));
+            }
+            HttpRequest {
+                method: "GET".into(),
+                path: "/".into(),
+                query: String::new(),
+                headers,
+                body: Vec::new(),
+            }
+        };
+        assert!(wants_keep_alive(&mk("HTTP/1.1", None)));
+        assert!(!wants_keep_alive(&mk("HTTP/1.0", None)));
+        assert!(!wants_keep_alive(&mk("HTTP/1.1", Some("close"))));
+        assert!(wants_keep_alive(&mk("HTTP/1.0", Some("keep-alive"))));
+    }
+
+    #[test]
+    fn body_content_length_and_chunked() {
+        let req = head("POST / HTTP/1.1\r\nContent-Length: 5\r\n\r\n").unwrap().unwrap();
+        let mut rest = Cursor::new(b"hellomore".to_vec());
+        assert_eq!(read_body(&mut rest, &req).unwrap(), b"hello");
+
+        let req = head("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        let mut rest = Cursor::new(b"4\r\nwiki\r\n5;ext=1\r\npedia\r\n0\r\n\r\n".to_vec());
+        assert_eq!(read_body(&mut rest, &req).unwrap(), b"wikipedia");
+        // Bad chunk framing errors.
+        let mut bad = Cursor::new(b"4\r\nwikiXX".to_vec());
+        assert!(read_body(&mut bad, &req).is_err());
+        let mut bad = Cursor::new(b"zz\r\n".to_vec());
+        assert!(read_body(&mut bad, &req).is_err());
+    }
+
+    #[test]
+    fn ambiguous_framing_rejected() {
+        // Transfer-Encoding together with Content-Length (or
+        // conflicting duplicate Content-Lengths) is the request-
+        // smuggling precondition: reject, never resolve.
+        let req = head(
+            "POST / HTTP/1.1\r\nContent-Length: 4\r\nTransfer-Encoding: chunked\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        let mut rest = Cursor::new(b"0\r\n\r\n".to_vec());
+        let e = read_body(&mut rest, &req).unwrap_err();
+        assert_eq!(e.status, 400);
+        let req = head("POST / HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 9\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        let mut rest = Cursor::new(b"abcdefghi".to_vec());
+        let e = read_body(&mut rest, &req).unwrap_err();
+        assert_eq!(e.status, 400);
+        // Identical duplicates are tolerated (merged).
+        let req = head("POST / HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 4\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        let mut rest = Cursor::new(b"abcdef".to_vec());
+        assert_eq!(read_body(&mut rest, &req).unwrap(), b"abcd");
+    }
+
+    #[test]
+    fn oversized_bodies_rejected_without_reading() {
+        let req = head(&format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY + 1
+        ))
+        .unwrap()
+        .unwrap();
+        let mut rest = Cursor::new(Vec::new());
+        let e = read_body(&mut rest, &req).unwrap_err();
+        assert_eq!(e.status, 413);
+    }
+
+    // --------------------------------------------------- over TCP
+
+    fn echo_server() -> Arc<HttpServer> {
+        HttpServer::start(
+            "127.0.0.1:0",
+            Arc::new(|req: &HttpRequest| {
+                HttpResponse::text(200, &format!("{} {} {}", req.method, req.path, req.body.len()))
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn keep_alive_serves_sequential_requests() {
+        let server = echo_server();
+        let mut c = HttpClient::connect(&server.addr().to_string()).unwrap();
+        let (status, body) = c.get("/a").unwrap();
+        assert_eq!((status, body.as_slice()), (200, b"GET /a 0".as_slice()));
+        // Same connection again (keep-alive) with a body.
+        let (status, body) = c.post_json("/b", "{\"x\":1}").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"POST /b 7");
+        assert_eq!(server.requests_served(), 2);
+        server.stop();
+    }
+
+    #[test]
+    fn chunked_request_over_tcp() {
+        let server = echo_server();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        // `Connection: close` so read_to_end below sees EOF after the
+        // response instead of a kept-alive socket.
+        s.write_all(
+            b"POST /c HTTP/1.1\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n\
+              3\r\nabc\r\n2\r\nde\r\n0\r\n\r\n",
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        let mut r = BufReader::new(s);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("HTTP/1.1 200"), "{line}");
+        // Drain headers, then the body says 5 bytes arrived.
+        loop {
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            if line == "\r\n" {
+                break;
+            }
+        }
+        r.read_to_end(&mut buf).ok();
+        assert!(String::from_utf8_lossy(&buf).contains("POST /c 5"));
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_request_gets_400_and_close() {
+        let server = echo_server();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.write_all(b"NOT-HTTP\r\n\r\n").unwrap();
+        let mut text = String::new();
+        BufReader::new(s).read_to_string(&mut text).unwrap(); // server closes
+        assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+        assert!(text.contains("{\"error\":"), "{text}");
+        server.stop();
+    }
+
+    #[test]
+    fn stop_then_connect_fails_eventually() {
+        let server = echo_server();
+        let addr = server.addr();
+        server.stop();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let ok = TcpStream::connect(addr)
+            .map(|mut s| {
+                let _ = s.write_all(b"GET / HTTP/1.1\r\n\r\n");
+                let mut buf = [0u8; 16];
+                matches!(s.read(&mut buf), Ok(n) if n > 0)
+            })
+            .unwrap_or(false);
+        assert!(!ok, "server still serving after stop");
+    }
+}

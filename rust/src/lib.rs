@@ -31,6 +31,7 @@
 
 pub mod base;
 pub mod batching;
+pub mod http;
 pub mod inference;
 pub mod lifecycle;
 pub mod rpc;

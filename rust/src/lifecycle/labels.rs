@@ -13,12 +13,18 @@
 //! * resolution is a read-lock map lookup, consulted only for labeled
 //!   requests — unlabeled lookups never touch it.
 //!
-//! The serving guarantee is **set-time only** (checked against a
-//! snapshot of the ready set): if the labeled version later unloads,
-//! labeled lookups fail loudly ("no version N") until an operator
-//! re-issues `SetVersionLabel` — the resolver does not track the
-//! lifecycle. Automatic invalidation/remap on unload (and label
-//! persistence in the TFS² store) is a ROADMAP follow-on.
+//! The resolver itself does not watch the lifecycle; the server keeps
+//! labels consistent with it from the outside:
+//! * the unload path calls [`LabelResolver::remove_version`] (an
+//!   event-bus subscription in `server::builder`), so labels never
+//!   dangle on an unloaded version — a labeled lookup afterwards
+//!   reports "no version labeled …";
+//! * `SetVersionLabel` re-checks the ready set after the insert and
+//!   uses [`LabelResolver::rollback`] (compare-and-rollback) if the
+//!   version unloaded concurrently, restoring the prior mapping when
+//!   it still serves.
+//!
+//! Label persistence in the TFS² store is a ROADMAP follow-on.
 
 use anyhow::{bail, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -38,8 +44,15 @@ impl LabelResolver {
     /// Attach (or move) `label` on `model` to `version`. `serving` is
     /// the caller's current ready-version set; labeling anything
     /// outside it is rejected so labels always point at servable
-    /// versions.
-    pub fn set(&self, model: &str, label: &str, version: u64, serving: &[u64]) -> Result<()> {
+    /// versions. Returns the version the label previously pointed at
+    /// (so callers racing an unload can [`LabelResolver::rollback`]).
+    pub fn set(
+        &self,
+        model: &str,
+        label: &str,
+        version: u64,
+        serving: &[u64],
+    ) -> Result<Option<u64>> {
         if label.is_empty() {
             bail!("model '{model}': empty version label");
         }
@@ -49,13 +62,40 @@ impl LabelResolver {
                  serving (serving versions: {serving:?})"
             );
         }
-        self.map
+        Ok(self
+            .map
             .write()
             .unwrap()
             .entry(model.to_string())
             .or_default()
-            .insert(label.to_string(), version);
-        Ok(())
+            .insert(label.to_string(), version))
+    }
+
+    /// Compare-and-rollback for the set-time unload race: if `label`
+    /// still points at `version`, restore it to `prev` (or drop it
+    /// when `prev` is `None`). A no-op when a concurrent admin already
+    /// moved the label — their acknowledged mapping is never
+    /// clobbered. Returns whether anything changed.
+    pub fn rollback(&self, model: &str, label: &str, version: u64, prev: Option<u64>) -> bool {
+        let mut map = self.map.write().unwrap();
+        let Some(labels) = map.get_mut(model) else {
+            return false;
+        };
+        if labels.get(label) != Some(&version) {
+            return false;
+        }
+        match prev {
+            Some(p) => {
+                labels.insert(label.to_string(), p);
+            }
+            None => {
+                labels.remove(label);
+                if labels.is_empty() {
+                    map.remove(model);
+                }
+            }
+        }
+        true
     }
 
     /// Resolve `label` on `model` to its pinned version.
@@ -83,6 +123,30 @@ impl LabelResolver {
             .get_mut(model)
             .map(|labels| labels.remove(label).is_some())
             .unwrap_or(false)
+    }
+
+    /// Drop every label of `model` pointing at `version` and return
+    /// them (sorted by label). The server's unload path calls this so
+    /// labels never dangle on an unloaded version — a labeled lookup
+    /// after GC reports "no version labeled …" instead of failing on a
+    /// version that quietly left the serving map.
+    pub fn remove_version(&self, model: &str, version: u64) -> Vec<String> {
+        let mut map = self.map.write().unwrap();
+        let Some(labels) = map.get_mut(model) else {
+            return Vec::new();
+        };
+        let doomed: Vec<String> = labels
+            .iter()
+            .filter(|(_, &v)| v == version)
+            .map(|(k, _)| k.clone())
+            .collect();
+        for label in &doomed {
+            labels.remove(label);
+        }
+        if labels.is_empty() {
+            map.remove(model);
+        }
+        doomed
     }
 
     /// All `(label, version)` pairs for a model, sorted by label.
@@ -168,6 +232,48 @@ mod tests {
         assert!(r.remove("m", "canary"));
         assert!(!r.remove("m", "canary"));
         assert!(r.resolve("m", "canary").is_err());
+    }
+
+    #[test]
+    fn rollback_is_compare_and_swap() {
+        let r = LabelResolver::new();
+        r.set("m", "stable", 1, &[1, 2, 3]).unwrap();
+        // Move stable→2, then roll the move back: v1 restored.
+        assert_eq!(r.set("m", "stable", 2, &[1, 2, 3]).unwrap(), Some(1));
+        assert!(r.rollback("m", "stable", 2, Some(1)));
+        assert_eq!(r.resolve("m", "stable").unwrap(), 1);
+        // A label that moved on (concurrent admin) is left alone.
+        r.set("m", "stable", 3, &[1, 2, 3]).unwrap();
+        assert!(!r.rollback("m", "stable", 2, Some(1)));
+        assert_eq!(r.resolve("m", "stable").unwrap(), 3);
+        // Rollback with no prior mapping drops the label.
+        assert_eq!(r.set("m", "fresh", 2, &[1, 2, 3]).unwrap(), None);
+        assert!(r.rollback("m", "fresh", 2, None));
+        assert!(r.resolve("m", "fresh").is_err());
+        // Unknown model: no-op.
+        assert!(!r.rollback("ghost", "stable", 1, None));
+    }
+
+    #[test]
+    fn remove_version_drops_every_label_on_it() {
+        let r = LabelResolver::new();
+        r.set("m", "stable", 1, &[1, 2]).unwrap();
+        r.set("m", "canary", 2, &[1, 2]).unwrap();
+        r.set("m", "head", 2, &[1, 2]).unwrap();
+        // GC of v2 drops both of its labels, leaves v1's alone.
+        assert_eq!(
+            r.remove_version("m", 2),
+            vec!["canary".to_string(), "head".to_string()]
+        );
+        assert!(r.resolve("m", "canary").is_err());
+        assert!(r.resolve("m", "head").is_err());
+        assert_eq!(r.resolve("m", "stable").unwrap(), 1);
+        // No labels on the version / unknown model: empty, no panic.
+        assert!(r.remove_version("m", 2).is_empty());
+        assert!(r.remove_version("ghost", 1).is_empty());
+        // GC of the last label removes the model entry entirely.
+        assert_eq!(r.remove_version("m", 1), vec!["stable".to_string()]);
+        assert!(r.labels("m").is_empty());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! ```text
 //! tensorserve_server --config server.json
 //! tensorserve_server --models mlp_classifier,toy_table:table --port 8500
+//! tensorserve_server --models mlp_classifier --http_port 8501   # + REST
 //! ```
 //!
 //! With `--config`, the JSON file is the full `ModelServerConfig`
@@ -25,6 +26,11 @@ fn main() -> anyhow::Result<()> {
     );
     flags.flag("config", "", "path to a JSON ModelServerConfig");
     flags.flag("port", "8500", "listen port (overrides config)");
+    flags.flag(
+        "http_port",
+        "0",
+        "HTTP/REST gateway port (0 = disabled unless the config sets http_addr)",
+    );
     flags.flag(
         "models",
         "mlp_classifier,mlp_regressor,toy_table:table",
@@ -69,9 +75,16 @@ fn main() -> anyhow::Result<()> {
         ServerConfig::load(&PathBuf::from(parsed.get("config")))?
     };
     config.port = parsed.get_u64("port") as u16;
+    let http_port = parsed.get_u64("http_port");
+    if http_port != 0 {
+        config.http_addr = Some(format!("0.0.0.0:{http_port}"));
+    }
 
     let server = ModelServer::start(config)?;
     eprintln!("tensorserve_server listening on {}", server.addr());
+    if let Some(http) = server.http_addr() {
+        eprintln!("REST gateway listening on http://{http}/v1/models/...");
+    }
     let ready = server.wait_until_ready(Duration::from_secs(300))?;
     eprintln!("models ready: {ready:?}");
 

@@ -47,6 +47,9 @@ pub enum Request {
     SetAspired { model: String, versions: Vec<u64> },
     /// Admin: attach (or move) a version label to a serving version.
     SetVersionLabel { model: String, label: String, version: u64 },
+    /// Admin: detach a version label (the inverse of `SetVersionLabel`;
+    /// exposed over REST as `DELETE /v1/models/{name}/labels/{label}`).
+    DeleteVersionLabel { model: String, label: String },
     /// Admin: which versions of `model` are in which state?
     ModelStatus { model: String },
     /// Admin: server metrics/status dump.
@@ -583,6 +586,11 @@ impl Request {
                 put_str(out, label);
                 put_u64(out, *version);
             }
+            Request::DeleteVersionLabel { model, label } => {
+                out.push(11);
+                put_str(out, model);
+                put_str(out, label);
+            }
         }
     }
 
@@ -631,6 +639,7 @@ impl Request {
                 label: r.str()?,
                 version: r.u64()?,
             },
+            11 => Request::DeleteVersionLabel { model: r.str()?, label: r.str()? },
             t => bail!("unknown request tag {t}"),
         };
         r.done()?;
@@ -959,6 +968,10 @@ mod tests {
             label: "canary".into(),
             version: 7,
         });
+        roundtrip_req(Request::DeleteVersionLabel {
+            model: "m".into(),
+            label: "canary".into(),
+        });
         roundtrip_req(Request::Lookup { table: "t".into(), key: "k".into() });
         roundtrip_req(Request::SetAspired { model: "m".into(), versions: vec![1, 2, 9] });
         roundtrip_req(Request::SetAspired { model: "m".into(), versions: vec![] });
@@ -1161,6 +1174,11 @@ mod tests {
         .encode();
         for cut in 0..full.len() {
             assert!(Request::decode(&full[..cut]).is_err(), "request cut={cut}");
+        }
+        let full = Request::DeleteVersionLabel { model: "m".into(), label: "stable".into() }
+            .encode();
+        for cut in 0..full.len() {
+            assert!(Request::decode(&full[..cut]).is_err(), "delete-label cut={cut}");
         }
         let spec = ArtifactSpec::synthetic_classifier("s", 1, 4, 2);
         let full = Response::ModelMetadata {

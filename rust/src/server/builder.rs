@@ -10,11 +10,18 @@
 //!              │     over AVM handles (ModelSpec: version or label,
 //!              │     signatures validated) + GetModelMetadata
 //!              └──► admin: SetAspired (RPC source), SetVersionLabel,
-//!                   ModelStatus, Status
+//!                   DeleteVersionLabel, ModelStatus, Status
+//! HTTP gateway ──► the same ServerCore::handle over JSON
+//!                  (http::router), when `http_addr` is configured
 //! ```
+//!
+//! Version labels are garbage-collected on the unload path: an event-
+//! bus subscription drops any label whose version leaves serving, so
+//! labels never dangle on unloaded versions.
 
 use super::config::ServerConfig;
 use crate::base::aspired::{AspiredVersionsCallback, Source};
+use crate::http::server::HttpServer;
 use crate::inference::classify::{classify, ClassifyRequest};
 use crate::inference::example::Feature;
 use crate::inference::logger::{digest_f32s, RequestLogger};
@@ -58,6 +65,8 @@ pub struct ServerCore {
 pub struct ModelServer {
     core: Arc<ServerCore>,
     rpc: Arc<RpcServer>,
+    /// The REST gateway, when `http_addr` is configured.
+    http: Option<Arc<HttpServer>>,
 }
 
 impl ModelServer {
@@ -139,17 +148,49 @@ impl ModelServer {
             logger: Arc::new(RequestLogger::new(0.1, 4096, 42)),
         });
 
+        // Label GC: drop labels whose version leaves serving, so a
+        // labeled lookup after an unload reports "no version labeled"
+        // instead of dangling on a version the serving map no longer
+        // holds (closes the set-time-only race in `SetVersionLabel`).
+        let gc_labels = Arc::clone(&core.labels);
+        core.avm.basic().bus().subscribe(Arc::new(move |ev| {
+            use crate::lifecycle::harness::State;
+            if matches!(ev.state, State::Unloading | State::Disabled | State::Error(_)) {
+                for label in gc_labels.remove_version(&ev.id.name, ev.id.version) {
+                    crate::log_info!(
+                        "label GC: dropped '{label}' from {} (version {} left serving)",
+                        ev.id.name,
+                        ev.id.version
+                    );
+                }
+            }
+        }));
+
         // RPC front end.
         let handler_core = Arc::clone(&core);
         let rpc = RpcServer::start(
             &format!("0.0.0.0:{}", config.port),
             Arc::new(move |req| handler_core.handle(req)),
         )?;
-        Ok(Arc::new(ModelServer { core, rpc }))
+
+        // HTTP/REST gateway: same core, JSON wire format.
+        let http = match &core.config.http_addr {
+            Some(addr) => Some(HttpServer::start(
+                addr,
+                crate::http::router::gateway(Arc::clone(&core)),
+            )?),
+            None => None,
+        };
+        Ok(Arc::new(ModelServer { core, rpc, http }))
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.rpc.addr()
+    }
+
+    /// Bound address of the REST gateway, when one is configured.
+    pub fn http_addr(&self) -> Option<std::net::SocketAddr> {
+        self.http.as_ref().map(|h| h.addr())
     }
 
     pub fn core(&self) -> &Arc<ServerCore> {
@@ -193,6 +234,9 @@ impl ModelServer {
 
     pub fn stop(&self) {
         self.rpc.stop();
+        if let Some(http) = &self.http {
+            http.stop();
+        }
     }
 }
 
@@ -231,6 +275,12 @@ impl ServerCore {
             Request::Predict { spec, signature, inputs } => {
                 let model = spec.name.clone();
                 let preq = PredictRequest { spec, signature, inputs };
+                // Batch-size stats for /metrics and the Status dump.
+                if let Some((_, input)) = preq.inputs.first() {
+                    self.registry
+                        .histogram("predict.batch_rows")
+                        .record(input.batch() as u64);
+                }
                 let r = predict(&labeled, &preq);
                 // The decoded request buffers came from the global
                 // pool; hand them back now that inference consumed them.
@@ -303,11 +353,50 @@ impl ServerCore {
                 (
                     "set_version_label",
                     match self.labels.set(&model, &label, version, &serving) {
-                        Ok(()) => Response::Ack,
+                        Ok(prev) => {
+                            // The ready-set snapshot above can race a
+                            // concurrent unload whose GC event fired
+                            // before our insert; re-check so the label
+                            // never outlives the version it points at.
+                            // Best-effort: an unload that has published
+                            // Unloading but not yet left the serving
+                            // map can still slip past both checks —
+                            // its Disabled-event GC is the backstop
+                            // that keeps the end state consistent
+                            // (label dropped, never dangling).
+                            if self.avm.basic().ready_versions(&model).contains(&version) {
+                                Response::Ack
+                            } else {
+                                // Compare-and-rollback: restore the
+                                // prior mapping if that version still
+                                // serves, else drop the label; a
+                                // concurrent re-label is left alone.
+                                let restore = prev.filter(|p| {
+                                    self.avm.basic().ready_versions(&model).contains(p)
+                                });
+                                self.labels.rollback(&model, &label, version, restore);
+                                Response::Error {
+                                    message: format!(
+                                        "cannot label {model}:{version} as '{label}': \
+                                         version unloaded concurrently"
+                                    ),
+                                }
+                            }
+                        }
                         Err(e) => Response::Error { message: e.to_string() },
                     },
                 )
             }
+            Request::DeleteVersionLabel { model, label } => (
+                "delete_version_label",
+                if self.labels.remove(&model, &label) {
+                    Response::Ack
+                } else {
+                    Response::Error {
+                        message: format!("model '{model}' has no version labeled '{label}'"),
+                    }
+                },
+            ),
             Request::Lookup { table, key } => (
                 "lookup",
                 match self
@@ -444,6 +533,7 @@ mod tests {
     fn test_config() -> ServerConfig {
         ServerConfig {
             port: 0,
+            http_addr: None,
             artifacts_root: default_artifacts_root(),
             poll_interval: Some(Duration::from_millis(50)),
             availability_preserving: true,
@@ -560,6 +650,7 @@ mod tests {
     fn empty_config() -> ServerConfig {
         ServerConfig {
             port: 0,
+            http_addr: None,
             artifacts_root: std::env::temp_dir(),
             poll_interval: None,
             availability_preserving: true,
@@ -734,6 +825,110 @@ mod tests {
             .call_ok(&Request::GetModelMetadata { spec: both })
             .unwrap_err();
         assert!(err.to_string().contains("use one"), "{err}");
+        server.stop();
+    }
+
+    #[test]
+    fn delete_version_label_over_rpc() {
+        let server = synthetic_server(&[1]);
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+        client
+            .call_ok(&Request::SetVersionLabel {
+                model: "syn".into(),
+                label: "stable".into(),
+                version: 1,
+            })
+            .unwrap();
+        // Labeled predict works while the label exists…
+        client
+            .call_ok(&Request::Predict {
+                spec: crate::inference::ModelSpec::with_label("syn", "stable"),
+                signature: String::new(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+            })
+            .unwrap();
+        // …deleting it is an Ack, and the label is gone.
+        client
+            .call_ok(&Request::DeleteVersionLabel {
+                model: "syn".into(),
+                label: "stable".into(),
+            })
+            .unwrap();
+        let err = client
+            .call_ok(&Request::Predict {
+                spec: crate::inference::ModelSpec::with_label("syn", "stable"),
+                signature: String::new(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("stable"), "{err}");
+        // Deleting a label that does not exist is a clear error.
+        let err = client
+            .call_ok(&Request::DeleteVersionLabel {
+                model: "syn".into(),
+                label: "stable".into(),
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("no version labeled"), "{err}");
+        server.stop();
+    }
+
+    #[test]
+    fn labels_gc_when_their_version_unloads() {
+        let server = synthetic_server(&[1, 2]);
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+        for (label, version) in [("stable", 1u64), ("canary", 2)] {
+            client
+                .call_ok(&Request::SetVersionLabel {
+                    model: "syn".into(),
+                    label: label.into(),
+                    version,
+                })
+                .unwrap();
+        }
+        // Unload v1: its label must be dropped, not left dangling.
+        server
+            .avm()
+            .basic()
+            .unload_and_wait(ServableId::new("syn", 1), Duration::from_secs(30))
+            .unwrap();
+        let err = client
+            .call_ok(&Request::Predict {
+                spec: crate::inference::ModelSpec::with_label("syn", "stable"),
+                signature: String::new(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+            })
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("no version labeled"),
+            "stale label survived unload: {err}"
+        );
+        // v2's label is untouched.
+        let resp = client
+            .call_ok(&Request::Predict {
+                spec: crate::inference::ModelSpec::with_label("syn", "canary"),
+                signature: String::new(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+            })
+            .unwrap();
+        match resp {
+            Response::Predict { model_version, .. } => assert_eq!(model_version, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Metadata agrees: no version reports the GC'd label.
+        match client
+            .call_ok(&Request::GetModelMetadata {
+                spec: crate::inference::ModelSpec::latest("syn"),
+            })
+            .unwrap()
+        {
+            Response::ModelMetadata { versions, .. } => {
+                assert!(versions
+                    .iter()
+                    .all(|v| !v.labels.contains(&"stable".to_string())));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
         server.stop();
     }
 

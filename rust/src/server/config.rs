@@ -4,6 +4,7 @@
 //! ```json
 //! {
 //!   "port": 8500,
+//!   "http_addr": "0.0.0.0:8501",
 //!   "artifacts_root": "artifacts",
 //!   "poll_interval_ms": 500,
 //!   "version_policy": "availability_preserving",
@@ -38,6 +39,9 @@ pub struct ModelConfig {
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub port: u16,
+    /// Listen address for the HTTP/REST gateway ("0.0.0.0:8501";
+    /// ":0" ports bind ephemerally). `None` = RPC only.
+    pub http_addr: Option<String>,
     pub artifacts_root: PathBuf,
     /// `None` = manual polling (tests).
     pub poll_interval: Option<Duration>,
@@ -53,6 +57,7 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             port: 0,
+            http_addr: None,
             artifacts_root: crate::runtime::artifacts::default_artifacts_root(),
             poll_interval: Some(Duration::from_millis(500)),
             availability_preserving: true,
@@ -68,6 +73,7 @@ impl ServerConfig {
     pub fn from_conf(conf: &Conf) -> Result<ServerConfig> {
         conf.allow_keys(&[
             "port",
+            "http_addr",
             "artifacts_root",
             "poll_interval_ms",
             "version_policy",
@@ -119,6 +125,11 @@ impl ServerConfig {
         }
         Ok(ServerConfig {
             port: conf.u64_or("port", 0) as u16,
+            http_addr: conf
+                .root()
+                .get("http_addr")
+                .and_then(|v| v.as_str())
+                .map(str::to_string),
             artifacts_root,
             poll_interval: if poll_ms == 0 {
                 None
@@ -143,6 +154,7 @@ mod tests {
 
     const SAMPLE: &str = r#"{
       "port": 8500,
+      "http_addr": "0.0.0.0:8501",
       "artifacts_root": "/a",
       "poll_interval_ms": 100,
       "version_policy": "resource_preserving",
@@ -157,6 +169,7 @@ mod tests {
     fn parse_full_config() {
         let cfg = ServerConfig::from_conf(&Conf::parse(SAMPLE, "t").unwrap()).unwrap();
         assert_eq!(cfg.port, 8500);
+        assert_eq!(cfg.http_addr.as_deref(), Some("0.0.0.0:8501"));
         assert!(!cfg.availability_preserving);
         assert_eq!(cfg.poll_interval, Some(Duration::from_millis(100)));
         assert_eq!(cfg.models.len(), 3);
@@ -193,5 +206,6 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.poll_interval, None);
+        assert_eq!(cfg.http_addr, None); // RPC-only unless configured
     }
 }

@@ -37,6 +37,7 @@ pub struct Cluster {
 fn empty_job_config(artifacts_root: &PathBuf) -> ServerConfig {
     ServerConfig {
         port: 0,
+        http_addr: None,
         artifacts_root: artifacts_root.clone(),
         // Jobs get models only via SetAspired (the RPC source);
         // fast polling so new versions appear promptly.

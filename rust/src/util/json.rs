@@ -113,7 +113,7 @@ impl Json {
     // ------------------------------------------------------------ parsing
 
     pub fn parse(input: &str) -> Result<Json, ParseError> {
-        let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: input.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -150,7 +150,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // NaN/Inf have no JSON representation; emit null
+                    // (what JSON.stringify does) rather than producing
+                    // output no parser accepts.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -224,14 +229,40 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum container nesting the parser accepts. JSON is now
+/// internet-facing (the REST gateway), so recursion depth is bounded
+/// instead of letting `[[[[…` run the stack out.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> ParseError {
         ParseError { offset: self.pos, msg: msg.to_string() }
+    }
+
+    /// Bump the container depth; errors abort the whole parse, so the
+    /// counter only needs decrementing on success exits.
+    fn enter(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting deeper than 128 levels"));
+        }
+        Ok(())
+    }
+
+    /// Four hex digits starting at byte `at`.
+    fn hex4(&self, at: usize) -> Result<u32, ParseError> {
+        let raw = self
+            .bytes
+            .get(at..at + 4)
+            .ok_or_else(|| self.err("bad \\u escape"))?;
+        let hex = std::str::from_utf8(raw).map_err(|_| self.err("bad \\u escape"))?;
+        u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))
     }
 
     fn peek(&self) -> Option<u8> {
@@ -298,17 +329,34 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            if self.pos + 4 >= self.bytes.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            // BMP only (sufficient for our artifacts).
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            // self.pos is at the 'u'; hex follows.
+                            let hi = self.hex4(self.pos + 1)?;
                             self.pos += 4;
+                            let c = if (0xD800..0xDC00).contains(&hi) {
+                                // High surrogate: combine with a
+                                // following \uXXXX low surrogate;
+                                // a lone half decodes as U+FFFD.
+                                let lo = if self.bytes.get(self.pos + 1) == Some(&b'\\')
+                                    && self.bytes.get(self.pos + 2) == Some(&b'u')
+                                {
+                                    self.hex4(self.pos + 3).ok()
+                                } else {
+                                    None
+                                };
+                                match lo {
+                                    Some(lo) if (0xDC00..0xE000).contains(&lo) => {
+                                        self.pos += 6;
+                                        let cp = 0x10000
+                                            + ((hi - 0xD800) << 10)
+                                            + (lo - 0xDC00);
+                                        char::from_u32(cp).unwrap_or('\u{fffd}')
+                                    }
+                                    _ => '\u{fffd}',
+                                }
+                            } else {
+                                char::from_u32(hi).unwrap_or('\u{fffd}')
+                            };
+                            s.push(c);
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -357,11 +405,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, ParseError> {
+        self.enter()?;
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -372,6 +422,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -380,11 +431,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, ParseError> {
+        self.enter()?;
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -399,6 +452,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(map));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -471,6 +525,80 @@ mod tests {
         assert_eq!(v.get("f").unwrap().as_f64(), Some(3.5));
         assert_eq!(v.get("b").unwrap().as_bool(), Some(false));
         assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_null() {
+        // NaN/Inf must never emit invalid JSON (the REST gateway
+        // serializes model outputs straight onto the wire).
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        let v = Json::Arr(vec![Json::Num(1.5), Json::Num(f64::NAN)]);
+        assert_eq!(
+            Json::parse(&v.to_string()).unwrap(),
+            Json::Arr(vec![Json::Num(1.5), Json::Null])
+        );
+        // Large-but-finite values stay numeric.
+        assert_eq!(Json::parse(&Json::Num(1e300).to_string()).unwrap(), Json::Num(1e300));
+    }
+
+    #[test]
+    fn deep_nesting_rejected() {
+        // One level under the guard parses…
+        let deep = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&deep).is_ok());
+        // …past it is an error, not a stack overflow. Mixed
+        // array/object nesting counts against the same budget.
+        let too_deep = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+        let err = Json::parse(&too_deep).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        let objs = format!("{}1{}", "{\"k\":[".repeat(80), "]}".repeat(80));
+        assert!(Json::parse(&objs).is_err());
+    }
+
+    #[test]
+    fn truncated_inputs_error_cleanly() {
+        for cut in [
+            "{\"a\": [1,",
+            "[[",
+            "[1, 2",
+            "\"abc",
+            "\"ab\\",
+            "\"ab\\u00",
+            "{\"a\"",
+            "{\"a\":",
+            "-",
+            "1e",
+        ] {
+            assert!(Json::parse(cut).is_err(), "accepted truncated {cut:?}");
+        }
+        // Truncating a real document at every byte must error, never
+        // panic.
+        let full = r#"{"a": [1, 2.5, "xé"], "b": {"c": true}}"#;
+        for cut in 0..full.len() {
+            if full.is_char_boundary(cut) {
+                assert!(Json::parse(&full[..cut]).is_err(), "cut={cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn surrogate_pair_escapes() {
+        // A surrogate pair decodes to one astral-plane scalar.
+        let v = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str(), Some("\u{1f600}"));
+        // Lone halves decode as U+FFFD, never invalid UTF-8.
+        assert_eq!(Json::parse(r#""\ud83dx""#).unwrap().as_str(), Some("\u{fffd}x"));
+        assert_eq!(Json::parse(r#""\ude00""#).unwrap().as_str(), Some("\u{fffd}"));
+        // High surrogate followed by a non-surrogate escape: the
+        // second escape survives on its own.
+        assert_eq!(
+            Json::parse(r#""\ud83dA""#).unwrap().as_str(),
+            Some("\u{fffd}A")
+        );
+        // BMP escapes still work.
+        assert_eq!(Json::parse("\"\\u00e9\"").unwrap().as_str(), Some("é"));
     }
 
     #[test]

@@ -122,6 +122,11 @@ impl Histogram {
         self.max.load(Ordering::Relaxed)
     }
 
+    /// Sum of all recorded samples (the `_sum` of a summary metric).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
     /// Quantile in [0,1]; returns the upper bound of the containing
     /// bucket (<= ~3% relative error).
     pub fn quantile(&self, q: f64) -> u64 {
@@ -242,6 +247,44 @@ impl Registry {
         )
     }
 
+    /// Prometheus-style text exposition (what the HTTP gateway's
+    /// `/metrics` endpoint serves): one `prefix_name value` line per
+    /// counter/gauge, and a summary per histogram (`{quantile=…}`
+    /// lines plus `_sum`/`_count`). Metric names are sanitized to
+    /// `[a-zA-Z0-9_]` so dotted registry names ("rpc.predict.requests")
+    /// become legal exposition names.
+    pub fn render_prometheus(&self, prefix: &str) -> String {
+        fn sanitize(name: &str) -> String {
+            name.chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect()
+        }
+        let mut out = String::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE {prefix}_{n} counter\n"));
+            out.push_str(&format!("{prefix}_{n} {}\n", c.get()));
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE {prefix}_{n} gauge\n"));
+            out.push_str(&format!("{prefix}_{n} {}\n", g.get()));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE {prefix}_{n} summary\n"));
+            for q in [0.5, 0.9, 0.99, 0.999] {
+                out.push_str(&format!(
+                    "{prefix}_{n}{{quantile=\"{q}\"}} {}\n",
+                    h.quantile(q)
+                ));
+            }
+            out.push_str(&format!("{prefix}_{n}_sum {}\n", h.sum()));
+            out.push_str(&format!("{prefix}_{n}_count {}\n", h.count()));
+        }
+        out
+    }
+
     /// Text dump of everything (counters, gauges, histogram summaries).
     pub fn dump(&self) -> String {
         let mut out = String::new();
@@ -353,6 +396,45 @@ mod tests {
         let dump = r.dump();
         assert!(dump.contains("counter x 2"));
         assert!(dump.contains("histogram lat"));
+    }
+
+    #[test]
+    fn prometheus_exposition() {
+        let r = Registry::new();
+        r.counter("rpc.predict.requests").add(3);
+        r.gauge("tensor_pool.bytes_pooled").set(-7);
+        r.histogram("predict.batch_rows").record(8);
+        r.histogram("predict.batch_rows").record(16);
+        let text = r.render_prometheus("tensorserve");
+        assert!(text.contains("# TYPE tensorserve_rpc_predict_requests counter\n"), "{text}");
+        assert!(text.contains("tensorserve_rpc_predict_requests 3\n"), "{text}");
+        assert!(text.contains("tensorserve_tensor_pool_bytes_pooled -7\n"), "{text}");
+        assert!(text.contains("tensorserve_predict_batch_rows_count 2\n"), "{text}");
+        assert!(text.contains("tensorserve_predict_batch_rows_sum 24\n"), "{text}");
+        assert!(
+            text.contains("tensorserve_predict_batch_rows{quantile=\"0.5\"} 8\n"),
+            "{text}"
+        );
+        // Every line is either a comment or `name value...` with a
+        // sanitized name.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#')
+                    || line
+                        .split_whitespace()
+                        .next()
+                        .unwrap()
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric()
+                            || c == '_'
+                            || c == '{'
+                            || c == '}'
+                            || c == '='
+                            || c == '"'
+                            || c == '.'),
+                "bad line {line:?}"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,367 @@
+//! End-to-end tests for the HTTP/REST gateway: a real `ModelServer`
+//! with both listeners up, a synthetic multi-head servable, and raw
+//! HTTP against the REST surface — predict (row + column formats),
+//! classify/regress, labeled addressing, metadata GETs, label DELETE,
+//! health/metrics, and RPC-vs-REST parity on the same model.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tensorserve::base::servable::ServableId;
+use tensorserve::base::tensor::Tensor;
+use tensorserve::http::client::HttpClient;
+use tensorserve::inference::ModelSpec;
+use tensorserve::rpc::client::RpcClient;
+use tensorserve::rpc::proto::{Request, Response};
+use tensorserve::runtime::artifacts::ArtifactSpec;
+use tensorserve::runtime::hlo_servable::synthetic_loader;
+use tensorserve::runtime::pjrt::OutTensor;
+use tensorserve::server::builder::ModelServer;
+use tensorserve::server::config::ServerConfig;
+use tensorserve::util::json::Json;
+
+/// A running server (RPC + REST) with synthetic "syn" versions loaded.
+fn gateway_server(versions: &[u64]) -> Arc<ModelServer> {
+    let server = ModelServer::start(ServerConfig {
+        http_addr: Some("127.0.0.1:0".to_string()),
+        poll_interval: None,
+        artifacts_root: std::env::temp_dir(),
+        models: Vec::new(),
+        ..Default::default()
+    })
+    .unwrap();
+    for &v in versions {
+        server
+            .avm()
+            .basic()
+            .load_and_wait(
+                ServableId::new("syn", v),
+                synthetic_loader(ArtifactSpec::synthetic_multi_head("syn", v, 8, 3)),
+                Duration::from_secs(30),
+            )
+            .unwrap();
+    }
+    server
+}
+
+fn http(server: &ModelServer) -> HttpClient {
+    HttpClient::connect(&server.http_addr().unwrap().to_string()).unwrap()
+}
+
+fn json_of(body: &[u8]) -> Json {
+    Json::parse(std::str::from_utf8(body).unwrap()).unwrap()
+}
+
+/// Two 8-wide rows used across the predict tests.
+fn rows() -> Vec<Vec<f64>> {
+    (0..2)
+        .map(|i| (0..8).map(|j| ((i * 8 + j) as f64) * 0.125).collect())
+        .collect()
+}
+
+fn rows_json() -> String {
+    let rows: Vec<String> = rows()
+        .iter()
+        .map(|r| {
+            format!(
+                "[{}]",
+                r.iter().map(f64::to_string).collect::<Vec<_>>().join(",")
+            )
+        })
+        .collect();
+    format!("[{}]", rows.join(","))
+}
+
+#[test]
+fn predict_row_format_matches_binary_rpc() {
+    let server = gateway_server(&[2]);
+    let mut c = http(&server);
+
+    let (status, body) =
+        c.post_json("/v1/models/syn:predict", &format!("{{\"instances\": {}}}", rows_json()))
+            .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let json = json_of(&body);
+    assert_eq!(json.get("model_version").unwrap().as_u64(), Some(2));
+    let preds = json.get("predictions").unwrap().as_arr().unwrap();
+    assert_eq!(preds.len(), 2);
+
+    // The same rows over the binary RPC path must produce the same
+    // numbers — one ServerCore, two wire formats.
+    let tensor_rows: Vec<Vec<f32>> = rows()
+        .iter()
+        .map(|r| r.iter().map(|&x| x as f32).collect())
+        .collect();
+    let mut rpc = RpcClient::connect(&server.addr().to_string()).unwrap();
+    let resp = rpc
+        .call_ok(&Request::Predict {
+            spec: ModelSpec::latest("syn"),
+            signature: String::new(),
+            inputs: vec![("x".into(), Tensor::matrix(tensor_rows).unwrap())],
+        })
+        .unwrap();
+    let (rpc_log_probs, rpc_classes) = match resp {
+        Response::Predict { outputs, .. } => {
+            let lp = match &outputs[0] {
+                (name, OutTensor::F32(t)) if name.as_str() == "log_probs" => t.clone(),
+                other => panic!("unexpected {other:?}"),
+            };
+            let cl = match &outputs[1] {
+                (name, OutTensor::I32(t)) if name.as_str() == "class" => t.clone(),
+                other => panic!("unexpected {other:?}"),
+            };
+            (lp, cl)
+        }
+        other => panic!("unexpected {other:?}"),
+    };
+    for (i, pred) in preds.iter().enumerate() {
+        assert_eq!(
+            pred.get("class").unwrap().as_i64().unwrap() as i32,
+            rpc_classes.data()[i],
+            "row {i} class"
+        );
+        let http_lp: Vec<f64> = pred
+            .get("log_probs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        for (a, b) in http_lp.iter().zip(rpc_log_probs.row(i)) {
+            assert!((a - *b as f64).abs() < 1e-6, "row {i}: {a} vs {b}");
+        }
+    }
+    server.stop();
+}
+
+#[test]
+fn predict_column_format_and_versioned_paths() {
+    let server = gateway_server(&[1, 2]);
+    let mut c = http(&server);
+
+    // Column format: named tensor in, full tensors out.
+    let (status, body) = c
+        .post_json(
+            "/v1/models/syn:predict",
+            &format!("{{\"inputs\": {{\"x\": {}}}}}", rows_json()),
+        )
+        .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let json = json_of(&body);
+    let outs = json.get("outputs").unwrap();
+    assert_eq!(outs.get("class").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(
+        outs.get("log_probs").unwrap().as_arr().unwrap()[0]
+            .as_arr()
+            .unwrap()
+            .len(),
+        3
+    );
+
+    // A pinned version serves that version.
+    let (status, body) = c
+        .post_json(
+            "/v1/models/syn/versions/1:predict",
+            &format!("{{\"instances\": {}}}", rows_json()),
+        )
+        .unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(json_of(&body).get("model_version").unwrap().as_u64(), Some(1));
+    server.stop();
+}
+
+#[test]
+fn labeled_paths_and_label_delete() {
+    let server = gateway_server(&[1, 2]);
+    // Labels attach through the admin RPC (same core).
+    for (label, version) in [("stable", 1u64), ("canary", 2)] {
+        match server.core().handle(Request::SetVersionLabel {
+            model: "syn".into(),
+            label: label.into(),
+            version,
+        }) {
+            Response::Ack => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let mut c = http(&server);
+    for (label, want) in [("stable", 1u64), ("canary", 2)] {
+        let (status, body) = c
+            .post_json(
+                &format!("/v1/models/syn/labels/{label}:predict"),
+                &format!("{{\"instances\": {}}}", rows_json()),
+            )
+            .unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        assert_eq!(
+            json_of(&body).get("model_version").unwrap().as_u64(),
+            Some(want),
+            "label {label}"
+        );
+    }
+
+    // DELETE the canary label; labeled lookups then 404.
+    let (status, body) = c.delete("/v1/models/syn/labels/canary").unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    assert_eq!(json_of(&body).get("ok").unwrap().as_bool(), Some(true));
+    let (status, body) = c
+        .post_json(
+            "/v1/models/syn/labels/canary:predict",
+            &format!("{{\"instances\": {}}}", rows_json()),
+        )
+        .unwrap();
+    assert_eq!(status, 404);
+    assert!(json_of(&body).get("error").unwrap().as_str().unwrap().contains("canary"));
+    // Deleting again: 404 with the error envelope.
+    let (status, _) = c.delete("/v1/models/syn/labels/canary").unwrap();
+    assert_eq!(status, 404);
+    server.stop();
+}
+
+#[test]
+fn classify_and_regress_routes() {
+    let server = gateway_server(&[2]);
+    let mut c = http(&server);
+    let examples =
+        r#"[{"x": [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7]}, {"x": [1, 1, 1, 1, 1, 1, 1, 1]}]"#;
+
+    let (status, body) = c
+        .post_json(
+            "/v1/models/syn:classify",
+            &format!("{{\"examples\": {examples}, \"signature_name\": \"classify\"}}"),
+        )
+        .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let json = json_of(&body);
+    assert_eq!(json.get("classes").unwrap().as_arr().unwrap().len(), 2);
+    let results = json.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 2);
+    assert_eq!(results[0].as_arr().unwrap().len(), 3); // 3 classes
+
+    let (status, body) = c
+        .post_json(
+            "/v1/models/syn:regress",
+            &format!("{{\"examples\": {examples}, \"signature_name\": \"regress\"}}"),
+        )
+        .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let json = json_of(&body);
+    assert_eq!(json.get("results").unwrap().as_arr().unwrap().len(), 2);
+
+    // Wrong method for the signature is a 400 naming the mismatch.
+    let (status, body) = c
+        .post_json(
+            "/v1/models/syn:regress",
+            &format!("{{\"examples\": {examples}, \"signature_name\": \"classify\"}}"),
+        )
+        .unwrap();
+    assert_eq!(status, 400);
+    assert!(json_of(&body).get("error").unwrap().as_str().unwrap().contains("regress"));
+    server.stop();
+}
+
+#[test]
+fn metadata_health_metrics_and_errors() {
+    let server = gateway_server(&[1, 2]);
+    match server.core().handle(Request::SetVersionLabel {
+        model: "syn".into(),
+        label: "canary".into(),
+        version: 2,
+    }) {
+        Response::Ack => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    let mut c = http(&server);
+
+    // Health first.
+    let (status, body) = c.get("/healthz").unwrap();
+    assert_eq!((status, body.as_slice()), (200, b"ok\n".as_slice()));
+
+    // Model status: per-version state + labels + signatures.
+    let (status, body) = c.get("/v1/models/syn").unwrap();
+    assert_eq!(status, 200);
+    let json = json_of(&body);
+    assert_eq!(json.get("model").unwrap().as_str(), Some("syn"));
+    let versions = json.get("versions").unwrap().as_arr().unwrap();
+    assert_eq!(versions.len(), 2);
+    let v2 = versions
+        .iter()
+        .find(|v| v.get("version").unwrap().as_u64() == Some(2))
+        .unwrap();
+    assert_eq!(v2.get("state").unwrap().as_str(), Some("ready"));
+    assert_eq!(
+        v2.get("labels").unwrap(),
+        &Json::Arr(vec![Json::str("canary")])
+    );
+    assert!(v2.get_path("signatures.serving_default").is_some());
+
+    // Narrowed by label.
+    let (status, body) = c.get("/v1/models/syn/labels/canary").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(
+        json_of(&body).get("versions").unwrap().as_arr().unwrap().len(),
+        1
+    );
+
+    // Error shapes: unknown model 404, unknown route 404, bad body
+    // 400, bad shape 400 — all with the {"error": ...} envelope.
+    let (status, body) = c.get("/v1/models/ghost").unwrap();
+    assert_eq!(status, 404);
+    assert!(json_of(&body).get("error").unwrap().as_str().unwrap().contains("ghost"));
+    let (status, _) = c.get("/v1/other").unwrap();
+    assert_eq!(status, 404);
+    let (status, body) = c.post_json("/v1/models/syn:predict", "{not json").unwrap();
+    assert_eq!(status, 400);
+    assert!(json_of(&body).get("error").is_some());
+    let (status, body) = c
+        .post_json("/v1/models/syn:predict", r#"{"instances": [[1, 2]]}"#)
+        .unwrap();
+    assert_eq!(status, 400);
+    assert!(
+        json_of(&body).get("error").unwrap().as_str().unwrap().contains("'x'"),
+        "validation error should name the tensor: {}",
+        String::from_utf8_lossy(&body)
+    );
+    let (status, _) = c
+        .request("PUT", "/v1/models/syn", Some("application/json"), b"{}")
+        .unwrap();
+    assert_eq!(status, 405);
+
+    // /metrics exposes request counts and batch-size stats from the
+    // traffic above (every request on this kept-alive connection).
+    let (status, body) = c.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("tensorserve_http_requests"), "{text}");
+    assert!(text.contains("tensorserve_rpc_predict_requests"), "{text}");
+    assert!(text.contains("tensorserve_predict_batch_rows_count"), "{text}");
+    assert!(text.contains("tensorserve_tensor_pool_hits"), "{text}");
+    server.stop();
+}
+
+#[test]
+fn gateway_survives_concurrent_clients() {
+    let server = gateway_server(&[2]);
+    let addr = server.http_addr().unwrap().to_string();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = HttpClient::connect(&addr).unwrap();
+                for _ in 0..25 {
+                    let (status, body) = c
+                        .post_json(
+                            "/v1/models/syn:predict",
+                            &format!("{{\"instances\": {}}}", rows_json()),
+                        )
+                        .unwrap();
+                    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.stop();
+}

@@ -11,6 +11,11 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# The REST gateway's end-to-end suite, named explicitly so a gateway
+# regression is visible as its own failing step.
+echo "==> cargo test -q --test http_gateway"
+cargo test -q --test http_gateway
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "==> cargo fmt --check"
     cargo fmt --check
