@@ -32,7 +32,10 @@ fn stalling_server(seed: u64) -> Arc<RpcServer> {
             }
             match req {
                 Request::Ping => Response::Pong,
-                _ => Response::Error { message: "no".into() },
+                _ => Response::Error {
+                    kind: tensorserve::base::error::ErrorKind::Internal,
+                    message: "no".into(),
+                },
             }
         }),
     )

@@ -158,10 +158,8 @@ fn main() -> anyhow::Result<()> {
         });
         let h = Arc::clone(&handle);
         let sem_b = Arc::clone(&sem);
-        let runner = Arc::new(move |input: Tensor| {
-            let out = sem_b.run(|| h.run(&input))?;
-            Ok(vec![out[0].as_f32()?.clone()])
-        }) as Arc<dyn BatchRunner>;
+        let runner = Arc::new(move |input: Tensor| sem_b.run(|| h.run(&input)))
+            as Arc<dyn BatchRunner>;
         let session = Arc::new(BatchingSession::new(
             &scheduler,
             "mlp_classifier",
@@ -174,6 +172,7 @@ fn main() -> anyhow::Result<()> {
                     max_enqueued_batches: 256,
                 },
                 allowed_batch_sizes: vec![1, 4, 16, 64],
+                ..Default::default()
             },
             runner,
         ));

@@ -1,0 +1,163 @@
+//! Typed error kinds carried through the serving stack.
+//!
+//! The core's error path is `anyhow`, which is great for messages and
+//! terrible for dispatch: the HTTP gateway used to decide 404-vs-400 by
+//! substring-matching error text. [`ErrorKind`] is a small, wire-stable
+//! classification attached at the *site that knows* (lookup failures
+//! are `NotFound`, validation failures are `InvalidArgument`,
+//! lifecycle races are `FailedPrecondition`) and recovered anywhere
+//! downstream with [`ErrorKind::of`] — including on the far side of an
+//! RPC, since `Response::Error` carries the kind on the wire.
+//!
+//! Errors created without a kind classify as [`ErrorKind::Internal`]
+//! — a server fault unless a consumer's own heuristic (the gateway's
+//! lookup-substring rescue) says otherwise.
+
+use std::fmt;
+
+/// The coarse classification of a serving error — what a client should
+/// *do* about it, not what went wrong.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ErrorKind {
+    /// The addressed thing (model, version, label, output) does not
+    /// exist. Clients should not retry unchanged.
+    NotFound,
+    /// The request itself is malformed (bad shape, unknown signature,
+    /// conflicting spec). Clients should not retry unchanged.
+    InvalidArgument,
+    /// The request was valid but the system's state made it
+    /// unservable (version unloading mid-flight, queue shedding
+    /// load). Clients may retry.
+    FailedPrecondition,
+    /// Everything else, including errors that never got a kind.
+    Internal,
+}
+
+impl ErrorKind {
+    /// Wrap a message in an `anyhow::Error` carrying this kind.
+    /// `e.to_string()` is exactly `message` — attaching a kind never
+    /// changes what callers (and their pinned tests) see.
+    pub fn err(self, message: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(KindedError { kind: self, message: message.into() })
+    }
+
+    /// Recover the kind from an error; `Internal` when none was
+    /// attached.
+    pub fn of(err: &anyhow::Error) -> ErrorKind {
+        err.downcast_ref::<KindedError>()
+            .map(|k| k.kind)
+            .unwrap_or(ErrorKind::Internal)
+    }
+
+    /// Stable wire code (see `rpc::proto`'s `Response::Error`).
+    pub fn code(self) -> u8 {
+        match self {
+            ErrorKind::NotFound => 1,
+            ErrorKind::InvalidArgument => 2,
+            ErrorKind::FailedPrecondition => 3,
+            ErrorKind::Internal => 0,
+        }
+    }
+
+    /// Inverse of [`ErrorKind::code`]. Unknown codes from newer peers
+    /// degrade to `Internal` rather than failing the whole frame.
+    pub fn from_code(code: u8) -> ErrorKind {
+        match code {
+            1 => ErrorKind::NotFound,
+            2 => ErrorKind::InvalidArgument,
+            3 => ErrorKind::FailedPrecondition,
+            _ => ErrorKind::Internal,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorKind::NotFound => "NOT_FOUND",
+            ErrorKind::InvalidArgument => "INVALID_ARGUMENT",
+            ErrorKind::FailedPrecondition => "FAILED_PRECONDITION",
+            ErrorKind::Internal => "INTERNAL",
+        }
+    }
+}
+
+impl fmt::Display for ErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The concrete error type [`ErrorKind::err`] builds: displays as the
+/// bare message so kinds are invisible to message-oriented callers.
+#[derive(Debug)]
+struct KindedError {
+    kind: ErrorKind,
+    message: String,
+}
+
+impl fmt::Display for KindedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for KindedError {}
+
+/// `bail!` with a kind: `bail_kind!(ErrorKind::NotFound, "no {thing}")`.
+#[macro_export]
+macro_rules! bail_kind {
+    ($kind:expr, $($arg:tt)*) => {
+        return Err($kind.err(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    #[test]
+    fn kind_roundtrips_through_anyhow() {
+        let e = ErrorKind::NotFound.err("servable 'x' not found");
+        assert_eq!(e.to_string(), "servable 'x' not found");
+        assert_eq!(ErrorKind::of(&e), ErrorKind::NotFound);
+        // Plain errors classify as Internal.
+        assert_eq!(ErrorKind::of(&anyhow!("boom")), ErrorKind::Internal);
+    }
+
+    #[test]
+    fn kind_survives_context_layers() {
+        use anyhow::Context;
+        let e = ErrorKind::FailedPrecondition
+            .err("version unloading")
+            .context("while serving request");
+        assert_eq!(ErrorKind::of(&e), ErrorKind::FailedPrecondition);
+    }
+
+    #[test]
+    fn wire_codes_roundtrip() {
+        for kind in [
+            ErrorKind::NotFound,
+            ErrorKind::InvalidArgument,
+            ErrorKind::FailedPrecondition,
+            ErrorKind::Internal,
+        ] {
+            assert_eq!(ErrorKind::from_code(kind.code()), kind);
+        }
+        // Unknown codes degrade, not fail.
+        assert_eq!(ErrorKind::from_code(99), ErrorKind::Internal);
+    }
+
+    #[test]
+    fn bail_kind_macro() {
+        fn lookup(ok: bool) -> anyhow::Result<u32> {
+            if !ok {
+                bail_kind!(ErrorKind::NotFound, "model '{}' not found", "m");
+            }
+            Ok(7)
+        }
+        assert_eq!(lookup(true).unwrap(), 7);
+        let e = lookup(false).unwrap_err();
+        assert_eq!(ErrorKind::of(&e), ErrorKind::NotFound);
+        assert_eq!(e.to_string(), "model 'm' not found");
+    }
+}

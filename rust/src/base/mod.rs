@@ -8,6 +8,7 @@
 //! *aspired versions* API that connects Sources to Managers.
 
 pub mod aspired;
+pub mod error;
 pub mod loader;
 pub mod reclaim;
 pub mod servable;

@@ -379,6 +379,30 @@ impl TensorI32 {
         })
     }
 
+    /// Concatenate along dim 0 (mirrors [`Tensor::concat`]). One
+    /// exactly-sized allocation; one copy of each input.
+    pub fn concat(parts: &[TensorI32]) -> Result<TensorI32> {
+        let first = parts.first().ok_or_else(|| anyhow::anyhow!("empty concat"))?;
+        if first.shape.is_empty() {
+            bail!("concat shape mismatch: rank-0 tensor {:?}", first.shape);
+        }
+        let trailing = &first.shape[1..];
+        let mut batch = 0usize;
+        for p in parts {
+            if p.shape.is_empty() || &p.shape[1..] != trailing {
+                bail!("concat shape mismatch: {:?} vs {:?}", p.shape, first.shape);
+            }
+            batch += p.shape[0];
+        }
+        let mut shape = vec![batch];
+        shape.extend_from_slice(trailing);
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            data.extend_from_slice(p.data());
+        }
+        Ok(TensorI32 { shape, storage: data.into(), offset: 0 })
+    }
+
     /// Zero-copy split along dim 0 (mirrors [`Tensor::split`]).
     pub fn split(&self, sizes: &[usize]) -> Result<Vec<TensorI32>> {
         let total: usize = sizes.iter().sum();
@@ -512,6 +536,25 @@ mod tests {
         drop(t);
         drop(padded_view);
         assert_eq!(parts[0].data(), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn i32_concat_roundtrip() {
+        let a = TensorI32::new(vec![2, 2], vec![0, 1, 2, 3]).unwrap();
+        let b = TensorI32::new(vec![1, 2], vec![4, 5]).unwrap();
+        let c = TensorI32::concat(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.data(), &[0, 1, 2, 3, 4, 5]);
+        let parts = c.split(&[2, 1]).unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+        // Mismatched trailing dims rejected, like f32.
+        assert!(TensorI32::concat(&[
+            TensorI32::new(vec![1, 2], vec![0, 1]).unwrap(),
+            TensorI32::new(vec![1, 3], vec![0, 1, 2]).unwrap(),
+        ])
+        .is_err());
+        assert!(TensorI32::concat(&[]).is_err());
     }
 
     #[test]

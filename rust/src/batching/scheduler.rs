@@ -201,12 +201,23 @@ impl<T: BatchTask> BatchQueue<T> {
     pub fn name(&self) -> &str {
         &self.state.name
     }
+
+    /// Mark the queue removed without waiting for the handle to drop:
+    /// further enqueues fail with [`EnqueueError::QueueClosed`], the
+    /// open batch flushes eagerly (workers process removed queues'
+    /// pending work immediately instead of waiting out the batch
+    /// timeout), and the queue disappears once drained. Idempotent.
+    /// The serving layer's unload path calls this so teardown never
+    /// blocks on request threads that still hold session references.
+    pub fn close(&self) {
+        self.state.removed.store(true, Ordering::SeqCst);
+        self.shared.signal();
+    }
 }
 
 impl<T: BatchTask> Drop for BatchQueue<T> {
     fn drop(&mut self) {
-        self.state.removed.store(true, Ordering::SeqCst);
-        self.shared.signal();
+        self.close();
     }
 }
 

@@ -34,24 +34,28 @@ use super::batch::{Batch, BatchTask};
 use super::padding::pad_to_allowed;
 use super::scheduler::{BatchQueue, EnqueueError, QueueOptions, SharedBatchScheduler};
 use super::splitter::split_if_needed;
+use crate::base::error::ErrorKind;
 use crate::base::tensor::Tensor;
-use crate::util::metrics::Counter;
+use crate::runtime::pjrt::OutTensor;
+use crate::util::metrics::{Counter, Histogram};
 use crate::util::pool::{BufferPool, PoolStats};
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// The wrapped "device": runs one merged batch. Outputs must share the
-/// input's batch dimension.
+/// input's batch dimension (f32 and i32 outputs alike — the session
+/// scatters both back to callers as views).
 pub trait BatchRunner: Send + Sync {
-    fn run_batch(&self, input: Tensor) -> Result<Vec<Tensor>>;
+    fn run_batch(&self, input: Tensor) -> Result<Vec<OutTensor>>;
 }
 
 impl<F> BatchRunner for F
 where
-    F: Fn(Tensor) -> Result<Vec<Tensor>> + Send + Sync,
+    F: Fn(Tensor) -> Result<Vec<OutTensor>> + Send + Sync,
 {
-    fn run_batch(&self, input: Tensor) -> Result<Vec<Tensor>> {
+    fn run_batch(&self, input: Tensor) -> Result<Vec<OutTensor>> {
         self(input)
     }
 }
@@ -59,7 +63,9 @@ where
 /// One caller's pending `run()`.
 pub struct PendingRun {
     input: Tensor,
-    reply: mpsc::Sender<Result<Vec<Tensor>>>,
+    reply: mpsc::Sender<Result<Vec<OutTensor>>>,
+    /// When the task entered the queue (queue-delay instrumentation).
+    enqueued_at: Instant,
 }
 
 impl BatchTask for PendingRun {
@@ -69,12 +75,18 @@ impl BatchTask for PendingRun {
 }
 
 /// Options for a batching session.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct SessionOptions {
     pub queue: QueueOptions,
     /// Ladder of compiled batch sizes; merged batches pad up to the
     /// nearest. Empty = no padding (dynamic-shape device).
     pub allowed_batch_sizes: Vec<usize>,
+    /// Optional histogram recording each task's enqueue→execute delay
+    /// in nanoseconds (the latency cost of waiting for batch-mates).
+    pub queue_delay_ns: Option<Arc<Histogram>>,
+    /// Optional histogram recording merged task rows per device batch
+    /// (pre-padding — the actual cross-request merge factor).
+    pub merged_batch_rows: Option<Arc<Histogram>>,
 }
 
 impl Default for SessionOptions {
@@ -82,6 +94,8 @@ impl Default for SessionOptions {
         SessionOptions {
             queue: QueueOptions::default(),
             allowed_batch_sizes: vec![1, 4, 16],
+            queue_delay_ns: None,
+            merged_batch_rows: None,
         }
     }
 }
@@ -126,6 +140,8 @@ impl BatchingSession {
         let allowed = options.allowed_batch_sizes.clone();
         let counters = Arc::new(AssemblyCounters::default());
         let max_batch_size = options.queue.max_batch_size;
+        let delay_hist = options.queue_delay_ns.clone();
+        let rows_hist = options.merged_batch_rows.clone();
         let process_pool = Arc::clone(&pool);
         let process_counters = Arc::clone(&counters);
         let queue = scheduler.add_queue(name, options.queue, move |batch| {
@@ -134,6 +150,8 @@ impl BatchingSession {
                 runner.as_ref(),
                 &process_pool,
                 &process_counters,
+                delay_hist.as_deref(),
+                rows_hist.as_deref(),
                 batch,
             );
         });
@@ -147,22 +165,35 @@ impl BatchingSession {
         runner: &dyn BatchRunner,
         pool: &BufferPool,
         counters: &AssemblyCounters,
+        delay_hist: Option<&Histogram>,
+        rows_hist: Option<&Histogram>,
         batch: Batch<PendingRun>,
     ) {
-        let (inputs, replies): (Vec<Tensor>, Vec<mpsc::Sender<Result<Vec<Tensor>>>>) =
-            batch.into_tasks().into_iter().map(|t| (t.input, t.reply)).unzip();
+        let tasks = batch.into_tasks();
+        if let Some(h) = delay_hist {
+            for t in &tasks {
+                h.record_duration(t.enqueued_at.elapsed());
+            }
+        }
+        let (inputs, replies): (Vec<Tensor>, Vec<mpsc::Sender<Result<Vec<OutTensor>>>>) =
+            tasks.into_iter().map(|t| (t.input, t.reply)).unzip();
         let sizes: Vec<usize> = inputs.iter().map(Tensor::batch).collect();
         let merged_rows: usize = sizes.iter().sum();
+        if let Some(h) = rows_hist {
+            h.record(merged_rows as u64);
+        }
 
-        let result: Result<Vec<Vec<Tensor>>> = (|| {
+        let result: Result<Vec<Vec<OutTensor>>> = (|| {
             // Same compatibility rules as Tensor::concat, one helper.
             let (_, trailing) = Tensor::concat_shape(&inputs)?;
             // Pad up to the compiled batch-size ladder.
             let target = if allowed.is_empty() {
                 merged_rows
             } else {
-                pad_to_allowed(merged_rows, allowed)
-                    .ok_or_else(|| anyhow!("batch {merged_rows} exceeds ladder {allowed:?}"))?
+                pad_to_allowed(merged_rows, allowed).ok_or_else(|| {
+                    ErrorKind::InvalidArgument
+                        .err(format!("batch {merged_rows} exceeds ladder {allowed:?}"))
+                })?
             };
 
             // The single acquisition + single copy: every task's rows go
@@ -199,7 +230,7 @@ impl BatchingSession {
             pool.release(merged_storage);
 
             // Un-pad + scatter: all views of the shared output storage.
-            let mut per_task: Vec<Vec<Tensor>> = vec![Vec::new(); sizes.len()];
+            let mut per_task: Vec<Vec<OutTensor>> = vec![Vec::new(); sizes.len()];
             for out in outputs {
                 let trimmed = out.truncate_batch(merged_rows)?;
                 for (i, piece) in trimmed.split(&sizes)?.into_iter().enumerate() {
@@ -216,9 +247,14 @@ impl BatchingSession {
                 }
             }
             Err(e) => {
-                // Device failure propagates to every caller in the batch.
+                // Device failure propagates to every caller in the
+                // batch, preserving the error's kind (so e.g. a
+                // FailedPrecondition from an unload-gated runner stays
+                // retryable on the wire).
+                let kind = ErrorKind::of(&e);
+                let message = format!("batch run failed: {e}");
                 for reply in replies {
-                    let _ = reply.send(Err(anyhow!("batch run failed: {e}")));
+                    let _ = reply.send(Err(kind.err(message.clone())));
                 }
             }
         }
@@ -228,24 +264,31 @@ impl BatchingSession {
     /// merged batch has been computed. Inputs larger than
     /// `max_batch_size` are transparently split into zero-copy row
     /// chunks that batch independently.
-    pub fn run(&self, input: Tensor) -> Result<Vec<Tensor>> {
+    pub fn run(&self, input: Tensor) -> Result<Vec<OutTensor>> {
         if input.rank() > 0 && input.batch() > self.max_batch_size {
             return self.run_split(input);
         }
         let (tx, rx) = mpsc::channel();
-        self.enqueue(PendingRun { input, reply: tx })?;
-        rx.recv().map_err(|_| anyhow!("session dropped reply"))?
+        self.enqueue(PendingRun { input, reply: tx, enqueued_at: Instant::now() })?;
+        rx.recv()
+            .map_err(|_| ErrorKind::Internal.err("session dropped reply"))?
     }
 
     fn enqueue(&self, task: PendingRun) -> Result<()> {
         self.queue.enqueue(task).map_err(|e| match e {
-            EnqueueError::QueueFull(_) => anyhow!("overloaded: queue full"),
-            EnqueueError::TaskTooLarge(t) => anyhow!(
+            // Load shedding and teardown races are retryable states,
+            // not caller mistakes: FailedPrecondition on the wire.
+            EnqueueError::QueueFull(_) => {
+                ErrorKind::FailedPrecondition.err("overloaded: queue full")
+            }
+            EnqueueError::TaskTooLarge(t) => ErrorKind::InvalidArgument.err(format!(
                 "request batch {} exceeds max_batch_size {}",
                 t.input.batch(),
                 self.max_batch_size
-            ),
-            EnqueueError::QueueClosed(_) => anyhow!("session closed"),
+            )),
+            EnqueueError::QueueClosed(_) => {
+                ErrorKind::FailedPrecondition.err("session closed")
+            }
         })
     }
 
@@ -254,28 +297,40 @@ impl BatchingSession {
     /// each output across the parts (order-preserving).
     ///
     /// [`SplittableTask`]: super::splitter::SplittableTask
-    fn run_split(&self, input: Tensor) -> Result<Vec<Tensor>> {
+    fn run_split(&self, input: Tensor) -> Result<Vec<OutTensor>> {
         let parts = split_if_needed(input, self.max_batch_size);
-        let receivers: Vec<mpsc::Receiver<Result<Vec<Tensor>>>> = parts
+        let receivers: Vec<mpsc::Receiver<Result<Vec<OutTensor>>>> = parts
             .into_iter()
             .map(|part| {
                 let (tx, rx) = mpsc::channel();
-                self.enqueue(PendingRun { input: part, reply: tx })?;
+                self.enqueue(PendingRun { input: part, reply: tx, enqueued_at: Instant::now() })?;
                 Ok(rx)
             })
             .collect::<Result<_>>()?;
-        let mut per_part: Vec<Vec<Tensor>> = Vec::with_capacity(receivers.len());
+        let mut per_part: Vec<Vec<OutTensor>> = Vec::with_capacity(receivers.len());
         for rx in receivers {
-            per_part.push(rx.recv().map_err(|_| anyhow!("session dropped reply"))??);
+            per_part.push(
+                rx.recv()
+                    .map_err(|_| ErrorKind::Internal.err("session dropped reply"))??,
+            );
         }
         let n_outputs = per_part.first().map_or(0, Vec::len);
         (0..n_outputs)
             .map(|k| {
-                let pieces: Vec<Tensor> =
+                let pieces: Vec<OutTensor> =
                     per_part.iter().map(|outs| outs[k].clone()).collect();
-                Tensor::concat(&pieces)
+                OutTensor::concat(&pieces)
             })
             .collect()
+    }
+
+    /// Close the session's queue immediately (idempotent): the open
+    /// batch flushes to the runner now, and later `run` calls fail
+    /// with a retryable "session closed" error. Dropping the session
+    /// closes implicitly; the serving layer calls this explicitly on
+    /// unload so draining never waits out a batch timeout.
+    pub fn close(&self) {
+        self.queue.close();
     }
 
     pub fn batches_processed(&self) -> u64 {
@@ -284,6 +339,11 @@ impl BatchingSession {
 
     pub fn tasks_processed(&self) -> u64 {
         self.queue.tasks_processed()
+    }
+
+    /// Tasks currently waiting in the queue (monitoring/tests).
+    pub fn pending_tasks(&self) -> usize {
+        self.queue.pending_tasks()
     }
 
     /// Device-buffer acquisitions performed by assembly (exactly one
@@ -317,10 +377,10 @@ mod tests {
     }
 
     impl BatchRunner for DoublingRunner {
-        fn run_batch(&self, input: Tensor) -> Result<Vec<Tensor>> {
+        fn run_batch(&self, input: Tensor) -> Result<Vec<OutTensor>> {
             self.seen_batches.lock().unwrap().push(input.batch());
             let doubled: Vec<f32> = input.data().iter().map(|x| x * 2.0).collect();
-            Ok(vec![Tensor::new(input.shape().to_vec(), doubled)?])
+            Ok(vec![OutTensor::F32(Tensor::new(input.shape().to_vec(), doubled)?)])
         }
     }
 
@@ -350,13 +410,14 @@ mod tests {
                 max_enqueued_batches: 8,
             },
             allowed_batch_sizes: vec![1, 4, 16],
+            ..Default::default()
         });
         let out = session
             .run(Tensor::matrix(vec![vec![1.0, 2.0]]).unwrap())
             .unwrap();
         assert_eq!(out.len(), 1);
-        assert_eq!(out[0].data(), &[2.0, 4.0]);
-        assert_eq!(out[0].shape(), &[1, 2]);
+        assert_eq!(out[0].as_f32().unwrap().data(), &[2.0, 4.0]);
+        assert_eq!(out[0].as_f32().unwrap().shape(), &[1, 2]);
     }
 
     #[test]
@@ -368,6 +429,7 @@ mod tests {
                 max_enqueued_batches: 8,
             },
             allowed_batch_sizes: vec![1, 4, 8],
+            ..Default::default()
         });
         let session = Arc::new(session);
         let handles: Vec<_> = (0..8)
@@ -378,9 +440,12 @@ mod tests {
                 })
             })
             .collect();
-        let outs: Vec<Vec<Tensor>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let outs: Vec<Vec<OutTensor>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         // Each caller got its own doubled row back.
-        let mut got: Vec<f32> = outs.iter().map(|o| o[0].data()[0]).collect();
+        let mut got: Vec<f32> = outs
+            .iter()
+            .map(|o| o[0].as_f32().unwrap().data()[0])
+            .collect();
         got.sort_by(f32::total_cmp);
         assert_eq!(got, (0..8).map(|i| 2.0 * i as f32).collect::<Vec<_>>());
         // Fewer device invocations than callers = real merging.
@@ -400,13 +465,14 @@ mod tests {
                 max_enqueued_batches: 8,
             },
             allowed_batch_sizes: vec![4, 16],
+            ..Default::default()
         });
         // A 2-row request must execute as a 4-row padded batch.
         let out = session
             .run(Tensor::matrix(vec![vec![1.0], vec![3.0]]).unwrap())
             .unwrap();
-        assert_eq!(out[0].shape(), &[2, 1]);
-        assert_eq!(out[0].data(), &[2.0, 6.0]);
+        assert_eq!(out[0].as_f32().unwrap().shape(), &[2, 1]);
+        assert_eq!(out[0].as_f32().unwrap().data(), &[2.0, 6.0]);
         assert_eq!(seen.lock().unwrap().as_slice(), &[4]);
     }
 
@@ -419,6 +485,7 @@ mod tests {
                 max_enqueued_batches: 8,
             },
             allowed_batch_sizes: vec![8],
+            ..Default::default()
         });
         let session = Arc::new(session);
         let a = {
@@ -436,8 +503,8 @@ mod tests {
         };
         let ra = a.join().unwrap();
         let rb = b.join().unwrap();
-        assert_eq!(ra[0].data(), &[2.0, 4.0, 6.0]);
-        assert_eq!(rb[0].data(), &[20.0, 40.0]);
+        assert_eq!(ra[0].as_f32().unwrap().data(), &[2.0, 4.0, 6.0]);
+        assert_eq!(rb[0].as_f32().unwrap().data(), &[20.0, 40.0]);
     }
 
     #[test]
@@ -445,7 +512,7 @@ mod tests {
         let sched = SharedBatchScheduler::<PendingRun>::new(SchedulerOptions::default());
         let calls = Arc::new(AtomicUsize::new(0));
         let c = Arc::clone(&calls);
-        let runner = Arc::new(move |_input: Tensor| -> Result<Vec<Tensor>> {
+        let runner = Arc::new(move |_input: Tensor| -> Result<Vec<OutTensor>> {
             c.fetch_add(1, Ordering::SeqCst);
             anyhow::bail!("device on fire")
         });
@@ -459,6 +526,7 @@ mod tests {
                     max_enqueued_batches: 8,
                 },
                 allowed_batch_sizes: vec![4],
+                ..Default::default()
             },
             runner,
         );
@@ -477,15 +545,16 @@ mod tests {
                 max_enqueued_batches: 8,
             },
             allowed_batch_sizes: vec![4],
+            ..Default::default()
         });
         // 10 rows > max_batch_size 4: split into 4+4+2, reassembled in
         // order with every row doubled.
         let rows: Vec<Vec<f32>> = (0..10).map(|i| vec![i as f32]).collect();
         let out = session.run(Tensor::matrix(rows).unwrap()).unwrap();
         assert_eq!(out.len(), 1);
-        assert_eq!(out[0].shape(), &[10, 1]);
+        assert_eq!(out[0].as_f32().unwrap().shape(), &[10, 1]);
         let want: Vec<f32> = (0..10).map(|i| 2.0 * i as f32).collect();
-        assert_eq!(out[0].data(), &want[..]);
+        assert_eq!(out[0].as_f32().unwrap().data(), &want[..]);
         // Every device batch stayed on the ladder.
         assert!(seen.lock().unwrap().iter().all(|&b| b == 4));
     }
@@ -499,10 +568,10 @@ mod tests {
     }
 
     impl BatchRunner for EchoRunner {
-        fn run_batch(&self, input: Tensor) -> Result<Vec<Tensor>> {
+        fn run_batch(&self, input: Tensor) -> Result<Vec<OutTensor>> {
             let out = Tensor::new(input.shape().to_vec(), input.data().to_vec())?;
             self.returned.lock().unwrap().push(out.clone());
-            Ok(vec![out])
+            Ok(vec![OutTensor::F32(out)])
         }
     }
 
@@ -524,6 +593,7 @@ mod tests {
                     max_enqueued_batches: 8,
                 },
                 allowed_batch_sizes: vec![8],
+                ..Default::default()
             },
             runner,
         );
@@ -533,10 +603,10 @@ mod tests {
         let device_outputs = returned.lock().unwrap();
         assert_eq!(device_outputs.len(), 1);
         assert!(
-            out[0].shares_storage(&device_outputs[0]),
+            out[0].as_f32().unwrap().shares_storage(&device_outputs[0]),
             "caller output was copied, not a view of the device buffer"
         );
-        assert_eq!(out[0].data(), &[5.0, 6.0]);
+        assert_eq!(out[0].as_f32().unwrap().data(), &[5.0, 6.0]);
     }
 
     #[test]
@@ -558,6 +628,7 @@ mod tests {
                     max_enqueued_batches: 8,
                 },
                 allowed_batch_sizes: vec![4, 16],
+                ..Default::default()
             },
             runner,
             Arc::clone(&pool),
@@ -579,6 +650,92 @@ mod tests {
         assert_eq!(session.bytes_copied(), 16);
     }
 
+    /// Classifier-shaped device: f32 [rows, 1] scores plus an i32
+    /// [rows] class per row — proves the mixed-dtype scatter path the
+    /// serving registry relies on.
+    struct ClassifierRunner;
+
+    impl BatchRunner for ClassifierRunner {
+        fn run_batch(&self, input: Tensor) -> Result<Vec<OutTensor>> {
+            let rows = input.batch();
+            let scores: Vec<f32> = (0..rows).map(|i| input.row(i)[0] * 10.0).collect();
+            let classes: Vec<i32> = (0..rows).map(|i| input.row(i)[0] as i32).collect();
+            Ok(vec![
+                OutTensor::F32(Tensor::new(vec![rows, 1], scores)?),
+                OutTensor::I32(crate::base::tensor::TensorI32::new(vec![rows], classes)?),
+            ])
+        }
+    }
+
+    #[test]
+    fn mixed_dtype_outputs_scatter_per_caller() {
+        let sched = SharedBatchScheduler::new(SchedulerOptions {
+            num_batch_threads: 2,
+            ..Default::default()
+        });
+        let session = Arc::new(BatchingSession::new(
+            &sched,
+            "s",
+            SessionOptions {
+                queue: QueueOptions {
+                    max_batch_size: 8,
+                    batch_timeout: Duration::from_millis(20),
+                    max_enqueued_batches: 8,
+                },
+                allowed_batch_sizes: vec![8],
+                ..Default::default()
+            },
+            Arc::new(ClassifierRunner),
+        ));
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let s = Arc::clone(&session);
+                std::thread::spawn(move || {
+                    s.run(Tensor::matrix(vec![vec![i as f32]]).unwrap()).unwrap()
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let outs = h.join().unwrap();
+            assert_eq!(outs[0].as_f32().unwrap().data(), &[i as f32 * 10.0]);
+            assert_eq!(outs[1].as_i32().unwrap().data(), &[i as i32]);
+        }
+    }
+
+    #[test]
+    fn queue_delay_and_merge_histograms_record() {
+        let sched = SharedBatchScheduler::new(SchedulerOptions {
+            num_batch_threads: 1,
+            ..Default::default()
+        });
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let runner = Arc::new(DoublingRunner { seen_batches: Arc::clone(&seen) });
+        let delay = Arc::new(Histogram::new());
+        let merged = Arc::new(Histogram::new());
+        let session = BatchingSession::new(
+            &sched,
+            "s",
+            SessionOptions {
+                queue: QueueOptions {
+                    max_batch_size: 16,
+                    batch_timeout: Duration::from_millis(1),
+                    max_enqueued_batches: 8,
+                },
+                allowed_batch_sizes: vec![16],
+                queue_delay_ns: Some(Arc::clone(&delay)),
+                merged_batch_rows: Some(Arc::clone(&merged)),
+            },
+            runner,
+        );
+        session.run(Tensor::matrix(vec![vec![1.0], vec![2.0]]).unwrap()).unwrap();
+        // One task delayed at least the batch timeout; one merged batch
+        // of exactly the task's 2 rows (padding is not counted).
+        assert_eq!(delay.count(), 1);
+        assert!(delay.max() > 0);
+        assert_eq!(merged.count(), 1);
+        assert_eq!(merged.max(), 2);
+    }
+
     #[test]
     fn mismatched_shapes_in_one_batch_error() {
         let (_sched, session, _seen) = setup(SessionOptions {
@@ -588,6 +745,7 @@ mod tests {
                 max_enqueued_batches: 8,
             },
             allowed_batch_sizes: vec![8],
+            ..Default::default()
         });
         let session = Arc::new(session);
         let a = {

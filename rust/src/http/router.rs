@@ -13,13 +13,18 @@
 //! GET    /metrics
 //! ```
 //!
-//! Errors use one envelope, `{"error": "..."}`: lookup failures
-//! (unknown model/version/label) are 404, everything else the core
-//! rejects (validation, shape, signature method) is 400.
+//! Errors use one envelope, `{"error": "..."}`. Status codes map
+//! structurally from the core's typed [`ErrorKind`]: lookup failures
+//! (unknown model/version/label) are 404, validation failures (shape,
+//! signature, conflicting spec) are 400, and retryable lifecycle races
+//! (version unloading mid-request, load shedding) are 503. Errors
+//! without a kind are server faults (500), except lookup-shaped
+//! messages, which the legacy substring table still rescues to 404.
 
 use super::codec;
 use super::expose;
 use super::server::{HttpHandler, HttpRequest, HttpResponse};
+use crate::base::error::ErrorKind;
 use crate::inference::ModelSpec;
 use crate::rpc::proto::{Request, Response};
 use crate::server::builder::ServerCore;
@@ -148,18 +153,32 @@ fn percent_decode(s: &str) -> Option<String> {
     String::from_utf8(out).ok()
 }
 
-/// Lookup failures are 404; everything else the core rejects is a 400.
-fn error_status(message: &str) -> u16 {
-    const NOT_FOUND: [&str; 4] = ["not found", "no ready versions", "not ready", "no version"];
-    if NOT_FOUND.iter().any(|n| message.contains(n)) {
-        404
-    } else {
-        400
+/// HTTP status for a typed core error. The kind decides structurally:
+/// `NotFound` → 404, `InvalidArgument` → 400, `FailedPrecondition`
+/// (unload races, load shedding — retryable) → 503. `Internal` means
+/// the error never got a kind: lookup-shaped messages are rescued to
+/// 404 by the legacy substring table, and everything else is what it
+/// says — a server fault, 500 (request-caused rejections all carry
+/// `InvalidArgument` at their creation site now).
+fn error_status(kind: ErrorKind, message: &str) -> u16 {
+    match kind {
+        ErrorKind::NotFound => 404,
+        ErrorKind::InvalidArgument => 400,
+        ErrorKind::FailedPrecondition => 503,
+        ErrorKind::Internal => {
+            const NOT_FOUND: [&str; 4] =
+                ["not found", "no ready versions", "not ready", "no version"];
+            if NOT_FOUND.iter().any(|n| message.contains(n)) {
+                404
+            } else {
+                500
+            }
+        }
     }
 }
 
-fn core_error(message: &str) -> HttpResponse {
-    HttpResponse::error(error_status(message), message)
+fn core_error(kind: ErrorKind, message: &str) -> HttpResponse {
+    HttpResponse::error(error_status(kind, message), message)
 }
 
 fn data_plane(core: &ServerCore, body: &[u8], spec: ModelSpec, verb: Verb) -> HttpResponse {
@@ -175,8 +194,8 @@ fn data_plane(core: &ServerCore, body: &[u8], spec: ModelSpec, verb: Verb) -> Ht
                 signature: parsed.signature,
                 inputs: parsed.inputs,
             });
-            if let Response::Error { message } = &resp {
-                return core_error(message);
+            if let Response::Error { kind, message } = &resp {
+                return core_error(*kind, message);
             }
             if !matches!(resp, Response::Predict { .. }) {
                 return HttpResponse::error(500, &format!("unexpected response {resp:?}"));
@@ -204,7 +223,7 @@ fn data_plane(core: &ServerCore, body: &[u8], spec: ModelSpec, verb: Verb) -> Ht
                     200,
                     &codec::classify_response_json(model_version, &classes, &log_probs),
                 ),
-                Response::Error { message } => core_error(&message),
+                Response::Error { kind, message } => core_error(kind, &message),
                 other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
             }
         }
@@ -222,7 +241,7 @@ fn data_plane(core: &ServerCore, body: &[u8], spec: ModelSpec, verb: Verb) -> Ht
                     200,
                     &codec::regress_response_json(model_version, &values),
                 ),
-                Response::Error { message } => core_error(&message),
+                Response::Error { kind, message } => core_error(kind, &message),
                 other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
             }
         }
@@ -234,7 +253,7 @@ fn metadata(core: &ServerCore, spec: ModelSpec) -> HttpResponse {
         Response::ModelMetadata { model, versions } => {
             HttpResponse::json(200, &codec::metadata_json(&model, &versions))
         }
-        Response::Error { message } => core_error(&message),
+        Response::Error { kind, message } => core_error(kind, &message),
         other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
     }
 }
@@ -243,7 +262,7 @@ fn delete_label(core: &ServerCore, spec: ModelSpec) -> HttpResponse {
     let label = spec.label.unwrap_or_default();
     match core.handle(Request::DeleteVersionLabel { model: spec.name, label }) {
         Response::Ack => HttpResponse::json(200, &Json::obj(vec![("ok", Json::Bool(true))])),
-        Response::Error { message } => core_error(&message),
+        Response::Error { kind, message } => core_error(kind, &message),
         other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
     }
 }
@@ -291,7 +310,19 @@ mod tests {
     }
 
     #[test]
-    fn error_status_mapping() {
+    fn error_status_maps_from_kind() {
+        // The kind decides, regardless of message text.
+        assert_eq!(error_status(ErrorKind::NotFound, "whatever"), 404);
+        assert_eq!(error_status(ErrorKind::InvalidArgument, "whatever"), 400);
+        assert_eq!(error_status(ErrorKind::FailedPrecondition, "whatever"), 503);
+        // A reworded message no longer breaks the mapping.
+        assert_eq!(error_status(ErrorKind::NotFound, "nothing here"), 404);
+    }
+
+    #[test]
+    fn kindless_errors_rescue_lookups_else_500() {
+        // Unkinded errors: lookup-shaped messages keep their 404 via
+        // the legacy substring table…
         for message in [
             "servable 'ghost' not found",
             "servable 'm' has no ready versions",
@@ -300,15 +331,14 @@ mod tests {
             "model 'm' has no version 9",
             "model 'm' has no versions",
         ] {
-            assert_eq!(error_status(message), 404, "{message}");
+            assert_eq!(error_status(ErrorKind::Internal, message), 404, "{message}");
         }
-        for message in [
-            "model 'm' signature '' : input tensor 'x' has shape [1, 5], want [-1, 8]",
-            "batch 65 exceeds compiled ladder [1, 4]",
-            "model 'm': request pins both version 1 and label 'x' — use one",
-            "signature 'regress' has no s32 class output",
-        ] {
-            assert_eq!(error_status(message), 400, "{message}");
+        // …and anything else unclassified is a server fault. (The
+        // request-caused rejections that used to land here — shape,
+        // ladder, spec conflicts — now carry InvalidArgument from
+        // their creation sites and answer 400 via the kind.)
+        for message in ["device on fire", "batch run failed: execute: oom"] {
+            assert_eq!(error_status(ErrorKind::Internal, message), 500, "{message}");
         }
     }
 }

@@ -4,8 +4,10 @@
 use super::example::Example;
 use super::predict::{run_example_signature, HandleSource};
 use super::ModelSpec;
+use crate::base::error::ErrorKind;
 use crate::runtime::pjrt::OutTensor;
-use anyhow::{anyhow, bail, Result};
+use crate::serving::{DirectRunner, Runner};
+use anyhow::{bail, Result};
 
 /// Classify request: a batch of canonical examples against one
 /// classify signature of a model.
@@ -55,16 +57,15 @@ pub(crate) fn sole_matching_output<'a>(
     pred: impl Fn(&OutTensor) -> bool,
 ) -> Result<&'a OutTensor> {
     let mut hits = named.iter().filter(|(_, t)| pred(t));
-    let first = hits
-        .next()
-        .ok_or_else(|| anyhow!("signature '{sig_name}' has no {what} output"))?;
+    let first = hits.next().ok_or_else(|| {
+        ErrorKind::InvalidArgument.err(format!("signature '{sig_name}' has no {what} output"))
+    })?;
     if let Some(second) = hits.next() {
-        bail!(
+        return Err(ErrorKind::InvalidArgument.err(format!(
             "signature '{sig_name}' is ambiguous: both '{}' and '{}' are {what} outputs \
              — declare a narrower signature",
-            first.0,
-            second.0
-        );
+            first.0, second.0
+        )));
     }
     Ok(&first.1)
 }
@@ -103,13 +104,21 @@ pub(crate) fn classification_results(
         .collect())
 }
 
-/// Execute a classification request.
-pub fn classify(handles: &dyn HandleSource, req: &ClassifyRequest) -> Result<ClassifyResponse> {
+/// Execute a classification request, with servable execution going
+/// through `runner` (the serving path passes its
+/// [`crate::serving::SessionRegistry`] here so concurrent classifies
+/// merge into shared device batches).
+pub fn classify_with(
+    handles: &dyn HandleSource,
+    runner: &dyn Runner,
+    req: &ClassifyRequest,
+) -> Result<ClassifyResponse> {
     if req.examples.is_empty() {
-        bail!("classify: empty example list");
+        return Err(ErrorKind::InvalidArgument.err("classify: empty example list"));
     }
     let (model_version, results) = run_example_signature(
         handles,
+        runner,
         &req.spec,
         &req.signature,
         "classify",
@@ -117,6 +126,11 @@ pub fn classify(handles: &dyn HandleSource, req: &ClassifyRequest) -> Result<Cla
         |sig_name, named| classification_results(sig_name, named, req.examples.len()),
     )?;
     Ok(ClassifyResponse { model_version, results })
+}
+
+/// [`classify_with`] using unbatched direct execution.
+pub fn classify(handles: &dyn HandleSource, req: &ClassifyRequest) -> Result<ClassifyResponse> {
+    classify_with(handles, &DirectRunner, req)
 }
 
 #[cfg(test)]

@@ -289,14 +289,19 @@ pub fn examples_to_tensor(
     feature: &str,
     dim: usize,
 ) -> Result<crate::base::tensor::Tensor> {
+    use crate::base::error::ErrorKind;
     let mut rows = Vec::with_capacity(examples.len());
     for (i, ex) in examples.iter().enumerate() {
-        let f = ex.floats(feature)?;
+        // Malformed examples are the caller's fault: carry
+        // InvalidArgument so the gateway answers 400, not 500.
+        let f = ex
+            .floats(feature)
+            .map_err(|e| ErrorKind::InvalidArgument.err(format!("example {i}: {e}")))?;
         if f.len() != dim {
-            bail!(
+            return Err(ErrorKind::InvalidArgument.err(format!(
                 "example {i}: feature '{feature}' has {} values, want {dim}",
                 f.len()
-            );
+            )));
         }
         rows.push(f);
     }

@@ -13,7 +13,10 @@ use super::example::{examples_to_tensor, Example};
 use super::predict::{name_outputs, recycle_out_tensors, sole_input, HandleSource};
 use super::regress::regression_values;
 use super::ModelSpec;
-use anyhow::{bail, Result};
+use crate::bail_kind;
+use crate::base::error::ErrorKind;
+use crate::serving::{DirectRunner, Runner};
+use anyhow::Result;
 
 /// Which typed API a task invokes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,17 +74,20 @@ pub struct MultiInferenceResponse {
     pub results: Vec<(String, HeadResult)>,
 }
 
-/// Execute a multi-inference request: decode once, run once, fan the
+/// Execute a multi-inference request: decode once, run once (through
+/// `runner`, so the shared execution merges with concurrent requests
+/// when a [`crate::serving::SessionRegistry`] is in play), fan the
 /// shared outputs out to every head.
-pub fn multi_inference(
+pub fn multi_inference_with(
     handles: &dyn HandleSource,
+    runner: &dyn Runner,
     req: &MultiInferenceRequest,
 ) -> Result<MultiInferenceResponse> {
     if req.tasks.is_empty() {
-        bail!("multi_inference: empty task list");
+        return Err(ErrorKind::InvalidArgument.err("multi_inference: empty task list"));
     }
     if req.examples.is_empty() {
-        bail!("multi_inference: empty example list");
+        return Err(ErrorKind::InvalidArgument.err("multi_inference: empty example list"));
     }
     let handle = handles.hlo_handle(&req.spec)?;
     let spec = &handle.spec;
@@ -93,7 +99,8 @@ pub fn multi_inference(
     for task in &req.tasks {
         let (sig_name, sig) = spec.signature_def(&task.signature)?;
         if sig.method != task.method.as_str() {
-            bail!(
+            bail_kind!(
+                ErrorKind::InvalidArgument,
                 "model '{}' signature '{sig_name}' has method '{}', task wants '{}'",
                 req.spec.name,
                 sig.method,
@@ -104,7 +111,8 @@ pub fn multi_inference(
         match shared_input {
             None => shared_input = Some(input),
             Some(prev) if prev == input => {}
-            Some(prev) => bail!(
+            Some(prev) => bail_kind!(
+                ErrorKind::InvalidArgument,
                 "multi_inference: heads disagree on the shared input \
                  ('{}' vs '{}') — one decoded batch cannot feed both",
                 prev.name,
@@ -118,7 +126,7 @@ pub fn multi_inference(
     // Decode the example batch ONCE, run the servable ONCE. The
     // feature tensor recycles whether or not the run succeeded.
     let input = examples_to_tensor(&req.examples, &input_info.name, spec.input_dim)?;
-    let run = handle.run(&input);
+    let run = runner.run(&handle, &input);
     input.recycle_into(&crate::util::pool::BufferPool::global());
     let outputs = run?;
 
@@ -150,6 +158,14 @@ pub fn multi_inference(
     // back to the pools (error paths included).
     recycle_out_tensors(outputs);
     Ok(MultiInferenceResponse { model_version: handle.id().version, results: results? })
+}
+
+/// [`multi_inference_with`] using unbatched direct execution.
+pub fn multi_inference(
+    handles: &dyn HandleSource,
+    req: &MultiInferenceRequest,
+) -> Result<MultiInferenceResponse> {
+    multi_inference_with(handles, &DirectRunner, req)
 }
 
 /// Re-shape a classify-style head back into per-example results

@@ -16,6 +16,8 @@
 
 use super::example::{examples_to_tensor, Example};
 use super::ModelSpec;
+use crate::bail_kind;
+use crate::base::error::ErrorKind;
 use crate::base::servable::ServableHandle;
 use crate::base::tensor::Tensor;
 use crate::lifecycle::basic_manager::{BasicManager, VersionRequest};
@@ -24,6 +26,7 @@ use crate::lifecycle::manager::AspiredVersionsManager;
 use crate::runtime::artifacts::{ArtifactSpec, SignatureDef, TensorInfo};
 use crate::runtime::hlo_servable::HloServable;
 use crate::runtime::pjrt::OutTensor;
+use crate::serving::{DirectRunner, Runner};
 use anyhow::{bail, Result};
 
 /// Anything that can resolve HLO servable handles from a [`ModelSpec`]
@@ -37,7 +40,8 @@ pub trait HandleSource: Send + Sync {
 /// spec onto a concrete [`VersionRequest`].
 fn version_request(spec: &ModelSpec) -> Result<VersionRequest> {
     if let Some(label) = &spec.label {
-        bail!(
+        bail_kind!(
+            ErrorKind::InvalidArgument,
             "model '{}': version label '{label}' cannot be resolved on this lookup path \
              (no label resolver)",
             spec.name
@@ -70,7 +74,8 @@ pub fn resolve_spec_version(
     spec: &ModelSpec,
 ) -> Result<Option<u64>> {
     match (spec.version, &spec.label) {
-        (Some(v), Some(label)) => bail!(
+        (Some(v), Some(label)) => bail_kind!(
+            ErrorKind::InvalidArgument,
             "model '{}': request pins both version {v} and label '{label}' — use one",
             spec.name
         ),
@@ -161,7 +166,8 @@ pub(crate) fn sole_input<'a>(
 ) -> Result<&'a TensorInfo> {
     match sig.inputs.as_slice() {
         [one] => Ok(one),
-        many => bail!(
+        many => bail_kind!(
+            ErrorKind::InvalidArgument,
             "model '{model}' signature '{sig_name}': {} declared inputs; the HLO runtime \
              serves single-input signatures only",
             many.len()
@@ -180,7 +186,8 @@ pub(crate) fn bind_input<'a>(
 ) -> Result<&'a Tensor> {
     let declared = sole_input(model, sig_name, sig)?;
     let bound = match inputs {
-        [] => bail!(
+        [] => bail_kind!(
+            ErrorKind::InvalidArgument,
             "model '{model}' signature '{sig_name}': missing input tensor '{}'",
             declared.name
         ),
@@ -191,14 +198,16 @@ pub(crate) fn bind_input<'a>(
             for (name, t) in named {
                 if name == &declared.name {
                     if found.is_some() {
-                        bail!(
+                        bail_kind!(
+                            ErrorKind::InvalidArgument,
                             "model '{model}' signature '{sig_name}': input tensor \
                              '{name}' supplied more than once"
                         );
                     }
                     found = Some(t);
                 } else {
-                    bail!(
+                    bail_kind!(
+                        ErrorKind::InvalidArgument,
                         "model '{model}' signature '{sig_name}': unexpected input tensor \
                          '{name}' (declared inputs: [\"{}\"])",
                         declared.name
@@ -206,15 +215,16 @@ pub(crate) fn bind_input<'a>(
                 }
             }
             found.ok_or_else(|| {
-                anyhow::anyhow!(
+                ErrorKind::InvalidArgument.err(format!(
                     "model '{model}' signature '{sig_name}': missing input tensor '{}'",
                     declared.name
-                )
+                ))
             })?
         }
     };
     if !declared.matches_shape(bound.shape()) {
-        bail!(
+        bail_kind!(
+            ErrorKind::InvalidArgument,
             "model '{model}' signature '{sig_name}': input tensor '{}' has shape {:?}, \
              want {:?}",
             declared.name,
@@ -275,11 +285,13 @@ pub(crate) fn recycle_out_tensors(outputs: Vec<OutTensor>) {
 
 /// The shared classify/regress pipeline: validate the signature's
 /// method, build the feature tensor from the examples, run the
-/// servable, extract the typed result from the named outputs, and
-/// recycle both the input and the output storage (error paths
+/// servable **through the runner** (the serving path's cross-request
+/// batching seam), extract the typed result from the named outputs,
+/// and recycle both the input and the output storage (error paths
 /// included). Returns `(serving version, extracted result)`.
 pub(crate) fn run_example_signature<T>(
     handles: &dyn HandleSource,
+    runner: &dyn Runner,
     spec: &ModelSpec,
     signature: &str,
     method: &str,
@@ -289,7 +301,8 @@ pub(crate) fn run_example_signature<T>(
     let handle = handles.hlo_handle(spec)?;
     let (sig_name, sig) = handle.spec.signature_def(signature)?;
     if sig.method != method {
-        bail!(
+        bail_kind!(
+            ErrorKind::InvalidArgument,
             "model '{}' signature '{sig_name}' has method '{}', not {method}",
             spec.name,
             sig.method
@@ -297,7 +310,7 @@ pub(crate) fn run_example_signature<T>(
     }
     let input_info = sole_input(&spec.name, sig_name, sig)?;
     let input = examples_to_tensor(examples, &input_info.name, handle.spec.input_dim)?;
-    let run = handle.run(&input);
+    let run = runner.run(&handle, &input);
     // The feature tensor came from the global pool; recycle it whether
     // or not the run succeeded (error paths must not leak pool misses).
     input.recycle_into(&crate::util::pool::BufferPool::global());
@@ -311,12 +324,19 @@ pub(crate) fn run_example_signature<T>(
     Ok((handle.id().version, result?))
 }
 
-/// Execute a predict request against a handle source.
-pub fn predict(handles: &dyn HandleSource, req: &PredictRequest) -> Result<PredictResponse> {
+/// Execute a predict request against a handle source, with execution
+/// going through `runner` — hand in a
+/// [`crate::serving::SessionRegistry`] and concurrent predicts merge
+/// into shared device batches.
+pub fn predict_with(
+    handles: &dyn HandleSource,
+    runner: &dyn Runner,
+    req: &PredictRequest,
+) -> Result<PredictResponse> {
     let handle = handles.hlo_handle(&req.spec)?;
     let (sig_name, sig) = handle.spec.signature_def(&req.signature)?;
     let input = bind_input(&req.spec.name, sig_name, sig, &req.inputs)?;
-    let raw = handle.run(input)?;
+    let raw = runner.run(&handle, input)?;
     let named = name_outputs(&handle.spec, sig_name, sig, &raw)?;
     // Recycle outputs the signature did not select (sole owners);
     // selected ones are still referenced by `named` and the pool
@@ -324,6 +344,12 @@ pub fn predict(handles: &dyn HandleSource, req: &PredictRequest) -> Result<Predi
     recycle_out_tensors(raw);
     Ok(PredictResponse { model_version: handle.id().version, outputs: named })
     // handle drops here → refs retired via the reclaim thread
+}
+
+/// [`predict_with`] using unbatched direct execution (library callers
+/// without a serving stack).
+pub fn predict(handles: &dyn HandleSource, req: &PredictRequest) -> Result<PredictResponse> {
+    predict_with(handles, &DirectRunner, req)
 }
 
 #[cfg(test)]

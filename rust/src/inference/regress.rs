@@ -4,7 +4,9 @@
 use super::example::Example;
 use super::predict::{run_example_signature, HandleSource};
 use super::ModelSpec;
+use crate::base::error::ErrorKind;
 use crate::runtime::pjrt::OutTensor;
+use crate::serving::{DirectRunner, Runner};
 use anyhow::{bail, Result};
 
 #[derive(Debug, Clone)]
@@ -61,13 +63,19 @@ pub(crate) fn regression_values(
     Ok(values.data()[..n].to_vec())
 }
 
-/// Execute a regression request.
-pub fn regress(handles: &dyn HandleSource, req: &RegressRequest) -> Result<RegressResponse> {
+/// Execute a regression request, with servable execution going through
+/// `runner` (the serving path's cross-request batching seam).
+pub fn regress_with(
+    handles: &dyn HandleSource,
+    runner: &dyn Runner,
+    req: &RegressRequest,
+) -> Result<RegressResponse> {
     if req.examples.is_empty() {
-        bail!("regress: empty example list");
+        return Err(ErrorKind::InvalidArgument.err("regress: empty example list"));
     }
     let (model_version, values) = run_example_signature(
         handles,
+        runner,
         &req.spec,
         &req.signature,
         "regress",
@@ -75,6 +83,11 @@ pub fn regress(handles: &dyn HandleSource, req: &RegressRequest) -> Result<Regre
         |sig_name, named| regression_values(sig_name, named, req.examples.len()),
     )?;
     Ok(RegressResponse { model_version, values })
+}
+
+/// [`regress_with`] using unbatched direct execution.
+pub fn regress(handles: &dyn HandleSource, req: &RegressRequest) -> Result<RegressResponse> {
+    regress_with(handles, &DirectRunner, req)
 }
 
 #[cfg(test)]

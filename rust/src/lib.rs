@@ -37,6 +37,7 @@ pub mod lifecycle;
 pub mod rpc;
 pub mod runtime;
 pub mod server;
+pub mod serving;
 pub mod sim;
 pub mod tfs2;
 pub mod util;

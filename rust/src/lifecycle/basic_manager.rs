@@ -334,23 +334,23 @@ impl BasicManager {
         name: &str,
         version: VersionRequest,
     ) -> Result<ServableHandle<T>> {
+        use crate::base::error::ErrorKind;
         let guard = self.serving.read();
         let versions = guard
             .get(name)
-            .ok_or_else(|| anyhow!("servable '{name}' not found"))?;
+            .ok_or_else(|| ErrorKind::NotFound.err(format!("servable '{name}' not found")))?;
         let (v, servable) = match version {
             VersionRequest::Latest => {
-                let (v, s) = versions
-                    .iter()
-                    .next_back()
-                    .ok_or_else(|| anyhow!("servable '{name}' has no ready versions"))?;
+                let (v, s) = versions.iter().next_back().ok_or_else(|| {
+                    ErrorKind::NotFound.err(format!("servable '{name}' has no ready versions"))
+                })?;
                 (*v, s)
             }
             VersionRequest::Specific(v) => (
                 v,
-                versions
-                    .get(&v)
-                    .ok_or_else(|| anyhow!("servable '{name}' version {v} not ready"))?,
+                versions.get(&v).ok_or_else(|| {
+                    ErrorKind::NotFound.err(format!("servable '{name}' version {v} not ready"))
+                })?,
             ),
         };
         let id = ServableId::new(name, v);

@@ -26,7 +26,9 @@
 //!
 //! Label persistence in the TFS² store is a ROADMAP follow-on.
 
-use anyhow::{bail, Result};
+use crate::bail_kind;
+use crate::base::error::ErrorKind;
+use anyhow::Result;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::RwLock;
 
@@ -54,10 +56,11 @@ impl LabelResolver {
         serving: &[u64],
     ) -> Result<Option<u64>> {
         if label.is_empty() {
-            bail!("model '{model}': empty version label");
+            bail_kind!(ErrorKind::InvalidArgument, "model '{model}': empty version label");
         }
         if !serving.contains(&version) {
-            bail!(
+            bail_kind!(
+                ErrorKind::FailedPrecondition,
                 "cannot label {model}:{version} as '{label}': version is not loaded and \
                  serving (serving versions: {serving:?})"
             );
@@ -108,7 +111,8 @@ impl LabelResolver {
                     .get(model)
                     .map(|l| l.keys().cloned().collect())
                     .unwrap_or_default();
-                bail!(
+                bail_kind!(
+                    ErrorKind::NotFound,
                     "model '{model}' has no version labeled '{label}' (known labels: {known:?})"
                 )
             }

@@ -133,7 +133,10 @@ mod tests {
             "127.0.0.1:0",
             Arc::new(|req| match req {
                 Request::Ping => Response::Pong,
-                _ => Response::Error { message: "no".into() },
+                _ => Response::Error {
+                    kind: crate::base::error::ErrorKind::Internal,
+                    message: "no".into(),
+                },
             }),
         )
         .unwrap()

@@ -130,7 +130,10 @@ mod tests {
                 }
                 match req {
                     Request::Ping => Response::Pong,
-                    _ => Response::Error { message: "no".into() },
+                    _ => Response::Error {
+                        kind: crate::base::error::ErrorKind::Internal,
+                        message: "no".into(),
+                    },
                 }
             }),
         )

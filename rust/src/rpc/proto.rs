@@ -21,6 +21,7 @@
 //! connection loops reuse one allocation **and** reply with a single
 //! `write` syscall ([`super::frame::write_framed`]).
 
+use crate::base::error::ErrorKind;
 use crate::base::tensor::{Tensor, TensorI32};
 use crate::inference::example::Example;
 use crate::inference::multi::{HeadResult, InferenceMethod, InferenceTask};
@@ -121,7 +122,10 @@ pub enum Response {
     ModelStatus { versions: Vec<(u64, String)> },
     Status { text: String },
     Pong,
-    Error { message: String },
+    /// A typed serving error: `kind` is the structured classification
+    /// (what the client should do), `message` the human detail. The
+    /// HTTP gateway maps status codes from `kind`, not message text.
+    Error { kind: ErrorKind, message: String },
 }
 
 // ------------------------------------------------------------ helpers
@@ -787,8 +791,9 @@ impl Response {
                     put_head_result(out, head);
                 }
             }
-            Response::Error { message } => {
+            Response::Error { kind, message } => {
                 out.push(255);
+                out.push(kind.code());
                 put_str(out, message);
             }
         }
@@ -875,17 +880,24 @@ impl Response {
                 }
                 Response::MultiInference { model_version, results }
             }
-            255 => Response::Error { message: r.str()? },
+            255 => Response::Error { kind: ErrorKind::from_code(r.u8()?), message: r.str()? },
             t => bail!("unknown response tag {t}"),
         };
         r.done()?;
         Ok(resp)
     }
 
-    /// Convert an error response to a Result.
+    /// Build an error response from an `anyhow` error, carrying its
+    /// kind onto the wire (plain errors classify as `Internal`).
+    pub fn error(e: &anyhow::Error) -> Response {
+        Response::Error { kind: ErrorKind::of(e), message: e.to_string() }
+    }
+
+    /// Convert an error response to a Result. The kind survives the
+    /// conversion: `ErrorKind::of` on the returned error recovers it.
     pub fn into_result(self) -> Result<Response> {
         match self {
-            Response::Error { message } => bail!("{message}"),
+            Response::Error { kind, message } => Err(kind.err(message)),
             other => Ok(other),
         }
     }
@@ -1041,7 +1053,14 @@ mod tests {
         });
         roundtrip_resp(Response::Status { text: "ok\nqps 12".into() });
         roundtrip_resp(Response::Pong);
-        roundtrip_resp(Response::Error { message: "boom".into() });
+        for kind in [
+            ErrorKind::NotFound,
+            ErrorKind::InvalidArgument,
+            ErrorKind::FailedPrecondition,
+            ErrorKind::Internal,
+        ] {
+            roundtrip_resp(Response::Error { kind, message: "boom".into() });
+        }
     }
 
     #[test]
@@ -1151,8 +1170,35 @@ mod tests {
     #[test]
     fn error_into_result() {
         assert!(Response::Pong.into_result().is_ok());
-        let err = Response::Error { message: "nope".into() }.into_result();
-        assert!(err.unwrap_err().to_string().contains("nope"));
+        let err = Response::Error {
+            kind: ErrorKind::NotFound,
+            message: "nope".into(),
+        }
+        .into_result()
+        .unwrap_err();
+        assert!(err.to_string().contains("nope"));
+        // The typed kind crosses the wire and survives into_result.
+        assert_eq!(ErrorKind::of(&err), ErrorKind::NotFound);
+    }
+
+    #[test]
+    fn error_kind_truncation_and_unknown_codes() {
+        // Truncating the kind byte or the message must error cleanly.
+        let full = Response::Error {
+            kind: ErrorKind::FailedPrecondition,
+            message: "drained".into(),
+        }
+        .encode();
+        for cut in 0..full.len() {
+            assert!(Response::decode(&full[..cut]).is_err(), "error cut={cut}");
+        }
+        // An unknown kind code from a newer peer degrades to Internal.
+        let mut wire = full.clone();
+        wire[1] = 77;
+        assert_eq!(
+            Response::decode(&wire).unwrap(),
+            Response::Error { kind: ErrorKind::Internal, message: "drained".into() }
+        );
     }
 
     #[test]

@@ -89,7 +89,10 @@ impl RpcServer {
             }
             let response = match Request::decode(&payload) {
                 Ok(req) => handler(req),
-                Err(e) => Response::Error { message: format!("bad request: {e}") },
+                Err(e) => Response::Error {
+                    kind: crate::base::error::ErrorKind::InvalidArgument,
+                    message: format!("bad request: {e}"),
+                },
             };
             counter.fetch_add(1, Ordering::Relaxed);
             // Header bytes are reserved inside the scratch buffer, so
@@ -144,7 +147,10 @@ mod tests {
             Arc::new(|req| match req {
                 Request::Ping => Response::Pong,
                 Request::Status => Response::Status { text: "ok".into() },
-                _ => Response::Error { message: "unsupported".into() },
+                _ => Response::Error {
+                    kind: crate::base::error::ErrorKind::Internal,
+                    message: "unsupported".into(),
+                },
             }),
         )
         .unwrap()

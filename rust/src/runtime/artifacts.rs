@@ -221,12 +221,12 @@ impl ArtifactSpec {
         let want = if name.is_empty() { DEFAULT_SIGNATURE } else { name };
         match self.signatures.get_key_value(want) {
             Some((k, v)) => Ok((k.as_str(), v)),
-            None => bail!(
+            None => Err(crate::base::error::ErrorKind::InvalidArgument.err(format!(
                 "model '{}' has no signature '{}' (available: {:?})",
                 self.model_name,
                 want,
                 self.signatures.keys().collect::<Vec<_>>()
-            ),
+            ))),
         }
     }
 

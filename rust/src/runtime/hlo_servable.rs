@@ -23,7 +23,7 @@ use crate::base::tensor::{Tensor, TensorI32};
 use crate::batching::padding::pad_to_allowed;
 use crate::lifecycle::source_adapter::FnSourceAdapter;
 use crate::util::pool::BufferPool;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -40,6 +40,11 @@ enum Engine {
 pub struct HloServable {
     pub spec: ArtifactSpec,
     engine: Engine,
+    /// Device invocations ([`HloServable::run`] calls). With
+    /// cross-request batching live, this is the denominator of the
+    /// merge ratio: N concurrent requests should complete in ≪ N
+    /// executions (what `tests/serving_concurrency.rs` pins).
+    executions: std::sync::atomic::AtomicU64,
 }
 
 impl HloServable {
@@ -54,13 +59,26 @@ impl HloServable {
             let path = spec.artifact_path(version_dir, b);
             execs.insert(b, runtime.compile_hlo_file(&path)?);
         }
-        Ok(HloServable { spec, engine: Engine::Compiled(execs) })
+        Ok(HloServable {
+            spec,
+            engine: Engine::Compiled(execs),
+            executions: std::sync::atomic::AtomicU64::new(0),
+        })
     }
 
     /// A servable backed by the synthetic engine: same spec/signature
     /// contract, no compiled artifacts required.
     pub fn synthetic(spec: ArtifactSpec) -> HloServable {
-        HloServable { spec, engine: Engine::Synthetic }
+        HloServable {
+            spec,
+            engine: Engine::Synthetic,
+            executions: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// How many times [`HloServable::run`] has executed a batch.
+    pub fn executions(&self) -> u64 {
+        self.executions.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// The servable's named signatures (what `GetModelMetadata`
@@ -78,14 +96,17 @@ impl HloServable {
     /// ladder inputs pad once through the global buffer pool, and the
     /// padded buffer recycles as soon as the executable is done with it.
     pub fn run(&self, input: &Tensor) -> Result<Vec<OutTensor>> {
+        use crate::base::error::ErrorKind;
+        self.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let rows = input.batch();
         if input.rank() != 2 || input.shape()[1] != self.spec.input_dim {
-            bail!(
+            // Request-caused: the gateway should answer 400, not 500.
+            return Err(ErrorKind::InvalidArgument.err(format!(
                 "{}: input shape {:?}, want [*, {}]",
                 self.spec.model_name,
                 input.shape(),
                 self.spec.input_dim
-            );
+            )));
         }
         let execs = match &self.engine {
             Engine::Synthetic => {
@@ -93,15 +114,18 @@ impl HloServable {
                 // beyond the ladder are rejected, not silently served.
                 let ladder = &self.spec.allowed_batch_sizes;
                 if pad_to_allowed(rows, ladder).is_none() {
-                    bail!("batch {rows} exceeds compiled ladder {ladder:?}");
+                    return Err(ErrorKind::InvalidArgument
+                        .err(format!("batch {rows} exceeds compiled ladder {ladder:?}")));
                 }
                 return self.run_synthetic(input);
             }
             Engine::Compiled(execs) => execs,
         };
         let ladder: Vec<usize> = execs.keys().copied().collect();
-        let target = pad_to_allowed(rows, &ladder)
-            .ok_or_else(|| anyhow!("batch {rows} exceeds compiled ladder {ladder:?}"))?;
+        let target = pad_to_allowed(rows, &ladder).ok_or_else(|| {
+            ErrorKind::InvalidArgument
+                .err(format!("batch {rows} exceeds compiled ladder {ladder:?}"))
+        })?;
         let outputs = if target == rows {
             execs[&target].run(input)?
         } else {

@@ -54,6 +54,38 @@ impl OutTensor {
             OutTensor::I32(t) => OutTensor::I32(t.truncate_batch(n)?),
         })
     }
+
+    /// Zero-copy split along the batch dimension — how the batching
+    /// session scatters one merged device output back to its callers.
+    pub fn split(&self, sizes: &[usize]) -> Result<Vec<OutTensor>> {
+        Ok(match self {
+            OutTensor::F32(t) => t.split(sizes)?.into_iter().map(OutTensor::F32).collect(),
+            OutTensor::I32(t) => t.split(sizes)?.into_iter().map(OutTensor::I32).collect(),
+        })
+    }
+
+    /// Concatenate along the batch dimension (the splitter's
+    /// reassembly of an oversized request's chunk outputs). All parts
+    /// must share one dtype.
+    pub fn concat(parts: &[OutTensor]) -> Result<OutTensor> {
+        match parts.first() {
+            None => bail!("empty concat"),
+            Some(OutTensor::F32(_)) => {
+                let fs: Vec<Tensor> = parts
+                    .iter()
+                    .map(|p| p.as_f32().cloned())
+                    .collect::<Result<_>>()?;
+                Ok(OutTensor::F32(Tensor::concat(&fs)?))
+            }
+            Some(OutTensor::I32(_)) => {
+                let is: Vec<TensorI32> = parts
+                    .iter()
+                    .map(|p| p.as_i32().cloned())
+                    .collect::<Result<_>>()?;
+                Ok(OutTensor::I32(TensorI32::concat(&is)?))
+            }
+        }
+    }
 }
 
 pub use backend::{CompiledModel, XlaRuntime};
@@ -268,6 +300,24 @@ mod tests {
         let v = o.truncate_batch(2).unwrap();
         assert_eq!(v.batch(), 2);
         assert!(v.as_f32().unwrap().shares_storage(&t));
+    }
+
+    #[test]
+    fn out_tensor_split_concat_roundtrip() {
+        let f = OutTensor::F32(Tensor::matrix(vec![vec![1.0], vec![2.0], vec![3.0]]).unwrap());
+        let parts = f.split(&[2, 1]).unwrap();
+        assert_eq!(parts[0].batch(), 2);
+        assert!(parts[1].as_f32().unwrap().shares_storage(f.as_f32().unwrap()));
+        assert_eq!(OutTensor::concat(&parts).unwrap(), f);
+
+        let i = OutTensor::I32(TensorI32::new(vec![3], vec![7, 8, 9]).unwrap());
+        let parts = i.split(&[1, 2]).unwrap();
+        assert_eq!(parts[1].as_i32().unwrap().data(), &[8, 9]);
+        assert_eq!(OutTensor::concat(&parts).unwrap(), i);
+
+        // Mixed dtypes never concat.
+        assert!(OutTensor::concat(&[f, i]).is_err());
+        assert!(OutTensor::concat(&[]).is_err());
     }
 
     #[cfg(not(feature = "xla"))]

@@ -21,13 +21,14 @@
 
 use super::config::ServerConfig;
 use crate::base::aspired::{AspiredVersionsCallback, Source};
+use crate::base::error::ErrorKind;
 use crate::http::server::HttpServer;
-use crate::inference::classify::{classify, ClassifyRequest};
+use crate::inference::classify::{classify_with, ClassifyRequest};
 use crate::inference::example::Feature;
 use crate::inference::logger::{digest_f32s, RequestLogger};
-use crate::inference::multi::{multi_inference, MultiInferenceRequest};
-use crate::inference::predict::{predict, LabeledSource, PredictRequest};
-use crate::inference::regress::{regress, RegressRequest};
+use crate::inference::multi::{multi_inference_with, MultiInferenceRequest};
+use crate::inference::predict::{predict_with, LabeledSource, PredictRequest};
+use crate::inference::regress::{regress_with, RegressRequest};
 use crate::inference::table::{table_source_adapter, TableServable};
 use crate::inference::ModelSpec;
 use crate::lifecycle::basic_manager::{ManagerOptions, VersionRequest};
@@ -42,6 +43,7 @@ use crate::rpc::proto::{Request, Response, VersionMetadata};
 use crate::rpc::server::RpcServer;
 use crate::runtime::hlo_servable::{hlo_source_adapter, HloServable};
 use crate::runtime::pjrt::XlaRuntime;
+use crate::serving::SessionRegistry;
 use crate::util::metrics::Registry;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -57,6 +59,9 @@ pub struct ServerCore {
     /// Version labels ("canary"/"stable" → version), consulted on
     /// every labeled lookup.
     pub labels: Arc<LabelResolver>,
+    /// Per-servable batching sessions (the cross-request merge layer
+    /// both wire planes execute through).
+    pub sessions: Arc<SessionRegistry>,
     pub registry: Arc<Registry>,
     pub logger: Arc<RequestLogger>,
 }
@@ -139,12 +144,22 @@ impl ModelServer {
         let mut source = FileSystemSource::new(watched, config.poll_interval);
         source.set_aspired_versions_callback(router);
 
+        // Cross-request batching: one session per loaded (model,
+        // version), kept in sync with the lifecycle via the event bus
+        // (sessions open on Ready, drain on the unload path). Both the
+        // RPC and HTTP planes execute through this registry, so their
+        // concurrent requests merge into shared device batches.
+        let registry = Registry::new();
+        let sessions = SessionRegistry::new(config.batching.clone(), Arc::clone(&registry));
+        sessions.attach(avm.basic());
+
         let core = Arc::new(ServerCore {
             config: config.clone(),
             avm,
             source,
             labels: Arc::new(LabelResolver::new()),
-            registry: Registry::new(),
+            sessions,
+            registry,
             logger: Arc::new(RequestLogger::new(0.1, 4096, 42)),
         });
 
@@ -281,7 +296,10 @@ impl ServerCore {
                         .histogram("predict.batch_rows")
                         .record(input.batch() as u64);
                 }
-                let r = predict(&labeled, &preq);
+                // The serving path always executes through the session
+                // registry: concurrent predicts (RPC and REST alike)
+                // merge into shared device batches.
+                let r = predict_with(&labeled, self.sessions.as_ref(), &preq);
                 // The decoded request buffers came from the global
                 // pool; hand them back now that inference consumed them.
                 for (_, input) in preq.inputs {
@@ -297,12 +315,16 @@ impl ServerCore {
                                 outputs: r.outputs,
                             }
                         }
-                        Err(e) => Response::Error { message: e.to_string() },
+                        Err(e) => Response::error(&e),
                     },
                 )
             }
             Request::Classify { spec, signature, examples } => {
-                let r = classify(&labeled, &ClassifyRequest { spec, signature, examples });
+                let r = classify_with(
+                    &labeled,
+                    self.sessions.as_ref(),
+                    &ClassifyRequest { spec, signature, examples },
+                );
                 (
                     "classify",
                     match r {
@@ -311,12 +333,16 @@ impl ServerCore {
                             classes: r.results.iter().map(|c| c.class).collect(),
                             log_probs: r.results.into_iter().map(|c| c.log_probs).collect(),
                         },
-                        Err(e) => Response::Error { message: e.to_string() },
+                        Err(e) => Response::error(&e),
                     },
                 )
             }
             Request::Regress { spec, signature, examples } => {
-                let r = regress(&labeled, &RegressRequest { spec, signature, examples });
+                let r = regress_with(
+                    &labeled,
+                    self.sessions.as_ref(),
+                    &RegressRequest { spec, signature, examples },
+                );
                 (
                     "regress",
                     match r {
@@ -324,13 +350,17 @@ impl ServerCore {
                             model_version: r.model_version,
                             values: r.values,
                         },
-                        Err(e) => Response::Error { message: e.to_string() },
+                        Err(e) => Response::error(&e),
                     },
                 )
             }
             Request::MultiInference { spec, tasks, examples } => {
-                let r = multi_inference(
+                // The shared execution routes through the per-model
+                // session too, so concurrent MultiInference calls
+                // merge (ROADMAP: "Batching for MultiInference").
+                let r = multi_inference_with(
                     &labeled,
+                    self.sessions.as_ref(),
                     &MultiInferenceRequest { spec, tasks, examples },
                 );
                 (
@@ -340,7 +370,7 @@ impl ServerCore {
                             model_version: r.model_version,
                             results: r.results,
                         },
-                        Err(e) => Response::Error { message: e.to_string() },
+                        Err(e) => Response::error(&e),
                     },
                 )
             }
@@ -376,6 +406,7 @@ impl ServerCore {
                                 });
                                 self.labels.rollback(&model, &label, version, restore);
                                 Response::Error {
+                                    kind: ErrorKind::FailedPrecondition,
                                     message: format!(
                                         "cannot label {model}:{version} as '{label}': \
                                          version unloaded concurrently"
@@ -383,7 +414,7 @@ impl ServerCore {
                                 }
                             }
                         }
-                        Err(e) => Response::Error { message: e.to_string() },
+                        Err(e) => Response::error(&e),
                     },
                 )
             }
@@ -393,6 +424,7 @@ impl ServerCore {
                     Response::Ack
                 } else {
                     Response::Error {
+                        kind: ErrorKind::NotFound,
                         message: format!("model '{model}' has no version labeled '{label}'"),
                     }
                 },
@@ -406,7 +438,7 @@ impl ServerCore {
                     Ok(h) => Response::Lookup {
                         values: h.lookup(&key).map(|v| v.to_vec()),
                     },
-                    Err(e) => Response::Error { message: e.to_string() },
+                    Err(e) => Response::error(&e),
                 },
             ),
             Request::SetAspired { model, versions } => {
@@ -475,10 +507,11 @@ impl ServerCore {
         // Same version/label resolution rule as the lookup path.
         let wanted: Vec<u64> =
             match crate::inference::predict::resolve_spec_version(&self.labels, spec) {
-                Err(e) => return Response::Error { message: e.to_string() },
+                Err(e) => return Response::error(&e),
                 Ok(Some(v)) => {
                     if !states.contains_key(&v) {
                         return Response::Error {
+                            kind: ErrorKind::NotFound,
                             message: format!("model '{}' has no version {v}", spec.name),
                         };
                     }
@@ -488,6 +521,7 @@ impl ServerCore {
             };
         if wanted.is_empty() {
             return Response::Error {
+                kind: ErrorKind::NotFound,
                 message: format!("model '{}' has no versions", spec.name),
             };
         }
@@ -539,6 +573,7 @@ mod tests {
             availability_preserving: true,
             load_threads: 2,
             ram_capacity_bytes: 0,
+            batching: Default::default(),
             models: vec![
                 super::super::config::ModelConfig {
                     name: "mlp_classifier".into(),
@@ -656,6 +691,7 @@ mod tests {
             availability_preserving: true,
             load_threads: 2,
             ram_capacity_bytes: 0,
+            batching: Default::default(),
             models: vec![],
         }
     }

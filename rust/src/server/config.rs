@@ -10,6 +10,17 @@
 //!   "version_policy": "availability_preserving",
 //!   "load_threads": 2,
 //!   "ram_capacity_bytes": 0,
+//!   "batching": {
+//!     "enabled": true,
+//!     "num_batch_threads": 2,
+//!     "max_batch_size": 16,
+//!     "batch_timeout_micros": 2000,
+//!     "max_enqueued_batches": 64,
+//!     "models": [
+//!       {"name": "mlp_classifier", "max_batch_size": 64,
+//!        "batch_timeout_micros": 500}
+//!     ]
+//!   },
 //!   "models": [
 //!     {"name": "mlp_classifier", "platform": "hlo", "serve_latest": 1},
 //!     {"name": "toy_table", "platform": "table", "serve_latest": 1}
@@ -18,6 +29,7 @@
 //! ```
 
 use crate::lifecycle::source::ServingPolicy;
+use crate::serving::{BatchingConfig, BatchingOverride};
 use crate::util::config::Conf;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
@@ -50,6 +62,9 @@ pub struct ServerConfig {
     pub load_threads: usize,
     /// 0 = unlimited.
     pub ram_capacity_bytes: u64,
+    /// Cross-request batching knobs (one `BatchingSession` per loaded
+    /// servable version; see `serving::SessionRegistry`).
+    pub batching: BatchingConfig,
     pub models: Vec<ModelConfig>,
 }
 
@@ -63,6 +78,7 @@ impl Default for ServerConfig {
             availability_preserving: true,
             load_threads: 2,
             ram_capacity_bytes: 0,
+            batching: BatchingConfig::default(),
             models: Vec::new(),
         }
     }
@@ -79,6 +95,7 @@ impl ServerConfig {
             "version_policy",
             "load_threads",
             "ram_capacity_bytes",
+            "batching",
             "models",
         ])?;
         let artifacts_root = PathBuf::from(conf.str_or(
@@ -123,6 +140,7 @@ impl ServerConfig {
         if models.is_empty() {
             bail!("config declares no models");
         }
+        let batching = Self::batching_from_conf(conf)?;
         Ok(ServerConfig {
             port: conf.u64_or("port", 0) as u16,
             http_addr: conf
@@ -139,8 +157,83 @@ impl ServerConfig {
             availability_preserving,
             load_threads: conf.u64_or("load_threads", 2) as usize,
             ram_capacity_bytes: conf.u64_or("ram_capacity_bytes", 0),
+            batching,
             models,
         })
+    }
+
+    /// Parse the `"batching"` object (all keys optional; absent object
+    /// = defaults with batching enabled).
+    fn batching_from_conf(conf: &Conf) -> Result<BatchingConfig> {
+        let defaults = BatchingConfig::default();
+        if let Some(obj) = conf.root().get("batching") {
+            Conf::from_json(obj.clone(), "batching").allow_keys(&[
+                "enabled",
+                "num_batch_threads",
+                "max_batch_size",
+                "batch_timeout_micros",
+                "max_enqueued_batches",
+                "models",
+            ])?;
+        }
+        let mut per_model = std::collections::HashMap::new();
+        if conf.root().get_path("batching.models").is_some() {
+            for m in conf.list("batching.models")? {
+                m.allow_keys(&[
+                    "name",
+                    "max_batch_size",
+                    "batch_timeout_micros",
+                    "max_enqueued_batches",
+                ])?;
+                let name = m.str("name")?.to_string();
+                let get = |key: &str| m.root().get(key).and_then(|v| v.as_u64());
+                per_model.insert(
+                    name,
+                    BatchingOverride {
+                        max_batch_size: get("max_batch_size").map(|v| v as usize),
+                        batch_timeout: get("batch_timeout_micros").map(Duration::from_micros),
+                        max_enqueued_batches: get("max_enqueued_batches")
+                            .map(|v| v as usize),
+                    },
+                );
+            }
+        }
+        // Zero-capacity knobs are config typos, caught here (parse
+        // time) rather than as a panic when the first servable loads.
+        for (name, o) in &per_model {
+            if o.max_batch_size == Some(0) || o.max_enqueued_batches == Some(0) {
+                bail!("batching.models['{name}']: max_batch_size / max_enqueued_batches \
+                       must be positive");
+            }
+        }
+        let batching = BatchingConfig {
+            enabled: conf.bool_or("batching.enabled", defaults.enabled),
+            num_batch_threads: conf
+                .u64_or("batching.num_batch_threads", defaults.num_batch_threads as u64)
+                as usize,
+            max_batch_size: conf
+                .u64_or("batching.max_batch_size", defaults.max_batch_size as u64)
+                as usize,
+            batch_timeout: Duration::from_micros(conf.u64_or(
+                "batching.batch_timeout_micros",
+                defaults.batch_timeout.as_micros() as u64,
+            )),
+            max_enqueued_batches: conf.u64_or(
+                "batching.max_enqueued_batches",
+                defaults.max_enqueued_batches as u64,
+            ) as usize,
+            per_model,
+        };
+        if batching.max_batch_size == 0
+            || batching.max_enqueued_batches == 0
+            || batching.num_batch_threads == 0
+        {
+            bail!(
+                "batching: num_batch_threads, max_batch_size and max_enqueued_batches \
+                 must be positive"
+            );
+        }
+        Ok(batching)
     }
 
     pub fn load(path: &std::path::Path) -> Result<ServerConfig> {
@@ -193,6 +286,82 @@ mod tests {
                 .to_string();
             assert!(err.contains(needle), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn batching_defaults_and_overrides() {
+        // No "batching" object: enabled with defaults.
+        let cfg = ServerConfig::from_conf(
+            &Conf::parse(r#"{"models":[{"name":"x"}]}"#, "t").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.batching, crate::serving::BatchingConfig::default());
+        assert!(cfg.batching.enabled);
+
+        // Full object with a per-model override.
+        let cfg = ServerConfig::from_conf(
+            &Conf::parse(
+                r#"{
+                  "batching": {
+                    "enabled": true,
+                    "num_batch_threads": 4,
+                    "max_batch_size": 64,
+                    "batch_timeout_micros": 500,
+                    "max_enqueued_batches": 32,
+                    "models": [{"name": "c", "max_batch_size": 8}]
+                  },
+                  "models": [{"name": "c"}]
+                }"#,
+                "t",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.batching.num_batch_threads, 4);
+        assert_eq!(cfg.batching.max_batch_size, 64);
+        assert_eq!(cfg.batching.batch_timeout, Duration::from_micros(500));
+        assert_eq!(cfg.batching.max_enqueued_batches, 32);
+        assert_eq!(
+            cfg.batching.per_model.get("c").unwrap().max_batch_size,
+            Some(8)
+        );
+        assert_eq!(cfg.batching.per_model.get("c").unwrap().batch_timeout, None);
+
+        // Zero-capacity knobs are rejected at parse time (they would
+        // otherwise panic the scheduler at servable-load time).
+        for bad in [
+            r#"{"batching": {"max_batch_size": 0}, "models":[{"name":"x"}]}"#,
+            r#"{"batching": {"num_batch_threads": 0}, "models":[{"name":"x"}]}"#,
+            r#"{"batching": {"max_enqueued_batches": 0}, "models":[{"name":"x"}]}"#,
+            r#"{"batching": {"models": [{"name":"x","max_batch_size":0}]},
+                "models":[{"name":"x"}]}"#,
+        ] {
+            let err = ServerConfig::from_conf(&Conf::parse(bad, "t").unwrap())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("positive"), "{bad}: {err}");
+        }
+
+        // Disabled is parseable; unknown batching keys are typos.
+        let cfg = ServerConfig::from_conf(
+            &Conf::parse(
+                r#"{"batching": {"enabled": false}, "models":[{"name":"x"}]}"#,
+                "t",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(!cfg.batching.enabled);
+        let err = ServerConfig::from_conf(
+            &Conf::parse(
+                r#"{"batching": {"max_batchsize": 4}, "models":[{"name":"x"}]}"#,
+                "t",
+            )
+            .unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown key"), "{err}");
     }
 
     #[test]

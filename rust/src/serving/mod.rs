@@ -1,0 +1,485 @@
+//! The live serving path's cross-request batching layer (§3.3 / §2.2.1).
+//!
+//! PR 1 built the machinery — [`BatchingSession`]'s fused single-
+//! allocation assembly, the shared scheduler, the splitter — but the
+//! inference layer still called `handle.run()` directly, so concurrent
+//! requests never merged into hardware-sized batches: exactly the
+//! "performance pitfall of naive implementations" the paper warns
+//! about. This module puts the machinery on the hot path:
+//!
+//! * [`Runner`] — the execution seam the inference layer goes through
+//!   instead of dereferencing the servable itself. [`DirectRunner`] is
+//!   the unbatched strategy (library users, tests, tools);
+//!   [`SessionRegistry`] is the serving strategy.
+//! * [`SessionRegistry`] — one [`BatchingSession`] per loaded
+//!   `(model, version)`, created when a servable reaches `Ready` and
+//!   torn down on the unload path, driven by the manager's event bus
+//!   (the same hook label GC uses). Requests from **both** wire planes
+//!   (binary RPC and HTTP/JSON) resolve the same session, so they
+//!   merge into shared device batches; the splitter chunks oversized
+//!   requests and view tensors scatter outputs back with zero copies.
+//!
+//! Teardown is drain-by-refusal: the per-session runner is gated on a
+//! `closed` flag set before the queue handle drops, so work still
+//! queued when a version unloads gets a clean
+//! [`ErrorKind::FailedPrecondition`] ("retry") instead of hanging or
+//! racing a freed servable — the gate holds the servable handle alive
+//! until the queue fully drains, and the handle's deferred-reclaim
+//! drop runs only after the last queued batch was answered.
+
+use crate::base::error::ErrorKind;
+use crate::base::servable::{ServableHandle, ServableId};
+use crate::base::tensor::Tensor;
+use crate::batching::scheduler::{QueueOptions, SchedulerOptions, SharedBatchScheduler};
+use crate::batching::session::{BatchRunner, BatchingSession, PendingRun, SessionOptions};
+use crate::lifecycle::basic_manager::{BasicManager, VersionRequest};
+use crate::lifecycle::harness::State;
+use crate::runtime::hlo_servable::HloServable;
+use crate::runtime::pjrt::OutTensor;
+use crate::util::metrics::Registry;
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock, Weak};
+use std::time::Duration;
+
+/// How the inference layer executes a servable against an input batch.
+///
+/// `predict`/`classify`/`regress`/`multi_inference` never call
+/// `handle.run()` themselves; they go through a `Runner` so the
+/// serving stack can substitute the cross-request batched path.
+pub trait Runner: Send + Sync {
+    fn run(&self, handle: &ServableHandle<HloServable>, input: &Tensor)
+        -> Result<Vec<OutTensor>>;
+}
+
+/// Unbatched execution: dereference the handle and run. What library
+/// callers get when they don't stand up a [`SessionRegistry`].
+pub struct DirectRunner;
+
+impl Runner for DirectRunner {
+    fn run(
+        &self,
+        handle: &ServableHandle<HloServable>,
+        input: &Tensor,
+    ) -> Result<Vec<OutTensor>> {
+        handle.run(input)
+    }
+}
+
+/// Per-model overrides for the batching knobs (unset fields inherit
+/// the global [`BatchingConfig`] values).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatchingOverride {
+    pub max_batch_size: Option<usize>,
+    pub batch_timeout: Option<Duration>,
+    pub max_enqueued_batches: Option<usize>,
+}
+
+/// Cross-request batching knobs (`ServerConfig.batching`; the analogue
+/// of TF-Serving's `BatchingParameters`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchingConfig {
+    /// Master switch: `false` restores direct per-request execution.
+    pub enabled: bool,
+    /// Shared device threads executing merged batches.
+    pub num_batch_threads: usize,
+    /// Maximum summed rows of one merged batch (clamped per servable
+    /// to its compiled ladder's top).
+    pub max_batch_size: usize,
+    /// How long a non-full batch waits for batch-mates.
+    pub batch_timeout: Duration,
+    /// Closed-but-unprocessed batch limit before load shedding.
+    pub max_enqueued_batches: usize,
+    /// Per-model overrides keyed by model name.
+    pub per_model: HashMap<String, BatchingOverride>,
+}
+
+impl Default for BatchingConfig {
+    fn default() -> Self {
+        BatchingConfig {
+            enabled: true,
+            num_batch_threads: 2,
+            max_batch_size: 16,
+            batch_timeout: Duration::from_micros(2000),
+            max_enqueued_batches: 64,
+            per_model: HashMap::new(),
+        }
+    }
+}
+
+impl BatchingConfig {
+    /// Resolve the queue options for one model, applying its override.
+    fn queue_options(&self, model: &str) -> QueueOptions {
+        let o = self.per_model.get(model);
+        QueueOptions {
+            max_batch_size: o
+                .and_then(|o| o.max_batch_size)
+                .unwrap_or(self.max_batch_size),
+            batch_timeout: o
+                .and_then(|o| o.batch_timeout)
+                .unwrap_or(self.batch_timeout),
+            max_enqueued_batches: o
+                .and_then(|o| o.max_enqueued_batches)
+                .unwrap_or(self.max_enqueued_batches),
+        }
+    }
+}
+
+/// The drain gate + device of one per-servable session: runs merged
+/// batches against the retained servable handle until `closed`, then
+/// refuses with a retryable error. Holding the handle here (not a weak
+/// ref) is what makes "never a use-after-unload" structural: the
+/// servable cannot be freed while this queue still owns work.
+struct GatedRunner {
+    closed: Arc<AtomicBool>,
+    handle: ServableHandle<HloServable>,
+}
+
+impl BatchRunner for GatedRunner {
+    fn run_batch(&self, input: Tensor) -> Result<Vec<OutTensor>> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(ErrorKind::FailedPrecondition.err(format!(
+                "model '{}' version {} is unloading; request drained — retry",
+                self.handle.id().name,
+                self.handle.id().version
+            )));
+        }
+        self.handle.run(&input)
+    }
+}
+
+/// One live `(model, version)` batching session.
+struct ServableSession {
+    session: BatchingSession,
+    closed: Arc<AtomicBool>,
+}
+
+impl ServableSession {
+    fn run(&self, input: &Tensor) -> Result<Vec<OutTensor>> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(ErrorKind::FailedPrecondition
+                .err("model version is unloading; retry"));
+        }
+        // Tensor is a view type: the clone is an O(1) Arc bump, and
+        // the caller keeps ownership of the request storage (the
+        // session's post-assembly recycle is declined while shared).
+        self.session.run(input.clone())
+    }
+}
+
+/// One [`BatchingSession`] per loaded servable version, kept in sync
+/// with the lifecycle via the manager's event bus. Implements
+/// [`Runner`], so handing it to the inference layer puts every
+/// Predict/Classify/Regress/MultiInference — from both wire planes —
+/// through shared device batches.
+pub struct SessionRegistry {
+    scheduler: SharedBatchScheduler<PendingRun>,
+    sessions: RwLock<HashMap<String, BTreeMap<u64, Arc<ServableSession>>>>,
+    config: BatchingConfig,
+    metrics: Arc<Registry>,
+}
+
+impl SessionRegistry {
+    pub fn new(config: BatchingConfig, metrics: Arc<Registry>) -> Arc<SessionRegistry> {
+        Arc::new(SessionRegistry {
+            scheduler: SharedBatchScheduler::new(SchedulerOptions {
+                num_batch_threads: config.num_batch_threads.max(1),
+                name: "serving-batch".into(),
+            }),
+            sessions: RwLock::new(HashMap::new()),
+            config,
+            metrics,
+        })
+    }
+
+    /// Wire this registry to a manager's lifecycle: sessions open when
+    /// a version reaches `Ready` and drain when it starts unloading
+    /// (or errors out). Already-ready versions get sessions
+    /// immediately, so attach order doesn't matter.
+    pub fn attach(self: &Arc<Self>, manager: &Arc<BasicManager>) {
+        let registry = Arc::clone(self);
+        // Weak: the manager owns the bus which owns this subscriber —
+        // a strong ref back would leak the manager.
+        let weak = Arc::downgrade(manager);
+        manager.bus().subscribe(Arc::new(move |ev| {
+            registry.observe(&weak, &ev.id, &ev.state);
+        }));
+        for id in manager.all_ready() {
+            self.open_session(manager, &id);
+        }
+    }
+
+    fn observe(&self, manager: &Weak<BasicManager>, id: &ServableId, state: &State) {
+        match state {
+            State::Ready => {
+                if let Some(manager) = manager.upgrade() {
+                    self.open_session(&manager, id);
+                }
+            }
+            State::Unloading | State::Disabled | State::Error(_) => self.close_session(id),
+            _ => {}
+        }
+    }
+
+    /// Create (or replace) the session for `id`. Non-HLO servables
+    /// (lookup tables) have no tensor batches to merge and are skipped.
+    fn open_session(&self, manager: &Arc<BasicManager>, id: &ServableId) {
+        if !self.config.enabled {
+            return;
+        }
+        let Ok(handle) =
+            manager.handle::<HloServable>(&id.name, VersionRequest::Specific(id.version))
+        else {
+            return;
+        };
+        let ladder = handle.allowed_batch_sizes();
+        let mut queue = self.config.queue_options(&id.name);
+        // A merged batch must stay paddable: clamp to the ladder top.
+        if let Some(&top) = ladder.last() {
+            queue.max_batch_size = queue.max_batch_size.min(top);
+        }
+        // Never hand the scheduler a zero-capacity queue (its
+        // `add_queue` asserts) — config parsing rejects 0, but this
+        // layer guards for programmatic configs too.
+        queue.max_batch_size = queue.max_batch_size.max(1);
+        let closed = Arc::new(AtomicBool::new(false));
+        let runner = GatedRunner { closed: Arc::clone(&closed), handle };
+        let options = SessionOptions {
+            queue,
+            allowed_batch_sizes: ladder,
+            queue_delay_ns: Some(
+                self.metrics
+                    .histogram(&format!("batch.{}.queue_delay_ns", id.name)),
+            ),
+            merged_batch_rows: Some(
+                self.metrics
+                    .histogram(&format!("batch.{}.merged_rows", id.name)),
+            ),
+        };
+        let session = BatchingSession::new(
+            &self.scheduler,
+            &format!("{}:{}", id.name, id.version),
+            options,
+            Arc::new(runner),
+        );
+        let fresh = Arc::new(ServableSession { session, closed });
+        {
+            // First-wins: attach's initial scan and the Ready event can
+            // both try to open the same version; the loser discards its
+            // session so requests already queued on the winner are
+            // never spuriously drained. (A version can only re-load
+            // after Disabled, which removed the old entry.)
+            let mut sessions = self.sessions.write().unwrap();
+            let versions = sessions.entry(id.name.clone()).or_default();
+            if versions.contains_key(&id.version) {
+                drop(sessions);
+                fresh.closed.store(true, Ordering::Release);
+                fresh.session.close();
+                return;
+            }
+            versions.insert(id.version, fresh);
+        }
+        self.metrics.gauge("batch.sessions").add(1);
+        // Unload race: `Unloading` publishes before the serving-map
+        // removal, so a concurrent unload's close event may fire before
+        // our insert. Re-check and self-close if the version already
+        // left the map; the Disabled-event close (published after
+        // removal) is the backstop for the narrower window where this
+        // re-check still sees the version serving.
+        if !manager.ready_versions(&id.name).contains(&id.version) {
+            self.close_session(id);
+            return;
+        }
+        crate::log_info!("batching session open for {id}");
+    }
+
+    /// Drain the session for `id`: gate future batches, then drop the
+    /// queue handle so already-queued work flushes (each queued caller
+    /// is answered with FailedPrecondition by the gate).
+    fn close_session(&self, id: &ServableId) {
+        let removed = {
+            let mut sessions = self.sessions.write().unwrap();
+            let Some(versions) = sessions.get_mut(&id.name) else { return };
+            let removed = versions.remove(&id.version);
+            if versions.is_empty() {
+                sessions.remove(&id.name);
+            }
+            removed
+        };
+        if let Some(session) = removed {
+            // Order matters: gate the runner first, then close the
+            // queue so the eager flush finds the gate down — queued
+            // callers are answered (with FailedPrecondition) right
+            // away instead of waiting out a batch timeout, even while
+            // in-flight request threads still hold session refs.
+            session.closed.store(true, Ordering::Release);
+            session.session.close();
+            self.metrics.gauge("batch.sessions").add(-1);
+            crate::log_info!("batching session drained for {id}");
+        }
+    }
+
+    /// Number of live sessions (tests/diagnostics).
+    pub fn session_count(&self) -> usize {
+        self.sessions.read().unwrap().values().map(BTreeMap::len).sum()
+    }
+
+    /// Tasks queued (not yet executed) in one version's session; 0 if
+    /// no session exists. Tests use this to arrange unload-while-
+    /// queued deterministically.
+    pub fn pending_tasks(&self, id: &ServableId) -> usize {
+        self.session_for(id).map_or(0, |s| s.session.pending_tasks())
+    }
+
+    fn session_for(&self, id: &ServableId) -> Option<Arc<ServableSession>> {
+        self.sessions
+            .read()
+            .unwrap()
+            .get(&id.name)
+            .and_then(|versions| versions.get(&id.version))
+            .cloned()
+    }
+}
+
+impl Runner for SessionRegistry {
+    fn run(
+        &self,
+        handle: &ServableHandle<HloServable>,
+        input: &Tensor,
+    ) -> Result<Vec<OutTensor>> {
+        if !self.config.enabled {
+            return handle.run(input);
+        }
+        match self.session_for(handle.id()) {
+            Some(session) => session.run(input),
+            // No session (registry not attached to this version's
+            // lifecycle, or the servable was loaded out of band):
+            // direct execution, never an error.
+            None => handle.run(input),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::ArtifactSpec;
+    use crate::runtime::hlo_servable::synthetic_loader;
+
+    fn manager_with(versions: &[u64]) -> Arc<BasicManager> {
+        let m = BasicManager::with_defaults();
+        for &v in versions {
+            m.load_and_wait(
+                ServableId::new("m", v),
+                synthetic_loader(ArtifactSpec::synthetic_classifier("m", v, 4, 2)),
+                Duration::from_secs(10),
+            )
+            .unwrap();
+        }
+        m
+    }
+
+    fn registry(config: BatchingConfig) -> Arc<SessionRegistry> {
+        SessionRegistry::new(config, Registry::new())
+    }
+
+    #[test]
+    fn sessions_track_the_lifecycle() {
+        let m = manager_with(&[1]);
+        let r = registry(BatchingConfig::default());
+        r.attach(&m);
+        // Pre-attach versions got a session; new loads add one; unloads
+        // remove theirs.
+        assert_eq!(r.session_count(), 1);
+        m.load_and_wait(
+            ServableId::new("m", 2),
+            synthetic_loader(ArtifactSpec::synthetic_classifier("m", 2, 4, 2)),
+            Duration::from_secs(10),
+        )
+        .unwrap();
+        assert_eq!(r.session_count(), 2);
+        m.unload_and_wait(ServableId::new("m", 1), Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(r.session_count(), 1);
+        // Results through the registry match direct execution.
+        let handle = m
+            .handle::<HloServable>("m", VersionRequest::Latest)
+            .unwrap();
+        let input = Tensor::matrix(vec![vec![0.5, 1.0, -1.0, 0.25]]).unwrap();
+        let batched = r.run(&handle, &input).unwrap();
+        let direct = handle.run(&input).unwrap();
+        assert_eq!(batched, direct);
+    }
+
+    #[test]
+    fn disabled_config_runs_direct() {
+        let m = manager_with(&[1]);
+        let r = registry(BatchingConfig { enabled: false, ..Default::default() });
+        r.attach(&m);
+        assert_eq!(r.session_count(), 0);
+        let handle = m.handle::<HloServable>("m", VersionRequest::Latest).unwrap();
+        let input = Tensor::zeros(vec![1, 4]);
+        assert_eq!(r.run(&handle, &input).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn unattached_servables_fall_back_to_direct() {
+        let m = manager_with(&[1]);
+        let r = registry(BatchingConfig::default());
+        // Never attached: no sessions, but runs still succeed.
+        assert_eq!(r.session_count(), 0);
+        let handle = m.handle::<HloServable>("m", VersionRequest::Latest).unwrap();
+        assert_eq!(r.run(&handle, &Tensor::zeros(vec![1, 4])).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn per_model_overrides_resolve() {
+        let mut config = BatchingConfig::default();
+        config.per_model.insert(
+            "special".into(),
+            BatchingOverride {
+                max_batch_size: Some(64),
+                batch_timeout: Some(Duration::from_micros(500)),
+                max_enqueued_batches: None,
+            },
+        );
+        let q = config.queue_options("special");
+        assert_eq!(q.max_batch_size, 64);
+        assert_eq!(q.batch_timeout, Duration::from_micros(500));
+        assert_eq!(q.max_enqueued_batches, config.max_enqueued_batches);
+        let q = config.queue_options("other");
+        assert_eq!(q.max_batch_size, config.max_batch_size);
+    }
+
+    #[test]
+    fn concurrent_runs_merge_into_fewer_executions() {
+        let m = manager_with(&[1]);
+        let r = registry(BatchingConfig {
+            batch_timeout: Duration::from_millis(20),
+            ..Default::default()
+        });
+        r.attach(&m);
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let m = Arc::clone(&m);
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    let handle =
+                        m.handle::<HloServable>("m", VersionRequest::Latest).unwrap();
+                    let row: Vec<f32> = (0..4).map(|j| (i * 4 + j) as f32 * 0.1).collect();
+                    r.run(&handle, &Tensor::matrix(vec![row]).unwrap()).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap().len(), 2);
+        }
+        let servable = m.handle::<HloServable>("m", VersionRequest::Latest).unwrap();
+        assert!(
+            servable.executions() < 8,
+            "8 concurrent requests never merged: {} executions",
+            servable.executions()
+        );
+    }
+}

@@ -45,6 +45,7 @@ fn empty_job_config(artifacts_root: &PathBuf) -> ServerConfig {
         availability_preserving: true,
         load_threads: 2,
         ram_capacity_bytes: 0,
+        batching: Default::default(),
         models: Vec::new(),
     }
 }

@@ -109,7 +109,10 @@ mod tests {
                     c.fetch_add(1, Ordering::SeqCst);
                     Response::Regress { model_version: 1, values: vec![0.0] }
                 }
-                _ => Response::Error { message: "no".into() },
+                _ => Response::Error {
+                    kind: crate::base::error::ErrorKind::Internal,
+                    message: "no".into(),
+                },
             }),
         )
         .unwrap();

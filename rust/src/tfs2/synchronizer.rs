@@ -155,7 +155,10 @@ mod tests {
                         vec![(1, "loading".into())]
                     },
                 },
-                _ => Response::Error { message: "no".into() },
+                _ => Response::Error {
+                    kind: crate::base::error::ErrorKind::Internal,
+                    message: "no".into(),
+                },
             }),
         )
         .unwrap();

@@ -1,0 +1,254 @@
+//! Cross-request batching on the live serving path, end to end:
+//!
+//! * N concurrent 1-row Predicts complete in ≪ N device executions
+//!   (pinned via the synthetic servable's execution counter), through
+//!   the real RPC server — proving requests from different connections
+//!   merge into shared device batches.
+//! * Concurrent MultiInference calls merge too (the ROADMAP "Batching
+//!   for MultiInference" bullet's regression test).
+//! * Unload-while-queued drains cleanly: queued requests get a
+//!   retryable `FailedPrecondition` promptly — no hang, no
+//!   use-after-unload, no device execution for drained work.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tensorserve::base::error::ErrorKind;
+use tensorserve::base::servable::ServableId;
+use tensorserve::base::tensor::Tensor;
+use tensorserve::inference::multi::{multi_inference_with, InferenceTask, MultiInferenceRequest};
+use tensorserve::inference::predict::{predict_with, PredictRequest};
+use tensorserve::inference::ModelSpec;
+use tensorserve::lifecycle::basic_manager::{BasicManager, VersionRequest};
+use tensorserve::rpc::client::RpcClient;
+use tensorserve::rpc::proto::{Request, Response};
+use tensorserve::runtime::artifacts::ArtifactSpec;
+use tensorserve::runtime::hlo_servable::{synthetic_loader, HloServable};
+use tensorserve::server::builder::ModelServer;
+use tensorserve::server::config::ServerConfig;
+use tensorserve::serving::{BatchingConfig, SessionRegistry};
+use tensorserve::util::metrics::Registry;
+
+fn example(i: usize) -> tensorserve::inference::example::Example {
+    tensorserve::inference::example::Example::new().with(
+        "x",
+        tensorserve::inference::example::Feature::Floats(
+            (0..8).map(|j| ((i * 8 + j) as f32) * 0.1).collect(),
+        ),
+    )
+}
+
+/// A manager with one synthetic multi-head servable and a registry
+/// attached to its lifecycle.
+fn stack(config: BatchingConfig) -> (Arc<BasicManager>, Arc<SessionRegistry>) {
+    let manager = BasicManager::with_defaults();
+    manager
+        .load_and_wait(
+            ServableId::new("syn", 1),
+            synthetic_loader(ArtifactSpec::synthetic_multi_head("syn", 1, 8, 3)),
+            Duration::from_secs(30),
+        )
+        .unwrap();
+    let registry = SessionRegistry::new(config, Registry::new());
+    registry.attach(&manager);
+    (manager, registry)
+}
+
+fn executions(manager: &Arc<BasicManager>) -> u64 {
+    manager
+        .handle::<HloServable>("syn", VersionRequest::Latest)
+        .unwrap()
+        .executions()
+}
+
+#[test]
+fn concurrent_rpc_predicts_merge_into_shared_batches() {
+    // The full serving stack: real RPC server, N client connections.
+    let server = ModelServer::start(ServerConfig {
+        poll_interval: None,
+        artifacts_root: std::env::temp_dir(),
+        models: Vec::new(),
+        batching: BatchingConfig {
+            batch_timeout: Duration::from_millis(10),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    server
+        .avm()
+        .basic()
+        .load_and_wait(
+            ServableId::new("syn", 1),
+            synthetic_loader(ArtifactSpec::synthetic_multi_head("syn", 1, 8, 3)),
+            Duration::from_secs(30),
+        )
+        .unwrap();
+    let addr = server.addr().to_string();
+
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 8;
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = RpcClient::connect(&addr).unwrap();
+                for i in 0..PER_CLIENT {
+                    let row: Vec<f32> =
+                        (0..8).map(|j| ((c * 37 + i * 8 + j) as f32) * 0.01).collect();
+                    let resp = client
+                        .call_ok(&Request::Predict {
+                            spec: ModelSpec::latest("syn"),
+                            signature: String::new(),
+                            inputs: vec![("x".into(), Tensor::matrix(vec![row]).unwrap())],
+                        })
+                        .unwrap();
+                    assert!(matches!(resp, Response::Predict { .. }));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    let execs = server
+        .avm()
+        .handle::<HloServable>("syn", VersionRequest::Latest)
+        .unwrap()
+        .executions();
+    assert!(
+        execs < total,
+        "{total} concurrent RPC predicts never merged: {execs} executions"
+    );
+    server.stop();
+}
+
+#[test]
+fn concurrent_multi_inference_merges() {
+    // Regression for the ROADMAP bullet: MultiInference's shared
+    // execution routes through the per-model session, so concurrent
+    // calls merge (executions < requests).
+    let (manager, registry) = stack(BatchingConfig {
+        batch_timeout: Duration::from_millis(20),
+        ..Default::default()
+    });
+    const N: usize = 8;
+    let handles: Vec<_> = (0..N)
+        .map(|i| {
+            let manager = Arc::clone(&manager);
+            let registry = Arc::clone(&registry);
+            std::thread::spawn(move || {
+                multi_inference_with(
+                    manager.as_ref(),
+                    registry.as_ref(),
+                    &MultiInferenceRequest {
+                        spec: ModelSpec::latest("syn"),
+                        tasks: vec![
+                            InferenceTask::classify("classify"),
+                            InferenceTask::regress("regress"),
+                        ],
+                        examples: vec![example(i)],
+                    },
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    let mut responses = Vec::new();
+    for h in handles {
+        responses.push(h.join().unwrap());
+    }
+    let execs = executions(&manager);
+    assert!(
+        execs < N as u64,
+        "{N} concurrent MultiInference calls never merged: {execs} executions"
+    );
+    // Merged results still match an unmerged run of the same example.
+    let solo = multi_inference_with(
+        manager.as_ref(),
+        &tensorserve::serving::DirectRunner,
+        &MultiInferenceRequest {
+            spec: ModelSpec::latest("syn"),
+            tasks: vec![
+                InferenceTask::classify("classify"),
+                InferenceTask::regress("regress"),
+            ],
+            examples: vec![example(3)],
+        },
+    )
+    .unwrap();
+    assert_eq!(responses[3].results, solo.results);
+}
+
+#[test]
+fn unload_while_queued_drains_with_failed_precondition() {
+    // A huge batch timeout + small load: requests sit queued in the
+    // open batch. Unloading must answer them promptly with a
+    // retryable FailedPrecondition — never a hang (the 30s timeout
+    // here would trip) and never an execution against the unloaded
+    // servable.
+    let (manager, registry) = stack(BatchingConfig {
+        max_batch_size: 64,
+        batch_timeout: Duration::from_secs(30),
+        num_batch_threads: 1,
+        ..Default::default()
+    });
+    assert_eq!(registry.session_count(), 1);
+
+    const N: usize = 6;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..N)
+        .map(|i| {
+            let manager = Arc::clone(&manager);
+            let registry = Arc::clone(&registry);
+            std::thread::spawn(move || {
+                predict_with(
+                    manager.as_ref(),
+                    registry.as_ref(),
+                    &PredictRequest {
+                        spec: ModelSpec::latest("syn"),
+                        signature: String::new(),
+                        inputs: vec![(
+                            "x".into(),
+                            Tensor::matrix(vec![vec![i as f32; 8]]).unwrap(),
+                        )],
+                    },
+                )
+            })
+        })
+        .collect();
+    // Wait until every request is actually sitting in the open batch,
+    // then unload the version out from under them.
+    let id = ServableId::new("syn", 1);
+    let queued_deadline = Instant::now() + Duration::from_secs(10);
+    while registry.pending_tasks(&id) < N {
+        assert!(
+            Instant::now() < queued_deadline,
+            "only {} of {N} requests ever queued",
+            registry.pending_tasks(&id)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    manager
+        .unload_and_wait(id, Duration::from_secs(30))
+        .unwrap();
+
+    for h in handles {
+        let err = h.join().unwrap().expect_err("queued request survived unload");
+        assert_eq!(
+            ErrorKind::of(&err),
+            ErrorKind::FailedPrecondition,
+            "drained request should be retryable: {err}"
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("unload") || msg.contains("retry") || msg.contains("closed"), "{msg}");
+    }
+    // Prompt: drained in far less than the 30s batch timeout.
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "drain waited out the batch timeout: {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(registry.session_count(), 0);
+}

@@ -16,11 +16,25 @@ cargo test -q
 echo "==> cargo test -q --test http_gateway"
 cargo test -q --test http_gateway
 
+# Cross-request batching on the live serving path: concurrent requests
+# must merge (executions < requests) and unloads must drain queued
+# work cleanly. Named explicitly so a batching regression is its own
+# failing step.
+echo "==> cargo test -q --test serving_concurrency"
+cargo test -q --test serving_concurrency
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "==> cargo fmt --check"
     cargo fmt --check
 else
     echo "==> rustfmt unavailable in this toolchain; skipping fmt check"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "==> cargo clippy -- -D warnings"
+    cargo clippy --workspace --all-targets -- -D warnings
+else
+    echo "==> clippy unavailable in this toolchain; skipping lint"
 fi
 
 echo "check OK"
