@@ -2,15 +2,20 @@
 
 .PHONY: check bench artifacts
 
+# Includes a one-short-iteration run of every bench (compile + run
+# guard; TENSORSERVE_BENCH_SMOKE=1 clips durations) so benches cannot
+# silently rot.
 check:
-	./scripts/check.sh
+	./scripts/check.sh --bench-smoke
 
-# Perf trajectory: emits BENCH_batching.json / BENCH_throughput.json /
-# BENCH_http.json (request-codec and JSON-ingress ns/op for
-# API-overhead tracking).
+# Perf trajectory: emits BENCH_batching.json (incl. the contended-pool
+# sharding mode and merge ratios), BENCH_throughput.json,
+# BENCH_tail_latency.json (churn tails + lane isolation) and
+# BENCH_http.json (request-codec and JSON-ingress ns/op).
 bench:
 	cargo bench --bench bench_batching
 	cargo bench --bench bench_throughput
+	cargo bench --bench bench_tail_latency
 	cargo bench --bench bench_http
 
 # AOT-compile model artifacts (requires the full Python/JAX build

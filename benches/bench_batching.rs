@@ -10,8 +10,8 @@
 //! latency percentiles, then check round-robin fairness across two
 //! model queues sharing one device thread.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 use tensorserve::base::servable::ServableId;
 use tensorserve::base::tensor::Tensor;
@@ -22,7 +22,7 @@ use tensorserve::lifecycle::basic_manager::{BasicManager, VersionRequest};
 use tensorserve::runtime::artifacts::ArtifactSpec;
 use tensorserve::runtime::hlo_servable::{synthetic_loader, HloServable};
 use tensorserve::serving::{BatchingConfig, DirectRunner, Runner, SessionRegistry};
-use tensorserve::util::bench::{fmt_count, measure, ns_per_iter, Table};
+use tensorserve::util::bench::{bench_duration, fmt_count, measure, ns_per_iter, smoke, Table};
 use tensorserve::util::json::Json;
 use tensorserve::util::metrics::{fmt_nanos, Histogram, Registry};
 use tensorserve::util::pool::BufferPool;
@@ -64,6 +64,7 @@ fn run_config(
             max_batch_size: max_batch,
             batch_timeout: timeout,
             max_enqueued_batches: 1 << 20,
+            ..Default::default()
         },
         move |batch| {
             // The merged device call.
@@ -110,9 +111,48 @@ fn run_config(
     (sent as f64 / elapsed.as_secs_f64(), hist, mean_batch)
 }
 
+/// T3e worker harness: `threads` threads hammering acquire/release on
+/// a pool with `shards` lock stripes. Returns combined ops/sec.
+/// `shards = 1` reproduces the pre-sharding single-mutex shelf.
+fn pool_contention_ops(threads: usize, shards: usize, dur: Duration) -> f64 {
+    let pool: Arc<BufferPool> = Arc::new(BufferPool::with_shards(32, 1 << 30, shards));
+    let stop = Arc::new(AtomicBool::new(false));
+    let ops = Arc::new(AtomicU64::new(0));
+    let start = Arc::new(Barrier::new(threads + 1));
+    let workers: Vec<_> = (0..threads)
+        .map(|_| {
+            let pool = Arc::clone(&pool);
+            let stop = Arc::clone(&stop);
+            let ops = Arc::clone(&ops);
+            let start = Arc::clone(&start);
+            std::thread::spawn(move || {
+                // Warm this thread's home shard so the steady state is
+                // all hits (the serving steady state).
+                pool.release(pool.acquire(1024));
+                start.wait();
+                let mut local = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let buf = pool.acquire(1024);
+                    std::hint::black_box(&buf);
+                    pool.release(buf);
+                    local += 1;
+                }
+                ops.fetch_add(local, Ordering::Relaxed);
+            })
+        })
+        .collect();
+    start.wait();
+    std::thread::sleep(dur);
+    stop.store(true, Ordering::Relaxed);
+    for w in workers {
+        w.join().unwrap();
+    }
+    ops.load(Ordering::Relaxed) as f64 / dur.as_secs_f64()
+}
+
 fn main() {
     tensorserve::util::logging::set_level(tensorserve::util::logging::Level::Error);
-    let dur = Duration::from_secs(3);
+    let dur = bench_duration(Duration::from_secs(3));
 
     // Offered load: 4000 qps. Unbatched capacity is only
     // 1/(150µs+4µs) ≈ 6.5k qps of *device* time per row-call, but each
@@ -175,6 +215,7 @@ fn main() {
                     max_batch_size: 8,
                     batch_timeout: Duration::from_micros(200),
                     max_enqueued_batches: 1 << 20,
+                    ..Default::default()
                 },
                 move |batch| {
                     std::thread::sleep(DISPATCH + PER_ROW * batch.len() as u32);
@@ -188,8 +229,9 @@ fn main() {
         .collect();
     let (tx, rx) = mpsc::channel();
     drop(rx); // fairness run ignores latencies
+    let fair_dur = bench_duration(Duration::from_secs(2));
     let t0 = Instant::now();
-    while t0.elapsed() < Duration::from_secs(2) {
+    while t0.elapsed() < fair_dur {
         for q in &queues {
             let _ = q.enqueue(Req { arrived: Instant::now(), done: tx.clone() });
         }
@@ -279,8 +321,8 @@ fn main() {
         merged.recycle_into(&pool);
     };
 
-    let warmup = Duration::from_millis(100);
-    let mdur = Duration::from_millis(800);
+    let warmup = bench_duration(Duration::from_millis(100));
+    let mdur = bench_duration(Duration::from_millis(800));
     let (it_naive, el_naive) = measure(warmup, mdur, || naive(&inputs));
     let (it_fused, el_fused) = measure(warmup, mdur, || fused(&inputs));
     let naive_batch_ns = ns_per_iter(it_naive, el_naive);
@@ -358,16 +400,16 @@ fn main() {
         let row: Vec<f32> = (0..32).map(|j| ((seed * 31 + j) as f32 * 0.37).sin()).collect();
         PredictRequest::single("merge", None, Tensor::matrix(vec![row]).unwrap())
     };
-    const SEQ_REQS: usize = 2_000;
+    let seq_reqs: usize = if smoke() { 100 } else { 2_000 };
     const CLIENTS: usize = 8;
-    const PER_CLIENT: usize = 1_000;
+    let per_client: usize = if smoke() { 50 } else { 1_000 };
 
     // Sequential direct baseline.
     let t0 = Instant::now();
-    for i in 0..SEQ_REQS {
+    for i in 0..seq_reqs {
         predict_with(manager.as_ref(), &DirectRunner, &request(i)).unwrap();
     }
-    let seq_qps = SEQ_REQS as f64 / t0.elapsed().as_secs_f64();
+    let seq_qps = seq_reqs as f64 / t0.elapsed().as_secs_f64();
 
     // Concurrent clients through the session registry.
     let execs_before = servable.executions();
@@ -377,11 +419,11 @@ fn main() {
             let manager = Arc::clone(&manager);
             let registry = Arc::clone(&registry);
             std::thread::spawn(move || {
-                for i in 0..PER_CLIENT {
+                for i in 0..per_client {
                     predict_with(
                         manager.as_ref(),
                         registry.as_ref() as &dyn Runner,
-                        &request(c * PER_CLIENT + i),
+                        &request(c * per_client + i),
                     )
                     .unwrap();
                 }
@@ -392,7 +434,7 @@ fn main() {
         w.join().unwrap();
     }
     let merged_elapsed = t0.elapsed();
-    let merged_reqs = (CLIENTS * PER_CLIENT) as f64;
+    let merged_reqs = (CLIENTS * per_client) as f64;
     let merged_qps = merged_reqs / merged_elapsed.as_secs_f64();
     let merged_execs = (servable.executions() - execs_before) as f64;
     let merge_ratio = merged_reqs / merged_execs.max(1.0);
@@ -406,14 +448,14 @@ fn main() {
     );
     t.row(vec![
         "sequential direct".into(),
-        SEQ_REQS.to_string(),
-        SEQ_REQS.to_string(),
+        seq_reqs.to_string(),
+        seq_reqs.to_string(),
         "1.0".into(),
         fmt_count(seq_qps),
     ]);
     t.row(vec![
         "concurrent merged".into(),
-        format!("{}", CLIENTS * PER_CLIENT),
+        format!("{}", CLIENTS * per_client),
         format!("{merged_execs:.0}"),
         format!("{merge_ratio:.1}"),
         fmt_count(merged_qps),
@@ -424,14 +466,59 @@ fn main() {
          accelerator the device-time saving tracks that ratio."
     );
 
+    // ---- T3e: contended buffer pool — sharded vs single-mutex shelf
+    //
+    // M threads hammering acquire/release (what batch assembly + the
+    // RPC/REST decode paths do under load). `shards = 1` is the
+    // pre-sharding implementation: every op serializes on one shelf
+    // mutex. The sharded pool stripes the shelves so each thread's
+    // home shard has its own lock.
+    let contend_dur = bench_duration(Duration::from_millis(600));
+    let mut t = Table::new(
+        "T3e: pool acquire/release throughput, M threads (1024-elem class, all hits)",
+        &["threads", "1-shard Mops/s", "sharded Mops/s", "shards", "speedup"],
+    );
+    let mut contention_json = Vec::new();
+    let mut speedup_at_8 = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let shards = tensorserve::util::pool::clamp_shards(threads);
+        let single = pool_contention_ops(threads, 1, contend_dur);
+        let sharded = pool_contention_ops(threads, shards, contend_dur);
+        let speedup = sharded / single.max(1.0);
+        if threads == 8 {
+            speedup_at_8 = speedup;
+        }
+        contention_json.push(Json::obj(vec![
+            ("threads", Json::num(threads as f64)),
+            ("single_mutex_ops_per_sec", Json::num(single)),
+            ("sharded_ops_per_sec", Json::num(sharded)),
+            ("shards", Json::num(shards as f64)),
+            ("speedup", Json::num(speedup)),
+        ]));
+        t.row(vec![
+            threads.to_string(),
+            format!("{:.2}", single / 1e6),
+            format!("{:.2}", sharded / 1e6),
+            shards.to_string(),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nshape check: sharded ≥ 2x the single-mutex baseline at 8 threads \
+         (got {speedup_at_8:.2}x); 1-thread costs should be ~equal."
+    );
+
     // ---- machine-readable trajectory: BENCH_batching.json -----------
     let json = Json::obj(vec![
         ("bench", Json::str("bench_batching")),
         ("t3_sweep", Json::Arr(sweep_json)),
+        ("pool_contention", Json::Arr(contention_json)),
+        ("pool_contention_speedup_8_threads", Json::num(speedup_at_8)),
         (
             "e2e_merge",
             Json::obj(vec![
-                ("sequential_requests", Json::num(SEQ_REQS as f64)),
+                ("sequential_requests", Json::num(seq_reqs as f64)),
                 ("sequential_qps", Json::num(seq_qps)),
                 ("concurrent_clients", Json::num(CLIENTS as f64)),
                 ("concurrent_requests", Json::num(merged_reqs)),
@@ -465,8 +552,5 @@ fn main() {
         ),
     ]);
     let out = "BENCH_batching.json";
-    match std::fs::write(out, json.to_string_pretty()) {
-        Ok(()) => println!("\nwrote {out}"),
-        Err(e) => eprintln!("\ncould not write {out}: {e}"),
-    }
+    tensorserve::util::bench::write_bench_json(out, &json.to_string_pretty());
 }

@@ -70,7 +70,13 @@ fn main() {
         "T7: model placement onto 16GB serving jobs — best-fit-decreasing (ours) vs first-fit",
         &["models", "jobs avail", "policy", "jobs used", "util of used", "failed"],
     );
-    for n_models in [50usize, 200, 1000] {
+    // Smoke mode keeps one small mix: compile+run guard only.
+    let mixes: &[usize] = if tensorserve::util::bench::smoke() {
+        &[50]
+    } else {
+        &[50, 200, 1000]
+    };
+    for &n_models in mixes {
         let items = model_sizes(n_models, 42 + n_models as u64);
         // Tight capacity: 2% headroom over the theoretical minimum —
         // the regime where placement quality decides what fits.

@@ -37,7 +37,7 @@ fn main() {
     .unwrap();
     server.wait_until_ready(Duration::from_secs(300)).unwrap();
     let addr = server.addr().to_string();
-    let dur = Duration::from_secs(3);
+    let dur = tensorserve::util::bench::bench_duration(Duration::from_secs(3));
 
     // --- full stack over RPC ------------------------------------------
     let mut t = Table::new(

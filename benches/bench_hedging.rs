@@ -20,7 +20,6 @@ use tensorserve::util::rng::Rng;
 
 const STALL: Duration = Duration::from_millis(40);
 const STALL_PROB: f64 = 0.05;
-const N_REQUESTS: usize = 1500;
 
 fn stalling_server(seed: u64) -> Arc<RpcServer> {
     let rng = std::sync::Mutex::new(Rng::new(seed));
@@ -44,6 +43,8 @@ fn stalling_server(seed: u64) -> Arc<RpcServer> {
 
 fn main() {
     tensorserve::util::logging::set_level(tensorserve::util::logging::Level::Error);
+    let n_requests: usize =
+        if tensorserve::util::bench::smoke() { 100 } else { 1500 };
     let a = stalling_server(1);
     let b = stalling_server(2);
     let replicas = vec![a.addr().to_string(), b.addr().to_string()];
@@ -53,7 +54,7 @@ fn main() {
             "T6: hedged requests vs {}% transient {}ms stalls ({} requests)",
             (STALL_PROB * 100.0) as u32,
             STALL.as_millis(),
-            N_REQUESTS
+            n_requests
         ),
         &["client", "p50", "p90", "p99", "max", "hedge rate"],
     );
@@ -62,7 +63,7 @@ fn main() {
     {
         let pool = ClientPool::new();
         let hist = Histogram::new();
-        for _ in 0..N_REQUESTS {
+        for _ in 0..n_requests {
             let t0 = std::time::Instant::now();
             pool.call(&replicas[0], &Request::Ping).unwrap();
             hist.record_duration(t0.elapsed());
@@ -85,7 +86,7 @@ fn main() {
             Duration::from_millis(delay_ms),
         );
         let hist = Histogram::new();
-        for _ in 0..N_REQUESTS {
+        for _ in 0..n_requests {
             let t0 = std::time::Instant::now();
             hedged.call(&replicas, &Request::Ping).unwrap();
             hist.record_duration(t0.elapsed());

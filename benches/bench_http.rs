@@ -63,8 +63,8 @@ fn server_with_synthetic() -> Arc<ModelServer> {
 
 fn main() {
     tensorserve::util::logging::set_level(tensorserve::util::logging::Level::Error);
-    let warmup = Duration::from_millis(200);
-    let dur = Duration::from_secs(1);
+    let warmup = tensorserve::util::bench::bench_duration(Duration::from_millis(200));
+    let dur = tensorserve::util::bench::bench_duration(Duration::from_secs(1));
 
     // ---- codec ns/op -------------------------------------------------
     let mut t = Table::new(
@@ -208,8 +208,5 @@ fn main() {
         ("e2e", Json::Arr(e2e_json)),
     ]);
     let out = "BENCH_http.json";
-    match std::fs::write(out, json.to_string_pretty()) {
-        Ok(()) => println!("\nwrote {out}"),
-        Err(e) => eprintln!("\ncould not write {out}: {e}"),
-    }
+    tensorserve::util::bench::write_bench_json(out, &json.to_string_pretty());
 }

@@ -81,7 +81,7 @@ where
 
 fn main() {
     tensorserve::util::logging::set_level(tensorserve::util::logging::Level::Error);
-    let dur = Duration::from_secs(2);
+    let dur = tensorserve::util::bench::bench_duration(Duration::from_secs(2));
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("testbed: {cores} core(s); map of {MAP_SIZE} entries; writer clones+replaces it in a loop");
 

@@ -12,18 +12,29 @@ use tensorserve::base::servable::{ServableBox, ServableId};
 use tensorserve::lifecycle::basic_manager::{BasicManager, ManagerOptions};
 use tensorserve::util::bench::Table;
 
-const N_MODELS: usize = 32;
-const LOAD_TIME: Duration = Duration::from_millis(25);
+/// 32 models x 25ms; 8 x 5ms in bench-smoke mode (compile+run guard).
+fn n_models() -> usize {
+    if tensorserve::util::bench::smoke() { 8 } else { 32 }
+}
+
+fn load_time() -> Duration {
+    if tensorserve::util::bench::smoke() {
+        Duration::from_millis(5)
+    } else {
+        Duration::from_millis(25)
+    }
+}
 
 fn slow_loader() -> Arc<dyn Loader> {
-    Arc::new(FnLoader::new(ResourceEstimate::default(), "slow", || {
-        std::thread::sleep(LOAD_TIME);
+    let load_time = load_time();
+    Arc::new(FnLoader::new(ResourceEstimate::default(), "slow", move || {
+        std::thread::sleep(load_time);
         Ok(Arc::new(0u8) as ServableBox)
     }))
 }
 
 fn items() -> Vec<(ServableId, Arc<dyn Loader>)> {
-    (0..N_MODELS)
+    (0..n_models())
         .map(|i| (ServableId::new(format!("m{i}"), 1), slow_loader()))
         .collect()
 }
@@ -32,8 +43,9 @@ fn main() {
     tensorserve::util::logging::set_level(tensorserve::util::logging::Level::Error);
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
 
+    let n_models = n_models();
     let mut t = Table::new(
-        &format!("T9: initial load of {N_MODELS} models x {}ms each", LOAD_TIME.as_millis()),
+        &format!("T9: initial load of {n_models} models x {}ms each", load_time().as_millis()),
         &["strategy", "threads", "startup time", "speedup"],
     );
 
@@ -58,7 +70,7 @@ fn main() {
         let results = m.parallel_initial_load(items(), threads);
         let par = t0.elapsed();
         assert!(results.iter().all(|(_, r)| r.is_ok()));
-        assert_eq!(m.ready_names().len(), N_MODELS);
+        assert_eq!(m.ready_names().len(), n_models);
         t.row(vec![
             "parallel (ours)".into(),
             threads.to_string(),
@@ -68,9 +80,12 @@ fn main() {
     }
     t.print();
     println!(
-        "\nshape check: startup scales ~linearly with threads until N_MODELS/threads\n\
-         rounds up (32 x 25ms = 800ms sequential; ~{}ms at {} threads).",
-        (N_MODELS as f64 / cores as f64).ceil() * LOAD_TIME.as_millis() as f64,
+        "\nshape check: startup scales ~linearly with threads until n_models/threads\n\
+         rounds up ({} x {}ms = {}ms sequential; ~{}ms at {} threads).",
+        n_models,
+        load_time().as_millis(),
+        n_models as u128 * load_time().as_millis(),
+        (n_models as f64 / cores as f64).ceil() * load_time().as_millis() as f64,
         cores
     );
 }

@@ -33,7 +33,7 @@ fn manager_with_models(n: usize) -> Arc<BasicManager> {
 
 fn main() {
     tensorserve::util::logging::set_level(tensorserve::util::logging::Level::Error);
-    let dur = Duration::from_secs(2);
+    let dur = tensorserve::util::bench::bench_duration(Duration::from_secs(2));
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("testbed: {cores} core(s) (paper testbed: 16 vCPU Xeon E5 2.6GHz)");
 
@@ -173,8 +173,5 @@ fn main() {
         ("request_codec", Json::Arr(codec_json)),
     ]);
     let out = "BENCH_throughput.json";
-    match std::fs::write(out, json.to_string_pretty()) {
-        Ok(()) => println!("\nwrote {out}"),
-        Err(e) => eprintln!("\ncould not write {out}: {e}"),
-    }
+    tensorserve::util::bench::write_bench_json(out, &json.to_string_pretty());
 }

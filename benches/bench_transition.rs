@@ -24,14 +24,22 @@ use tensorserve::lifecycle::policy::{
 use tensorserve::util::bench::Table;
 use tensorserve::util::mem::{current_rss_bytes, WeightBlob};
 
-const BLOB_BYTES: usize = 192 << 20;
+/// 192MB model; 16MB in bench-smoke mode (compile+run guard).
+fn blob_bytes() -> usize {
+    if tensorserve::util::bench::smoke() {
+        16 << 20
+    } else {
+        192 << 20
+    }
+}
 
 fn blob_loader() -> Arc<dyn Loader> {
+    let bytes = blob_bytes();
     Arc::new(FnLoader::new(
-        ResourceEstimate::ram(BLOB_BYTES as u64),
+        ResourceEstimate::ram(bytes as u64),
         "blob",
-        || {
-            let blob = WeightBlob::new(BLOB_BYTES);
+        move || {
+            let blob = WeightBlob::new(bytes);
             std::hint::black_box(blob.checksum());
             Ok(Arc::new(blob) as ServableBox)
         },
@@ -129,7 +137,10 @@ fn run_transition(policy: Arc<dyn VersionPolicy>, canary: bool) -> TransitionSta
 fn main() {
     tensorserve::util::logging::set_level(tensorserve::util::logging::Level::Error);
     let mut t = Table::new(
-        "T4: version transition v1->v2 of a 192MB model (RSS sampled @1ms)",
+        &format!(
+            "T4: version transition v1->v2 of a {}MB model (RSS sampled @1ms)",
+            blob_bytes() >> 20
+        ),
         &[
             "policy",
             "peak RSS over baseline",

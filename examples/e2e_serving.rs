@@ -170,6 +170,7 @@ fn main() -> anyhow::Result<()> {
                     max_batch_size: 16,
                     batch_timeout: Duration::from_micros(200),
                     max_enqueued_batches: 256,
+                    ..Default::default()
                 },
                 allowed_batch_sizes: vec![1, 4, 16, 64],
                 ..Default::default()

@@ -5,9 +5,10 @@
 //!
 //! * [`batch`] — the templatized primitives: [`batch::BatchTask`],
 //!   [`batch::Batch`].
-//! * [`scheduler`] — [`scheduler::SharedBatchScheduler`]: multiple
-//!   dynamic queues (one per servable/version), round-robin onto a
-//!   shared pool of device threads, with `max_batch_size`,
+//! * [`scheduler`] — [`scheduler::SharedBatchScheduler`]: dynamic
+//!   per-servable **lanes** (weighted round-robin ready list, targeted
+//!   `notify_one` wakeups, optional per-lane dedicated worker threads)
+//!   onto a shared pool of device threads, with `max_batch_size`,
 //!   `batch_timeout` and `max_enqueued` backpressure.
 //! * [`padding`] — pad merged batches up to `allowed_batch_sizes`
 //!   (fixed-shape accelerator executables).

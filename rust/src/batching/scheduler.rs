@@ -1,11 +1,37 @@
-//! [`SharedBatchScheduler`]: dynamic per-servable queues feeding a
-//! shared pool of device threads, round-robin (§2.2.1).
+//! [`SharedBatchScheduler`]: dynamic per-servable **lanes** feeding a
+//! shared pool of device threads (§2.2.1), with isolation guarantees a
+//! naive shared queue lacks.
 //!
 //! "The core library supports multiple batching queues, to batch
 //! requests for multiple servables or versions separately, and schedule
 //! them in a round-robin fashion onto a single shared device e.g. GPU.
 //! The set of queues can be dynamic, added and removed as servable
 //! versions come and go."
+//!
+//! ## Lanes and the ready list
+//!
+//! Each queue is an isolated *lane*: its open/closed batches live
+//! behind its own mutex, and lanes with work sit on a shared **ready
+//! list** with **at most one entry per lane**. A worker pops the
+//! front lane, takes up to [`QueueOptions::weight`] closed batches,
+//! and — before executing them — hands the lane's entry back to the
+//! *back* of the list if a backlog remains. That gives weighted
+//! round-robin fairness (a lane with 50 queued batches cedes the
+//! device after `weight` picks, so another model's single batch waits
+//! behind at most one pick per lane, never behind the whole backlog)
+//! while still letting several workers drain one lane's backlog
+//! concurrently (the re-enqueue happens before the device call).
+//!
+//! Enqueues signal with **targeted `notify_one` wakeups** — one per
+//! newly closed batch, plus one timer-rearm when a fresh open batch
+//! creates a deadline — so an enqueue storm wakes exactly as many
+//! workers as there are batches to run instead of stampeding every
+//! idle worker over the queue mutex (the thundering-herd fix).
+//!
+//! Lanes with [`QueueOptions::dedicated_threads`] > 0 get a **private
+//! worker set**: their batches never touch the shared ready list, so a
+//! latency-critical model keeps its own device threads no matter how
+//! saturated the shared lanes are (the multi-tenant head-of-line fix).
 //!
 //! Batch close conditions: summed task size reaching `max_batch_size`,
 //! or the open batch ageing past `batch_timeout` (the latency guard).
@@ -14,8 +40,9 @@
 //! of growing an unbounded queue.
 
 use super::batch::{Batch, BatchTask};
+use crate::util::metrics::Gauge;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -33,7 +60,7 @@ impl Default for SchedulerOptions {
     }
 }
 
-/// Per-queue options.
+/// Per-lane options.
 #[derive(Debug, Clone)]
 pub struct QueueOptions {
     /// Maximum summed task size of one batch.
@@ -42,6 +69,15 @@ pub struct QueueOptions {
     pub batch_timeout: Duration,
     /// Closed-but-unprocessed batch limit (backpressure).
     pub max_enqueued_batches: usize,
+    /// Closed batches a shared worker may take per ready-list pick
+    /// (weighted round-robin share; 0 behaves as 1).
+    pub weight: usize,
+    /// Private worker threads for this lane. 0 = the shared pool;
+    /// > 0 isolates the lane completely from shared-lane backlogs.
+    pub dedicated_threads: usize,
+    /// Optional gauge tracking task rows currently queued in this lane
+    /// (`batch.{model}.lane_depth` in the serving registry).
+    pub depth_gauge: Option<Arc<Gauge>>,
 }
 
 impl Default for QueueOptions {
@@ -50,6 +86,9 @@ impl Default for QueueOptions {
             max_batch_size: 16,
             batch_timeout: Duration::from_millis(2),
             max_enqueued_batches: 64,
+            weight: 1,
+            dedicated_threads: 0,
+            depth_gauge: None,
         }
     }
 }
@@ -86,13 +125,24 @@ struct QueueState<T: BatchTask> {
     name: String,
     opts: QueueOptions,
     inner: Mutex<QueueInner<T>>,
+    /// Wakes this lane's dedicated workers (paired with `inner`).
+    /// Unused for shared lanes.
+    cv: Condvar,
     process: ProcessFn<T>,
     removed: AtomicBool,
+    /// True while the lane holds a ready-list entry (on the list or
+    /// popped by a worker that will put it back / clear the flag).
+    /// Guarantees at most one entry per lane.
+    enlisted: AtomicBool,
     batches_processed: AtomicU64,
     tasks_processed: AtomicU64,
 }
 
 impl<T: BatchTask> QueueState<T> {
+    fn dedicated(&self) -> bool {
+        self.opts.dedicated_threads > 0
+    }
+
     /// Close the open batch if full or expired. Returns true if a batch
     /// became available.
     fn maybe_close_open(&self, inner: &mut QueueInner<T>, now_nanos: u64) -> bool {
@@ -117,13 +167,44 @@ impl<T: BatchTask> QueueState<T> {
             .as_ref()
             .map(|b| b.opened_at_nanos() + self.opts.batch_timeout.as_nanos() as u64)
     }
+
+    /// Removed lanes drain eagerly: move the open batch (if any) to
+    /// the closed list so it is processed now, not at batch timeout.
+    fn flush_if_removed(&self, inner: &mut QueueInner<T>) {
+        if self.removed.load(Ordering::SeqCst) {
+            if let Some(b) = inner.open.take() {
+                inner.closed.push_back(b);
+            }
+        }
+    }
+
+    /// Take a batch off the lane, account it, and run the device call.
+    fn run_batch(&self, batch: Batch<T>) {
+        if let Some(g) = &self.opts.depth_gauge {
+            g.add(-(batch.size() as i64));
+        }
+        self.batches_processed.fetch_add(1, Ordering::Relaxed);
+        self.tasks_processed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        (self.process)(batch);
+    }
 }
 
 struct Shared<T: BatchTask> {
+    /// Registry of every lane (deadline scans, pruning, quiesce).
+    /// Touched by idle workers only — never on the enqueue path.
     queues: Mutex<Vec<Arc<QueueState<T>>>>,
+    /// Shared lanes with closed batches awaiting a worker; at most one
+    /// entry per lane (`QueueState::enlisted`).
+    ready: Mutex<VecDeque<Arc<QueueState<T>>>>,
+    /// Paired with `ready`.
     work: Condvar,
-    work_lock: Mutex<()>,
-    rr: AtomicUsize,
+    /// Set (under the `ready` lock) when open-batch deadlines changed
+    /// and a sleeping worker should recompute its wait.
+    timer_dirty: AtomicBool,
+    /// Nearest open-batch deadline (nanos) across shared lanes,
+    /// `u64::MAX` = none. Lets saturated workers honor batch timeouts
+    /// with one atomic load per pick instead of a registry scan.
+    next_open_deadline: AtomicU64,
     shutdown: AtomicBool,
     epoch: Instant,
 }
@@ -133,13 +214,38 @@ impl<T: BatchTask> Shared<T> {
         self.epoch.elapsed().as_nanos() as u64
     }
 
-    fn signal(&self) {
-        let _g = self.work_lock.lock().unwrap();
-        self.work.notify_all();
+    /// Put `q` on the shared ready list (if not already there) and wake
+    /// exactly one worker; dedicated lanes wake one of their private
+    /// workers instead. This is the targeted per-batch wakeup — never
+    /// a broadcast.
+    fn enlist(&self, q: &Arc<QueueState<T>>) {
+        if q.dedicated() {
+            q.cv.notify_one();
+            return;
+        }
+        if !q.enlisted.swap(true, Ordering::AcqRel) {
+            let mut ready = self.ready.lock().unwrap();
+            ready.push_back(Arc::clone(q));
+            drop(ready);
+            self.work.notify_one();
+        }
+    }
+
+    /// A fresh open batch created a (possibly nearer) deadline: make
+    /// one sleeping worker recompute its wait. Dedicated lanes rearm
+    /// their own workers.
+    fn rearm_timer(&self, q: &Arc<QueueState<T>>) {
+        if q.dedicated() {
+            q.cv.notify_one();
+            return;
+        }
+        let _g = self.ready.lock().unwrap();
+        self.timer_dirty.store(true, Ordering::Release);
+        self.work.notify_one();
     }
 }
 
-/// Handle to one queue; dropping it removes the queue (pending batches
+/// Handle to one lane; dropping it removes the lane (pending batches
 /// still drain). Created via [`SharedBatchScheduler::add_queue`].
 pub struct BatchQueue<T: BatchTask> {
     state: Arc<QueueState<T>>,
@@ -157,29 +263,80 @@ impl<T: BatchTask> BatchQueue<T> {
             return Err(EnqueueError::TaskTooLarge(task));
         }
         let now = self.shared.now_nanos();
-        {
+        let rows = task.size();
+        let (batch_closed, batch_opened) = {
             let mut inner = self.state.inner.lock().unwrap();
+            // Authoritative removal check, under the lane lock: close()
+            // flushes under this same lock, so a task admitted here is
+            // guaranteed to be seen by the drain (the lock-free check
+            // above is only a fast path — without this one, a straggler
+            // could push into a lane whose workers already drained and
+            // exited, and hang its caller forever).
+            if self.state.removed.load(Ordering::SeqCst) {
+                return Err(EnqueueError::QueueClosed(task));
+            }
             // Close a full/expired open batch first so the size check
             // below sees fresh state.
-            self.state.maybe_close_open(&mut inner, now);
+            let mut closed_any = self.state.maybe_close_open(&mut inner, now);
             // If the task doesn't fit the current open batch, close it.
             if let Some(open) = &inner.open {
                 if open.size() + task.size() > self.state.opts.max_batch_size {
                     let b = inner.open.take().unwrap();
                     inner.closed.push_back(b);
+                    closed_any = true;
                 }
             }
             if inner.closed.len() >= self.state.opts.max_enqueued_batches {
+                if closed_any && self.state.dedicated() {
+                    self.state.cv.notify_one();
+                }
+                drop(inner);
+                // Batches we closed on the way in still need a worker
+                // even though this task was shed.
+                if closed_any && !self.state.dedicated() {
+                    self.shared.enlist(&self.state);
+                }
                 return Err(EnqueueError::QueueFull(task));
             }
+            let opened = inner.open.is_none();
             let open = inner.open.get_or_insert_with(|| Batch::new(now));
             open.push(task);
             if open.size() >= self.state.opts.max_batch_size {
                 let b = inner.open.take().unwrap();
                 inner.closed.push_back(b);
+                closed_any = true;
+            }
+            // Gauge add under the lane lock, before the task is
+            // visible to any worker — run_batch's decrement can never
+            // land first, so the gauge never reads negative.
+            if let Some(g) = &self.state.opts.depth_gauge {
+                g.add(rows as i64);
+            }
+            // Dedicated lanes notify under the lane lock: a private
+            // worker between its emptiness check and its wait cannot
+            // miss the wakeup.
+            if self.state.dedicated() && (closed_any || opened) {
+                self.state.cv.notify_one();
+            }
+            (closed_any, opened)
+        };
+        if !self.state.dedicated() {
+            if batch_opened {
+                // Register the new open batch's deadline so even fully
+                // saturated workers (which never idle-scan) see it.
+                self.shared.next_open_deadline.fetch_min(
+                    now + self.state.opts.batch_timeout.as_nanos() as u64,
+                    Ordering::Relaxed,
+                );
+            }
+            if batch_closed {
+                // Targeted wakeup: one worker per lane with work.
+                self.shared.enlist(&self.state);
+            } else if batch_opened {
+                // No batch to run yet, but a deadline now exists.
+                self.shared.rearm_timer(&self.state);
             }
         }
-        self.shared.signal();
         Ok(())
     }
 
@@ -211,7 +368,20 @@ impl<T: BatchTask> BatchQueue<T> {
     /// blocks on request threads that still hold session references.
     pub fn close(&self) {
         self.state.removed.store(true, Ordering::SeqCst);
-        self.shared.signal();
+        let flushed = {
+            let mut inner = self.state.inner.lock().unwrap();
+            self.state.flush_if_removed(&mut inner);
+            if self.state.dedicated() {
+                // Under the lane lock (no missed wakeup): private
+                // workers must observe the removal — to drain the
+                // flush, or to exit when nothing is left.
+                self.state.cv.notify_all();
+            }
+            !inner.closed.is_empty()
+        };
+        if flushed && !self.state.dedicated() {
+            self.shared.enlist(&self.state);
+        }
     }
 }
 
@@ -221,19 +391,24 @@ impl<T: BatchTask> Drop for BatchQueue<T> {
     }
 }
 
-/// The shared scheduler. Owns the device threads.
+/// The shared scheduler. Owns the device threads (shared pool +
+/// per-lane dedicated workers).
 pub struct SharedBatchScheduler<T: BatchTask> {
     shared: Arc<Shared<T>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Private workers of dedicated lanes (joined on drop alongside
+    /// the shared pool).
+    dedicated_workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl<T: BatchTask> SharedBatchScheduler<T> {
     pub fn new(options: SchedulerOptions) -> Self {
         let shared = Arc::new(Shared {
             queues: Mutex::new(Vec::new()),
+            ready: Mutex::new(VecDeque::new()),
             work: Condvar::new(),
-            work_lock: Mutex::new(()),
-            rr: AtomicUsize::new(0),
+            timer_dirty: AtomicBool::new(false),
+            next_open_deadline: AtomicU64::new(u64::MAX),
             shutdown: AtomicBool::new(false),
             epoch: Instant::now(),
         });
@@ -246,27 +421,155 @@ impl<T: BatchTask> SharedBatchScheduler<T> {
                     .expect("spawn batch worker")
             })
             .collect();
-        SharedBatchScheduler { shared, workers }
+        SharedBatchScheduler { shared, workers, dedicated_workers: Mutex::new(Vec::new()) }
     }
 
-    /// Create a queue whose batches are handed to `process` on a device
-    /// thread. Queues are dynamic: drop the handle to remove.
+    /// Create a lane whose batches are handed to `process` on a device
+    /// thread — the shared pool, or a private worker set when
+    /// `opts.dedicated_threads > 0`. Lanes are dynamic: drop the
+    /// handle to remove.
     pub fn add_queue<F>(&self, name: &str, opts: QueueOptions, process: F) -> BatchQueue<T>
     where
         F: Fn(Batch<T>) + Send + Sync + 'static,
     {
         assert!(opts.max_batch_size > 0, "max_batch_size must be positive");
+        let dedicated_threads = opts.dedicated_threads;
         let state = Arc::new(QueueState {
             name: name.to_string(),
             opts,
             inner: Mutex::new(QueueInner { open: None, closed: VecDeque::new() }),
+            cv: Condvar::new(),
             process: Arc::new(process),
             removed: AtomicBool::new(false),
+            enlisted: AtomicBool::new(false),
             batches_processed: AtomicU64::new(0),
             tasks_processed: AtomicU64::new(0),
         });
         self.shared.queues.lock().unwrap().push(Arc::clone(&state));
+        if dedicated_threads > 0 {
+            let mut private = self.dedicated_workers.lock().unwrap();
+            // Reap workers of lanes that drained and exited, so version
+            // churn on dedicated-thread models doesn't accumulate dead
+            // JoinHandles for the scheduler's (process-long) lifetime.
+            let (done, running): (Vec<_>, Vec<_>) =
+                private.drain(..).partition(|h| h.is_finished());
+            *private = running;
+            for h in done {
+                let _ = h.join();
+            }
+            for i in 0..dedicated_threads {
+                let shared = Arc::clone(&self.shared);
+                let q = Arc::clone(&state);
+                private.push(
+                    std::thread::Builder::new()
+                        .name(format!("{name}-lane-{i}"))
+                        .spawn(move || Self::dedicated_loop(shared, q))
+                        .expect("spawn dedicated lane worker"),
+                );
+            }
+        }
         BatchQueue { state, shared: Arc::clone(&self.shared) }
+    }
+
+    /// Service one ready lane: take up to `weight` closed batches,
+    /// re-enqueue the lane's entry *before* executing (so other
+    /// workers can drain the same lane concurrently and other lanes
+    /// rotate in behind it), then run the batches.
+    fn service_lane(shared: &Arc<Shared<T>>, q: &Arc<QueueState<T>>) {
+        let weight = q.opts.weight.max(1);
+        let mut taken: Vec<Batch<T>> = Vec::new();
+        let backlog = {
+            let mut inner = q.inner.lock().unwrap();
+            if q.removed.load(Ordering::SeqCst) {
+                q.flush_if_removed(&mut inner);
+            } else {
+                q.maybe_close_open(&mut inner, shared.now_nanos());
+            }
+            while taken.len() < weight {
+                match inner.closed.pop_front() {
+                    Some(b) => taken.push(b),
+                    None => break,
+                }
+            }
+            !inner.closed.is_empty()
+        };
+        if backlog {
+            // Rotate: entry to the back of the list (still enlisted),
+            // one more worker woken for the remaining batches.
+            let mut ready = shared.ready.lock().unwrap();
+            ready.push_back(Arc::clone(q));
+            drop(ready);
+            shared.work.notify_one();
+        } else {
+            q.enlisted.store(false, Ordering::Release);
+            // Re-check: a batch may have closed between our pop loop
+            // and the flag store; whoever loses the swap race leaves
+            // enlisting to the winner.
+            let refill = !q.inner.lock().unwrap().closed.is_empty();
+            if refill && !q.enlisted.swap(true, Ordering::AcqRel) {
+                let mut ready = shared.ready.lock().unwrap();
+                ready.push_back(Arc::clone(q));
+                drop(ready);
+                shared.work.notify_one();
+            }
+        }
+        for batch in taken {
+            q.run_batch(batch);
+        }
+    }
+
+    /// Idle pass over the lane registry: prune drained removed lanes,
+    /// close expired open batches (enlisting their lanes), and report
+    /// the nearest open-batch deadline. Dedicated lanes keep their own
+    /// time and are only pruned here.
+    fn idle_scan(shared: &Arc<Shared<T>>) -> Option<u64> {
+        let now = shared.now_nanos();
+        let mut next_deadline: Option<u64> = None;
+        let mut expired: Vec<Arc<QueueState<T>>> = Vec::new();
+        {
+            let mut queues = shared.queues.lock().unwrap();
+            queues.retain(|q| {
+                !q.removed.load(Ordering::SeqCst) || {
+                    let inner = q.inner.lock().unwrap();
+                    inner.open.is_some() || !inner.closed.is_empty()
+                }
+            });
+            for q in queues.iter() {
+                if q.dedicated() {
+                    continue;
+                }
+                let mut inner = q.inner.lock().unwrap();
+                q.maybe_close_open(&mut inner, now);
+                q.flush_if_removed(&mut inner);
+                let has_closed = !inner.closed.is_empty();
+                let deadline = q.open_deadline(&inner);
+                drop(inner);
+                if has_closed {
+                    expired.push(Arc::clone(q));
+                }
+                if let Some(d) = deadline {
+                    next_deadline = Some(next_deadline.map_or(d, |nd: u64| nd.min(d)));
+                }
+            }
+        }
+        // Enlist outside the registry lock (enlist takes the ready
+        // lock). Already-enlisted lanes are skipped by the flag.
+        for q in expired {
+            shared.enlist(&q);
+        }
+        next_deadline
+    }
+
+    /// Recompute the nearest-deadline atomic from a full scan. The
+    /// MAX-store happens first so a concurrent enqueue's `fetch_min`
+    /// is never overwritten by our (possibly staler) result.
+    fn refresh_deadlines(shared: &Arc<Shared<T>>) -> Option<u64> {
+        shared.next_open_deadline.store(u64::MAX, Ordering::Relaxed);
+        let next = Self::idle_scan(shared);
+        if let Some(d) = next {
+            shared.next_open_deadline.fetch_min(d, Ordering::Relaxed);
+        }
+        next
     }
 
     fn worker_loop(shared: Arc<Shared<T>>) {
@@ -274,63 +577,73 @@ impl<T: BatchTask> SharedBatchScheduler<T> {
             if shared.shutdown.load(Ordering::SeqCst) {
                 return;
             }
-            let mut next_deadline: Option<u64> = None;
-            let mut picked: Option<(Arc<QueueState<T>>, Batch<T>)> = None;
-            {
-                let mut queues = shared.queues.lock().unwrap();
-                // Prune fully-drained removed queues.
-                queues.retain(|q| {
-                    !q.removed.load(Ordering::SeqCst) || {
-                        let inner = q.inner.lock().unwrap();
-                        inner.open.is_some() || !inner.closed.is_empty()
-                    }
-                });
-                let n = queues.len();
-                if n > 0 {
-                    let start = shared.rr.fetch_add(1, Ordering::Relaxed) % n;
-                    let now = shared.now_nanos();
-                    // Round-robin scan for the next ready batch.
-                    for off in 0..n {
-                        let q = &queues[(start + off) % n];
-                        let mut inner = q.inner.lock().unwrap();
-                        q.maybe_close_open(&mut inner, now);
-                        // Removed queues flush their open batch eagerly.
-                        if q.removed.load(Ordering::SeqCst) {
-                            if let Some(b) = inner.open.take() {
-                                inner.closed.push_back(b);
-                            }
-                        }
-                        if let Some(batch) = inner.closed.pop_front() {
-                            picked = Some((Arc::clone(q), batch));
-                            break;
-                        }
-                        if let Some(d) = q.open_deadline(&inner) {
-                            next_deadline =
-                                Some(next_deadline.map_or(d, |nd: u64| nd.min(d)));
-                        }
-                    }
+            // Ready lane? Service it (the hot path touches only the
+            // ready list and that lane's mutex — never the registry).
+            let lane = shared.ready.lock().unwrap().pop_front();
+            if let Some(q) = lane {
+                Self::service_lane(&shared, &q);
+                // Saturated pools never idle: still honor other lanes'
+                // batch timeouts via one atomic check per pick.
+                if shared.now_nanos()
+                    >= shared.next_open_deadline.load(Ordering::Relaxed)
+                {
+                    Self::refresh_deadlines(&shared);
                 }
+                continue;
             }
-            match picked {
-                Some((q, batch)) => {
-                    // Execute outside all locks: this is the "device".
-                    q.batches_processed.fetch_add(1, Ordering::Relaxed);
-                    q.tasks_processed.fetch_add(batch.len() as u64, Ordering::Relaxed);
-                    (q.process)(batch);
-                }
-                None => {
-                    // Sleep until the nearest open-batch deadline (or a
-                    // signal), capped so shutdown is prompt.
+            // Idle: close expired batches, then sleep until the
+            // nearest open-batch deadline (or a signal), capped so
+            // shutdown is prompt.
+            let next_deadline = Self::refresh_deadlines(&shared);
+            let now = shared.now_nanos();
+            let wait = match next_deadline {
+                Some(d) if d > now => Duration::from_nanos((d - now).min(5_000_000)),
+                Some(_) => continue, // already expired: rescan
+                None => Duration::from_millis(5),
+            };
+            let g = shared.ready.lock().unwrap();
+            // Work or deadline changes that raced our scan: rescan
+            // rather than oversleeping them.
+            if !g.is_empty() || shared.timer_dirty.swap(false, Ordering::AcqRel) {
+                continue;
+            }
+            let _ = shared.work.wait_timeout(g, wait).unwrap();
+        }
+    }
+
+    /// Private worker for one dedicated lane: waits on the lane's own
+    /// condvar, closes its batches on deadline, and exits when the
+    /// lane is removed and drained (or the scheduler shuts down).
+    fn dedicated_loop(shared: Arc<Shared<T>>, q: Arc<QueueState<T>>) {
+        loop {
+            let batch = {
+                let mut inner = q.inner.lock().unwrap();
+                loop {
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
                     let now = shared.now_nanos();
-                    let wait = match next_deadline {
-                        Some(d) if d > now => Duration::from_nanos((d - now).min(5_000_000)),
-                        Some(_) => continue, // already expired: rescan
+                    q.maybe_close_open(&mut inner, now);
+                    q.flush_if_removed(&mut inner);
+                    if let Some(b) = inner.closed.pop_front() {
+                        break b;
+                    }
+                    if q.removed.load(Ordering::SeqCst) {
+                        return; // drained
+                    }
+                    let wait = match q.open_deadline(&inner) {
+                        Some(d) if d > now => {
+                            Duration::from_nanos((d - now).min(5_000_000))
+                        }
+                        Some(_) => continue, // expired: close it now
                         None => Duration::from_millis(5),
                     };
-                    let g = shared.work_lock.lock().unwrap();
-                    let _ = shared.work.wait_timeout(g, wait).unwrap();
+                    inner = q.cv.wait_timeout(inner, wait).unwrap().0;
                 }
-            }
+            };
+            // Another private worker can take the next batch while we
+            // execute this one (the lock is released here).
+            q.run_batch(batch);
         }
     }
 
@@ -355,8 +668,19 @@ impl<T: BatchTask> SharedBatchScheduler<T> {
 impl<T: BatchTask> Drop for SharedBatchScheduler<T> {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.shared.signal();
+        {
+            // Wake the whole shared pool (shutdown is the one broadcast).
+            let _g = self.shared.ready.lock().unwrap();
+            self.shared.work.notify_all();
+        }
+        // Wake every dedicated lane's private workers.
+        for q in self.shared.queues.lock().unwrap().iter() {
+            q.cv.notify_all();
+        }
         for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        for w in self.dedicated_workers.lock().unwrap().drain(..) {
             let _ = w.join();
         }
     }
@@ -376,6 +700,17 @@ mod tests {
     impl BatchTask for Task {
         fn size(&self) -> usize {
             self.size
+        }
+    }
+
+    /// `quiesce()` observes empty queues, but the last popped batch's
+    /// process callback may still be running — spin until the
+    /// callback-side condition holds before asserting on it.
+    fn wait_until(cond: impl Fn() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !cond() {
+            assert!(Instant::now() < deadline, "condition never reached");
+            std::thread::sleep(Duration::from_millis(1));
         }
     }
 
@@ -404,6 +739,7 @@ mod tests {
                 max_batch_size: 4,
                 batch_timeout: Duration::from_secs(100), // never by timeout
                 max_enqueued_batches: 8,
+                ..Default::default()
             },
             f,
         );
@@ -424,6 +760,7 @@ mod tests {
                 max_batch_size: 100,
                 batch_timeout: Duration::from_millis(5),
                 max_enqueued_batches: 8,
+                ..Default::default()
             },
             f,
         );
@@ -443,6 +780,7 @@ mod tests {
                 max_batch_size: 8,
                 batch_timeout: Duration::from_millis(2),
                 max_enqueued_batches: 8,
+                ..Default::default()
             },
             f,
         );
@@ -484,6 +822,7 @@ mod tests {
                 max_batch_size: 1,
                 batch_timeout: Duration::from_millis(0),
                 max_enqueued_batches: 4,
+                ..Default::default()
             },
             move |_b| {
                 let _ = slow_rx.lock().unwrap().recv();
@@ -499,6 +838,7 @@ mod tests {
                 max_batch_size: 1, // every task closes a batch
                 batch_timeout: Duration::from_millis(0),
                 max_enqueued_batches: 2,
+                ..Default::default()
             },
             f,
         );
@@ -519,8 +859,10 @@ mod tests {
 
     #[test]
     fn round_robin_across_queues() {
-        // One device thread, two queues with pre-loaded batches: the
-        // processing order must interleave.
+        // One device thread, two lanes with pre-loaded batches: the
+        // processing order must interleave (each pick takes `weight`
+        // batches, then the lane rotates to the back of the ready
+        // list).
         let sched = SharedBatchScheduler::new(SchedulerOptions {
             num_batch_threads: 1,
             ..Default::default()
@@ -538,6 +880,7 @@ mod tests {
                 max_batch_size: 1,
                 batch_timeout: Duration::ZERO,
                 max_enqueued_batches: 64,
+                ..Default::default()
             },
             mk("a", Arc::clone(&order)),
         );
@@ -547,6 +890,7 @@ mod tests {
                 max_batch_size: 1,
                 batch_timeout: Duration::ZERO,
                 max_enqueued_batches: 64,
+                ..Default::default()
             },
             mk("b", Arc::clone(&order)),
         );
@@ -555,6 +899,7 @@ mod tests {
             qb.enqueue(Task { size: 1, tag }).unwrap();
         }
         sched.quiesce();
+        wait_until(|| order.lock().unwrap().len() == 16);
         let order = order.lock().unwrap();
         assert_eq!(order.len(), 16);
         // Interleaving check: no long runs of one queue.
@@ -578,6 +923,7 @@ mod tests {
                 max_batch_size: 10,
                 batch_timeout: Duration::from_secs(100),
                 max_enqueued_batches: 8,
+                ..Default::default()
             },
             f,
         );
@@ -616,6 +962,7 @@ mod tests {
                 max_batch_size: 7,
                 batch_timeout: Duration::from_micros(200),
                 max_enqueued_batches: 1_000_000,
+                ..Default::default()
             },
             move |b| {
                 let mut m = s2.lock().unwrap();
@@ -629,8 +976,186 @@ mod tests {
             q.enqueue(Task { size: 1, tag }).unwrap();
         }
         sched.quiesce();
+        wait_until(|| seen.lock().unwrap().len() == N);
         let m = seen.lock().unwrap();
         assert_eq!(m.len(), N);
         assert!(m.values().all(|&c| c == 1), "duplicate processing");
+    }
+
+    // ------------------------------------------------ lane isolation
+
+    #[test]
+    fn dedicated_lane_processes_without_shared_workers() {
+        // Saturate the single shared worker with a never-finishing
+        // batch; a dedicated lane must still process (its private
+        // worker), proving full isolation from shared-pool starvation.
+        let sched = SharedBatchScheduler::new(SchedulerOptions {
+            num_batch_threads: 1,
+            ..Default::default()
+        });
+        let (block_tx, block_rx) = mpsc::channel::<()>();
+        let block_rx = Mutex::new(block_rx);
+        let blocker = sched.add_queue(
+            "blocker",
+            QueueOptions {
+                max_batch_size: 1,
+                batch_timeout: Duration::ZERO,
+                max_enqueued_batches: 64,
+                ..Default::default()
+            },
+            move |_b| {
+                let _ = block_rx.lock().unwrap().recv();
+            },
+        );
+        blocker.enqueue(Task { size: 1, tag: 0 }).unwrap();
+        std::thread::sleep(Duration::from_millis(30)); // shared pool now stuck
+
+        let (f, rx) = collector();
+        let q = sched.add_queue(
+            "vip",
+            QueueOptions {
+                max_batch_size: 4,
+                batch_timeout: Duration::from_millis(1),
+                max_enqueued_batches: 64,
+                dedicated_threads: 1,
+                ..Default::default()
+            },
+            f,
+        );
+        q.enqueue(Task { size: 1, tag: 42 }).unwrap();
+        let batch = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("dedicated lane starved by shared-pool saturation");
+        assert_eq!(batch, vec![(42, 1)]);
+        let _ = block_tx.send(());
+    }
+
+    #[test]
+    fn dedicated_lane_drains_on_drop() {
+        let sched = SharedBatchScheduler::new(SchedulerOptions::default());
+        let (f, rx) = collector();
+        let q = sched.add_queue(
+            "vip",
+            QueueOptions {
+                max_batch_size: 10,
+                batch_timeout: Duration::from_secs(100),
+                max_enqueued_batches: 8,
+                dedicated_threads: 2,
+                ..Default::default()
+            },
+            f,
+        );
+        q.enqueue(Task { size: 1, tag: 9 }).unwrap();
+        drop(q); // open batch flushes through the private workers
+        let batch = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(batch, vec![(9, 1)]);
+    }
+
+    #[test]
+    fn weight_rotates_lane_after_its_share() {
+        // Lane A (weight 2) pre-loads 6 batches; lane B (weight 1)
+        // pre-loads 3. One worker, parked on a gate lane while the
+        // backlogs build (so pick order is deterministic): the order
+        // must show A ceding the device to B after at most `weight`
+        // consecutive batches.
+        let sched = SharedBatchScheduler::new(SchedulerOptions {
+            num_batch_threads: 1,
+            ..Default::default()
+        });
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate_rx = Mutex::new(gate_rx);
+        let gate = sched.add_queue(
+            "gate",
+            QueueOptions {
+                max_batch_size: 1,
+                batch_timeout: Duration::ZERO,
+                max_enqueued_batches: 4,
+                ..Default::default()
+            },
+            move |_b| {
+                let _ = gate_rx.lock().unwrap().recv();
+            },
+        );
+        gate.enqueue(Task { size: 1, tag: 0 }).unwrap();
+        std::thread::sleep(Duration::from_millis(30)); // worker parked
+
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mk = |label: &'static str, order: Arc<Mutex<Vec<&'static str>>>| {
+            move |_b: Batch<Task>| {
+                order.lock().unwrap().push(label);
+            }
+        };
+        let qa = sched.add_queue(
+            "a",
+            QueueOptions {
+                max_batch_size: 1,
+                batch_timeout: Duration::ZERO,
+                max_enqueued_batches: 64,
+                weight: 2,
+                ..Default::default()
+            },
+            mk("a", Arc::clone(&order)),
+        );
+        let qb = sched.add_queue(
+            "b",
+            QueueOptions {
+                max_batch_size: 1,
+                batch_timeout: Duration::ZERO,
+                max_enqueued_batches: 64,
+                ..Default::default()
+            },
+            mk("b", Arc::clone(&order)),
+        );
+        for tag in 0..6 {
+            qa.enqueue(Task { size: 1, tag }).unwrap();
+        }
+        for tag in 0..3 {
+            qb.enqueue(Task { size: 1, tag }).unwrap();
+        }
+        let _ = gate_tx.send(()); // release the worker
+        sched.quiesce();
+        wait_until(|| order.lock().unwrap().len() == 9);
+        let order = order.lock().unwrap();
+        assert_eq!(order.len(), 9);
+        // No run of >2 consecutive "a"s: weight caps the share.
+        let mut run = 0usize;
+        for &l in order.iter() {
+            if l == "a" {
+                run += 1;
+                assert!(run <= 2, "lane exceeded its weighted share: {order:?}");
+            } else {
+                run = 0;
+            }
+        }
+        // And b was never starved behind a's whole backlog.
+        assert!(
+            order.iter().position(|&l| l == "b").unwrap() <= 2,
+            "b waited behind a's whole backlog: {order:?}"
+        );
+    }
+
+    #[test]
+    fn depth_gauge_tracks_queued_rows() {
+        let gauge = Arc::new(Gauge::default());
+        let sched = SharedBatchScheduler::new(SchedulerOptions::default());
+        let (f, rx) = collector();
+        let q = sched.add_queue(
+            "q",
+            QueueOptions {
+                max_batch_size: 100,
+                batch_timeout: Duration::from_millis(100),
+                max_enqueued_batches: 8,
+                depth_gauge: Some(Arc::clone(&gauge)),
+                ..Default::default()
+            },
+            f,
+        );
+        q.enqueue(Task { size: 3, tag: 0 }).unwrap();
+        q.enqueue(Task { size: 2, tag: 1 }).unwrap();
+        assert_eq!(gauge.get(), 5, "gauge should count queued rows");
+        let _ = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        sched.quiesce();
+        wait_until(|| gauge.get() == 0);
+        assert_eq!(gauge.get(), 0, "gauge should drain with the lane");
     }
 }

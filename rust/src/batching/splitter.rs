@@ -2,6 +2,14 @@
 //! divided into chunks that batch independently, and the caller's
 //! completion fires when the *last* chunk finishes (mirrors TF-Serving's
 //! `split_input_task_func`).
+//!
+//! Dispatch is **parallel**: callers enqueue every chunk before
+//! waiting on any (see `BatchingSession::run_split`), and the
+//! scheduler's lanes let multiple device workers drain one lane's
+//! chunk backlog concurrently, so a split request's latency tracks the
+//! slowest single chunk rather than the sum of all chunks. The
+//! [`SplitCompletion`] rendezvous here is the generic form of that
+//! last-chunk completion for non-tensor tasks.
 
 use super::batch::BatchTask;
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -79,6 +79,18 @@ impl ModelServer {
     /// listening (models may still be loading — see
     /// [`ModelServer::wait_until_ready`]).
     pub fn start(config: ServerConfig) -> Result<Arc<Self>> {
+        // Buffer-pool sharding must be requested before the global
+        // pools' first touch; afterwards the shard count is fixed for
+        // the process (log, don't fail — any count works).
+        if config.batching.pool_shards > 0
+            && !crate::util::pool::configure_global_shards(config.batching.pool_shards)
+        {
+            crate::log_info!(
+                "batching.pool_shards={} requested after the global buffer pools \
+                 were built; keeping the existing shard count",
+                config.batching.pool_shards
+            );
+        }
         // Manager.
         let policy: Arc<dyn VersionPolicy> = if config.availability_preserving {
             Arc::new(AvailabilityPreservingPolicy)

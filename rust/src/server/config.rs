@@ -16,9 +16,10 @@
 //!     "max_batch_size": 16,
 //!     "batch_timeout_micros": 2000,
 //!     "max_enqueued_batches": 64,
+//!     "pool_shards": 0,
 //!     "models": [
 //!       {"name": "mlp_classifier", "max_batch_size": 64,
-//!        "batch_timeout_micros": 500}
+//!        "batch_timeout_micros": 500, "dedicated_threads": 2}
 //!     ]
 //!   },
 //!   "models": [
@@ -28,6 +29,7 @@
 //! }
 //! ```
 
+use crate::base::error::ErrorKind;
 use crate::lifecycle::source::ServingPolicy;
 use crate::serving::{BatchingConfig, BatchingOverride};
 use crate::util::config::Conf;
@@ -173,6 +175,7 @@ impl ServerConfig {
                 "max_batch_size",
                 "batch_timeout_micros",
                 "max_enqueued_batches",
+                "pool_shards",
                 "models",
             ])?;
         }
@@ -184,6 +187,7 @@ impl ServerConfig {
                     "max_batch_size",
                     "batch_timeout_micros",
                     "max_enqueued_batches",
+                    "dedicated_threads",
                 ])?;
                 let name = m.str("name")?.to_string();
                 let get = |key: &str| m.root().get(key).and_then(|v| v.as_u64());
@@ -194,18 +198,39 @@ impl ServerConfig {
                         batch_timeout: get("batch_timeout_micros").map(Duration::from_micros),
                         max_enqueued_batches: get("max_enqueued_batches")
                             .map(|v| v as usize),
+                        dedicated_threads: get("dedicated_threads").map(|v| v as usize),
                     },
                 );
             }
         }
         // Zero-capacity knobs are config typos, caught here (parse
         // time) rather than as a panic when the first servable loads.
+        // Kind: InvalidArgument — a config-shaped request problem.
         for (name, o) in &per_model {
             if o.max_batch_size == Some(0) || o.max_enqueued_batches == Some(0) {
-                bail!("batching.models['{name}']: max_batch_size / max_enqueued_batches \
-                       must be positive");
+                return Err(ErrorKind::InvalidArgument.err(format!(
+                    "batching.models['{name}']: max_batch_size / max_enqueued_batches \
+                     must be positive"
+                )));
+            }
+            // dedicated_threads: 0 would mean "a private worker set of
+            // nobody" — the lane would never drain. Omit the key to
+            // use the shared pool.
+            if o.dedicated_threads == Some(0) {
+                return Err(ErrorKind::InvalidArgument.err(format!(
+                    "batching.models['{name}']: dedicated_threads must be positive \
+                     (omit the key to use the shared worker pool)"
+                )));
             }
         }
+        // Shard count is clamped (power of two in [1, MAX_SHARDS]), not
+        // rejected: 0 = auto-size from the machine's parallelism.
+        let pool_shards = conf.u64_or("batching.pool_shards", 0) as usize;
+        let pool_shards = if pool_shards == 0 {
+            0
+        } else {
+            crate::util::pool::clamp_shards(pool_shards)
+        };
         let batching = BatchingConfig {
             enabled: conf.bool_or("batching.enabled", defaults.enabled),
             num_batch_threads: conf
@@ -222,16 +247,17 @@ impl ServerConfig {
                 "batching.max_enqueued_batches",
                 defaults.max_enqueued_batches as u64,
             ) as usize,
+            pool_shards,
             per_model,
         };
         if batching.max_batch_size == 0
             || batching.max_enqueued_batches == 0
             || batching.num_batch_threads == 0
         {
-            bail!(
+            return Err(ErrorKind::InvalidArgument.err(
                 "batching: num_batch_threads, max_batch_size and max_enqueued_batches \
-                 must be positive"
-            );
+                 must be positive",
+            ));
         }
         Ok(batching)
     }
@@ -341,6 +367,68 @@ mod tests {
                 .to_string();
             assert!(err.contains("positive"), "{bad}: {err}");
         }
+
+        // dedicated_threads parses per model; 0 is rejected at parse
+        // time with an InvalidArgument kind (PR 4 validation style).
+        let cfg = ServerConfig::from_conf(
+            &Conf::parse(
+                r#"{
+                  "batching": {"models": [{"name": "vip", "dedicated_threads": 2}]},
+                  "models": [{"name": "vip"}]
+                }"#,
+                "t",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.batching.per_model.get("vip").unwrap().dedicated_threads,
+            Some(2)
+        );
+        let err = ServerConfig::from_conf(
+            &Conf::parse(
+                r#"{
+                  "batching": {"models": [{"name": "vip", "dedicated_threads": 0}]},
+                  "models": [{"name": "vip"}]
+                }"#,
+                "t",
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(
+            crate::base::error::ErrorKind::of(&err),
+            crate::base::error::ErrorKind::InvalidArgument
+        );
+        assert!(err.to_string().contains("dedicated_threads"), "{err}");
+
+        // pool_shards is clamped (power of two, capped), never an
+        // error; 0/absent = auto.
+        for (json, want) in [
+            (r#"{"batching": {"pool_shards": 5}, "models":[{"name":"x"}]}"#, 8usize),
+            (r#"{"batching": {"pool_shards": 100000}, "models":[{"name":"x"}]}"#,
+             crate::util::pool::MAX_SHARDS),
+            (r#"{"batching": {"pool_shards": 0}, "models":[{"name":"x"}]}"#, 0),
+            (r#"{"models":[{"name":"x"}]}"#, 0),
+        ] {
+            let cfg =
+                ServerConfig::from_conf(&Conf::parse(json, "t").unwrap()).unwrap();
+            assert_eq!(cfg.batching.pool_shards, want, "{json}");
+        }
+
+        // Zero-capacity rejections carry the InvalidArgument kind too.
+        let err = ServerConfig::from_conf(
+            &Conf::parse(
+                r#"{"batching": {"max_batch_size": 0}, "models":[{"name":"x"}]}"#,
+                "t",
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(
+            crate::base::error::ErrorKind::of(&err),
+            crate::base::error::ErrorKind::InvalidArgument
+        );
 
         // Disabled is parseable; unknown batching keys are typos.
         let cfg = ServerConfig::from_conf(

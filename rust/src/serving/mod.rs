@@ -19,6 +19,15 @@
 //!   merge into shared device batches; the splitter chunks oversized
 //!   requests and view tensors scatter outputs back with zero copies.
 //!
+//! Each session is an isolated scheduler **lane**: lanes rotate
+//! through the worker pool in weighted round-robin order (one model's
+//! backlog cannot starve another's — the multi-tenant head-of-line
+//! hazard §2.2.1 warns about), queue depth surfaces as the
+//! `batch.{model}.lane_depth` gauge, and a
+//! `batching.models[].dedicated_threads` override gives a
+//! latency-critical model a private device-worker set that shared-lane
+//! saturation can never occupy.
+//!
 //! Teardown is drain-by-refusal: the per-session runner is gated on a
 //! `closed` flag set before the queue handle drops, so work still
 //! queued when a version unloads gets a clean
@@ -74,6 +83,10 @@ pub struct BatchingOverride {
     pub max_batch_size: Option<usize>,
     pub batch_timeout: Option<Duration>,
     pub max_enqueued_batches: Option<usize>,
+    /// Private device threads for this model's lanes (latency-critical
+    /// models get a worker set no other model's backlog can occupy).
+    /// Unset/None = the shared pool. Config parsing rejects 0.
+    pub dedicated_threads: Option<usize>,
 }
 
 /// Cross-request batching knobs (`ServerConfig.batching`; the analogue
@@ -91,6 +104,11 @@ pub struct BatchingConfig {
     pub batch_timeout: Duration,
     /// Closed-but-unprocessed batch limit before load shedding.
     pub max_enqueued_batches: usize,
+    /// Lock shards for the global tensor buffer pools (0 = auto-size
+    /// from the machine's parallelism; clamped via
+    /// [`crate::util::pool::clamp_shards`]). Applied at server start,
+    /// before the pools' first use.
+    pub pool_shards: usize,
     /// Per-model overrides keyed by model name.
     pub per_model: HashMap<String, BatchingOverride>,
 }
@@ -103,13 +121,14 @@ impl Default for BatchingConfig {
             max_batch_size: 16,
             batch_timeout: Duration::from_micros(2000),
             max_enqueued_batches: 64,
+            pool_shards: 0,
             per_model: HashMap::new(),
         }
     }
 }
 
 impl BatchingConfig {
-    /// Resolve the queue options for one model, applying its override.
+    /// Resolve the lane options for one model, applying its override.
     fn queue_options(&self, model: &str) -> QueueOptions {
         let o = self.per_model.get(model);
         QueueOptions {
@@ -122,6 +141,8 @@ impl BatchingConfig {
             max_enqueued_batches: o
                 .and_then(|o| o.max_enqueued_batches)
                 .unwrap_or(self.max_enqueued_batches),
+            dedicated_threads: o.and_then(|o| o.dedicated_threads).unwrap_or(0),
+            ..Default::default()
         }
     }
 }
@@ -243,6 +264,12 @@ impl SessionRegistry {
         // `add_queue` asserts) — config parsing rejects 0, but this
         // layer guards for programmatic configs too.
         queue.max_batch_size = queue.max_batch_size.max(1);
+        // Lane identity: the per-model depth gauge (versions of one
+        // model share it; adds and drains net out correctly).
+        queue.depth_gauge = Some(
+            self.metrics
+                .gauge(&format!("batch.{}.lane_depth", id.name)),
+        );
         let closed = Arc::new(AtomicBool::new(false));
         let runner = GatedRunner { closed: Arc::clone(&closed), handle };
         let options = SessionOptions {
@@ -442,14 +469,31 @@ mod tests {
                 max_batch_size: Some(64),
                 batch_timeout: Some(Duration::from_micros(500)),
                 max_enqueued_batches: None,
+                dedicated_threads: Some(2),
             },
         );
         let q = config.queue_options("special");
         assert_eq!(q.max_batch_size, 64);
         assert_eq!(q.batch_timeout, Duration::from_micros(500));
         assert_eq!(q.max_enqueued_batches, config.max_enqueued_batches);
+        assert_eq!(q.dedicated_threads, 2);
         let q = config.queue_options("other");
         assert_eq!(q.max_batch_size, config.max_batch_size);
+        assert_eq!(q.dedicated_threads, 0, "no override: shared pool");
+    }
+
+    #[test]
+    fn lane_depth_gauge_registers_per_model() {
+        let m = manager_with(&[1]);
+        let metrics = Registry::new();
+        let r = SessionRegistry::new(BatchingConfig::default(), Arc::clone(&metrics));
+        r.attach(&m);
+        // The lane gauge exists once a session opens, and drains to 0
+        // after a request completes.
+        let handle = m.handle::<HloServable>("m", VersionRequest::Latest).unwrap();
+        let input = Tensor::matrix(vec![vec![0.5, 1.0, -1.0, 0.25]]).unwrap();
+        r.run(&handle, &input).unwrap();
+        assert_eq!(metrics.gauge("batch.m.lane_depth").get(), 0);
     }
 
     #[test]

@@ -4,6 +4,50 @@
 
 use std::time::{Duration, Instant};
 
+/// True when benches should run one short smoke iteration instead of a
+/// full measurement — set by `scripts/check.sh --bench-smoke`
+/// (`TENSORSERVE_BENCH_SMOKE=1`) as a compile-and-run guard so benches
+/// cannot silently rot. Numbers produced in smoke mode are meaningless;
+/// only completion matters.
+pub fn smoke() -> bool {
+    smoke_from(std::env::var("TENSORSERVE_BENCH_SMOKE").ok().as_deref())
+}
+
+/// Pure core of [`smoke`] (unit-testable without mutating the process
+/// environment, which is UB to race with `getenv`).
+fn smoke_from(value: Option<&str>) -> bool {
+    matches!(value, Some(v) if v != "0" && !v.is_empty())
+}
+
+/// A bench's measurement window: `full` normally, clipped to ~100ms in
+/// smoke mode. Route every top-level bench duration through this.
+pub fn bench_duration(full: Duration) -> Duration {
+    clip_duration(full, smoke())
+}
+
+/// Pure core of [`bench_duration`].
+fn clip_duration(full: Duration, smoke: bool) -> Duration {
+    if smoke {
+        full.min(Duration::from_millis(100))
+    } else {
+        full
+    }
+}
+
+/// Write a bench's machine-readable trajectory file — unless in smoke
+/// mode, whose numbers are meaningless: `make check` must never
+/// overwrite committed BENCH_*.json with 100ms-clipped measurements.
+pub fn write_bench_json(path: &str, contents: &str) {
+    if smoke() {
+        println!("\nsmoke mode: not overwriting {path}");
+        return;
+    }
+    match std::fs::write(path, contents) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}
+
 /// Run `f` for ~`duration` after a warmup, returning (iterations, elapsed).
 pub fn measure<F: FnMut()>(warmup: Duration, duration: Duration, mut f: F) -> (u64, Duration) {
     let w0 = Instant::now();
@@ -111,6 +155,29 @@ mod tests {
         let mut t = Table::new("t", &["a", "bb"]);
         t.row(vec!["1".into(), "2".into()]);
         t.print(); // just must not panic
+    }
+
+    #[test]
+    fn bench_duration_clips_in_smoke_mode() {
+        // Pure helpers only: mutating the real environment races other
+        // threads' getenv (UB), so the env read stays untested here.
+        assert!(smoke_from(Some("1")));
+        assert!(smoke_from(Some("yes")));
+        assert!(!smoke_from(Some("0")));
+        assert!(!smoke_from(Some("")));
+        assert!(!smoke_from(None));
+        assert_eq!(
+            clip_duration(Duration::from_secs(5), true),
+            Duration::from_millis(100)
+        );
+        assert_eq!(
+            clip_duration(Duration::from_millis(20), true),
+            Duration::from_millis(20)
+        );
+        assert_eq!(
+            clip_duration(Duration::from_secs(5), false),
+            Duration::from_secs(5)
+        );
     }
 
     #[test]

@@ -37,6 +37,12 @@ impl Counter {
 #[derive(Default)]
 pub struct Gauge(AtomicI64);
 
+impl std::fmt::Debug for Gauge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Gauge").field(&self.get()).finish()
+    }
+}
+
 impl Gauge {
     pub fn set(&self, v: i64) {
         self.0.store(v, Ordering::Relaxed);

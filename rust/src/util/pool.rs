@@ -14,6 +14,21 @@
 //! request — a client sweeping arbitrary tensor sizes cannot pin
 //! unreusable shelves.
 //!
+//! ## Sharding (the contention fix)
+//!
+//! The shelves are **lock-striped across N shards** (N a power of two,
+//! clamped to [`MAX_SHARDS`]; the global pools size N from the
+//! machine's parallelism, overridable via
+//! [`configure_global_shards`] before first use). Each thread is
+//! assigned a home shard round-robin at first touch:
+//! `acquire`/`release` take only that shard's mutex in the steady
+//! state, so M request and batch threads hammering the pool no longer
+//! serialize on one shelf lock. An `acquire` whose home shard is cold
+//! falls through to the other shards (neighbor first) before
+//! allocating fresh, so cross-thread flows — a device worker's output
+//! buffer released later by a connection thread — still recycle
+//! instead of chronically missing.
+//!
 //! Safety/uniqueness: a buffer is only shelved when the pool would be
 //! its sole owner (`Arc::get_mut` succeeds), and an acquired buffer is
 //! always uniquely owned, so callers may fill it via `Arc::get_mut`.
@@ -22,10 +37,13 @@
 //! the padding tail). Releases of non-class-sized buffers (anything
 //! that didn't come from a pool) are declined, not shelved.
 //!
-//! Accounting: bytes shelved are tracked process-wide in
-//! [`crate::util::mem::pooled_buffer_bytes`] (so RSS investigations can
-//! subtract pool-held memory), and hit/miss/recycle counters use
-//! [`crate::util::metrics::Counter`] for lock-free recording.
+//! Accounting: hit/miss/recycle counters, the buffers/bytes gauges and
+//! the process-wide ledger in [`crate::util::mem::pooled_buffer_bytes`]
+//! all **aggregate across shards**, so [`PoolStats`], the Status dump
+//! and unload-time [`BufferPool::clear`] keep their single-shelf
+//! semantics. The per-class buffer cap applies per shard (the byte cap
+//! is pool-wide), which keeps the release path free of cross-shard
+//! coordination.
 
 use crate::util::metrics::Counter;
 use std::collections::BTreeMap;
@@ -36,9 +54,58 @@ use std::sync::{Arc, Mutex};
 /// share one shelf instead of fragmenting into per-length shelves.
 pub const MIN_CLASS: usize = 64;
 
+/// Largest shard count a pool will stripe across; higher requests are
+/// clamped (diminishing returns past the core count, and each shard
+/// costs a mutex + map).
+pub const MAX_SHARDS: usize = 64;
+
 /// Round a requested element count up to its pool class.
 pub fn size_class(len: usize) -> usize {
     len.next_power_of_two().max(MIN_CLASS)
+}
+
+/// Clamp a requested shard count into the supported range: at least 1,
+/// at most [`MAX_SHARDS`], rounded up to a power of two (the shard
+/// choice is a mask).
+pub fn clamp_shards(n: usize) -> usize {
+    n.clamp(1, MAX_SHARDS).next_power_of_two().min(MAX_SHARDS)
+}
+
+/// Default shard count: the next power of two ≥ the machine's
+/// parallelism (≈ the number of threads that can contend), clamped.
+fn default_shards() -> usize {
+    clamp_shards(
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(8),
+    )
+}
+
+/// Requested shard count for the global pools (0 = auto). Effective
+/// only if set before the first `global()`/`global_i32()` touch.
+static GLOBAL_SHARDS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set once the first global pool has been constructed (its shard
+/// count is then fixed for the process lifetime).
+static GLOBAL_BUILT: AtomicUsize = AtomicUsize::new(0);
+
+fn global_shard_count() -> usize {
+    GLOBAL_BUILT.store(1, Ordering::Release);
+    match GLOBAL_SHARDS.load(Ordering::Relaxed) {
+        0 => default_shards(),
+        n => clamp_shards(n),
+    }
+}
+
+/// Request a shard count for the **global** pools (`"batching":
+/// {"pool_shards": N}` in the server config). Clamped via
+/// [`clamp_shards`]; 0 restores auto-sizing. Returns `false` when a
+/// global pool was already built — the request then has no effect and
+/// callers should log rather than fail, since the pools work at any
+/// shard count.
+pub fn configure_global_shards(n: usize) -> bool {
+    GLOBAL_SHARDS.store(n, Ordering::Relaxed);
+    GLOBAL_BUILT.load(Ordering::Acquire) == 0
 }
 
 /// Counter snapshot for tests, the Status dump, and benches.
@@ -52,15 +119,24 @@ pub struct PoolStats {
     pub recycled: u64,
     /// Releases declined (buffer still shared, or pool at capacity).
     pub declined: u64,
-    /// Buffers currently shelved.
+    /// Buffers currently shelved (all shards).
     pub buffers_pooled: usize,
-    /// Bytes currently shelved.
+    /// Bytes currently shelved (all shards).
     pub bytes_pooled: usize,
 }
 
-pub struct BufferPool<T = f32> {
+/// One lock stripe: a mutex-guarded class → shelf map.
+struct Shard<T> {
     shelves: Mutex<BTreeMap<usize, Vec<Arc<[T]>>>>,
+}
+
+pub struct BufferPool<T = f32> {
+    shards: Vec<Shard<T>>,
+    /// `shards.len() - 1` (shard count is a power of two).
+    shard_mask: usize,
+    /// Per-shard, per-class shelf cap.
     max_buffers_per_size: usize,
+    /// Pool-wide byte cap (all shards together).
     max_total_bytes: usize,
     bytes_pooled: AtomicUsize,
     buffers_pooled: AtomicUsize,
@@ -75,7 +151,9 @@ impl BufferPool<f32> {
     /// assembly, padding, RPC tensor decode).
     pub fn global() -> Arc<BufferPool> {
         static GLOBAL: once_cell::sync::Lazy<Arc<BufferPool>> =
-            once_cell::sync::Lazy::new(|| Arc::new(BufferPool::new(32, 256 << 20)));
+            once_cell::sync::Lazy::new(|| {
+                Arc::new(BufferPool::with_shards(32, 256 << 20, global_shard_count()))
+            });
         Arc::clone(&GLOBAL)
     }
 }
@@ -85,15 +163,33 @@ impl BufferPool<i32> {
     /// i32 wire tensors).
     pub fn global_i32() -> Arc<BufferPool<i32>> {
         static GLOBAL: once_cell::sync::Lazy<Arc<BufferPool<i32>>> =
-            once_cell::sync::Lazy::new(|| Arc::new(BufferPool::new(32, 64 << 20)));
+            once_cell::sync::Lazy::new(|| {
+                Arc::new(BufferPool::with_shards(32, 64 << 20, global_shard_count()))
+            });
         Arc::clone(&GLOBAL)
     }
 }
 
 impl<T: Copy + Default + Send + Sync + 'static> BufferPool<T> {
+    /// A pool striped across the default shard count.
     pub fn new(max_buffers_per_size: usize, max_total_bytes: usize) -> Self {
+        Self::with_shards(max_buffers_per_size, max_total_bytes, default_shards())
+    }
+
+    /// A pool striped across `shards` lock shards (clamped via
+    /// [`clamp_shards`]; 1 = the old single-mutex behavior, useful as a
+    /// contention baseline in benches).
+    pub fn with_shards(
+        max_buffers_per_size: usize,
+        max_total_bytes: usize,
+        shards: usize,
+    ) -> Self {
+        let n = clamp_shards(shards);
         BufferPool {
-            shelves: Mutex::new(BTreeMap::new()),
+            shards: (0..n)
+                .map(|_| Shard { shelves: Mutex::new(BTreeMap::new()) })
+                .collect(),
+            shard_mask: n - 1,
             max_buffers_per_size,
             max_total_bytes,
             bytes_pooled: AtomicUsize::new(0),
@@ -105,29 +201,60 @@ impl<T: Copy + Default + Send + Sync + 'static> BufferPool<T> {
         }
     }
 
+    /// Number of lock shards (diagnostics/benches).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// This thread's home shard index. Threads are numbered round-robin
+    /// at first touch, so up to N pool-using threads get N distinct
+    /// shards — batch workers and request threads stop sharing a lock.
+    fn home_shard(&self) -> usize {
+        thread_local! {
+            static THREAD_TOKEN: usize = {
+                static NEXT: AtomicUsize = AtomicUsize::new(0);
+                NEXT.fetch_add(1, Ordering::Relaxed)
+            };
+        }
+        THREAD_TOKEN.with(|t| *t) & self.shard_mask
+    }
+
+    /// Pop a buffer of `class` from shard `idx`, maintaining the
+    /// aggregate accounting under that shard's lock (so a concurrent
+    /// `clear()` can never interleave with it).
+    fn pop_from_shard(&self, idx: usize, class: usize) -> Option<Arc<[T]>> {
+        let mut shelves = self.shards[idx].shelves.lock().unwrap();
+        let buf = shelves.get_mut(&class).and_then(Vec::pop)?;
+        let bytes = class * std::mem::size_of::<T>();
+        self.buffers_pooled.fetch_sub(1, Ordering::Relaxed);
+        self.bytes_pooled.fetch_sub(bytes, Ordering::Relaxed);
+        crate::util::mem::note_pool_bytes(-(bytes as i64));
+        Some(buf)
+    }
+
     /// A uniquely-owned buffer of **at least** `len` elements (rounded
-    /// up to the size class). Served from the class shelf when
-    /// available, else freshly allocated (zeroed). Recycled contents
-    /// are unspecified — write before read.
+    /// up to the size class). Served from the home shard's shelf when
+    /// available, falling through to the remaining shards (neighbor
+    /// first) before allocating fresh (zeroed) — so a buffer released
+    /// by *any* thread is always found before paying an allocation,
+    /// exactly like the pre-sharding single shelf. The steady state is
+    /// a first-probe hit (one uncontended lock); the full sweep runs
+    /// only on the way to what would otherwise be a miss. This matters
+    /// because serving flows cross threads: device workers acquire
+    /// output buffers that connection threads later release onto
+    /// *their* home shards.
     pub fn acquire(&self, len: usize) -> Arc<[T]> {
         if len > 0 {
             let class = size_class(len);
-            // Counter updates stay inside the shelves lock so they can
-            // never interleave with a concurrent `clear()`'s accounting.
-            let mut shelves = self.shelves.lock().unwrap();
-            if let Some(buf) = shelves.get_mut(&class).and_then(Vec::pop) {
-                self.buffers_pooled.fetch_sub(1, Ordering::Relaxed);
-                self.bytes_pooled
-                    .fetch_sub(class * std::mem::size_of::<T>(), Ordering::Relaxed);
-                crate::util::mem::note_pool_bytes(
-                    -((class * std::mem::size_of::<T>()) as i64),
-                );
-                drop(shelves);
-                self.hits.inc();
-                debug_assert_eq!(Arc::strong_count(&buf), 1);
-                return buf;
+            let home = self.home_shard();
+            for probe in 0..self.shards.len() {
+                if let Some(buf) = self.pop_from_shard((home + probe) & self.shard_mask, class)
+                {
+                    self.hits.inc();
+                    debug_assert_eq!(Arc::strong_count(&buf), 1);
+                    return buf;
+                }
             }
-            drop(shelves);
             self.misses.inc();
             return std::iter::repeat(T::default()).take(class).collect();
         }
@@ -135,9 +262,10 @@ impl<T: Copy + Default + Send + Sync + 'static> BufferPool<T> {
         std::iter::repeat(T::default()).take(len).collect()
     }
 
-    /// Offer a buffer back. Shelved only if it is class-sized (i.e.
-    /// pool-compatible), the pool would be its sole owner, and capacity
-    /// limits allow; otherwise the Arc just drops.
+    /// Offer a buffer back. Shelved (on the caller's home shard) only
+    /// if it is class-sized (i.e. pool-compatible), the pool would be
+    /// its sole owner, and capacity limits allow; otherwise the Arc
+    /// just drops.
     pub fn release(&self, mut buf: Arc<[T]>) {
         let len = buf.len();
         // Class + uniqueness gates: arbitrary-length buffers would
@@ -152,15 +280,15 @@ impl<T: Copy + Default + Send + Sync + 'static> BufferPool<T> {
             self.declined.inc();
             return;
         }
-        let mut shelves = self.shelves.lock().unwrap();
+        let mut shelves = self.shards[self.home_shard()].shelves.lock().unwrap();
         let shelf = shelves.entry(len).or_default();
         if shelf.len() >= self.max_buffers_per_size {
             self.declined.inc();
             return;
         }
         shelf.push(buf);
-        // Under the lock: a concurrent `clear()` must observe the push
-        // and this accounting together or not at all.
+        // Under the shard lock: a concurrent `clear()` must observe the
+        // push and this accounting together or not at all.
         self.buffers_pooled.fetch_add(1, Ordering::Relaxed);
         self.bytes_pooled.fetch_add(bytes, Ordering::Relaxed);
         crate::util::mem::note_pool_bytes(bytes as i64);
@@ -168,21 +296,22 @@ impl<T: Copy + Default + Send + Sync + 'static> BufferPool<T> {
         self.recycled.inc();
     }
 
-    /// Drop every shelved buffer (e.g. after servable unload, before
-    /// `mem::release_to_os`).
+    /// Drop every shelved buffer on every shard (e.g. after servable
+    /// unload, before `mem::release_to_os`).
     pub fn clear(&self) {
-        let mut shelves = self.shelves.lock().unwrap();
-        let bytes: usize = shelves
-            .values()
-            .flat_map(|v| v.iter())
-            .map(|b| b.len() * std::mem::size_of::<T>())
-            .sum();
-        let count: usize = shelves.values().map(Vec::len).sum();
-        shelves.clear();
-        self.buffers_pooled.fetch_sub(count, Ordering::Relaxed);
-        self.bytes_pooled.fetch_sub(bytes, Ordering::Relaxed);
-        crate::util::mem::note_pool_bytes(-(bytes as i64));
-        drop(shelves);
+        for shard in &self.shards {
+            let mut shelves = shard.shelves.lock().unwrap();
+            let bytes: usize = shelves
+                .values()
+                .flat_map(|v| v.iter())
+                .map(|b| b.len() * std::mem::size_of::<T>())
+                .sum();
+            let count: usize = shelves.values().map(Vec::len).sum();
+            shelves.clear();
+            self.buffers_pooled.fetch_sub(count, Ordering::Relaxed);
+            self.bytes_pooled.fetch_sub(bytes, Ordering::Relaxed);
+            crate::util::mem::note_pool_bytes(-(bytes as i64));
+        }
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -210,6 +339,9 @@ impl<T: Copy + Default + Send + Sync + 'static> BufferPool<T> {
         registry
             .gauge(&format!("{prefix}.bytes_pooled"))
             .set(s.bytes_pooled as i64);
+        registry
+            .gauge(&format!("{prefix}.shards"))
+            .set(self.shard_count() as i64);
     }
 }
 
@@ -241,6 +373,19 @@ mod tests {
         assert_eq!(size_class(MIN_CLASS + 1), MIN_CLASS * 2);
         assert_eq!(size_class(100), 128);
         assert_eq!(size_class(128), 128);
+    }
+
+    #[test]
+    fn shard_clamping() {
+        assert_eq!(clamp_shards(0), 1);
+        assert_eq!(clamp_shards(1), 1);
+        assert_eq!(clamp_shards(3), 4);
+        assert_eq!(clamp_shards(8), 8);
+        assert_eq!(clamp_shards(1000), MAX_SHARDS);
+        let pool: BufferPool = BufferPool::with_shards(4, 1 << 20, 5);
+        assert_eq!(pool.shard_count(), 8);
+        let single: BufferPool = BufferPool::with_shards(4, 1 << 20, 1);
+        assert_eq!(single.shard_count(), 1);
     }
 
     #[test]
@@ -284,11 +429,13 @@ mod tests {
         for b in bufs {
             pool.release(b);
         }
-        // Per-class shelf cap = 2: third release declined.
+        // Per-class shelf cap = 2 (all releases from this thread land
+        // on its home shard): third release declined.
         assert_eq!(pool.stats().buffers_pooled, 2);
         assert_eq!(pool.stats().declined, 1);
 
-        // Total-byte cap sized for exactly one MIN_CLASS buffer.
+        // Total-byte cap sized for exactly one MIN_CLASS buffer; the
+        // cap is pool-wide (aggregated across shards).
         let tiny: BufferPool = BufferPool::new(8, MIN_CLASS * std::mem::size_of::<f32>());
         tiny.release(tiny.acquire(4));
         tiny.release(tiny.acquire(4));
@@ -335,5 +482,105 @@ mod tests {
         // The i32 global singleton constructs alongside the f32 one.
         let _ = BufferPool::global_i32();
         let _ = BufferPool::global();
+    }
+
+    // ----------------------------------------------- shard invariants
+
+    /// Stats and the byte ledger must aggregate across shards: K
+    /// threads (each homed on its own shard) release into the pool;
+    /// the pool-wide snapshot sees all of them, and `clear()` empties
+    /// every shard.
+    #[test]
+    fn stats_aggregate_across_shards_and_clear_empties_all() {
+        let pool: Arc<BufferPool> = Arc::new(BufferPool::with_shards(8, 1 << 24, 8));
+        const THREADS: usize = 8;
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    // Miss, then shelve on this thread's home shard.
+                    let buf = pool.acquire(256);
+                    pool.release(buf);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = pool.stats();
+        assert_eq!(s.misses + s.hits, THREADS as u64);
+        assert_eq!(s.recycled, THREADS as u64);
+        // Hits can only come from a shared shard: shelved count is
+        // releases minus re-acquisitions.
+        assert_eq!(s.buffers_pooled as u64, THREADS as u64 - s.hits);
+        assert_eq!(s.bytes_pooled, s.buffers_pooled * 256 * std::mem::size_of::<f32>());
+
+        // Unload-path invariant: clear() empties every shard and the
+        // aggregate accounting lands exactly on zero.
+        pool.clear();
+        let s = pool.stats();
+        assert_eq!(s.buffers_pooled, 0, "clear() missed a shard");
+        assert_eq!(s.bytes_pooled, 0);
+    }
+
+    /// A cold home shard falls through to the other shards (neighbor
+    /// first) before allocating fresh, so cross-thread release flows
+    /// still recycle.
+    #[test]
+    fn neighbor_fallthrough_reuses_other_shards_buffer() {
+        let pool: Arc<BufferPool> = Arc::new(BufferPool::with_shards(8, 1 << 24, 2));
+        // Fill BOTH shards from two fresh threads (tokens are assigned
+        // round-robin, so two new threads land on distinct shards of a
+        // 2-shard pool... in either order).
+        let ptrs: Vec<_> = (0..2)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let buf = pool.acquire(512);
+                    let p = buf.as_ptr() as usize;
+                    pool.release(buf);
+                    p
+                })
+                .join()
+                .unwrap()
+            })
+            .collect();
+        assert_eq!(pool.stats().buffers_pooled, 2);
+        // Two acquires from this thread must find both (home + the
+        // neighbor fallthrough), whatever this thread's home shard is.
+        let a = pool.acquire(512);
+        let b = pool.acquire(512);
+        assert_eq!(pool.stats().hits, 2, "fallthrough missed a warm shard");
+        assert!(ptrs.contains(&(a.as_ptr() as usize)));
+        assert!(ptrs.contains(&(b.as_ptr() as usize)));
+    }
+
+    #[test]
+    fn concurrent_acquire_release_is_consistent() {
+        // M threads hammering acquire/release: accounting must balance
+        // (the contended-path regression the sharding exists to serve).
+        let pool: Arc<BufferPool> = Arc::new(BufferPool::with_shards(16, 1 << 26, 8));
+        const THREADS: usize = 8;
+        const OPS: usize = 500;
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    for i in 0..OPS {
+                        let buf = pool.acquire(64 << (i % 3));
+                        std::hint::black_box(&buf);
+                        pool.release(buf);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = pool.stats();
+        assert_eq!(s.hits + s.misses, (THREADS * OPS) as u64);
+        assert_eq!(s.recycled as usize, s.buffers_pooled + s.hits as usize);
+        pool.clear();
+        assert_eq!(pool.stats().bytes_pooled, 0);
     }
 }

@@ -1,9 +1,23 @@
 #!/usr/bin/env sh
 # Tier-1 verification gate: build, tests, and (when rustfmt is
 # installed) formatting. Run via `make check` or directly.
+#
+#   --bench-smoke   additionally run every bench for one short
+#                   iteration (TENSORSERVE_BENCH_SMOKE=1): a compile
+#                   AND run guard, so benches cannot silently rot.
+#                   Smoke numbers are meaningless; only completion
+#                   matters.
 set -eu
 
 cd "$(dirname "$0")/.."
+
+BENCH_SMOKE=0
+for arg in "$@"; do
+    case "$arg" in
+        --bench-smoke) BENCH_SMOKE=1 ;;
+        *) echo "unknown flag: $arg" >&2; exit 2 ;;
+    esac
+done
 
 echo "==> cargo build --release"
 cargo build --release
@@ -17,9 +31,10 @@ echo "==> cargo test -q --test http_gateway"
 cargo test -q --test http_gateway
 
 # Cross-request batching on the live serving path: concurrent requests
-# must merge (executions < requests) and unloads must drain queued
-# work cleanly. Named explicitly so a batching regression is its own
-# failing step.
+# must merge (executions < requests), unloads must drain queued work
+# cleanly, and the lane-isolation guarantees (fast-model p99 bounded
+# while a slow lane saturates) must hold. Named explicitly so a
+# batching regression is its own failing step.
 echo "==> cargo test -q --test serving_concurrency"
 cargo test -q --test serving_concurrency
 
@@ -35,6 +50,17 @@ if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --workspace --all-targets -- -D warnings
 else
     echo "==> clippy unavailable in this toolchain; skipping lint"
+fi
+
+if [ "$BENCH_SMOKE" = "1" ]; then
+    # Every registered bench, one short run each. bench_e2e exits
+    # early (cleanly) when artifacts are missing.
+    for b in bench_batching bench_throughput bench_tail_latency bench_http \
+             bench_rcu bench_hedging bench_startup bench_transition \
+             bench_binpack bench_e2e; do
+        echo "==> bench smoke: $b"
+        TENSORSERVE_BENCH_SMOKE=1 cargo bench --bench "$b"
+    done
 fi
 
 echo "check OK"
