@@ -19,6 +19,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+use tensorserve::base::error::ErrorKind;
 use tensorserve::base::loader::{FnLoader, Loader, ResourceEstimate};
 use tensorserve::base::servable::{ServableBox, ServableId};
 use tensorserve::base::tensor::Tensor;
@@ -29,11 +30,12 @@ use tensorserve::batching::session::{
 use tensorserve::inference::null::{null_loader, NullServable};
 use tensorserve::lifecycle::basic_manager::{BasicManager, VersionRequest};
 use tensorserve::runtime::pjrt::OutTensor;
+use tensorserve::serving::{AdmissionConfig, AdmissionControl};
 use tensorserve::sim::workload::open_loop;
 use tensorserve::util::bench::{bench_duration, fmt_count, Table};
 use tensorserve::util::json::Json;
 use tensorserve::util::mem::WeightBlob;
-use tensorserve::util::metrics::{fmt_nanos, Histogram};
+use tensorserve::util::metrics::{fmt_nanos, Histogram, Registry};
 
 const BLOB_BYTES: usize = 64 << 20;
 const CHURN_PERIOD: Duration = Duration::from_millis(150);
@@ -199,6 +201,38 @@ fn main() {
         iso_sat as f64 / iso_unc.max(1) as f64
     );
 
+    // ---- T2c: degradation under overload, with and without deadlines
+    //
+    // Offered load at 2× capacity against a bounded in-flight cap.
+    // Without deadlines every admitted request waits out the whole
+    // queue; with per-request deadlines + EDF, work that can't make
+    // its budget is dropped before execution, so the latency of the
+    // answers actually delivered stays near the budget.
+    const OVERLOAD_DEADLINE: Duration = Duration::from_millis(5);
+    let no_ddl = run_overload(None);
+    let with_ddl = run_overload(Some(OVERLOAD_DEADLINE));
+    let mut t = Table::new(
+        "T2c: overload (16 clients, cap 8, 2ms device): served-latency under shedding",
+        &["mode", "offered", "shed", "expired", "served", "served p99", "served max"],
+    );
+    for (label, s) in [("no deadline", &no_ddl), ("5ms deadline", &with_ddl)] {
+        t.row(vec![
+            label.into(),
+            s.offered.to_string(),
+            s.shed.to_string(),
+            s.expired.to_string(),
+            s.served.to_string(),
+            fmt_nanos(s.p99_ns),
+            fmt_nanos(s.max_ns),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nshape check (served p99, no-deadline/deadline): {:.1}x — \
+         deadlines trade answered volume for bounded latency.",
+        no_ddl.p99_ns as f64 / with_ddl.p99_ns.max(1) as f64
+    );
+
     // ---- machine-readable trajectory: BENCH_tail_latency.json -------
     let (np50, _, _, _) = naive.latency.percentiles();
     let (op50, _, _, _) = optimized.latency.percentiles();
@@ -224,6 +258,26 @@ fn main() {
                 (
                     "saturated_over_uncontended",
                     Json::num(iso_sat as f64 / iso_unc.max(1) as f64),
+                ),
+            ]),
+        ),
+        (
+            "deadline_overload",
+            Json::obj(vec![
+                ("deadline_ms", Json::num(OVERLOAD_DEADLINE.as_millis() as f64)),
+                ("offered", Json::num(with_ddl.offered as f64)),
+                ("shed", Json::num(with_ddl.shed as f64)),
+                ("expired", Json::num(with_ddl.expired as f64)),
+                ("served", Json::num(with_ddl.served as f64)),
+                (
+                    "shed_rate",
+                    Json::num(with_ddl.shed as f64 / with_ddl.offered.max(1) as f64),
+                ),
+                ("admitted_p99_ns", Json::num(with_ddl.p99_ns as f64)),
+                ("no_deadline_p99_ns", Json::num(no_ddl.p99_ns as f64)),
+                (
+                    "p99_improvement",
+                    Json::num(no_ddl.p99_ns as f64 / with_ddl.p99_ns.max(1) as f64),
                 ),
             ]),
         ),
@@ -316,4 +370,93 @@ fn lane_isolation_p99() -> (u64, u64) {
         p.join().unwrap();
     }
     (uncontended, saturated)
+}
+
+// ------------------------- T2c: deadline-aware overload degradation
+
+struct OverloadStats {
+    offered: u64,
+    shed: u64,
+    expired: u64,
+    served: u64,
+    /// p99 (ns) of the requests that were actually answered.
+    p99_ns: u64,
+    max_ns: u64,
+}
+
+/// 16 closed-loop clients against a 2ms-per-batch device with 2
+/// workers and a global in-flight cap of 8 — offered load well past
+/// capacity. Requests either get shed at admission, expire in queue
+/// (when `deadline` is set), or complete; only completions count
+/// toward the latency histogram.
+fn run_overload(deadline: Option<Duration>) -> OverloadStats {
+    const THREADS: usize = 16;
+    let per_thread: usize = if tensorserve::util::bench::smoke() { 40 } else { 150 };
+    let sched = Arc::new(SharedBatchScheduler::new(SchedulerOptions {
+        num_batch_threads: 2,
+        name: "overload".into(),
+    }));
+    let session = Arc::new(lane_session(&sched, "m", Duration::from_millis(2), 0));
+    let metrics = Registry::new();
+    let admission = AdmissionControl::new(
+        AdmissionConfig {
+            max_inflight: 8,
+            max_inflight_per_model: 0,
+            retry_after_ms: 1000,
+        },
+        &metrics,
+    );
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let session = Arc::clone(&session);
+            let admission = Arc::clone(&admission);
+            std::thread::spawn(move || {
+                let mut latencies = Vec::with_capacity(per_thread);
+                let (mut shed, mut expired) = (0u64, 0u64);
+                for i in 0..per_thread {
+                    let _permit = match admission.admit("m") {
+                        Ok(p) => p,
+                        Err(_) => {
+                            shed += 1;
+                            continue;
+                        }
+                    };
+                    let t0 = Instant::now();
+                    let d = deadline.map(|d| t0 + d);
+                    match session.run_with_deadline(
+                        Tensor::matrix(vec![vec![i as f32]]).unwrap(),
+                        d,
+                    ) {
+                        Ok(_) => latencies.push(t0.elapsed().as_nanos() as u64),
+                        Err(e) if ErrorKind::of(&e) == ErrorKind::DeadlineExceeded => {
+                            expired += 1;
+                        }
+                        Err(e) => panic!("unexpected overload error: {e}"),
+                    }
+                }
+                (latencies, shed, expired)
+            })
+        })
+        .collect();
+
+    let hist = Histogram::new();
+    let (mut shed, mut expired, mut served) = (0u64, 0u64, 0u64);
+    for w in workers {
+        let (latencies, s, x) = w.join().unwrap();
+        shed += s;
+        expired += x;
+        served += latencies.len() as u64;
+        for ns in latencies {
+            hist.record_duration(Duration::from_nanos(ns));
+        }
+    }
+    OverloadStats {
+        offered: (THREADS * per_thread) as u64,
+        shed,
+        expired,
+        served,
+        p99_ns: hist.quantile(0.99),
+        max_ns: hist.max(),
+    }
 }

@@ -29,6 +29,14 @@ pub enum ErrorKind {
     /// unservable (version unloading mid-flight, queue shedding
     /// load). Clients may retry.
     FailedPrecondition,
+    /// The request's deadline expired before execution. Retrying with
+    /// the same deadline will likely expire again; retry with a larger
+    /// budget or shed the work.
+    DeadlineExceeded,
+    /// The server is shedding load (admission limits hit, drain in
+    /// progress). Transient by construction: clients should retry
+    /// after backing off.
+    Unavailable,
     /// Everything else, including errors that never got a kind.
     Internal,
 }
@@ -55,6 +63,8 @@ impl ErrorKind {
             ErrorKind::NotFound => 1,
             ErrorKind::InvalidArgument => 2,
             ErrorKind::FailedPrecondition => 3,
+            ErrorKind::DeadlineExceeded => 4,
+            ErrorKind::Unavailable => 5,
             ErrorKind::Internal => 0,
         }
     }
@@ -66,6 +76,8 @@ impl ErrorKind {
             1 => ErrorKind::NotFound,
             2 => ErrorKind::InvalidArgument,
             3 => ErrorKind::FailedPrecondition,
+            4 => ErrorKind::DeadlineExceeded,
+            5 => ErrorKind::Unavailable,
             _ => ErrorKind::Internal,
         }
     }
@@ -75,8 +87,20 @@ impl ErrorKind {
             ErrorKind::NotFound => "NOT_FOUND",
             ErrorKind::InvalidArgument => "INVALID_ARGUMENT",
             ErrorKind::FailedPrecondition => "FAILED_PRECONDITION",
+            ErrorKind::DeadlineExceeded => "DEADLINE_EXCEEDED",
+            ErrorKind::Unavailable => "UNAVAILABLE",
             ErrorKind::Internal => "INTERNAL",
         }
+    }
+
+    /// Whether a client may retry the identical request and reasonably
+    /// expect success: the condition is transient server state, not a
+    /// property of the request. `FailedPrecondition` covers the unload
+    /// drain ("version unloading — retry"), `Unavailable` covers load
+    /// shedding. `DeadlineExceeded` is deliberately NOT retryable: the
+    /// same budget will expire the same way.
+    pub fn is_retryable(self) -> bool {
+        matches!(self, ErrorKind::FailedPrecondition | ErrorKind::Unavailable)
     }
 }
 
@@ -139,12 +163,24 @@ mod tests {
             ErrorKind::NotFound,
             ErrorKind::InvalidArgument,
             ErrorKind::FailedPrecondition,
+            ErrorKind::DeadlineExceeded,
+            ErrorKind::Unavailable,
             ErrorKind::Internal,
         ] {
             assert_eq!(ErrorKind::from_code(kind.code()), kind);
         }
         // Unknown codes degrade, not fail.
         assert_eq!(ErrorKind::from_code(99), ErrorKind::Internal);
+    }
+
+    #[test]
+    fn retryable_kinds() {
+        assert!(ErrorKind::FailedPrecondition.is_retryable());
+        assert!(ErrorKind::Unavailable.is_retryable());
+        assert!(!ErrorKind::DeadlineExceeded.is_retryable());
+        assert!(!ErrorKind::NotFound.is_retryable());
+        assert!(!ErrorKind::InvalidArgument.is_retryable());
+        assert!(!ErrorKind::Internal.is_retryable());
     }
 
     #[test]

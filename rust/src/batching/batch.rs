@@ -2,11 +2,21 @@
 //! "the type of request being batched (be it tensors or some other
 //! data)" — §2.2.1.
 
+use std::time::Instant;
+
 /// A unit of batchable work. `size()` is in task-defined units (e.g.
 /// examples in a request); the scheduler packs batches so the summed
-/// size stays within `max_batch_size`.
+/// size stays within `max_batch_size`. `deadline()` is the wall-clock
+/// instant after which executing the task is wasted device time — the
+/// scheduler picks nearest-deadline batches first (EDF) and the
+/// processor drops expired tasks before the device call.
 pub trait BatchTask: Send + 'static {
     fn size(&self) -> usize;
+
+    /// Latest useful completion time; `None` = no deadline.
+    fn deadline(&self) -> Option<Instant> {
+        None
+    }
 }
 
 /// A merged group of tasks processed in one device invocation.
@@ -14,14 +24,23 @@ pub struct Batch<T: BatchTask> {
     tasks: Vec<T>,
     /// Nanos timestamp (scheduler clock) when the first task arrived.
     opened_at_nanos: u64,
+    /// Min over member deadlines, maintained on push (O(1) reads for
+    /// the scheduler's EDF pick). `None` = no member has a deadline.
+    earliest_deadline: Option<Instant>,
 }
 
 impl<T: BatchTask> Batch<T> {
     pub fn new(opened_at_nanos: u64) -> Self {
-        Batch { tasks: Vec::new(), opened_at_nanos }
+        Batch { tasks: Vec::new(), opened_at_nanos, earliest_deadline: None }
     }
 
     pub fn push(&mut self, task: T) {
+        if let Some(d) = task.deadline() {
+            self.earliest_deadline = Some(match self.earliest_deadline {
+                Some(prev) => prev.min(d),
+                None => d,
+            });
+        }
         self.tasks.push(task);
     }
 
@@ -40,6 +59,11 @@ impl<T: BatchTask> Batch<T> {
 
     pub fn opened_at_nanos(&self) -> u64 {
         self.opened_at_nanos
+    }
+
+    /// Nearest member deadline; `None` = unconstrained.
+    pub fn earliest_deadline(&self) -> Option<Instant> {
+        self.earliest_deadline
     }
 
     pub fn tasks(&self) -> &[T] {
@@ -62,11 +86,22 @@ impl<T: BatchTask> IntoIterator for Batch<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     struct Sized(usize);
     impl BatchTask for Sized {
         fn size(&self) -> usize {
             self.0
+        }
+    }
+
+    struct Timed(usize, Option<Instant>);
+    impl BatchTask for Timed {
+        fn size(&self) -> usize {
+            self.0
+        }
+        fn deadline(&self) -> Option<Instant> {
+            self.1
         }
     }
 
@@ -79,6 +114,8 @@ mod tests {
         assert_eq!(b.len(), 2);
         assert_eq!(b.size(), 8);
         assert_eq!(b.opened_at_nanos(), 42);
+        // Tasks without deadlines leave the batch unconstrained.
+        assert_eq!(b.earliest_deadline(), None);
     }
 
     #[test]
@@ -89,5 +126,22 @@ mod tests {
         }
         let sizes: Vec<usize> = b.into_tasks().iter().map(|t| t.0).collect();
         assert_eq!(sizes, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn earliest_deadline_tracks_min() {
+        let t0 = Instant::now();
+        let near = t0 + Duration::from_millis(10);
+        let far = t0 + Duration::from_millis(500);
+        let mut b = Batch::new(0);
+        b.push(Timed(1, None));
+        assert_eq!(b.earliest_deadline(), None);
+        b.push(Timed(1, Some(far)));
+        assert_eq!(b.earliest_deadline(), Some(far));
+        b.push(Timed(1, Some(near)));
+        assert_eq!(b.earliest_deadline(), Some(near));
+        // A later deadline never loosens the batch's constraint.
+        b.push(Timed(1, Some(far)));
+        assert_eq!(b.earliest_deadline(), Some(near));
     }
 }

@@ -116,6 +116,35 @@ impl<T> std::fmt::Display for EnqueueError<T> {
 
 type ProcessFn<T> = Arc<dyn Fn(Batch<T>) + Send + Sync>;
 
+/// Pop the closed batch with the nearest member deadline (EDF within
+/// the lane). Deadline-free batches rank after any deadline; among
+/// ties — and in the all-deadline-free case — the oldest (front) batch
+/// wins, so lanes without deadlines keep exact FIFO arrival order.
+fn pop_earliest_deadline<T: BatchTask>(
+    closed: &mut VecDeque<Batch<T>>,
+) -> Option<Batch<T>> {
+    let mut best = 0usize;
+    let mut best_deadline = closed.front()?.earliest_deadline();
+    for (i, b) in closed.iter().enumerate().skip(1) {
+        match (best_deadline, b.earliest_deadline()) {
+            (Some(bd), Some(d)) if d < bd => {
+                best = i;
+                best_deadline = Some(d);
+            }
+            (None, Some(d)) => {
+                best = i;
+                best_deadline = Some(d);
+            }
+            _ => {}
+        }
+    }
+    if best == 0 {
+        closed.pop_front()
+    } else {
+        closed.remove(best)
+    }
+}
+
 struct QueueInner<T: BatchTask> {
     open: Option<Batch<T>>,
     closed: VecDeque<Batch<T>>,
@@ -486,7 +515,7 @@ impl<T: BatchTask> SharedBatchScheduler<T> {
                 q.maybe_close_open(&mut inner, shared.now_nanos());
             }
             while taken.len() < weight {
-                match inner.closed.pop_front() {
+                match pop_earliest_deadline(&mut inner.closed) {
                     Some(b) => taken.push(b),
                     None => break,
                 }
@@ -625,7 +654,7 @@ impl<T: BatchTask> SharedBatchScheduler<T> {
                     let now = shared.now_nanos();
                     q.maybe_close_open(&mut inner, now);
                     q.flush_if_removed(&mut inner);
-                    if let Some(b) = inner.closed.pop_front() {
+                    if let Some(b) = pop_earliest_deadline(&mut inner.closed) {
                         break b;
                     }
                     if q.removed.load(Ordering::SeqCst) {
@@ -1132,6 +1161,108 @@ mod tests {
             order.iter().position(|&l| l == "b").unwrap() <= 2,
             "b waited behind a's whole backlog: {order:?}"
         );
+    }
+
+    #[test]
+    fn edf_pick_prefers_nearest_deadline() {
+        // Direct unit test of the lane-local pick: nearest deadline
+        // first, deadline-free last, FIFO among the unconstrained.
+        struct Timed(usize, Option<Instant>);
+        impl BatchTask for Timed {
+            fn size(&self) -> usize {
+                1
+            }
+            fn deadline(&self) -> Option<Instant> {
+                self.1
+            }
+        }
+        let t0 = Instant::now();
+        let mk = |tag: usize, d: Option<Duration>| {
+            let mut b = Batch::new(0);
+            b.push(Timed(tag, d.map(|d| t0 + d)));
+            b
+        };
+        let mut closed: VecDeque<Batch<Timed>> = VecDeque::new();
+        closed.push_back(mk(0, None));
+        closed.push_back(mk(1, Some(Duration::from_millis(500))));
+        closed.push_back(mk(2, Some(Duration::from_millis(10))));
+        closed.push_back(mk(3, None));
+        let order: Vec<usize> = std::iter::from_fn(|| {
+            pop_earliest_deadline(&mut closed).map(|b| b.tasks()[0].0)
+        })
+        .collect();
+        assert_eq!(order, vec![2, 1, 0, 3]);
+        // All-FIFO lanes are untouched by the EDF path.
+        let mut closed: VecDeque<Batch<Timed>> = VecDeque::new();
+        for tag in 0..4 {
+            closed.push_back(mk(tag, None));
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| {
+            pop_earliest_deadline(&mut closed).map(|b| b.tasks()[0].0)
+        })
+        .collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn urgent_batch_jumps_lane_backlog() {
+        // One parked worker, one lane pre-loaded with deadline-free
+        // batches plus one urgent batch: the urgent one must be
+        // serviced first even though it arrived last.
+        struct Timed(usize, Option<Instant>);
+        impl BatchTask for Timed {
+            fn size(&self) -> usize {
+                1
+            }
+            fn deadline(&self) -> Option<Instant> {
+                self.1
+            }
+        }
+        let sched = SharedBatchScheduler::new(SchedulerOptions {
+            num_batch_threads: 1,
+            ..Default::default()
+        });
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate_rx = Mutex::new(gate_rx);
+        let gate = sched.add_queue(
+            "gate",
+            QueueOptions {
+                max_batch_size: 1,
+                batch_timeout: Duration::ZERO,
+                max_enqueued_batches: 4,
+                ..Default::default()
+            },
+            move |_b: Batch<Timed>| {
+                let _ = gate_rx.lock().unwrap().recv();
+            },
+        );
+        gate.enqueue(Timed(0, None)).unwrap();
+        std::thread::sleep(Duration::from_millis(30)); // worker parked
+
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let o2 = Arc::clone(&order);
+        let q = sched.add_queue(
+            "q",
+            QueueOptions {
+                max_batch_size: 1,
+                batch_timeout: Duration::ZERO,
+                max_enqueued_batches: 64,
+                ..Default::default()
+            },
+            move |b: Batch<Timed>| {
+                o2.lock().unwrap().push(b.tasks()[0].0);
+            },
+        );
+        for tag in 1..4 {
+            q.enqueue(Timed(tag, None)).unwrap();
+        }
+        q.enqueue(Timed(9, Some(Instant::now() + Duration::from_millis(1))))
+            .unwrap();
+        let _ = gate_tx.send(()); // release the worker
+        sched.quiesce();
+        wait_until(|| order.lock().unwrap().len() == 4);
+        let order = order.lock().unwrap();
+        assert_eq!(order[0], 9, "urgent batch did not jump the backlog: {order:?}");
     }
 
     #[test]

@@ -66,11 +66,18 @@ pub struct PendingRun {
     reply: mpsc::Sender<Result<Vec<OutTensor>>>,
     /// When the task entered the queue (queue-delay instrumentation).
     enqueued_at: Instant,
+    /// Absolute deadline; expired tasks are answered
+    /// `DEADLINE_EXCEEDED` and dropped *before* the device call.
+    deadline: Option<Instant>,
 }
 
 impl BatchTask for PendingRun {
     fn size(&self) -> usize {
         self.input.batch()
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline
     }
 }
 
@@ -169,11 +176,27 @@ impl BatchingSession {
         rows_hist: Option<&Histogram>,
         batch: Batch<PendingRun>,
     ) {
-        let tasks = batch.into_tasks();
+        let all = batch.into_tasks();
         if let Some(h) = delay_hist {
-            for t in &tasks {
+            for t in &all {
                 h.record_duration(t.enqueued_at.elapsed());
             }
+        }
+        // Deadline check at the last possible moment before device
+        // work: tasks that expired while queued are answered
+        // DEADLINE_EXCEEDED and never executed — the whole point of a
+        // deadline is not to burn a device slot on an answer nobody is
+        // waiting for. Their input storage recycles like any other.
+        let now = Instant::now();
+        let (expired, tasks): (Vec<PendingRun>, Vec<PendingRun>) =
+            all.into_iter().partition(|t| t.deadline.is_some_and(|d| now >= d));
+        for t in expired {
+            t.input.recycle_into(pool);
+            let _ = t.reply.send(Err(ErrorKind::DeadlineExceeded
+                .err("deadline expired while queued; dropped before execution")));
+        }
+        if tasks.is_empty() {
+            return;
         }
         let (inputs, replies): (Vec<Tensor>, Vec<mpsc::Sender<Result<Vec<OutTensor>>>>) =
             tasks.into_iter().map(|t| (t.input, t.reply)).unzip();
@@ -265,21 +288,37 @@ impl BatchingSession {
     /// `max_batch_size` are transparently split into zero-copy row
     /// chunks that batch independently.
     pub fn run(&self, input: Tensor) -> Result<Vec<OutTensor>> {
+        self.run_with_deadline(input, None)
+    }
+
+    /// [`BatchingSession::run`] with an absolute deadline: refused
+    /// immediately if already expired, and dropped (never executed) if
+    /// it expires while waiting in the queue. The deadline also makes
+    /// this task's batch eligible for the scheduler's EDF pick.
+    pub fn run_with_deadline(
+        &self,
+        input: Tensor,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<OutTensor>> {
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(ErrorKind::DeadlineExceeded
+                .err("deadline expired before enqueue"));
+        }
         if input.rank() > 0 && input.batch() > self.max_batch_size {
-            return self.run_split(input);
+            return self.run_split(input, deadline);
         }
         let (tx, rx) = mpsc::channel();
-        self.enqueue(PendingRun { input, reply: tx, enqueued_at: Instant::now() })?;
+        self.enqueue(PendingRun { input, reply: tx, enqueued_at: Instant::now(), deadline })?;
         rx.recv()
             .map_err(|_| ErrorKind::Internal.err("session dropped reply"))?
     }
 
     fn enqueue(&self, task: PendingRun) -> Result<()> {
         self.queue.enqueue(task).map_err(|e| match e {
-            // Load shedding and teardown races are retryable states,
-            // not caller mistakes: FailedPrecondition on the wire.
+            // Load shedding is transient by construction: Unavailable
+            // on the wire, so well-behaved clients back off and retry.
             EnqueueError::QueueFull(_) => {
-                ErrorKind::FailedPrecondition.err("overloaded: queue full")
+                ErrorKind::Unavailable.err("overloaded: queue full")
             }
             EnqueueError::TaskTooLarge(t) => ErrorKind::InvalidArgument.err(format!(
                 "request batch {} exceeds max_batch_size {}",
@@ -309,14 +348,19 @@ impl BatchingSession {
     /// buffers recycle through the pool as usual.
     ///
     /// [`SplittableTask`]: super::splitter::SplittableTask
-    fn run_split(&self, input: Tensor) -> Result<Vec<OutTensor>> {
+    fn run_split(&self, input: Tensor, deadline: Option<Instant>) -> Result<Vec<OutTensor>> {
         let parts = split_if_needed(input, self.max_batch_size);
         // Dispatch phase: all chunks in flight before any wait.
         let receivers: Vec<mpsc::Receiver<Result<Vec<OutTensor>>>> = parts
             .into_iter()
             .map(|part| {
                 let (tx, rx) = mpsc::channel();
-                self.enqueue(PendingRun { input: part, reply: tx, enqueued_at: Instant::now() })?;
+                self.enqueue(PendingRun {
+                    input: part,
+                    reply: tx,
+                    enqueued_at: Instant::now(),
+                    deadline,
+                })?;
                 Ok(rx)
             })
             .collect::<Result<_>>()?;
@@ -787,6 +831,147 @@ mod tests {
         // or timing separated them (both succeed); a mix of one success
         // and one failure is impossible.
         assert_eq!(ra.is_ok(), rb.is_ok(), "partial batch failure");
+    }
+
+    #[test]
+    fn expired_deadline_refused_before_enqueue() {
+        let (_sched, session, seen) = setup(SessionOptions {
+            queue: QueueOptions {
+                max_batch_size: 4,
+                batch_timeout: Duration::from_millis(1),
+                max_enqueued_batches: 8,
+                ..Default::default()
+            },
+            allowed_batch_sizes: vec![4],
+            ..Default::default()
+        });
+        let past = Instant::now() - Duration::from_millis(5);
+        let e = session
+            .run_with_deadline(Tensor::matrix(vec![vec![1.0]]).unwrap(), Some(past))
+            .unwrap_err();
+        assert_eq!(ErrorKind::of(&e), ErrorKind::DeadlineExceeded);
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(seen.lock().unwrap().is_empty(), "expired request reached the device");
+        // A live deadline still executes normally.
+        let out = session
+            .run_with_deadline(
+                Tensor::matrix(vec![vec![3.0]]).unwrap(),
+                Some(Instant::now() + Duration::from_secs(10)),
+            )
+            .unwrap();
+        assert_eq!(out[0].as_f32().unwrap().data(), &[6.0]);
+    }
+
+    /// A task whose deadline lapses *while queued* behind a slow batch
+    /// is answered DEADLINE_EXCEEDED and its batch never executes —
+    /// the drop-before-execution invariant, end to end through the
+    /// scheduler.
+    #[test]
+    fn deadline_expiring_in_queue_drops_before_execution() {
+        struct SlowCounting {
+            executed: Arc<AtomicUsize>,
+        }
+        impl BatchRunner for SlowCounting {
+            fn run_batch(&self, input: Tensor) -> Result<Vec<OutTensor>> {
+                self.executed.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(60));
+                Ok(vec![OutTensor::F32(Tensor::new(
+                    input.shape().to_vec(),
+                    input.data().to_vec(),
+                )?)])
+            }
+        }
+        let sched = SharedBatchScheduler::new(SchedulerOptions {
+            num_batch_threads: 1, // one worker: the slow batch blocks the lane
+            ..Default::default()
+        });
+        let executed = Arc::new(AtomicUsize::new(0));
+        let session = Arc::new(BatchingSession::new(
+            &sched,
+            "s",
+            SessionOptions {
+                queue: QueueOptions {
+                    max_batch_size: 1, // every task is its own batch
+                    batch_timeout: Duration::from_millis(1),
+                    max_enqueued_batches: 8,
+                    ..Default::default()
+                },
+                allowed_batch_sizes: vec![1],
+                ..Default::default()
+            },
+            Arc::new(SlowCounting { executed: Arc::clone(&executed) }),
+        ));
+        // Occupy the only worker with a deadline-free slow batch.
+        let blocker = {
+            let s = Arc::clone(&session);
+            std::thread::spawn(move || s.run(Tensor::matrix(vec![vec![1.0]]).unwrap()))
+        };
+        while executed.load(Ordering::SeqCst) == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // This task's 10ms budget lapses long before the 60ms blocker
+        // frees the worker: it must be dropped, not executed.
+        let e = session
+            .run_with_deadline(
+                Tensor::matrix(vec![vec![2.0]]).unwrap(),
+                Some(Instant::now() + Duration::from_millis(10)),
+            )
+            .unwrap_err();
+        assert_eq!(ErrorKind::of(&e), ErrorKind::DeadlineExceeded);
+        assert!(e.to_string().contains("dropped before execution"), "{e}");
+        blocker.join().unwrap().unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(
+            executed.load(Ordering::SeqCst),
+            1,
+            "the expired task's batch reached the device"
+        );
+    }
+
+    #[test]
+    fn queue_full_sheds_with_unavailable() {
+        let sched = SharedBatchScheduler::new(SchedulerOptions {
+            num_batch_threads: 1,
+            ..Default::default()
+        });
+        let session = Arc::new(BatchingSession::new(
+            &sched,
+            "s",
+            SessionOptions {
+                queue: QueueOptions {
+                    max_batch_size: 1,
+                    batch_timeout: Duration::from_millis(1),
+                    max_enqueued_batches: 1,
+                    ..Default::default()
+                },
+                allowed_batch_sizes: vec![1],
+                ..Default::default()
+            },
+            Arc::new(|input: Tensor| -> Result<Vec<OutTensor>> {
+                std::thread::sleep(Duration::from_millis(40));
+                Ok(vec![OutTensor::F32(input)])
+            }),
+        ));
+        // Saturate: each enqueue closes its own 1-row batch and the
+        // 40ms device drains far slower than this loop fills, so the
+        // 1-batch cap must overflow. Dropped receivers are harmless.
+        let mut shed = None;
+        for i in 0..16 {
+            let (tx, _rx) = mpsc::channel();
+            let task = PendingRun {
+                input: Tensor::matrix(vec![vec![i as f32]]).unwrap(),
+                reply: tx,
+                enqueued_at: Instant::now(),
+                deadline: None,
+            };
+            if let Err(e) = session.enqueue(task) {
+                shed = Some(e);
+                break;
+            }
+        }
+        let e = shed.expect("queue never filled");
+        assert_eq!(ErrorKind::of(&e), ErrorKind::Unavailable);
+        assert!(e.to_string().contains("overloaded"), "{e}");
     }
 
     /// A slow device + several workers: a split request's chunks must

@@ -16,10 +16,15 @@
 //! Errors use one envelope, `{"error": "..."}`. Status codes map
 //! structurally from the core's typed [`ErrorKind`]: lookup failures
 //! (unknown model/version/label) are 404, validation failures (shape,
-//! signature, conflicting spec) are 400, and retryable lifecycle races
-//! (version unloading mid-request, load shedding) are 503. Errors
-//! without a kind are server faults (500), except lookup-shaped
+//! signature, conflicting spec) are 400, retryable refusals (version
+//! unloading mid-request, load shedding, drain) are 503 with a
+//! `Retry-After` hint, and expired per-request deadlines are 504.
+//! Errors without a kind are server faults (500), except lookup-shaped
 //! messages, which the legacy substring table still rescues to 404.
+//!
+//! Data-plane POSTs honor an `X-Request-Deadline-Ms` header: the whole
+//! request (queueing included) must finish within that many
+//! milliseconds of arrival or it is dropped before execution.
 
 use super::codec;
 use super::expose;
@@ -80,7 +85,13 @@ fn models_route(core: &ServerCore, req: &HttpRequest) -> HttpResponse {
         Err((status, message)) => return HttpResponse::error(status, &message),
     };
     match (req.method.as_str(), route.verb) {
-        ("POST", Some(verb)) => data_plane(core, &req.body, route.spec, verb),
+        ("POST", Some(verb)) => {
+            let deadline_ms = match deadline_of(req) {
+                Ok(d) => d,
+                Err(resp) => return resp,
+            };
+            data_plane(core, &req.body, route.spec, verb, deadline_ms)
+        }
         ("GET", None) => metadata(core, route.spec),
         ("DELETE", None) if route.spec.label.is_some() => delete_label(core, route.spec),
         ("POST", None) => HttpResponse::error(
@@ -165,6 +176,8 @@ fn error_status(kind: ErrorKind, message: &str) -> u16 {
         ErrorKind::NotFound => 404,
         ErrorKind::InvalidArgument => 400,
         ErrorKind::FailedPrecondition => 503,
+        ErrorKind::Unavailable => 503,
+        ErrorKind::DeadlineExceeded => 504,
         ErrorKind::Internal => {
             const NOT_FOUND: [&str; 4] =
                 ["not found", "no ready versions", "not ready", "no version"];
@@ -177,11 +190,44 @@ fn error_status(kind: ErrorKind, message: &str) -> u16 {
     }
 }
 
-fn core_error(kind: ErrorKind, message: &str) -> HttpResponse {
-    HttpResponse::error(error_status(kind, message), message)
+fn core_error(core: &ServerCore, kind: ErrorKind, message: &str) -> HttpResponse {
+    let status = error_status(kind, message);
+    let resp = HttpResponse::error(status, message);
+    if status == 503 {
+        // Retryable refusal: tell well-behaved clients when to come
+        // back instead of letting them hammer an overloaded server.
+        resp.with_header("Retry-After", core.admission.retry_after_secs().to_string())
+    } else {
+        resp
+    }
 }
 
-fn data_plane(core: &ServerCore, body: &[u8], spec: ModelSpec, verb: Verb) -> HttpResponse {
+/// Per-request deadline from the `X-Request-Deadline-Ms` header.
+fn deadline_of(req: &HttpRequest) -> Result<Option<u64>, HttpResponse> {
+    match req.header("x-request-deadline-ms") {
+        None => Ok(None),
+        Some(v) => v.trim().parse::<u64>().map(Some).map_err(|_| {
+            HttpResponse::error(400, &format!("bad X-Request-Deadline-Ms value {v:?}"))
+        }),
+    }
+}
+
+/// Wrap a core request in the deadline envelope when the header asked
+/// for one (the core unwraps it into `RunOptions`).
+fn with_deadline(req: Request, deadline_ms: Option<u64>) -> Request {
+    match deadline_ms {
+        Some(ms) => req.with_deadline_ms(ms),
+        None => req,
+    }
+}
+
+fn data_plane(
+    core: &ServerCore,
+    body: &[u8],
+    spec: ModelSpec,
+    verb: Verb,
+    deadline_ms: Option<u64>,
+) -> HttpResponse {
     match verb {
         Verb::Predict => {
             let parsed = match codec::parse_predict_body(body) {
@@ -189,13 +235,16 @@ fn data_plane(core: &ServerCore, body: &[u8], spec: ModelSpec, verb: Verb) -> Ht
                 Err(e) => return HttpResponse::error(400, &e.to_string()),
             };
             let row_format = parsed.row_format;
-            let resp = core.handle(Request::Predict {
-                spec,
-                signature: parsed.signature,
-                inputs: parsed.inputs,
-            });
+            let resp = core.handle(with_deadline(
+                Request::Predict {
+                    spec,
+                    signature: parsed.signature,
+                    inputs: parsed.inputs,
+                },
+                deadline_ms,
+            ));
             if let Response::Error { kind, message } = &resp {
-                return core_error(*kind, message);
+                return core_error(core, *kind, message);
             }
             if !matches!(resp, Response::Predict { .. }) {
                 return HttpResponse::error(500, &format!("unexpected response {resp:?}"));
@@ -214,16 +263,19 @@ fn data_plane(core: &ServerCore, body: &[u8], spec: ModelSpec, verb: Verb) -> Ht
                 Ok(p) => p,
                 Err(e) => return HttpResponse::error(400, &e.to_string()),
             };
-            match core.handle(Request::Classify {
-                spec,
-                signature: parsed.signature,
-                examples: parsed.examples,
-            }) {
+            match core.handle(with_deadline(
+                Request::Classify {
+                    spec,
+                    signature: parsed.signature,
+                    examples: parsed.examples,
+                },
+                deadline_ms,
+            )) {
                 Response::Classify { model_version, classes, log_probs } => HttpResponse::json(
                     200,
                     &codec::classify_response_json(model_version, &classes, &log_probs),
                 ),
-                Response::Error { kind, message } => core_error(kind, &message),
+                Response::Error { kind, message } => core_error(core, kind, &message),
                 other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
             }
         }
@@ -232,16 +284,19 @@ fn data_plane(core: &ServerCore, body: &[u8], spec: ModelSpec, verb: Verb) -> Ht
                 Ok(p) => p,
                 Err(e) => return HttpResponse::error(400, &e.to_string()),
             };
-            match core.handle(Request::Regress {
-                spec,
-                signature: parsed.signature,
-                examples: parsed.examples,
-            }) {
+            match core.handle(with_deadline(
+                Request::Regress {
+                    spec,
+                    signature: parsed.signature,
+                    examples: parsed.examples,
+                },
+                deadline_ms,
+            )) {
                 Response::Regress { model_version, values } => HttpResponse::json(
                     200,
                     &codec::regress_response_json(model_version, &values),
                 ),
-                Response::Error { kind, message } => core_error(kind, &message),
+                Response::Error { kind, message } => core_error(core, kind, &message),
                 other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
             }
         }
@@ -253,7 +308,7 @@ fn metadata(core: &ServerCore, spec: ModelSpec) -> HttpResponse {
         Response::ModelMetadata { model, versions } => {
             HttpResponse::json(200, &codec::metadata_json(&model, &versions))
         }
-        Response::Error { kind, message } => core_error(kind, &message),
+        Response::Error { kind, message } => core_error(core, kind, &message),
         other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
     }
 }
@@ -262,7 +317,7 @@ fn delete_label(core: &ServerCore, spec: ModelSpec) -> HttpResponse {
     let label = spec.label.unwrap_or_default();
     match core.handle(Request::DeleteVersionLabel { model: spec.name, label }) {
         Response::Ack => HttpResponse::json(200, &Json::obj(vec![("ok", Json::Bool(true))])),
-        Response::Error { kind, message } => core_error(kind, &message),
+        Response::Error { kind, message } => core_error(core, kind, &message),
         other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
     }
 }
@@ -315,8 +370,30 @@ mod tests {
         assert_eq!(error_status(ErrorKind::NotFound, "whatever"), 404);
         assert_eq!(error_status(ErrorKind::InvalidArgument, "whatever"), 400);
         assert_eq!(error_status(ErrorKind::FailedPrecondition, "whatever"), 503);
+        // Graceful-degradation kinds: shed/drain → 503 (retry),
+        // expired deadline → 504 (do NOT retry — the budget is gone).
+        assert_eq!(error_status(ErrorKind::Unavailable, "overloaded"), 503);
+        assert_eq!(error_status(ErrorKind::DeadlineExceeded, "too late"), 504);
         // A reworded message no longer breaks the mapping.
         assert_eq!(error_status(ErrorKind::NotFound, "nothing here"), 404);
+    }
+
+    #[test]
+    fn deadline_header_parses_and_rejects_garbage() {
+        let mk = |value: Option<&str>| HttpRequest {
+            method: "POST".into(),
+            path: "/v1/models/m:predict".into(),
+            query: String::new(),
+            headers: value
+                .map(|v| vec![("x-request-deadline-ms".to_string(), v.to_string())])
+                .unwrap_or_default(),
+            body: Vec::new(),
+        };
+        assert_eq!(deadline_of(&mk(None)).unwrap(), None);
+        assert_eq!(deadline_of(&mk(Some("250"))).unwrap(), Some(250));
+        assert_eq!(deadline_of(&mk(Some(" 9 "))).unwrap(), Some(9));
+        let resp = deadline_of(&mk(Some("soon"))).unwrap_err();
+        assert_eq!(resp.status, 400);
     }
 
     #[test]

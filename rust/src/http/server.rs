@@ -69,6 +69,10 @@ impl HttpRequest {
 pub struct HttpResponse {
     pub status: u16,
     pub content_type: &'static str,
+    /// Extra response headers (e.g. `Retry-After` on a 503); the
+    /// framing headers are added by the server and must not appear
+    /// here.
+    pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
 }
 
@@ -77,6 +81,7 @@ impl HttpResponse {
         HttpResponse {
             status,
             content_type: "application/json",
+            headers: Vec::new(),
             body: body.to_string().into_bytes(),
         }
     }
@@ -85,6 +90,7 @@ impl HttpResponse {
         HttpResponse {
             status,
             content_type: "text/plain; charset=utf-8",
+            headers: Vec::new(),
             body: body.as_bytes().to_vec(),
         }
     }
@@ -92,6 +98,12 @@ impl HttpResponse {
     /// The gateway's uniform error envelope: `{"error": "..."}`.
     pub fn error(status: u16, message: &str) -> HttpResponse {
         HttpResponse::json(status, &Json::obj(vec![("error", Json::str(message))]))
+    }
+
+    /// Builder-style extra header.
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> HttpResponse {
+        self.headers.push((name.to_string(), value.into()));
+        self
     }
 }
 
@@ -107,6 +119,8 @@ fn reason(status: u16) -> &'static str {
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "",
     }
 }
@@ -480,13 +494,17 @@ fn write_response(
     // infallible).
     let _ = write!(
         buf,
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         resp.status,
         reason(resp.status),
         resp.content_type,
         resp.body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
+    for (name, value) in &resp.headers {
+        let _ = write!(buf, "{name}: {value}\r\n");
+    }
+    buf.extend_from_slice(b"\r\n");
     buf.extend_from_slice(&resp.body);
     let stream = reader.get_mut();
     stream.write_all(buf)?;
@@ -678,6 +696,25 @@ mod tests {
         }
         r.read_to_end(&mut buf).ok();
         assert!(String::from_utf8_lossy(&buf).contains("POST /c 5"));
+        server.stop();
+    }
+
+    #[test]
+    fn extra_headers_and_degradation_reasons_emitted() {
+        let server = HttpServer::start(
+            "127.0.0.1:0",
+            Arc::new(|_req: &HttpRequest| {
+                HttpResponse::error(503, "overloaded").with_header("Retry-After", "2")
+            }),
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        let mut text = String::new();
+        BufReader::new(s).read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable"), "{text}");
+        assert!(text.contains("Retry-After: 2\r\n"), "{text}");
+        assert_eq!(reason(504), "Gateway Timeout");
         server.stop();
     }
 

@@ -6,7 +6,7 @@ use super::predict::{run_example_signature, HandleSource};
 use super::ModelSpec;
 use crate::base::error::ErrorKind;
 use crate::runtime::pjrt::OutTensor;
-use crate::serving::{DirectRunner, Runner};
+use crate::serving::{DirectRunner, RunOptions, Runner};
 use anyhow::{bail, Result};
 
 /// Classify request: a batch of canonical examples against one
@@ -113,12 +113,24 @@ pub fn classify_with(
     runner: &dyn Runner,
     req: &ClassifyRequest,
 ) -> Result<ClassifyResponse> {
+    classify_with_opts(handles, runner, req, &RunOptions::default())
+}
+
+/// [`classify_with`] plus per-request [`RunOptions`] (deadline
+/// propagation).
+pub fn classify_with_opts(
+    handles: &dyn HandleSource,
+    runner: &dyn Runner,
+    req: &ClassifyRequest,
+    opts: &RunOptions,
+) -> Result<ClassifyResponse> {
     if req.examples.is_empty() {
         return Err(ErrorKind::InvalidArgument.err("classify: empty example list"));
     }
     let (model_version, results) = run_example_signature(
         handles,
         runner,
+        opts,
         &req.spec,
         &req.signature,
         "classify",

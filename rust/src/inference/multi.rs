@@ -15,7 +15,7 @@ use super::regress::regression_values;
 use super::ModelSpec;
 use crate::bail_kind;
 use crate::base::error::ErrorKind;
-use crate::serving::{DirectRunner, Runner};
+use crate::serving::{DirectRunner, RunOptions, Runner};
 use anyhow::Result;
 
 /// Which typed API a task invokes.
@@ -83,6 +83,17 @@ pub fn multi_inference_with(
     runner: &dyn Runner,
     req: &MultiInferenceRequest,
 ) -> Result<MultiInferenceResponse> {
+    multi_inference_with_opts(handles, runner, req, &RunOptions::default())
+}
+
+/// [`multi_inference_with`] plus per-request [`RunOptions`] (deadline
+/// propagation).
+pub fn multi_inference_with_opts(
+    handles: &dyn HandleSource,
+    runner: &dyn Runner,
+    req: &MultiInferenceRequest,
+    opts: &RunOptions,
+) -> Result<MultiInferenceResponse> {
     if req.tasks.is_empty() {
         return Err(ErrorKind::InvalidArgument.err("multi_inference: empty task list"));
     }
@@ -126,7 +137,7 @@ pub fn multi_inference_with(
     // Decode the example batch ONCE, run the servable ONCE. The
     // feature tensor recycles whether or not the run succeeded.
     let input = examples_to_tensor(&req.examples, &input_info.name, spec.input_dim)?;
-    let run = runner.run(&handle, &input);
+    let run = runner.run_opts(&handle, &input, opts);
     input.recycle_into(&crate::util::pool::BufferPool::global());
     let outputs = run?;
 

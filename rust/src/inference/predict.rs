@@ -26,7 +26,7 @@ use crate::lifecycle::manager::AspiredVersionsManager;
 use crate::runtime::artifacts::{ArtifactSpec, SignatureDef, TensorInfo};
 use crate::runtime::hlo_servable::HloServable;
 use crate::runtime::pjrt::OutTensor;
-use crate::serving::{DirectRunner, Runner};
+use crate::serving::{DirectRunner, RunOptions, Runner};
 use anyhow::{bail, Result};
 
 /// Anything that can resolve HLO servable handles from a [`ModelSpec`]
@@ -292,6 +292,7 @@ pub(crate) fn recycle_out_tensors(outputs: Vec<OutTensor>) {
 pub(crate) fn run_example_signature<T>(
     handles: &dyn HandleSource,
     runner: &dyn Runner,
+    opts: &RunOptions,
     spec: &ModelSpec,
     signature: &str,
     method: &str,
@@ -310,7 +311,7 @@ pub(crate) fn run_example_signature<T>(
     }
     let input_info = sole_input(&spec.name, sig_name, sig)?;
     let input = examples_to_tensor(examples, &input_info.name, handle.spec.input_dim)?;
-    let run = runner.run(&handle, &input);
+    let run = runner.run_opts(&handle, &input, opts);
     // The feature tensor came from the global pool; recycle it whether
     // or not the run succeeded (error paths must not leak pool misses).
     input.recycle_into(&crate::util::pool::BufferPool::global());
@@ -333,10 +334,22 @@ pub fn predict_with(
     runner: &dyn Runner,
     req: &PredictRequest,
 ) -> Result<PredictResponse> {
+    predict_with_opts(handles, runner, req, &RunOptions::default())
+}
+
+/// [`predict_with`] plus per-request [`RunOptions`] (the deadline
+/// propagation seam: an expired deadline is refused before the device
+/// call, wherever the request is when it lapses).
+pub fn predict_with_opts(
+    handles: &dyn HandleSource,
+    runner: &dyn Runner,
+    req: &PredictRequest,
+    opts: &RunOptions,
+) -> Result<PredictResponse> {
     let handle = handles.hlo_handle(&req.spec)?;
     let (sig_name, sig) = handle.spec.signature_def(&req.signature)?;
     let input = bind_input(&req.spec.name, sig_name, sig, &req.inputs)?;
-    let raw = runner.run(&handle, input)?;
+    let raw = runner.run_opts(&handle, input, opts)?;
     let named = name_outputs(&handle.spec, sig_name, sig, &raw)?;
     // Recycle outputs the signature did not select (sole owners);
     // selected ones are still referenced by `named` and the pool

@@ -6,7 +6,7 @@ use super::predict::{run_example_signature, HandleSource};
 use super::ModelSpec;
 use crate::base::error::ErrorKind;
 use crate::runtime::pjrt::OutTensor;
-use crate::serving::{DirectRunner, Runner};
+use crate::serving::{DirectRunner, RunOptions, Runner};
 use anyhow::{bail, Result};
 
 #[derive(Debug, Clone)]
@@ -70,12 +70,24 @@ pub fn regress_with(
     runner: &dyn Runner,
     req: &RegressRequest,
 ) -> Result<RegressResponse> {
+    regress_with_opts(handles, runner, req, &RunOptions::default())
+}
+
+/// [`regress_with`] plus per-request [`RunOptions`] (deadline
+/// propagation).
+pub fn regress_with_opts(
+    handles: &dyn HandleSource,
+    runner: &dyn Runner,
+    req: &RegressRequest,
+    opts: &RunOptions,
+) -> Result<RegressResponse> {
     if req.examples.is_empty() {
         return Err(ErrorKind::InvalidArgument.err("regress: empty example list"));
     }
     let (model_version, values) = run_example_signature(
         handles,
         runner,
+        opts,
         &req.spec,
         &req.signature,
         "regress",

@@ -386,6 +386,22 @@ impl BasicManager {
         names
     }
 
+    /// Forget a version whose load ended in `Error`, so a retrying
+    /// caller (the AVM's load-retry loop) can `manage_and_load` it
+    /// again. Only errored harnesses are removable this way — any
+    /// other state returns `false` and the harness stays managed, so
+    /// this can never be used to wipe a live version's bookkeeping.
+    pub fn forget_errored(&self, id: &ServableId) -> bool {
+        let mut hs = self.harnesses.lock().unwrap();
+        match hs.get(id) {
+            Some(h) if matches!(h.state(), State::Error(_)) => {
+                hs.remove(id);
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Wait for the load pool to drain (tests/benches).
     pub fn quiesce(&self) {
         self.load_pool.wait_idle();
@@ -511,6 +527,33 @@ mod tests {
         assert_eq!(m.ram_used_bytes(), 0);
         let (id3, l3) = big(900, 3);
         m.load_and_wait(id3, l3, Duration::from_secs(5)).unwrap();
+    }
+
+    #[test]
+    fn forget_errored_allows_reload() {
+        let m = mgr();
+        let id = ServableId::new("flaky", 1);
+        m.load_and_wait(
+            id.clone(),
+            Arc::new(FnLoader::failing("transient outage")),
+            Duration::from_secs(5),
+        )
+        .unwrap_err();
+        // Errored versions stay managed ("already managed") until
+        // explicitly forgotten…
+        assert!(m
+            .manage_and_load(id.clone(), Arc::new(FnLoader::constant(1u32)))
+            .unwrap_err()
+            .to_string()
+            .contains("already managed"));
+        assert!(m.forget_errored(&id));
+        // …after which the retry loads cleanly.
+        m.load_and_wait(id.clone(), Arc::new(FnLoader::constant(7u32)), Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(*m.handle::<u32>("flaky", VersionRequest::Latest).unwrap(), 7);
+        // A healthy version is NOT forgettable.
+        assert!(!m.forget_errored(&id));
+        assert_eq!(m.ready_versions("flaky"), vec![1]);
     }
 
     #[test]

@@ -42,6 +42,16 @@ impl State {
             State::Error(_) => "error",
         }
     }
+
+    /// Label plus the failure reason for `Error` — what
+    /// `GetModelMetadata`/`GetModelStatus` surface so a failed load is
+    /// diagnosable from the client side, not just "error".
+    pub fn describe(&self) -> String {
+        match self {
+            State::Error(reason) => format!("error: {reason}"),
+            other => other.label().to_string(),
+        }
+    }
 }
 
 /// Options controlling harness behaviour.
@@ -230,5 +240,8 @@ mod tests {
     fn state_labels() {
         assert_eq!(State::Ready.label(), "ready");
         assert_eq!(State::Error("x".into()).label(), "error");
+        // describe() keeps the failure reason; labels stay terse.
+        assert_eq!(State::Ready.describe(), "ready");
+        assert_eq!(State::Error("disk gone".into()).describe(), "error: disk gone");
     }
 }

@@ -34,6 +34,15 @@ pub struct AvmOptions {
     /// Period of the background reconcile thread; `None` = manual
     /// reconciliation only (deterministic tests).
     pub reconcile_interval: Option<Duration>,
+    /// Times a version whose load ended in `Error` is re-attempted
+    /// (with exponential backoff) while the previously-serving version
+    /// keeps serving. `0` = never retry: a failed load parks in
+    /// `Error` until the source emits new state — the conservative
+    /// default.
+    pub num_load_retries: u32,
+    /// Backoff before the first retry; doubles on each subsequent
+    /// attempt.
+    pub load_retry_backoff: Duration,
 }
 
 impl Default for AvmOptions {
@@ -41,8 +50,17 @@ impl Default for AvmOptions {
         AvmOptions {
             manager: ManagerOptions::default(),
             reconcile_interval: Some(Duration::from_millis(20)),
+            num_load_retries: 0,
+            load_retry_backoff: Duration::from_millis(100),
         }
     }
+}
+
+/// Per-version retry bookkeeping (versions currently in `Error` with
+/// retry budget left).
+struct RetryState {
+    attempts: u32,
+    next_attempt_at: std::time::Instant,
 }
 
 pub struct AspiredVersionsManager {
@@ -52,6 +70,10 @@ pub struct AspiredVersionsManager {
     /// Versions currently mid-action (loading or unloading), so a tick
     /// doesn't double-issue while the BasicManager works asynchronously.
     in_flight: Mutex<HashMap<ServableId, Action>>,
+    /// Errored versions awaiting a backoff-gated load retry.
+    retries: Mutex<HashMap<ServableId, RetryState>>,
+    num_load_retries: u32,
+    load_retry_backoff: Duration,
     stop: AtomicBool,
     ticker: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -63,6 +85,9 @@ impl AspiredVersionsManager {
             policy,
             aspired: Mutex::new(HashMap::new()),
             in_flight: Mutex::new(HashMap::new()),
+            retries: Mutex::new(HashMap::new()),
+            num_load_retries: options.num_load_retries,
+            load_retry_backoff: options.load_retry_backoff,
             stop: AtomicBool::new(false),
             ticker: Mutex::new(None),
         });
@@ -125,17 +150,21 @@ impl AspiredVersionsManager {
         };
 
         for (name, mut aspired_versions) in aspired_snapshot {
-            // Versions that terminally failed to load are dropped from
-            // the aspired set (no retry until the source emits a new
-            // state) so one broken version can't wedge the others.
+            // Errored versions with retry budget left get forgotten and
+            // re-issued once their backoff elapses; the rest are dropped
+            // from the aspired set (parked in `Error` until the source
+            // emits new state) so one broken version can't wedge the
+            // others.
             let raw_aspired_len = aspired_versions.len();
+            let retry_now = self.schedule_retries(&name, &aspired_versions);
             {
                 let monitor = self.basic.monitor();
                 aspired_versions.retain(|v| {
-                    !matches!(
-                        monitor.state_of(&ServableId::new(name.clone(), *v)),
-                        Some(State::Error(_))
-                    )
+                    retry_now.contains(v)
+                        || !matches!(
+                            monitor.state_of(&ServableId::new(name.clone(), *v)),
+                            Some(State::Error(_))
+                        )
                 });
             }
             // If EVERY aspired version failed (but the source does want
@@ -168,6 +197,56 @@ impl AspiredVersionsManager {
                 self.execute(&name, action);
             }
         }
+    }
+
+    /// Backoff-gated load retry (the tentpole's lifecycle leg). For
+    /// each aspired version parked in `Error` with attempts left and an
+    /// elapsed backoff, forget the errored harness (freeing the id for
+    /// a fresh `manage_and_load`) and report it as retryable so the
+    /// caller keeps it in the aspired set — the policy then re-issues
+    /// `Load` through the normal path while the previously-serving
+    /// version keeps serving. Versions that reach `Ready` (or leave the
+    /// error state) get their bookkeeping cleared so a *later* failure
+    /// starts with a full budget again.
+    fn schedule_retries(&self, name: &str, aspired: &[u64]) -> Vec<u64> {
+        if self.num_load_retries == 0 {
+            return Vec::new();
+        }
+        let monitor = self.basic.monitor();
+        let mut retries = self.retries.lock().unwrap();
+        let now = std::time::Instant::now();
+        let mut retry_now = Vec::new();
+        for &v in aspired {
+            let id = ServableId::new(name, v);
+            if !matches!(monitor.state_of(&id), Some(State::Error(_))) {
+                if matches!(monitor.state_of(&id), Some(State::Ready)) {
+                    retries.remove(&id);
+                }
+                continue;
+            }
+            let entry = retries.entry(id.clone()).or_insert(RetryState {
+                attempts: 0,
+                // First sighting of the error: wait one backoff before
+                // retrying (the failure is fresh; hammering it helps no
+                // one).
+                next_attempt_at: now + self.load_retry_backoff,
+            });
+            if entry.attempts >= self.num_load_retries || now < entry.next_attempt_at {
+                continue;
+            }
+            if self.basic.forget_errored(&id) {
+                entry.attempts += 1;
+                entry.next_attempt_at =
+                    now + self.load_retry_backoff.saturating_mul(1u32 << entry.attempts.min(16));
+                crate::log_info!(
+                    "{id}: retrying failed load (attempt {}/{})",
+                    entry.attempts,
+                    self.num_load_retries
+                );
+                retry_now.push(v);
+            }
+        }
+        retry_now
     }
 
     fn execute(self: &Arc<Self>, name: &str, action: Action) {
@@ -276,6 +355,12 @@ impl AspiredVersionsCallback<Arc<dyn Loader>> for AspiredVersionsManager {
                 }
             }
         }
+        // Versions no longer aspired don't need retry bookkeeping; a
+        // re-aspired version starts with a fresh budget.
+        self.retries
+            .lock()
+            .unwrap()
+            .retain(|id, _| id.name != servable_name || map.contains_key(&id.version));
         self.aspired
             .lock()
             .unwrap()
@@ -405,6 +490,124 @@ mod tests {
         );
         assert!(m.reconcile_until_stable(30));
         // v1 serves; v2 is in Error.
+        assert_eq!(m.basic().ready_versions("m"), vec![1]);
+        assert!(matches!(
+            m.monitor().state_of(&ServableId::new("m", 2)),
+            Some(State::Error(_))
+        ));
+    }
+
+    /// Tentpole: a transiently failing load is retried with backoff at
+    /// the AVM level while the previous version keeps serving, and
+    /// converges to Ready once the fault clears.
+    #[test]
+    fn load_retry_with_backoff_recovers_transient_failure() {
+        use crate::base::loader::ResourceEstimate;
+        use crate::base::servable::ServableBox;
+        use std::sync::atomic::{AtomicU32, Ordering};
+
+        let calls = Arc::new(AtomicU32::new(0));
+        let c = Arc::clone(&calls);
+        let flaky = FnLoader::new(ResourceEstimate::default(), "flaky", move || {
+            if c.fetch_add(1, Ordering::SeqCst) < 2 {
+                anyhow::bail!("transient store outage");
+            }
+            Ok(Arc::new(20u32) as ServableBox)
+        });
+        let m = AspiredVersionsManager::new(
+            Arc::new(AvailabilityPreservingPolicy),
+            AvmOptions {
+                reconcile_interval: None,
+                num_load_retries: 2,
+                load_retry_backoff: Duration::from_millis(1),
+                // Harness-level retries off so each AVM attempt is
+                // exactly one loader call (deterministic counting).
+                manager: ManagerOptions {
+                    harness: crate::lifecycle::harness::HarnessOptions { max_load_retries: 0 },
+                    ..Default::default()
+                },
+            },
+        );
+        aspire(&m, "m", &[(1, 10)]);
+        assert!(m.reconcile_until_stable(20));
+
+        m.set_aspired_versions(
+            "m",
+            vec![
+                ServableData::ok(
+                    ServableId::new("m", 1),
+                    Arc::new(FnLoader::constant(10u32)) as Arc<dyn Loader>,
+                ),
+                ServableData::ok(ServableId::new("m", 2), Arc::new(flaky) as Arc<dyn Loader>),
+            ],
+        );
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            m.reconcile();
+            m.basic().quiesce();
+            // Availability is never sacrificed while chasing v2.
+            assert!(m.basic().ready_versions("m").contains(&1), "v1 dropped mid-retry");
+            if m.basic().ready_versions("m").contains(&2) {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "v2 never recovered; state: {:?}",
+                m.monitor().state_of(&ServableId::new("m", 2))
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Initial attempt + two AVM retries, the last of which succeeds.
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+        assert_eq!(*m.handle::<u32>("m", VersionRequest::Latest).unwrap(), 20);
+    }
+
+    /// When the retry budget runs out the version parks in `Error`
+    /// (exactly as with retries disabled) and stops consuming loads.
+    #[test]
+    fn load_retry_budget_exhausts_then_parks() {
+        use crate::base::loader::ResourceEstimate;
+        use crate::base::servable::ServableBox;
+        use std::sync::atomic::{AtomicU32, Ordering};
+
+        let calls = Arc::new(AtomicU32::new(0));
+        let c = Arc::clone(&calls);
+        let broken = FnLoader::new(ResourceEstimate::default(), "broken", move || {
+            c.fetch_add(1, Ordering::SeqCst);
+            anyhow::bail!("permanent corruption");
+        });
+        let m = AspiredVersionsManager::new(
+            Arc::new(AvailabilityPreservingPolicy),
+            AvmOptions {
+                reconcile_interval: None,
+                num_load_retries: 1,
+                load_retry_backoff: Duration::from_millis(1),
+                manager: ManagerOptions {
+                    harness: crate::lifecycle::harness::HarnessOptions { max_load_retries: 0 },
+                    ..Default::default()
+                },
+            },
+        );
+        aspire(&m, "m", &[(1, 10)]);
+        assert!(m.reconcile_until_stable(20));
+        m.set_aspired_versions(
+            "m",
+            vec![
+                ServableData::ok(
+                    ServableId::new("m", 1),
+                    Arc::new(FnLoader::constant(10u32)) as Arc<dyn Loader>,
+                ),
+                ServableData::ok(ServableId::new("m", 2), Arc::new(broken) as Arc<dyn Loader>),
+            ],
+        );
+        // Plenty of ticks for the initial attempt + one retry + any
+        // would-be extras (there must be none).
+        for _ in 0..20 {
+            m.reconcile();
+            m.basic().quiesce();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), 2, "budget of 1 retry => 2 loads total");
         assert_eq!(m.basic().ready_versions("m"), vec![1]);
         assert!(matches!(
             m.monitor().state_of(&ServableId::new("m", 2)),

@@ -1,12 +1,57 @@
-//! Synchronous RPC client + a small connection pool.
+//! Synchronous RPC client + a small connection pool, with bounded
+//! jittered retry for retryable failures ([`RetryPolicy`]).
 
 use super::frame::{read_frame_into, write_framed};
 use super::proto::{Request, Response};
+use crate::base::error::ErrorKind;
+use crate::util::rng::Rng;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::net::TcpStream;
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Client-side retry knobs. Retries apply only to failures the server
+/// marked retryable ([`ErrorKind::is_retryable`]: shed load, drain,
+/// unload races) and to transport errors (broken connection) — never
+/// to `DeadlineExceeded` (the time budget is spent), validation
+/// errors, or lookup misses, where a retry can't succeed (or, worse,
+/// would double-execute a request whose first answer was lost).
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retry).
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles per attempt.
+    pub initial_backoff: Duration,
+    /// Cap on any single backoff sleep.
+    pub max_backoff: Duration,
+    /// Jitter seed (full jitter: each sleep is uniform in
+    /// `[0, backoff]`), so a thundering herd of shed clients spreads
+    /// out instead of returning in lockstep.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            initial_backoff: Duration::from_millis(20),
+            max_backoff: Duration::from_secs(1),
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The jittered sleep before retry number `attempt` (1-based).
+    fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self
+            .initial_backoff
+            .saturating_mul(1u32 << (attempt - 1).min(16))
+            .min(self.max_backoff);
+        Duration::from_nanos(rng.next_below(exp.as_nanos().max(1) as u64))
+    }
+}
 
 /// One connection; one request in flight at a time. Encode/decode
 /// scratch buffers persist across calls, so a pooled connection issues
@@ -58,6 +103,44 @@ impl RpcClient {
     /// `call` + error-response unwrapping.
     pub fn call_ok(&mut self, req: &Request) -> Result<Response> {
         self.call(req)?.into_result()
+    }
+
+    /// `call_ok` with bounded, jittered retry. Server-side refusals
+    /// retry only when their kind is retryable (shed, drain, unload
+    /// race); transport failures reconnect first. Everything else —
+    /// including `DeadlineExceeded` — returns immediately.
+    pub fn call_retry(&mut self, req: &Request, policy: &RetryPolicy) -> Result<Response> {
+        let mut rng = Rng::new(policy.seed);
+        let mut attempt = 1u32;
+        loop {
+            let (err, transport) = match self.call(req) {
+                Ok(resp) => match resp.into_result() {
+                    Ok(resp) => return Ok(resp),
+                    Err(e) => {
+                        if !ErrorKind::of(&e).is_retryable() {
+                            return Err(e);
+                        }
+                        (e, false)
+                    }
+                },
+                Err(e) => (e, true),
+            };
+            if attempt >= policy.max_attempts {
+                return Err(err.context(format!(
+                    "giving up after {} attempt(s)",
+                    policy.max_attempts
+                )));
+            }
+            std::thread::sleep(policy.backoff(attempt, &mut rng));
+            if transport {
+                // The stream is suspect; replace it before retrying.
+                match RpcClient::connect(&self.addr) {
+                    Ok(fresh) => *self = fresh,
+                    Err(_) => {} // next call() will surface the failure
+                }
+            }
+            attempt += 1;
+        }
     }
 
     /// Set a read deadline for subsequent calls (hedging uses this).
@@ -160,6 +243,70 @@ mod tests {
         assert_eq!(pool.idle_count(&addr), 1);
         pool.call(&addr, &Request::Ping).unwrap();
         assert_eq!(pool.idle_count(&addr), 1); // reused, not grown
+    }
+
+    #[test]
+    fn call_retry_retries_only_retryable_kinds() {
+        use crate::base::error::ErrorKind;
+        use std::sync::atomic::{AtomicU32, Ordering};
+
+        let calls = Arc::new(AtomicU32::new(0));
+        let c = Arc::clone(&calls);
+        let s = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(move |req| {
+                let n = c.fetch_add(1, Ordering::SeqCst);
+                match req {
+                    // Shed twice, then serve.
+                    Request::Ping if n < 2 => Response::Error {
+                        kind: ErrorKind::Unavailable,
+                        message: "overloaded".into(),
+                    },
+                    Request::Ping => Response::Pong,
+                    // Never retryable.
+                    _ => Response::Error {
+                        kind: ErrorKind::InvalidArgument,
+                        message: "bad".into(),
+                    },
+                }
+            }),
+        )
+        .unwrap();
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            initial_backoff: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let mut client = RpcClient::connect(&s.addr().to_string()).unwrap();
+        // Two sheds + one success = exactly three calls.
+        assert_eq!(client.call_retry(&Request::Ping, &policy).unwrap(), Response::Pong);
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+        // Non-retryable kinds return immediately (one call, no sleeps).
+        let before = calls.load(Ordering::SeqCst);
+        assert!(client.call_retry(&Request::Status, &policy).is_err());
+        assert_eq!(calls.load(Ordering::SeqCst), before + 1);
+    }
+
+    #[test]
+    fn call_retry_gives_up_after_budget() {
+        use crate::base::error::ErrorKind;
+        let s = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(|_| Response::Error {
+                kind: ErrorKind::Unavailable,
+                message: "always overloaded".into(),
+            }),
+        )
+        .unwrap();
+        let mut client = RpcClient::connect(&s.addr().to_string()).unwrap();
+        let policy = RetryPolicy {
+            max_attempts: 2,
+            initial_backoff: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let err = client.call_retry(&Request::Ping, &policy).unwrap_err();
+        assert!(err.to_string().contains("giving up after 2"), "{err}");
+        assert_eq!(ErrorKind::of(&err), ErrorKind::Unavailable, "{err}");
     }
 
     #[test]

@@ -57,6 +57,12 @@ pub enum Request {
     Status,
     /// Liveness probe / no-op (used by benches to measure RPC floor).
     Ping,
+    /// Deadline envelope: the inner request must complete within
+    /// `deadline_ms` of the server *receiving* it, or be answered with
+    /// `DEADLINE_EXCEEDED` — and crucially, expired work is dropped
+    /// before it reaches the device, never after. Nesting envelopes is
+    /// a decode error.
+    WithDeadline { deadline_ms: u64, inner: Box<Request> },
 }
 
 impl Request {
@@ -92,6 +98,18 @@ impl Request {
             spec: ModelSpec::named(model, version),
             signature: String::new(),
             examples,
+        }
+    }
+
+    /// Wrap `self` in a deadline envelope. Wrapping an envelope
+    /// replaces its deadline instead of nesting (the wire format
+    /// forbids nested envelopes).
+    pub fn with_deadline_ms(self, deadline_ms: u64) -> Request {
+        match self {
+            Request::WithDeadline { inner, .. } => {
+                Request::WithDeadline { deadline_ms, inner }
+            }
+            other => Request::WithDeadline { deadline_ms, inner: Box::new(other) },
         }
     }
 }
@@ -595,11 +613,22 @@ impl Request {
                 put_str(out, model);
                 put_str(out, label);
             }
+            Request::WithDeadline { deadline_ms, inner } => {
+                out.push(12);
+                put_u64(out, *deadline_ms);
+                inner.encode_body(out);
+            }
         }
     }
 
     pub fn decode(buf: &[u8]) -> Result<Request> {
         let mut r = Reader::new(buf);
+        let req = Self::decode_with(&mut r, true)?;
+        r.done()?;
+        Ok(req)
+    }
+
+    fn decode_with(r: &mut Reader<'_>, allow_envelope: bool) -> Result<Request> {
         let req = match r.u8()? {
             0 => Request::Predict {
                 spec: r.model_spec()?,
@@ -644,9 +673,18 @@ impl Request {
                 version: r.u64()?,
             },
             11 => Request::DeleteVersionLabel { model: r.str()?, label: r.str()? },
+            12 => {
+                if !allow_envelope {
+                    bail!("nested deadline envelope");
+                }
+                let deadline_ms = r.u64()?;
+                Request::WithDeadline {
+                    deadline_ms,
+                    inner: Box::new(Self::decode_with(r, false)?),
+                }
+            }
             t => bail!("unknown request tag {t}"),
         };
-        r.done()?;
         Ok(req)
     }
 }
@@ -990,6 +1028,36 @@ mod tests {
         roundtrip_req(Request::ModelStatus { model: "m".into() });
         roundtrip_req(Request::Status);
         roundtrip_req(Request::Ping);
+        roundtrip_req(
+            Request::predict("m", None, Tensor::zeros(vec![2, 4])).with_deadline_ms(150),
+        );
+    }
+
+    #[test]
+    fn deadline_envelope_rules() {
+        // Re-wrapping replaces the deadline, never nests.
+        let req = Request::Ping.with_deadline_ms(10).with_deadline_ms(20);
+        match &req {
+            Request::WithDeadline { deadline_ms, inner } => {
+                assert_eq!(*deadline_ms, 20);
+                assert_eq!(**inner, Request::Ping);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        roundtrip_req(req);
+        // A hand-crafted nested envelope is rejected on decode.
+        let mut wire = vec![12u8];
+        wire.extend_from_slice(&5u64.to_le_bytes());
+        wire.extend_from_slice(&Request::Ping.with_deadline_ms(1).encode());
+        let err = Request::decode(&wire).unwrap_err();
+        assert!(err.to_string().contains("nested"), "{err}");
+        // Truncation at every cut errors cleanly.
+        let full = Request::classify("c", Some(2), vec![Example::new()])
+            .with_deadline_ms(99)
+            .encode();
+        for cut in 0..full.len() {
+            assert!(Request::decode(&full[..cut]).is_err(), "envelope cut={cut}");
+        }
     }
 
     #[test]
@@ -1057,6 +1125,8 @@ mod tests {
             ErrorKind::NotFound,
             ErrorKind::InvalidArgument,
             ErrorKind::FailedPrecondition,
+            ErrorKind::DeadlineExceeded,
+            ErrorKind::Unavailable,
             ErrorKind::Internal,
         ] {
             roundtrip_resp(Response::Error { kind, message: "boom".into() });

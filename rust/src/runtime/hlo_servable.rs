@@ -97,6 +97,11 @@ impl HloServable {
     /// padded buffer recycles as soon as the executable is done with it.
     pub fn run(&self, input: &Tensor) -> Result<Vec<OutTensor>> {
         use crate::base::error::ErrorKind;
+        // Chaos seam: an armed `exec:{model}` point injects a device
+        // failure or latency spike here (no-op single atomic load when
+        // nothing is armed). Consulted before the executions counter so
+        // an injected *failure* doesn't count as an execution.
+        crate::util::fault::hit(&format!("exec:{}", self.spec.model_name))?;
         self.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let rows = input.batch();
         if input.rank() != 2 || input.shape()[1] != self.spec.input_dim {
@@ -279,7 +284,13 @@ pub fn synthetic_loader(spec: ArtifactSpec) -> Arc<dyn Loader> {
     Arc::new(crate::base::loader::FnLoader::new(
         ResourceEstimate::ram(spec.ram_estimate_bytes),
         &describe,
-        move || Ok(Arc::new(HloServable::synthetic(spec.clone())) as ServableBox),
+        move || {
+            // Chaos seam: an armed `load:{model}` point makes this load
+            // attempt fail (transiently, if armed with a finite count) —
+            // how chaos tests exercise the lifecycle's load retry.
+            crate::util::fault::hit(&format!("load:{}", spec.model_name))?;
+            Ok(Arc::new(HloServable::synthetic(spec.clone())) as ServableBox)
+        },
     ))
 }
 
@@ -437,6 +448,27 @@ mod tests {
         let o1 = v1.run(&input).unwrap();
         let o2 = v2.run(&input).unwrap();
         assert_ne!(o1[0].as_f32().unwrap(), o2[0].as_f32().unwrap());
+    }
+
+    #[test]
+    fn exec_fault_point_injects_then_recovers() {
+        use crate::util::fault::{arm, Fault};
+        // Unique model name: the fault registry is process-global.
+        let servable = HloServable::synthetic(ArtifactSpec::synthetic_classifier(
+            "fault_exec_syn",
+            1,
+            8,
+            3,
+        ));
+        arm("exec:fault_exec_syn", Fault::Fail { message: "chaos".into() }, 1);
+        let input = Tensor::zeros(vec![1, 8]);
+        let e = servable.run(&input).unwrap_err();
+        assert!(e.to_string().contains("chaos"), "{e}");
+        // An injected failure is not an execution.
+        assert_eq!(servable.executions(), 0);
+        // Charge spent: the next run succeeds.
+        assert_eq!(servable.run(&input).unwrap().len(), 2);
+        assert_eq!(servable.executions(), 1);
     }
 
     #[test]

@@ -23,12 +23,12 @@ use super::config::ServerConfig;
 use crate::base::aspired::{AspiredVersionsCallback, Source};
 use crate::base::error::ErrorKind;
 use crate::http::server::HttpServer;
-use crate::inference::classify::{classify_with, ClassifyRequest};
+use crate::inference::classify::{classify_with_opts, ClassifyRequest};
 use crate::inference::example::Feature;
 use crate::inference::logger::{digest_f32s, RequestLogger};
-use crate::inference::multi::{multi_inference_with, MultiInferenceRequest};
-use crate::inference::predict::{predict_with, LabeledSource, PredictRequest};
-use crate::inference::regress::{regress_with, RegressRequest};
+use crate::inference::multi::{multi_inference_with_opts, MultiInferenceRequest};
+use crate::inference::predict::{predict_with_opts, LabeledSource, PredictRequest};
+use crate::inference::regress::{regress_with_opts, RegressRequest};
 use crate::inference::table::{table_source_adapter, TableServable};
 use crate::inference::ModelSpec;
 use crate::lifecycle::basic_manager::{ManagerOptions, VersionRequest};
@@ -43,7 +43,7 @@ use crate::rpc::proto::{Request, Response, VersionMetadata};
 use crate::rpc::server::RpcServer;
 use crate::runtime::hlo_servable::{hlo_source_adapter, HloServable};
 use crate::runtime::pjrt::XlaRuntime;
-use crate::serving::SessionRegistry;
+use crate::serving::{AdmissionControl, RunOptions, SessionRegistry};
 use crate::util::metrics::Registry;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -62,6 +62,9 @@ pub struct ServerCore {
     /// Per-servable batching sessions (the cross-request merge layer
     /// both wire planes execute through).
     pub sessions: Arc<SessionRegistry>,
+    /// Bounded-in-flight admission control + the drain switch; every
+    /// data-plane request holds one of its permits while executing.
+    pub admission: Arc<AdmissionControl>,
     pub registry: Arc<Registry>,
     pub logger: Arc<RequestLogger>,
 }
@@ -79,6 +82,12 @@ impl ModelServer {
     /// listening (models may still be loading — see
     /// [`ModelServer::wait_until_ready`]).
     pub fn start(config: ServerConfig) -> Result<Arc<Self>> {
+        // Chaos knob: arm fault points from TENSORSERVE_FAULTS before
+        // anything loads, so even the first load can be made to fail.
+        match crate::util::fault::arm_from_env()? {
+            0 => {}
+            n => crate::log_info!("fault injection: {n} point(s) armed from env"),
+        }
         // Buffer-pool sharding must be requested before the global
         // pools' first touch; afterwards the shard count is fixed for
         // the process (log, don't fail — any count works).
@@ -111,6 +120,8 @@ impl ModelServer {
                     ..Default::default()
                 },
                 reconcile_interval: Some(Duration::from_millis(20)),
+                num_load_retries: config.load_retries,
+                load_retry_backoff: config.load_retry_backoff,
             },
         );
 
@@ -164,6 +175,7 @@ impl ModelServer {
         let registry = Registry::new();
         let sessions = SessionRegistry::new(config.batching.clone(), Arc::clone(&registry));
         sessions.attach(avm.basic());
+        let admission = AdmissionControl::new(config.admission.clone(), &registry);
 
         let core = Arc::new(ServerCore {
             config: config.clone(),
@@ -171,6 +183,7 @@ impl ModelServer {
             source,
             labels: Arc::new(LabelResolver::new()),
             sessions,
+            admission,
             registry,
             logger: Arc::new(RequestLogger::new(0.1, 4096, 42)),
         });
@@ -259,7 +272,18 @@ impl ModelServer {
         }
     }
 
+    /// Graceful drain, then teardown: new data-plane work is refused
+    /// with a retryable `Unavailable` (pointing clients at another
+    /// replica), already-admitted requests get a bounded window to
+    /// finish, and only then do the listeners close.
     pub fn stop(&self) {
+        self.core.admission.start_draining();
+        if !self.core.admission.wait_idle(Duration::from_secs(5)) {
+            crate::log_warn!(
+                "drain window expired with {} request(s) still in flight",
+                self.core.admission.inflight()
+            );
+        }
         self.rpc.stop();
         if let Some(http) = &self.http {
             http.stop();
@@ -291,6 +315,39 @@ impl ServerCore {
     /// The RPC request handler (one call per request frame).
     pub fn handle(&self, req: Request) -> Response {
         let t0 = Instant::now();
+        // Deadline envelope: unwrap into (inner request, run options).
+        // The wire decoder rejects nesting; in-process callers get the
+        // lenient reading (innermost envelope wins).
+        let mut req = req;
+        let mut opts = RunOptions::default();
+        while let Request::WithDeadline { deadline_ms, inner } = req {
+            opts = RunOptions::with_deadline_ms(deadline_ms);
+            req = *inner;
+        }
+        // Admission: data-plane requests hold a permit while they
+        // execute; control-plane traffic (status, labels, lifecycle) is
+        // never shed — operators must be able to inspect an overloaded
+        // server.
+        let admitted_model = match &req {
+            Request::Predict { spec, .. }
+            | Request::Classify { spec, .. }
+            | Request::Regress { spec, .. }
+            | Request::MultiInference { spec, .. } => Some(spec.name.clone()),
+            Request::Lookup { table, .. } => Some(table.clone()),
+            _ => None,
+        };
+        let _permit = match admitted_model {
+            Some(model) => match self.admission.admit(&model) {
+                Ok(permit) => Some(permit),
+                Err(e) => {
+                    let api = api_of(&req);
+                    self.registry.counter(&format!("rpc.{api}.requests")).inc();
+                    self.registry.counter(&format!("rpc.{api}.errors")).inc();
+                    return Response::error(&e);
+                }
+            },
+            None => None,
+        };
         // Label-aware lookups: labeled specs resolve through the
         // resolver, unlabeled ones pass straight to the AVM.
         let labeled = LabeledSource {
@@ -298,6 +355,15 @@ impl ServerCore {
             labels: self.labels.as_ref(),
         };
         let (api, resp) = match req {
+            // Unwrapped above; a bare nested envelope can only be
+            // constructed in-process and is answered, not panicked on.
+            Request::WithDeadline { .. } => (
+                "with_deadline",
+                Response::Error {
+                    kind: ErrorKind::InvalidArgument,
+                    message: "nested deadline envelope".into(),
+                },
+            ),
             Request::Ping => ("ping", Response::Pong),
             Request::Predict { spec, signature, inputs } => {
                 let model = spec.name.clone();
@@ -311,7 +377,7 @@ impl ServerCore {
                 // The serving path always executes through the session
                 // registry: concurrent predicts (RPC and REST alike)
                 // merge into shared device batches.
-                let r = predict_with(&labeled, self.sessions.as_ref(), &preq);
+                let r = predict_with_opts(&labeled, self.sessions.as_ref(), &preq, &opts);
                 // The decoded request buffers came from the global
                 // pool; hand them back now that inference consumed them.
                 for (_, input) in preq.inputs {
@@ -332,10 +398,11 @@ impl ServerCore {
                 )
             }
             Request::Classify { spec, signature, examples } => {
-                let r = classify_with(
+                let r = classify_with_opts(
                     &labeled,
                     self.sessions.as_ref(),
                     &ClassifyRequest { spec, signature, examples },
+                    &opts,
                 );
                 (
                     "classify",
@@ -350,10 +417,11 @@ impl ServerCore {
                 )
             }
             Request::Regress { spec, signature, examples } => {
-                let r = regress_with(
+                let r = regress_with_opts(
                     &labeled,
                     self.sessions.as_ref(),
                     &RegressRequest { spec, signature, examples },
+                    &opts,
                 );
                 (
                     "regress",
@@ -370,10 +438,11 @@ impl ServerCore {
                 // The shared execution routes through the per-model
                 // session too, so concurrent MultiInference calls
                 // merge (ROADMAP: "Batching for MultiInference").
-                let r = multi_inference_with(
+                let r = multi_inference_with_opts(
                     &labeled,
                     self.sessions.as_ref(),
                     &MultiInferenceRequest { spec, tasks, examples },
+                    &opts,
                 );
                 (
                     "multi_inference",
@@ -465,7 +534,7 @@ impl ServerCore {
                 let versions = snapshot
                     .into_iter()
                     .filter(|(id, _)| id.name == model)
-                    .map(|(id, st)| (id.version, st.label().to_string()))
+                    .map(|(id, st)| (id.version, st.describe()))
                     .collect();
                 ("model_status", Response::ModelStatus { versions })
             }
@@ -514,7 +583,7 @@ impl ServerCore {
             .snapshot()
             .into_iter()
             .filter(|(id, _)| id.name == spec.name)
-            .map(|(id, st)| (id.version, st.label().to_string()))
+            .map(|(id, st)| (id.version, st.describe()))
             .collect();
         // Same version/label resolution rule as the lookup path.
         let wanted: Vec<u64> =
@@ -564,6 +633,26 @@ impl ServerCore {
     }
 }
 
+/// Wire-API name of a request (metrics keys; matches the `(api, _)`
+/// labels in [`ServerCore::handle`]).
+fn api_of(req: &Request) -> &'static str {
+    match req {
+        Request::Ping => "ping",
+        Request::Predict { .. } => "predict",
+        Request::Classify { .. } => "classify",
+        Request::Regress { .. } => "regress",
+        Request::MultiInference { .. } => "multi_inference",
+        Request::GetModelMetadata { .. } => "get_model_metadata",
+        Request::SetVersionLabel { .. } => "set_version_label",
+        Request::DeleteVersionLabel { .. } => "delete_version_label",
+        Request::Lookup { .. } => "lookup",
+        Request::SetAspired { .. } => "set_aspired",
+        Request::ModelStatus { .. } => "model_status",
+        Request::Status => "status",
+        Request::WithDeadline { .. } => "with_deadline",
+    }
+}
+
 /// Helper: build a classify/regress example from a raw feature vector.
 pub fn example_from_features(x: Vec<f32>) -> crate::inference::example::Example {
     crate::inference::example::Example::new().with("x", Feature::Floats(x))
@@ -600,6 +689,7 @@ mod tests {
                     policy: ServingPolicy::Latest(1),
                 },
             ],
+            ..Default::default()
         }
     }
 
@@ -705,6 +795,7 @@ mod tests {
             ram_capacity_bytes: 0,
             batching: Default::default(),
             models: vec![],
+            ..Default::default()
         }
     }
 
@@ -977,6 +1068,40 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+        server.stop();
+    }
+
+    #[test]
+    fn deadline_envelope_and_drain_over_rpc() {
+        use crate::base::error::ErrorKind;
+        let server = synthetic_server(&[1]);
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+        let predict = || Request::Predict {
+            spec: crate::inference::ModelSpec::latest("syn"),
+            signature: String::new(),
+            inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+        };
+        // An already-expired deadline is answered DeadlineExceeded
+        // without touching the device.
+        let err = client.call_ok(&predict().with_deadline_ms(0)).unwrap_err();
+        assert_eq!(ErrorKind::of(&err), ErrorKind::DeadlineExceeded, "{err}");
+        // A generous one serves normally.
+        assert!(matches!(
+            client.call_ok(&predict().with_deadline_ms(30_000)).unwrap(),
+            Response::Predict { .. }
+        ));
+        // Draining refuses new data-plane work retryably while the
+        // control plane stays reachable.
+        server.core().admission.start_draining();
+        let err = client.call_ok(&predict()).unwrap_err();
+        assert_eq!(ErrorKind::of(&err), ErrorKind::Unavailable, "{err}");
+        assert!(err.to_string().contains("draining"), "{err}");
+        assert!(matches!(
+            client
+                .call_ok(&Request::ModelStatus { model: "syn".into() })
+                .unwrap(),
+            Response::ModelStatus { .. }
+        ));
         server.stop();
     }
 

@@ -31,7 +31,7 @@
 
 use crate::base::error::ErrorKind;
 use crate::lifecycle::source::ServingPolicy;
-use crate::serving::{BatchingConfig, BatchingOverride};
+use crate::serving::{AdmissionConfig, BatchingConfig, BatchingOverride};
 use crate::util::config::Conf;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
@@ -67,6 +67,15 @@ pub struct ServerConfig {
     /// Cross-request batching knobs (one `BatchingSession` per loaded
     /// servable version; see `serving::SessionRegistry`).
     pub batching: BatchingConfig,
+    /// Bounded-in-flight admission control / load shedding (both caps
+    /// default to 0 = unlimited, so shedding is strictly opt-in).
+    pub admission: AdmissionConfig,
+    /// Times the manager retries a version whose load fails before
+    /// parking it in `Error` (0 = never retry, the conservative
+    /// default; the previous version keeps serving either way).
+    pub load_retries: u32,
+    /// Backoff before the first load retry; doubles per attempt.
+    pub load_retry_backoff: Duration,
     pub models: Vec<ModelConfig>,
 }
 
@@ -81,6 +90,9 @@ impl Default for ServerConfig {
             load_threads: 2,
             ram_capacity_bytes: 0,
             batching: BatchingConfig::default(),
+            admission: AdmissionConfig::default(),
+            load_retries: 0,
+            load_retry_backoff: Duration::from_millis(100),
             models: Vec::new(),
         }
     }
@@ -98,6 +110,9 @@ impl ServerConfig {
             "load_threads",
             "ram_capacity_bytes",
             "batching",
+            "admission",
+            "load_retries",
+            "load_retry_backoff_ms",
             "models",
         ])?;
         let artifacts_root = PathBuf::from(conf.str_or(
@@ -143,6 +158,16 @@ impl ServerConfig {
             bail!("config declares no models");
         }
         let batching = Self::batching_from_conf(conf)?;
+        let admission = Self::admission_from_conf(conf)?;
+        let load_retries = conf.u64_or("load_retries", 0) as u32;
+        let load_retry_backoff_ms = conf.u64_or("load_retry_backoff_ms", 100);
+        // Zero backoff with retries on would hammer a failing artifact
+        // in a hot loop — a config typo, caught at parse time.
+        if load_retries > 0 && load_retry_backoff_ms == 0 {
+            return Err(ErrorKind::InvalidArgument.err(
+                "load_retry_backoff_ms must be positive when load_retries is set",
+            ));
+        }
         Ok(ServerConfig {
             port: conf.u64_or("port", 0) as u16,
             http_addr: conf
@@ -160,8 +185,45 @@ impl ServerConfig {
             load_threads: conf.u64_or("load_threads", 2) as usize,
             ram_capacity_bytes: conf.u64_or("ram_capacity_bytes", 0),
             batching,
+            admission,
+            load_retries,
+            load_retry_backoff: Duration::from_millis(load_retry_backoff_ms),
             models,
         })
+    }
+
+    /// Parse the `"admission"` object (all keys optional; absent =
+    /// unlimited, i.e. no shedding).
+    fn admission_from_conf(conf: &Conf) -> Result<AdmissionConfig> {
+        let defaults = AdmissionConfig::default();
+        if let Some(obj) = conf.root().get("admission") {
+            Conf::from_json(obj.clone(), "admission").allow_keys(&[
+                "max_inflight",
+                "max_inflight_per_model",
+                "retry_after_ms",
+            ])?;
+        }
+        let admission = AdmissionConfig {
+            max_inflight: conf
+                .u64_or("admission.max_inflight", defaults.max_inflight as u64)
+                as usize,
+            max_inflight_per_model: conf.u64_or(
+                "admission.max_inflight_per_model",
+                defaults.max_inflight_per_model as u64,
+            ) as usize,
+            retry_after_ms: conf.u64_or("admission.retry_after_ms", defaults.retry_after_ms),
+        };
+        // A per-model cap above the global cap can never be reached —
+        // a config typo, caught here rather than silently ignored.
+        if admission.max_inflight > 0
+            && admission.max_inflight_per_model > admission.max_inflight
+        {
+            return Err(ErrorKind::InvalidArgument.err(format!(
+                "admission: max_inflight_per_model ({}) exceeds max_inflight ({})",
+                admission.max_inflight_per_model, admission.max_inflight
+            )));
+        }
+        Ok(admission)
     }
 
     /// Parse the `"batching"` object (all keys optional; absent object
@@ -450,6 +512,66 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(err.contains("unknown key"), "{err}");
+    }
+
+    #[test]
+    fn admission_and_load_retry_knobs() {
+        // Absent: unlimited admission, no load retries.
+        let cfg = ServerConfig::from_conf(
+            &Conf::parse(r#"{"models":[{"name":"x"}]}"#, "t").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.admission, AdmissionConfig::default());
+        assert_eq!(cfg.load_retries, 0);
+        assert_eq!(cfg.load_retry_backoff, Duration::from_millis(100));
+
+        // Full parse.
+        let cfg = ServerConfig::from_conf(
+            &Conf::parse(
+                r#"{
+                  "admission": {
+                    "max_inflight": 64,
+                    "max_inflight_per_model": 16,
+                    "retry_after_ms": 250
+                  },
+                  "load_retries": 3,
+                  "load_retry_backoff_ms": 20,
+                  "models": [{"name": "x"}]
+                }"#,
+                "t",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.admission.max_inflight, 64);
+        assert_eq!(cfg.admission.max_inflight_per_model, 16);
+        assert_eq!(cfg.admission.retry_after_ms, 250);
+        assert_eq!(cfg.load_retries, 3);
+        assert_eq!(cfg.load_retry_backoff, Duration::from_millis(20));
+
+        // Config typos are parse-time InvalidArgument errors.
+        for (bad, needle) in [
+            (
+                r#"{"admission": {"max_inflight": 4, "max_inflight_per_model": 8},
+                    "models":[{"name":"x"}]}"#,
+                "exceeds max_inflight",
+            ),
+            (
+                r#"{"load_retries": 2, "load_retry_backoff_ms": 0,
+                    "models":[{"name":"x"}]}"#,
+                "load_retry_backoff_ms",
+            ),
+            (
+                r#"{"admission": {"max_in_flight": 4}, "models":[{"name":"x"}]}"#,
+                "unknown key",
+            ),
+        ] {
+            let err = ServerConfig::from_conf(&Conf::parse(bad, "t").unwrap()).unwrap_err();
+            assert!(err.to_string().contains(needle), "{bad}: {err}");
+            if !needle.contains("unknown key") {
+                assert_eq!(ErrorKind::of(&err), ErrorKind::InvalidArgument, "{bad}");
+            }
+        }
     }
 
     #[test]

@@ -48,9 +48,30 @@ use crate::runtime::pjrt::OutTensor;
 use crate::util::metrics::Registry;
 use anyhow::Result;
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, RwLock, Weak};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::time::{Duration, Instant};
+
+/// Per-request execution options carried from the wire down to the
+/// batching lanes. `deadline` is absolute (stamped when the request
+/// was *received*): work still unexecuted past it is dropped with
+/// [`ErrorKind::DeadlineExceeded`] instead of burning a device slot.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunOptions {
+    pub deadline: Option<Instant>,
+}
+
+impl RunOptions {
+    /// Options with an absolute deadline `budget` from now.
+    pub fn with_deadline_ms(deadline_ms: u64) -> RunOptions {
+        RunOptions { deadline: Some(Instant::now() + Duration::from_millis(deadline_ms)) }
+    }
+
+    /// True once the deadline (if any) has passed.
+    pub fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+}
 
 /// How the inference layer executes a servable against an input batch.
 ///
@@ -58,8 +79,22 @@ use std::time::Duration;
 /// `handle.run()` themselves; they go through a `Runner` so the
 /// serving stack can substitute the cross-request batched path.
 pub trait Runner: Send + Sync {
-    fn run(&self, handle: &ServableHandle<HloServable>, input: &Tensor)
-        -> Result<Vec<OutTensor>>;
+    /// Execute with per-request options (deadline propagation).
+    fn run_opts(
+        &self,
+        handle: &ServableHandle<HloServable>,
+        input: &Tensor,
+        opts: &RunOptions,
+    ) -> Result<Vec<OutTensor>>;
+
+    /// Execute with default options (no deadline).
+    fn run(
+        &self,
+        handle: &ServableHandle<HloServable>,
+        input: &Tensor,
+    ) -> Result<Vec<OutTensor>> {
+        self.run_opts(handle, input, &RunOptions::default())
+    }
 }
 
 /// Unbatched execution: dereference the handle and run. What library
@@ -67,11 +102,20 @@ pub trait Runner: Send + Sync {
 pub struct DirectRunner;
 
 impl Runner for DirectRunner {
-    fn run(
+    fn run_opts(
         &self,
         handle: &ServableHandle<HloServable>,
         input: &Tensor,
+        opts: &RunOptions,
     ) -> Result<Vec<OutTensor>> {
+        // Expired-before-execution is still enforced on the direct
+        // path: never start a device call whose client has given up.
+        if opts.expired() {
+            return Err(ErrorKind::DeadlineExceeded.err(format!(
+                "deadline expired before execution of model '{}'",
+                handle.id().name
+            )));
+        }
         handle.run(input)
     }
 }
@@ -177,7 +221,7 @@ struct ServableSession {
 }
 
 impl ServableSession {
-    fn run(&self, input: &Tensor) -> Result<Vec<OutTensor>> {
+    fn run_with(&self, input: &Tensor, deadline: Option<Instant>) -> Result<Vec<OutTensor>> {
         if self.closed.load(Ordering::Acquire) {
             return Err(ErrorKind::FailedPrecondition
                 .err("model version is unloading; retry"));
@@ -185,7 +229,7 @@ impl ServableSession {
         // Tensor is a view type: the clone is an O(1) Arc bump, and
         // the caller keeps ownership of the request storage (the
         // session's post-assembly recycle is declined while shared).
-        self.session.run(input.clone())
+        self.session.run_with_deadline(input.clone(), deadline)
     }
 }
 
@@ -370,21 +414,170 @@ impl SessionRegistry {
 }
 
 impl Runner for SessionRegistry {
-    fn run(
+    fn run_opts(
         &self,
         handle: &ServableHandle<HloServable>,
         input: &Tensor,
+        opts: &RunOptions,
     ) -> Result<Vec<OutTensor>> {
         if !self.config.enabled {
-            return handle.run(input);
+            return DirectRunner.run_opts(handle, input, opts);
         }
         match self.session_for(handle.id()) {
-            Some(session) => session.run(input),
+            Some(session) => session.run_with(input, opts.deadline),
             // No session (registry not attached to this version's
             // lifecycle, or the servable was loaded out of band):
             // direct execution, never an error.
-            None => handle.run(input),
+            None => DirectRunner.run_opts(handle, input, opts),
         }
+    }
+}
+
+/// Admission-control knobs (`ServerConfig.admission`). Both caps
+/// default to 0 = unlimited, so admission is strictly opt-in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionConfig {
+    /// Max concurrently-admitted data-plane requests across all models
+    /// (0 = unlimited). Excess load is shed with a retryable
+    /// [`ErrorKind::Unavailable`] instead of queueing without bound.
+    pub max_inflight: usize,
+    /// Max concurrently-admitted requests per model (0 = unlimited).
+    pub max_inflight_per_model: usize,
+    /// Backoff hint returned to shed clients (the HTTP gateway's
+    /// `Retry-After` header, rounded up to whole seconds).
+    pub retry_after_ms: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { max_inflight: 0, max_inflight_per_model: 0, retry_after_ms: 50 }
+    }
+}
+
+/// Bounded-in-flight admission control and the drain switch (§"graceful
+/// degradation"). Every data-plane request acquires a [`Permit`] before
+/// touching the serving map; the permit's `Drop` releases the slots, so
+/// early returns and panics can't leak capacity. When the server is
+/// draining (shutdown in progress) all new work is refused retryably
+/// while already-admitted requests finish.
+pub struct AdmissionControl {
+    config: AdmissionConfig,
+    inflight: AtomicUsize,
+    per_model: Mutex<HashMap<String, Arc<AtomicUsize>>>,
+    draining: AtomicBool,
+    shed: Arc<crate::util::metrics::Counter>,
+}
+
+impl AdmissionControl {
+    pub fn new(config: AdmissionConfig, metrics: &Registry) -> Arc<AdmissionControl> {
+        Arc::new(AdmissionControl {
+            config,
+            inflight: AtomicUsize::new(0),
+            per_model: Mutex::new(HashMap::new()),
+            draining: AtomicBool::new(false),
+            shed: metrics.counter("admission.shed"),
+        })
+    }
+
+    /// Try to admit one request against `model`. On success the
+    /// returned permit holds the slots until dropped; on refusal the
+    /// error is [`ErrorKind::Unavailable`] (retryable).
+    pub fn admit(self: &Arc<Self>, model: &str) -> Result<Permit> {
+        if self.draining.load(Ordering::Acquire) {
+            self.shed.inc();
+            return Err(ErrorKind::Unavailable
+                .err("server is draining; retry against another replica"));
+        }
+        if !try_acquire(&self.inflight, self.config.max_inflight) {
+            self.shed.inc();
+            return Err(ErrorKind::Unavailable.err(format!(
+                "overloaded: server at its global in-flight cap ({})",
+                self.config.max_inflight
+            )));
+        }
+        let lane = Arc::clone(
+            self.per_model
+                .lock()
+                .unwrap()
+                .entry(model.to_string())
+                .or_default(),
+        );
+        if !try_acquire(&lane, self.config.max_inflight_per_model) {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.shed.inc();
+            return Err(ErrorKind::Unavailable.err(format!(
+                "overloaded: model '{model}' at its in-flight cap ({})",
+                self.config.max_inflight_per_model
+            )));
+        }
+        Ok(Permit { control: Arc::clone(self), lane })
+    }
+
+    /// Flip the drain switch: every subsequent `admit` refuses
+    /// retryably. Idempotent.
+    pub fn start_draining(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Currently-admitted requests (all models).
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Backoff hint for shed clients, rounded up to whole seconds
+    /// (HTTP `Retry-After` has one-second resolution).
+    pub fn retry_after_secs(&self) -> u64 {
+        self.config.retry_after_ms.div_ceil(1000).max(1)
+    }
+
+    /// Block until every admitted request has finished, or `timeout`
+    /// elapses. Returns `true` if fully drained.
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let start = Instant::now();
+        while self.inflight() > 0 {
+            if start.elapsed() >= timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        true
+    }
+}
+
+/// Increment `counter` unless it already sits at `cap` (0 = no cap —
+/// still counted, so drain can watch in-flight reach zero).
+fn try_acquire(counter: &AtomicUsize, cap: usize) -> bool {
+    if cap == 0 {
+        counter.fetch_add(1, Ordering::AcqRel);
+        return true;
+    }
+    let mut cur = counter.load(Ordering::Acquire);
+    loop {
+        if cur >= cap {
+            return false;
+        }
+        match counter.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire) {
+            Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// RAII admission slot: releases the global and per-model counters on
+/// drop, whatever path the request exits by.
+pub struct Permit {
+    control: Arc<AdmissionControl>,
+    lane: Arc<AtomicUsize>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.lane.fetch_sub(1, Ordering::AcqRel);
+        self.control.inflight.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
@@ -525,5 +718,65 @@ mod tests {
             "8 concurrent requests never merged: {} executions",
             servable.executions()
         );
+    }
+
+    #[test]
+    fn expired_deadline_never_reaches_the_device() {
+        let m = manager_with(&[1]);
+        let handle = m.handle::<HloServable>("m", VersionRequest::Latest).unwrap();
+        let input = Tensor::zeros(vec![1, 4]);
+        let before = handle.executions();
+        // An already-expired deadline is refused on the direct path...
+        let expired = RunOptions { deadline: Some(Instant::now() - Duration::from_millis(5)) };
+        let e = DirectRunner.run_opts(&handle, &input, &expired).unwrap_err();
+        assert_eq!(ErrorKind::of(&e), ErrorKind::DeadlineExceeded);
+        // ...and on the registry's fallback path — without executing.
+        let r = registry(BatchingConfig::default());
+        let e = r.run_opts(&handle, &input, &expired).unwrap_err();
+        assert_eq!(ErrorKind::of(&e), ErrorKind::DeadlineExceeded);
+        assert_eq!(handle.executions(), before, "expired work must not execute");
+        // A generous deadline sails through.
+        let ok = RunOptions::with_deadline_ms(10_000);
+        assert_eq!(r.run_opts(&handle, &input, &ok).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn admission_caps_and_permit_release() {
+        let metrics = Registry::new();
+        let ac = AdmissionControl::new(
+            AdmissionConfig { max_inflight: 2, max_inflight_per_model: 1, retry_after_ms: 1500 },
+            &metrics,
+        );
+        let a = ac.admit("x").unwrap();
+        // Per-model cap refuses a second 'x' while 'y' still fits.
+        let e = ac.admit("x").unwrap_err();
+        assert_eq!(ErrorKind::of(&e), ErrorKind::Unavailable);
+        let b = ac.admit("y").unwrap();
+        // Global cap (2) now refuses even a fresh model.
+        let e = ac.admit("z").unwrap_err();
+        assert_eq!(ErrorKind::of(&e), ErrorKind::Unavailable);
+        assert_eq!(ac.inflight(), 2);
+        assert_eq!(metrics.counter("admission.shed").get(), 2);
+        // Dropping permits frees both the lane and the global slot.
+        drop(a);
+        assert_eq!(ac.inflight(), 1);
+        ac.admit("x").unwrap();
+        drop(b);
+        assert_eq!(ac.retry_after_secs(), 2, "1500ms rounds up to 2s");
+    }
+
+    #[test]
+    fn draining_refuses_new_work_and_waits_for_stragglers() {
+        let metrics = Registry::new();
+        let ac = AdmissionControl::new(AdmissionConfig::default(), &metrics);
+        let straggler = ac.admit("m").unwrap();
+        ac.start_draining();
+        assert!(ac.is_draining());
+        let e = ac.admit("m").unwrap_err();
+        assert_eq!(ErrorKind::of(&e), ErrorKind::Unavailable);
+        // Unlimited caps still count in-flight, so drain can observe it.
+        assert!(!ac.wait_idle(Duration::from_millis(5)), "straggler still running");
+        drop(straggler);
+        assert!(ac.wait_idle(Duration::from_secs(1)));
     }
 }

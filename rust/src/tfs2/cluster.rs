@@ -47,6 +47,7 @@ fn empty_job_config(artifacts_root: &PathBuf) -> ServerConfig {
         ram_capacity_bytes: 0,
         batching: Default::default(),
         models: Vec::new(),
+        ..Default::default()
     }
 }
 

@@ -1,0 +1,234 @@
+//! Deterministic fault injection for chaos testing (no PJRT, no
+//! devices, no randomness).
+//!
+//! The serving stack consults named **fault points** at its failure
+//! seams — `load:{model}` in the synthetic loader, `exec:{model}` in
+//! [`HloServable::run`] — via [`hit`]. Tests (and operators, through
+//! the `TENSORSERVE_FAULTS` env var) *arm* a point with a fault and a
+//! count; each hit consumes one charge until the point runs dry, so
+//! "fail twice then succeed" is exactly two armed charges. The
+//! un-armed fast path is one relaxed atomic load — serving builds pay
+//! nothing for carrying the hooks.
+//!
+//! Env syntax (parsed once at server start via [`arm_from_env`]):
+//!
+//! ```text
+//! TENSORSERVE_FAULTS="load:mnist=fail:2;exec:mnist=delay:50ms:3"
+//! ```
+//!
+//! — arm `load:mnist` to fail twice, and `exec:mnist` to sleep 50ms on
+//! each of its next three executions.
+//!
+//! [`HloServable::run`]: crate::runtime::hlo_servable::HloServable
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What an armed point does on each charged hit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Fail the operation with this message (kind-less: the consulting
+    /// site decides how the failure classifies, same as a real fault).
+    Fail { message: String },
+    /// Latency spike: sleep this long, then let the operation proceed.
+    Delay { duration: Duration },
+}
+
+struct Armed {
+    fault: Fault,
+    /// Charges left; the entry is removed when this reaches 0.
+    times: u32,
+}
+
+/// Process-global registry. `ANY_ARMED` keeps the un-armed hot path to
+/// a single relaxed load — the mutex is only touched while some point
+/// is armed (tests / chaos runs).
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: Mutex<Option<HashMap<String, Armed>>> = Mutex::new(None);
+
+/// Arm `point` to apply `fault` on its next `times` hits. Re-arming a
+/// point replaces its previous setting. `times == 0` disarms.
+pub fn arm(point: &str, fault: Fault, times: u32) {
+    let mut reg = REGISTRY.lock().unwrap();
+    let map = reg.get_or_insert_with(HashMap::new);
+    if times == 0 {
+        map.remove(point);
+    } else {
+        map.insert(point.to_string(), Armed { fault, times });
+    }
+    ANY_ARMED.store(!map.is_empty(), Ordering::Release);
+}
+
+/// Disarm every point (test hygiene; also what a clean server start
+/// does before applying its own config).
+pub fn reset() {
+    let mut reg = REGISTRY.lock().unwrap();
+    *reg = None;
+    ANY_ARMED.store(false, Ordering::Release);
+}
+
+/// Consult a fault point: no-op unless armed. A charged `Fail` returns
+/// the armed error; a charged `Delay` sleeps, then returns `Ok`. Each
+/// consult consumes one charge.
+pub fn hit(point: &str) -> Result<()> {
+    if !ANY_ARMED.load(Ordering::Acquire) {
+        return Ok(());
+    }
+    let action = {
+        let mut reg = REGISTRY.lock().unwrap();
+        let Some(map) = reg.as_mut() else { return Ok(()) };
+        let Some(armed) = map.get_mut(point) else { return Ok(()) };
+        armed.times -= 1;
+        let fault = armed.fault.clone();
+        if armed.times == 0 {
+            map.remove(point);
+            ANY_ARMED.store(!map.is_empty(), Ordering::Release);
+        }
+        fault
+    };
+    match action {
+        Fault::Fail { message } => bail!("injected fault at '{point}': {message}"),
+        Fault::Delay { duration } => {
+            std::thread::sleep(duration);
+            Ok(())
+        }
+    }
+}
+
+/// Remaining charges on a point (tests/diagnostics).
+pub fn charges(point: &str) -> u32 {
+    let reg = REGISTRY.lock().unwrap();
+    reg.as_ref()
+        .and_then(|map| map.get(point))
+        .map_or(0, |armed| armed.times)
+}
+
+/// Arm points from the `TENSORSERVE_FAULTS` env var, if set. Returns
+/// the number of points armed. A malformed spec is an error — faults
+/// silently not armed would make a chaos run vacuously green.
+pub fn arm_from_env() -> Result<usize> {
+    match std::env::var("TENSORSERVE_FAULTS") {
+        Ok(spec) => arm_from_spec(&spec),
+        Err(_) => Ok(0),
+    }
+}
+
+/// Parse and arm a `point=fault[:arg]:times;...` spec (the env var's
+/// format; also handy for tests).
+pub fn arm_from_spec(spec: &str) -> Result<usize> {
+    let mut armed = 0usize;
+    for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+        let Some((point, action)) = entry.split_once('=') else {
+            bail!("fault spec '{entry}': want point=action");
+        };
+        let parts: Vec<&str> = action.split(':').collect();
+        let (fault, times) = match parts.as_slice() {
+            ["fail", times] => (
+                Fault::Fail { message: "armed via TENSORSERVE_FAULTS".into() },
+                parse_times(entry, times)?,
+            ),
+            ["delay", dur, times] => (
+                Fault::Delay { duration: parse_duration(entry, dur)? },
+                parse_times(entry, times)?,
+            ),
+            _ => bail!("fault spec '{entry}': want fail:<times> or delay:<dur>:<times>"),
+        };
+        arm(point.trim(), fault, times);
+        armed += 1;
+    }
+    Ok(armed)
+}
+
+fn parse_times(entry: &str, s: &str) -> Result<u32> {
+    s.parse()
+        .map_err(|_| anyhow::anyhow!("fault spec '{entry}': bad count '{s}'"))
+}
+
+fn parse_duration(entry: &str, s: &str) -> Result<Duration> {
+    let (digits, unit) = s.split_at(s.find(|c: char| !c.is_ascii_digit()).unwrap_or(s.len()));
+    let n: u64 = digits
+        .parse()
+        .map_err(|_| anyhow::anyhow!("fault spec '{entry}': bad duration '{s}'"))?;
+    match unit {
+        "ms" | "" => Ok(Duration::from_millis(n)),
+        "s" => Ok(Duration::from_secs(n)),
+        "us" => Ok(Duration::from_micros(n)),
+        _ => bail!("fault spec '{entry}': unknown duration unit '{unit}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    // Tests share the process-global registry, so each uses unique
+    // point names and never calls reset() (which would race siblings).
+
+    #[test]
+    fn unarmed_points_are_free() {
+        assert!(hit("never:armed").is_ok());
+        assert_eq!(charges("never:armed"), 0);
+    }
+
+    #[test]
+    fn fail_charges_deplete() {
+        arm("t:fail", Fault::Fail { message: "boom".into() }, 2);
+        assert_eq!(charges("t:fail"), 2);
+        let e = hit("t:fail").unwrap_err();
+        assert!(e.to_string().contains("injected fault at 't:fail'"), "{e}");
+        assert!(e.to_string().contains("boom"), "{e}");
+        assert!(hit("t:fail").is_err());
+        // Dry: back to a no-op.
+        assert!(hit("t:fail").is_ok());
+        assert_eq!(charges("t:fail"), 0);
+    }
+
+    #[test]
+    fn delay_sleeps_then_proceeds() {
+        arm("t:delay", Fault::Delay { duration: Duration::from_millis(20) }, 1);
+        let t0 = Instant::now();
+        assert!(hit("t:delay").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        // Charge consumed: instant now.
+        let t0 = Instant::now();
+        assert!(hit("t:delay").is_ok());
+        assert!(t0.elapsed() < Duration::from_millis(10));
+    }
+
+    #[test]
+    fn rearm_replaces_and_zero_disarms() {
+        arm("t:rearm", Fault::Fail { message: "a".into() }, 5);
+        arm("t:rearm", Fault::Fail { message: "b".into() }, 1);
+        assert_eq!(charges("t:rearm"), 1);
+        let e = hit("t:rearm").unwrap_err();
+        assert!(e.to_string().contains('b'), "{e}");
+        arm("t:zero", Fault::Fail { message: "x".into() }, 3);
+        arm("t:zero", Fault::Fail { message: "x".into() }, 0);
+        assert!(hit("t:zero").is_ok());
+    }
+
+    #[test]
+    fn spec_parsing() {
+        let n = arm_from_spec("t:spec1=fail:2; t:spec2=delay:15ms:1").unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(charges("t:spec1"), 2);
+        assert_eq!(charges("t:spec2"), 1);
+        assert!(hit("t:spec1").is_err());
+        let t0 = Instant::now();
+        assert!(hit("t:spec2").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        // Drain spec1's second charge so sibling tests stay isolated.
+        assert!(hit("t:spec1").is_err());
+        // Malformed specs are loud errors, not silent no-ops.
+        assert!(arm_from_spec("nonsense").is_err());
+        assert!(arm_from_spec("p=fail:notanumber").is_err());
+        assert!(arm_from_spec("p=delay:10parsecs:1").is_err());
+        assert!(arm_from_spec("p=explode:1").is_err());
+        // Empty spec arms nothing.
+        assert_eq!(arm_from_spec("").unwrap(), 0);
+    }
+}

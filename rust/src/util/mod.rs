@@ -16,6 +16,7 @@ pub mod bench;
 pub mod check;
 pub mod clock;
 pub mod config;
+pub mod fault;
 pub mod json;
 pub mod logging;
 pub mod mem;

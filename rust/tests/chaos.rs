@@ -1,0 +1,313 @@
+//! Chaos tests: graceful degradation under injected faults, end to
+//! end through a real `ModelServer` (RPC + REST), no PJRT required.
+//!
+//! * A request whose deadline expires while queued behind a slow
+//!   device batch is dropped **before** execution (pinned via the
+//!   synthetic servable's execution counter) and answered
+//!   `DEADLINE_EXCEEDED` / HTTP 504.
+//! * Under saturation the admission layer sheds excess load with a
+//!   retryable `UNAVAILABLE` / HTTP 503 + `Retry-After`, and recovers
+//!   once the in-flight work drains.
+//! * A transiently failing load retries with backoff at the AVM level:
+//!   the previous version keeps serving throughout, the failure reason
+//!   is visible in ModelStatus mid-flight, and the new version
+//!   eventually comes up.
+//!
+//! The fault registry is process-global, so each test uses its own
+//! model name (`ddl`, `shed`, `flaky`) and never calls `reset()`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+use tensorserve::base::aspired::{AspiredVersionsCallback, ServableData};
+use tensorserve::base::error::ErrorKind;
+use tensorserve::base::servable::ServableId;
+use tensorserve::base::tensor::Tensor;
+use tensorserve::inference::ModelSpec;
+use tensorserve::lifecycle::basic_manager::VersionRequest;
+use tensorserve::rpc::client::RpcClient;
+use tensorserve::rpc::proto::{Request, Response};
+use tensorserve::runtime::artifacts::ArtifactSpec;
+use tensorserve::runtime::hlo_servable::{synthetic_loader, HloServable};
+use tensorserve::server::builder::ModelServer;
+use tensorserve::server::config::ServerConfig;
+use tensorserve::serving::{AdmissionConfig, BatchingConfig};
+use tensorserve::util::fault::{arm, charges, Fault};
+
+fn predict_req(model: &str, seed: f32) -> Request {
+    Request::Predict {
+        spec: ModelSpec::latest(model),
+        signature: String::new(),
+        inputs: vec![("x".into(), Tensor::matrix(vec![vec![seed; 8]]).unwrap())],
+    }
+}
+
+/// One raw HTTP/1.1 exchange (the test client can't set custom headers
+/// or see response headers, and both matter here). `Connection: close`
+/// lets us read to EOF. Returns `(head, body)`.
+fn raw_http(
+    addr: &str,
+    method: &str,
+    path: &str,
+    extra_headers: &[(&str, &str)],
+    body: &str,
+) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n",
+        body.len()
+    );
+    for (name, value) in extra_headers {
+        req.push_str(&format!("{name}: {value}\r\n"));
+    }
+    req.push_str("\r\n");
+    req.push_str(body);
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut resp = Vec::new();
+    stream.read_to_end(&mut resp).unwrap();
+    let text = String::from_utf8_lossy(&resp).into_owned();
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .unwrap_or_else(|| panic!("malformed response: {text:?}"));
+    (head.to_string(), body.to_string())
+}
+
+fn wait_until(timeout: Duration, what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn load_synthetic(server: &ModelServer, model: &str, version: u64) {
+    server
+        .avm()
+        .basic()
+        .load_and_wait(
+            ServableId::new(model, version),
+            synthetic_loader(ArtifactSpec::synthetic_multi_head(model, version, 8, 3)),
+            Duration::from_secs(30),
+        )
+        .unwrap();
+}
+
+fn executions(server: &ModelServer, model: &str) -> u64 {
+    server
+        .avm()
+        .handle::<HloServable>(model, VersionRequest::Latest)
+        .unwrap()
+        .executions()
+}
+
+/// A request that was viable at admission but expires while queued
+/// behind a slow device batch is answered `DEADLINE_EXCEEDED` without
+/// ever executing; an already-expired budget over REST is a 504.
+#[test]
+fn deadline_expired_in_queue_dropped_before_execution() {
+    let server = ModelServer::start(ServerConfig {
+        http_addr: Some("127.0.0.1:0".to_string()),
+        poll_interval: None,
+        artifacts_root: std::env::temp_dir(),
+        models: Vec::new(),
+        // One worker, one request per batch: a delayed execution
+        // deterministically queues everything behind it.
+        batching: BatchingConfig {
+            max_batch_size: 1,
+            batch_timeout: Duration::from_millis(1),
+            num_batch_threads: 1,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    load_synthetic(&server, "ddl", 1);
+
+    // Occupy the only worker: the next execution sleeps 600ms.
+    arm("exec:ddl", Fault::Delay { duration: Duration::from_millis(600) }, 1);
+    let addr = server.addr().to_string();
+    let blocker = std::thread::spawn(move || {
+        let mut c = RpcClient::connect(&addr).unwrap();
+        c.call_ok(&predict_req("ddl", 1.0)) // no deadline: waits out the delay
+    });
+    // Let the blocker reach the device before the deadlined request
+    // arrives (otherwise EDF would rightly serve the tighter deadline
+    // first).
+    std::thread::sleep(Duration::from_millis(150));
+
+    let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+    let t0 = Instant::now();
+    let err = client
+        .call_ok(&predict_req("ddl", 2.0).with_deadline_ms(100))
+        .expect_err("100ms budget behind a 600ms batch must expire");
+    assert_eq!(ErrorKind::of(&err), ErrorKind::DeadlineExceeded, "{err}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "expired request should be answered promptly, took {:?}",
+        t0.elapsed()
+    );
+    assert!(matches!(blocker.join().unwrap().unwrap(), Response::Predict { .. }));
+    // The blocker executed; the expired request never reached the
+    // device.
+    assert_eq!(executions(&server, "ddl"), 1);
+
+    // REST: an already-spent budget is refused with 504 before any
+    // device work.
+    let (head, body) = raw_http(
+        &server.http_addr().unwrap().to_string(),
+        "POST",
+        "/v1/models/ddl:predict",
+        &[("X-Request-Deadline-Ms", "0")],
+        &format!("{{\"instances\": [[{}]]}}", vec!["0.5"; 8].join(",")),
+    );
+    assert!(head.starts_with("HTTP/1.1 504 Gateway Timeout"), "{head}");
+    assert!(body.contains("error"), "{body}");
+    assert_eq!(executions(&server, "ddl"), 1);
+    server.stop();
+}
+
+/// With the global in-flight cap saturated by slow executions, excess
+/// load is shed — `UNAVAILABLE` over RPC, 503 + `Retry-After` over
+/// REST — and service resumes once the in-flight work drains.
+#[test]
+fn saturation_sheds_load_with_retry_hint_then_recovers() {
+    let server = ModelServer::start(ServerConfig {
+        http_addr: Some("127.0.0.1:0".to_string()),
+        poll_interval: None,
+        artifacts_root: std::env::temp_dir(),
+        models: Vec::new(),
+        admission: AdmissionConfig {
+            max_inflight: 2,
+            max_inflight_per_model: 0,
+            retry_after_ms: 1500,
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    load_synthetic(&server, "shed", 1);
+
+    // Two admitted requests hold their permits across an 800ms device
+    // delay, pinning the server at its cap.
+    arm("exec:shed", Fault::Delay { duration: Duration::from_millis(800) }, 2);
+    let pumps: Vec<_> = (0..2)
+        .map(|i| {
+            let addr = server.addr().to_string();
+            std::thread::spawn(move || {
+                let mut c = RpcClient::connect(&addr).unwrap();
+                c.call_ok(&predict_req("shed", i as f32))
+            })
+        })
+        .collect();
+    wait_until(Duration::from_secs(5), "both permits taken", || {
+        server.core().admission.inflight() == 2
+    });
+
+    // RPC probe: shed with a retryable kind naming the condition.
+    let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+    let err = client
+        .call_ok(&predict_req("shed", 9.0))
+        .expect_err("request over the in-flight cap must be shed");
+    assert_eq!(ErrorKind::of(&err), ErrorKind::Unavailable, "{err}");
+    assert!(err.to_string().contains("overloaded"), "{err}");
+
+    // REST probe: 503 with the configured Retry-After (1500ms rounds
+    // up to 2s).
+    let (head, body) = raw_http(
+        &server.http_addr().unwrap().to_string(),
+        "POST",
+        "/v1/models/shed:predict",
+        &[],
+        &format!("{{\"instances\": [[{}]]}}", vec!["0.5"; 8].join(",")),
+    );
+    assert!(head.starts_with("HTTP/1.1 503 Service Unavailable"), "{head}");
+    assert!(head.contains("Retry-After: 2"), "{head}");
+    assert!(body.contains("error"), "{body}");
+
+    // The saturating work itself was never harmed by the shedding.
+    for p in pumps {
+        assert!(matches!(p.join().unwrap().unwrap(), Response::Predict { .. }));
+    }
+    wait_until(Duration::from_secs(5), "permits released", || {
+        server.core().admission.inflight() == 0
+    });
+    // Recovered: the same request that was just shed now serves.
+    assert!(matches!(
+        client.call_ok(&predict_req("shed", 9.0)).unwrap(),
+        Response::Predict { .. }
+    ));
+    server.stop();
+}
+
+/// A load that fails transiently is retried with backoff by the AVM:
+/// the failure reason is visible in ModelStatus while parked, the
+/// previous version keeps serving the whole time, and the new version
+/// comes up once the fault clears.
+#[test]
+fn transient_load_failure_retries_while_old_version_serves() {
+    let server = ModelServer::start(ServerConfig {
+        poll_interval: None,
+        artifacts_root: std::env::temp_dir(),
+        models: Vec::new(),
+        load_retries: 3,
+        load_retry_backoff: Duration::from_millis(300),
+        ..Default::default()
+    })
+    .unwrap();
+    let aspire = |versions: &[u64]| {
+        let data = versions
+            .iter()
+            .map(|&v| {
+                ServableData::ok(
+                    ServableId::new("flaky", v),
+                    synthetic_loader(ArtifactSpec::synthetic_multi_head("flaky", v, 8, 3)),
+                )
+            })
+            .collect();
+        server.avm().set_aspired_versions("flaky", data);
+    };
+    // v1 through the real aspired path (the server's own reconcile
+    // ticker drives the load).
+    aspire(&[1]);
+    wait_until(Duration::from_secs(30), "v1 ready", || {
+        server.avm().basic().ready_versions("flaky") == vec![1]
+    });
+
+    // v2's artifact read fails twice, then succeeds.
+    arm("load:flaky", Fault::Fail { message: "transient artifact read".into() }, 2);
+    aspire(&[1, 2]);
+
+    // Mid-flight: v2 parks in Error with the reason readable off
+    // ModelStatus; v1 answers traffic while it waits out the backoff.
+    let status_of = |version: u64| -> Option<String> {
+        match server.core().handle(Request::ModelStatus { model: "flaky".into() }) {
+            Response::ModelStatus { versions } => versions
+                .into_iter()
+                .find(|(v, _)| *v == version)
+                .map(|(_, state)| state),
+            other => panic!("unexpected {other:?}"),
+        }
+    };
+    wait_until(Duration::from_secs(15), "v2 parked in error state", || {
+        status_of(2).is_some_and(|s| s.starts_with("error:") && s.contains("injected fault"))
+    });
+    let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+    assert!(matches!(
+        client.call_ok(&predict_req("flaky", 1.0)).unwrap(),
+        Response::Predict { .. }
+    ));
+
+    // Convergence: retries exhaust the armed charges and v2 comes up —
+    // with v1 ready at every observation in between.
+    wait_until(Duration::from_secs(30), "v2 ready after retries", || {
+        let ready = server.avm().basic().ready_versions("flaky");
+        assert!(ready.contains(&1), "v1 dropped out of serving: {ready:?}");
+        ready.contains(&2)
+    });
+    assert_eq!(charges("load:flaky"), 0, "retries should have consumed the fault");
+    assert!(matches!(
+        client.call_ok(&predict_req("flaky", 2.0)).unwrap(),
+        Response::Predict { .. }
+    ));
+    server.stop();
+}

@@ -38,6 +38,14 @@ cargo test -q --test http_gateway
 echo "==> cargo test -q --test serving_concurrency"
 cargo test -q --test serving_concurrency
 
+# Graceful degradation under injected faults: deadline-expired work
+# dropped before execution (504), load shedding at the admission cap
+# (503 + Retry-After), and lifecycle load retry with the old version
+# serving throughout. Named explicitly so a robustness regression is
+# its own failing step.
+echo "==> cargo test -q --test chaos"
+cargo test -q --test chaos
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "==> cargo fmt --check"
     cargo fmt --check
