@@ -1,0 +1,154 @@
+//! Experiment N1 — connection scaling: reactor vs threaded I/O plane.
+//!
+//! The reactor exists so connection count stops costing OS threads.
+//! This bench pins the claim with numbers: keep-alive Ping round trips
+//! (the pure net-plane path: framing → reactor → worker dispatch →
+//! reply flush, no device work) at 64 / 512 / 2048 concurrent
+//! connections, once over the epoll reactor and once over the legacy
+//! thread-per-connection loops, reporting req/s, p50/p99, and how many
+//! OS threads the server grew by under load.
+//!
+//! Emits BENCH_net.json for the perf trajectory.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tensorserve::net::sys::{process_thread_count, raise_nofile_limit};
+use tensorserve::net::{NetConfig, NetMode};
+use tensorserve::rpc::client::RpcClient;
+use tensorserve::rpc::proto::{Request, Response};
+use tensorserve::server::builder::ModelServer;
+use tensorserve::server::config::ServerConfig;
+use tensorserve::util::bench::{bench_duration, fmt_count, Table};
+use tensorserve::util::json::Json;
+use tensorserve::util::metrics::Histogram;
+
+const DRIVERS: usize = 8;
+
+fn server_with(mode: NetMode) -> Arc<ModelServer> {
+    ModelServer::start(ServerConfig {
+        poll_interval: None,
+        artifacts_root: std::env::temp_dir(),
+        models: Vec::new(),
+        net: NetConfig {
+            mode,
+            reactor_threads: 2,
+            worker_threads: 8,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// req/s + latency histogram + server thread growth for one
+/// (mode, connection-count) cell.
+fn run_cell(mode: NetMode, conns: usize, dur: Duration) -> (f64, u64, u64, usize) {
+    let server = server_with(mode);
+    let addr = server.addr().to_string();
+    let threads_idle = process_thread_count().unwrap_or(0);
+
+    // All connections up front, paced so the accept side keeps up with
+    // the listener backlog.
+    let mut clients = Vec::with_capacity(conns);
+    for i in 0..conns {
+        clients.push(RpcClient::connect(&addr).unwrap());
+        if i % 64 == 63 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    let threads_loaded = process_thread_count().unwrap_or(0);
+
+    // Each driver thread round-robins its share of the connections so
+    // every connection stays live keep-alive traffic for the whole
+    // window (DRIVERS requests in flight at a time).
+    let latency = Arc::new(Histogram::new());
+    let deadline = Instant::now() + dur;
+    let mut shards: Vec<Vec<RpcClient>> = (0..DRIVERS).map(|_| Vec::new()).collect();
+    for (i, c) in clients.into_iter().enumerate() {
+        shards[i % DRIVERS].push(c);
+    }
+    let handles: Vec<_> = shards
+        .into_iter()
+        .map(|mut shard| {
+            let latency = Arc::clone(&latency);
+            std::thread::spawn(move || -> u64 {
+                let mut count = 0u64;
+                let mut i = 0usize;
+                while Instant::now() < deadline {
+                    let c = &mut shard[i % shard.len()];
+                    i += 1;
+                    let t0 = Instant::now();
+                    let resp = c.call_ok(&Request::Ping).unwrap();
+                    latency.record_duration(t0.elapsed());
+                    assert!(matches!(resp, Response::Pong));
+                    count += 1;
+                }
+                count
+            })
+        })
+        .collect();
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    server.stop();
+
+    let qps = total as f64 / dur.as_secs_f64();
+    let (p50, _, p99, _) = latency.percentiles();
+    (qps, p50, p99, threads_loaded.saturating_sub(threads_idle))
+}
+
+fn main() {
+    tensorserve::util::logging::set_level(tensorserve::util::logging::Level::Error);
+    let dur = bench_duration(Duration::from_secs(2));
+    // Smoke mode is a compile-and-run guard: one tiny cell per mode.
+    let conn_counts: &[usize] = if tensorserve::util::bench::smoke() {
+        &[8]
+    } else {
+        &[64, 512, 2048]
+    };
+    // Client + server fds both live here: ~2 per connection.
+    let limit = raise_nofile_limit(8192);
+    let max_conns = (limit as usize / 2).saturating_sub(128);
+
+    let mut t = Table::new(
+        "N1: keep-alive Ping scaling, reactor vs thread-per-connection",
+        &["mode", "conns", "req/s", "p50", "p99", "server thread growth"],
+    );
+    let mut cells = Vec::new();
+    for &mode in &[NetMode::Reactor, NetMode::Threaded] {
+        for &conns in conn_counts {
+            if conns > max_conns {
+                println!("skipping {mode:?}/{conns}: nofile limit {limit}");
+                continue;
+            }
+            let (qps, p50, p99, grew) = run_cell(mode, conns, dur);
+            let mode_name = match mode {
+                NetMode::Reactor => "reactor",
+                NetMode::Threaded => "threaded",
+            };
+            t.row(vec![
+                mode_name.to_string(),
+                conns.to_string(),
+                fmt_count(qps),
+                tensorserve::util::metrics::fmt_nanos(p50),
+                tensorserve::util::metrics::fmt_nanos(p99),
+                grew.to_string(),
+            ]);
+            cells.push(Json::obj(vec![
+                ("mode", Json::str(mode_name)),
+                ("conns", Json::num(conns as f64)),
+                ("requests_per_sec", Json::num(qps)),
+                ("p50_ns", Json::num(p50 as f64)),
+                ("p99_ns", Json::num(p99 as f64)),
+                ("server_thread_growth", Json::num(grew as f64)),
+            ]));
+        }
+    }
+    t.print();
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("bench_net")),
+        ("driver_threads", Json::num(DRIVERS as f64)),
+        ("cells", Json::Arr(cells)),
+    ]);
+    tensorserve::util::bench::write_bench_json("BENCH_net.json", &json.to_string_pretty());
+}

@@ -1,9 +1,14 @@
-//! Minimal threaded HTTP/1.1 server — the REST gateway's front door.
+//! Minimal HTTP/1.1 server — the REST gateway's front door.
 //!
 //! Dependency-free by necessity (the offline crate set has no HTTP
-//! stack): an accept loop plus one handler thread per connection, the
-//! same shape as [`crate::rpc::server::RpcServer`]. Implements the
-//! slice of HTTP/1.1 a serving data plane needs:
+//! stack). By default the listener is a thin binding onto the shared
+//! epoll reactor ([`crate::net`]): connections are nonblocking state
+//! machines ([`crate::net::conn::HttpProto`] reuses this module's
+//! parser) and handlers run on the bounded worker pool. The original
+//! thread-per-connection accept loop survives behind
+//! `net.mode = "threaded"` (and as the automatic fallback where epoll
+//! is unavailable). Implements the slice of HTTP/1.1 a serving data
+//! plane needs:
 //!
 //! * **keep-alive** (default on 1.1, honoring `Connection:` headers),
 //!   so load generators and proxies reuse connections;
@@ -21,7 +26,12 @@
 //! [`super::codec`]); the handler here is a pure
 //! `HttpRequest → HttpResponse` function.
 
+use crate::net::conn::HttpProto;
+use crate::net::reactor::{ListenerId, Reactor};
+use crate::net::track::ConnTracker;
+use crate::net::{conn::ProtocolFactory, NetConfig, NetMetrics};
 use crate::util::json::Json;
+use crate::util::metrics::Registry;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -35,9 +45,10 @@ pub const MAX_HEADER_LINE: usize = 8 << 10;
 pub const MAX_HEADERS: usize = 100;
 /// Maximum request body, matching the RPC layer's frame cap.
 pub const MAX_BODY: usize = crate::rpc::frame::MAX_FRAME;
-/// Socket read timeout: bounds how long an idle keep-alive connection
-/// can pin its handler thread (and lets those threads observe
-/// shutdown instead of blocking in `read` forever).
+/// Default idle timeout (see `NetConfig::idle_timeout`): on the
+/// reactor path the sweep closes idle connections; on the threaded
+/// path it is the socket read timeout that bounds how long an idle
+/// keep-alive connection can pin its handler thread.
 pub const READ_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(60);
 
 /// A parsed request.
@@ -127,9 +138,9 @@ fn reason(status: u16) -> &'static str {
 
 /// Parse failure carrying the status the peer should see.
 #[derive(Debug)]
-struct HttpError {
-    status: u16,
-    message: String,
+pub(crate) struct HttpError {
+    pub(crate) status: u16,
+    pub(crate) message: String,
 }
 
 fn herr(status: u16, message: impl Into<String>) -> HttpError {
@@ -140,24 +151,110 @@ fn herr(status: u16, message: impl Into<String>) -> HttpError {
 /// threads, so shared state must be Sync.
 pub type HttpHandler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
 
+/// The canned over-`max_connections` reply: an immediate 503 with
+/// `Retry-After`, mirroring admission-control shedding.
+pub(crate) fn http_reject_bytes() -> Vec<u8> {
+    let resp = HttpResponse::error(503, "connection limit reached, retry against another replica")
+        .with_header("Retry-After", "1");
+    let mut buf = Vec::new();
+    render_response(&mut buf, &resp, false);
+    buf
+}
+
+enum Mode {
+    /// Thin binding onto an epoll reactor; `owned` reactors (built by
+    /// the standalone constructor) are stopped with the server.
+    Reactor {
+        stack: Arc<Reactor>,
+        listener: ListenerId,
+        owned: bool,
+    },
+    /// Legacy thread-per-connection accept loop.
+    Threaded {
+        shutdown: Arc<AtomicBool>,
+        accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+        conns: Arc<ConnTracker>,
+    },
+}
+
 pub struct HttpServer {
     addr: SocketAddr,
-    shutdown: Arc<AtomicBool>,
-    accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
     requests_served: Arc<AtomicU64>,
+    mode: Mode,
+    stopped: AtomicBool,
 }
 
 impl HttpServer {
     /// Bind and serve `handler` on `addr` (port 0 = ephemeral; read the
-    /// bound address back from [`HttpServer::addr`]).
+    /// bound address back from [`HttpServer::addr`]). Runs on a private
+    /// single-thread reactor (default [`NetConfig`]); falls back to the
+    /// threaded accept loop where epoll is unavailable.
     pub fn start(addr: &str, handler: HttpHandler) -> anyhow::Result<Arc<Self>> {
+        let cfg = NetConfig::default();
+        match Reactor::start(&cfg, NetMetrics::register(&Registry::new())) {
+            Ok(stack) => Self::start_on(addr, handler, &stack, true),
+            Err(e) => {
+                crate::log_warn!("epoll reactor unavailable ({e}); using threaded listener");
+                Self::start_threaded(addr, handler, &cfg)
+            }
+        }
+    }
+
+    /// Bind onto a shared reactor (the assembled server's I/O plane).
+    /// `stop()` closes this listener only; the reactor outlives it.
+    pub fn start_shared(
+        addr: &str,
+        handler: HttpHandler,
+        stack: &Arc<Reactor>,
+    ) -> anyhow::Result<Arc<Self>> {
+        Self::start_on(addr, handler, stack, false)
+    }
+
+    fn start_on(
+        addr: &str,
+        handler: HttpHandler,
+        stack: &Arc<Reactor>,
+        owned: bool,
+    ) -> anyhow::Result<Arc<Self>> {
+        let listener = TcpListener::bind(addr)?;
+        let requests_served = Arc::new(AtomicU64::new(0));
+        let (make_handler, make_served) = (Arc::clone(&handler), Arc::clone(&requests_served));
+        let factory = ProtocolFactory {
+            label: "http",
+            make: Box::new(move || {
+                Box::new(HttpProto::new(Arc::clone(&make_handler), Arc::clone(&make_served)))
+            }),
+            reject: http_reject_bytes(),
+        };
+        let (listener, local) = stack.add_listener(listener, factory)?;
+        crate::log_info!("http server listening on {local} (reactor)");
+        Ok(Arc::new(HttpServer {
+            addr: local,
+            requests_served,
+            mode: Mode::Reactor { stack: Arc::clone(stack), listener, owned },
+            stopped: AtomicBool::new(false),
+        }))
+    }
+
+    /// Legacy thread-per-connection listener (`net.mode = "threaded"`
+    /// and the non-epoll fallback). `cfg` supplies the idle/read
+    /// timeout and the `max_connections` gate.
+    pub fn start_threaded(
+        addr: &str,
+        handler: HttpHandler,
+        cfg: &NetConfig,
+    ) -> anyhow::Result<Arc<Self>> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let requests_served = Arc::new(AtomicU64::new(0));
+        let conns = Arc::new(ConnTracker::new());
 
         let accept_shutdown = Arc::clone(&shutdown);
         let accept_counter = Arc::clone(&requests_served);
+        let accept_conns = Arc::clone(&conns);
+        let idle_timeout = cfg.idle_timeout;
+        let max_connections = cfg.max_connections;
         let accept_thread = std::thread::Builder::new()
             .name(format!("http-accept-{}", local.port()))
             .spawn(move || {
@@ -166,15 +263,30 @@ impl HttpServer {
                         return;
                     }
                     match stream {
-                        Ok(stream) => {
+                        Ok(mut stream) => {
+                            if max_connections > 0 && accept_conns.len() >= max_connections {
+                                let _ = stream.write_all(&http_reject_bytes());
+                                continue;
+                            }
                             let handler = Arc::clone(&handler);
                             let counter = Arc::clone(&accept_counter);
                             let sd = Arc::clone(&accept_shutdown);
-                            let _ = std::thread::Builder::new()
+                            // Track before spawn so stop() can shut the
+                            // socket down and join the thread instead of
+                            // stranding it (detached-spawn bug).
+                            let id = accept_conns.register(&stream);
+                            let tracker = Arc::clone(&accept_conns);
+                            let spawned = std::thread::Builder::new()
                                 .name("http-conn".to_string())
                                 .spawn(move || {
-                                    Self::serve_connection(stream, handler, counter, sd)
+                                    Self::serve_connection(stream, handler, counter, sd, idle_timeout);
+                                    if let Some(id) = id {
+                                        tracker.deregister(id);
+                                    }
                                 });
+                            if let (Some(id), Ok(handle)) = (id, spawned) {
+                                accept_conns.attach(id, handle);
+                            }
                         }
                         Err(e) => {
                             crate::log_warn!("http accept error: {e}");
@@ -183,12 +295,16 @@ impl HttpServer {
                 }
             })?;
 
-        crate::log_info!("http server listening on {local}");
+        crate::log_info!("http server listening on {local} (threaded)");
         Ok(Arc::new(HttpServer {
             addr: local,
-            shutdown,
-            accept_thread: Mutex::new(Some(accept_thread)),
             requests_served,
+            mode: Mode::Threaded {
+                shutdown,
+                accept_thread: Mutex::new(Some(accept_thread)),
+                conns,
+            },
+            stopped: AtomicBool::new(false),
         }))
     }
 
@@ -197,12 +313,13 @@ impl HttpServer {
         handler: HttpHandler,
         counter: Arc<AtomicU64>,
         shutdown: Arc<AtomicBool>,
+        idle_timeout: std::time::Duration,
     ) {
         let _ = stream.set_nodelay(true);
-        // Idle connections wake from `read` every READ_TIMEOUT: they
+        // Idle connections wake from `read` every idle_timeout: they
         // either observe shutdown or are dropped, so `stop()` never
         // strands a thread blocked on a silent keep-alive peer.
-        let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+        let _ = stream.set_read_timeout(Some(idle_timeout));
         let mut reader = BufReader::new(stream);
         // Per-connection scratch for the assembled response: one
         // allocation reused across every request on this connection.
@@ -275,18 +392,32 @@ impl HttpServer {
         self.requests_served.load(Ordering::Relaxed)
     }
 
-    /// Stop accepting. In-flight connections finish their current
-    /// request and exit on the next read; idle keep-alive connections
-    /// exit within [`READ_TIMEOUT`] (their threads wake from `read`
-    /// and observe the shutdown flag).
+    /// Stop accepting and release every connection. On the reactor
+    /// path the listener closes and its connections are closed (idle
+    /// ones now, in-flight ones after their reply flushes); a
+    /// standalone server also stops its private reactor, which joins
+    /// all threads. On the threaded path live connection sockets are
+    /// shut down and their threads joined.
     pub fn stop(&self) {
-        if self.shutdown.swap(true, Ordering::SeqCst) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
             return;
         }
-        // Poke the accept loop awake.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.lock().unwrap().take() {
-            let _ = t.join();
+        match &self.mode {
+            Mode::Reactor { stack, listener, owned } => {
+                stack.close_listener(*listener);
+                if *owned {
+                    stack.stop();
+                }
+            }
+            Mode::Threaded { shutdown, accept_thread, conns } => {
+                shutdown.store(true, Ordering::SeqCst);
+                // Poke the accept loop awake.
+                let _ = TcpStream::connect(self.addr);
+                if let Some(t) = accept_thread.lock().unwrap().take() {
+                    let _ = t.join();
+                }
+                conns.stop_all();
+            }
         }
     }
 }
@@ -336,8 +467,10 @@ fn read_line_limited<R: BufRead>(r: &mut R, cap: usize) -> Result<Option<String>
 
 /// Read and parse the request line + headers; the body stays unread
 /// (`req.body` comes back empty). `Ok(None)` = clean EOF before a
-/// request started (keep-alive close).
-fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpRequest>, HttpError> {
+/// request started (keep-alive close). Shared with the reactor's
+/// [`crate::net::conn::HttpProto`], which replays accumulated bytes
+/// through a `Cursor`.
+pub(crate) fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpRequest>, HttpError> {
     // Tolerate stray CRLF between pipelined requests (RFC 9112 §2.2).
     let mut line = loop {
         match read_line_limited(r, MAX_REQUEST_LINE)? {
@@ -384,11 +517,20 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpRequest>, HttpError> {
     Ok(Some(HttpRequest { method, path, query, headers, body: Vec::new() }))
 }
 
-/// Read the request body according to its framing headers.
-fn read_body<R: BufRead>(r: &mut R, req: &HttpRequest) -> Result<Vec<u8>, HttpError> {
-    // Ambiguous framing is rejected, never resolved (RFC 9112 §6):
-    // a proxy and this server disagreeing on where a request ends is
-    // the request-smuggling precondition.
+/// How a request's body is delimited, per its framing headers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum BodyFraming {
+    Empty,
+    Length(usize),
+    Chunked,
+}
+
+/// Decide the body framing from the head alone. Ambiguous framing is
+/// rejected, never resolved (RFC 9112 §6): a proxy and this server
+/// disagreeing on where a request ends is the request-smuggling
+/// precondition. Over-`MAX_BODY` declared lengths are rejected here,
+/// before any body byte is read.
+pub(crate) fn body_framing(req: &HttpRequest) -> Result<BodyFraming, HttpError> {
     let lengths: Vec<&str> = req
         .headers
         .iter()
@@ -405,10 +547,10 @@ fn read_body<R: BufRead>(r: &mut R, req: &HttpRequest) -> Result<Vec<u8>, HttpEr
         if !te.eq_ignore_ascii_case("chunked") {
             return Err(herr(501, format!("unsupported transfer-encoding {te:?}")));
         }
-        return read_chunked(r);
+        return Ok(BodyFraming::Chunked);
     }
     let len = match lengths.first() {
-        None => return Ok(Vec::new()),
+        None => return Ok(BodyFraming::Empty),
         Some(v) => v
             .parse::<usize>()
             .map_err(|_| herr(400, format!("bad content-length {v:?}")))?,
@@ -416,6 +558,16 @@ fn read_body<R: BufRead>(r: &mut R, req: &HttpRequest) -> Result<Vec<u8>, HttpEr
     if len > MAX_BODY {
         return Err(herr(413, format!("body of {len} bytes exceeds {MAX_BODY}")));
     }
+    Ok(BodyFraming::Length(len))
+}
+
+/// Read the request body according to its framing headers.
+fn read_body<R: BufRead>(r: &mut R, req: &HttpRequest) -> Result<Vec<u8>, HttpError> {
+    let len = match body_framing(req)? {
+        BodyFraming::Empty => return Ok(Vec::new()),
+        BodyFraming::Chunked => return read_chunked(r),
+        BodyFraming::Length(len) => len,
+    };
     // Grow as bytes actually arrive: an attacker claiming a 64 MiB
     // Content-Length and then stalling must not pin 64 MiB per
     // connection up front.
@@ -472,7 +624,7 @@ fn read_chunked<R: BufRead>(r: &mut R) -> Result<Vec<u8>, HttpError> {
     }
 }
 
-fn wants_keep_alive(req: &HttpRequest) -> bool {
+pub(crate) fn wants_keep_alive(req: &HttpRequest) -> bool {
     let default = req.header(":version") != Some("HTTP/1.0");
     match req.header("connection") {
         Some(v) if v.eq_ignore_ascii_case("close") => false,
@@ -481,13 +633,10 @@ fn wants_keep_alive(req: &HttpRequest) -> bool {
     }
 }
 
-/// Assemble and send one response in a single `write` syscall.
-fn write_response(
-    reader: &mut BufReader<TcpStream>,
-    buf: &mut Vec<u8>,
-    resp: &HttpResponse,
-    keep_alive: bool,
-) -> std::io::Result<()> {
+/// Render a full response (status line + framing headers + body) into
+/// `buf`, which is cleared first. Shared by the threaded write path
+/// and the reactor's worker-side encoding.
+pub(crate) fn render_response(buf: &mut Vec<u8>, resp: &HttpResponse, keep_alive: bool) {
     buf.clear();
     // write! straight into the scratch Vec: no intermediate header
     // String on the per-request path (Vec<u8>'s io::Write is
@@ -506,6 +655,16 @@ fn write_response(
     }
     buf.extend_from_slice(b"\r\n");
     buf.extend_from_slice(&resp.body);
+}
+
+/// Assemble and send one response in a single `write` syscall.
+fn write_response(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    resp: &HttpResponse,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    render_response(buf, resp, keep_alive);
     let stream = reader.get_mut();
     stream.write_all(buf)?;
     stream.flush()

@@ -34,6 +34,7 @@ pub mod batching;
 pub mod http;
 pub mod inference;
 pub mod lifecycle;
+pub mod net;
 pub mod rpc;
 pub mod runtime;
 pub mod server;

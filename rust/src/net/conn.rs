@@ -1,0 +1,660 @@
+//! Per-connection protocol state machines for the reactor.
+//!
+//! The reactor owns sockets and buffers; a [`ConnProtocol`] owns only
+//! the *parse state* of its connection. On every read the reactor
+//! appends bytes to the connection's receive buffer and calls
+//! [`ConnProtocol::advance`], which consumes complete requests from
+//! the front of the buffer and tells the reactor what to do next:
+//! wait for more bytes, write interim bytes (HTTP `100 Continue`),
+//! answer a protocol error directly, or hand a ready request to the
+//! worker pool as a [`Step::Dispatch`] closure. The closure runs the
+//! real handler off the reactor thread and returns the fully encoded
+//! reply bytes, so the reactor only ever does `read`/`write`.
+//!
+//! Both machines resume cleanly from arbitrary byte boundaries
+//! (partial frame headers, a request line split mid-token, chunked
+//! bodies trickling in) — that is the whole point of the reactor:
+//! slow peers cost a buffer, not a thread.
+
+use crate::http::server::{
+    body_framing, read_head, render_response, wants_keep_alive, BodyFraming, HttpHandler,
+    HttpRequest, HttpResponse, MAX_HEADERS, MAX_HEADER_LINE, MAX_REQUEST_LINE,
+};
+use crate::rpc::frame::{HEADER, MAX_FRAME};
+use crate::rpc::proto::{Request, Response};
+use crate::rpc::server::Handler;
+use std::io::Cursor;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Encoded reply bytes plus the close decision for after the flush.
+pub struct Reply {
+    pub bytes: Vec<u8>,
+    pub close: bool,
+}
+
+/// What the reactor should do after one `advance` call.
+pub enum Step {
+    /// Incomplete request: wait for more bytes.
+    NeedMore,
+    /// Write these bytes now and keep parsing (HTTP `100 Continue`).
+    Interim(Vec<u8>),
+    /// A complete request: run this on a worker; it returns the reply.
+    Dispatch(Box<dyn FnOnce() -> Reply + Send>),
+    /// Protocol-level reply produced without dispatching (parse
+    /// errors, limit violations).
+    Reply(Reply),
+    /// Drop the connection without writing anything.
+    Close,
+}
+
+/// Protocol state machine; one per live connection.
+pub trait ConnProtocol: Send {
+    /// Consume what's consumable from the front of `rbuf`; the
+    /// reactor calls this after reads, after flushes, and again after
+    /// every non-`NeedMore` step (pipelined requests).
+    fn advance(&mut self, rbuf: &mut Vec<u8>) -> Step;
+}
+
+/// How a listener builds per-connection machines, plus the canned
+/// bytes an over-`max_connections` connect is answered with.
+pub struct ProtocolFactory {
+    /// Metrics/log label: "rpc" or "http".
+    pub label: &'static str,
+    pub make: Box<dyn Fn() -> Box<dyn ConnProtocol> + Send + Sync>,
+    /// Written (best effort, once) to a rejected connection before it
+    /// is dropped: a framed `Unavailable` / an HTTP 503.
+    pub reject: Vec<u8>,
+}
+
+// ------------------------------------------------------------- RPC
+
+/// Length-prefixed RPC framing: `[u32 le len][payload]`.
+pub struct RpcProto {
+    handler: Handler,
+    served: Arc<AtomicU64>,
+}
+
+impl RpcProto {
+    pub fn new(handler: Handler, served: Arc<AtomicU64>) -> RpcProto {
+        RpcProto { handler, served }
+    }
+}
+
+/// Encode a response with its frame header already patched (the
+/// reactor writes buffers as-is; there is no later `write_framed` to
+/// fix the length up).
+fn framed(resp: &Response) -> Vec<u8> {
+    let mut out = Vec::new();
+    resp.encode_framed_into(&mut out);
+    let payload = (out.len() - HEADER) as u32;
+    out[..HEADER].copy_from_slice(&payload.to_le_bytes());
+    out
+}
+
+/// The canned over-limit reply for RPC listeners: a retryable
+/// `Unavailable`, mirroring admission-control shedding.
+pub fn rpc_reject_bytes() -> Vec<u8> {
+    framed(&Response::Error {
+        kind: crate::base::error::ErrorKind::Unavailable,
+        message: "connection limit reached, retry against another replica".into(),
+    })
+}
+
+impl ConnProtocol for RpcProto {
+    fn advance(&mut self, rbuf: &mut Vec<u8>) -> Step {
+        if rbuf.len() < HEADER {
+            return Step::NeedMore;
+        }
+        let len = u32::from_le_bytes([rbuf[0], rbuf[1], rbuf[2], rbuf[3]]) as usize;
+        if len > MAX_FRAME {
+            // The legacy loop just hung up; answering first tells the
+            // peer *why* before the close.
+            return Step::Reply(Reply {
+                bytes: framed(&Response::Error {
+                    kind: crate::base::error::ErrorKind::InvalidArgument,
+                    message: format!("incoming frame too large: {len} bytes"),
+                }),
+                close: true,
+            });
+        }
+        if rbuf.len() < HEADER + len {
+            return Step::NeedMore;
+        }
+        let payload = rbuf[HEADER..HEADER + len].to_vec();
+        rbuf.drain(..HEADER + len);
+        let handler = Arc::clone(&self.handler);
+        let served = Arc::clone(&self.served);
+        Step::Dispatch(Box::new(move || {
+            let response = match Request::decode(&payload) {
+                Ok(req) => handler(req),
+                Err(e) => Response::Error {
+                    kind: crate::base::error::ErrorKind::InvalidArgument,
+                    message: format!("bad request: {e}"),
+                },
+            };
+            served.fetch_add(1, Ordering::Relaxed);
+            let bytes = framed(&response);
+            // Sole-owner output tensors go back to the pool once their
+            // bytes are serialized — same contract as the legacy loop.
+            response.recycle_buffers();
+            Reply { bytes, close: false }
+        }))
+    }
+}
+
+// ------------------------------------------------------------ HTTP
+
+/// Head bytes the buffer may accumulate before we give up with a 431:
+/// the request line plus every header at its individual cap.
+const MAX_HEAD: usize = MAX_REQUEST_LINE + (MAX_HEADERS + 1) * (MAX_HEADER_LINE + 2) + 4;
+/// Cap on a chunk-size line (hex digits + extensions), matching the
+/// legacy reader's limit.
+const MAX_CHUNK_LINE: usize = 1024;
+
+/// HTTP/1.1 keep-alive parsing, one request in flight at a time.
+pub struct HttpProto {
+    handler: HttpHandler,
+    served: Arc<AtomicU64>,
+    state: HttpState,
+}
+
+enum HttpState {
+    /// Accumulating request line + headers.
+    Head,
+    /// Head parsed; accumulating the body.
+    Body {
+        req: HttpRequest,
+        framing: BodyState,
+        keep_alive: bool,
+        sent_continue: bool,
+        expects_continue: bool,
+    },
+}
+
+enum BodyState {
+    Length(usize),
+    Chunked(ChunkMachine),
+}
+
+impl HttpProto {
+    pub fn new(handler: HttpHandler, served: Arc<AtomicU64>) -> HttpProto {
+        HttpProto { handler, served, state: HttpState::Head }
+    }
+
+    fn dispatch(&mut self, mut req: HttpRequest, body: Vec<u8>, keep_alive: bool) -> Step {
+        req.body = body;
+        let handler = Arc::clone(&self.handler);
+        let served = Arc::clone(&self.served);
+        Step::Dispatch(Box::new(move || {
+            let resp = handler(&req);
+            served.fetch_add(1, Ordering::Relaxed);
+            let mut bytes = Vec::new();
+            render_response(&mut bytes, &resp, keep_alive);
+            Reply { bytes, close: !keep_alive }
+        }))
+    }
+}
+
+/// Render an error response; HTTP parse errors always close (the
+/// byte stream is no longer in a known state).
+fn http_error(status: u16, message: &str) -> Step {
+    let resp = HttpResponse::error(status, message);
+    let mut bytes = Vec::new();
+    render_response(&mut bytes, &resp, false);
+    Step::Reply(Reply { bytes, close: true })
+}
+
+/// Index one past the head terminator (`\r\n\r\n`, tolerating bare-LF
+/// line endings the line parser also accepts), or `None`.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            match buf.get(i + 1) {
+                Some(b'\n') => return Some(i + 2),
+                Some(b'\r') if buf.get(i + 2) == Some(&b'\n') => return Some(i + 3),
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+impl ConnProtocol for HttpProto {
+    fn advance(&mut self, rbuf: &mut Vec<u8>) -> Step {
+        loop {
+            match &mut self.state {
+                HttpState::Head => {
+                    let Some(end) = find_head_end(rbuf) else {
+                        if rbuf.len() > MAX_HEAD {
+                            return http_error(431, "request head too large");
+                        }
+                        return Step::NeedMore;
+                    };
+                    let mut cursor = Cursor::new(&rbuf[..end]);
+                    let parsed = read_head(&mut cursor);
+                    let consumed = cursor.position() as usize;
+                    rbuf.drain(..consumed.max(end).min(rbuf.len()));
+                    let req = match parsed {
+                        Ok(Some(req)) => req,
+                        // Only stray blank lines before a request
+                        // started (RFC 9112 §2.2): keep waiting.
+                        Ok(None) => continue,
+                        Err(e) => return http_error(e.status, &e.message),
+                    };
+                    let keep_alive = wants_keep_alive(&req);
+                    let framing = match body_framing(&req) {
+                        Ok(f) => f,
+                        Err(e) => return http_error(e.status, &e.message),
+                    };
+                    let expects_continue = req
+                        .header("expect")
+                        .map(|v| v.eq_ignore_ascii_case("100-continue"))
+                        .unwrap_or(false);
+                    match framing {
+                        BodyFraming::Empty => {
+                            return self.dispatch(req, Vec::new(), keep_alive);
+                        }
+                        BodyFraming::Length(n) => {
+                            self.state = HttpState::Body {
+                                req,
+                                framing: BodyState::Length(n),
+                                keep_alive,
+                                sent_continue: false,
+                                expects_continue,
+                            };
+                        }
+                        BodyFraming::Chunked => {
+                            self.state = HttpState::Body {
+                                req,
+                                framing: BodyState::Chunked(ChunkMachine::new()),
+                                keep_alive,
+                                sent_continue: false,
+                                expects_continue,
+                            };
+                        }
+                    }
+                }
+                HttpState::Body { framing, sent_continue, expects_continue, .. } => {
+                    // The framing checks passed, so a waiting client
+                    // may be told to send its body (RFC 9110 §10.1.1).
+                    if *expects_continue && !*sent_continue {
+                        *sent_continue = true;
+                        return Step::Interim(b"HTTP/1.1 100 Continue\r\n\r\n".to_vec());
+                    }
+                    let body = match framing {
+                        BodyState::Length(n) => {
+                            if rbuf.len() < *n {
+                                return Step::NeedMore;
+                            }
+                            let body = rbuf[..*n].to_vec();
+                            rbuf.drain(..*n);
+                            body
+                        }
+                        BodyState::Chunked(machine) => match machine.feed(rbuf) {
+                            Ok(true) => std::mem::take(&mut machine.body),
+                            Ok(false) => return Step::NeedMore,
+                            Err((status, msg)) => return http_error(status, &msg),
+                        },
+                    };
+                    let HttpState::Body { req, keep_alive, .. } =
+                        std::mem::replace(&mut self.state, HttpState::Head)
+                    else {
+                        unreachable!()
+                    };
+                    return self.dispatch(req, body, keep_alive);
+                }
+            }
+        }
+    }
+}
+
+/// Incremental chunked-transfer decoder. Consumes decoded bytes from
+/// the front of the receive buffer as they arrive, so a trickling
+/// upload is O(bytes), never a per-read reparse.
+struct ChunkMachine {
+    body: Vec<u8>,
+    phase: ChunkPhase,
+}
+
+enum ChunkPhase {
+    /// Expecting a `SIZE[;ext]\r\n` line.
+    Size,
+    /// Copying `remaining` data bytes into `body`.
+    Data { remaining: usize },
+    /// Expecting the `\r\n` after a chunk's data.
+    DataCrlf,
+    /// Expecting (ignored) trailer lines until the blank line.
+    Trailers,
+}
+
+/// Pop one `\n`-terminated line (CRLF stripped) off the front of
+/// `buf`. `Err(())` = no complete line yet.
+fn take_line(buf: &mut Vec<u8>, cap: usize) -> Result<Option<String>, ()> {
+    match buf.iter().position(|&b| b == b'\n') {
+        Some(nl) => {
+            let mut line: Vec<u8> = buf.drain(..nl + 1).collect();
+            line.pop();
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            if line.len() > cap {
+                return Ok(None); // caller maps to an error
+            }
+            Ok(Some(String::from_utf8_lossy(&line).into_owned()))
+        }
+        None if buf.len() > cap + 2 => Ok(None),
+        None => Err(()),
+    }
+}
+
+impl ChunkMachine {
+    fn new() -> ChunkMachine {
+        ChunkMachine { body: Vec::new(), phase: ChunkPhase::Size }
+    }
+
+    /// Consume what's available. `Ok(true)` = body complete (in
+    /// `self.body`); `Ok(false)` = need more bytes.
+    fn feed(&mut self, rbuf: &mut Vec<u8>) -> Result<bool, (u16, String)> {
+        loop {
+            match &mut self.phase {
+                ChunkPhase::Size => {
+                    let line = match take_line(rbuf, MAX_CHUNK_LINE) {
+                        Err(()) => return Ok(false),
+                        Ok(None) => {
+                            return Err((431, format!("chunk-size line exceeds {MAX_CHUNK_LINE} bytes")))
+                        }
+                        Ok(Some(l)) => l,
+                    };
+                    // Chunk extensions after ';' are allowed, ignored.
+                    let size_str = line.split(';').next().unwrap_or("").trim();
+                    let size = usize::from_str_radix(size_str, 16)
+                        .map_err(|_| (400, format!("bad chunk size {size_str:?}")))?;
+                    if self.body.len().saturating_add(size) > crate::http::server::MAX_BODY {
+                        return Err((
+                            413,
+                            format!("chunked body exceeds {} bytes", crate::http::server::MAX_BODY),
+                        ));
+                    }
+                    self.phase = if size == 0 {
+                        ChunkPhase::Trailers
+                    } else {
+                        ChunkPhase::Data { remaining: size }
+                    };
+                }
+                ChunkPhase::Data { remaining } => {
+                    if rbuf.is_empty() {
+                        return Ok(false);
+                    }
+                    let take = (*remaining).min(rbuf.len());
+                    self.body.extend_from_slice(&rbuf[..take]);
+                    rbuf.drain(..take);
+                    *remaining -= take;
+                    if *remaining == 0 {
+                        self.phase = ChunkPhase::DataCrlf;
+                    }
+                }
+                ChunkPhase::DataCrlf => {
+                    if rbuf.len() < 2 {
+                        return Ok(false);
+                    }
+                    if &rbuf[..2] != b"\r\n" {
+                        return Err((400, "chunk missing CRLF terminator".into()));
+                    }
+                    rbuf.drain(..2);
+                    self.phase = ChunkPhase::Size;
+                }
+                ChunkPhase::Trailers => {
+                    let line = match take_line(rbuf, MAX_HEADER_LINE) {
+                        Err(()) => return Ok(false),
+                        Ok(None) => {
+                            return Err((431, format!("trailer line exceeds {MAX_HEADER_LINE} bytes")))
+                        }
+                        Ok(Some(l)) => l,
+                    };
+                    if line.is_empty() {
+                        return Ok(true);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::base::error::ErrorKind;
+
+    fn rpc_proto(counter: &Arc<AtomicU64>) -> RpcProto {
+        RpcProto::new(
+            Arc::new(|req| match req {
+                Request::Ping => Response::Pong,
+                _ => Response::Error { kind: ErrorKind::Internal, message: "unsupported".into() },
+            }),
+            Arc::clone(counter),
+        )
+    }
+
+    fn run(step: Step) -> Reply {
+        match step {
+            Step::Dispatch(f) => f(),
+            _ => panic!("expected a dispatch"),
+        }
+    }
+
+    #[test]
+    fn rpc_frame_resumes_across_partial_reads() {
+        let served = Arc::new(AtomicU64::new(0));
+        let mut p = rpc_proto(&served);
+        let mut frame = Vec::new();
+        Request::Ping.encode_framed_into(&mut frame);
+        let len = (frame.len() - HEADER) as u32;
+        frame[..HEADER].copy_from_slice(&len.to_le_bytes());
+
+        let mut rbuf = Vec::new();
+        // Byte-at-a-time delivery: NeedMore until the frame completes.
+        for (i, b) in frame.iter().enumerate() {
+            rbuf.push(*b);
+            if i + 1 < frame.len() {
+                assert!(matches!(p.advance(&mut rbuf), Step::NeedMore));
+            }
+        }
+        let reply = run(p.advance(&mut rbuf));
+        assert!(!reply.close);
+        let resp = Response::decode(&reply.bytes[HEADER..]).unwrap();
+        assert_eq!(resp, Response::Pong);
+        assert!(rbuf.is_empty());
+        assert_eq!(served.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn rpc_pipelined_frames_dispatch_back_to_back() {
+        let served = Arc::new(AtomicU64::new(0));
+        let mut p = rpc_proto(&served);
+        let mut one = Vec::new();
+        Request::Ping.encode_framed_into(&mut one);
+        let len = (one.len() - HEADER) as u32;
+        one[..HEADER].copy_from_slice(&len.to_le_bytes());
+        let mut rbuf = [one.clone(), one].concat();
+        for _ in 0..2 {
+            let reply = run(p.advance(&mut rbuf));
+            assert_eq!(Response::decode(&reply.bytes[HEADER..]).unwrap(), Response::Pong);
+        }
+        assert!(rbuf.is_empty());
+        assert!(matches!(p.advance(&mut rbuf), Step::NeedMore));
+    }
+
+    #[test]
+    fn rpc_oversized_frame_answered_then_closed() {
+        let served = Arc::new(AtomicU64::new(0));
+        let mut p = rpc_proto(&served);
+        let mut rbuf = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        match p.advance(&mut rbuf) {
+            Step::Reply(r) => {
+                assert!(r.close);
+                let resp = Response::decode(&r.bytes[HEADER..]).unwrap();
+                assert!(matches!(resp, Response::Error { kind: ErrorKind::InvalidArgument, .. }));
+            }
+            _ => panic!("expected an error reply"),
+        }
+    }
+
+    fn http_proto(served: &Arc<AtomicU64>) -> HttpProto {
+        HttpProto::new(
+            Arc::new(|req: &HttpRequest| {
+                HttpResponse::text(200, &format!("{} {} {}", req.method, req.path, req.body.len()))
+            }),
+            Arc::clone(served),
+        )
+    }
+
+    fn reply_text(reply: &Reply) -> String {
+        String::from_utf8_lossy(&reply.bytes).into_owned()
+    }
+
+    #[test]
+    fn http_request_split_at_arbitrary_points() {
+        let served = Arc::new(AtomicU64::new(0));
+        let mut p = http_proto(&served);
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        let mut rbuf = Vec::new();
+        let mut got = None;
+        for b in raw.iter() {
+            rbuf.push(*b);
+            match p.advance(&mut rbuf) {
+                Step::NeedMore => {}
+                Step::Dispatch(f) => {
+                    got = Some(f());
+                    break;
+                }
+                _ => panic!("unexpected step"),
+            }
+        }
+        let reply = got.expect("request never dispatched");
+        let text = reply_text(&reply);
+        assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
+        assert!(text.ends_with("POST /x 5"), "{text}");
+        assert!(!reply.close); // HTTP/1.1 defaults to keep-alive
+    }
+
+    #[test]
+    fn http_pipelined_keepalive_requests() {
+        let served = Arc::new(AtomicU64::new(0));
+        let mut p = http_proto(&served);
+        let mut rbuf = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\nConnection: close\r\n\r\n".to_vec();
+        let first = run(p.advance(&mut rbuf));
+        assert!(reply_text(&first).ends_with("GET /a 0"));
+        assert!(!first.close);
+        let second = run(p.advance(&mut rbuf));
+        assert!(reply_text(&second).ends_with("GET /b 0"));
+        assert!(second.close, "Connection: close must close after the reply");
+        assert!(rbuf.is_empty());
+    }
+
+    #[test]
+    fn http_chunked_body_trickles_in() {
+        let served = Arc::new(AtomicU64::new(0));
+        let mut p = http_proto(&served);
+        let raw = b"POST /c HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                    4\r\nwiki\r\n5;ext=1\r\npedia\r\n0\r\n\r\n";
+        let mut rbuf = Vec::new();
+        let mut got = None;
+        for chunk in raw.chunks(3) {
+            rbuf.extend_from_slice(chunk);
+            match p.advance(&mut rbuf) {
+                Step::NeedMore => {}
+                Step::Dispatch(f) => {
+                    got = Some(f());
+                    break;
+                }
+                _ => panic!("unexpected step"),
+            }
+        }
+        let text = reply_text(&got.expect("chunked request never dispatched"));
+        assert!(text.ends_with("POST /c 9"), "{text}");
+    }
+
+    #[test]
+    fn http_expect_continue_emits_interim_once() {
+        let served = Arc::new(AtomicU64::new(0));
+        let mut p = http_proto(&served);
+        let mut rbuf =
+            b"POST /u HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\n".to_vec();
+        match p.advance(&mut rbuf) {
+            Step::Interim(bytes) => {
+                assert_eq!(&bytes, b"HTTP/1.1 100 Continue\r\n\r\n");
+            }
+            _ => panic!("expected interim 100"),
+        }
+        assert!(matches!(p.advance(&mut rbuf), Step::NeedMore));
+        rbuf.extend_from_slice(b"ok");
+        let reply = run(p.advance(&mut rbuf));
+        assert!(reply_text(&reply).ends_with("POST /u 2"));
+    }
+
+    #[test]
+    fn http_errors_reply_and_close() {
+        // Malformed request line.
+        let served = Arc::new(AtomicU64::new(0));
+        let mut p = http_proto(&served);
+        let mut rbuf = b"NOT-HTTP\r\n\r\n".to_vec();
+        match p.advance(&mut rbuf) {
+            Step::Reply(r) => {
+                assert!(r.close);
+                assert!(reply_text(&r).starts_with("HTTP/1.1 400"), "{}", reply_text(&r));
+            }
+            _ => panic!("expected 400"),
+        }
+        // Ambiguous framing (smuggling precondition).
+        let mut p = http_proto(&served);
+        let mut rbuf =
+            b"POST / HTTP/1.1\r\nContent-Length: 4\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec();
+        match p.advance(&mut rbuf) {
+            Step::Reply(r) => assert!(reply_text(&r).starts_with("HTTP/1.1 400")),
+            _ => panic!("expected 400"),
+        }
+        // Oversized head without a terminator.
+        let mut p = http_proto(&served);
+        let mut rbuf = vec![b'a'; MAX_HEAD + 1];
+        match p.advance(&mut rbuf) {
+            Step::Reply(r) => assert!(reply_text(&r).starts_with("HTTP/1.1 431")),
+            _ => panic!("expected 431"),
+        }
+        // Oversized declared body.
+        let mut p = http_proto(&served);
+        let mut rbuf = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            crate::http::server::MAX_BODY + 1
+        )
+        .into_bytes();
+        match p.advance(&mut rbuf) {
+            Step::Reply(r) => assert!(reply_text(&r).starts_with("HTTP/1.1 413")),
+            _ => panic!("expected 413"),
+        }
+    }
+
+    #[test]
+    fn http_stray_crlf_between_requests_tolerated() {
+        let served = Arc::new(AtomicU64::new(0));
+        let mut p = http_proto(&served);
+        let mut rbuf = b"\r\n\r\nGET /ok HTTP/1.1\r\n\r\n".to_vec();
+        let reply = run(p.advance(&mut rbuf));
+        assert!(reply_text(&reply).ends_with("GET /ok 0"));
+    }
+
+    #[test]
+    fn reject_bytes_decode_as_unavailable() {
+        let bytes = rpc_reject_bytes();
+        let resp = Response::decode(&bytes[HEADER..]).unwrap();
+        match resp {
+            Response::Error { kind, message } => {
+                assert_eq!(kind, ErrorKind::Unavailable);
+                assert!(message.contains("connection limit"), "{message}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Event-driven I/O plane shared by both listeners.
+//!
+//! The RPC and HTTP servers used to be naive thread-per-connection
+//! accept loops — C open connections cost C blocked OS threads, which
+//! exhausts the scheduler long before the batcher or tensor pools
+//! saturate. This subsystem replaces that with a small epoll reactor
+//! pool ([`reactor`]) driving per-connection protocol state machines
+//! ([`conn`]) and a bounded worker pool ([`workers`]) that runs
+//! `ServerCore::handle` off the reactor threads, so thread count is
+//! O(`reactor_threads` + `worker_threads`) regardless of connection
+//! count.
+//!
+//! Layout:
+//! * [`sys`] — dependency-free epoll/eventfd/rlimit syscall shim
+//! * [`conn`] — RPC-framing and HTTP/1.1 keep-alive state machines
+//!   with partial read/write resumption
+//! * [`workers`] — bounded handler pool with drain-then-exit stop
+//! * [`reactor`] — the event loop: accept gate, idle sweep, two-phase
+//!   graceful stop
+//! * [`track`] — connection joining for the legacy threaded mode
+//!   (kept behind `net.mode = "threaded"`; removal is a ROADMAP
+//!   follow-up)
+//!
+//! Configured via `ServerConfig.net` (`net.*` keys in server.conf);
+//! observable via `net.*` metrics in the shared registry.
+
+pub mod conn;
+pub mod reactor;
+pub mod sys;
+pub mod track;
+pub mod workers;
+
+pub use conn::{ConnProtocol, ProtocolFactory, Reply, Step};
+pub use reactor::{ListenerId, Reactor};
+pub use track::ConnTracker;
+pub use workers::{Job, WorkerPool};
+
+use crate::util::metrics::{Counter, Gauge, Histogram, Registry};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Which I/O plane the listeners bind onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetMode {
+    /// Shared epoll reactor (default).
+    Reactor,
+    /// Legacy thread-per-connection accept loops. Also the automatic
+    /// fallback where epoll is unavailable (non-Linux).
+    Threaded,
+}
+
+/// `ServerConfig.net` — knobs for the I/O plane.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetConfig {
+    pub mode: NetMode,
+    /// Reactor (event-loop) threads; each owns an epoll instance and
+    /// a share of the connections.
+    pub reactor_threads: usize,
+    /// Handler threads executing `ServerCore::handle`; bounds request
+    /// concurrency upstream of the admission gate.
+    pub worker_threads: usize,
+    /// Accept gate: connections above this are answered with an
+    /// immediate 503/`Unavailable` and closed. 0 = unlimited.
+    pub max_connections: usize,
+    /// Idle sweep: connections (including half-sent requests — slow
+    /// loris) with no activity for this long are closed. Replaces the
+    /// old hardcoded 60s read timeout; also applied as the read
+    /// timeout in threaded mode.
+    pub idle_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            mode: NetMode::Reactor,
+            reactor_threads: 1,
+            worker_threads: 4,
+            max_connections: 0,
+            idle_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// `net.*` instruments, registered in the shared [`Registry`] so they
+/// render on `/metrics` (as `tensorserve_net_*`).
+#[derive(Clone)]
+pub struct NetMetrics {
+    pub connections_accepted: Arc<Counter>,
+    pub connections_rejected: Arc<Counter>,
+    pub idle_closed: Arc<Counter>,
+    pub wakeups: Arc<Counter>,
+    pub connections_active: Arc<Gauge>,
+    /// First request byte → handler dispatch, in ns: ingress latency,
+    /// separable from batch queue delay measured further down.
+    pub dispatch_delay: Arc<Histogram>,
+}
+
+impl NetMetrics {
+    pub fn register(registry: &Registry) -> NetMetrics {
+        NetMetrics {
+            connections_accepted: registry.counter("net.connections_accepted"),
+            connections_rejected: registry.counter("net.connections_rejected"),
+            idle_closed: registry.counter("net.idle_closed"),
+            wakeups: registry.counter("net.reactor_wakeups"),
+            connections_active: registry.gauge("net.connections_active"),
+            dispatch_delay: registry.histogram("net.read_to_dispatch_ns"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_reactor_mode_with_sane_bounds() {
+        let cfg = NetConfig::default();
+        assert_eq!(cfg.mode, NetMode::Reactor);
+        assert_eq!(cfg.reactor_threads, 1);
+        assert_eq!(cfg.worker_threads, 4);
+        assert_eq!(cfg.max_connections, 0);
+        assert_eq!(cfg.idle_timeout, Duration::from_secs(60));
+    }
+
+    #[test]
+    fn metrics_register_under_net_names() {
+        let registry = Registry::new();
+        let m = NetMetrics::register(&registry);
+        m.connections_accepted.inc();
+        m.connections_active.add(1);
+        m.dispatch_delay.record(1_000);
+        let text = registry.render_prometheus("tensorserve");
+        assert!(text.contains("tensorserve_net_connections_accepted"));
+        assert!(text.contains("tensorserve_net_connections_active"));
+        assert!(text.contains("tensorserve_net_read_to_dispatch_ns"));
+    }
+}

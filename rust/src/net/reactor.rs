@@ -1,0 +1,765 @@
+//! The epoll reactor: nonblocking listeners and connections, a small
+//! pool of reactor threads, and a bounded worker pool for handlers.
+//!
+//! Thread model:
+//!
+//! * **Reactor threads** (`net-reactor-N`, `reactor_threads` of them)
+//!   each own an epoll instance, a slab of connections, and an inbox
+//!   (eventfd-woken) for cross-thread messages. They do *only*
+//!   `accept`/`read`/`write` and protocol parsing — never inference.
+//! * **Worker threads** (`net-worker-N`, `worker_threads` of them)
+//!   execute the dispatch closures ([`super::workers`]) and route the
+//!   encoded reply back to the owning reactor's inbox.
+//!
+//! So C open connections cost C × (two buffers + a state machine),
+//! not C threads: thread count is O(reactors + workers).
+//!
+//! Connections are identified by `(slot, generation)` tokens packed
+//! into the epoll user-data word; a reply or a stale kernel event for
+//! a slot that has since been recycled fails the generation check and
+//! is dropped instead of reaching the wrong connection.
+//!
+//! Shutdown is two-phase, preserving PR 6 drain semantics: `stop()`
+//! first closes listeners (`draining`), then stops the worker pool —
+//! which finishes every queued job, so in-flight requests still get
+//! their replies — and only then flags `finalize`, where reactor
+//! threads flush remaining bytes (bounded grace) and close everything.
+
+use super::conn::{ConnProtocol, ProtocolFactory, Reply, Step};
+use super::sys::{
+    Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
+};
+use super::workers::{Job, WorkerPool};
+use super::{NetConfig, NetMetrics};
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// Token layout (the epoll user-data u64): one flag bit picks the kind,
+// the low bits carry the identity. Connection generations are masked
+// to 30 bits so they never collide with the flag bits.
+const TOKEN_CONN: u64 = 1 << 63;
+const TOKEN_LISTENER: u64 = 1 << 62;
+const TOKEN_WAKE: u64 = 1 << 61;
+const GEN_MASK: u32 = 0x3FFF_FFFF;
+
+/// Receive-buffer hard cap: above every protocol-level limit (64 MiB
+/// frame / body + a full HTTP head); a peer that exceeds it is not
+/// speaking either protocol.
+const RBUF_CAP: usize = crate::rpc::frame::MAX_FRAME + (2 << 20);
+
+/// Bounded grace for flushing pending reply bytes during finalize.
+const FLUSH_GRACE: Duration = Duration::from_secs(1);
+
+/// Handle to a listener registered with [`Reactor::add_listener`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ListenerId(usize);
+
+enum Msg {
+    AddListener { id: usize, listener: TcpListener, proto: Arc<ProtocolFactory> },
+    CloseListener { id: usize },
+    NewConn { stream: TcpStream, listener: usize, proto: Arc<ProtocolFactory> },
+    Done { slot: usize, gen: u32, reply: Reply },
+}
+
+/// Cross-thread mailbox for one reactor thread.
+struct Inbox {
+    queue: Mutex<Vec<Msg>>,
+    wake: EventFd,
+}
+
+impl Inbox {
+    fn push(&self, msg: Msg) {
+        self.queue.lock().unwrap().push(msg);
+        self.wake.signal();
+    }
+}
+
+struct Shared {
+    cfg: NetConfig,
+    workers: WorkerPool,
+    inboxes: Vec<Arc<Inbox>>,
+    /// Round-robin cursor for distributing accepted connections.
+    rr: AtomicUsize,
+    next_listener: AtomicUsize,
+    /// Live connections across all reactor threads (the
+    /// `max_connections` accept gate reads this).
+    active: AtomicUsize,
+    draining: AtomicBool,
+    finalize: AtomicBool,
+    metrics: NetMetrics,
+}
+
+/// The shared I/O plane. One per process in the assembled server
+/// (both listeners bind onto it); standalone servers own a private
+/// one.
+pub struct Reactor {
+    shared: Arc<Shared>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    stopped: AtomicBool,
+}
+
+impl Reactor {
+    /// Spin up the reactor + worker threads. Fails (cleanly, nothing
+    /// spawned) where epoll is unavailable — callers fall back to the
+    /// legacy threaded listeners.
+    pub fn start(cfg: &NetConfig, metrics: NetMetrics) -> anyhow::Result<Arc<Reactor>> {
+        let nthreads = cfg.reactor_threads.max(1);
+        let mut epolls = Vec::with_capacity(nthreads);
+        let mut inboxes = Vec::with_capacity(nthreads);
+        for _ in 0..nthreads {
+            let epoll = Epoll::new()?;
+            let wake = EventFd::new()?;
+            epoll.add(wake.raw(), EPOLLIN, TOKEN_WAKE)?;
+            epolls.push(epoll);
+            inboxes.push(Arc::new(Inbox { queue: Mutex::new(Vec::new()), wake }));
+        }
+        let workers =
+            WorkerPool::start(cfg.worker_threads.max(1), Arc::clone(&metrics.dispatch_delay));
+        let shared = Arc::new(Shared {
+            cfg: cfg.clone(),
+            workers,
+            inboxes,
+            rr: AtomicUsize::new(0),
+            next_listener: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+            finalize: AtomicBool::new(false),
+            metrics,
+        });
+        let threads = epolls
+            .into_iter()
+            .enumerate()
+            .map(|(idx, epoll)| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("net-reactor-{idx}"))
+                    .spawn(move || ReactorThread::new(idx, shared, epoll).run())
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        crate::log_info!(
+            "net reactor up: {} reactor thread(s), {} worker(s)",
+            nthreads,
+            cfg.worker_threads.max(1)
+        );
+        Ok(Arc::new(Reactor {
+            shared,
+            threads: Mutex::new(threads),
+            stopped: AtomicBool::new(false),
+        }))
+    }
+
+    /// Register a bound listener; connections accepted from it get
+    /// protocol machines from `proto`. Returns the listener handle
+    /// and its local address.
+    pub fn add_listener(
+        &self,
+        listener: TcpListener,
+        proto: ProtocolFactory,
+    ) -> anyhow::Result<(ListenerId, SocketAddr)> {
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let id = self.shared.next_listener.fetch_add(1, Ordering::SeqCst);
+        let owner = id % self.shared.inboxes.len();
+        self.shared.inboxes[owner].push(Msg::AddListener {
+            id,
+            listener,
+            proto: Arc::new(proto),
+        });
+        Ok((ListenerId(id), addr))
+    }
+
+    /// Close one listener: stop accepting on it and close its
+    /// connections — idle ones now, in-flight ones after their
+    /// current reply flushes. Other listeners are untouched.
+    pub fn close_listener(&self, id: ListenerId) {
+        for inbox in &self.shared.inboxes {
+            inbox.push(Msg::CloseListener { id: id.0 });
+        }
+    }
+
+    /// Live connections across the whole reactor.
+    pub fn connections_active(&self) -> usize {
+        self.shared.active.load(Ordering::SeqCst)
+    }
+
+    /// Graceful full stop (idempotent): close listeners, let the
+    /// worker pool finish everything already queued, flush replies,
+    /// close all connections, join every thread.
+    pub fn stop(&self) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.shared.draining.store(true, Ordering::SeqCst);
+        for inbox in &self.shared.inboxes {
+            inbox.wake.signal();
+        }
+        // Blocks until every queued job ran; their replies are in the
+        // reactor inboxes (and mostly flushed) by the time it returns.
+        self.shared.workers.stop();
+        self.shared.finalize.store(true, Ordering::SeqCst);
+        for inbox in &self.shared.inboxes {
+            inbox.wake.signal();
+        }
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// ----------------------------------------------------- worker thread
+
+struct Slot {
+    gen: u32,
+    conn: Option<Conn>,
+}
+
+struct Conn {
+    stream: TcpStream,
+    proto: Box<dyn ConnProtocol>,
+    listener: usize,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// A dispatch is in flight on the worker pool; reads are parked
+    /// (one request in flight per connection — the kernel socket
+    /// buffer is the pipeline backpressure).
+    busy: bool,
+    close_after_flush: bool,
+    /// The kernel reported ERR/HUP while busy; close on completion.
+    errored: bool,
+    /// Currently-registered epoll mask (MOD only on change).
+    interest: u32,
+    last_activity: Instant,
+    /// First byte of the request being accumulated (feeds
+    /// `net.read_to_dispatch_ns`).
+    req_start: Option<Instant>,
+}
+
+fn queue_write(conn: &mut Conn, bytes: &[u8]) {
+    if conn.wpos == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    }
+    conn.wbuf.extend_from_slice(bytes);
+}
+
+struct ReactorThread {
+    idx: usize,
+    shared: Arc<Shared>,
+    epoll: Epoll,
+    listeners: HashMap<usize, (TcpListener, Arc<ProtocolFactory>)>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    scratch: Vec<u8>,
+    msgs: Vec<Msg>,
+    listeners_closed: bool,
+}
+
+impl ReactorThread {
+    fn new(idx: usize, shared: Arc<Shared>, epoll: Epoll) -> ReactorThread {
+        ReactorThread {
+            idx,
+            shared,
+            epoll,
+            listeners: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            scratch: vec![0u8; 16 << 10],
+            msgs: Vec::new(),
+            listeners_closed: false,
+        }
+    }
+
+    fn inbox(&self) -> &Arc<Inbox> {
+        &self.shared.inboxes[self.idx]
+    }
+
+    fn run(mut self) {
+        // Wake at least every quarter idle-timeout so sweeping is
+        // timely, but never busier than 10ms or lazier than 500ms.
+        let tick = (self.shared.cfg.idle_timeout / 4)
+            .clamp(Duration::from_millis(10), Duration::from_millis(500));
+        let mut events = vec![EpollEvent::zeroed(); 256];
+        let mut last_sweep = Instant::now();
+        loop {
+            self.process_inbox();
+            if self.shared.draining.load(Ordering::SeqCst) && !self.listeners_closed {
+                self.listeners.clear(); // fds close; epoll deregisters
+                self.listeners_closed = true;
+            }
+            if self.shared.finalize.load(Ordering::SeqCst) {
+                self.finalize();
+                return;
+            }
+            let n = match self.epoll.wait(&mut events, tick.as_millis() as i32) {
+                Ok(n) => n,
+                Err(e) => {
+                    crate::log_warn!("epoll_wait failed: {e}");
+                    std::thread::sleep(Duration::from_millis(10));
+                    0
+                }
+            };
+            for ev in &events[..n] {
+                let mask = ev.events;
+                let token = ev.data;
+                if token == TOKEN_WAKE {
+                    self.inbox().wake.drain();
+                    self.shared.metrics.wakeups.inc();
+                    self.process_inbox();
+                } else if token & TOKEN_CONN != 0 {
+                    let slot = (token & 0xFFFF_FFFF) as usize;
+                    let gen = ((token >> 32) as u32) & GEN_MASK;
+                    self.on_conn_event(slot, gen, mask);
+                } else if token & TOKEN_LISTENER != 0 {
+                    self.on_accept((token & 0xFFFF_FFFF) as usize);
+                }
+            }
+            if last_sweep.elapsed() >= tick {
+                self.sweep();
+                last_sweep = Instant::now();
+            }
+        }
+    }
+
+    fn process_inbox(&mut self) {
+        let mut msgs = std::mem::take(&mut self.msgs);
+        msgs.extend(self.inbox().queue.lock().unwrap().drain(..));
+        for msg in msgs.drain(..) {
+            match msg {
+                Msg::AddListener { id, listener, proto } => {
+                    if self.shared.draining.load(Ordering::SeqCst) {
+                        continue;
+                    }
+                    let token = TOKEN_LISTENER | id as u64;
+                    match self.epoll.add(listener.as_raw_fd(), EPOLLIN, token) {
+                        Ok(()) => {
+                            self.listeners.insert(id, (listener, proto));
+                        }
+                        Err(e) => crate::log_warn!("failed to watch listener: {e}"),
+                    }
+                }
+                Msg::CloseListener { id } => self.close_listener(id),
+                Msg::NewConn { stream, listener, proto } => {
+                    self.install(stream, listener, &proto)
+                }
+                Msg::Done { slot, gen, reply } => self.on_done(slot, gen, reply),
+            }
+        }
+        self.msgs = msgs; // keep the drained Vec's capacity
+    }
+
+    fn close_listener(&mut self, id: usize) {
+        self.listeners.remove(&id);
+        for si in 0..self.slots.len() {
+            let close_now = match self.slots[si].conn.as_mut() {
+                Some(c) if c.listener == id => {
+                    if c.busy || c.wpos < c.wbuf.len() {
+                        // Finish the in-flight request, then close.
+                        c.close_after_flush = true;
+                        false
+                    } else {
+                        true
+                    }
+                }
+                _ => false,
+            };
+            if close_now {
+                self.close(si, false);
+            } else {
+                self.update_interest(si);
+            }
+        }
+    }
+
+    // ------------------------------------------------------- accept
+
+    fn on_accept(&mut self, id: usize) {
+        loop {
+            let accepted = match self.listeners.get(&id) {
+                Some((listener, _)) => listener.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _peer)) => {
+                    if self.shared.draining.load(Ordering::SeqCst) {
+                        continue; // racing accept during drain: drop
+                    }
+                    let max = self.shared.cfg.max_connections;
+                    if max > 0 && self.shared.active.load(Ordering::SeqCst) >= max {
+                        self.shared.metrics.connections_rejected.inc();
+                        let reject = &self.listeners[&id].1.reject;
+                        let _ = stream.set_nonblocking(true);
+                        let _ = (&stream).write(reject);
+                        continue; // drop: close sends the queued bytes
+                    }
+                    self.shared.active.fetch_add(1, Ordering::SeqCst);
+                    self.shared.metrics.connections_active.add(1);
+                    self.shared.metrics.connections_accepted.inc();
+                    let proto = Arc::clone(&self.listeners[&id].1);
+                    let n = self.shared.inboxes.len();
+                    let target = if n == 1 {
+                        self.idx
+                    } else {
+                        self.shared.rr.fetch_add(1, Ordering::Relaxed) % n
+                    };
+                    if target == self.idx {
+                        self.install(stream, id, &proto);
+                    } else {
+                        self.shared.inboxes[target].push(Msg::NewConn {
+                            stream,
+                            listener: id,
+                            proto,
+                        });
+                    }
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    crate::log_warn!("accept error: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn install(&mut self, stream: TcpStream, listener: usize, proto: &Arc<ProtocolFactory>) {
+        if self.shared.finalize.load(Ordering::SeqCst)
+            || stream.set_nonblocking(true).is_err()
+        {
+            self.dec_active();
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let si = self.free.pop().unwrap_or_else(|| {
+            self.slots.push(Slot { gen: 0, conn: None });
+            self.slots.len() - 1
+        });
+        let gen = self.slots[si].gen.wrapping_add(1) & GEN_MASK;
+        self.slots[si].gen = gen;
+        let token = TOKEN_CONN | ((gen as u64) << 32) | si as u64;
+        if let Err(e) = self.epoll.add(stream.as_raw_fd(), EPOLLIN | EPOLLRDHUP, token) {
+            crate::log_warn!("failed to watch connection: {e}");
+            self.free.push(si);
+            self.dec_active();
+            return;
+        }
+        self.slots[si].conn = Some(Conn {
+            stream,
+            proto: (proto.make)(),
+            listener,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            busy: false,
+            close_after_flush: false,
+            errored: false,
+            interest: EPOLLIN | EPOLLRDHUP,
+            last_activity: Instant::now(),
+            req_start: None,
+        });
+    }
+
+    // ----------------------------------------------------- conn I/O
+
+    fn on_conn_event(&mut self, si: usize, gen: u32, mask: u32) {
+        match self.slots.get(si) {
+            Some(slot) if slot.gen == gen && slot.conn.is_some() => {}
+            _ => return, // stale event for a recycled slot
+        }
+        if mask & (EPOLLERR | EPOLLHUP) != 0 {
+            let conn = self.slots[si].conn.as_mut().unwrap();
+            if conn.busy {
+                conn.errored = true; // close when the reply lands
+            } else {
+                self.close(si, false);
+            }
+            return;
+        }
+        if mask & EPOLLOUT != 0 && !self.flush(si) {
+            return;
+        }
+        if mask & (EPOLLIN | EPOLLRDHUP) != 0 {
+            self.on_readable(si);
+        } else {
+            // A flush just completed: pipelined bytes may already
+            // hold the next request.
+            self.drive(si);
+            self.update_interest(si);
+        }
+    }
+
+    fn on_readable(&mut self, si: usize) {
+        let mut close = false;
+        {
+            let Some(conn) = self.slots[si].conn.as_mut() else { return };
+            loop {
+                match conn.stream.read(&mut self.scratch) {
+                    Ok(0) => {
+                        close = true; // EOF
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&self.scratch[..n]);
+                        conn.last_activity = Instant::now();
+                        if conn.req_start.is_none() {
+                            conn.req_start = Some(conn.last_activity);
+                        }
+                        if conn.rbuf.len() > RBUF_CAP {
+                            close = true; // not speaking our protocols
+                            break;
+                        }
+                        if n < self.scratch.len() {
+                            break; // socket drained (level-triggered
+                                   // epoll corrects us if not)
+                        }
+                    }
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        close = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if close {
+            self.close(si, false);
+            return;
+        }
+        self.drive(si);
+        self.update_interest(si);
+    }
+
+    /// Run the protocol machine over buffered bytes until it needs
+    /// more input, dispatches, or the connection closes.
+    fn drive(&mut self, si: usize) {
+        loop {
+            let gen = match self.slots.get(si) {
+                Some(slot) if slot.conn.is_some() => slot.gen,
+                _ => return,
+            };
+            enum Act {
+                Flush,
+                Submit(Box<dyn FnOnce() -> Reply + Send>, Instant),
+                Close,
+            }
+            let act = {
+                let conn = self.slots[si].conn.as_mut().unwrap();
+                if conn.busy || conn.close_after_flush {
+                    return;
+                }
+                match conn.proto.advance(&mut conn.rbuf) {
+                    Step::NeedMore => return,
+                    Step::Interim(bytes) => {
+                        queue_write(conn, &bytes);
+                        Act::Flush
+                    }
+                    Step::Reply(reply) => {
+                        queue_write(conn, &reply.bytes);
+                        if reply.close {
+                            conn.close_after_flush = true;
+                        }
+                        Act::Flush
+                    }
+                    Step::Dispatch(run) => {
+                        conn.busy = true;
+                        let received = conn.req_start.take().unwrap_or_else(Instant::now);
+                        Act::Submit(run, received)
+                    }
+                    Step::Close => Act::Close,
+                }
+            };
+            match act {
+                Act::Flush => {
+                    if !self.flush(si) {
+                        return;
+                    }
+                }
+                Act::Submit(run, received) => {
+                    let inbox = Arc::clone(self.inbox());
+                    let job = Job {
+                        run,
+                        received,
+                        complete: Box::new(move |reply| {
+                            inbox.push(Msg::Done { slot: si, gen, reply });
+                        }),
+                    };
+                    if !self.shared.workers.submit(job) {
+                        // Pool is shutting down: no reply will come.
+                        self.close(si, false);
+                    }
+                    return;
+                }
+                Act::Close => {
+                    self.close(si, false);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn on_done(&mut self, si: usize, gen: u32, reply: Reply) {
+        match self.slots.get(si) {
+            Some(slot) if slot.gen == gen && slot.conn.is_some() => {}
+            _ => return, // connection closed while the job ran
+        }
+        let abandoned = {
+            let conn = self.slots[si].conn.as_mut().unwrap();
+            conn.busy = false;
+            if conn.errored || (reply.bytes.is_empty() && reply.close) {
+                // Peer vanished mid-request, or the handler panicked.
+                true
+            } else {
+                queue_write(conn, &reply.bytes);
+                if reply.close {
+                    conn.close_after_flush = true;
+                }
+                false
+            }
+        };
+        if abandoned {
+            self.close(si, false);
+            return;
+        }
+        if self.flush(si) {
+            self.drive(si); // pipelined next request, if any
+            self.update_interest(si);
+        }
+    }
+
+    /// Write as much of the pending buffer as the socket accepts.
+    /// Returns `false` if the connection was closed.
+    fn flush(&mut self, si: usize) -> bool {
+        let mut close = false;
+        {
+            let Some(conn) = self.slots[si].conn.as_mut() else { return false };
+            loop {
+                if conn.wpos >= conn.wbuf.len() {
+                    conn.wbuf.clear();
+                    conn.wpos = 0;
+                    close = conn.close_after_flush;
+                    break;
+                }
+                match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                    Ok(0) => {
+                        close = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.wpos += n;
+                        conn.last_activity = Instant::now();
+                    }
+                    // Partial write: resume on EPOLLOUT (the caller
+                    // refreshes interest).
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                    Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        close = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if close {
+            self.close(si, false);
+            return false;
+        }
+        true
+    }
+
+    fn update_interest(&mut self, si: usize) {
+        let (fd, token, desired, current) = {
+            let Some(slot) = self.slots.get(si) else { return };
+            let Some(conn) = slot.conn.as_ref() else { return };
+            let mut desired = 0u32;
+            if !conn.busy && !conn.close_after_flush {
+                desired |= EPOLLIN | EPOLLRDHUP;
+            }
+            if conn.wpos < conn.wbuf.len() {
+                desired |= EPOLLOUT;
+            }
+            let token = TOKEN_CONN | ((slot.gen as u64) << 32) | si as u64;
+            (conn.stream.as_raw_fd(), token, desired, conn.interest)
+        };
+        if desired != current && self.epoll.modify(fd, desired, token).is_ok() {
+            self.slots[si].conn.as_mut().unwrap().interest = desired;
+        }
+    }
+
+    fn sweep(&mut self) {
+        let timeout = self.shared.cfg.idle_timeout;
+        let now = Instant::now();
+        for si in 0..self.slots.len() {
+            let idle = match self.slots[si].conn.as_ref() {
+                // Busy connections are waiting on *us*, not idling;
+                // everything else — half-sent requests (slow loris),
+                // quiet keep-alives, stalled readers — sweeps.
+                Some(c) => !c.busy && now.duration_since(c.last_activity) > timeout,
+                None => false,
+            };
+            if idle {
+                self.close(si, true);
+            }
+        }
+    }
+
+    fn close(&mut self, si: usize, swept: bool) {
+        if let Some(conn) = self.slots[si].conn.take() {
+            // Dropping the stream closes the fd, which also removes
+            // it from the epoll interest list.
+            drop(conn);
+            self.free.push(si);
+            self.dec_active();
+            if swept {
+                self.shared.metrics.idle_closed.inc();
+            }
+        }
+    }
+
+    fn dec_active(&mut self) {
+        self.shared.active.fetch_sub(1, Ordering::SeqCst);
+        self.shared.metrics.connections_active.add(-1);
+    }
+
+    /// Final phase of `stop()`: the worker pool has already drained,
+    /// so every reply is either flushed or sitting in our inbox.
+    /// Flush with a bounded grace, then close everything.
+    fn finalize(&mut self) {
+        let deadline = Instant::now() + FLUSH_GRACE;
+        let mut events = vec![EpollEvent::zeroed(); 64];
+        loop {
+            self.process_inbox();
+            let mut pending = false;
+            for si in 0..self.slots.len() {
+                if self.slots[si].conn.is_none() {
+                    continue;
+                }
+                if self.flush(si) {
+                    let conn = self.slots[si].conn.as_ref().unwrap();
+                    if conn.wpos < conn.wbuf.len() {
+                        pending = true;
+                    }
+                }
+            }
+            if !pending || Instant::now() >= deadline {
+                break;
+            }
+            let _ = self.epoll.wait(&mut events, 20);
+        }
+        for si in 0..self.slots.len() {
+            self.close(si, false);
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! Thin syscall shim for the reactor — `epoll`, `eventfd`, rlimits.
+//!
+//! Dependency-free by the same rule as [`crate::util::mem`]: we
+//! declare the handful of symbols we need against the libc `std`
+//! already links instead of pulling in the `libc` crate. Everything
+//! is wrapped in safe types built on `std::os::fd` ownership
+//! (`OwnedFd` closes on drop, so no fd ever leaks on an error path).
+//!
+//! On non-Linux targets the constructors return
+//! `io::ErrorKind::Unsupported`; callers ([`super::reactor`]) surface
+//! that and the servers fall back to the legacy threaded mode, so the
+//! crate still compiles and serves everywhere.
+
+use std::io::{self, Read, Write};
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+
+// epoll event mask bits (linux uapi eventpoll.h).
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_ADD: i32 = 1;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_DEL: i32 = 2;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_MOD: i32 = 3;
+#[cfg(target_os = "linux")]
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+#[cfg(target_os = "linux")]
+const EFD_CLOEXEC: i32 = 0o2000000;
+#[cfg(target_os = "linux")]
+const EFD_NONBLOCK: i32 = 0o4000;
+
+/// One readiness event. The kernel's `struct epoll_event` is packed
+/// on x86-64 (`EPOLL_PACKED`) and naturally aligned elsewhere — the
+/// layout must match exactly or `epoll_wait` scribbles garbage.
+#[derive(Clone, Copy)]
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+pub struct EpollEvent {
+    pub events: u32,
+    /// Caller-chosen token identifying the fd (see `reactor` tokens).
+    pub data: u64,
+}
+
+impl EpollEvent {
+    pub fn zeroed() -> EpollEvent {
+        EpollEvent { events: 0, data: 0 }
+    }
+}
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+}
+
+#[cfg(target_os = "linux")]
+fn cvt(ret: i32) -> io::Result<i32> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn unsupported<T>() -> io::Result<T> {
+    Err(io::Error::new(io::ErrorKind::Unsupported, "epoll reactor requires linux"))
+}
+
+/// An epoll instance. Registered fds are identified by a caller
+/// token; closing a registered fd (dropping its `TcpStream`)
+/// deregisters it in the kernel automatically.
+pub struct Epoll {
+    fd: OwnedFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        #[cfg(target_os = "linux")]
+        {
+            let fd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            Ok(Epoll { fd: unsafe { OwnedFd::from_raw_fd(fd) } })
+        }
+        #[cfg(not(target_os = "linux"))]
+        unsupported()
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        #[cfg(target_os = "linux")]
+        {
+            let mut ev = EpollEvent { events, data: token };
+            cvt(unsafe { epoll_ctl(self.fd.as_raw_fd(), op, fd, &mut ev) })?;
+            Ok(())
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            let _ = (op, fd, events, token);
+            unsupported()
+        }
+    }
+
+    pub fn add(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        #[cfg(target_os = "linux")]
+        return self.ctl(EPOLL_CTL_ADD, fd, events, token);
+        #[cfg(not(target_os = "linux"))]
+        self.ctl(0, fd, events, token)
+    }
+
+    pub fn modify(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        #[cfg(target_os = "linux")]
+        return self.ctl(EPOLL_CTL_MOD, fd, events, token);
+        #[cfg(not(target_os = "linux"))]
+        self.ctl(0, fd, events, token)
+    }
+
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        #[cfg(target_os = "linux")]
+        return self.ctl(EPOLL_CTL_DEL, fd, 0, 0);
+        #[cfg(not(target_os = "linux"))]
+        self.ctl(0, fd, 0, 0)
+    }
+
+    /// Wait up to `timeout_ms` (-1 = forever) and fill `events`.
+    /// `EINTR` is reported as zero events, not an error.
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        #[cfg(target_os = "linux")]
+        {
+            let n = unsafe {
+                epoll_wait(
+                    self.fd.as_raw_fd(),
+                    events.as_mut_ptr(),
+                    events.len().min(i32::MAX as usize) as i32,
+                    timeout_ms,
+                )
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(0);
+                }
+                return Err(e);
+            }
+            Ok(n as usize)
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            let _ = (events, timeout_ms);
+            unsupported()
+        }
+    }
+}
+
+/// Cross-thread wakeup: an 8-byte counter fd, nonblocking on both
+/// ends. `signal` is async-signal-safe cheap (one `write`); `drain`
+/// resets the counter so level-triggered epoll stops reporting it.
+pub struct EventFd {
+    file: std::fs::File,
+}
+
+impl EventFd {
+    pub fn new() -> io::Result<EventFd> {
+        #[cfg(target_os = "linux")]
+        {
+            let fd = cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
+            Ok(EventFd { file: unsafe { std::fs::File::from_raw_fd(fd) } })
+        }
+        #[cfg(not(target_os = "linux"))]
+        unsupported()
+    }
+
+    pub fn raw(&self) -> RawFd {
+        self.file.as_raw_fd()
+    }
+
+    /// Wake the reactor owning this fd. Best effort: a full counter
+    /// (u64::MAX pending wakeups) means the reactor is already awake.
+    pub fn signal(&self) {
+        let _ = (&self.file).write(&1u64.to_ne_bytes());
+    }
+
+    /// Consume all pending wakeups (one read resets the counter).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        let _ = (&self.file).read(&mut buf);
+    }
+}
+
+// ------------------------------------------------- process utilities
+
+#[cfg(target_os = "linux")]
+#[repr(C)]
+struct RLimit {
+    cur: u64,
+    max: u64,
+}
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+}
+
+#[cfg(target_os = "linux")]
+const RLIMIT_NOFILE: i32 = 7;
+
+/// Raise the fd soft limit toward `want` (capped by the hard limit).
+/// Returns the effective soft limit. Used by the C1k scaling test and
+/// bench, where 1000 client + 1000 server sockets exceed the common
+/// 1024 default.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    #[cfg(target_os = "linux")]
+    {
+        let mut lim = RLimit { cur: 0, max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+            return 1024;
+        }
+        if lim.cur >= want {
+            return lim.cur;
+        }
+        let target = want.min(lim.max);
+        let new = RLimit { cur: target, max: lim.max };
+        if unsafe { setrlimit(RLIMIT_NOFILE, &new) } == 0 {
+            target
+        } else {
+            lim.cur
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = want;
+        1024
+    }
+}
+
+/// Live thread count of this process (`/proc/self/task`), `None` when
+/// unavailable. The scaling test asserts this stays O(workers +
+/// reactors) while 1k connections are open.
+pub fn process_thread_count() -> Option<usize> {
+    let entries = std::fs::read_dir("/proc/self/task").ok()?;
+    Some(entries.count())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn eventfd_signal_then_drain_is_readable_once() {
+        let efd = EventFd::new().unwrap();
+        let ep = Epoll::new().unwrap();
+        ep.add(efd.raw(), EPOLLIN, 7).unwrap();
+        let mut events = [EpollEvent::zeroed(); 4];
+        // Nothing pending: a zero-timeout wait reports no events.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        efd.signal();
+        efd.signal();
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        let (ev, data) = (events[0].events, events[0].data);
+        assert_ne!(ev & EPOLLIN, 0);
+        assert_eq!(data, 7);
+        // Draining resets the counter; the level-triggered fd goes
+        // quiet again.
+        efd.drain();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_reports_listener_readability() {
+        use std::io::Write as _;
+        use std::net::{TcpListener, TcpStream};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let ep = Epoll::new().unwrap();
+        ep.add(listener.as_raw_fd(), EPOLLIN, 42).unwrap();
+        let mut events = [EpollEvent::zeroed(); 4];
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        client.write_all(b"x").unwrap();
+        let n = ep.wait(&mut events, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!({ events[0].data }, 42);
+        ep.delete(listener.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn thread_count_and_rlimit_helpers_answer() {
+        #[cfg(target_os = "linux")]
+        assert!(process_thread_count().unwrap() >= 1);
+        assert!(raise_nofile_limit(64) >= 64 || cfg!(not(target_os = "linux")));
+    }
+}

@@ -1,0 +1,137 @@
+//! Connection tracking for the legacy threaded listeners.
+//!
+//! The original accept loops spawned one detached thread per
+//! connection: `stop()` closed the listener but left every live
+//! connection thread (and its socket) stranded until the 60s read
+//! timeout fired. The reactor path fixes this structurally (every
+//! connection lives in a slab the reactor closes on stop); this
+//! tracker fixes the threaded path that remains behind
+//! `net.mode = "threaded"`: each connection registers a socket clone
+//! and its join handle, and `stop_all` shuts the sockets down —
+//! unblocking any thread parked in a read — then joins every thread.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+#[derive(Default)]
+pub struct ConnTracker {
+    next: AtomicU64,
+    live: Mutex<HashMap<u64, Entry>>,
+}
+
+#[derive(Default)]
+struct Entry {
+    stream: Option<TcpStream>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ConnTracker {
+    pub fn new() -> ConnTracker {
+        ConnTracker::default()
+    }
+
+    /// Register a connection before spawning its thread. Returns the
+    /// id to pass to [`deregister`](Self::deregister); `None` if the
+    /// stream can't be cloned (the caller should still serve it —
+    /// it just won't be interruptible on stop).
+    pub fn register(&self, stream: &TcpStream) -> Option<u64> {
+        let clone = stream.try_clone().ok()?;
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        self.live
+            .lock()
+            .unwrap()
+            .insert(id, Entry { stream: Some(clone), handle: None });
+        Some(id)
+    }
+
+    /// Attach the spawned thread's handle so `stop_all` can join it.
+    /// A no-op if the connection already deregistered itself (tiny
+    /// race between spawn and first register — harmless: the thread
+    /// is already gone).
+    pub fn attach(&self, id: u64, handle: JoinHandle<()>) {
+        if let Some(entry) = self.live.lock().unwrap().get_mut(&id) {
+            entry.handle = Some(handle);
+        }
+    }
+
+    /// Called by the connection thread itself when it finishes
+    /// naturally. Drops its own join handle (a thread never joins
+    /// itself).
+    pub fn deregister(&self, id: u64) {
+        self.live.lock().unwrap().remove(&id);
+    }
+
+    pub fn len(&self) -> usize {
+        self.live.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Shut down every live connection socket (which wakes threads
+    /// blocked in reads with EOF), then join the threads.
+    pub fn stop_all(&self) {
+        let entries: Vec<Entry> = {
+            let mut live = self.live.lock().unwrap();
+            live.drain().map(|(_, e)| e).collect()
+        };
+        // Two passes: shut all sockets first so every thread unblocks
+        // before we start (potentially) waiting on joins.
+        for entry in &entries {
+            if let Some(stream) = &entry.stream {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+        for entry in entries {
+            if let Some(handle) = entry.handle {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::net::TcpListener;
+    use std::sync::Arc;
+
+    #[test]
+    fn stop_all_unblocks_and_joins_a_reading_thread() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+
+        let tracker = Arc::new(ConnTracker::new());
+        let id = tracker.register(&server_side).unwrap();
+        let t = Arc::clone(&tracker);
+        let handle = std::thread::spawn(move || {
+            let mut buf = [0u8; 16];
+            // Blocks until stop_all shuts the socket down.
+            let _ = (&server_side).read(&mut buf);
+            t.deregister(id);
+        });
+        tracker.attach(id, handle);
+        assert_eq!(tracker.len(), 1);
+        tracker.stop_all(); // must not hang
+        assert!(tracker.is_empty());
+    }
+
+    #[test]
+    fn natural_exit_deregisters_itself() {
+        let tracker = ConnTracker::new();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let id = tracker.register(&server_side).unwrap();
+        tracker.deregister(id);
+        assert!(tracker.is_empty());
+        tracker.stop_all(); // nothing to do
+    }
+}

@@ -1,0 +1,179 @@
+//! Bounded worker pool: runs request handlers off the reactor thread.
+//!
+//! The reactor parses a request and submits a [`Job`]; a worker runs
+//! the handler closure (which produces fully encoded reply bytes) and
+//! invokes the job's completion, which routes the reply back to the
+//! reactor thread owning the connection. The pool is the *only* place
+//! `ServerCore::handle` runs on the reactor path, so the process
+//! serves C connections with O(workers + reactors) threads — the
+//! reactor itself never blocks on inference.
+//!
+//! A panicking handler is caught here: the worker survives, the
+//! connection gets closed (empty reply, `close`), and every other
+//! connection is unaffected.
+
+use super::conn::Reply;
+use crate::util::metrics::Histogram;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One parsed request, ready to execute.
+pub struct Job {
+    /// Runs the handler; returns encoded reply bytes.
+    pub run: Box<dyn FnOnce() -> Reply + Send>,
+    /// When the request's first byte arrived (feeds the
+    /// `net.read_to_dispatch_ns` histogram: ingress latency, separable
+    /// from batch queue delay measured further down).
+    pub received: Instant,
+    /// Routes the reply back to the owning reactor thread.
+    pub complete: Box<dyn FnOnce(Reply) + Send>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    /// `net.read_to_dispatch_ns`.
+    dispatch_delay: Arc<Histogram>,
+}
+
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    pub fn start(workers: usize, dispatch_delay: Arc<Histogram>) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            dispatch_delay,
+        });
+        let threads = (0..workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("net-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn net worker")
+            })
+            .collect();
+        WorkerPool { shared, threads: Mutex::new(threads) }
+    }
+
+    /// Enqueue a job. `false` once the pool is shutting down — the
+    /// caller should close the connection instead of waiting on a
+    /// reply that will never come.
+    pub fn submit(&self, job: Job) -> bool {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return false;
+        }
+        self.shared.queue.lock().unwrap().push_back(job);
+        self.shared.available.notify_one();
+        true
+    }
+
+    /// Graceful stop: workers finish every queued job (replies still
+    /// route back to the reactors), then exit; blocks until all have.
+    pub fn stop(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                // Drain-then-exit: the queue is checked before the
+                // flag, so in-flight work admitted before shutdown
+                // always completes.
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        shared.dispatch_delay.record_duration(job.received.elapsed());
+        let reply = match catch_unwind(AssertUnwindSafe(job.run)) {
+            Ok(reply) => reply,
+            Err(_) => {
+                crate::log_error!("handler panicked; closing its connection");
+                Reply { bytes: Vec::new(), close: true }
+            }
+        };
+        (job.complete)(reply);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn job(counter: &Arc<AtomicUsize>, done: &Arc<AtomicUsize>) -> Job {
+        let (c, d) = (Arc::clone(counter), Arc::clone(done));
+        Job {
+            run: Box::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                Reply { bytes: vec![1], close: false }
+            }),
+            received: Instant::now(),
+            complete: Box::new(move |reply| {
+                assert_eq!(reply.bytes, vec![1]);
+                d.fetch_add(1, Ordering::SeqCst);
+            }),
+        }
+    }
+
+    #[test]
+    fn stop_drains_queued_jobs() {
+        let hist = Arc::new(Histogram::new());
+        let pool = WorkerPool::start(2, Arc::clone(&hist));
+        let ran = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            assert!(pool.submit(job(&ran, &done)));
+        }
+        pool.stop();
+        assert_eq!(ran.load(Ordering::SeqCst), 32);
+        assert_eq!(done.load(Ordering::SeqCst), 32);
+        assert_eq!(hist.count(), 32);
+        // Post-stop submits are refused, not silently dropped.
+        assert!(!pool.submit(job(&ran, &done)));
+    }
+
+    #[test]
+    fn panicking_handler_closes_conn_but_worker_survives() {
+        let pool = WorkerPool::start(1, Arc::new(Histogram::new()));
+        let closed = Arc::new(AtomicBool::new(false));
+        let c = Arc::clone(&closed);
+        pool.submit(Job {
+            run: Box::new(|| panic!("injected")),
+            received: Instant::now(),
+            complete: Box::new(move |reply| {
+                assert!(reply.close);
+                c.store(true, Ordering::SeqCst);
+            }),
+        });
+        // The single worker survived the panic and still runs jobs.
+        let ran = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicUsize::new(0));
+        pool.submit(job(&ran, &done));
+        pool.stop();
+        assert!(closed.load(Ordering::SeqCst));
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+}

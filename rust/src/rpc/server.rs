@@ -1,34 +1,123 @@
-//! Threaded RPC server: accept loop + one handler thread per
-//! connection, framed request/response, graceful shutdown.
+//! RPC server: framed request/response over TCP, graceful shutdown.
+//!
+//! By default a thin binding onto the shared epoll reactor
+//! ([`crate::net`]): connections are nonblocking state machines
+//! ([`crate::net::conn::RpcProto`]) and handlers run on the bounded
+//! worker pool, so thread count is O(workers + reactors) rather than
+//! O(connections). The original thread-per-connection accept loop
+//! survives behind `net.mode = "threaded"` (and as the automatic
+//! fallback where epoll is unavailable).
 
 use super::frame::{read_frame_into, write_framed};
 use super::proto::{Request, Response};
+use crate::net::conn::{rpc_reject_bytes, ProtocolFactory, RpcProto};
+use crate::net::reactor::{ListenerId, Reactor};
+use crate::net::track::ConnTracker;
+use crate::net::{NetConfig, NetMetrics};
+use crate::util::metrics::Registry;
+use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Request handler: pure function from request to response. Handlers
-/// run on connection threads; anything shared must be Sync.
+/// run on worker (or connection) threads; anything shared must be Sync.
 pub type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync>;
+
+enum Mode {
+    /// Thin binding onto an epoll reactor; `owned` reactors (built by
+    /// the standalone constructor) are stopped with the server.
+    Reactor {
+        stack: Arc<Reactor>,
+        listener: ListenerId,
+        owned: bool,
+    },
+    /// Legacy thread-per-connection accept loop.
+    Threaded {
+        shutdown: Arc<AtomicBool>,
+        accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+        conns: Arc<ConnTracker>,
+    },
+}
 
 pub struct RpcServer {
     addr: SocketAddr,
-    shutdown: Arc<AtomicBool>,
-    accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
     requests_served: Arc<AtomicU64>,
+    mode: Mode,
+    stopped: AtomicBool,
 }
 
 impl RpcServer {
     /// Bind and start serving `handler` on `addr` (use port 0 for an
-    /// ephemeral port; read it back from [`RpcServer::addr`]).
+    /// ephemeral port; read it back from [`RpcServer::addr`]). Runs on
+    /// a private single-thread reactor (default [`NetConfig`]); falls
+    /// back to the threaded accept loop where epoll is unavailable.
     pub fn start(addr: &str, handler: Handler) -> anyhow::Result<Arc<Self>> {
+        let cfg = NetConfig::default();
+        match Reactor::start(&cfg, NetMetrics::register(&Registry::new())) {
+            Ok(stack) => Self::start_on(addr, handler, &stack, true),
+            Err(e) => {
+                crate::log_warn!("epoll reactor unavailable ({e}); using threaded listener");
+                Self::start_threaded(addr, handler, &cfg)
+            }
+        }
+    }
+
+    /// Bind onto a shared reactor (the assembled server's I/O plane).
+    /// `stop()` closes this listener only; the reactor outlives it.
+    pub fn start_shared(
+        addr: &str,
+        handler: Handler,
+        stack: &Arc<Reactor>,
+    ) -> anyhow::Result<Arc<Self>> {
+        Self::start_on(addr, handler, stack, false)
+    }
+
+    fn start_on(
+        addr: &str,
+        handler: Handler,
+        stack: &Arc<Reactor>,
+        owned: bool,
+    ) -> anyhow::Result<Arc<Self>> {
+        let listener = TcpListener::bind(addr)?;
+        let requests_served = Arc::new(AtomicU64::new(0));
+        let (make_handler, make_served) = (Arc::clone(&handler), Arc::clone(&requests_served));
+        let factory = ProtocolFactory {
+            label: "rpc",
+            make: Box::new(move || {
+                Box::new(RpcProto::new(Arc::clone(&make_handler), Arc::clone(&make_served)))
+            }),
+            reject: rpc_reject_bytes(),
+        };
+        let (listener, local) = stack.add_listener(listener, factory)?;
+        crate::log_info!("rpc server listening on {local} (reactor)");
+        Ok(Arc::new(RpcServer {
+            addr: local,
+            requests_served,
+            mode: Mode::Reactor { stack: Arc::clone(stack), listener, owned },
+            stopped: AtomicBool::new(false),
+        }))
+    }
+
+    /// Legacy thread-per-connection listener (`net.mode = "threaded"`
+    /// and the non-epoll fallback). `cfg` supplies the idle/read
+    /// timeout and the `max_connections` gate.
+    pub fn start_threaded(
+        addr: &str,
+        handler: Handler,
+        cfg: &NetConfig,
+    ) -> anyhow::Result<Arc<Self>> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let requests_served = Arc::new(AtomicU64::new(0));
+        let conns = Arc::new(ConnTracker::new());
 
         let accept_shutdown = Arc::clone(&shutdown);
         let accept_counter = Arc::clone(&requests_served);
+        let accept_conns = Arc::clone(&conns);
+        let idle_timeout = cfg.idle_timeout;
+        let max_connections = cfg.max_connections;
         let accept_thread = std::thread::Builder::new()
             .name(format!("rpc-accept-{}", local.port()))
             .spawn(move || {
@@ -37,15 +126,30 @@ impl RpcServer {
                         return;
                     }
                     match stream {
-                        Ok(stream) => {
+                        Ok(mut stream) => {
+                            if max_connections > 0 && accept_conns.len() >= max_connections {
+                                let _ = stream.write_all(&rpc_reject_bytes());
+                                continue;
+                            }
                             let handler = Arc::clone(&handler);
                             let counter = Arc::clone(&accept_counter);
                             let sd = Arc::clone(&accept_shutdown);
-                            let _ = std::thread::Builder::new()
+                            // Track before spawn so stop() can shut the
+                            // socket down and join the thread instead of
+                            // stranding it (detached-spawn bug).
+                            let id = accept_conns.register(&stream);
+                            let tracker = Arc::clone(&accept_conns);
+                            let spawned = std::thread::Builder::new()
                                 .name("rpc-conn".to_string())
                                 .spawn(move || {
-                                    Self::serve_connection(stream, handler, counter, sd)
+                                    Self::serve_connection(stream, handler, counter, sd, idle_timeout);
+                                    if let Some(id) = id {
+                                        tracker.deregister(id);
+                                    }
                                 });
+                            if let (Some(id), Ok(handle)) = (id, spawned) {
+                                accept_conns.attach(id, handle);
+                            }
                         }
                         Err(e) => {
                             crate::log_warn!("accept error: {e}");
@@ -54,12 +158,16 @@ impl RpcServer {
                 }
             })?;
 
-        crate::log_info!("rpc server listening on {local}");
+        crate::log_info!("rpc server listening on {local} (threaded)");
         Ok(Arc::new(RpcServer {
             addr: local,
-            shutdown,
-            accept_thread: Mutex::new(Some(accept_thread)),
             requests_served,
+            mode: Mode::Threaded {
+                shutdown,
+                accept_thread: Mutex::new(Some(accept_thread)),
+                conns,
+            },
+            stopped: AtomicBool::new(false),
         }))
     }
 
@@ -68,8 +176,13 @@ impl RpcServer {
         handler: Handler,
         counter: Arc<AtomicU64>,
         shutdown: Arc<AtomicBool>,
+        idle_timeout: std::time::Duration,
     ) {
         let _ = stream.set_nodelay(true);
+        // Idle connections wake from `read` every idle_timeout: they
+        // either observe shutdown or are dropped, so `stop()` never
+        // strands a thread blocked on a silent keep-alive peer.
+        let _ = stream.set_read_timeout(Some(idle_timeout));
         // Per-connection scratch: frame payloads land in `payload` and
         // responses serialize into `encoded` — both reuse their
         // capacity across every request on this connection.
@@ -115,16 +228,32 @@ impl RpcServer {
         self.requests_served.load(Ordering::Relaxed)
     }
 
-    /// Stop accepting. In-flight connections finish their current
-    /// request and exit on next read.
+    /// Stop accepting and release every connection. On the reactor
+    /// path the listener closes and its connections are closed (idle
+    /// ones now, in-flight ones after their reply flushes); a
+    /// standalone server also stops its private reactor, which joins
+    /// all threads. On the threaded path live connection sockets are
+    /// shut down and their threads joined.
     pub fn stop(&self) {
-        if self.shutdown.swap(true, Ordering::SeqCst) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
             return;
         }
-        // Poke the accept loop awake.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.lock().unwrap().take() {
-            let _ = t.join();
+        match &self.mode {
+            Mode::Reactor { stack, listener, owned } => {
+                stack.close_listener(*listener);
+                if *owned {
+                    stack.stop();
+                }
+            }
+            Mode::Threaded { shutdown, accept_thread, conns } => {
+                shutdown.store(true, Ordering::SeqCst);
+                // Poke the accept loop awake.
+                let _ = TcpStream::connect(self.addr);
+                if let Some(t) = accept_thread.lock().unwrap().take() {
+                    let _ = t.join();
+                }
+                conns.stop_all();
+            }
         }
     }
 }
@@ -141,19 +270,19 @@ mod tests {
     use crate::rpc::client::RpcClient;
     use crate::rpc::frame::{read_frame, write_frame};
 
+    fn echo_handler() -> Handler {
+        Arc::new(|req| match req {
+            Request::Ping => Response::Pong,
+            Request::Status => Response::Status { text: "ok".into() },
+            _ => Response::Error {
+                kind: crate::base::error::ErrorKind::Internal,
+                message: "unsupported".into(),
+            },
+        })
+    }
+
     fn echo_server() -> Arc<RpcServer> {
-        RpcServer::start(
-            "127.0.0.1:0",
-            Arc::new(|req| match req {
-                Request::Ping => Response::Pong,
-                Request::Status => Response::Status { text: "ok".into() },
-                _ => Response::Error {
-                    kind: crate::base::error::ErrorKind::Internal,
-                    message: "unsupported".into(),
-                },
-            }),
-        )
-        .unwrap()
+        RpcServer::start("127.0.0.1:0", echo_handler()).unwrap()
     }
 
     #[test]
@@ -213,5 +342,20 @@ mod tests {
             })
             .unwrap_or(false);
         assert!(!ok, "server still serving after stop");
+    }
+
+    #[test]
+    fn threaded_mode_still_serves_and_stops_promptly() {
+        let server =
+            RpcServer::start_threaded("127.0.0.1:0", echo_handler(), &NetConfig::default())
+                .unwrap();
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+        assert_eq!(client.call(&Request::Ping).unwrap(), Response::Pong);
+        // An idle keep-alive connection is open; stop() must still
+        // return promptly (socket shutdown + join), not wait out the
+        // 60s read timeout.
+        let t0 = std::time::Instant::now();
+        server.stop();
+        assert!(t0.elapsed() < std::time::Duration::from_secs(10));
     }
 }

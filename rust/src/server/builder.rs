@@ -39,6 +39,7 @@ use crate::lifecycle::policy::{
 };
 use crate::lifecycle::source::{FileSystemSource, ServingPolicy, WatchedServable};
 use crate::lifecycle::source_router::SourceRouter;
+use crate::net::{NetMetrics, NetMode, Reactor};
 use crate::rpc::proto::{Request, Response, VersionMetadata};
 use crate::rpc::server::RpcServer;
 use crate::runtime::hlo_servable::{hlo_source_adapter, HloServable};
@@ -75,6 +76,9 @@ pub struct ModelServer {
     rpc: Arc<RpcServer>,
     /// The REST gateway, when `http_addr` is configured.
     http: Option<Arc<HttpServer>>,
+    /// The shared epoll reactor both listeners bind onto; `None` in
+    /// threaded mode (or after the epoll fallback fired).
+    net_stack: Option<Arc<Reactor>>,
 }
 
 impl ModelServer {
@@ -206,22 +210,48 @@ impl ModelServer {
             }
         }));
 
+        // The I/O plane: one epoll reactor stack shared by both
+        // listeners, so connection count never translates into thread
+        // count. Threaded mode (config or epoll failure) falls back to
+        // the legacy per-connection accept loops.
+        let net_stack = match config.net.mode {
+            NetMode::Reactor => {
+                match Reactor::start(&config.net, NetMetrics::register(&core.registry)) {
+                    Ok(stack) => Some(stack),
+                    Err(e) => {
+                        crate::log_warn!(
+                            "net: reactor unavailable ({e:#}); \
+                             falling back to threaded connection handling"
+                        );
+                        None
+                    }
+                }
+            }
+            NetMode::Threaded => None,
+        };
+
         // RPC front end.
         let handler_core = Arc::clone(&core);
-        let rpc = RpcServer::start(
-            &format!("0.0.0.0:{}", config.port),
-            Arc::new(move |req| handler_core.handle(req)),
-        )?;
+        let rpc_addr = format!("0.0.0.0:{}", config.port);
+        let rpc_handler: crate::rpc::server::Handler =
+            Arc::new(move |req| handler_core.handle(req));
+        let rpc = match &net_stack {
+            Some(stack) => RpcServer::start_shared(&rpc_addr, rpc_handler, stack)?,
+            None => RpcServer::start_threaded(&rpc_addr, rpc_handler, &config.net)?,
+        };
 
         // HTTP/REST gateway: same core, JSON wire format.
         let http = match &core.config.http_addr {
-            Some(addr) => Some(HttpServer::start(
-                addr,
-                crate::http::router::gateway(Arc::clone(&core)),
-            )?),
+            Some(addr) => {
+                let gateway = crate::http::router::gateway(Arc::clone(&core));
+                Some(match &net_stack {
+                    Some(stack) => HttpServer::start_shared(addr, gateway, stack)?,
+                    None => HttpServer::start_threaded(addr, gateway, &config.net)?,
+                })
+            }
             None => None,
         };
-        Ok(Arc::new(ModelServer { core, rpc, http }))
+        Ok(Arc::new(ModelServer { core, rpc, http, net_stack }))
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
@@ -287,6 +317,11 @@ impl ModelServer {
         self.rpc.stop();
         if let Some(http) = &self.http {
             http.stop();
+        }
+        // Listeners are gone and in-flight replies have drained through
+        // the per-server stops; now tear down the shared reactor pool.
+        if let Some(stack) = &self.net_stack {
+            stack.stop();
         }
     }
 }

@@ -31,6 +31,7 @@
 
 use crate::base::error::ErrorKind;
 use crate::lifecycle::source::ServingPolicy;
+use crate::net::{NetConfig, NetMode};
 use crate::serving::{AdmissionConfig, BatchingConfig, BatchingOverride};
 use crate::util::config::Conf;
 use anyhow::{bail, Result};
@@ -76,6 +77,9 @@ pub struct ServerConfig {
     pub load_retries: u32,
     /// Backoff before the first load retry; doubles per attempt.
     pub load_retry_backoff: Duration,
+    /// I/O plane knobs (reactor/worker threads, connection limits,
+    /// idle sweeping) shared by both listeners.
+    pub net: NetConfig,
     pub models: Vec<ModelConfig>,
 }
 
@@ -93,6 +97,7 @@ impl Default for ServerConfig {
             admission: AdmissionConfig::default(),
             load_retries: 0,
             load_retry_backoff: Duration::from_millis(100),
+            net: NetConfig::default(),
             models: Vec::new(),
         }
     }
@@ -113,6 +118,7 @@ impl ServerConfig {
             "admission",
             "load_retries",
             "load_retry_backoff_ms",
+            "net",
             "models",
         ])?;
         let artifacts_root = PathBuf::from(conf.str_or(
@@ -159,6 +165,7 @@ impl ServerConfig {
         }
         let batching = Self::batching_from_conf(conf)?;
         let admission = Self::admission_from_conf(conf)?;
+        let net = Self::net_from_conf(conf)?;
         let load_retries = conf.u64_or("load_retries", 0) as u32;
         let load_retry_backoff_ms = conf.u64_or("load_retry_backoff_ms", 100);
         // Zero backoff with retries on would hammer a failing artifact
@@ -188,8 +195,56 @@ impl ServerConfig {
             admission,
             load_retries,
             load_retry_backoff: Duration::from_millis(load_retry_backoff_ms),
+            net,
             models,
         })
+    }
+
+    /// Parse the `"net"` object (all keys optional; absent = reactor
+    /// mode with defaults).
+    fn net_from_conf(conf: &Conf) -> Result<NetConfig> {
+        let defaults = NetConfig::default();
+        if let Some(obj) = conf.root().get("net") {
+            Conf::from_json(obj.clone(), "net").allow_keys(&[
+                "mode",
+                "reactor_threads",
+                "worker_threads",
+                "max_connections",
+                "idle_timeout_ms",
+            ])?;
+        }
+        let mode = match conf.str_or("net.mode", "reactor") {
+            "reactor" => NetMode::Reactor,
+            "threaded" => NetMode::Threaded,
+            other => bail!("net.mode: unknown mode '{other}' (reactor | threaded)"),
+        };
+        let net = NetConfig {
+            mode,
+            reactor_threads: conf
+                .u64_or("net.reactor_threads", defaults.reactor_threads as u64)
+                as usize,
+            worker_threads: conf.u64_or("net.worker_threads", defaults.worker_threads as u64)
+                as usize,
+            max_connections: conf
+                .u64_or("net.max_connections", defaults.max_connections as u64)
+                as usize,
+            idle_timeout: Duration::from_millis(
+                conf.u64_or("net.idle_timeout_ms", defaults.idle_timeout.as_millis() as u64),
+            ),
+        };
+        // Zero threads would deadlock every request; a zero idle
+        // timeout would sweep connections as they arrive. Config
+        // typos, caught at parse time (max_connections 0 = unlimited
+        // stays valid).
+        if net.reactor_threads == 0 || net.worker_threads == 0 {
+            return Err(ErrorKind::InvalidArgument
+                .err("net: reactor_threads and worker_threads must be positive"));
+        }
+        if net.idle_timeout.is_zero() {
+            return Err(ErrorKind::InvalidArgument
+                .err("net: idle_timeout_ms must be positive (raise it instead of disabling)"));
+        }
+        Ok(net)
     }
 
     /// Parse the `"admission"` object (all keys optional; absent =
@@ -572,6 +627,74 @@ mod tests {
                 assert_eq!(ErrorKind::of(&err), ErrorKind::InvalidArgument, "{bad}");
             }
         }
+    }
+
+    #[test]
+    fn net_knobs_parse_and_validate() {
+        // Absent: reactor mode with defaults.
+        let cfg = ServerConfig::from_conf(
+            &Conf::parse(r#"{"models":[{"name":"x"}]}"#, "t").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.net, NetConfig::default());
+        assert_eq!(cfg.net.mode, NetMode::Reactor);
+
+        // Full parse.
+        let cfg = ServerConfig::from_conf(
+            &Conf::parse(
+                r#"{
+                  "net": {
+                    "mode": "threaded",
+                    "reactor_threads": 2,
+                    "worker_threads": 8,
+                    "max_connections": 1024,
+                    "idle_timeout_ms": 5000
+                  },
+                  "models": [{"name": "x"}]
+                }"#,
+                "t",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.net.mode, NetMode::Threaded);
+        assert_eq!(cfg.net.reactor_threads, 2);
+        assert_eq!(cfg.net.worker_threads, 8);
+        assert_eq!(cfg.net.max_connections, 1024);
+        assert_eq!(cfg.net.idle_timeout, Duration::from_millis(5000));
+
+        // Config typos are parse-time errors (InvalidArgument for the
+        // range violations, PR4 style).
+        for (bad, needle) in [
+            (r#"{"net": {"mode": "uring"}, "models":[{"name":"x"}]}"#, "unknown mode"),
+            (r#"{"net": {"reactor_threads": 0}, "models":[{"name":"x"}]}"#, "positive"),
+            (r#"{"net": {"worker_threads": 0}, "models":[{"name":"x"}]}"#, "positive"),
+            (r#"{"net": {"idle_timeout_ms": 0}, "models":[{"name":"x"}]}"#, "idle_timeout_ms"),
+            (r#"{"net": {"workerthreads": 4}, "models":[{"name":"x"}]}"#, "unknown key"),
+        ] {
+            let err = ServerConfig::from_conf(&Conf::parse(bad, "t").unwrap()).unwrap_err();
+            assert!(err.to_string().contains(needle), "{bad}: {err}");
+        }
+        let err = ServerConfig::from_conf(
+            &Conf::parse(
+                r#"{"net": {"worker_threads": 0}, "models":[{"name":"x"}]}"#,
+                "t",
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(ErrorKind::of(&err), ErrorKind::InvalidArgument);
+
+        // max_connections 0 = unlimited stays valid.
+        let cfg = ServerConfig::from_conf(
+            &Conf::parse(
+                r#"{"net": {"max_connections": 0}, "models":[{"name":"x"}]}"#,
+                "t",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.net.max_connections, 0);
     }
 
     #[test]

@@ -46,6 +46,13 @@ cargo test -q --test serving_concurrency
 echo "==> cargo test -q --test chaos"
 cargo test -q --test chaos
 
+# The net subsystem's scaling guarantees: 1000+ keep-alive connections
+# on O(reactor+worker) threads, slow-loris sweep, over-limit rejects,
+# drain-on-stop, and the legacy threaded path's joined teardown. Named
+# explicitly so an I/O-plane regression is its own failing step.
+echo "==> cargo test -q --test net_scaling"
+cargo test -q --test net_scaling
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "==> cargo fmt --check"
     cargo fmt --check
@@ -64,7 +71,7 @@ if [ "$BENCH_SMOKE" = "1" ]; then
     # Every registered bench, one short run each. bench_e2e exits
     # early (cleanly) when artifacts are missing.
     for b in bench_batching bench_throughput bench_tail_latency bench_http \
-             bench_rcu bench_hedging bench_startup bench_transition \
+             bench_net bench_rcu bench_hedging bench_startup bench_transition \
              bench_binpack bench_e2e; do
         echo "==> bench smoke: $b"
         TENSORSERVE_BENCH_SMOKE=1 cargo bench --bench "$b"
