@@ -477,6 +477,39 @@ pub fn metadata_json(model: &str, versions: &[VersionMetadata]) -> Json {
     ])
 }
 
+/// `GET /v1/models` reply: every model the server holds, with
+/// per-version state and labels (no signatures — the listing is the
+/// fleet inventory; drill into `/v1/models/{name}` for defs).
+pub fn models_list_json(models: &[(String, Vec<(u64, String, Vec<String>)>)]) -> Json {
+    let models: Vec<Json> = models
+        .iter()
+        .map(|(name, versions)| {
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                (
+                    "versions",
+                    Json::Arr(
+                        versions
+                            .iter()
+                            .map(|(version, state, labels)| {
+                                Json::obj(vec![
+                                    ("version", num_u64(*version)),
+                                    ("state", Json::str(state)),
+                                    (
+                                        "labels",
+                                        Json::Arr(labels.iter().map(Json::str).collect()),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("models", Json::Arr(models))])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -72,6 +72,7 @@ fn route(core: &ServerCore, req: &HttpRequest) -> HttpResponse {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => HttpResponse::text(200, "ok\n"),
         ("GET", "/metrics") => HttpResponse::text(200, &expose::metrics_text(core)),
+        ("GET", "/v1/models") => models_list(core),
         _ if req.path.starts_with("/v1/models/") => models_route(core, req),
         (method, path) => {
             HttpResponse::error(404, &format!("no route for {method} {path}"))
@@ -301,6 +302,28 @@ fn data_plane(
             }
         }
     }
+}
+
+/// `GET /v1/models`: fleet inventory — every model the server holds,
+/// with per-version state and labels, from the lifecycle monitor.
+fn models_list(core: &ServerCore) -> HttpResponse {
+    let mut by_model: std::collections::BTreeMap<String, Vec<(u64, String, Vec<String>)>> =
+        Default::default();
+    for (id, state) in core.avm().monitor().snapshot() {
+        let labels = core.labels.labels_of_version(&id.name, id.version);
+        by_model
+            .entry(id.name)
+            .or_default()
+            .push((id.version, state.describe(), labels));
+    }
+    let models: Vec<(String, Vec<(u64, String, Vec<String>)>)> = by_model
+        .into_iter()
+        .map(|(name, mut versions)| {
+            versions.sort_by_key(|(v, _, _)| *v);
+            (name, versions)
+        })
+        .collect();
+    HttpResponse::json(200, &codec::models_list_json(&models))
 }
 
 fn metadata(core: &ServerCore, spec: ModelSpec) -> HttpResponse {

@@ -24,7 +24,12 @@
 //!   version unloaded concurrently, restoring the prior mapping when
 //!   it still serves.
 //!
-//! Label persistence in the TFS² store is a ROADMAP follow-on.
+//! Persistence: this resolver is in-memory only. When the server is
+//! configured with `label_store_path`, `server::builder` writes every
+//! label mutation through the transactional `tfs2::store` and replays
+//! the persisted mappings on Ready events, so canary/stable labels
+//! survive restarts; the TFS² Controller keeps its own authoritative
+//! copy under `label/{model}/{label}` in the control-plane store.
 
 use crate::bail_kind;
 use crate::base::error::ErrorKind;

@@ -55,6 +55,9 @@ pub enum Request {
     ModelStatus { model: String },
     /// Admin: server metrics/status dump.
     Status,
+    /// Admin: structured metric samples (what the TFS² Synchronizer
+    /// scrapes for autoscaling — lane depths, queue delays, sheds).
+    Metrics,
     /// Liveness probe / no-op (used by benches to measure RPC floor).
     Ping,
     /// Deadline envelope: the inner request must complete within
@@ -139,6 +142,10 @@ pub enum Response {
     Ack,
     ModelStatus { versions: Vec<(u64, String)> },
     Status { text: String },
+    /// Structured metric samples, name-sorted: counters and gauges by
+    /// name, histograms expanded to `.count`/`.mean`/`.p50`/`.p99`/
+    /// `.max` — machine-readable where `Status` is a text dump.
+    Metrics { samples: Vec<(String, f64)> },
     Pong,
     /// A typed serving error: `kind` is the structured classification
     /// (what the client should do), `message` the human detail. The
@@ -618,6 +625,7 @@ impl Request {
                 put_u64(out, *deadline_ms);
                 inner.encode_body(out);
             }
+            Request::Metrics => out.push(13),
         }
     }
 
@@ -683,6 +691,7 @@ impl Request {
                     inner: Box::new(Self::decode_with(r, false)?),
                 }
             }
+            13 => Request::Metrics,
             t => bail!("unknown request tag {t}"),
         };
         Ok(req)
@@ -812,6 +821,15 @@ impl Response {
                 put_str(out, text);
             }
             Response::Pong => out.push(7),
+            Response::Metrics { samples } => {
+                out.push(10);
+                put_u32(out, samples.len() as u32);
+                for (name, value) in samples {
+                    put_str(out, name);
+                    // f64 as raw bits: exact roundtrip, no formatting.
+                    put_u64(out, value.to_bits());
+                }
+            }
             Response::ModelMetadata { model, versions } => {
                 out.push(8);
                 put_str(out, model);
@@ -893,6 +911,18 @@ impl Response {
             }
             6 => Response::Status { text: r.str()? },
             7 => Response::Pong,
+            10 => {
+                let n = r.u32()? as usize;
+                if n > 1 << 16 {
+                    bail!("implausible sample count {n}");
+                }
+                let mut samples = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name = r.str()?;
+                    samples.push((name, f64::from_bits(r.u64()?)));
+                }
+                Response::Metrics { samples }
+            }
             8 => {
                 let model = r.str()?;
                 let n = r.u32()? as usize;
@@ -1027,6 +1057,7 @@ mod tests {
         roundtrip_req(Request::SetAspired { model: "m".into(), versions: vec![] });
         roundtrip_req(Request::ModelStatus { model: "m".into() });
         roundtrip_req(Request::Status);
+        roundtrip_req(Request::Metrics);
         roundtrip_req(Request::Ping);
         roundtrip_req(
             Request::predict("m", None, Tensor::zeros(vec![2, 4])).with_deadline_ms(150),
@@ -1120,6 +1151,16 @@ mod tests {
             versions: vec![(1, "ready".into()), (2, "loading".into())],
         });
         roundtrip_resp(Response::Status { text: "ok\nqps 12".into() });
+        // Metric samples: f64 bit-exact across the wire, including
+        // values a decimal formatter would mangle.
+        roundtrip_resp(Response::Metrics {
+            samples: vec![
+                ("batch.m.lane_depth".into(), 3.0),
+                ("batch.m.queue_delay_ns.p99".into(), 0.1 + 0.2),
+                ("admission.shed".into(), f64::MAX),
+            ],
+        });
+        roundtrip_resp(Response::Metrics { samples: vec![] });
         roundtrip_resp(Response::Pong);
         for kind in [
             ErrorKind::NotFound,
@@ -1295,6 +1336,13 @@ mod tests {
             .encode();
         for cut in 0..full.len() {
             assert!(Request::decode(&full[..cut]).is_err(), "delete-label cut={cut}");
+        }
+        let full = Response::Metrics {
+            samples: vec![("batch.m.lane_depth".into(), 2.5)],
+        }
+        .encode();
+        for cut in 0..full.len() {
+            assert!(Response::decode(&full[..cut]).is_err(), "metrics cut={cut}");
         }
         let spec = ArtifactSpec::synthetic_classifier("s", 1, 4, 2);
         let full = Response::ModelMetadata {

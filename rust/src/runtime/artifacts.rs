@@ -264,6 +264,66 @@ impl ArtifactSpec {
         }
     }
 
+    /// Serialize back to the `spec.json` schema [`ArtifactSpec::parse`]
+    /// reads. Every signature is written explicitly (method + output
+    /// names), so parsing the result reconstructs the identical
+    /// signature map and `ensure_default_signatures` is a no-op.
+    pub fn to_json(&self) -> Json {
+        let tensor = |t: &TensorInfo| {
+            Json::obj(vec![
+                ("name", Json::str(t.name.clone())),
+                ("dtype", Json::str(t.dtype.clone())),
+                ("shape", Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect())),
+            ])
+        };
+        let signatures = Json::Obj(
+            self.signatures
+                .iter()
+                .map(|(name, def)| {
+                    let outputs =
+                        def.outputs.iter().map(|o| Json::str(o.name.clone())).collect();
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("method", Json::str(def.method.clone())),
+                            ("outputs", Json::Arr(outputs)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("platform", Json::str(self.platform.clone())),
+            ("signature", Json::str(self.signature.clone())),
+            ("model_name", Json::str(self.model_name.clone())),
+            ("version", Json::Num(self.version as f64)),
+            ("input", tensor(&self.input)),
+            ("outputs", Json::Arr(self.outputs.iter().map(tensor).collect())),
+            ("signatures", signatures),
+            (
+                "allowed_batch_sizes",
+                Json::Arr(self.allowed_batch_sizes.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            ("artifact_pattern", Json::str(self.artifact_pattern.clone())),
+            ("ram_estimate_bytes", Json::Num(self.ram_estimate_bytes as f64)),
+            ("n_params", Json::Num(self.n_params as f64)),
+            ("metrics", self.metrics.clone()),
+        ])
+    }
+
+    /// Write `spec.json` into `version_dir` (creating it) — the
+    /// on-disk form [`ArtifactSpec::load`] reads back. How the control
+    /// plane materializes synthetic servables under a file-system
+    /// source's watch root.
+    pub fn write_to(&self, version_dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(version_dir)
+            .with_context(|| format!("creating {}", version_dir.display()))?;
+        let path = version_dir.join("spec.json");
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
     /// Two-headed synthetic spec: a classify head (`log_probs`,
     /// `class`) and a regress head (`value`) over one shared input —
     /// the MultiInference test fixture.
@@ -516,6 +576,25 @@ mod tests {
         )
         .unwrap();
         assert!(ArtifactSpec::parse(&no_sizes, "t").is_err());
+    }
+
+    #[test]
+    fn spec_roundtrips_through_json_and_disk() {
+        // to_json → parse must reconstruct the identical spec,
+        // including the explicit multi-head signature map.
+        let spec = ArtifactSpec::synthetic_multi_head("rt", 7, 8, 3);
+        let back = ArtifactSpec::parse(&spec.to_json(), "roundtrip").unwrap();
+        assert_eq!(back, spec);
+
+        // write_to → load: the on-disk form the control plane emits.
+        let dir = std::env::temp_dir()
+            .join(format!("ts-artifacts-rt-{}", std::process::id()))
+            .join("rt")
+            .join("7");
+        spec.write_to(&dir).unwrap();
+        let loaded = ArtifactSpec::load(&dir).unwrap();
+        assert_eq!(loaded, spec);
+        std::fs::remove_dir_all(dir.parent().unwrap().parent().unwrap()).ok();
     }
 
     #[test]

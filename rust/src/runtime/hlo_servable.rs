@@ -54,6 +54,15 @@ impl HloServable {
         if spec.platform != "hlo" {
             bail!("{}: platform '{}' is not hlo", version_dir.display(), spec.platform);
         }
+        // A spec whose artifact pattern is the "synthetic" sentinel
+        // (written by [`ArtifactSpec::write_to`]) carries no compiled
+        // files: it loads as the synthetic engine. This lets the full
+        // aspired-versions chain — FileSystemSource scan → loader →
+        // load — run in builds without the PJRT backend, which is how
+        // the TFS² control plane materializes servables onto replicas.
+        if spec.artifact_pattern == "synthetic" {
+            return Ok(HloServable::synthetic(spec));
+        }
         let mut execs = BTreeMap::new();
         for &b in &spec.allowed_batch_sizes {
             let path = spec.artifact_path(version_dir, b);
@@ -469,6 +478,28 @@ mod tests {
         // Charge spent: the next run succeeds.
         assert_eq!(servable.run(&input).unwrap().len(), 2);
         assert_eq!(servable.executions(), 1);
+    }
+
+    #[test]
+    fn synthetic_spec_on_disk_loads_without_backend() {
+        // write_to → HloServable::load: the "synthetic" artifact
+        // pattern short-circuits compilation, so the whole file-system
+        // source chain works with no PJRT backend and no HLO files.
+        let spec = ArtifactSpec::synthetic_multi_head("disk_syn", 3, 8, 3);
+        let dir = std::env::temp_dir()
+            .join(format!("ts-hlo-disk-syn-{}", std::process::id()))
+            .join("disk_syn")
+            .join("3");
+        spec.write_to(&dir).unwrap();
+        let rt = XlaRuntime::shared().unwrap();
+        let servable = HloServable::load(&rt, &dir).unwrap();
+        assert_eq!(servable.spec, spec);
+        let out = servable.run(&Tensor::zeros(vec![2, 8])).unwrap();
+        assert_eq!(out.len(), 3);
+        // The loader's pre-load estimate reads the same sidecar.
+        let est = HloLoader::new(rt, dir.clone()).estimate().unwrap();
+        assert_eq!(est.ram_bytes, spec.ram_estimate_bytes);
+        std::fs::remove_dir_all(dir.parent().unwrap().parent().unwrap()).ok();
     }
 
     #[test]

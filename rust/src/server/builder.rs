@@ -45,6 +45,8 @@ use crate::rpc::server::RpcServer;
 use crate::runtime::hlo_servable::{hlo_source_adapter, HloServable};
 use crate::runtime::pjrt::XlaRuntime;
 use crate::serving::{AdmissionControl, RunOptions, SessionRegistry};
+use crate::tfs2::store::Store;
+use crate::util::json::Json;
 use crate::util::metrics::Registry;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -68,6 +70,10 @@ pub struct ServerCore {
     pub admission: Arc<AdmissionControl>,
     pub registry: Arc<Registry>,
     pub logger: Arc<RequestLogger>,
+    /// Durable label store (TFS²): when `label_store_path` is set,
+    /// label mutations write through here and Ready events replay the
+    /// persisted mappings, so canary/stable labels survive restarts.
+    label_store: Option<Arc<Store>>,
 }
 
 /// The running canonical server.
@@ -181,6 +187,13 @@ impl ModelServer {
         sessions.attach(avm.basic());
         let admission = AdmissionControl::new(config.admission.clone(), &registry);
 
+        // Durable labels: open the transactional store up front so a
+        // corrupt path fails the boot, not the first SetVersionLabel.
+        let label_store = match &config.label_store_path {
+            Some(path) => Some(Store::open(path, 0)?),
+            None => None,
+        };
+
         let core = Arc::new(ServerCore {
             config: config.clone(),
             avm,
@@ -190,12 +203,15 @@ impl ModelServer {
             admission,
             registry,
             logger: Arc::new(RequestLogger::new(0.1, 4096, 42)),
+            label_store,
         });
 
         // Label GC: drop labels whose version leaves serving, so a
         // labeled lookup after an unload reports "no version labeled"
         // instead of dangling on a version the serving map no longer
         // holds (closes the set-time-only race in `SetVersionLabel`).
+        // GC is in-memory only: a persisted label deliberately stays
+        // in the store so it replays if its version comes back.
         let gc_labels = Arc::clone(&core.labels);
         core.avm.basic().bus().subscribe(Arc::new(move |ev| {
             use crate::lifecycle::harness::State;
@@ -209,6 +225,38 @@ impl ModelServer {
                 }
             }
         }));
+
+        // Label replay: persisted labels re-attach when their version
+        // reaches Ready, so canary/stable mappings survive a restart
+        // without waiting for an operator to re-issue them.
+        if let Some(store) = &core.label_store {
+            let replay_store = Arc::clone(store);
+            let replay_labels = Arc::clone(&core.labels);
+            core.avm.basic().bus().subscribe(Arc::new(move |ev| {
+                use crate::lifecycle::harness::State;
+                if !matches!(ev.state, State::Ready) {
+                    return;
+                }
+                for (key, value) in
+                    replay_store.scan_prefix(&format!("label/{}/", ev.id.name))
+                {
+                    let Some(label) = key.rsplit('/').next() else { continue };
+                    let Some(version) = value.as_u64() else { continue };
+                    if version != ev.id.version {
+                        continue;
+                    }
+                    // The Ready event itself attests the version is
+                    // serving; consulting the ready map here instead
+                    // would race the map update the event describes.
+                    if replay_labels.set(&ev.id.name, label, version, &[version]).is_ok() {
+                        crate::log_info!(
+                            "label replay: '{label}' -> {}:{version} restored from store",
+                            ev.id.name
+                        );
+                    }
+                }
+            }));
+        }
 
         // The I/O plane: one epoll reactor stack shared by both
         // listeners, so connection count never translates into thread
@@ -350,6 +398,15 @@ impl ServerCore {
     /// The RPC request handler (one call per request frame).
     pub fn handle(&self, req: Request) -> Response {
         let t0 = Instant::now();
+        // Per-replica fault seam: a configured `fault_tag` exposes the
+        // whole handler as fault point `rpc:{tag}`, so fleet tests can
+        // slow or fail one replica in a process hosting many (the
+        // plain `exec:{model}` point hits every replica at once).
+        if let Some(tag) = &self.config.fault_tag {
+            if let Err(e) = crate::util::fault::hit(&format!("rpc:{tag}")) {
+                return Response::error(&e);
+            }
+        }
         // Deadline envelope: unwrap into (inner request, run options).
         // The wire decoder rejects nesting; in-process callers get the
         // lenient reading (innermost envelope wins).
@@ -511,7 +568,25 @@ impl ServerCore {
                             // that keeps the end state consistent
                             // (label dropped, never dangling).
                             if self.avm.basic().ready_versions(&model).contains(&version) {
-                                Response::Ack
+                                // Durable write-through; memory rolls
+                                // back on persist failure so the two
+                                // never disagree about a durable label.
+                                match self.persist_label(&model, &label, Some(version)) {
+                                    Ok(()) => Response::Ack,
+                                    Err(e) => {
+                                        let restore = prev.filter(|p| {
+                                            self.avm
+                                                .basic()
+                                                .ready_versions(&model)
+                                                .contains(p)
+                                        });
+                                        self.labels.rollback(&model, &label, version, restore);
+                                        Response::Error {
+                                            kind: ErrorKind::Internal,
+                                            message: format!("label persist failed: {e:#}"),
+                                        }
+                                    }
+                                }
                             } else {
                                 // Compare-and-rollback: restore the
                                 // prior mapping if that version still
@@ -536,12 +611,28 @@ impl ServerCore {
             }
             Request::DeleteVersionLabel { model, label } => (
                 "delete_version_label",
-                if self.labels.remove(&model, &label) {
-                    Response::Ack
-                } else {
-                    Response::Error {
-                        kind: ErrorKind::NotFound,
-                        message: format!("model '{model}' has no version labeled '{label}'"),
+                {
+                    // The store may hold a label memory has GC'd (its
+                    // version unloaded); deleting that is still a hit.
+                    let in_memory = self.labels.remove(&model, &label);
+                    let in_store = self.label_store.as_ref().map_or(false, |s| {
+                        s.get(&format!("label/{model}/{label}")).is_some()
+                    });
+                    if in_memory || in_store {
+                        match self.persist_label(&model, &label, None) {
+                            Ok(()) => Response::Ack,
+                            Err(e) => Response::Error {
+                                kind: ErrorKind::Internal,
+                                message: format!("label persist failed: {e:#}"),
+                            },
+                        }
+                    } else {
+                        Response::Error {
+                            kind: ErrorKind::NotFound,
+                            message: format!(
+                                "model '{model}' has no version labeled '{label}'"
+                            ),
+                        }
                     }
                 },
             ),
@@ -573,6 +664,13 @@ impl ServerCore {
                     .collect();
                 ("model_status", Response::ModelStatus { versions })
             }
+            Request::Metrics => {
+                // Structured counterpart of Status: the Synchronizer
+                // scrapes these samples (lane depth, queue delay, shed
+                // counts) to drive fleet autoscaling without parsing
+                // the human-oriented text dump.
+                ("metrics", Response::Metrics { samples: self.registry.samples() })
+            }
             Request::Status => {
                 // Snapshot buffer-pool state into gauges so the dump
                 // shows the zero-allocation hot path working.
@@ -596,6 +694,20 @@ impl ServerCore {
             .histogram(&format!("rpc.{api}.latency_ns"))
             .record_duration(t0.elapsed());
         resp
+    }
+
+    /// Write-through for the durable label store: `Some(version)`
+    /// upserts, `None` deletes. A no-op without `label_store_path`.
+    fn persist_label(&self, model: &str, label: &str, version: Option<u64>) -> Result<()> {
+        let Some(store) = &self.label_store else { return Ok(()) };
+        let key = format!("label/{model}/{label}");
+        store.txn(|t| {
+            match version {
+                Some(v) => t.put(&key, Json::Num(v as f64)),
+                None => t.delete(&key),
+            }
+            Ok(())
+        })
     }
 
     fn log(&self, model: &str, version: u64, resp: &crate::inference::predict::PredictResponse) {
@@ -684,6 +796,7 @@ fn api_of(req: &Request) -> &'static str {
         Request::SetAspired { .. } => "set_aspired",
         Request::ModelStatus { .. } => "model_status",
         Request::Status => "status",
+        Request::Metrics => "metrics",
         Request::WithDeadline { .. } => "with_deadline",
     }
 }
@@ -1207,5 +1320,129 @@ mod tests {
             .unwrap_err();
         assert!(err.to_string().contains("ghost"), "{err}");
         server.stop();
+    }
+
+    #[test]
+    fn metrics_rpc_returns_structured_samples() {
+        let server = synthetic_server(&[1]);
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+        client
+            .call_ok(&Request::Predict {
+                spec: crate::inference::ModelSpec::latest("syn"),
+                signature: String::new(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+            })
+            .unwrap();
+        match client.call_ok(&Request::Metrics).unwrap() {
+            Response::Metrics { samples } => {
+                let get = |name: &str| {
+                    samples
+                        .iter()
+                        .find(|(n, _)| n == name)
+                        .map(|(_, v)| *v)
+                        .unwrap_or_else(|| panic!("no sample '{name}' in {samples:?}"))
+                };
+                assert!(get("rpc.predict.requests") >= 1.0);
+                assert!(get("rpc.predict.latency_ns.count") >= 1.0);
+                // Name-sorted, so scrapers can binary-search or diff.
+                let names: Vec<&String> = samples.iter().map(|(n, _)| n).collect();
+                let mut sorted = names.clone();
+                sorted.sort();
+                assert_eq!(names, sorted);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn durable_labels_survive_server_restart() {
+        let dir = std::env::temp_dir().join(format!("ts-label-store-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let config = ServerConfig {
+            label_store_path: Some(dir.join("labels")),
+            ..empty_config()
+        };
+
+        // First life: load two versions, label them, stop.
+        let server = ModelServer::start(config.clone()).unwrap();
+        for v in [1u64, 2] {
+            server
+                .avm()
+                .basic()
+                .load_and_wait(
+                    ServableId::new("syn", v),
+                    synthetic_loader(ArtifactSpec::synthetic_multi_head("syn", v, 8, 3)),
+                    Duration::from_secs(30),
+                )
+                .unwrap();
+        }
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+        for (label, version) in [("stable", 1u64), ("canary", 2)] {
+            client
+                .call_ok(&Request::SetVersionLabel {
+                    model: "syn".into(),
+                    label: label.into(),
+                    version,
+                })
+                .unwrap();
+        }
+        // A deleted label must not resurrect after restart.
+        client
+            .call_ok(&Request::SetVersionLabel {
+                model: "syn".into(),
+                label: "doomed".into(),
+                version: 2,
+            })
+            .unwrap();
+        client
+            .call_ok(&Request::DeleteVersionLabel {
+                model: "syn".into(),
+                label: "doomed".into(),
+            })
+            .unwrap();
+        server.stop();
+        drop(client);
+
+        // Second life: same store path, fresh process state. Labels
+        // re-attach as their versions reach Ready — no operator call.
+        let server = ModelServer::start(config).unwrap();
+        for v in [1u64, 2] {
+            server
+                .avm()
+                .basic()
+                .load_and_wait(
+                    ServableId::new("syn", v),
+                    synthetic_loader(ArtifactSpec::synthetic_multi_head("syn", v, 8, 3)),
+                    Duration::from_secs(30),
+                )
+                .unwrap();
+        }
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+        for (label, want) in [("stable", 1u64), ("canary", 2)] {
+            match client
+                .call_ok(&Request::Predict {
+                    spec: crate::inference::ModelSpec::with_label("syn", label),
+                    signature: String::new(),
+                    inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+                })
+                .unwrap()
+            {
+                Response::Predict { model_version, .. } => {
+                    assert_eq!(model_version, want, "label {label} after restart")
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let err = client
+            .call_ok(&Request::Predict {
+                spec: crate::inference::ModelSpec::with_label("syn", "doomed"),
+                signature: String::new(),
+                inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("doomed"), "{err}");
+        server.stop();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -80,6 +80,16 @@ pub struct ServerConfig {
     /// I/O plane knobs (reactor/worker threads, connection limits,
     /// idle sweeping) shared by both listeners.
     pub net: NetConfig,
+    /// Durable version-label store path. When set, `SetVersionLabel`/
+    /// `DeleteVersionLabel` write through to a transactional WAL+
+    /// snapshot store here and persisted labels re-attach as their
+    /// versions come back up after a restart. `None` = in-memory only.
+    pub label_store_path: Option<PathBuf>,
+    /// Fleet fault-injection tag: when set, every RPC this server
+    /// handles consults the `rpc:{tag}` fault point, so chaos tests can
+    /// fail or slow ONE replica (the registry is process-global; the
+    /// tag scopes it). `None` = no per-replica seam.
+    pub fault_tag: Option<String>,
     pub models: Vec<ModelConfig>,
 }
 
@@ -98,6 +108,8 @@ impl Default for ServerConfig {
             load_retries: 0,
             load_retry_backoff: Duration::from_millis(100),
             net: NetConfig::default(),
+            label_store_path: None,
+            fault_tag: None,
             models: Vec::new(),
         }
     }
@@ -119,6 +131,8 @@ impl ServerConfig {
             "load_retries",
             "load_retry_backoff_ms",
             "net",
+            "label_store_path",
+            "fault_tag",
             "models",
         ])?;
         let artifacts_root = PathBuf::from(conf.str_or(
@@ -175,6 +189,26 @@ impl ServerConfig {
                 "load_retry_backoff_ms must be positive when load_retries is set",
             ));
         }
+        // Empty strings for these would silently disable the feature
+        // (or arm a fault point named "rpc:") — config typos.
+        let label_store_path = conf
+            .root()
+            .get("label_store_path")
+            .and_then(|v| v.as_str())
+            .map(str::to_string);
+        if label_store_path.as_deref() == Some("") {
+            return Err(
+                ErrorKind::InvalidArgument.err("label_store_path must not be empty")
+            );
+        }
+        let fault_tag = conf
+            .root()
+            .get("fault_tag")
+            .and_then(|v| v.as_str())
+            .map(str::to_string);
+        if fault_tag.as_deref() == Some("") {
+            return Err(ErrorKind::InvalidArgument.err("fault_tag must not be empty"));
+        }
         Ok(ServerConfig {
             port: conf.u64_or("port", 0) as u16,
             http_addr: conf
@@ -196,6 +230,8 @@ impl ServerConfig {
             load_retries,
             load_retry_backoff: Duration::from_millis(load_retry_backoff_ms),
             net,
+            label_store_path: label_store_path.map(PathBuf::from),
+            fault_tag,
             models,
         })
     }
@@ -695,6 +731,40 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.net.max_connections, 0);
+    }
+
+    #[test]
+    fn fleet_knobs_parse_and_validate() {
+        // Absent: both off.
+        let cfg = ServerConfig::from_conf(
+            &Conf::parse(r#"{"models":[{"name":"x"}]}"#, "t").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.label_store_path, None);
+        assert_eq!(cfg.fault_tag, None);
+
+        let cfg = ServerConfig::from_conf(
+            &Conf::parse(
+                r#"{"label_store_path": "/var/lib/ts/labels",
+                    "fault_tag": "job-0/1",
+                    "models":[{"name":"x"}]}"#,
+                "t",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.label_store_path, Some(PathBuf::from("/var/lib/ts/labels")));
+        assert_eq!(cfg.fault_tag.as_deref(), Some("job-0/1"));
+
+        // Empty strings are typos, rejected at parse time.
+        for bad in [
+            r#"{"label_store_path": "", "models":[{"name":"x"}]}"#,
+            r#"{"fault_tag": "", "models":[{"name":"x"}]}"#,
+        ] {
+            let err =
+                ServerConfig::from_conf(&Conf::parse(bad, "t").unwrap()).unwrap_err();
+            assert_eq!(ErrorKind::of(&err), ErrorKind::InvalidArgument, "{bad}");
+        }
     }
 
     #[test]

@@ -6,12 +6,22 @@
 //! Pure decision logic (the cluster applies the decisions): per-job
 //! target replica counts from observed load, with hysteresis and
 //! cooldown so flapping traffic doesn't flap replicas.
+//!
+//! Two entry points share one decision core:
+//! * [`Autoscaler::tick`] — a scalar load per job (e.g. qps), the
+//!   original interface;
+//! * [`Autoscaler::tick_signals`] — structured [`LoadSignal`]s as the
+//!   Synchronizer scrapes them from replicas: batching lane depth is
+//!   the primary load measure, admission sheds add weighted pressure,
+//!   and a queue-delay p99 above the SLO forces a scale-up even when
+//!   lane depth alone looks tolerable (depth measures queued work,
+//!   delay measures how long that queue actually holds requests).
 
 use std::collections::HashMap;
 
 #[derive(Debug, Clone)]
 pub struct AutoscalerConfig {
-    /// Target per-replica load (e.g. qps) the scaler aims for.
+    /// Target per-replica load (lane depth or qps) the scaler aims for.
     pub target_load_per_replica: f64,
     /// Scale up when load/replica exceeds target * up_threshold.
     pub up_threshold: f64,
@@ -21,6 +31,14 @@ pub struct AutoscalerConfig {
     pub max_replicas: usize,
     /// Ticks to wait after a scaling action before acting again.
     pub cooldown_ticks: u32,
+    /// Queue-delay p99 SLO: a job whose scraped
+    /// `batch.*.queue_delay_ns.p99` exceeds this scales up regardless
+    /// of lane depth (signals path only). Default 50ms.
+    pub queue_delay_slo_ns: f64,
+    /// How much load each newly shed request adds on top of lane
+    /// depth: sheds are demand the server refused, so they count as
+    /// queued work that never got to queue.
+    pub shed_weight: f64,
 }
 
 impl Default for AutoscalerConfig {
@@ -32,8 +50,21 @@ impl Default for AutoscalerConfig {
             min_replicas: 1,
             max_replicas: 16,
             cooldown_ticks: 3,
+            queue_delay_slo_ns: 5e7,
+            shed_weight: 1.0,
         }
     }
+}
+
+/// Per-job load signals, as scraped by the Synchronizer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LoadSignal {
+    /// Sum of batching lane depths across the job's replicas.
+    pub lane_depth: f64,
+    /// Worst queue-delay p99 across the job's replicas (ns).
+    pub queue_delay_p99_ns: f64,
+    /// Requests shed by admission control since the last tick.
+    pub shed_delta: f64,
 }
 
 #[derive(Debug, Default)]
@@ -74,36 +105,60 @@ impl Autoscaler {
 
     /// One tick: feed per-job total load, get scaling decisions.
     pub fn tick(&mut self, loads: &HashMap<String, f64>) -> Vec<Decision> {
+        let signals: HashMap<String, LoadSignal> = loads
+            .iter()
+            .map(|(job, &load)| {
+                (job.clone(), LoadSignal { lane_depth: load, ..Default::default() })
+            })
+            .collect();
+        self.tick_signals(&signals)
+    }
+
+    /// One tick over structured signals: load is lane depth plus
+    /// weighted sheds; a queue-delay SLO breach forces a scale-up.
+    pub fn tick_signals(&mut self, signals: &HashMap<String, LoadSignal>) -> Vec<Decision> {
         let mut decisions = Vec::new();
         for (job, state) in self.jobs.iter_mut() {
             if state.cooldown > 0 {
                 state.cooldown -= 1;
                 continue;
             }
-            let load = loads.get(job).copied().unwrap_or(0.0);
-            let per_replica = load / state.replicas.max(1) as f64;
-            let target = self.config.target_load_per_replica;
-            let to = if per_replica > target * self.config.up_threshold {
-                // Scale to the count that brings per-replica load to
-                // target (ceil), bounded.
-                ((load / target).ceil() as usize)
-                    .clamp(state.replicas + 1, self.config.max_replicas)
-            } else if per_replica < target * self.config.down_threshold
-                && state.replicas > self.config.min_replicas
-            {
-                ((load / target).ceil() as usize)
-                    .clamp(self.config.min_replicas, state.replicas - 1)
-            } else {
+            let signal = signals.get(job).cloned().unwrap_or_default();
+            let load = signal.lane_depth + self.config.shed_weight * signal.shed_delta;
+            let force_up = signal.queue_delay_p99_ns > self.config.queue_delay_slo_ns;
+            let Some(to) = decide(&self.config, state.replicas, load, force_up) else {
                 continue;
             };
-            if to != state.replicas {
-                decisions.push(Decision { job: job.clone(), from: state.replicas, to });
-                state.replicas = to;
-                state.cooldown = self.config.cooldown_ticks;
-            }
+            decisions.push(Decision { job: job.clone(), from: state.replicas, to });
+            state.replicas = to;
+            state.cooldown = self.config.cooldown_ticks;
         }
         decisions.sort_by(|a, b| a.job.cmp(&b.job));
         decisions
+    }
+}
+
+/// The shared decision core: next replica count, or `None` to hold.
+fn decide(
+    config: &AutoscalerConfig,
+    replicas: usize,
+    load: f64,
+    force_up: bool,
+) -> Option<usize> {
+    let per_replica = load / replicas.max(1) as f64;
+    let target = config.target_load_per_replica;
+    if per_replica > target * config.up_threshold || force_up {
+        // Scale to the count that brings per-replica load to target
+        // (ceil), always at least one step, bounded above; already at
+        // max is a hold, not a decision.
+        if replicas >= config.max_replicas {
+            return None;
+        }
+        Some(((load / target).ceil() as usize).clamp(replicas + 1, config.max_replicas))
+    } else if per_replica < target * config.down_threshold && replicas > config.min_replicas {
+        Some(((load / target).ceil() as usize).clamp(config.min_replicas, replicas - 1))
+    } else {
+        None
     }
 }
 
@@ -111,21 +166,30 @@ impl Autoscaler {
 mod tests {
     use super::*;
 
-    fn scaler() -> Autoscaler {
-        let mut a = Autoscaler::new(AutoscalerConfig {
+    fn config() -> AutoscalerConfig {
+        AutoscalerConfig {
             target_load_per_replica: 100.0,
             up_threshold: 1.2,
             down_threshold: 0.5,
             min_replicas: 1,
             max_replicas: 8,
             cooldown_ticks: 2,
-        });
+            ..Default::default()
+        }
+    }
+
+    fn scaler() -> Autoscaler {
+        let mut a = Autoscaler::new(config());
         a.track("j", 1);
         a
     }
 
     fn load(v: f64) -> HashMap<String, f64> {
         HashMap::from([("j".to_string(), v)])
+    }
+
+    fn signal(s: LoadSignal) -> HashMap<String, LoadSignal> {
+        HashMap::from([("j".to_string(), s)])
     }
 
     #[test]
@@ -188,5 +252,49 @@ mod tests {
         let d = a.tick(&loads);
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].job, "a");
+    }
+
+    #[test]
+    fn slo_breach_forces_scale_up_despite_shallow_lanes() {
+        let mut a = scaler();
+        // Lane depth alone is comfortably under threshold…
+        assert!(a
+            .tick_signals(&signal(LoadSignal { lane_depth: 50.0, ..Default::default() }))
+            .is_empty());
+        // …but a queue-delay p99 past the SLO still adds a replica.
+        let d = a.tick_signals(&signal(LoadSignal {
+            lane_depth: 50.0,
+            queue_delay_p99_ns: 6e7, // > 5e7 default SLO
+            ..Default::default()
+        }));
+        assert_eq!(d, vec![Decision { job: "j".into(), from: 1, to: 2 }]);
+    }
+
+    #[test]
+    fn sheds_count_as_load() {
+        let mut a = scaler();
+        // 60 queued + 70 refused = 130 effective load > 120 threshold.
+        let d = a.tick_signals(&signal(LoadSignal {
+            lane_depth: 60.0,
+            shed_delta: 70.0,
+            ..Default::default()
+        }));
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].to, 2);
+    }
+
+    #[test]
+    fn slo_breach_at_max_replicas_holds_without_panicking() {
+        let mut a = scaler();
+        a.tick(&load(1e9)); // pin at max (8)
+        a.tick(&load(800.0));
+        a.tick(&load(800.0)); // drain cooldown
+        let d = a.tick_signals(&signal(LoadSignal {
+            lane_depth: 800.0,
+            queue_delay_p99_ns: 1e9,
+            ..Default::default()
+        }));
+        assert!(d.is_empty());
+        assert_eq!(a.replicas("j"), 8);
     }
 }

@@ -34,7 +34,7 @@ pub struct Cluster {
     jobs: Mutex<HashMap<String, ClusterJob>>,
 }
 
-fn empty_job_config(artifacts_root: &PathBuf) -> ServerConfig {
+fn empty_job_config(artifacts_root: &PathBuf, fault_tag: String) -> ServerConfig {
     ServerConfig {
         port: 0,
         http_addr: None,
@@ -47,6 +47,10 @@ fn empty_job_config(artifacts_root: &PathBuf) -> ServerConfig {
         ram_capacity_bytes: 0,
         batching: Default::default(),
         models: Vec::new(),
+        // Every replica gets a distinct `rpc:{job}/{idx}` fault point,
+        // so chaos tests can slow or fail ONE replica even though the
+        // fault registry is process-global.
+        fault_tag: Some(fault_tag),
         ..Default::default()
     }
 }
@@ -57,7 +61,8 @@ impl Cluster {
         let mut jobs = HashMap::new();
         for i in 0..n {
             let id = format!("job-{i}");
-            let server = ModelServer::start(empty_job_config(&artifacts_root))?;
+            let server =
+                ModelServer::start(empty_job_config(&artifacts_root, format!("{id}/0")))?;
             jobs.insert(
                 id.clone(),
                 ClusterJob { id, capacity_bytes, servers: vec![server] },
@@ -98,8 +103,9 @@ impl Cluster {
             .get_mut(job)
             .ok_or_else(|| anyhow::anyhow!("unknown job '{job}'"))?;
         while j.servers.len() < replicas.max(1) {
+            let tag = format!("{job}/{}", j.servers.len());
             j.servers
-                .push(ModelServer::start(empty_job_config(&self.artifacts_root))?);
+                .push(ModelServer::start(empty_job_config(&self.artifacts_root, tag))?);
         }
         while j.servers.len() > replicas.max(1) {
             if let Some(s) = j.servers.pop() {
@@ -115,15 +121,15 @@ impl Cluster {
         &self,
         pool: &crate::rpc::client::ClientPool,
         job: &str,
-        models: &[(String, String, Vec<u64>)],
+        models: &[crate::tfs2::controller::ModelAssignment],
     ) -> Result<()> {
         for addr in self.replica_addrs(job) {
-            for (model, _base, versions) in models {
+            for model in models {
                 pool.call(
                     &addr,
                     &crate::rpc::proto::Request::SetAspired {
-                        model: model.clone(),
-                        versions: versions.clone(),
+                        model: model.name.clone(),
+                        versions: model.versions.clone(),
                     },
                 )?;
             }
@@ -178,7 +184,12 @@ mod tests {
             .sync_replicas(
                 &pool,
                 "job-0",
-                &[("toy_table".into(), String::new(), vec![1])],
+                &[crate::tfs2::controller::ModelAssignment {
+                    name: "toy_table".into(),
+                    base_path: String::new(),
+                    versions: vec![1],
+                    labels: Vec::new(),
+                }],
             )
             .unwrap();
         // The job should load the table within a few poll cycles.

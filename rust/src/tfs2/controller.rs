@@ -5,20 +5,38 @@
 //!
 //! All state lives in the transactional [`Store`]; every operation is
 //! one transaction, so a crashed controller resumes from durable state.
+//! That includes **version labels** (`label/{model}/{label}` keys):
+//! canary/stable mappings set through the controller survive a process
+//! restart and are pushed back out to replicas by the Synchronizer.
 
 use super::binpack::{best_fit, Bin};
 use super::store::Store;
+use crate::bail_kind;
+use crate::base::error::ErrorKind;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
+
+/// One model's desired state on a job (consumed by the Synchronizer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelAssignment {
+    pub name: String,
+    pub base_path: String,
+    pub versions: Vec<u64>,
+    /// Durable (label → version) mappings to push to replicas.
+    pub labels: Vec<(String, u64)>,
+}
 
 /// Desired state for one serving job (consumed by the Synchronizer).
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobAssignment {
     pub job: String,
+    /// The job's seed replica address.
     pub addr: String,
-    /// (model name, base path, desired versions)
-    pub models: Vec<(String, String, Vec<u64>)>,
+    /// Every live replica address (always contains at least `addr`);
+    /// updated as the autoscaler grows/shrinks the job.
+    pub replicas: Vec<String>,
+    pub models: Vec<ModelAssignment>,
 }
 
 pub struct Controller {
@@ -43,6 +61,24 @@ impl Controller {
                     ("used", Json::num(0.0)),
                 ]),
             );
+            Ok(())
+        })
+    }
+
+    /// Record a job's live replica addresses (the fleet layer calls
+    /// this after scaling). `desired_state` reports them; a job with no
+    /// recorded replicas reports just its seed `addr`.
+    pub fn set_job_replicas(&self, id: &str, replicas: &[String]) -> Result<()> {
+        self.store.txn(|t| {
+            let key = format!("job/{id}");
+            let mut rec = t.get(&key).ok_or_else(|| anyhow!("job '{id}' not found"))?;
+            if let Json::Obj(o) = &mut rec {
+                o.insert(
+                    "replicas".into(),
+                    Json::Arr(replicas.iter().map(|a| Json::str(a.clone())).collect()),
+                );
+            }
+            t.put(&key, rec);
             Ok(())
         })
     }
@@ -118,8 +154,82 @@ impl Controller {
                 t.put(&job_key, job_rec);
             }
             t.delete(&key);
+            // Labels go with the model — same transaction, no orphans.
+            for (k, _) in t.scan_prefix(&format!("label/{name}/")) {
+                t.delete(&k);
+            }
             Ok(())
         })
+    }
+
+    // ----------------------------------------------------------- labels
+
+    /// Durably attach (or move) `label` on `model` to `version`. The
+    /// version must be in the model's desired set, mirroring the
+    /// serving-side invariant that labels only point at servable
+    /// versions. One transaction; survives controller restarts.
+    pub fn set_version_label(&self, model: &str, label: &str, version: u64) -> Result<()> {
+        if label.is_empty() {
+            bail_kind!(ErrorKind::InvalidArgument, "model '{model}': empty version label");
+        }
+        self.store.txn(|t| {
+            let rec = t
+                .get(&format!("model/{model}"))
+                .ok_or_else(|| ErrorKind::NotFound.err(format!("model '{model}' not found")))?;
+            let desired: Vec<u64> = rec
+                .get("desired")
+                .and_then(|d| d.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_u64()).collect())
+                .unwrap_or_default();
+            if !desired.contains(&version) {
+                bail_kind!(
+                    ErrorKind::FailedPrecondition,
+                    "cannot label {model}:{version} as '{label}': version is not desired \
+                     (desired versions: {desired:?})"
+                );
+            }
+            t.put(&format!("label/{model}/{label}"), Json::num(version as f64));
+            Ok(())
+        })
+    }
+
+    /// Durably drop a label. NotFound when it isn't set.
+    pub fn delete_version_label(&self, model: &str, label: &str) -> Result<()> {
+        self.store.txn(|t| {
+            let key = format!("label/{model}/{label}");
+            if t.get(&key).is_none() {
+                bail_kind!(ErrorKind::NotFound, "model '{model}' has no label '{label}'");
+            }
+            t.delete(&key);
+            Ok(())
+        })
+    }
+
+    /// Resolve a label to its version — served from the store, so the
+    /// answer is identical before and after a controller restart.
+    pub fn resolve_label(&self, model: &str, label: &str) -> Result<u64> {
+        match self.store.get(&format!("label/{model}/{label}")) {
+            Some(v) => v
+                .as_u64()
+                .ok_or_else(|| anyhow!("corrupt label record for {model}/{label}")),
+            None => {
+                let known: Vec<String> =
+                    self.version_labels(model).into_iter().map(|(l, _)| l).collect();
+                Err(ErrorKind::NotFound.err(format!(
+                    "model '{model}' has no version labeled '{label}' (known labels: {known:?})"
+                )))
+            }
+        }
+    }
+
+    /// All (label, version) pairs of a model, label-sorted.
+    pub fn version_labels(&self, model: &str) -> Vec<(String, u64)> {
+        let prefix = format!("label/{model}/");
+        self.store
+            .scan_prefix(&prefix)
+            .into_iter()
+            .filter_map(|(k, v)| Some((k[prefix.len()..].to_string(), v.as_u64()?)))
+            .collect()
     }
 
     /// Enable/disable canarying for a model (§2.1.1).
@@ -189,6 +299,18 @@ impl Controller {
                 Json::Obj(o) => f(o)?,
                 _ => bail!("corrupt model record"),
             }
+            // Labels must never point outside the desired set: prune
+            // any a version change orphaned (replace, promote,
+            // rollback) in the same transaction.
+            let desired = match &rec {
+                Json::Obj(o) => desired_of(o),
+                _ => Vec::new(),
+            };
+            for (k, v) in t.scan_prefix(&format!("label/{name}/")) {
+                if v.as_u64().map_or(true, |ver| !desired.contains(&ver)) {
+                    t.delete(&k);
+                }
+            }
             t.put(&key, rec);
             Ok(())
         })
@@ -216,10 +338,12 @@ impl Controller {
             .and_then(|r| r.get("job").and_then(|j| j.as_str()).map(str::to_string))
     }
 
-    /// Full desired state per job (the Synchronizer's input).
+    /// Full desired state per job (the Synchronizer's input),
+    /// including replica addresses and durable labels.
     pub fn desired_state(&self) -> Vec<JobAssignment> {
         let jobs = self.store.scan_prefix("job/");
         let models = self.store.scan_prefix("model/");
+        let labels = self.store.scan_prefix("label/");
         jobs.into_iter()
             .map(|(k, v)| {
                 let job = k.trim_start_matches("job/").to_string();
@@ -228,26 +352,48 @@ impl Controller {
                     .and_then(|a| a.as_str())
                     .unwrap_or("")
                     .to_string();
+                let replicas = v
+                    .get("replicas")
+                    .and_then(|r| r.as_arr())
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|x| x.as_str().map(str::to_string))
+                            .collect::<Vec<_>>()
+                    })
+                    .filter(|r| !r.is_empty())
+                    .unwrap_or_else(|| vec![addr.clone()]);
                 let assigned = models
                     .iter()
                     .filter(|(_, m)| {
                         m.get("job").and_then(|j| j.as_str()) == Some(job.as_str())
                     })
                     .map(|(mk, m)| {
-                        (
-                            mk.trim_start_matches("model/").to_string(),
-                            m.get("base_path")
+                        let name = mk.trim_start_matches("model/").to_string();
+                        let prefix = format!("label/{name}/");
+                        let model_labels = labels
+                            .iter()
+                            .filter(|(lk, _)| lk.starts_with(&prefix))
+                            .filter_map(|(lk, lv)| {
+                                Some((lk[prefix.len()..].to_string(), lv.as_u64()?))
+                            })
+                            .collect();
+                        ModelAssignment {
+                            name,
+                            base_path: m
+                                .get("base_path")
                                 .and_then(|b| b.as_str())
                                 .unwrap_or("")
                                 .to_string(),
-                            m.get("desired")
+                            versions: m
+                                .get("desired")
                                 .and_then(|d| d.as_arr())
                                 .map(|a| a.iter().filter_map(|v| v.as_u64()).collect())
                                 .unwrap_or_default(),
-                        )
+                            labels: model_labels,
+                        }
                     })
                     .collect();
-                JobAssignment { job, addr, models: assigned }
+                JobAssignment { job, addr, replicas, models: assigned }
             })
             .collect()
     }
@@ -344,8 +490,115 @@ mod tests {
         let job0 = state.iter().find(|j| j.job == "job-0").unwrap();
         let job1 = state.iter().find(|j| j.job == "job-1").unwrap();
         assert_eq!(job0.addr, "127.0.0.1:9000");
-        assert_eq!(job0.models, vec![("b".into(), "/b".into(), vec![2])]);
-        assert_eq!(job1.models, vec![("a".into(), "/a".into(), vec![1])]);
+        // No explicit replica set: the seed addr is the only replica.
+        assert_eq!(job0.replicas, vec!["127.0.0.1:9000".to_string()]);
+        assert_eq!(
+            job0.models,
+            vec![ModelAssignment {
+                name: "b".into(),
+                base_path: "/b".into(),
+                versions: vec![2],
+                labels: vec![],
+            }]
+        );
+        assert_eq!(job1.models[0].name, "a");
+        assert_eq!(job1.models[0].versions, vec![1]);
+    }
+
+    #[test]
+    fn job_replicas_recorded_and_reported() {
+        let c = controller();
+        c.set_job_replicas("job-0", &["a:1".into(), "a:2".into()]).unwrap();
+        let state = c.desired_state();
+        let job0 = state.iter().find(|j| j.job == "job-0").unwrap();
+        assert_eq!(job0.replicas, vec!["a:1".to_string(), "a:2".to_string()]);
+        assert!(c.set_job_replicas("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn label_lifecycle_and_validation() {
+        let c = controller();
+        c.add_model("m", "/m", 10, 1).unwrap();
+        // Only desired versions may be labeled.
+        let err = c.set_version_label("m", "stable", 9).unwrap_err();
+        assert!(err.to_string().contains("not desired"), "{err}");
+        assert!(c.set_version_label("m", "", 1).is_err());
+        assert!(c.set_version_label("ghost", "stable", 1).is_err());
+
+        c.set_version_label("m", "stable", 1).unwrap();
+        assert_eq!(c.resolve_label("m", "stable").unwrap(), 1);
+        // Resolution errors name what exists.
+        let err = c.resolve_label("m", "canary").unwrap_err().to_string();
+        assert!(err.contains("canary") && err.contains("stable"), "{err}");
+
+        // Labels land in desired_state for the Synchronizer to push.
+        let state = c.desired_state();
+        let m = state
+            .iter()
+            .flat_map(|j| &j.models)
+            .find(|m| m.name == "m")
+            .unwrap();
+        assert_eq!(m.labels, vec![("stable".to_string(), 1)]);
+
+        c.delete_version_label("m", "stable").unwrap();
+        assert!(c.resolve_label("m", "stable").is_err());
+        assert!(c.delete_version_label("m", "stable").is_err()); // NotFound
+    }
+
+    #[test]
+    fn version_changes_prune_orphaned_labels() {
+        let c = controller();
+        c.add_model("m", "/m", 10, 1).unwrap();
+        c.set_canary("m", true).unwrap();
+        c.add_version("m", 2).unwrap(); // desired {1, 2}
+        c.set_version_label("m", "stable", 1).unwrap();
+        c.set_version_label("m", "canary", 2).unwrap();
+        // Promotion drops v1 from desired → its label goes too.
+        c.promote_canary("m").unwrap();
+        assert!(c.resolve_label("m", "stable").is_err());
+        assert_eq!(c.resolve_label("m", "canary").unwrap(), 2);
+        assert_eq!(c.version_labels("m"), vec![("canary".to_string(), 2)]);
+    }
+
+    #[test]
+    fn remove_model_removes_labels() {
+        let c = controller();
+        c.add_model("m", "/m", 10, 1).unwrap();
+        c.set_version_label("m", "stable", 1).unwrap();
+        c.remove_model("m").unwrap();
+        assert!(c.version_labels("m").is_empty());
+    }
+
+    #[test]
+    fn labels_survive_controller_restart_from_disk() {
+        // The label-persistence round-trip (satellite): set before a
+        // simulated crash, resolve identically after — served from the
+        // durable store, not controller memory.
+        let dir = std::env::temp_dir().join(format!(
+            "ts-ctrl-labels-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("store");
+        {
+            let c = Controller::new(Store::open(&path, 0).unwrap());
+            c.register_job("j", "addr", 100).unwrap();
+            c.add_model("m", "/m", 50, 1).unwrap();
+            c.set_canary("m", true).unwrap();
+            c.add_version("m", 2).unwrap();
+            c.set_version_label("m", "stable", 1).unwrap();
+            c.set_version_label("m", "canary", 2).unwrap();
+        } // crash: store handle and controller dropped
+        let c = Controller::new(Store::open(&path, 0).unwrap());
+        assert_eq!(c.resolve_label("m", "stable").unwrap(), 1);
+        assert_eq!(c.resolve_label("m", "canary").unwrap(), 2);
+        assert_eq!(
+            c.version_labels("m"),
+            vec![("canary".to_string(), 2), ("stable".to_string(), 1)]
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! One handle over the whole TFS² control plane (paper Figure 2,
+//! assembled): a [`Controller`] backed by the durable [`Store`], an
+//! in-process [`Cluster`] of real serving jobs, the [`Synchronizer`]
+//! pushing versions/labels and scraping load, a metric-driven
+//! [`Autoscaler`], and a hedged [`Router`] for the data plane.
+//!
+//! The loop a deployment runs:
+//!
+//! ```text
+//! deploy/label (Controller, durable)
+//!        │
+//! reconcile(): desired_state ─► Synchronizer ─► replicas
+//!        │                          │
+//!        │                    routing table ─► Router
+//!        │
+//! autoscale_once(): scrape_load ─► Autoscaler ─► Cluster.scale_to
+//!                                        └─► reconcile() again
+//! ```
+
+use super::autoscaler::{Autoscaler, AutoscalerConfig, Decision, LoadSignal};
+use super::cluster::Cluster;
+use super::controller::Controller;
+use super::router::Router;
+use super::store::Store;
+use super::synchronizer::{SyncReport, Synchronizer};
+use crate::rpc::client::ClientPool;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub struct FleetConfig {
+    /// Serving jobs to start.
+    pub jobs: usize,
+    /// RAM capacity per job (placement budget, not an OS limit).
+    pub capacity_bytes: u64,
+    /// Shared artifact root every job loads from.
+    pub artifacts_root: PathBuf,
+    pub autoscaler: AutoscalerConfig,
+    /// Hedged-routing backup delay (PR 6 machinery).
+    pub hedge_delay: Duration,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            jobs: 2,
+            capacity_bytes: 1 << 30,
+            artifacts_root: std::env::temp_dir(),
+            autoscaler: AutoscalerConfig::default(),
+            hedge_delay: Duration::from_millis(50),
+        }
+    }
+}
+
+pub struct Fleet {
+    pub controller: Controller,
+    pub cluster: Cluster,
+    pub synchronizer: Synchronizer,
+    pub router: Arc<Router>,
+    autoscaler: Mutex<Autoscaler>,
+}
+
+impl Fleet {
+    /// Start the serving jobs and wire the control plane over `store`
+    /// (pass a disk-backed store for durability across restarts).
+    pub fn start(store: Arc<Store>, config: FleetConfig) -> Result<Fleet> {
+        let cluster =
+            Cluster::start(config.jobs, config.capacity_bytes, config.artifacts_root.clone())?;
+        let controller = Controller::new(Arc::clone(&store));
+        let mut autoscaler = Autoscaler::new(config.autoscaler);
+        for (job, addr, capacity) in cluster.jobs() {
+            controller.register_job(&job, &addr, capacity)?;
+            controller.set_job_replicas(&job, &cluster.replica_addrs(&job))?;
+            autoscaler.track(&job, cluster.replica_addrs(&job).len());
+        }
+        let synchronizer = Synchronizer::new(store, Arc::new(ClientPool::new()));
+        Ok(Fleet {
+            controller,
+            cluster,
+            synchronizer,
+            router: Router::new(config.hedge_delay),
+            autoscaler: Mutex::new(autoscaler),
+        })
+    }
+
+    /// Place a model (best-fit by RAM) and desire its first version.
+    /// Returns the chosen job. Call [`Fleet::reconcile`] to make the
+    /// replicas actually load it.
+    pub fn deploy(
+        &self,
+        name: &str,
+        base_path: &str,
+        ram_bytes: u64,
+        version: u64,
+    ) -> Result<String> {
+        self.controller.add_model(name, base_path, ram_bytes, version)
+    }
+
+    /// One control-plane pass: record live replica addresses, push
+    /// desired versions and labels everywhere, refresh the Router's
+    /// table from what actually loaded.
+    pub fn reconcile(&self) -> Result<SyncReport> {
+        for (job, _, _) in self.cluster.jobs() {
+            self.controller
+                .set_job_replicas(&job, &self.cluster.replica_addrs(&job))?;
+        }
+        let report = self.synchronizer.sync_once(&self.controller.desired_state())?;
+        self.router.update_table(self.synchronizer.routing_table());
+        Ok(report)
+    }
+
+    /// One autoscaling pass: scrape real load signals from every
+    /// replica, let the Autoscaler decide, apply the decisions to the
+    /// cluster, and reconcile so new replicas pick up their models.
+    pub fn autoscale_once(&self) -> Result<Vec<Decision>> {
+        let desired = self.controller.desired_state();
+        let signals: HashMap<String, LoadSignal> = self
+            .synchronizer
+            .scrape_load(&desired)
+            .into_iter()
+            .map(|(job, load)| {
+                (
+                    job,
+                    LoadSignal {
+                        lane_depth: load.lane_depth,
+                        queue_delay_p99_ns: load.queue_delay_p99_ns,
+                        shed_delta: load.shed_delta,
+                    },
+                )
+            })
+            .collect();
+        let decisions = self.autoscaler.lock().unwrap().tick_signals(&signals);
+        for d in &decisions {
+            crate::log_info!("autoscale: {} {} -> {} replicas", d.job, d.from, d.to);
+            self.cluster.scale_to(&d.job, d.to)?;
+        }
+        if !decisions.is_empty() {
+            self.reconcile()?;
+        }
+        Ok(decisions)
+    }
+
+    /// Durable label attach + immediate fan-out to the replicas.
+    pub fn set_label(&self, model: &str, label: &str, version: u64) -> Result<()> {
+        self.controller.set_version_label(model, label, version)?;
+        self.reconcile()?;
+        Ok(())
+    }
+
+    pub fn stop(&self) {
+        self.cluster.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_starts_registers_and_reconciles_empty() {
+        let fleet = Fleet::start(
+            Store::in_memory(0),
+            FleetConfig { jobs: 2, ..Default::default() },
+        )
+        .unwrap();
+        // Jobs registered with the controller, replicas recorded.
+        let desired = fleet.controller.desired_state();
+        assert_eq!(desired.len(), 2);
+        assert!(desired.iter().all(|j| j.replicas.len() == 1));
+        // Nothing deployed: reconcile is a clean no-op.
+        let report = fleet.reconcile().unwrap();
+        assert_eq!(report.instructed, 0);
+        assert_eq!(report.ready, 0);
+        assert!(report.unreachable.is_empty());
+        assert!(fleet.router.models().is_empty());
+        fleet.stop();
+    }
+
+    #[test]
+    fn idle_fleet_makes_no_scaling_decisions() {
+        let fleet = Fleet::start(
+            Store::in_memory(0),
+            FleetConfig { jobs: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert!(fleet.autoscale_once().unwrap().is_empty());
+        assert_eq!(fleet.cluster.replica_addrs("job-0").len(), 1);
+        fleet.stop();
+    }
+
+    #[test]
+    fn deploy_respects_capacity() {
+        let fleet = Fleet::start(
+            Store::in_memory(0),
+            FleetConfig { jobs: 1, capacity_bytes: 100, ..Default::default() },
+        )
+        .unwrap();
+        let err = fleet.deploy("huge", "/m", 1 << 20, 1).unwrap_err();
+        assert!(err.to_string().contains("free"), "{err}");
+        fleet.stop();
+    }
+}

@@ -16,13 +16,17 @@
 //!   table.
 //! * [`router`] — forwards inference requests to the right job, with
 //!   hedged backup requests (§3.1).
-//! * [`autoscaler`] — reactive replica scaling on per-job load.
+//! * [`autoscaler`] — reactive replica scaling from scraped metrics
+//!   (lane depth, queue-delay SLO, admission sheds).
 //! * [`cluster`] — in-process multi-job cluster over real sockets.
+//! * [`fleet`] — the assembled control plane: deploy → reconcile →
+//!   autoscale → route, one handle.
 
 pub mod autoscaler;
 pub mod binpack;
 pub mod cluster;
 pub mod controller;
+pub mod fleet;
 pub mod router;
 pub mod store;
 pub mod synchronizer;

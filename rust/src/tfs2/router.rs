@@ -57,9 +57,15 @@ impl Router {
 
     /// Route one inference request. The model name is extracted from
     /// the request; admin requests are rejected (they go through the
-    /// Controller, not the data plane).
+    /// Controller, not the data plane). A deadline envelope is looked
+    /// through for extraction and forwarded whole, so the replica
+    /// enforces the caller's budget.
     pub fn route(&self, req: &Request) -> Result<Response> {
-        let model = match req {
+        let mut inner = req;
+        while let Request::WithDeadline { inner: i, .. } = inner {
+            inner = i;
+        }
+        let model = match inner {
             Request::Predict { spec, .. }
             | Request::Classify { spec, .. }
             | Request::Regress { spec, .. }
@@ -79,6 +85,13 @@ impl Router {
             .histogram("router.latency_ns")
             .record_duration(t0.elapsed());
         result
+    }
+
+    /// Route with a deadline attached: wraps the request in the wire
+    /// envelope so the replica itself enforces the caller's budget
+    /// (expired work is shed there, not executed and discarded here).
+    pub fn route_with_deadline(&self, req: &Request, deadline_ms: u64) -> Result<Response> {
+        self.route(&req.clone().with_deadline_ms(deadline_ms))
     }
 
     pub fn hedge_rate(&self) -> f64 {
@@ -162,6 +175,36 @@ mod tests {
     fn admin_requests_rejected() {
         let router = Router::new(Duration::from_millis(10));
         assert!(router.route(&Request::Status).is_err());
+    }
+
+    #[test]
+    fn deadline_envelope_routes_by_inner_model() {
+        let count = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&count);
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(move |req| match req {
+                // The envelope arrives intact: the replica is the one
+                // that enforces the deadline.
+                Request::WithDeadline { deadline_ms, inner } => {
+                    assert!(deadline_ms >= 5_000);
+                    match *inner {
+                        Request::Regress { .. } => {
+                            c.fetch_add(1, Ordering::SeqCst);
+                            Response::Regress { model_version: 1, values: vec![0.0] }
+                        }
+                        other => panic!("unexpected inner {other:?}"),
+                    }
+                }
+                other => panic!("expected envelope, got {other:?}"),
+            }),
+        )
+        .unwrap();
+        let router = Router::new(Duration::from_millis(100));
+        router.update_table(vec![("m".into(), vec![server.addr().to_string()])]);
+        let resp = router.route_with_deadline(&regress_req(), 5_000).unwrap();
+        assert!(matches!(resp, Response::Regress { .. }));
+        assert_eq!(count.load(Ordering::SeqCst), 1);
     }
 
     #[test]

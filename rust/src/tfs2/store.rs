@@ -10,7 +10,9 @@
 //!   commit lock over a `BTreeMap<String, Json>`, with buffered writes
 //!   applied atomically.
 //! * **Durability** — a write-ahead log (JSON lines) fsynced per commit
-//!   plus snapshot compaction; `open` recovers snapshot + WAL replay.
+//!   plus snapshot compaction; `open` recovers snapshot + WAL replay,
+//!   dropping a torn final record (crash mid-append) by truncating the
+//!   WAL back to its valid prefix.
 //! * **Replication (simulated)** — N follower maps apply the log
 //!   asynchronously; follower reads can be stale until `tick` runs,
 //!   modelling cross-DC lag for the Synchronizer tests.
@@ -166,10 +168,49 @@ impl Store {
             }
         }
         if wal_path.exists() {
+            // Torn-tail tolerant replay. A crash mid-append can leave
+            // the final record truncated (or missing its newline); any
+            // record past a torn write was never fsync-acknowledged, so
+            // the correct recovery is to stop at the first unparsable
+            // record and truncate the file back to the valid prefix —
+            // not to fail the open, and never to touch the snapshot.
             let text = std::fs::read_to_string(&wal_path)?;
-            for line in text.lines().filter(|l| !l.trim().is_empty()) {
-                let op = Op::from_json(&Json::parse(line).context("parsing wal line")?)?;
-                op.apply(&mut leader);
+            let mut valid_bytes = 0usize;
+            for line in text.split_inclusive('\n') {
+                let trimmed = line.trim();
+                let op = if trimmed.is_empty() {
+                    None
+                } else {
+                    match Json::parse(trimmed).ok().as_ref().map(Op::from_json) {
+                        Some(Ok(op)) => Some(op),
+                        // Torn or corrupt record: drop it and the
+                        // (unacknowledged) suffix behind it.
+                        _ => {
+                            crate::log_warn!(
+                                "store: dropping torn wal tail at byte {valid_bytes} of {}",
+                                wal_path.display()
+                            );
+                            break;
+                        }
+                    }
+                };
+                // A record is only valid if its newline made it to disk.
+                if !line.ends_with('\n') {
+                    crate::log_warn!(
+                        "store: dropping unterminated wal record at byte {valid_bytes} of {}",
+                        wal_path.display()
+                    );
+                    break;
+                }
+                valid_bytes += line.len();
+                if let Some(op) = op {
+                    op.apply(&mut leader);
+                }
+            }
+            if valid_bytes < text.len() {
+                let f = std::fs::OpenOptions::new().write(true).open(&wal_path)?;
+                f.set_len(valid_bytes as u64).context("truncating torn wal tail")?;
+                f.sync_data().context("wal truncate fsync")?;
             }
         }
         let file = std::fs::OpenOptions::new()
@@ -415,6 +456,79 @@ mod tests {
         let s = Store::open(&path, 0).unwrap();
         assert_eq!(s.get("k42"), Some(Json::num(42.0)));
         assert_eq!(s.get("after"), Some(Json::Bool(true)));
+    }
+
+    #[test]
+    fn torn_wal_tail_dropped_on_replay() {
+        use std::io::Write;
+        let path = tmp("torn");
+        {
+            let s = Store::open(&path, 0).unwrap();
+            s.txn(|t| {
+                t.put("model/a", Json::num(1.0));
+                t.put("model/b", Json::num(2.0));
+                Ok(())
+            })
+            .unwrap();
+        }
+        // Simulate a crash mid-append: a half-written record with no
+        // terminating newline at the end of the WAL.
+        let wal = path.with_extension("wal");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&wal).unwrap();
+        write!(f, "{{\"put\":\"model/junk\",\"v\":trunc").unwrap();
+        drop(f);
+
+        // Replay: committed keys survive, the torn record does not,
+        // and the file is truncated back to the valid prefix.
+        let s = Store::open(&path, 0).unwrap();
+        assert_eq!(s.get("model/a"), Some(Json::num(1.0)));
+        assert_eq!(s.get("model/b"), Some(Json::num(2.0)));
+        assert_eq!(s.get("model/junk"), None);
+        let text = std::fs::read_to_string(&wal).unwrap();
+        assert!(!text.contains("junk"), "torn tail must be truncated away: {text}");
+
+        // New commits append cleanly after the repair, and a further
+        // reopen sees both old and new state.
+        s.txn(|t| {
+            t.put("model/c", Json::num(3.0));
+            Ok(())
+        })
+        .unwrap();
+        drop(s);
+        let s = Store::open(&path, 0).unwrap();
+        assert_eq!(s.get("model/a"), Some(Json::num(1.0)));
+        assert_eq!(s.get("model/c"), Some(Json::num(3.0)));
+    }
+
+    #[test]
+    fn torn_record_never_corrupts_snapshot() {
+        use std::io::Write;
+        let path = tmp("torn-snap");
+        {
+            let s = Store::open(&path, 0).unwrap();
+            s.txn(|t| {
+                t.put("k", Json::num(1.0));
+                Ok(())
+            })
+            .unwrap();
+            s.checkpoint().unwrap();
+            s.txn(|t| {
+                t.put("k", Json::num(2.0));
+                Ok(())
+            })
+            .unwrap();
+        }
+        // A fully-written record followed by garbage: the good record
+        // replays, the garbage (and anything after it) is dropped.
+        let wal = path.with_extension("wal");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&wal).unwrap();
+        writeln!(f, "not json at all").unwrap();
+        writeln!(f, "{}", Op::Put("k".into(), Json::num(9.0)).to_json()).unwrap();
+        drop(f);
+        let s = Store::open(&path, 0).unwrap();
+        // Snapshot value overridden by the valid WAL record; the
+        // post-garbage record was never acknowledged and must not apply.
+        assert_eq!(s.get("k"), Some(Json::num(2.0)));
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //! via a special RPC-based Source library component… and reports back
 //! status. The Synchronizer informs a Router job which models are
 //! successfully loaded in which serving jobs."
+//!
+//! Beyond version dissemination, the Synchronizer is the fleet's
+//! sensory organ: [`Synchronizer::scrape_load`] pulls structured
+//! metrics (`Request::Metrics`) from every replica — batching lane
+//! depth, queue-delay p99, admission sheds — and aggregates them into
+//! per-job [`JobLoad`] signals the Autoscaler scales from.
 
 use super::controller::JobAssignment;
 use super::store::Store;
@@ -11,80 +17,107 @@ use crate::rpc::client::ClientPool;
 use crate::rpc::proto::{Request, Response};
 use crate::util::json::Json;
 use anyhow::Result;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Loaded-state record published for the Router:
-/// `loaded/<model>` = array of job addrs with that model ready.
+/// `loaded/<model>` = array of replica addrs with that model ready.
 pub struct Synchronizer {
     store: Arc<Store>,
     pool: Arc<ClientPool>,
+    /// Last observed `admission.shed` per replica addr, so scrapes
+    /// report deltas (new sheds since last pass) rather than the
+    /// monotone counter.
+    last_shed: Mutex<HashMap<String, f64>>,
 }
 
 /// Result of one reconciliation pass.
 #[derive(Debug, Default, PartialEq)]
 pub struct SyncReport {
-    /// (job, model) pairs instructed this pass.
+    /// (replica, model) pairs instructed this pass.
     pub instructed: usize,
-    /// (model, job addr) pairs observed fully ready.
+    /// (model, replica addr) pairs observed fully ready.
     pub ready: usize,
-    /// Jobs that could not be reached.
+    /// Jobs with at least one unreachable replica.
     pub unreachable: Vec<String>,
+}
+
+/// Per-job load signals scraped from replica metrics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JobLoad {
+    /// Replicas that answered the metrics scrape.
+    pub replicas: usize,
+    /// Sum of `batch.*.lane_depth` across replicas: work sitting in
+    /// batching lanes right now, the primary scaling signal.
+    pub lane_depth: f64,
+    /// Worst `batch.*.queue_delay_ns.p99` across replicas.
+    pub queue_delay_p99_ns: f64,
+    /// Requests shed by admission control since the previous scrape.
+    pub shed_delta: f64,
 }
 
 impl Synchronizer {
     pub fn new(store: Arc<Store>, pool: Arc<ClientPool>) -> Self {
-        Synchronizer { store, pool }
+        Synchronizer { store, pool, last_shed: Mutex::new(HashMap::new()) }
     }
 
-    /// One pass: push desired versions to every job (idempotent, like
-    /// the aspired-versions API it drives), poll status, publish the
-    /// routing table.
+    /// One pass: push desired versions and labels to every replica of
+    /// every job (idempotent, like the aspired-versions API it
+    /// drives), poll status, publish the routing table.
     pub fn sync_once(&self, desired: &[JobAssignment]) -> Result<SyncReport> {
         let mut report = SyncReport::default();
-        let mut loaded: Vec<(String, String)> = Vec::new(); // (model, addr)
+        let mut loaded: Vec<(String, String)> = Vec::new(); // (model, replica addr)
 
         for job in desired {
-            if job.addr.is_empty() {
-                continue;
-            }
-            let mut job_ok = true;
-            for (model, _base, versions) in &job.models {
-                let req = Request::SetAspired {
-                    model: model.clone(),
-                    versions: versions.clone(),
-                };
-                match self.pool.call(&job.addr, &req) {
-                    Ok(Response::Ack) => report.instructed += 1,
-                    Ok(other) => {
-                        crate::log_warn!("{}: unexpected {other:?}", job.job);
-                        job_ok = false;
+            let mut job_unreachable = false;
+            for addr in job.replicas.iter().filter(|a| !a.is_empty()) {
+                let mut replica_ok = true;
+                for model in &job.models {
+                    let req = Request::SetAspired {
+                        model: model.name.clone(),
+                        versions: model.versions.clone(),
+                    };
+                    match self.pool.call(addr, &req) {
+                        Ok(Response::Ack) => report.instructed += 1,
+                        Ok(other) => {
+                            crate::log_warn!("{}/{addr}: unexpected {other:?}", job.job);
+                            replica_ok = false;
+                        }
+                        Err(e) => {
+                            crate::log_warn!("{}/{addr}: unreachable: {e}", job.job);
+                            replica_ok = false;
+                            break;
+                        }
                     }
-                    Err(e) => {
-                        crate::log_warn!("{}: unreachable: {e}", job.job);
-                        job_ok = false;
-                        break;
+                }
+                if !replica_ok {
+                    job_unreachable = true;
+                    continue;
+                }
+                // Poll status: a model counts as loaded on a replica
+                // when every desired version reports ready there.
+                for model in &job.models {
+                    let status = self
+                        .pool
+                        .call(addr, &Request::ModelStatus { model: model.name.clone() });
+                    if let Ok(Response::ModelStatus { versions: states }) = status {
+                        let all_ready = model.versions.iter().all(|v| {
+                            states.iter().any(|(sv, st)| sv == v && st == "ready")
+                        });
+                        if all_ready && !model.versions.is_empty() {
+                            loaded.push((model.name.clone(), addr.clone()));
+                            report.ready += 1;
+                            // Labels attach only to serving versions,
+                            // so they fan out after the ready check; a
+                            // replica that just (re)started re-learns
+                            // its canary/stable mappings here.
+                            self.push_labels(&job.job, addr, model);
+                        }
                     }
                 }
             }
-            if !job_ok {
+            if job_unreachable {
                 report.unreachable.push(job.job.clone());
-                continue;
-            }
-            // Poll status: a model counts as loaded when every desired
-            // version reports ready.
-            for (model, _base, versions) in &job.models {
-                let status = self
-                    .pool
-                    .call(&job.addr, &Request::ModelStatus { model: model.clone() });
-                if let Ok(Response::ModelStatus { versions: states }) = status {
-                    let all_ready = versions.iter().all(|v| {
-                        states.iter().any(|(sv, st)| sv == v && st == "ready")
-                    });
-                    if all_ready && !versions.is_empty() {
-                        loaded.push((model.clone(), job.addr.clone()));
-                        report.ready += 1;
-                    }
-                }
             }
         }
 
@@ -108,6 +141,71 @@ impl Synchronizer {
             Ok(())
         })?;
         Ok(report)
+    }
+
+    /// Best-effort label dissemination: idempotent SetVersionLabel per
+    /// desired mapping. Rejections are logged, never fatal — the next
+    /// pass retries, and the Controller's store stays authoritative.
+    fn push_labels(&self, job: &str, addr: &str, model: &super::controller::ModelAssignment) {
+        for (label, version) in &model.labels {
+            let req = Request::SetVersionLabel {
+                model: model.name.clone(),
+                label: label.clone(),
+                version: *version,
+            };
+            match self.pool.call(addr, &req) {
+                Ok(Response::Ack) => {}
+                Ok(Response::Error { message, .. }) => {
+                    crate::log_warn!(
+                        "{job}/{addr}: label '{label}' -> {}:{version} rejected: {message}",
+                        model.name
+                    );
+                }
+                Ok(other) => {
+                    crate::log_warn!("{job}/{addr}: unexpected {other:?}");
+                }
+                Err(e) => {
+                    crate::log_warn!("{job}/{addr}: label push failed: {e}");
+                }
+            }
+        }
+    }
+
+    /// Scrape structured metrics from every replica and aggregate
+    /// per-job load signals. Unreachable replicas contribute nothing
+    /// (and don't count toward `replicas`): a dead replica looks like
+    /// a smaller job, which reads as *more* load per survivor — the
+    /// conservative direction for scaling decisions.
+    pub fn scrape_load(&self, desired: &[JobAssignment]) -> HashMap<String, JobLoad> {
+        let mut out = HashMap::new();
+        for job in desired {
+            let mut load = JobLoad::default();
+            for addr in job.replicas.iter().filter(|a| !a.is_empty()) {
+                let samples = match self.pool.call(addr, &Request::Metrics) {
+                    Ok(Response::Metrics { samples }) => samples,
+                    _ => continue,
+                };
+                load.replicas += 1;
+                for (name, value) in &samples {
+                    if name.starts_with("batch.") && name.ends_with(".lane_depth") {
+                        load.lane_depth += value;
+                    } else if name.starts_with("batch.") && name.ends_with(".queue_delay_ns.p99")
+                    {
+                        load.queue_delay_p99_ns = load.queue_delay_p99_ns.max(*value);
+                    } else if name == "admission.shed" {
+                        let prev = self
+                            .last_shed
+                            .lock()
+                            .unwrap()
+                            .insert(addr.clone(), *value)
+                            .unwrap_or(0.0);
+                        load.shed_delta += (value - prev).max(0.0);
+                    }
+                }
+            }
+            out.insert(job.job.clone(), load);
+        }
+        out
     }
 
     /// The routing table the Router consumes.
@@ -135,17 +233,28 @@ impl Synchronizer {
 mod tests {
     use super::*;
     use crate::rpc::server::RpcServer;
-    use std::sync::Mutex;
+    use crate::tfs2::controller::ModelAssignment;
 
-    /// Fake serving job: acks SetAspired, reports everything ready.
-    fn fake_job(ready: bool) -> (Arc<RpcServer>, Arc<Mutex<Vec<(String, Vec<u64>)>>>) {
+    /// Fake serving job: acks SetAspired + SetVersionLabel, reports
+    /// everything ready, serves canned metrics.
+    fn fake_job(
+        ready: bool,
+        shed: f64,
+    ) -> (Arc<RpcServer>, Arc<Mutex<Vec<(String, Vec<u64>)>>>, Arc<Mutex<Vec<(String, u64)>>>)
+    {
         let seen = Arc::new(Mutex::new(Vec::new()));
         let seen2 = Arc::clone(&seen);
+        let labels = Arc::new(Mutex::new(Vec::new()));
+        let labels2 = Arc::clone(&labels);
         let server = RpcServer::start(
             "127.0.0.1:0",
             Arc::new(move |req| match req {
                 Request::SetAspired { model, versions } => {
                     seen2.lock().unwrap().push((model, versions));
+                    Response::Ack
+                }
+                Request::SetVersionLabel { label, version, .. } => {
+                    labels2.lock().unwrap().push((label, version));
                     Response::Ack
                 }
                 Request::ModelStatus { .. } => Response::ModelStatus {
@@ -155,6 +264,13 @@ mod tests {
                         vec![(1, "loading".into())]
                     },
                 },
+                Request::Metrics => Response::Metrics {
+                    samples: vec![
+                        ("admission.shed".into(), shed),
+                        ("batch.m.lane_depth".into(), 4.0),
+                        ("batch.m.queue_delay_ns.p99".into(), 7.5e6),
+                    ],
+                },
                 _ => Response::Error {
                     kind: crate::base::error::ErrorKind::Internal,
                     message: "no".into(),
@@ -162,27 +278,37 @@ mod tests {
             }),
         )
         .unwrap();
-        (server, seen)
+        (server, seen, labels)
     }
 
-    fn assignment(addr: &str) -> Vec<JobAssignment> {
+    fn assignment(addrs: &[String]) -> Vec<JobAssignment> {
         vec![JobAssignment {
             job: "job-0".into(),
-            addr: addr.into(),
-            models: vec![("m".into(), "/m".into(), vec![1])],
+            addr: addrs.first().cloned().unwrap_or_default(),
+            replicas: addrs.to_vec(),
+            models: vec![ModelAssignment {
+                name: "m".into(),
+                base_path: "/m".into(),
+                versions: vec![1],
+                labels: vec![("stable".into(), 1)],
+            }],
         }]
     }
 
     #[test]
     fn instructs_and_publishes_ready_models() {
-        let (job, seen) = fake_job(true);
+        let (job, seen, labels) = fake_job(true, 0.0);
         let store = Store::in_memory(0);
         let sync = Synchronizer::new(Arc::clone(&store), Arc::new(ClientPool::new()));
-        let report = sync.sync_once(&assignment(&job.addr().to_string())).unwrap();
+        let report = sync
+            .sync_once(&assignment(&[job.addr().to_string()]))
+            .unwrap();
         assert_eq!(report.instructed, 1);
         assert_eq!(report.ready, 1);
         assert!(report.unreachable.is_empty());
         assert_eq!(seen.lock().unwrap().as_slice(), &[("m".to_string(), vec![1])]);
+        // Labels ride along once the model is ready.
+        assert_eq!(labels.lock().unwrap().as_slice(), &[("stable".to_string(), 1)]);
         let table = sync.routing_table();
         assert_eq!(table.len(), 1);
         assert_eq!(table[0].0, "m");
@@ -190,27 +316,50 @@ mod tests {
     }
 
     #[test]
+    fn every_replica_is_instructed_and_routed() {
+        let (a, seen_a, _) = fake_job(true, 0.0);
+        let (b, seen_b, _) = fake_job(true, 0.0);
+        let store = Store::in_memory(0);
+        let sync = Synchronizer::new(Arc::clone(&store), Arc::new(ClientPool::new()));
+        let addrs = vec![a.addr().to_string(), b.addr().to_string()];
+        let report = sync.sync_once(&assignment(&addrs)).unwrap();
+        assert_eq!(report.instructed, 2);
+        assert_eq!(report.ready, 2);
+        assert_eq!(seen_a.lock().unwrap().len(), 1);
+        assert_eq!(seen_b.lock().unwrap().len(), 1);
+        // The routing table lists both replicas for the model.
+        let table = sync.routing_table();
+        assert_eq!(table[0].1, addrs);
+    }
+
+    #[test]
     fn not_ready_models_stay_out_of_routing_table() {
-        let (job, _) = fake_job(false);
+        let (job, _, labels) = fake_job(false, 0.0);
         let store = Store::in_memory(0);
         let sync = Synchronizer::new(store, Arc::new(ClientPool::new()));
-        let report = sync.sync_once(&assignment(&job.addr().to_string())).unwrap();
+        let report = sync
+            .sync_once(&assignment(&[job.addr().to_string()]))
+            .unwrap();
         assert_eq!(report.ready, 0);
         assert!(sync.routing_table().is_empty());
+        // Labels never land on a replica that is not serving yet.
+        assert!(labels.lock().unwrap().is_empty());
     }
 
     #[test]
     fn unreachable_job_reported() {
         let store = Store::in_memory(0);
         let sync = Synchronizer::new(store, Arc::new(ClientPool::new()));
-        let report = sync.sync_once(&assignment("127.0.0.1:1")).unwrap();
+        let report = sync
+            .sync_once(&assignment(&["127.0.0.1:1".to_string()]))
+            .unwrap();
         assert_eq!(report.unreachable, vec!["job-0".to_string()]);
         assert!(sync.routing_table().is_empty());
     }
 
     #[test]
     fn stale_routing_entries_cleared() {
-        let (job, _) = fake_job(true);
+        let (job, _, _) = fake_job(true, 0.0);
         let store = Store::in_memory(0);
         store
             .txn(|t| {
@@ -219,8 +368,39 @@ mod tests {
             })
             .unwrap();
         let sync = Synchronizer::new(store, Arc::new(ClientPool::new()));
-        sync.sync_once(&assignment(&job.addr().to_string())).unwrap();
+        sync.sync_once(&assignment(&[job.addr().to_string()])).unwrap();
         let table = sync.routing_table();
         assert!(table.iter().all(|(m, _)| m != "old_model"));
+    }
+
+    #[test]
+    fn scrape_aggregates_replicas_and_deltas_sheds() {
+        let (a, _, _) = fake_job(true, 10.0);
+        let (b, _, _) = fake_job(true, 3.0);
+        let store = Store::in_memory(0);
+        let sync = Synchronizer::new(store, Arc::new(ClientPool::new()));
+        let desired = assignment(&[a.addr().to_string(), b.addr().to_string()]);
+
+        let load = &sync.scrape_load(&desired)["job-0"];
+        assert_eq!(load.replicas, 2);
+        assert_eq!(load.lane_depth, 8.0); // 4.0 per replica, summed
+        assert_eq!(load.queue_delay_p99_ns, 7.5e6); // max, not sum
+        assert_eq!(load.shed_delta, 13.0); // first scrape: full counters
+
+        // Counters unchanged → second scrape reports zero new sheds.
+        let load = &sync.scrape_load(&desired)["job-0"];
+        assert_eq!(load.shed_delta, 0.0);
+        assert_eq!(load.lane_depth, 8.0);
+    }
+
+    #[test]
+    fn scrape_skips_unreachable_replicas() {
+        let (a, _, _) = fake_job(true, 0.0);
+        let store = Store::in_memory(0);
+        let sync = Synchronizer::new(store, Arc::new(ClientPool::new()));
+        let desired = assignment(&[a.addr().to_string(), "127.0.0.1:1".to_string()]);
+        let load = &sync.scrape_load(&desired)["job-0"];
+        assert_eq!(load.replicas, 1);
+        assert_eq!(load.lane_depth, 4.0);
     }
 }

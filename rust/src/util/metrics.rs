@@ -291,6 +291,30 @@ impl Registry {
         out
     }
 
+    /// Structured samples, name-sorted: counters and gauges under
+    /// their registry name, histograms expanded to `{name}.count`,
+    /// `{name}.mean`, `{name}.p50`, `{name}.p99` and `{name}.max`.
+    /// What `Request::Metrics` serves — the machine-readable surface
+    /// the TFS² Synchronizer scrapes for autoscaling signals.
+    pub fn samples(&self) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            out.push((k.clone(), c.get() as f64));
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            out.push((k.clone(), g.get() as f64));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            out.push((format!("{k}.count"), h.count() as f64));
+            out.push((format!("{k}.mean"), h.mean()));
+            out.push((format!("{k}.p50"), h.quantile(0.5) as f64));
+            out.push((format!("{k}.p99"), h.quantile(0.99) as f64));
+            out.push((format!("{k}.max"), h.max() as f64));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
     /// Text dump of everything (counters, gauges, histogram summaries).
     pub fn dump(&self) -> String {
         let mut out = String::new();
@@ -402,6 +426,35 @@ mod tests {
         let dump = r.dump();
         assert!(dump.contains("counter x 2"));
         assert!(dump.contains("histogram lat"));
+    }
+
+    #[test]
+    fn samples_expand_histograms() {
+        let r = Registry::new();
+        r.counter("admission.shed").add(4);
+        r.gauge("batch.m.lane_depth").set(6);
+        for v in [10u64, 20, 30] {
+            r.histogram("batch.m.queue_delay_ns").record(v);
+        }
+        let samples = r.samples();
+        let get = |name: &str| {
+            samples
+                .iter()
+                .find(|(k, _)| k == name)
+                .unwrap_or_else(|| panic!("missing sample {name} in {samples:?}"))
+                .1
+        };
+        assert_eq!(get("admission.shed"), 4.0);
+        assert_eq!(get("batch.m.lane_depth"), 6.0);
+        assert_eq!(get("batch.m.queue_delay_ns.count"), 3.0);
+        assert_eq!(get("batch.m.queue_delay_ns.mean"), 20.0);
+        assert_eq!(get("batch.m.queue_delay_ns.max"), 30.0);
+        assert!(get("batch.m.queue_delay_ns.p99") >= 20.0);
+        // Name-sorted for stable scraping.
+        let names: Vec<&String> = samples.iter().map(|(k, _)| k).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
     }
 
     #[test]

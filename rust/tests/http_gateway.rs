@@ -340,6 +340,43 @@ fn metadata_health_metrics_and_errors() {
 }
 
 #[test]
+fn models_listing_reports_states_and_labels() {
+    let server = gateway_server(&[1, 2]);
+    match server.core().handle(Request::SetVersionLabel {
+        model: "syn".into(),
+        label: "canary".into(),
+        version: 2,
+    }) {
+        Response::Ack => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    let mut c = http(&server);
+
+    let (status, body) = c.get("/v1/models").unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let json = json_of(&body);
+    let models = json.get("models").unwrap().as_arr().unwrap();
+    let syn = models
+        .iter()
+        .find(|m| m.get("name").unwrap().as_str() == Some("syn"))
+        .unwrap();
+    let versions = syn.get("versions").unwrap().as_arr().unwrap();
+    assert_eq!(versions.len(), 2);
+    // Sorted by version, each with state + labels.
+    assert_eq!(versions[0].get("version").unwrap().as_u64(), Some(1));
+    assert_eq!(versions[0].get("state").unwrap().as_str(), Some("ready"));
+    assert_eq!(versions[0].get("labels").unwrap(), &Json::Arr(vec![]));
+    assert_eq!(versions[1].get("version").unwrap().as_u64(), Some(2));
+    assert_eq!(
+        versions[1].get("labels").unwrap(),
+        &Json::Arr(vec![Json::str("canary")])
+    );
+    // The listing has no signature payloads — that's the per-model GET.
+    assert!(versions[1].get("signatures").is_none());
+    server.stop();
+}
+
+#[test]
 fn gateway_survives_concurrent_clients() {
     let server = gateway_server(&[2]);
     let addr = server.http_addr().unwrap().to_string();

@@ -1,0 +1,297 @@
+//! Fleet end-to-end: the assembled TFS² control plane against live
+//! serving jobs, no precomputed artifacts needed (synthetic specs on
+//! disk load through the ordinary FileSystemSource chain).
+//!
+//! * durable labels: canary/stable set before a controller restart
+//!   resolve identically after, straight from the store;
+//! * metric-driven autoscaling: real `batch.*.lane_depth` load adds a
+//!   replica, drain removes it;
+//! * hedged fleet routing: one fault-injected slow replica keeps
+//!   routed p99 within 3x the no-fault p99.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+use tensorserve::base::tensor::Tensor;
+use tensorserve::inference::ModelSpec;
+use tensorserve::rpc::proto::{Request, Response};
+use tensorserve::runtime::artifacts::ArtifactSpec;
+use tensorserve::tfs2::autoscaler::AutoscalerConfig;
+use tensorserve::tfs2::controller::Controller;
+use tensorserve::tfs2::fleet::{Fleet, FleetConfig};
+use tensorserve::tfs2::store::Store;
+use tensorserve::util::fault::{arm, reset, Fault};
+
+/// The fault registry is process-global and cluster jobs share names
+/// ("job-0", ...) across tests, so fault-using tests run one at a
+/// time.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_faults() -> std::sync::MutexGuard<'static, ()> {
+    FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Write synthetic multi-head specs under `root/model/{v}/spec.json`
+/// so serving jobs load them through the normal filesystem chain.
+/// Returns the RAM estimate for placement.
+fn synthetic_artifacts(root: &Path, model: &str, versions: &[u64]) -> u64 {
+    let mut ram = 0;
+    for &v in versions {
+        let spec = ArtifactSpec::synthetic_multi_head(model, v, 8, 3);
+        ram = spec.ram_estimate_bytes;
+        spec.write_to(&root.join(model).join(v.to_string())).unwrap();
+    }
+    ram
+}
+
+fn temp_root(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ts-fleet-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn reconcile_until_ready(fleet: &Fleet, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let report = fleet.reconcile().unwrap();
+        if report.ready >= want {
+            return;
+        }
+        assert!(Instant::now() < deadline, "fleet never ready: {report:?}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+fn predict(spec: ModelSpec) -> Request {
+    Request::Predict {
+        spec,
+        signature: String::new(),
+        inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+    }
+}
+
+fn p99_ms(mut samples: Vec<f64>) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((samples.len() as f64) * 0.99).ceil() as usize - 1;
+    samples[idx]
+}
+
+#[test]
+fn labels_survive_controller_restart_end_to_end() {
+    let _guard = lock_faults();
+    reset();
+    let root = temp_root("labels");
+    let ram = synthetic_artifacts(&root, "label_m", &[1, 2]);
+    let store_path = root.join("control-store");
+
+    let fleet = Fleet::start(
+        Store::open(&store_path, 0).unwrap(),
+        FleetConfig { jobs: 1, artifacts_root: root.clone(), ..Default::default() },
+    )
+    .unwrap();
+    fleet.deploy("label_m", root.to_str().unwrap(), ram, 1).unwrap();
+    fleet.controller.set_canary("label_m", true).unwrap();
+    fleet.controller.add_version("label_m", 2).unwrap();
+    reconcile_until_ready(&fleet, 1);
+
+    // Durable labels, fanned out to the replicas on the same pass.
+    fleet.set_label("label_m", "stable", 1).unwrap();
+    fleet.set_label("label_m", "canary", 2).unwrap();
+
+    // The data plane resolves them end to end through the router.
+    for (label, want) in [("stable", 1u64), ("canary", 2)] {
+        match fleet
+            .router
+            .route(&predict(ModelSpec::with_label("label_m", label)))
+            .unwrap()
+        {
+            Response::Predict { model_version, .. } => {
+                assert_eq!(model_version, want, "label {label}")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    let before = (
+        fleet.controller.resolve_label("label_m", "stable").unwrap(),
+        fleet.controller.resolve_label("label_m", "canary").unwrap(),
+    );
+    fleet.stop();
+    drop(fleet);
+
+    // Controller restart: a fresh instance over the same on-disk
+    // store must resolve both labels identically, with no RPC fanout
+    // or operator involvement.
+    let controller = Controller::new(Store::open(&store_path, 0).unwrap());
+    let after = (
+        controller.resolve_label("label_m", "stable").unwrap(),
+        controller.resolve_label("label_m", "canary").unwrap(),
+    );
+    assert_eq!(before, after);
+    assert_eq!(after, (1, 2));
+    let mut labels = controller.version_labels("label_m");
+    labels.sort();
+    assert_eq!(labels, vec![("canary".to_string(), 2), ("stable".to_string(), 1)]);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn autoscaler_scales_on_real_lane_depth_and_drains_back() {
+    let _guard = lock_faults();
+    reset();
+    let root = temp_root("autoscale");
+    let ram = synthetic_artifacts(&root, "autoscale_m", &[1]);
+
+    let fleet = Arc::new(
+        Fleet::start(
+            Store::in_memory(0),
+            FleetConfig {
+                jobs: 1,
+                artifacts_root: root.clone(),
+                autoscaler: AutoscalerConfig {
+                    target_load_per_replica: 2.0,
+                    up_threshold: 1.2,
+                    down_threshold: 0.5,
+                    min_replicas: 1,
+                    max_replicas: 3,
+                    cooldown_ticks: 1,
+                    // The queue-delay histogram is cumulative, so the
+                    // SLO trigger would pin scale-ups long after the
+                    // load stops; this test isolates the lane-depth
+                    // (gauge) signal, which drains with the queue.
+                    queue_delay_slo_ns: f64::INFINITY,
+                    shed_weight: 1.0,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    fleet.deploy("autoscale_m", root.to_str().unwrap(), ram, 1).unwrap();
+    reconcile_until_ready(&fleet, 1);
+
+    // Slow every execution so concurrent traffic piles up in the
+    // batching lanes — real queued work, not a synthetic load number.
+    arm(
+        "exec:autoscale_m",
+        Fault::Delay { duration: Duration::from_millis(5) },
+        1_000_000,
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let loaders: Vec<_> = (0..8)
+        .map(|_| {
+            let fleet = Arc::clone(&fleet);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = fleet
+                        .router
+                        .route(&predict(ModelSpec::latest("autoscale_m")));
+                }
+            })
+        })
+        .collect();
+
+    // Scrape → decide → scale loop until the fleet grows.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut scaled_up = false;
+    while Instant::now() < deadline {
+        let decisions = fleet.autoscale_once().unwrap();
+        if decisions.iter().any(|d| d.to > d.from) {
+            scaled_up = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(scaled_up, "lane-depth load never triggered a scale-up");
+    assert!(fleet.cluster.replica_addrs("job-0").len() >= 2);
+
+    // Drain: stop the load, disarm the fault, and the same signals
+    // walk the job back down to one replica.
+    stop.store(true, Ordering::Relaxed);
+    for h in loaders {
+        h.join().unwrap();
+    }
+    arm("exec:autoscale_m", Fault::Delay { duration: Duration::ZERO }, 0);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while fleet.cluster.replica_addrs("job-0").len() > 1 {
+        fleet.autoscale_once().unwrap();
+        assert!(Instant::now() < deadline, "fleet never scaled back down");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert_eq!(fleet.cluster.replica_addrs("job-0").len(), 1);
+    reset();
+    fleet.stop();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn hedged_routing_keeps_p99_within_3x_despite_slow_replica() {
+    let _guard = lock_faults();
+    reset();
+    let root = temp_root("hedge");
+    let ram = synthetic_artifacts(&root, "hedge_m", &[1]);
+
+    let fleet = Fleet::start(
+        Store::in_memory(0),
+        FleetConfig {
+            jobs: 1,
+            artifacts_root: root.clone(),
+            // Hedge fires after one nominal service time, so a routed
+            // request stuck on the slow replica pays ~2x, never ~20x.
+            hedge_delay: Duration::from_millis(20),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    fleet.deploy("hedge_m", root.to_str().unwrap(), ram, 1).unwrap();
+    fleet.cluster.scale_to("job-0", 2).unwrap();
+    reconcile_until_ready(&fleet, 2); // model ready on both replicas
+
+    // Nominal service time ~20ms on every replica.
+    arm(
+        "exec:hedge_m",
+        Fault::Delay { duration: Duration::from_millis(20) },
+        1_000_000,
+    );
+    let route_ms = |n: usize| -> Vec<f64> {
+        (0..n)
+            .map(|_| {
+                let t0 = Instant::now();
+                match fleet
+                    .router
+                    .route(&predict(ModelSpec::latest("hedge_m")))
+                    .unwrap()
+                {
+                    Response::Predict { .. } => {}
+                    other => panic!("unexpected {other:?}"),
+                }
+                t0.elapsed().as_secs_f64() * 1e3
+            })
+            .collect()
+    };
+
+    // Warm the connections, then measure the no-fault baseline.
+    route_ms(5);
+    let baseline = p99_ms(route_ms(30));
+
+    // One replica turns slow: every RPC it handles stalls 400ms. The
+    // round-robin router keeps picking it as primary half the time;
+    // hedging must mask it.
+    arm(
+        "rpc:job-0/1",
+        Fault::Delay { duration: Duration::from_millis(400) },
+        10_000,
+    );
+    let hedged = p99_ms(route_ms(60));
+    assert!(
+        hedged <= baseline * 3.0,
+        "hedged p99 {hedged:.1}ms > 3x no-fault p99 {baseline:.1}ms"
+    );
+    assert!(fleet.router.hedge_rate() > 0.0, "no hedges fired");
+    reset();
+    fleet.stop();
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -199,7 +199,16 @@ fn hedged_routing_masks_slow_replica() {
     let cluster = Cluster::start(1, 64 << 20, artifacts.clone()).unwrap();
     let pool = Arc::new(ClientPool::new());
     cluster
-        .sync_replicas(&pool, "job-0", &[("mlp_regressor".into(), String::new(), vec![2])])
+        .sync_replicas(
+            &pool,
+            "job-0",
+            &[tensorserve::tfs2::controller::ModelAssignment {
+                name: "mlp_regressor".into(),
+                base_path: String::new(),
+                versions: vec![2],
+                labels: Vec::new(),
+            }],
+        )
         .unwrap();
     // Wait until loaded.
     let addr = cluster.replica_addrs("job-0")[0].clone();

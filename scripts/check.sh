@@ -53,6 +53,21 @@ cargo test -q --test chaos
 echo "==> cargo test -q --test net_scaling"
 cargo test -q --test net_scaling
 
+# The TFS² control plane over real sockets: Controller placement,
+# Synchronizer convergence, canary/rollback, store durability, and
+# hedged routing (skips model-loading cases if artifacts are absent).
+# Named explicitly so a control-plane regression is its own failing
+# step.
+echo "==> cargo test -q --test tfs2_integration"
+cargo test -q --test tfs2_integration
+
+# Fleet end-to-end on synthetic servables (no artifacts needed):
+# durable labels across a controller restart, metric-driven
+# autoscaling on real lane depth, and hedged routing keeping p99
+# bounded with a fault-injected slow replica.
+echo "==> cargo test -q --test tfs2_fleet"
+cargo test -q --test tfs2_fleet
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "==> cargo fmt --check"
     cargo fmt --check
