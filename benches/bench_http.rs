@@ -7,6 +7,10 @@
 //! * **codec**: ns/op to translate JSON instance rows into pooled wire
 //!   tensors (`http::codec::parse_predict_body`) and to serialize a
 //!   Predict response back to JSON, at several batch sizes;
+//! * **codec matrix**: the same decode across every negotiable wire
+//!   codec — scalar JSON, the SWAR/SIMD fast path, and binary
+//!   `application/x-tensorserve` framing — so the per-codec gap is a
+//!   tracked number, not folklore;
 //! * **e2e**: requests/sec through the full gateway (HTTP parse →
 //!   router → ServerCore → synthetic servable → JSON reply) over
 //!   kept-alive loopback connections, against the binary-RPC path on
@@ -20,9 +24,10 @@ use tensorserve::base::servable::ServableId;
 use tensorserve::base::tensor::Tensor;
 use tensorserve::http::client::HttpClient;
 use tensorserve::http::codec;
+use tensorserve::http::wire::simd::{parse_predict_fast, simd_level, FastResult};
 use tensorserve::inference::ModelSpec;
 use tensorserve::rpc::client::RpcClient;
-use tensorserve::rpc::proto::Request;
+use tensorserve::rpc::proto::{decode_predict_payload, encode_predict_payload, Request};
 use tensorserve::runtime::artifacts::ArtifactSpec;
 use tensorserve::runtime::hlo_servable::synthetic_loader;
 use tensorserve::server::builder::ModelServer;
@@ -126,6 +131,82 @@ fn main() {
     }
     t.print();
 
+    // ---- per-codec decode matrix -------------------------------------
+    // The same rows through each negotiable wire codec: the scalar
+    // JSON tree parse, the SWAR/SIMD fast path (no Json tree), and the
+    // RPC plane's binary tensor framing as served under
+    // application/x-tensorserve.
+    let level = simd_level().name();
+    let title = format!("H1c: per-codec decode ns/op (SIMD level: {level})");
+    let mut t = Table::new(
+        &title,
+        &[
+            "rows",
+            "scalar json",
+            "simd json",
+            "binary",
+            "json bytes",
+            "binary bytes",
+        ],
+    );
+    let mut matrix_json = Vec::new();
+    for rows in [1usize, 8, 64] {
+        let body = instances_body(rows);
+        let bytes = body.as_bytes();
+        let tensor = Tensor::matrix(
+            (0..rows)
+                .map(|_| (0..INPUT_DIM).map(|j| j as f32 * 0.125).collect())
+                .collect(),
+        )
+        .unwrap();
+        let mut bin = Vec::new();
+        encode_predict_payload(&mut bin, "", &[("x".into(), tensor)]);
+
+        let (iters, elapsed) = measure(warmup, dur, || {
+            let parsed = codec::parse_predict_body(bytes).unwrap();
+            for (_, tensor) in parsed.inputs {
+                tensor.recycle_into(&BufferPool::global());
+            }
+        });
+        let scalar_ns = ns_per_iter(iters, elapsed);
+
+        let (iters, elapsed) = measure(warmup, dur, || match parse_predict_fast(bytes) {
+            FastResult::Parsed(parsed) => {
+                for (_, tensor) in parsed.inputs {
+                    tensor.recycle_into(&BufferPool::global());
+                }
+            }
+            FastResult::Fallback(_) => unreachable!("canonical body must take the fast path"),
+        });
+        let simd_ns = ns_per_iter(iters, elapsed);
+
+        let (iters, elapsed) = measure(warmup, dur, || {
+            let (_, inputs) = decode_predict_payload(&bin).unwrap();
+            for (_, tensor) in inputs {
+                tensor.recycle_into(&BufferPool::global());
+            }
+        });
+        let binary_ns = ns_per_iter(iters, elapsed);
+
+        t.row(vec![
+            rows.to_string(),
+            format!("{scalar_ns:.0}"),
+            format!("{simd_ns:.0}"),
+            format!("{binary_ns:.0}"),
+            bytes.len().to_string(),
+            bin.len().to_string(),
+        ]);
+        matrix_json.push(Json::obj(vec![
+            ("rows", Json::num(rows as f64)),
+            ("scalar_json_ns_per_op", Json::num(scalar_ns)),
+            ("simd_json_ns_per_op", Json::num(simd_ns)),
+            ("binary_ns_per_op", Json::num(binary_ns)),
+            ("json_bytes", Json::num(bytes.len() as f64)),
+            ("binary_bytes", Json::num(bin.len() as f64)),
+        ]));
+    }
+    t.print();
+
     // ---- e2e requests/sec: REST vs binary RPC ------------------------
     let server = server_with_synthetic();
     let http_addr = server.http_addr().unwrap().to_string();
@@ -204,7 +285,9 @@ fn main() {
     let json = Json::obj(vec![
         ("bench", Json::str("bench_http")),
         ("input_dim", Json::num(INPUT_DIM as f64)),
+        ("simd_level", Json::str(level)),
         ("codec", Json::Arr(codec_json)),
+        ("codec_matrix", Json::Arr(matrix_json)),
         ("e2e", Json::Arr(e2e_json)),
     ]);
     let out = "BENCH_http.json";

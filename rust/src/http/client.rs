@@ -39,6 +39,18 @@ impl HttpClient {
         self.request("POST", path, Some("application/json"), body.as_bytes())
     }
 
+    /// POST an `application/x-tensorserve` binary payload, also asking
+    /// for a binary reply.
+    pub fn post_binary(&mut self, path: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
+        self.request_with(
+            "POST",
+            path,
+            Some("application/x-tensorserve"),
+            Some("application/x-tensorserve"),
+            body,
+        )
+    }
+
     /// Issue one request on the kept-alive connection; returns
     /// `(status, body)`.
     pub fn request(
@@ -48,12 +60,29 @@ impl HttpClient {
         content_type: Option<&str>,
         body: &[u8],
     ) -> Result<(u16, Vec<u8>)> {
+        self.request_with(method, path, content_type, None, body)
+    }
+
+    /// [`request`](Self::request) plus an explicit `Accept` header for
+    /// egress-codec negotiation.
+    pub fn request_with(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: Option<&str>,
+        accept: Option<&str>,
+        body: &[u8],
+    ) -> Result<(u16, Vec<u8>)> {
         self.scratch.clear();
         self.scratch
             .extend_from_slice(format!("{method} {path} HTTP/1.1\r\nHost: {}\r\n", self.addr).as_bytes());
         if let Some(ct) = content_type {
             self.scratch
                 .extend_from_slice(format!("Content-Type: {ct}\r\n").as_bytes());
+        }
+        if let Some(a) = accept {
+            self.scratch
+                .extend_from_slice(format!("Accept: {a}\r\n").as_bytes());
         }
         self.scratch
             .extend_from_slice(format!("Content-Length: {}\r\n\r\n", body.len()).as_bytes());

@@ -17,6 +17,10 @@
 //!   metadata GETs, label DELETE, `/healthz`).
 //! * [`codec`] — JSON row/column formats ⇄ [`crate::rpc::proto`]
 //!   messages.
+//! * [`wire`] — pluggable per-request codecs over [`codec`]: scalar
+//!   JSON, a SWAR/SIMD JSON fast path, and the RPC plane's binary
+//!   tensor framing as `application/x-tensorserve`, negotiated by
+//!   `Content-Type`/`Accept`.
 //! * [`expose`] — `/metrics` Prometheus-style text exposition from
 //!   [`crate::util::metrics`].
 //! * [`client`] — a minimal blocking client for tests, benches and
@@ -27,3 +31,4 @@ pub mod codec;
 pub mod expose;
 pub mod router;
 pub mod server;
+pub mod wire;

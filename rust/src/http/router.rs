@@ -28,7 +28,8 @@
 
 use super::codec;
 use super::expose;
-use super::server::{HttpHandler, HttpRequest, HttpResponse};
+use super::server::{BodySink, HttpHandler, HttpRequest, HttpResponse, SinkFactory};
+use super::wire::{self, Codec};
 use crate::base::error::ErrorKind;
 use crate::inference::ModelSpec;
 use crate::rpc::proto::{Request, Response};
@@ -57,15 +58,134 @@ pub fn gateway(core: Arc<ServerCore>) -> HttpHandler {
     Arc::new(move |req: &HttpRequest| {
         let t0 = Instant::now();
         let resp = route(&core, req);
-        core.registry.counter("http.requests").inc();
-        if resp.status >= 400 {
-            core.registry.counter("http.errors").inc();
-        }
-        core.registry
-            .histogram("http.latency_ns")
-            .record_duration(t0.elapsed());
+        observe(&core, t0, &resp);
         resp
     })
+}
+
+/// The gateway-wide request metrics, shared by the buffered handler
+/// and the streaming-sink completion path.
+fn observe(core: &ServerCore, t0: Instant, resp: &HttpResponse) {
+    core.registry.counter("http.requests").inc();
+    if resp.status >= 400 {
+        core.registry.counter("http.errors").inc();
+    }
+    core.registry
+        .histogram("http.latency_ns")
+        .record_duration(t0.elapsed());
+}
+
+/// Build the streaming-body factory paired with [`gateway`]: data-plane
+/// POSTs whose codecs negotiate cleanly stream their body bytes into
+/// the negotiated codec's incremental decoder as they come off the
+/// socket (chunked or `Content-Length` alike) — predict tensor
+/// elements land in pooled storage while the upload is in flight.
+/// Every other request (including negotiation failures, which must
+/// answer 415/406) buffers and goes through the plain handler.
+pub fn sink_factory(core: Arc<ServerCore>) -> SinkFactory {
+    Arc::new(move |req: &HttpRequest| {
+        if req.method != "POST" {
+            return None;
+        }
+        let route = parse_model_path(&req.path).ok()?;
+        let verb = route.verb?;
+        let (ingress, egress) = negotiate(req).ok()?;
+        let decoder = match (verb, ingress.name()) {
+            (Verb::Predict, "simd-json") => {
+                StreamDecoder::JsonPredict(wire::simd::FastPredictParser::new())
+            }
+            (Verb::Predict, "binary") => {
+                StreamDecoder::BinaryPredict(wire::binary::BinaryPredictStream::new())
+            }
+            // Scalar-pinned JSON and the examples verbs decode whole:
+            // still streamed through the transport, buffered here.
+            _ => StreamDecoder::Buffer(Vec::new()),
+        };
+        Some(Box::new(GatewaySink {
+            core: Arc::clone(&core),
+            spec: route.spec,
+            verb,
+            ingress,
+            egress,
+            decoder,
+        }) as Box<dyn BodySink>)
+    })
+}
+
+/// Per-request streaming state behind the [`BodySink`] seam.
+enum StreamDecoder {
+    /// SIMD JSON predict: hot bodies decode as bytes arrive; a bail
+    /// retains the raw bytes for the scalar re-parse at finish.
+    JsonPredict(wire::simd::FastPredictParser),
+    /// Binary predict: framing decoded incrementally, floats written
+    /// straight into pooled storage.
+    BinaryPredict(wire::binary::BinaryPredictStream),
+    /// Everything else: accumulate, decode whole at finish.
+    Buffer(Vec<u8>),
+}
+
+struct GatewaySink {
+    core: Arc<ServerCore>,
+    spec: ModelSpec,
+    verb: Verb,
+    ingress: &'static dyn Codec,
+    egress: &'static dyn Codec,
+    decoder: StreamDecoder,
+}
+
+impl BodySink for GatewaySink {
+    fn feed(&mut self, chunk: &[u8]) {
+        match &mut self.decoder {
+            StreamDecoder::JsonPredict(parser) => parser.feed(chunk),
+            StreamDecoder::BinaryPredict(stream) => stream.feed(chunk),
+            StreamDecoder::Buffer(buf) => buf.extend_from_slice(chunk),
+        }
+    }
+
+    fn finish(self: Box<Self>, req: &HttpRequest) -> HttpResponse {
+        let t0 = Instant::now();
+        let this = *self;
+        let core = Arc::clone(&this.core);
+        let resp = this.respond(req);
+        observe(&core, t0, &resp);
+        resp
+    }
+}
+
+impl GatewaySink {
+    fn respond(self, req: &HttpRequest) -> HttpResponse {
+        let deadline_ms = match deadline_of(req) {
+            Ok(d) => d,
+            Err(resp) => return resp,
+        };
+        let GatewaySink { core, spec, verb, ingress, egress, decoder } = self;
+        match decoder {
+            StreamDecoder::JsonPredict(parser) => {
+                let parsed = match parser.finish() {
+                    wire::simd::FastResult::Parsed(p) => Ok(p),
+                    wire::simd::FastResult::Fallback(raw) => codec::parse_predict_body(&raw),
+                };
+                match parsed {
+                    Ok(p) => run_predict(&core, p, spec, deadline_ms, egress),
+                    Err(e) => HttpResponse::error(400, &e.to_string()),
+                }
+            }
+            StreamDecoder::BinaryPredict(stream) => match stream.finish() {
+                Ok(p) => run_predict(&core, p, spec, deadline_ms, egress),
+                Err(e) => HttpResponse::error(400, &e.to_string()),
+            },
+            StreamDecoder::Buffer(body) => match verb {
+                Verb::Predict => match ingress.decode_predict(&body) {
+                    Ok(p) => run_predict(&core, p, spec, deadline_ms, egress),
+                    Err(e) => HttpResponse::error(400, &e.to_string()),
+                },
+                Verb::Classify | Verb::Regress => match ingress.decode_examples(&body) {
+                    Ok(p) => run_examples(&core, p, spec, verb, deadline_ms, egress),
+                    Err(e) => HttpResponse::error(400, &e.to_string()),
+                },
+            },
+        }
+    }
 }
 
 fn route(core: &ServerCore, req: &HttpRequest) -> HttpResponse {
@@ -91,7 +211,7 @@ fn models_route(core: &ServerCore, req: &HttpRequest) -> HttpResponse {
                 Ok(d) => d,
                 Err(resp) => return resp,
             };
-            data_plane(core, &req.body, route.spec, verb, deadline_ms)
+            data_plane(core, req, route.spec, verb, deadline_ms)
         }
         ("GET", None) => metadata(core, route.spec),
         ("DELETE", None) if route.spec.label.is_some() => delete_label(core, route.spec),
@@ -222,85 +342,122 @@ fn with_deadline(req: Request, deadline_ms: Option<u64>) -> Request {
     }
 }
 
+/// Pick the ingress codec from `Content-Type` and the egress codec
+/// from `Accept`; failures are ready-to-send 415/406 responses.
+fn negotiate(
+    req: &HttpRequest,
+) -> Result<(&'static dyn Codec, &'static dyn Codec), HttpResponse> {
+    let ingress = wire::ingress_codec(req.header("content-type"))?;
+    let egress = wire::egress_codec(req.header("accept"), ingress)?;
+    Ok((ingress, egress))
+}
+
+/// A 200 whose body came out of a wire codec.
+fn ok_response(enc: wire::Encoded) -> HttpResponse {
+    HttpResponse {
+        status: 200,
+        content_type: enc.content_type,
+        headers: Vec::new(),
+        body: enc.body,
+    }
+}
+
 fn data_plane(
     core: &ServerCore,
-    body: &[u8],
+    req: &HttpRequest,
     spec: ModelSpec,
     verb: Verb,
     deadline_ms: Option<u64>,
 ) -> HttpResponse {
+    let (ingress, egress) = match negotiate(req) {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
     match verb {
-        Verb::Predict => {
-            let parsed = match codec::parse_predict_body(body) {
-                Ok(p) => p,
-                Err(e) => return HttpResponse::error(400, &e.to_string()),
-            };
-            let row_format = parsed.row_format;
-            let resp = core.handle(with_deadline(
-                Request::Predict {
-                    spec,
-                    signature: parsed.signature,
-                    inputs: parsed.inputs,
-                },
-                deadline_ms,
-            ));
-            if let Response::Error { kind, message } = &resp {
-                return core_error(core, *kind, message);
+        Verb::Predict => match ingress.decode_predict(&req.body) {
+            Ok(parsed) => run_predict(core, parsed, spec, deadline_ms, egress),
+            Err(e) => HttpResponse::error(400, &e.to_string()),
+        },
+        Verb::Classify | Verb::Regress => match ingress.decode_examples(&req.body) {
+            Ok(parsed) => run_examples(core, parsed, spec, verb, deadline_ms, egress),
+            Err(e) => HttpResponse::error(400, &e.to_string()),
+        },
+    }
+}
+
+/// Execute a decoded predict against the core and encode the reply
+/// with the negotiated egress codec.
+fn run_predict(
+    core: &ServerCore,
+    parsed: codec::PredictBody,
+    spec: ModelSpec,
+    deadline_ms: Option<u64>,
+    egress: &'static dyn Codec,
+) -> HttpResponse {
+    let row_format = parsed.row_format;
+    let resp = core.handle(with_deadline(
+        Request::Predict {
+            spec,
+            signature: parsed.signature,
+            inputs: parsed.inputs,
+        },
+        deadline_ms,
+    ));
+    if let Response::Error { kind, message } = &resp {
+        return core_error(core, *kind, message);
+    }
+    if !matches!(resp, Response::Predict { .. }) {
+        return HttpResponse::error(500, &format!("unexpected response {resp:?}"));
+    }
+    let result = match egress.encode_predict(&resp, row_format) {
+        Ok(enc) => ok_response(enc),
+        Err(e) => HttpResponse::error(500, &e.to_string()),
+    };
+    // The reply is serialized; sole-owner output storage goes back to
+    // the pools, same as the RPC reply path.
+    resp.recycle_buffers();
+    result
+}
+
+/// Execute a decoded classify/regress against the core.
+fn run_examples(
+    core: &ServerCore,
+    parsed: codec::ExamplesBody,
+    spec: ModelSpec,
+    verb: Verb,
+    deadline_ms: Option<u64>,
+    egress: &'static dyn Codec,
+) -> HttpResponse {
+    match verb {
+        Verb::Classify => match core.handle(with_deadline(
+            Request::Classify {
+                spec,
+                signature: parsed.signature,
+                examples: parsed.examples,
+            },
+            deadline_ms,
+        )) {
+            Response::Classify { model_version, classes, log_probs } => {
+                ok_response(egress.encode_classify(model_version, &classes, &log_probs))
             }
-            if !matches!(resp, Response::Predict { .. }) {
-                return HttpResponse::error(500, &format!("unexpected response {resp:?}"));
+            Response::Error { kind, message } => core_error(core, kind, &message),
+            other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
+        },
+        Verb::Regress => match core.handle(with_deadline(
+            Request::Regress {
+                spec,
+                signature: parsed.signature,
+                examples: parsed.examples,
+            },
+            deadline_ms,
+        )) {
+            Response::Regress { model_version, values } => {
+                ok_response(egress.encode_regress(model_version, &values))
             }
-            let result = match codec::predict_response_json(&resp, row_format) {
-                Ok(json) => HttpResponse::json(200, &json),
-                Err(e) => HttpResponse::error(500, &e.to_string()),
-            };
-            // JSON is built; sole-owner output storage goes back to
-            // the pools, same as the RPC reply path.
-            resp.recycle_buffers();
-            result
-        }
-        Verb::Classify => {
-            let parsed = match codec::parse_examples_body(body) {
-                Ok(p) => p,
-                Err(e) => return HttpResponse::error(400, &e.to_string()),
-            };
-            match core.handle(with_deadline(
-                Request::Classify {
-                    spec,
-                    signature: parsed.signature,
-                    examples: parsed.examples,
-                },
-                deadline_ms,
-            )) {
-                Response::Classify { model_version, classes, log_probs } => HttpResponse::json(
-                    200,
-                    &codec::classify_response_json(model_version, &classes, &log_probs),
-                ),
-                Response::Error { kind, message } => core_error(core, kind, &message),
-                other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
-            }
-        }
-        Verb::Regress => {
-            let parsed = match codec::parse_examples_body(body) {
-                Ok(p) => p,
-                Err(e) => return HttpResponse::error(400, &e.to_string()),
-            };
-            match core.handle(with_deadline(
-                Request::Regress {
-                    spec,
-                    signature: parsed.signature,
-                    examples: parsed.examples,
-                },
-                deadline_ms,
-            )) {
-                Response::Regress { model_version, values } => HttpResponse::json(
-                    200,
-                    &codec::regress_response_json(model_version, &values),
-                ),
-                Response::Error { kind, message } => core_error(core, kind, &message),
-                other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
-            }
-        }
+            Response::Error { kind, message } => core_error(core, kind, &message),
+            other => HttpResponse::error(500, &format!("unexpected response {other:?}")),
+        },
+        Verb::Predict => unreachable!("predict bodies never decode as examples"),
     }
 }
 

@@ -125,8 +125,10 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        406 => "Not Acceptable",
         408 => "Request Timeout",
         413 => "Payload Too Large",
+        415 => "Unsupported Media Type",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",
@@ -150,6 +152,30 @@ fn herr(status: u16, message: impl Into<String>) -> HttpError {
 /// Handler: pure function from request to response; runs on connection
 /// threads, so shared state must be Sync.
 pub type HttpHandler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
+
+/// An incremental body consumer: request bytes stream into `feed` as
+/// they arrive off the socket — chunked uploads decode chunk by chunk,
+/// `Content-Length` bodies slice by slice — instead of being buffered
+/// whole and handed to the handler at the end. The wire codecs hang
+/// their streaming decoders off this seam, so tensor elements land in
+/// pooled storage while the upload is still in flight.
+///
+/// `feed` is infallible by design: a decoder that goes sour latches
+/// the error and reports it from `finish`, which keeps the transport
+/// loop free of per-chunk error plumbing (and mirrors the codecs'
+/// complete-or-bail contract).
+pub trait BodySink: Send {
+    fn feed(&mut self, chunk: &[u8]);
+    /// All body bytes are in: produce the response. `req` is the
+    /// request head (its `body` is empty — the bytes went here).
+    fn finish(self: Box<Self>, req: &HttpRequest) -> HttpResponse;
+}
+
+/// Decides, per request head, whether the body should stream into a
+/// [`BodySink`] (`Some`) or be buffered whole for the plain
+/// [`HttpHandler`] (`None`). Runs on the transport thread before any
+/// body byte is read.
+pub type SinkFactory = Arc<dyn Fn(&HttpRequest) -> Option<Box<dyn BodySink>> + Send + Sync>;
 
 /// The canned over-`max_connections` reply: an immediate 503 with
 /// `Retry-After`, mirroring admission-control shedding.
@@ -192,7 +218,7 @@ impl HttpServer {
     pub fn start(addr: &str, handler: HttpHandler) -> anyhow::Result<Arc<Self>> {
         let cfg = NetConfig::default();
         match Reactor::start(&cfg, NetMetrics::register(&Registry::new())) {
-            Ok(stack) => Self::start_on(addr, handler, &stack, true),
+            Ok(stack) => Self::start_on(addr, handler, None, &stack, true),
             Err(e) => {
                 crate::log_warn!("epoll reactor unavailable ({e}); using threaded listener");
                 Self::start_threaded(addr, handler, &cfg)
@@ -207,12 +233,26 @@ impl HttpServer {
         handler: HttpHandler,
         stack: &Arc<Reactor>,
     ) -> anyhow::Result<Arc<Self>> {
-        Self::start_on(addr, handler, stack, false)
+        Self::start_on(addr, handler, None, stack, false)
+    }
+
+    /// [`start_shared`](Self::start_shared) with a [`SinkFactory`]:
+    /// request heads the factory claims stream their bodies into the
+    /// sink as bytes arrive; everything else buffers and goes to
+    /// `handler` as before.
+    pub fn start_shared_with(
+        addr: &str,
+        handler: HttpHandler,
+        sinks: SinkFactory,
+        stack: &Arc<Reactor>,
+    ) -> anyhow::Result<Arc<Self>> {
+        Self::start_on(addr, handler, Some(sinks), stack, false)
     }
 
     fn start_on(
         addr: &str,
         handler: HttpHandler,
+        sinks: Option<SinkFactory>,
         stack: &Arc<Reactor>,
         owned: bool,
     ) -> anyhow::Result<Arc<Self>> {
@@ -222,7 +262,11 @@ impl HttpServer {
         let factory = ProtocolFactory {
             label: "http",
             make: Box::new(move || {
-                Box::new(HttpProto::new(Arc::clone(&make_handler), Arc::clone(&make_served)))
+                Box::new(HttpProto::new_with(
+                    Arc::clone(&make_handler),
+                    Arc::clone(&make_served),
+                    sinks.clone(),
+                ))
             }),
             reject: http_reject_bytes(),
         };
@@ -242,6 +286,17 @@ impl HttpServer {
     pub fn start_threaded(
         addr: &str,
         handler: HttpHandler,
+        cfg: &NetConfig,
+    ) -> anyhow::Result<Arc<Self>> {
+        Self::start_threaded_with(addr, handler, None, cfg)
+    }
+
+    /// [`start_threaded`](Self::start_threaded) with an optional
+    /// [`SinkFactory`] for streaming body decode.
+    pub fn start_threaded_with(
+        addr: &str,
+        handler: HttpHandler,
+        sinks: Option<SinkFactory>,
         cfg: &NetConfig,
     ) -> anyhow::Result<Arc<Self>> {
         let listener = TcpListener::bind(addr)?;
@@ -271,6 +326,7 @@ impl HttpServer {
                             let handler = Arc::clone(&handler);
                             let counter = Arc::clone(&accept_counter);
                             let sd = Arc::clone(&accept_shutdown);
+                            let sinks = sinks.clone();
                             // Track before spawn so stop() can shut the
                             // socket down and join the thread instead of
                             // stranding it (detached-spawn bug).
@@ -279,7 +335,7 @@ impl HttpServer {
                             let spawned = std::thread::Builder::new()
                                 .name("http-conn".to_string())
                                 .spawn(move || {
-                                    Self::serve_connection(stream, handler, counter, sd, idle_timeout);
+                                    Self::serve_connection(stream, handler, sinks, counter, sd, idle_timeout);
                                     if let Some(id) = id {
                                         tracker.deregister(id);
                                     }
@@ -311,6 +367,7 @@ impl HttpServer {
     fn serve_connection(
         stream: TcpStream,
         handler: HttpHandler,
+        sinks: Option<SinkFactory>,
         counter: Arc<AtomicU64>,
         shutdown: Arc<AtomicBool>,
         idle_timeout: std::time::Duration,
@@ -362,6 +419,27 @@ impl HttpServer {
                 {
                     return;
                 }
+            }
+            // Streaming path: if a sink claims this head, body bytes
+            // feed it as they come off the socket — no whole-body
+            // buffer — and the sink produces the response.
+            if let Some(mut sink) = sinks.as_ref().and_then(|f| f(&req)) {
+                if let Err(e) = stream_body(&mut reader, &req, sink.as_mut()) {
+                    let resp = HttpResponse::error(e.status, &e.message);
+                    let _ = write_response(&mut reader, &mut write_buf, &resp, false);
+                    return;
+                }
+                let keep_alive = wants_keep_alive(&req);
+                let resp = sink.finish(&req);
+                counter.fetch_add(1, Ordering::Relaxed);
+                if let Err(e) = write_response(&mut reader, &mut write_buf, &resp, keep_alive) {
+                    crate::log_debug!("http write error: {e}");
+                    return;
+                }
+                if !keep_alive {
+                    return;
+                }
+                continue;
             }
             req.body = match read_body(&mut reader, &req) {
                 Ok(body) => body,
@@ -581,6 +659,79 @@ fn read_body<R: BufRead>(r: &mut R, req: &HttpRequest) -> Result<Vec<u8>, HttpEr
         return Err(herr(400, "truncated body"));
     }
     Ok(body)
+}
+
+/// Read the request body according to its framing headers, feeding
+/// each slice into `sink` as it arrives instead of buffering. Framing
+/// rules, limits and error statuses match [`read_body`] exactly.
+fn stream_body<R: BufRead>(
+    r: &mut R,
+    req: &HttpRequest,
+    sink: &mut dyn BodySink,
+) -> Result<(), HttpError> {
+    let len = match body_framing(req)? {
+        BodyFraming::Empty => return Ok(()),
+        BodyFraming::Chunked => return stream_chunked(r, sink),
+        BodyFraming::Length(len) => len,
+    };
+    let mut scratch = [0u8; 16 << 10];
+    let mut remaining = len;
+    while remaining > 0 {
+        let want = remaining.min(scratch.len());
+        let got = r
+            .read(&mut scratch[..want])
+            .map_err(|e| herr(400, format!("read error: {e}")))?;
+        if got == 0 {
+            return Err(herr(400, "truncated body"));
+        }
+        sink.feed(&scratch[..got]);
+        remaining -= got;
+    }
+    Ok(())
+}
+
+/// Chunked counterpart of [`stream_body`]: decoded chunk data feeds
+/// the sink; the cumulative cap still applies.
+fn stream_chunked<R: BufRead>(r: &mut R, sink: &mut dyn BodySink) -> Result<(), HttpError> {
+    let mut scratch = [0u8; 16 << 10];
+    let mut total = 0usize;
+    loop {
+        let line = read_line_limited(r, 1024)?
+            .ok_or_else(|| herr(400, "connection closed mid-chunk"))?;
+        let size_str = line.split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_str, 16)
+            .map_err(|_| herr(400, format!("bad chunk size {size_str:?}")))?;
+        if total.saturating_add(size) > MAX_BODY {
+            return Err(herr(413, format!("chunked body exceeds {MAX_BODY} bytes")));
+        }
+        if size == 0 {
+            loop {
+                match read_line_limited(r, MAX_HEADER_LINE)? {
+                    None => return Err(herr(400, "connection closed mid-trailers")),
+                    Some(l) if l.is_empty() => return Ok(()),
+                    Some(_) => continue,
+                }
+            }
+        }
+        let mut remaining = size;
+        while remaining > 0 {
+            let want = remaining.min(scratch.len());
+            let got = r
+                .read(&mut scratch[..want])
+                .map_err(|e| herr(400, format!("read error: {e}")))?;
+            if got == 0 {
+                return Err(herr(400, "truncated chunk"));
+            }
+            sink.feed(&scratch[..got]);
+            remaining -= got;
+        }
+        total += size;
+        let mut crlf = [0u8; 2];
+        r.read_exact(&mut crlf).map_err(|_| herr(400, "truncated chunk"))?;
+        if &crlf != b"\r\n" {
+            return Err(herr(400, "chunk missing CRLF terminator"));
+        }
+    }
 }
 
 fn read_chunked<R: BufRead>(r: &mut R) -> Result<Vec<u8>, HttpError> {

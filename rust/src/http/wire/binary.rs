@@ -1,0 +1,440 @@
+//! The binary tensor codec: `application/x-tensorserve`.
+//!
+//! The RPC plane's tensor framing carried over REST. A request body is
+//! exactly an `rpc::proto` payload — `signature` + named tensors for
+//! `:predict`, `signature` + examples for `:classify`/`:regress` — with
+//! no `ModelSpec` framed (the model comes from the URL path). Success
+//! responses are [`Response::encode`] bytes; errors keep the uniform
+//! JSON envelope so any client can read a failure.
+//!
+//! [`BinaryPredictStream`] is the incremental form used when a body
+//! streams in (chunked transfer, or the reactor feeding bytes as they
+//! land): framing headers are parsed as soon as enough bytes arrive
+//! and tensor data is written f32-by-f32 straight into a pooled
+//! buffer acquired up front — shape precedes data on the wire, so the
+//! exact allocation is known before the first element. At most three
+//! bytes of a split float are ever carried; nothing else is retained.
+
+use super::{Codec, Encoded, CONTENT_TYPE_BINARY};
+use crate::base::tensor::Tensor;
+use crate::http::codec::{ExamplesBody, PredictBody};
+use crate::rpc::proto::{self, Response};
+use crate::util::pool::BufferPool;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+pub struct BinaryCodec;
+
+impl Codec for BinaryCodec {
+    fn name(&self) -> &'static str {
+        "binary"
+    }
+
+    fn content_type(&self) -> &'static str {
+        CONTENT_TYPE_BINARY
+    }
+
+    fn decode_predict(&self, body: &[u8]) -> Result<PredictBody> {
+        let (signature, inputs) = proto::decode_predict_payload(body)?;
+        // Named tensors are the column format's shape; a JSON reply to
+        // a binary request therefore uses the "outputs" keying.
+        Ok(PredictBody { signature, inputs, row_format: false })
+    }
+
+    fn decode_examples(&self, body: &[u8]) -> Result<ExamplesBody> {
+        let (signature, examples) = proto::decode_examples_payload(body)?;
+        Ok(ExamplesBody { signature, examples })
+    }
+
+    fn encode_predict(&self, resp: &Response, _row_format: bool) -> Result<Encoded> {
+        match resp {
+            Response::Predict { .. } => {
+                Ok(Encoded { content_type: CONTENT_TYPE_BINARY, body: resp.encode() })
+            }
+            _ => bail!("predict produced an unexpected response variant"),
+        }
+    }
+
+    fn encode_classify(
+        &self,
+        model_version: u64,
+        classes: &[i32],
+        log_probs: &[Vec<f32>],
+    ) -> Encoded {
+        let resp = Response::Classify {
+            model_version,
+            classes: classes.to_vec(),
+            log_probs: log_probs.to_vec(),
+        };
+        Encoded { content_type: CONTENT_TYPE_BINARY, body: resp.encode() }
+    }
+
+    fn encode_regress(&self, model_version: u64, values: &[f32]) -> Encoded {
+        let resp = Response::Regress { model_version, values: values.to_vec() };
+        Encoded { content_type: CONTENT_TYPE_BINARY, body: resp.encode() }
+    }
+}
+
+// ------------------------------------------------ incremental decode
+
+/// Decode states, in wire order. Header fields accumulate in `hold`
+/// until complete; tensor data bypasses `hold` entirely.
+enum St {
+    SigLen,
+    Sig(usize),
+    Count,
+    NameLen,
+    Name(usize),
+    Rank,
+    Dims(usize),
+    DataLen,
+    Data,
+    Done,
+}
+
+/// Incremental decoder for a binary `:predict` body. Mirrors
+/// [`proto::decode_predict_payload`]'s grammar and caps exactly;
+/// [`finish`](Self::finish) yields the same tensors the whole-buffer
+/// decode would.
+pub struct BinaryPredictStream {
+    st: St,
+    hold: Vec<u8>,
+    signature: String,
+    remaining: usize,
+    inputs: Vec<(String, Tensor)>,
+    cur_name: String,
+    cur_shape: Vec<usize>,
+    cur_want: usize,
+    buf: Option<Arc<[f32]>>,
+    filled: usize,
+    carry: [u8; 4],
+    carry_len: usize,
+    err: Option<anyhow::Error>,
+}
+
+impl Default for BinaryPredictStream {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BinaryPredictStream {
+    pub fn new() -> Self {
+        BinaryPredictStream {
+            st: St::SigLen,
+            hold: Vec::new(),
+            signature: String::new(),
+            remaining: 0,
+            inputs: Vec::new(),
+            cur_name: String::new(),
+            cur_shape: Vec::new(),
+            cur_want: 0,
+            buf: None,
+            filled: 0,
+            carry: [0; 4],
+            carry_len: 0,
+            err: None,
+        }
+    }
+
+    /// Bytes a header state needs in `hold` before it can step.
+    fn need(&self) -> usize {
+        match self.st {
+            St::SigLen | St::Count | St::NameLen | St::Rank | St::DataLen => 4,
+            St::Sig(n) | St::Name(n) => n,
+            St::Dims(rank) => rank * 4,
+            St::Data | St::Done => 0,
+        }
+    }
+
+    fn fail(&mut self, e: anyhow::Error) {
+        self.err = Some(e);
+        self.buf = None;
+        self.hold.clear();
+    }
+
+    /// Feed the next slice of body bytes. Errors are latched and
+    /// reported by [`finish`](Self::finish).
+    pub fn feed(&mut self, mut chunk: &[u8]) {
+        while self.err.is_none() {
+            match self.st {
+                St::Data => {
+                    if self.filled == self.cur_want && self.carry_len == 0 {
+                        if let Err(e) = self.finish_tensor() {
+                            self.fail(e);
+                        }
+                        continue;
+                    }
+                    if chunk.is_empty() {
+                        return;
+                    }
+                    if self.carry_len > 0 || chunk.len() < 4 {
+                        // Complete (or start) a split float.
+                        let take = (4 - self.carry_len).min(chunk.len());
+                        self.carry[self.carry_len..self.carry_len + take]
+                            .copy_from_slice(&chunk[..take]);
+                        self.carry_len += take;
+                        chunk = &chunk[take..];
+                        if self.carry_len == 4 {
+                            let v = f32::from_le_bytes(self.carry);
+                            self.carry_len = 0;
+                            self.write_f32(v);
+                        }
+                        continue;
+                    }
+                    let whole = (chunk.len() / 4).min(self.cur_want - self.filled);
+                    if whole > 0 {
+                        let buf = Arc::get_mut(self.buf.as_mut().expect("staging buffer"))
+                            .expect("staging buffer uniquely owned");
+                        for (dst, src) in buf[self.filled..self.filled + whole]
+                            .iter_mut()
+                            .zip(chunk.chunks_exact(4))
+                        {
+                            *dst = f32::from_le_bytes(src.try_into().unwrap());
+                        }
+                        self.filled += whole;
+                        chunk = &chunk[whole * 4..];
+                    }
+                }
+                St::Done => {
+                    if chunk.is_empty() {
+                        return;
+                    }
+                    self.fail(anyhow!("trailing bytes in message"));
+                }
+                _ => {
+                    let need = self.need();
+                    if self.hold.len() < need {
+                        let take = (need - self.hold.len()).min(chunk.len());
+                        if take == 0 {
+                            return; // starved: wait for the next chunk
+                        }
+                        self.hold.extend_from_slice(&chunk[..take]);
+                        chunk = &chunk[take..];
+                    }
+                    if self.hold.len() == need {
+                        let hold = std::mem::take(&mut self.hold);
+                        if let Err(e) = self.step(&hold) {
+                            self.fail(e);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// A header field is complete: validate it (same caps as the
+    /// whole-buffer `Reader`) and advance.
+    fn step(&mut self, hold: &[u8]) -> Result<()> {
+        let u32_at = |i: usize| u32::from_le_bytes(hold[i * 4..i * 4 + 4].try_into().unwrap());
+        match self.st {
+            St::SigLen => {
+                let n = u32_at(0) as usize;
+                if n > 1 << 20 {
+                    bail!("implausible string length {n}");
+                }
+                self.st = St::Sig(n);
+            }
+            St::Sig(_) => {
+                self.signature = std::str::from_utf8(hold)?.to_string();
+                self.st = St::Count;
+            }
+            St::Count => {
+                let n = u32_at(0) as usize;
+                if n > 1 << 16 {
+                    bail!("implausible input count {n}");
+                }
+                self.remaining = n;
+                self.st = if n == 0 { St::Done } else { St::NameLen };
+            }
+            St::NameLen => {
+                let n = u32_at(0) as usize;
+                if n > 1 << 20 {
+                    bail!("implausible string length {n}");
+                }
+                self.st = St::Name(n);
+            }
+            St::Name(_) => {
+                self.cur_name = std::str::from_utf8(hold)?.to_string();
+                self.st = St::Rank;
+            }
+            St::Rank => {
+                let rank = u32_at(0) as usize;
+                if rank > 8 {
+                    bail!("implausible rank {rank}");
+                }
+                self.st = St::Dims(rank);
+            }
+            St::Dims(rank) => {
+                self.cur_shape = (0..rank).map(|i| u32_at(i) as usize).collect();
+                self.cur_want = self
+                    .cur_shape
+                    .iter()
+                    .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                    .ok_or_else(|| anyhow!("tensor shape {:?} overflows", self.cur_shape))?;
+                self.st = St::DataLen;
+            }
+            St::DataLen => {
+                let n = u32_at(0) as usize;
+                if n != self.cur_want {
+                    bail!(
+                        "tensor data length {n} != shape {:?} product {}",
+                        self.cur_shape,
+                        self.cur_want
+                    );
+                }
+                self.buf = Some(BufferPool::global().acquire(self.cur_want));
+                self.filled = 0;
+                self.st = St::Data;
+            }
+            St::Data | St::Done => unreachable!("data states never hold"),
+        }
+        Ok(())
+    }
+
+    fn write_f32(&mut self, v: f32) {
+        let buf = Arc::get_mut(self.buf.as_mut().expect("staging buffer"))
+            .expect("staging buffer uniquely owned");
+        buf[self.filled] = v;
+        self.filled += 1;
+    }
+
+    fn finish_tensor(&mut self) -> Result<()> {
+        let storage = self.buf.take().expect("staging buffer");
+        let shape = std::mem::take(&mut self.cur_shape);
+        let tensor = Tensor::from_shared(shape, storage, 0)?;
+        self.inputs.push((std::mem::take(&mut self.cur_name), tensor));
+        self.remaining -= 1;
+        self.st = if self.remaining == 0 { St::Done } else { St::NameLen };
+        Ok(())
+    }
+
+    /// Complete the decode. Errors if any fed byte violated the
+    /// grammar or the body stopped mid-field.
+    pub fn finish(mut self) -> Result<PredictBody> {
+        // A zero-element tensor completes without needing data bytes.
+        self.feed(&[]);
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        match self.st {
+            St::Done => Ok(PredictBody {
+                signature: self.signature,
+                inputs: self.inputs,
+                row_format: false,
+            }),
+            _ => {
+                if let Some(storage) = self.buf.take() {
+                    BufferPool::global().release(storage);
+                }
+                bail!("truncated binary predict payload")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::size_class;
+
+    fn payload(signature: &str, inputs: &[(String, Tensor)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        proto::encode_predict_payload(&mut out, signature, inputs);
+        out
+    }
+
+    fn tensor(shape: Vec<usize>, data: &[f32]) -> Tensor {
+        Tensor::build_with(shape, &BufferPool::global(), |buf| {
+            buf.copy_from_slice(data);
+        })
+    }
+
+    fn assert_same(a: &PredictBody, b: &PredictBody) {
+        assert_eq!(a.signature, b.signature);
+        assert_eq!(a.inputs.len(), b.inputs.len());
+        for ((an, at), (bn, bt)) in a.inputs.iter().zip(b.inputs.iter()) {
+            assert_eq!(an, bn);
+            assert_eq!(at.shape(), bt.shape());
+            let ab: Vec<u32> = at.data().iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = bt.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb);
+        }
+    }
+
+    #[test]
+    fn whole_and_streamed_decode_agree() {
+        let inputs = vec![
+            ("x".to_string(), tensor(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0])),
+            ("y".to_string(), tensor(vec![1], &[-0.5])),
+        ];
+        let body = payload("serving_default", &inputs);
+
+        let whole = BinaryCodec.decode_predict(&body).unwrap();
+        assert_same(
+            &whole,
+            &PredictBody { signature: "serving_default".into(), inputs, row_format: false },
+        );
+
+        // Byte-at-a-time streaming must land on identical tensors.
+        let mut stream = BinaryPredictStream::new();
+        for b in &body {
+            stream.feed(std::slice::from_ref(b));
+        }
+        let streamed = stream.finish().unwrap();
+        assert_same(&whole, &streamed);
+        // Streamed tensors live in pooled class-sized storage.
+        let (_, t) = &streamed.inputs[0];
+        assert_eq!(t.storage().len(), size_class(6));
+    }
+
+    #[test]
+    fn streamed_decode_rejects_what_whole_decode_rejects() {
+        let good = payload("s", &[("x".to_string(), tensor(vec![2], &[1.0, 2.0]))]);
+        let cases: Vec<Vec<u8>> = vec![
+            good[..good.len() - 1].to_vec(),                  // truncated data
+            good[..5].to_vec(),                               // truncated header
+            { let mut b = good.clone(); b.push(0); b },       // trailing byte
+            { let mut b = good.clone(); b[0] = 0xff; b[1] = 0xff; b[2] = 0xff; b }, // huge sig len
+            Vec::new(),                                       // empty body
+        ];
+        for body in cases {
+            let whole = BinaryCodec.decode_predict(&body);
+            let mut stream = BinaryPredictStream::new();
+            stream.feed(&body);
+            let streamed = stream.finish();
+            assert_eq!(whole.is_err(), streamed.is_err(), "{body:?}");
+            assert!(whole.is_err(), "all cases here are invalid");
+        }
+    }
+
+    #[test]
+    fn zero_tensors_and_zero_elements() {
+        let empty = payload("sig", &[]);
+        let mut stream = BinaryPredictStream::new();
+        stream.feed(&empty);
+        let parsed = stream.finish().unwrap();
+        assert_eq!(parsed.signature, "sig");
+        assert!(parsed.inputs.is_empty());
+
+        let zero_elem = payload("s", &[("x".to_string(), tensor(vec![0], &[]))]);
+        let mut stream = BinaryPredictStream::new();
+        stream.feed(&zero_elem);
+        let parsed = stream.finish().unwrap();
+        assert_eq!(parsed.inputs.len(), 1);
+        assert_eq!(parsed.inputs[0].1.shape(), &[0]);
+    }
+
+    #[test]
+    fn response_roundtrip_through_binary_encoding() {
+        let enc = BinaryCodec.encode_regress(7, &[0.25, 0.75]);
+        assert_eq!(enc.content_type, CONTENT_TYPE_BINARY);
+        match Response::decode(&enc.body).unwrap() {
+            Response::Regress { model_version, values } => {
+                assert_eq!(model_version, 7);
+                assert_eq!(values, vec![0.25, 0.75]);
+            }
+            other => panic!("unexpected variant {other:?}"),
+        }
+    }
+}

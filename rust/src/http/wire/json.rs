@@ -1,0 +1,164 @@
+//! The JSON wire codecs.
+//!
+//! [`ScalarJsonCodec`] is the original implementation: parse the body
+//! into a `util::json` tree, then walk it into pooled tensors
+//! (`http::codec`). It is the reference semantics — every other codec
+//! is defined as "agrees with scalar".
+//!
+//! [`SimdJsonCodec`] is the default for `application/json`. Predict
+//! bodies first run through the complete-or-bail SWAR/SIMD engine
+//! ([`super::simd`]): hot `{"instances": [[…]]}` shapes decode with no
+//! intermediate `Json` tree, digits scanned a block at a time, floats
+//! written straight into pooled `BufferPool` storage. Anything the
+//! engine cannot prove it parses identically — column format, nested
+//! envelopes, string escapes, exotic numbers — bails and the retained
+//! raw bytes re-parse through the scalar codec, so the observable
+//! result (success or exact error) never depends on which path ran.
+
+use super::{Codec, Encoded, CONTENT_TYPE_JSON};
+use crate::http::codec::{self, ExamplesBody, PredictBody};
+use crate::rpc::proto::Response;
+use anyhow::Result;
+
+fn encode_predict_json(resp: &Response, row_format: bool) -> Result<Encoded> {
+    let json = codec::predict_response_json(resp, row_format)?;
+    Ok(Encoded { content_type: CONTENT_TYPE_JSON, body: json.to_string().into_bytes() })
+}
+
+fn encode_classify_json(model_version: u64, classes: &[i32], log_probs: &[Vec<f32>]) -> Encoded {
+    let json = codec::classify_response_json(model_version, classes, log_probs);
+    Encoded { content_type: CONTENT_TYPE_JSON, body: json.to_string().into_bytes() }
+}
+
+fn encode_regress_json(model_version: u64, values: &[f32]) -> Encoded {
+    let json = codec::regress_response_json(model_version, values);
+    Encoded { content_type: CONTENT_TYPE_JSON, body: json.to_string().into_bytes() }
+}
+
+/// The reference JSON codec: full `util::json` tree walk.
+pub struct ScalarJsonCodec;
+
+impl Codec for ScalarJsonCodec {
+    fn name(&self) -> &'static str {
+        "json"
+    }
+
+    fn content_type(&self) -> &'static str {
+        CONTENT_TYPE_JSON
+    }
+
+    fn decode_predict(&self, body: &[u8]) -> Result<PredictBody> {
+        codec::parse_predict_body(body)
+    }
+
+    fn decode_examples(&self, body: &[u8]) -> Result<ExamplesBody> {
+        codec::parse_examples_body(body)
+    }
+
+    fn encode_predict(&self, resp: &Response, row_format: bool) -> Result<Encoded> {
+        encode_predict_json(resp, row_format)
+    }
+
+    fn encode_classify(
+        &self,
+        model_version: u64,
+        classes: &[i32],
+        log_probs: &[Vec<f32>],
+    ) -> Encoded {
+        encode_classify_json(model_version, classes, log_probs)
+    }
+
+    fn encode_regress(&self, model_version: u64, values: &[f32]) -> Encoded {
+        encode_regress_json(model_version, values)
+    }
+}
+
+/// The SWAR/SIMD-accelerated JSON codec. Same observable semantics as
+/// [`ScalarJsonCodec`]; hot predict bodies skip the `Json` tree.
+pub struct SimdJsonCodec;
+
+impl Codec for SimdJsonCodec {
+    fn name(&self) -> &'static str {
+        "simd-json"
+    }
+
+    fn content_type(&self) -> &'static str {
+        CONTENT_TYPE_JSON
+    }
+
+    fn decode_predict(&self, body: &[u8]) -> Result<PredictBody> {
+        match super::simd::parse_predict_fast(body) {
+            super::simd::FastResult::Parsed(parsed) => Ok(parsed),
+            super::simd::FastResult::Fallback(raw) => codec::parse_predict_body(&raw),
+        }
+    }
+
+    fn decode_examples(&self, body: &[u8]) -> Result<ExamplesBody> {
+        // Examples are nested feature maps — tree parse is the honest
+        // path; the SIMD engine only targets numeric tensor bodies.
+        codec::parse_examples_body(body)
+    }
+
+    fn encode_predict(&self, resp: &Response, row_format: bool) -> Result<Encoded> {
+        encode_predict_json(resp, row_format)
+    }
+
+    fn encode_classify(
+        &self,
+        model_version: u64,
+        classes: &[i32],
+        log_probs: &[Vec<f32>],
+    ) -> Encoded {
+        encode_classify_json(model_version, classes, log_probs)
+    }
+
+    fn encode_regress(&self, model_version: u64, values: &[f32]) -> Encoded {
+        encode_regress_json(model_version, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decode_both(body: &[u8]) -> (Result<PredictBody>, Result<PredictBody>) {
+        (ScalarJsonCodec.decode_predict(body), SimdJsonCodec.decode_predict(body))
+    }
+
+    #[test]
+    fn simd_codec_matches_scalar_on_hot_and_cold_bodies() {
+        let bodies: [&[u8]; 6] = [
+            br#"{"instances": [[1.5, 2.5], [3.0, 4.0]]}"#,
+            br#"{"signature_name": "sig", "instances": [1, 2, 3]}"#,
+            // Cold shapes: column format, envelope rows, escapes.
+            br#"{"inputs": {"x": [[1, 2]]}}"#,
+            br#"{"instances": [{"x": [1.0]}, {"x": [2.0]}]}"#,
+            br#"{"signature_name": "a\nb", "instances": [[1]]}"#,
+            br#"not json at all"#,
+        ];
+        for body in bodies {
+            let (scalar, simd) = decode_both(body);
+            match (scalar, simd) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.signature, b.signature);
+                    assert_eq!(a.row_format, b.row_format);
+                    assert_eq!(a.inputs.len(), b.inputs.len());
+                    for ((an, at), (bn, bt)) in a.inputs.iter().zip(b.inputs.iter()) {
+                        assert_eq!(an, bn);
+                        assert_eq!(at.shape(), bt.shape());
+                        let ab: Vec<u32> = at.data().iter().map(|v| v.to_bits()).collect();
+                        let bb: Vec<u32> = bt.data().iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(ab, bb);
+                    }
+                }
+                (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string()),
+                (a, b) => panic!(
+                    "paths disagree on {:?}: scalar={:?} simd={:?}",
+                    String::from_utf8_lossy(body),
+                    a.map(|p| p.inputs.len()),
+                    b.map(|p| p.inputs.len()),
+                ),
+            }
+        }
+    }
+}

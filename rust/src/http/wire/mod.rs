@@ -1,0 +1,240 @@
+//! Pluggable wire codecs for the REST data plane.
+//!
+//! One [`Codec`] seam, three implementations, negotiated per request:
+//!
+//! * [`json::ScalarJsonCodec`] — the original `util::json`-tree
+//!   row/column codec (`application/json; codec=scalar`): the
+//!   reference implementation every other codec must agree with.
+//! * [`json::SimdJsonCodec`] — the default for `application/json`:
+//!   identical semantics, but hot `{"instances": [[…]]}` bodies decode
+//!   through the SWAR/SIMD engine in [`simd`] with zero intermediate
+//!   `Json` tree; everything else transparently falls back to the
+//!   scalar codec.
+//! * [`binary::BinaryCodec`] — `application/x-tensorserve`: the RPC
+//!   plane's tensor framing carried over REST, so latency-sensitive
+//!   clients skip JSON entirely while keeping REST routing, limits and
+//!   error semantics.
+//!
+//! Ingress is selected by `Content-Type` (unknown → 415), egress by
+//! `Accept` (no match → 406, absent/`*/*` mirrors the ingress codec).
+//! Error responses always use the uniform JSON `{"error": …}`
+//! envelope regardless of the negotiated codecs — a client that can
+//! speak any codec can always read a failure.
+
+pub mod binary;
+pub mod json;
+pub mod simd;
+
+use crate::http::codec::{ExamplesBody, PredictBody};
+use crate::http::server::HttpResponse;
+use crate::rpc::proto::Response;
+use anyhow::Result;
+
+/// The JSON media type (and the default when no `Content-Type` is
+/// sent).
+pub const CONTENT_TYPE_JSON: &str = "application/json";
+
+/// The binary tensor-framing media type.
+pub const CONTENT_TYPE_BINARY: &str = "application/x-tensorserve";
+
+/// An encoded response payload: bytes plus the media type to answer
+/// with.
+pub struct Encoded {
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+/// One wire format: how data-plane request bodies decode and how
+/// successful responses encode. Implementations are stateless — the
+/// negotiated codec is shared per process and used concurrently.
+pub trait Codec: Send + Sync {
+    /// Short name for benches, logs and the `codec=` parameter.
+    fn name(&self) -> &'static str;
+
+    /// The media type this codec answers with.
+    fn content_type(&self) -> &'static str;
+
+    /// Decode a `:predict` body.
+    fn decode_predict(&self, body: &[u8]) -> Result<PredictBody>;
+
+    /// Decode a `:classify`/`:regress` body.
+    fn decode_examples(&self, body: &[u8]) -> Result<ExamplesBody>;
+
+    /// Encode a successful predict response. `row_format` mirrors the
+    /// request format for JSON replies; binary ignores it.
+    fn encode_predict(&self, resp: &Response, row_format: bool) -> Result<Encoded>;
+
+    /// Encode a successful classify response.
+    fn encode_classify(&self, model_version: u64, classes: &[i32], log_probs: &[Vec<f32>])
+        -> Encoded;
+
+    /// Encode a successful regress response.
+    fn encode_regress(&self, model_version: u64, values: &[f32]) -> Encoded;
+}
+
+/// The process-wide codec instances.
+pub fn scalar_json() -> &'static json::ScalarJsonCodec {
+    static C: json::ScalarJsonCodec = json::ScalarJsonCodec;
+    &C
+}
+
+pub fn simd_json() -> &'static json::SimdJsonCodec {
+    static C: json::SimdJsonCodec = json::SimdJsonCodec;
+    &C
+}
+
+pub fn binary() -> &'static binary::BinaryCodec {
+    static C: binary::BinaryCodec = binary::BinaryCodec;
+    &C
+}
+
+/// Strip parameters from a media type: `application/json; charset=…` →
+/// `application/json`, lowercased and trimmed.
+fn media_type(value: &str) -> String {
+    value
+        .split(';')
+        .next()
+        .unwrap_or("")
+        .trim()
+        .to_ascii_lowercase()
+}
+
+/// A `codec=` parameter on the media type, if present (`application/
+/// json; codec=scalar` pins the reference implementation — used by the
+/// differential harness and as an escape hatch).
+fn codec_param(value: &str) -> Option<String> {
+    for param in value.split(';').skip(1) {
+        let mut kv = param.splitn(2, '=');
+        let k = kv.next().unwrap_or("").trim().to_ascii_lowercase();
+        if k == "codec" {
+            return Some(kv.next().unwrap_or("").trim().to_ascii_lowercase());
+        }
+    }
+    None
+}
+
+/// Select the ingress codec from a request `Content-Type`. `None`
+/// (header absent) defaults to JSON. Unknown media types answer
+/// `415 Unsupported Media Type` — in the uniform JSON error envelope —
+/// instead of letting a JSON parse fail into a misleading 400.
+pub fn ingress_codec(content_type: Option<&str>) -> Result<&'static dyn Codec, HttpResponse> {
+    let value = match content_type {
+        None => return Ok(simd_json()),
+        Some(v) => v,
+    };
+    match media_type(value).as_str() {
+        "" | "application/json" => match codec_param(value).as_deref() {
+            None | Some("simd") => Ok(simd_json()),
+            Some("scalar") => Ok(scalar_json()),
+            Some(other) => Err(HttpResponse::error(
+                415,
+                &format!("unknown json codec parameter {other:?} (offered: simd, scalar)"),
+            )),
+        },
+        "application/x-tensorserve" => Ok(binary()),
+        other => Err(HttpResponse::error(
+            415,
+            &format!(
+                "unsupported content-type {other:?} (offered: {CONTENT_TYPE_JSON}, \
+                 {CONTENT_TYPE_BINARY})"
+            ),
+        )),
+    }
+}
+
+/// Select the egress codec from a request `Accept` header. Absent,
+/// `*/*` and `application/*` mirror the ingress codec's family; an
+/// explicit media type must match an offered codec or the answer is
+/// `406 Not Acceptable` (again in the JSON error envelope).
+pub fn egress_codec(
+    accept: Option<&str>,
+    ingress: &'static dyn Codec,
+) -> Result<&'static dyn Codec, HttpResponse> {
+    let value = match accept {
+        None => return Ok(ingress),
+        Some(v) => v,
+    };
+    // An Accept list: any acceptable entry wins, most-specific match
+    // first in the client's own order (no q-value weighting — the
+    // gateway offers exactly two families).
+    let mut saw_any = false;
+    for entry in value.split(',') {
+        match media_type(entry).as_str() {
+            "" => continue,
+            "*/*" | "application/*" => saw_any = true,
+            "application/json" => {
+                return Ok(match codec_param(entry).as_deref() {
+                    Some("scalar") => scalar_json(),
+                    _ => simd_json(),
+                })
+            }
+            "application/x-tensorserve" => return Ok(binary()),
+            _ => {}
+        }
+    }
+    if saw_any {
+        return Ok(ingress);
+    }
+    Err(HttpResponse::error(
+        406,
+        &format!(
+            "no acceptable content-type in {value:?} (offered: {CONTENT_TYPE_JSON}, \
+             {CONTENT_TYPE_BINARY})"
+        ),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ingress_negotiation() {
+        assert_eq!(ingress_codec(None).unwrap().name(), "simd-json");
+        assert_eq!(ingress_codec(Some("application/json")).unwrap().name(), "simd-json");
+        assert_eq!(
+            ingress_codec(Some("Application/JSON; charset=utf-8")).unwrap().name(),
+            "simd-json"
+        );
+        assert_eq!(
+            ingress_codec(Some("application/json; codec=scalar")).unwrap().name(),
+            "json"
+        );
+        assert_eq!(
+            ingress_codec(Some("application/x-tensorserve")).unwrap().name(),
+            "binary"
+        );
+        for bad in ["text/csv", "application/xml", "multipart/form-data; boundary=x"] {
+            let resp = ingress_codec(Some(bad)).unwrap_err();
+            assert_eq!(resp.status, 415, "{bad}");
+            assert!(String::from_utf8_lossy(&resp.body).contains("error"), "{bad}");
+        }
+    }
+
+    #[test]
+    fn egress_negotiation() {
+        let json = simd_json() as &'static dyn Codec;
+        let bin = binary() as &'static dyn Codec;
+        assert_eq!(egress_codec(None, json).unwrap().name(), "simd-json");
+        assert_eq!(egress_codec(None, bin).unwrap().name(), "binary");
+        assert_eq!(egress_codec(Some("*/*"), bin).unwrap().name(), "binary");
+        assert_eq!(egress_codec(Some("application/*"), json).unwrap().name(), "simd-json");
+        assert_eq!(egress_codec(Some("application/json"), bin).unwrap().name(), "simd-json");
+        assert_eq!(
+            egress_codec(Some("application/x-tensorserve"), json).unwrap().name(),
+            "binary"
+        );
+        assert_eq!(
+            egress_codec(Some("text/html, application/json;q=0.9"), bin)
+                .unwrap()
+                .name(),
+            "simd-json"
+        );
+        assert_eq!(
+            egress_codec(Some("application/json; codec=scalar"), bin).unwrap().name(),
+            "json"
+        );
+        let resp = egress_codec(Some("application/msgpack"), json).unwrap_err();
+        assert_eq!(resp.status, 406);
+    }
+}

@@ -1,0 +1,914 @@
+//! SWAR/SIMD fast path for the hot `{"instances": [[...]]}` parse.
+//!
+//! The scalar codec walks every request body through a generic
+//! [`crate::util::json::Json`] tree — one heap node per number — before
+//! tensor data reaches pooled storage. For the dominant REST payload
+//! (a row-format predict body whose rows are bare numbers or flat
+//! number arrays) this module decodes the body in a single pass with
+//! **zero intermediate tree allocations**: digit runs are located with
+//! SSE2/AVX2 (runtime-detected, portable SWAR fallback), eight digits
+//! are folded to an integer per multiply chain, floats compose via the
+//! shared Clinger window in [`crate::util::json`], and every element is
+//! written straight into a pooled [`BufferPool`] buffer that becomes
+//! the request [`Tensor`]'s storage without a copy.
+//!
+//! ## Complete-or-bail
+//!
+//! The engine never produces its own errors. Either it **completes**
+//! — and the result is bit-identical to what
+//! [`crate::http::codec::parse_predict_body`] would build, because both
+//! paths share one number parser and one pool discipline — or it
+//! **bails** and the caller re-parses the retained bytes through the
+//! scalar codec, which then produces the canonical result or error.
+//! Anything outside the strict hot grammar bails: column format,
+//! `{name: row}` envelopes, string escapes, non-ASCII bytes, unknown
+//! keys, ragged rows, element counts past
+//! [`crate::http::codec::MAX_TENSOR_ELEMS`]. This is what makes the
+//! differential fuzz guarantee (`rust/tests/codec_fuzz.rs`) structural
+//! rather than statistical.
+//!
+//! ## Incremental feeding
+//!
+//! [`FastPredictParser`] accepts the body in arbitrary chunks (the
+//! chunked-transfer path feeds it straight from the socket). The
+//! cursor only advances past complete tokens, so a chunk boundary in
+//! the middle of a number or string simply parks the parse until more
+//! bytes arrive; staged floats live in pool-class buffers that grow by
+//! class doubling, so `finish()` hands the final buffer to the tensor
+//! zero-copy (the last class always equals `size_class(n)` — exactly
+//! what the scalar path's `try_build_with` produces).
+
+use crate::base::tensor::Tensor;
+use crate::http::codec::{PredictBody, MAX_TENSOR_ELEMS};
+use crate::util::json;
+use crate::util::pool::BufferPool;
+use std::sync::Arc;
+
+// ------------------------------------------------------ CPU dispatch
+
+/// Vector tier the digit scanner runs at, resolved once per process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable 8-bytes-per-word bit tricks (non-x86 fallback).
+    Swar,
+    /// 16-byte vectors — baseline on every x86_64 target.
+    Sse2,
+    /// 32-byte vectors, runtime-detected via CPUID.
+    Avx2,
+}
+
+impl SimdLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Swar => "swar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The tier this CPU supports (cached after the first probe).
+pub fn simd_level() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::atomic::{AtomicU8, Ordering};
+        static LEVEL: AtomicU8 = AtomicU8::new(0);
+        match LEVEL.load(Ordering::Relaxed) {
+            1 => SimdLevel::Sse2,
+            2 => SimdLevel::Avx2,
+            _ => {
+                let level = if std::is_x86_feature_detected!("avx2") {
+                    SimdLevel::Avx2
+                } else {
+                    SimdLevel::Sse2
+                };
+                LEVEL.store(
+                    if level == SimdLevel::Avx2 { 2 } else { 1 },
+                    Ordering::Relaxed,
+                );
+                level
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    SimdLevel::Swar
+}
+
+// --------------------------------------------------- digit-run scans
+
+/// True when all eight bytes of `v` are ASCII digits (Lemire's SWAR
+/// range check: high nibbles must be 0x3 and adding 6 to each byte
+/// must not carry into the high nibble).
+#[inline]
+fn is_eight_digits(v: u64) -> bool {
+    ((v & 0xF0F0_F0F0_F0F0_F0F0)
+        | ((v.wrapping_add(0x0606_0606_0606_0606) & 0xF0F0_F0F0_F0F0_F0F0) >> 4))
+        == 0x3333_3333_3333_3333
+}
+
+/// Fold eight ASCII digit bytes (little-endian load, most significant
+/// digit in the low byte) into their decimal value: three multiply
+/// steps pair up adjacent lanes instead of eight sequential
+/// `*10 + d` dependencies.
+#[inline]
+fn parse_eight_digits(v: u64) -> u32 {
+    let v = v & 0x0F0F_0F0F_0F0F_0F0F;
+    let v = v.wrapping_mul(2561) >> 8;
+    let v = (v & 0x00FF_00FF_00FF_00FF).wrapping_mul(6_553_601) >> 16;
+    ((v & 0x0000_FFFF_0000_FFFF).wrapping_mul(42_949_672_960_001) >> 32) as u32
+}
+
+#[inline]
+fn swar_skip_digits(bytes: &[u8]) -> usize {
+    let mut i = 0;
+    while i + 8 <= bytes.len() {
+        let v = u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
+        if !is_eight_digits(v) {
+            break;
+        }
+        i += 8;
+    }
+    while i < bytes.len() && bytes[i].is_ascii_digit() {
+        i += 1;
+    }
+    i
+}
+
+#[cfg(target_arch = "x86_64")]
+fn sse2_skip_digits(bytes: &[u8]) -> usize {
+    // SSE2 is part of the x86_64 baseline, so no runtime gate is
+    // needed; the intrinsics are `unsafe fn` purely as an API matter.
+    use std::arch::x86_64::*;
+    let mut i = 0;
+    unsafe {
+        while i + 16 <= bytes.len() {
+            let v = _mm_loadu_si128(bytes.as_ptr().add(i) as *const __m128i);
+            // Signed compares: bytes ≥ 0x80 read as negative, which the
+            // `< '0'` arm flags as non-digit — exactly right.
+            let below = _mm_cmplt_epi8(v, _mm_set1_epi8(b'0' as i8));
+            let above = _mm_cmpgt_epi8(v, _mm_set1_epi8(b'9' as i8));
+            let non_digit = _mm_movemask_epi8(_mm_or_si128(below, above)) as u32;
+            if non_digit != 0 {
+                return i + non_digit.trailing_zeros() as usize;
+            }
+            i += 16;
+        }
+    }
+    i + swar_skip_digits(&bytes[i..])
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_skip_digits(bytes: &[u8]) -> usize {
+    use std::arch::x86_64::*;
+    let mut i = 0;
+    while i + 32 <= bytes.len() {
+        let v = _mm256_loadu_si256(bytes.as_ptr().add(i) as *const __m256i);
+        let below = _mm256_cmpgt_epi8(_mm256_set1_epi8(b'0' as i8), v);
+        let above = _mm256_cmpgt_epi8(v, _mm256_set1_epi8(b'9' as i8));
+        let non_digit = _mm256_movemask_epi8(_mm256_or_si256(below, above)) as u32;
+        if non_digit != 0 {
+            return i + non_digit.trailing_zeros() as usize;
+        }
+        i += 32;
+    }
+    i + swar_skip_digits(&bytes[i..])
+}
+
+/// Length of the ASCII-digit run at the head of `bytes`, scanned at
+/// the best vector width this CPU offers.
+#[inline]
+pub fn skip_digits(bytes: &[u8]) -> usize {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if bytes.len() >= 32 && simd_level() == SimdLevel::Avx2 {
+            // Safety: dispatch is gated on the CPUID probe above.
+            return unsafe { avx2_skip_digits(bytes) };
+        }
+        sse2_skip_digits(bytes)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    swar_skip_digits(bytes)
+}
+
+/// Accumulate a digit run into `mantissa`, eight digits per multiply
+/// chain. Callers guarantee ≤ 19 total digits, so nothing wraps.
+#[inline]
+fn accumulate_digits(mantissa: &mut u64, digits: &[u8]) {
+    let mut i = 0;
+    while i + 8 <= digits.len() {
+        let v = u64::from_le_bytes(digits[i..i + 8].try_into().unwrap());
+        *mantissa = mantissa.wrapping_mul(100_000_000) + parse_eight_digits(v) as u64;
+        i += 8;
+    }
+    for &b in &digits[i..] {
+        *mantissa = *mantissa * 10 + (b - b'0') as u64;
+    }
+}
+
+// ------------------------------------------------------ token scans
+
+#[inline]
+fn skip_ws(bytes: &[u8]) -> usize {
+    let mut i = 0;
+    while i < bytes.len() && matches!(bytes[i], b' ' | b'\t' | b'\n' | b'\r') {
+        i += 1;
+    }
+    i
+}
+
+enum NumScan {
+    /// The token runs to the end of the available bytes and the body
+    /// is not complete yet — retry once more arrive.
+    NeedMore,
+    /// Not a token the fast grammar owns; the scalar path decides.
+    Bail,
+    /// Value plus token length. Bit-identical to what the scalar
+    /// parser produces for the same bytes (shared compose + fallback).
+    Ok(f64, usize),
+}
+
+/// Parse one number token at the head of `bytes`. `eof` means no more
+/// bytes will ever arrive, so a token touching the end is complete.
+fn parse_number_at(bytes: &[u8], eof: bool) -> NumScan {
+    let mut i = 0;
+    let neg = bytes[0] == b'-';
+    if neg {
+        i += 1;
+    }
+    let int_start = i;
+    let int_run = skip_digits(&bytes[i..]);
+    i += int_run;
+    let mut digits = int_run;
+    let mut frac_run = 0usize;
+    let mut frac_start = 0usize;
+    if bytes.get(i) == Some(&b'.') {
+        i += 1;
+        frac_start = i;
+        frac_run = skip_digits(&bytes[i..]);
+        i += frac_run;
+        digits += frac_run;
+    }
+    let mut has_exp = false;
+    let mut exp_neg = false;
+    let mut exp_run = 0usize;
+    let mut exp_start = 0usize;
+    if matches!(bytes.get(i), Some(b'e' | b'E')) {
+        has_exp = true;
+        i += 1;
+        if matches!(bytes.get(i), Some(b'+' | b'-')) {
+            exp_neg = bytes[i] == b'-';
+            i += 1;
+        }
+        exp_start = i;
+        exp_run = skip_digits(&bytes[i..]);
+        i += exp_run;
+    }
+    if i == bytes.len() && !eof {
+        // More digits / '.' / exponent may still arrive.
+        return NumScan::NeedMore;
+    }
+    if (1..=19).contains(&digits) && (!has_exp || (1..=18).contains(&exp_run)) {
+        let mut mantissa = 0u64;
+        accumulate_digits(&mut mantissa, &bytes[int_start..int_start + int_run]);
+        accumulate_digits(&mut mantissa, &bytes[frac_start..frac_start + frac_run]);
+        let mut exp: i64 = 0;
+        for &b in &bytes[exp_start..exp_start + exp_run] {
+            exp = exp.saturating_mul(10).saturating_add((b - b'0') as i64);
+        }
+        let e10 = (if exp_neg { -exp } else { exp }).saturating_sub(frac_run as i64);
+        if let Some(v) = json::compose_f64_exact(mantissa, e10) {
+            return NumScan::Ok(if neg { -v } else { v }, i);
+        }
+    }
+    // Odd-but-possibly-valid spelling ("1.", 20+ digits, huge
+    // exponent): defer to the shared scalar scanner so the value — or
+    // the rejection — is exactly what the tree parser would produce.
+    match json::scan_number(&bytes[..i]) {
+        (Some(v), consumed) if consumed == i => NumScan::Ok(v, i),
+        _ => NumScan::Bail,
+    }
+}
+
+enum StrScan {
+    NeedMore,
+    Bail,
+    /// Byte length of the content between the quotes; the full token
+    /// is `content + 2`.
+    Ok(usize),
+}
+
+/// Scan a string token starting at the opening quote. Only plain
+/// printable ASCII is in the fast grammar — any escape or non-ASCII
+/// byte bails to the scalar path (which handles full JSON strings).
+fn scan_simple_string(bytes: &[u8]) -> StrScan {
+    debug_assert_eq!(bytes[0], b'"');
+    for (i, &b) in bytes.iter().enumerate().skip(1) {
+        match b {
+            b'"' => return StrScan::Ok(i - 1),
+            b'\\' => return StrScan::Bail,
+            0x20..=0x7e => {}
+            _ => return StrScan::Bail,
+        }
+    }
+    StrScan::NeedMore
+}
+
+// --------------------------------------------------- pooled staging
+
+/// Append-only f32 staging in pool-class buffers. Growth re-acquires
+/// the next class and copies (amortized O(n)); because growth only
+/// happens when the current class is full, the final buffer's class is
+/// always `size_class(len)` — the same buffer shape
+/// `Tensor::try_build_with` would have acquired, so `finish()` turns
+/// it into tensor storage without a copy.
+struct Staging {
+    pool: Arc<BufferPool>,
+    buf: Option<Arc<[f32]>>,
+    len: usize,
+}
+
+impl Staging {
+    fn new() -> Self {
+        Staging { pool: BufferPool::global(), buf: None, len: 0 }
+    }
+
+    #[inline]
+    fn push(&mut self, v: f32) {
+        let cap = self.buf.as_ref().map_or(0, |b| b.len());
+        if self.len == cap {
+            let mut grown = self.pool.acquire(cap + 1);
+            if let Some(old) = self.buf.take() {
+                let dst = Arc::get_mut(&mut grown).expect("pool buffer uniquely owned");
+                dst[..self.len].copy_from_slice(&old[..self.len]);
+                self.pool.release(old);
+            }
+            self.buf = Some(grown);
+        }
+        let buf = self.buf.as_mut().unwrap();
+        Arc::get_mut(buf).expect("pool buffer uniquely owned")[self.len] = v;
+        self.len += 1;
+    }
+
+    /// Return the staged buffer to the pool (bail path).
+    fn discard(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            self.pool.release(buf);
+        }
+        self.len = 0;
+    }
+}
+
+// ------------------------------------------------------- the engine
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Key {
+    Signature,
+    Instances,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RowKind {
+    /// Bare-number rows → shape `[n, 1]`.
+    Scalar,
+    /// Flat-array rows of this width → shape `[n, width]`.
+    Array(usize),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum St {
+    /// Expect the root `{`.
+    Start,
+    /// Inside the root object: expect a key string.
+    RootKey,
+    /// Expect `:` after a key.
+    RootColon,
+    /// Expect the value for `pending_key`.
+    RootValue,
+    /// Expect a row value, or `]` when the array is still empty.
+    Row,
+    /// After a row: expect `,` or `]`.
+    RowSep,
+    /// Inside a row array, first element: expect a number or `]`.
+    ArrFirst,
+    /// Inside a row array: expect a number.
+    ArrVal,
+    /// Inside a row array, after a number: expect `,` or `]`.
+    ArrSep,
+    /// After a root value: expect `,` or `}`.
+    RootSep,
+    /// Root object closed: only whitespace may follow.
+    End,
+}
+
+/// Outcome of a finished fast parse.
+pub enum FastResult {
+    /// The body matched the hot grammar; the result is bit-identical
+    /// to the scalar codec's, built without a `Json` tree.
+    Parsed(PredictBody),
+    /// The body (returned whole) needs the scalar codec.
+    Fallback(Vec<u8>),
+}
+
+/// Incremental fast parser for row-format predict bodies. Feed the
+/// body in any chunking; `finish()` yields either the decoded
+/// [`PredictBody`] or the retained bytes for the scalar fallback.
+pub struct FastPredictParser {
+    /// The full body so far. Retained so a bail at any point can hand
+    /// the scalar codec exactly what it would have seen — the fallback
+    /// costs what the old buffered path always cost, no more.
+    raw: Vec<u8>,
+    cursor: usize,
+    st: St,
+    bailed: bool,
+    pending_key: Key,
+    signature: Option<String>,
+    saw_instances: bool,
+    row_kind: Option<RowKind>,
+    rows: usize,
+    row_pos: usize,
+    staging: Staging,
+}
+
+impl Default for FastPredictParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FastPredictParser {
+    pub fn new() -> Self {
+        FastPredictParser {
+            raw: Vec::new(),
+            cursor: 0,
+            st: St::Start,
+            bailed: false,
+            pending_key: Key::Instances,
+            signature: None,
+            saw_instances: false,
+            row_kind: None,
+            rows: 0,
+            row_pos: 0,
+            staging: Staging::new(),
+        }
+    }
+
+    /// Append body bytes and advance the parse as far as they allow.
+    pub fn feed(&mut self, chunk: &[u8]) {
+        self.raw.extend_from_slice(chunk);
+        if !self.bailed {
+            self.advance(false);
+        }
+    }
+
+    /// Total body bytes received so far.
+    pub fn body_len(&self) -> usize {
+        self.raw.len()
+    }
+
+    /// Complete the parse. `Parsed` only when the whole body matched
+    /// the hot grammar; otherwise the raw bytes come back for the
+    /// scalar codec.
+    pub fn finish(mut self) -> FastResult {
+        if !self.bailed {
+            self.advance(true);
+        }
+        let done = !self.bailed && self.st == St::End;
+        if !done || self.rows == 0 {
+            self.staging.discard();
+            return FastResult::Fallback(std::mem::take(&mut self.raw));
+        }
+        let width = match self.row_kind {
+            Some(RowKind::Scalar) => 1,
+            Some(RowKind::Array(w)) => w,
+            None => {
+                self.staging.discard();
+                return FastResult::Fallback(std::mem::take(&mut self.raw));
+            }
+        };
+        debug_assert_eq!(self.staging.len, self.rows * width);
+        let storage = match self.staging.buf.take() {
+            Some(buf) => buf,
+            None => {
+                return FastResult::Fallback(std::mem::take(&mut self.raw));
+            }
+        };
+        match Tensor::from_shared(vec![self.rows, width], storage, 0) {
+            Ok(tensor) => FastResult::Parsed(PredictBody {
+                signature: self.signature.take().unwrap_or_default(),
+                inputs: vec![(String::new(), tensor)],
+                row_format: true,
+            }),
+            Err(_) => FastResult::Fallback(std::mem::take(&mut self.raw)),
+        }
+    }
+
+    fn bail(&mut self) {
+        self.bailed = true;
+        self.staging.discard();
+    }
+
+    /// Stage one element, bailing once the count passes the element
+    /// cap (the scalar path then reports the canonical limit error —
+    /// or a shape error, whichever it hits first).
+    #[inline]
+    fn push_elem(&mut self, v: f64) -> bool {
+        if self.staging.len >= MAX_TENSOR_ELEMS {
+            self.bail();
+            return false;
+        }
+        self.staging.push(v as f32);
+        true
+    }
+
+    fn advance(&mut self, eof: bool) {
+        loop {
+            self.cursor += skip_ws(&self.raw[self.cursor..]);
+            if self.cursor == self.raw.len() {
+                if eof && self.st != St::End {
+                    self.bail();
+                }
+                return;
+            }
+            let b = self.raw[self.cursor];
+            match self.st {
+                St::Start => {
+                    if b != b'{' {
+                        return self.bail();
+                    }
+                    self.cursor += 1;
+                    self.st = St::RootKey;
+                }
+                St::RootKey => {
+                    if b != b'"' {
+                        return self.bail();
+                    }
+                    match scan_simple_string(&self.raw[self.cursor..]) {
+                        StrScan::NeedMore if !eof => return,
+                        StrScan::Ok(content) => {
+                            let key = &self.raw[self.cursor + 1..self.cursor + 1 + content];
+                            self.pending_key = match key {
+                                b"signature_name" if self.signature.is_none() => Key::Signature,
+                                b"instances" if !self.saw_instances => Key::Instances,
+                                _ => return self.bail(),
+                            };
+                            self.cursor += content + 2;
+                            self.st = St::RootColon;
+                        }
+                        _ => return self.bail(),
+                    }
+                }
+                St::RootColon => {
+                    if b != b':' {
+                        return self.bail();
+                    }
+                    self.cursor += 1;
+                    self.st = St::RootValue;
+                }
+                St::RootValue => match self.pending_key {
+                    Key::Signature => {
+                        if b != b'"' {
+                            return self.bail();
+                        }
+                        match scan_simple_string(&self.raw[self.cursor..]) {
+                            StrScan::NeedMore if !eof => return,
+                            StrScan::Ok(content) => {
+                                let s = &self.raw[self.cursor + 1..self.cursor + 1 + content];
+                                // Content is printable ASCII by construction.
+                                self.signature =
+                                    Some(String::from_utf8(s.to_vec()).expect("ascii"));
+                                self.cursor += content + 2;
+                                self.st = St::RootSep;
+                            }
+                            _ => return self.bail(),
+                        }
+                    }
+                    Key::Instances => {
+                        if b != b'[' {
+                            return self.bail();
+                        }
+                        self.cursor += 1;
+                        self.saw_instances = true;
+                        self.st = St::Row;
+                    }
+                },
+                St::Row => match b {
+                    b'[' => {
+                        if self.row_kind == Some(RowKind::Scalar) {
+                            return self.bail();
+                        }
+                        self.cursor += 1;
+                        self.row_pos = 0;
+                        self.st = St::ArrFirst;
+                    }
+                    b'-' | b'0'..=b'9' => {
+                        if matches!(self.row_kind, Some(RowKind::Array(_))) {
+                            return self.bail();
+                        }
+                        match parse_number_at(&self.raw[self.cursor..], eof) {
+                            NumScan::NeedMore => return,
+                            NumScan::Bail => return self.bail(),
+                            NumScan::Ok(v, len) => {
+                                if !self.push_elem(v) {
+                                    return;
+                                }
+                                self.cursor += len;
+                                self.row_kind = Some(RowKind::Scalar);
+                                self.rows += 1;
+                                self.st = St::RowSep;
+                            }
+                        }
+                    }
+                    // `]` here means an empty instances array; objects,
+                    // strings and literals are scalar-codec territory.
+                    _ => return self.bail(),
+                },
+                St::RowSep => match b {
+                    b',' => {
+                        self.cursor += 1;
+                        self.st = St::Row;
+                    }
+                    b']' => {
+                        self.cursor += 1;
+                        self.st = St::RootSep;
+                    }
+                    _ => return self.bail(),
+                },
+                St::ArrFirst | St::ArrVal => match b {
+                    b']' if self.st == St::ArrFirst => {
+                        // Zero-width row: let the scalar path rule.
+                        return self.bail();
+                    }
+                    b'-' | b'0'..=b'9' => {
+                        match parse_number_at(&self.raw[self.cursor..], eof) {
+                            NumScan::NeedMore => return,
+                            NumScan::Bail => return self.bail(),
+                            NumScan::Ok(v, len) => {
+                                if !self.push_elem(v) {
+                                    return;
+                                }
+                                self.cursor += len;
+                                self.row_pos += 1;
+                                self.st = St::ArrSep;
+                            }
+                        }
+                    }
+                    _ => return self.bail(),
+                },
+                St::ArrSep => match b {
+                    b',' => {
+                        self.cursor += 1;
+                        self.st = St::ArrVal;
+                    }
+                    b']' => {
+                        match self.row_kind {
+                            None => self.row_kind = Some(RowKind::Array(self.row_pos)),
+                            Some(RowKind::Array(w)) if w == self.row_pos => {}
+                            // Width mismatch: the scalar codec owns the
+                            // canonical "instance i has …" error.
+                            _ => return self.bail(),
+                        }
+                        self.cursor += 1;
+                        self.rows += 1;
+                        self.st = St::RowSep;
+                    }
+                    _ => return self.bail(),
+                },
+                St::RootSep => match b {
+                    b',' => {
+                        self.cursor += 1;
+                        self.st = St::RootKey;
+                    }
+                    b'}' => {
+                        self.cursor += 1;
+                        self.st = St::End;
+                    }
+                    _ => return self.bail(),
+                },
+                St::End => {
+                    // Non-whitespace after the root object.
+                    return self.bail();
+                }
+            }
+        }
+    }
+}
+
+/// One-shot fast parse of a whole body (the non-chunked ingress path,
+/// benches, and the differential fuzz harness).
+pub fn parse_predict_fast(body: &[u8]) -> FastResult {
+    let mut p = FastPredictParser::new();
+    p.feed(body);
+    p.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::codec::parse_predict_body;
+    use crate::util::pool::size_class;
+
+    #[test]
+    fn swar_digit_primitives() {
+        assert!(is_eight_digits(u64::from_le_bytes(*b"12345678")));
+        assert!(!is_eight_digits(u64::from_le_bytes(*b"1234567a")));
+        assert!(!is_eight_digits(u64::from_le_bytes(*b".2345678")));
+        assert_eq!(parse_eight_digits(u64::from_le_bytes(*b"12345678")), 12345678);
+        assert_eq!(parse_eight_digits(u64::from_le_bytes(*b"00000000")), 0);
+        assert_eq!(parse_eight_digits(u64::from_le_bytes(*b"99999999")), 99999999);
+    }
+
+    #[test]
+    fn skip_digits_all_tiers_agree_with_naive() {
+        let cases: Vec<Vec<u8>> = vec![
+            b"".to_vec(),
+            b"5".to_vec(),
+            b"123,".to_vec(),
+            b"1234567890123456789012345678901234567890]".to_vec(),
+            vec![b'7'; 100],
+            {
+                let mut v = vec![b'3'; 37];
+                v.push(0xff);
+                v.extend_from_slice(b"123");
+                v
+            },
+        ];
+        for case in &cases {
+            let naive = case.iter().take_while(|b| b.is_ascii_digit()).count();
+            assert_eq!(skip_digits(case), naive, "{case:?}");
+            assert_eq!(swar_skip_digits(case), naive, "{case:?}");
+            #[cfg(target_arch = "x86_64")]
+            assert_eq!(sse2_skip_digits(case), naive, "{case:?}");
+        }
+        // Every suffix of a long mixed string, to sweep alignments.
+        let long = b"123456789012345678901234567890123456789.5e12,next";
+        for start in 0..long.len() {
+            let s = &long[start..];
+            let naive = s.iter().take_while(|b| b.is_ascii_digit()).count();
+            assert_eq!(skip_digits(s), naive, "start={start}");
+        }
+    }
+
+    #[test]
+    fn level_probe_is_stable() {
+        let a = simd_level();
+        let b = simd_level();
+        assert_eq!(a, b);
+        assert!(!a.name().is_empty());
+    }
+
+    fn assert_parses_hot(body: &[u8]) {
+        let scalar = parse_predict_body(body).expect("scalar parse");
+        match parse_predict_fast(body) {
+            FastResult::Parsed(fast) => {
+                assert_eq!(fast.signature, scalar.signature, "{body:?}");
+                assert_eq!(fast.row_format, scalar.row_format);
+                assert_eq!(fast.inputs.len(), scalar.inputs.len());
+                let (fname, ft) = &fast.inputs[0];
+                let (sname, st) = &scalar.inputs[0];
+                assert_eq!(fname, sname);
+                assert_eq!(ft.shape(), st.shape(), "{body:?}");
+                let fb: Vec<u32> = ft.data().iter().map(|v| v.to_bits()).collect();
+                let sb: Vec<u32> = st.data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(fb, sb, "{body:?}");
+                // Zero-copy finish: the staged pool buffer *is* the
+                // tensor storage, at the class the scalar path uses.
+                assert_eq!(ft.storage().len(), size_class(ft.len()), "{body:?}");
+                assert_eq!(ft.data().as_ptr(), ft.storage().as_ptr());
+            }
+            FastResult::Fallback(_) => panic!("hot body bailed: {:?}", String::from_utf8_lossy(body)),
+        }
+    }
+
+    #[test]
+    fn hot_bodies_complete_and_match_scalar() {
+        assert_parses_hot(br#"{"instances": [[1, 2, 3], [4, 5, 6]]}"#);
+        assert_parses_hot(br#"{"instances": [1.5, 2.5, -0.25]}"#);
+        assert_parses_hot(br#"{"instances":[[0.1,0.2],[0.3,1e-3]],"signature_name":"s"}"#);
+        assert_parses_hot(br#"{"signature_name": "serving_default", "instances": [[-7]]}"#);
+        assert_parses_hot(b"{ \"instances\" : [ [ 1.25 , 2.5 ] , [ 3.5 , 4.75 ] ] }\r\n");
+        assert_parses_hot(br#"{"instances": [[-0], [0]]}"#);
+        assert_parses_hot(br#"{"instances": [[1e22], [1e-22]]}"#);
+        // Wide row exercising the 8-digit SWAR blocks.
+        let wide: Vec<String> = (0..100).map(|i| format!("{}", i * 987654321u64)).collect();
+        let body = format!(r#"{{"instances": [[{}]]}}"#, wide.join(","));
+        assert_parses_hot(body.as_bytes());
+    }
+
+    #[test]
+    fn odd_spellings_still_match_scalar_or_bail() {
+        // Tokens outside the Clinger window or with odd spellings must
+        // still match the scalar parse bit for bit when they complete.
+        for body in [
+            &br#"{"instances": [[9007199254740993]]}"#[..],
+            br#"{"instances": [[12345678901234567890123]]}"#,
+            br#"{"instances": [[1e308], [1e-308]]}"#,
+            br#"{"instances": [[1e999]]}"#,
+            br#"{"instances": [[0.000000000000000000000000001]]}"#,
+            br#"{"instances": [[1.], [01]]}"#,
+            br#"{"instances": [[-.5]]}"#,
+        ] {
+            match parse_predict_fast(body) {
+                FastResult::Parsed(fast) => {
+                    let scalar = parse_predict_body(body).expect("scalar parse");
+                    let fb: Vec<u32> =
+                        fast.inputs[0].1.data().iter().map(|v| v.to_bits()).collect();
+                    let sb: Vec<u32> =
+                        scalar.inputs[0].1.data().iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(fb, sb, "{body:?}");
+                }
+                FastResult::Fallback(raw) => assert_eq!(raw, body),
+            }
+        }
+    }
+
+    #[test]
+    fn off_grammar_bodies_bail_whole() {
+        for body in [
+            // Valid for the scalar codec, outside the hot grammar.
+            &br#"{"inputs": {"x": [[1, 2]]}}"#[..],
+            br#"{"instances": [{"x": [1]}, {"x": [2]}]}"#,
+            br#"{"instances": [[1]], "note": "extra"}"#,
+            br#"{"signature_name": "a\nb", "instances": [[1]]}"#,
+            "{\"signature_name\": \"h\u{00e9}\", \"instances\": [[1]]}".as_bytes(),
+            // Errors for the scalar codec too.
+            br#"{"instances": []}"#,
+            br#"{"instances": [[1, 2], [3]]}"#,
+            br#"{"instances": [[1], 2]}"#,
+            br#"{"instances": [[1,]]}"#,
+            br#"{"instances": [[+1]]}"#,
+            br#"{"instances": [[1][2]]}"#,
+            br#"{"instances": [[1]]"#,
+            br#"[1, 2]"#,
+            b"\xff\xfe",
+            br#"{"instances": [[1]]} trailing"#,
+            br#"{"instances": [[true]]}"#,
+        ] {
+            match parse_predict_fast(body) {
+                FastResult::Fallback(raw) => assert_eq!(raw, body),
+                FastResult::Parsed(_) => {
+                    panic!("off-grammar body completed: {:?}", String::from_utf8_lossy(body))
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn byte_at_a_time_feed_matches_whole_body() {
+        let bodies = [
+            &br#"{"instances": [[1.25, 3.5e-2], [-7, 0.125]], "signature_name": "sig"}"#[..],
+            br#"{"instances": [12345678901, 2.5]}"#,
+            br#"{"instances": [[1, 2], [3]]}"#,
+            br#"{"inputs": [[1, 2]]}"#,
+        ];
+        for body in bodies {
+            let whole_parsed = match parse_predict_fast(body) {
+                FastResult::Parsed(p) => Some(p),
+                FastResult::Fallback(_) => None,
+            };
+            let mut p = FastPredictParser::new();
+            for &b in body.iter() {
+                p.feed(&[b]);
+            }
+            match (p.finish(), whole_parsed) {
+                (FastResult::Parsed(a), Some(b)) => {
+                    assert_eq!(a.signature, b.signature);
+                    assert_eq!(a.inputs[0].1.shape(), b.inputs[0].1.shape());
+                    let ab: Vec<u32> = a.inputs[0].1.data().iter().map(|v| v.to_bits()).collect();
+                    let bb: Vec<u32> = b.inputs[0].1.data().iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(ab, bb);
+                }
+                (FastResult::Fallback(raw), None) => assert_eq!(raw, body),
+                (FastResult::Parsed(_), None) => panic!("chunked parsed, whole bailed: {body:?}"),
+                (FastResult::Fallback(_), Some(_)) => {
+                    panic!("chunked bailed, whole parsed: {body:?}")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn staged_growth_across_classes() {
+        // One wide row fills several SWAR blocks in a single array.
+        let wide = format!(
+            r#"{{"instances": [[{}]]}}"#,
+            vec!["1"; 100].join(",")
+        );
+        assert!(matches!(parse_predict_fast(wide.as_bytes()), FastResult::Parsed(_)));
+        // Growth across several classes stays exact.
+        let n = 1000;
+        let body = format!(
+            r#"{{"instances": [{}]}}"#,
+            (0..n).map(|i| format!("[{i}.5]")).collect::<Vec<_>>().join(",")
+        );
+        match parse_predict_fast(body.as_bytes()) {
+            FastResult::Parsed(p) => {
+                let t = &p.inputs[0].1;
+                assert_eq!(t.shape(), &[n, 1]);
+                assert_eq!(t.storage().len(), size_class(n));
+                assert_eq!(t.data()[17], 17.5);
+            }
+            FastResult::Fallback(_) => panic!("staged growth body bailed"),
+        }
+    }
+}

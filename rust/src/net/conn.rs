@@ -17,8 +17,9 @@
 //! slow peers cost a buffer, not a thread.
 
 use crate::http::server::{
-    body_framing, read_head, render_response, wants_keep_alive, BodyFraming, HttpHandler,
-    HttpRequest, HttpResponse, MAX_HEADERS, MAX_HEADER_LINE, MAX_REQUEST_LINE,
+    body_framing, read_head, render_response, wants_keep_alive, BodyFraming, BodySink,
+    HttpHandler, HttpRequest, HttpResponse, SinkFactory, MAX_HEADERS, MAX_HEADER_LINE,
+    MAX_REQUEST_LINE,
 };
 use crate::rpc::frame::{HEADER, MAX_FRAME};
 use crate::rpc::proto::{Request, Response};
@@ -156,16 +157,21 @@ const MAX_CHUNK_LINE: usize = 1024;
 pub struct HttpProto {
     handler: HttpHandler,
     served: Arc<AtomicU64>,
+    /// When set, request heads this factory claims stream their body
+    /// bytes into a [`BodySink`] as they arrive instead of buffering.
+    sinks: Option<SinkFactory>,
     state: HttpState,
 }
 
 enum HttpState {
     /// Accumulating request line + headers.
     Head,
-    /// Head parsed; accumulating the body.
+    /// Head parsed; accumulating (or streaming) the body.
     Body {
         req: HttpRequest,
         framing: BodyState,
+        /// Streaming decoder for this request, if a sink claimed it.
+        sink: Option<Box<dyn BodySink>>,
         keep_alive: bool,
         sent_continue: bool,
         expects_continue: bool,
@@ -173,13 +179,22 @@ enum HttpState {
 }
 
 enum BodyState {
+    /// Bytes still missing (counts down on the streaming path).
     Length(usize),
     Chunked(ChunkMachine),
 }
 
 impl HttpProto {
     pub fn new(handler: HttpHandler, served: Arc<AtomicU64>) -> HttpProto {
-        HttpProto { handler, served, state: HttpState::Head }
+        Self::new_with(handler, served, None)
+    }
+
+    pub fn new_with(
+        handler: HttpHandler,
+        served: Arc<AtomicU64>,
+        sinks: Option<SinkFactory>,
+    ) -> HttpProto {
+        HttpProto { handler, served, sinks, state: HttpState::Head }
     }
 
     fn dispatch(&mut self, mut req: HttpRequest, body: Vec<u8>, keep_alive: bool) -> Step {
@@ -188,6 +203,24 @@ impl HttpProto {
         let served = Arc::clone(&self.served);
         Step::Dispatch(Box::new(move || {
             let resp = handler(&req);
+            served.fetch_add(1, Ordering::Relaxed);
+            let mut bytes = Vec::new();
+            render_response(&mut bytes, &resp, keep_alive);
+            Reply { bytes, close: !keep_alive }
+        }))
+    }
+
+    /// Streamed-body completion: the sink already holds every body
+    /// byte; its `finish` runs on a worker like a handler would.
+    fn dispatch_sink(
+        &mut self,
+        req: HttpRequest,
+        sink: Box<dyn BodySink>,
+        keep_alive: bool,
+    ) -> Step {
+        let served = Arc::clone(&self.served);
+        Step::Dispatch(Box::new(move || {
+            let resp = sink.finish(&req);
             served.fetch_add(1, Ordering::Relaxed);
             let mut bytes = Vec::new();
             render_response(&mut bytes, &resp, keep_alive);
@@ -253,14 +286,20 @@ impl ConnProtocol for HttpProto {
                         .header("expect")
                         .map(|v| v.eq_ignore_ascii_case("100-continue"))
                         .unwrap_or(false);
+                    // Give a sink factory first claim on the body.
+                    let sink = self.sinks.as_ref().and_then(|f| f(&req));
                     match framing {
                         BodyFraming::Empty => {
-                            return self.dispatch(req, Vec::new(), keep_alive);
+                            return match sink {
+                                Some(sink) => self.dispatch_sink(req, sink, keep_alive),
+                                None => self.dispatch(req, Vec::new(), keep_alive),
+                            };
                         }
                         BodyFraming::Length(n) => {
                             self.state = HttpState::Body {
                                 req,
                                 framing: BodyState::Length(n),
+                                sink,
                                 keep_alive,
                                 sent_continue: false,
                                 expects_continue,
@@ -270,6 +309,7 @@ impl ConnProtocol for HttpProto {
                             self.state = HttpState::Body {
                                 req,
                                 framing: BodyState::Chunked(ChunkMachine::new()),
+                                sink,
                                 keep_alive,
                                 sent_continue: false,
                                 expects_continue,
@@ -277,34 +317,73 @@ impl ConnProtocol for HttpProto {
                         }
                     }
                 }
-                HttpState::Body { framing, sent_continue, expects_continue, .. } => {
+                HttpState::Body { framing, sink, sent_continue, expects_continue, .. } => {
                     // The framing checks passed, so a waiting client
                     // may be told to send its body (RFC 9110 §10.1.1).
                     if *expects_continue && !*sent_continue {
                         *sent_continue = true;
                         return Step::Interim(b"HTTP/1.1 100 Continue\r\n\r\n".to_vec());
                     }
+                    // `Some(bytes)` = buffered body complete;
+                    // `None` = streamed into the sink, complete.
                     let body = match framing {
                         BodyState::Length(n) => {
-                            if rbuf.len() < *n {
-                                return Step::NeedMore;
+                            if let Some(sink) = sink {
+                                // Stream what's here; wait for the rest.
+                                let take = rbuf.len().min(*n);
+                                if take > 0 {
+                                    sink.feed(&rbuf[..take]);
+                                    rbuf.drain(..take);
+                                    *n -= take;
+                                }
+                                if *n > 0 {
+                                    return Step::NeedMore;
+                                }
+                                None
+                            } else {
+                                if rbuf.len() < *n {
+                                    return Step::NeedMore;
+                                }
+                                let body = rbuf[..*n].to_vec();
+                                rbuf.drain(..*n);
+                                Some(body)
                             }
-                            let body = rbuf[..*n].to_vec();
-                            rbuf.drain(..*n);
-                            body
                         }
-                        BodyState::Chunked(machine) => match machine.feed(rbuf) {
-                            Ok(true) => std::mem::take(&mut machine.body),
-                            Ok(false) => return Step::NeedMore,
-                            Err((status, msg)) => return http_error(status, &msg),
-                        },
+                        BodyState::Chunked(machine) => {
+                            let complete = match machine.feed(rbuf) {
+                                Ok(c) => c,
+                                Err((status, msg)) => return http_error(status, &msg),
+                            };
+                            if let Some(sink) = sink {
+                                // Drain decoded chunk data into the sink
+                                // as it arrives (the machine's
+                                // cumulative cap still applies).
+                                if !machine.body.is_empty() {
+                                    sink.feed(&machine.body);
+                                    machine.body.clear();
+                                }
+                                if !complete {
+                                    return Step::NeedMore;
+                                }
+                                None
+                            } else {
+                                if !complete {
+                                    return Step::NeedMore;
+                                }
+                                Some(std::mem::take(&mut machine.body))
+                            }
+                        }
                     };
-                    let HttpState::Body { req, keep_alive, .. } =
+                    let HttpState::Body { req, sink, keep_alive, .. } =
                         std::mem::replace(&mut self.state, HttpState::Head)
                     else {
                         unreachable!()
                     };
-                    return self.dispatch(req, body, keep_alive);
+                    return match (body, sink) {
+                        (Some(body), _) => self.dispatch(req, body, keep_alive),
+                        (None, Some(sink)) => self.dispatch_sink(req, sink, keep_alive),
+                        (None, None) => unreachable!("streamed completion without a sink"),
+                    };
                 }
             }
         }
@@ -316,6 +395,9 @@ impl ConnProtocol for HttpProto {
 /// upload is O(bytes), never a per-read reparse.
 struct ChunkMachine {
     body: Vec<u8>,
+    /// Cumulative declared chunk bytes — the `MAX_BODY` cap must hold
+    /// even when the streaming path drains `body` between reads.
+    total: usize,
     phase: ChunkPhase,
 }
 
@@ -352,7 +434,7 @@ fn take_line(buf: &mut Vec<u8>, cap: usize) -> Result<Option<String>, ()> {
 
 impl ChunkMachine {
     fn new() -> ChunkMachine {
-        ChunkMachine { body: Vec::new(), phase: ChunkPhase::Size }
+        ChunkMachine { body: Vec::new(), total: 0, phase: ChunkPhase::Size }
     }
 
     /// Consume what's available. `Ok(true)` = body complete (in
@@ -372,12 +454,13 @@ impl ChunkMachine {
                     let size_str = line.split(';').next().unwrap_or("").trim();
                     let size = usize::from_str_radix(size_str, 16)
                         .map_err(|_| (400, format!("bad chunk size {size_str:?}")))?;
-                    if self.body.len().saturating_add(size) > crate::http::server::MAX_BODY {
+                    if self.total.saturating_add(size) > crate::http::server::MAX_BODY {
                         return Err((
                             413,
                             format!("chunked body exceeds {} bytes", crate::http::server::MAX_BODY),
                         ));
                     }
+                    self.total = self.total.saturating_add(size);
                     self.phase = if size == 0 {
                         ChunkPhase::Trailers
                     } else {

@@ -536,6 +536,46 @@ impl<'a> Reader<'a> {
     }
 }
 
+// ------------------------------------------------- REST binary payloads
+//
+// The `application/x-tensorserve` REST content-type
+// ([`crate::http::wire::binary`]) reuses this module's tensor framing
+// so latency-sensitive clients skip JSON while keeping HTTP routing:
+// the HTTP body is exactly a payload below (the model comes from the
+// URL path, so no `ModelSpec` is framed), and responses are
+// [`Response::encode`] bytes.
+
+/// Encode a predict payload: `signature` + named input tensors.
+pub fn encode_predict_payload(out: &mut Vec<u8>, signature: &str, inputs: &[(String, Tensor)]) {
+    put_str(out, signature);
+    put_named_tensors(out, inputs);
+}
+
+/// Decode a predict payload (tensor bytes land straight in pooled
+/// storage, exactly like the RPC plane's decode).
+pub fn decode_predict_payload(buf: &[u8]) -> Result<(String, Vec<(String, Tensor)>)> {
+    let mut r = Reader::new(buf);
+    let signature = r.str()?;
+    let inputs = r.named_tensors()?;
+    r.done()?;
+    Ok((signature, inputs))
+}
+
+/// Encode a classify/regress payload: `signature` + examples.
+pub fn encode_examples_payload(out: &mut Vec<u8>, signature: &str, examples: &[Example]) {
+    put_str(out, signature);
+    put_examples(out, examples);
+}
+
+/// Decode a classify/regress payload.
+pub fn decode_examples_payload(buf: &[u8]) -> Result<(String, Vec<Example>)> {
+    let mut r = Reader::new(buf);
+    let signature = r.str()?;
+    let examples = r.examples()?;
+    r.done()?;
+    Ok((signature, examples))
+}
+
 // -------------------------------------------------------------- codecs
 
 impl Request {

@@ -288,13 +288,18 @@ impl ModelServer {
             None => RpcServer::start_threaded(&rpc_addr, rpc_handler, &config.net)?,
         };
 
-        // HTTP/REST gateway: same core, JSON wire format.
+        // HTTP/REST gateway: same core, wire codec negotiated per
+        // request; data-plane bodies stream through the sink factory's
+        // incremental decoders on both transport paths.
         let http = match &core.config.http_addr {
             Some(addr) => {
                 let gateway = crate::http::router::gateway(Arc::clone(&core));
+                let sinks = crate::http::router::sink_factory(Arc::clone(&core));
                 Some(match &net_stack {
-                    Some(stack) => HttpServer::start_shared(addr, gateway, stack)?,
-                    None => HttpServer::start_threaded(addr, gateway, &config.net)?,
+                    Some(stack) => HttpServer::start_shared_with(addr, gateway, sinks, stack)?,
+                    None => {
+                        HttpServer::start_threaded_with(addr, gateway, Some(sinks), &config.net)?
+                    }
                 })
             }
             None => None,

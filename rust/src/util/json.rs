@@ -229,6 +229,105 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+// ------------------------------------------------------ number fast path
+//
+// Shared by `Parser::number` and the wire-codec SWAR ingress
+// (`http::wire::simd`), so every number token decodes to bit-identical
+// f64 values no matter which path touched it.
+
+/// Powers of ten that are exactly representable in f64. With a mantissa
+/// that is also exact (≤ 2^53), one multiply or divide by an entry is a
+/// single correctly-rounded operation.
+const POW10: [f64; 23] = [
+    1e0, 1e1, 1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10, 1e11, 1e12, 1e13, 1e14, 1e15,
+    1e16, 1e17, 1e18, 1e19, 1e20, 1e21, 1e22,
+];
+
+/// Clinger's fast path: compose `mantissa * 10^exp10` when both factors
+/// are exactly representable, which makes the result bit-identical to
+/// what `str::parse::<f64>` produces for the same token. Returns `None`
+/// outside the exact window; callers must fall back to the full parser.
+pub fn compose_f64_exact(mantissa: u64, exp10: i64) -> Option<f64> {
+    if mantissa > (1u64 << 53) {
+        return None;
+    }
+    let m = mantissa as f64;
+    match exp10 {
+        0 => Some(m),
+        1..=22 => Some(m * POW10[exp10 as usize]),
+        -22..=-1 => Some(m / POW10[(-exp10) as usize]),
+        _ => None,
+    }
+}
+
+/// Scan one JSON number at the head of `bytes` using exactly the
+/// grammar `Parser::number` accepts: `-? digits* ('.' digits*)?
+/// ([eE][+-]? digits*)?`. Returns the parsed value (or `None` when the
+/// scanned text is not a number, e.g. `-` or `1e`) and the byte count
+/// consumed. The common case composes the value without a string
+/// round-trip; odd-but-valid spellings fall back to `str::parse`, so
+/// results are bit-identical either way.
+pub fn scan_number(bytes: &[u8]) -> (Option<f64>, usize) {
+    let mut pos = 0usize;
+    let neg = bytes.first() == Some(&b'-');
+    if neg {
+        pos += 1;
+    }
+    let mut mantissa: u64 = 0;
+    let mut digits = 0usize;
+    while let Some(c) = bytes.get(pos) {
+        if !c.is_ascii_digit() {
+            break;
+        }
+        mantissa = mantissa.wrapping_mul(10).wrapping_add((c - b'0') as u64);
+        digits += 1;
+        pos += 1;
+    }
+    let mut frac_digits: i64 = 0;
+    if bytes.get(pos) == Some(&b'.') {
+        pos += 1;
+        while let Some(c) = bytes.get(pos) {
+            if !c.is_ascii_digit() {
+                break;
+            }
+            mantissa = mantissa.wrapping_mul(10).wrapping_add((c - b'0') as u64);
+            digits += 1;
+            frac_digits += 1;
+            pos += 1;
+        }
+    }
+    let mut exp: i64 = 0;
+    let mut exp_digits = 0usize;
+    let mut has_exp = false;
+    let mut exp_neg = false;
+    if matches!(bytes.get(pos), Some(b'e' | b'E')) {
+        has_exp = true;
+        pos += 1;
+        if matches!(bytes.get(pos), Some(b'+' | b'-')) {
+            exp_neg = bytes[pos] == b'-';
+            pos += 1;
+        }
+        while let Some(c) = bytes.get(pos) {
+            if !c.is_ascii_digit() {
+                break;
+            }
+            exp = exp.saturating_mul(10).saturating_add((c - b'0') as i64);
+            exp_digits += 1;
+            pos += 1;
+        }
+    }
+    // Fast compose: ≤ 19 digits means the mantissa accumulated without
+    // wrapping; an exponent part must have digits to be valid at all.
+    if digits >= 1 && digits <= 19 && (!has_exp || exp_digits > 0) {
+        let e10 = (if exp_neg { -exp } else { exp }).saturating_sub(frac_digits);
+        if let Some(v) = compose_f64_exact(mantissa, e10) {
+            return (Some(if neg { -v } else { v }), pos);
+        }
+    }
+    let text = std::str::from_utf8(&bytes[..pos]).unwrap();
+    (text.parse::<f64>().ok(), pos)
+}
+
 /// Maximum container nesting the parser accepts. JSON is now
 /// internet-facing (the REST gateway), so recursion depth is bounded
 /// instead of letting `[[[[…` run the stack out.
@@ -376,32 +475,9 @@ impl<'a> Parser<'a> {
     }
 
     fn number(&mut self) -> Result<Json, ParseError> {
-        let start = self.pos;
-        if self.peek() == Some(b'-') {
-            self.pos += 1;
-        }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.pos += 1;
-        }
-        if self.peek() == Some(b'.') {
-            self.pos += 1;
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
-            }
-        }
-        if matches!(self.peek(), Some(b'e' | b'E')) {
-            self.pos += 1;
-            if matches!(self.peek(), Some(b'+' | b'-')) {
-                self.pos += 1;
-            }
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
-            }
-        }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+        let (value, consumed) = scan_number(&self.bytes[self.pos..]);
+        self.pos += consumed;
+        value.map(Json::Num).ok_or_else(|| self.err("bad number"))
     }
 
     fn array(&mut self) -> Result<Json, ParseError> {
@@ -599,6 +675,46 @@ mod tests {
         );
         // BMP escapes still work.
         assert_eq!(Json::parse("\"\\u00e9\"").unwrap().as_str(), Some("é"));
+    }
+
+    #[test]
+    fn scan_number_matches_std_parse_bit_for_bit() {
+        for tok in [
+            "0", "-0", "1", "42", "-7", "3.5", "-3.5", "0.1", "1.25", "1e3", "1E3", "1e+3",
+            "1e-3", "-2.5e-2", "1.", "01", "-.5", "9007199254740993", "12345678901234567890",
+            "1e300", "1e-300", "1e22", "1e23", "1e-22", "1e-23", "0.000123456789",
+            "123456789.123456789", "1e999", "1e-999", "2.2250738585072011e-308",
+        ] {
+            let (got, consumed) = scan_number(tok.as_bytes());
+            assert_eq!(consumed, tok.len(), "token {tok:?}");
+            let want = tok.parse::<f64>().unwrap();
+            assert_eq!(
+                got.expect(tok).to_bits(),
+                want.to_bits(),
+                "token {tok:?}: fast={:?} std={want:?}",
+                got
+            );
+        }
+        // Invalid spellings report None after consuming the scan.
+        for bad in ["-", "1e", "1.5e+", "-."] {
+            let (got, consumed) = scan_number(bad.as_bytes());
+            assert_eq!(consumed, bad.len(), "token {bad:?}");
+            assert!(got.is_none(), "accepted {bad:?}");
+        }
+        // Scanning stops at the first non-number byte.
+        let (got, consumed) = scan_number(b"12.5,3");
+        assert_eq!((got, consumed), (Some(12.5), 4));
+    }
+
+    #[test]
+    fn compose_f64_exact_window() {
+        assert_eq!(compose_f64_exact(25, -1), Some(2.5));
+        assert_eq!(compose_f64_exact(1, 22), Some(1e22));
+        assert_eq!(compose_f64_exact(1, 23), None);
+        assert_eq!(compose_f64_exact(1, -22), Some(1e-22));
+        assert_eq!(compose_f64_exact(1, -23), None);
+        assert_eq!(compose_f64_exact(1u64 << 53, 0), Some(9007199254740992.0));
+        assert_eq!(compose_f64_exact((1u64 << 53) + 1, 0), None);
     }
 
     #[test]

@@ -1,0 +1,252 @@
+//! Differential fuzz harness for the wire codecs.
+//!
+//! A seeded [`tensorserve::util::rng::Rng`] generates valid and
+//! adversarial predict bodies; every one is decoded by both the
+//! SIMD/SWAR fast-path codec and the scalar JSON codec, and the two
+//! must agree exactly — bit-identical tensors on success, the same
+//! error text on failure. A non-vacuity check pins that canonical
+//! float-array bodies really take the fast path rather than falling
+//! back wholesale. Runs as a named step in `scripts/check.sh`
+//! (`cargo test -q --test codec_fuzz`).
+
+use tensorserve::http::codec::{parse_predict_body, PredictBody};
+use tensorserve::http::wire::{self, simd::FastResult, Codec};
+use tensorserve::util::rng::Rng;
+
+/// Append one random float in a random JSON spelling.
+fn push_number(rng: &mut Rng, out: &mut String) {
+    match rng.next_below(6) {
+        0 => out.push_str(&format!("{}", rng.next_below(1000) as i64 - 500)),
+        1 => out.push_str(&format!("{:.3}", rng.next_f64() * 200.0 - 100.0)),
+        2 => out.push_str(&format!("{:e}", rng.next_f64() * 1e6)),
+        3 => out.push_str(&format!("{}", rng.next_f64())),
+        4 => out.push_str(&format!(
+            "{}e{}",
+            rng.next_below(100),
+            rng.next_below(40) as i64 - 20
+        )),
+        _ => out.push_str(&format!(
+            "-{}.{}E+{}",
+            rng.next_below(10),
+            rng.next_below(1000),
+            rng.next_below(3)
+        )),
+    }
+}
+
+/// A well-formed row-format body the fast path should handle: optional
+/// signature, scalar or array rows, mixed number spellings, stray
+/// whitespace.
+fn gen_valid_body(rng: &mut Rng) -> String {
+    let mut s = String::from("{");
+    if rng.chance(0.3) {
+        s.push_str("\"signature_name\": \"serving_default\", ");
+    }
+    s.push_str("\"instances\": [");
+    let rows = rng.range(1, 5);
+    let width = rng.range(1, 9);
+    let scalar_rows = rng.chance(0.25);
+    for r in 0..rows {
+        if r > 0 {
+            s.push(',');
+            if rng.chance(0.3) {
+                s.push(' ');
+            }
+        }
+        if scalar_rows {
+            push_number(rng, &mut s);
+        } else {
+            s.push('[');
+            for c in 0..width {
+                if c > 0 {
+                    s.push(',');
+                }
+                push_number(rng, &mut s);
+            }
+            s.push(']');
+        }
+    }
+    s.push_str("]}");
+    s
+}
+
+/// A well-formed body off the hot grammar: column format, feature-map
+/// instances, ragged rows, nulls — all scalar-codec territory.
+fn gen_cold_body(rng: &mut Rng) -> String {
+    match rng.next_below(4) {
+        0 => format!(
+            "{{\"inputs\": {{\"x\": [[1,2],[3,{}]]}}}}",
+            rng.next_below(50)
+        ),
+        1 => format!("{{\"instances\": [{{\"x\": [{}]}}]}}", rng.next_below(9)),
+        2 => "{\"instances\": [[1,2],[3]]}".to_string(),
+        _ => "{\"signature_name\": \"s\", \"instances\": [[1,null]]}".to_string(),
+    }
+}
+
+/// One random byte-level mutation: truncate, flip, insert, or delete.
+fn mutate(rng: &mut Rng, base: &str) -> Vec<u8> {
+    let mut b = base.as_bytes().to_vec();
+    match rng.next_below(4) {
+        0 => {
+            let cut = rng.range(0, b.len() + 1);
+            b.truncate(cut);
+        }
+        1 => {
+            let i = rng.range(0, b.len());
+            b[i] = rng.next_below(256) as u8;
+        }
+        2 => {
+            let i = rng.range(0, b.len() + 1);
+            b.insert(i, rng.next_below(256) as u8);
+        }
+        _ => {
+            let i = rng.range(0, b.len());
+            b.remove(i);
+        }
+    }
+    b
+}
+
+fn assert_same(a: &PredictBody, b: &PredictBody, body: &[u8]) {
+    let ctx = String::from_utf8_lossy(body);
+    assert_eq!(a.signature, b.signature, "{ctx}");
+    assert_eq!(a.row_format, b.row_format, "{ctx}");
+    assert_eq!(a.inputs.len(), b.inputs.len(), "{ctx}");
+    for ((an, at), (bn, bt)) in a.inputs.iter().zip(&b.inputs) {
+        assert_eq!(an, bn, "{ctx}");
+        assert_eq!(at.shape(), bt.shape(), "{ctx}");
+        let abits: Vec<u32> = at.data().iter().map(|v| v.to_bits()).collect();
+        let bbits: Vec<u32> = bt.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(abits, bbits, "{ctx}");
+    }
+}
+
+/// The differential oracle: SIMD codec and scalar codec must agree on
+/// every body, success or failure.
+fn assert_agree(body: &[u8]) {
+    let fast = wire::simd_json().decode_predict(body);
+    let slow = wire::scalar_json().decode_predict(body);
+    match (fast, slow) {
+        (Ok(a), Ok(b)) => assert_same(&a, &b, body),
+        (Err(a), Err(b)) => assert_eq!(
+            a.to_string(),
+            b.to_string(),
+            "{}",
+            String::from_utf8_lossy(body)
+        ),
+        (a, b) => panic!(
+            "codec divergence on {:?}: simd ok={} scalar ok={}",
+            String::from_utf8_lossy(body),
+            a.is_ok(),
+            b.is_ok()
+        ),
+    }
+}
+
+#[test]
+fn valid_bodies_agree_and_mostly_take_the_fast_path() {
+    let mut rng = Rng::new(0x5EED_C0DE);
+    let mut hot = 0usize;
+    const N: usize = 400;
+    for _ in 0..N {
+        let body = gen_valid_body(&mut rng);
+        if matches!(
+            wire::simd::parse_predict_fast(body.as_bytes()),
+            FastResult::Parsed(_)
+        ) {
+            hot += 1;
+        }
+        assert_agree(body.as_bytes());
+    }
+    // Non-vacuity: the generator's canonical bodies must actually
+    // exercise the fast path, not fall back wholesale.
+    assert!(hot >= N / 2, "only {hot}/{N} bodies took the fast path");
+}
+
+#[test]
+fn cold_and_mutated_bodies_agree() {
+    let mut rng = Rng::new(0xAD5E_ED42);
+    for i in 0..300 {
+        let base = if i % 3 == 0 {
+            gen_cold_body(&mut rng)
+        } else {
+            gen_valid_body(&mut rng)
+        };
+        assert_agree(base.as_bytes());
+        assert_agree(&mutate(&mut rng, &base));
+    }
+}
+
+#[test]
+fn adversarial_corpus_agrees() {
+    let corpus: &[&[u8]] = &[
+        b"",
+        b"{",
+        b"null",
+        b"{\"instances\": []}",
+        b"{\"instances\": [[]]}",
+        b"{\"instances\": [[1e309]]}",
+        b"{\"instances\": [[-0.0, 1e-320, 5e-324]]}",
+        b"{\"instances\": [[1.7976931348623157e308]]}",
+        b"{\"instances\": [[12345678901234567890123456789]]}",
+        b"{\"instances\": [[01]]}",
+        b"{\"instances\": [[1.]]}",
+        b"{\"instances\": [[.5]]}",
+        b"{\"instances\": [[+1]]}",
+        "{\"instances\": [[1\u{2603}]]}".as_bytes(),
+        b"{\"instances\": [[1]]}x",
+        b"{\"instances\": [[1]], \"instances\": [[2]]}",
+        b"{\"signature_name\": \"a\", \"signature_name\": \"b\", \"instances\": [[1]]}",
+        b"{\"signature_name\": \"a\\u0041\", \"instances\": [[1]]}",
+        b"{\"signature_name\": 7, \"instances\": [[1]]}",
+        b"{\"instances\": [[[[[[[[[[1]]]]]]]]]]}",
+        b"{\"instances\": [[1,2],[3,4],[5]]}",
+        b"{\"instances\": [1, [2]]}",
+        b"{\"instances\": [[1], 2]}",
+        &[0xff, 0xfe, 0x00, 0x01],
+        b"  {\"instances\": [[1]]}  ",
+        b"{\"instances\":[[1]],\"unknown_key\":true}",
+    ];
+    for body in corpus {
+        assert_agree(body);
+    }
+}
+
+#[test]
+fn chunked_feeds_match_one_shot_parse() {
+    let mut rng = Rng::new(0xC47_FEED);
+    for i in 0..120 {
+        let body = if i % 4 == 0 {
+            gen_cold_body(&mut rng)
+        } else {
+            gen_valid_body(&mut rng)
+        };
+        let bytes = body.as_bytes();
+        let whole = wire::simd_json().decode_predict(bytes);
+        let mut p = wire::simd::FastPredictParser::new();
+        let mut off = 0;
+        while off < bytes.len() {
+            let take = rng.range(1, 9).min(bytes.len() - off);
+            p.feed(&bytes[off..off + take]);
+            off += take;
+        }
+        let streamed = match p.finish() {
+            FastResult::Parsed(parsed) => Ok(parsed),
+            FastResult::Fallback(raw) => {
+                // A bail must hand the scalar codec the exact bytes.
+                assert_eq!(raw, bytes, "{body}");
+                parse_predict_body(&raw)
+            }
+        };
+        match (whole, streamed) {
+            (Ok(a), Ok(b)) => assert_same(&a, &b, bytes),
+            (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string(), "{body}"),
+            (a, b) => panic!(
+                "chunked/one-shot divergence on {body:?}: whole ok={} streamed ok={}",
+                a.is_ok(),
+                b.is_ok()
+            ),
+        }
+    }
+}

@@ -11,7 +11,7 @@ use tensorserve::base::tensor::Tensor;
 use tensorserve::http::client::HttpClient;
 use tensorserve::inference::ModelSpec;
 use tensorserve::rpc::client::RpcClient;
-use tensorserve::rpc::proto::{Request, Response};
+use tensorserve::rpc::proto::{encode_predict_payload, Request, Response};
 use tensorserve::runtime::artifacts::ArtifactSpec;
 use tensorserve::runtime::hlo_servable::synthetic_loader;
 use tensorserve::runtime::pjrt::OutTensor;
@@ -373,6 +373,256 @@ fn models_listing_reports_states_and_labels() {
     );
     // The listing has no signature payloads — that's the per-model GET.
     assert!(versions[1].get("signatures").is_none());
+    server.stop();
+}
+
+/// POST `body` with `Transfer-Encoding: chunked`, split into
+/// `chunk`-byte pieces so chunk boundaries land everywhere — including
+/// mid-number, mid-escape, and mid-UTF-8-sequence for small strides.
+fn post_chunked(addr: &str, path: &str, body: &[u8], chunk: usize) -> (u16, Vec<u8>) {
+    use std::io::{BufRead, BufReader, Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut req = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )
+    .into_bytes();
+    for piece in body.chunks(chunk.max(1)) {
+        req.extend_from_slice(format!("{:x}\r\n", piece.len()).as_bytes());
+        req.extend_from_slice(piece);
+        req.extend_from_slice(b"\r\n");
+    }
+    req.extend_from_slice(b"0\r\n\r\n");
+    stream.write_all(&req).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let status: u16 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut content_length = 0usize;
+    loop {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = trimmed.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap();
+            }
+        }
+    }
+    let mut resp = vec![0u8; content_length];
+    reader.read_exact(&mut resp).unwrap();
+    (status, resp)
+}
+
+#[test]
+fn content_type_negotiation_415_and_accept_406() {
+    let server = gateway_server(&[2]);
+    let mut c = http(&server);
+    let body = format!("{{\"instances\": {}}}", rows_json());
+
+    // Unknown Content-Type on a data-plane POST: 415 with the uniform
+    // JSON error envelope, naming the offending type.
+    let (status, resp) = c
+        .request("POST", "/v1/models/syn:predict", Some("text/csv"), body.as_bytes())
+        .unwrap();
+    assert_eq!(status, 415, "{}", String::from_utf8_lossy(&resp));
+    let err = json_of(&resp);
+    assert!(
+        err.get("error").unwrap().as_str().unwrap().contains("text/csv"),
+        "{err:?}"
+    );
+
+    // An Accept list with nothing the gateway can produce: 406, same
+    // envelope shape.
+    let (status, resp) = c
+        .request_with(
+            "POST",
+            "/v1/models/syn:predict",
+            Some("application/json"),
+            Some("application/msgpack"),
+            body.as_bytes(),
+        )
+        .unwrap();
+    assert_eq!(status, 406, "{}", String::from_utf8_lossy(&resp));
+    assert!(json_of(&resp).get("error").is_some());
+
+    // The scalar-codec escape hatch plus a wildcard Accept both
+    // negotiate fine.
+    let (status, resp) = c
+        .request_with(
+            "POST",
+            "/v1/models/syn:predict",
+            Some("application/json; codec=scalar"),
+            Some("*/*"),
+            body.as_bytes(),
+        )
+        .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    assert!(json_of(&resp).get("predictions").is_some());
+
+    // An unknown codec= parameter is a negotiation failure, not a
+    // silent fallback.
+    let (status, resp) = c
+        .request(
+            "POST",
+            "/v1/models/syn:predict",
+            Some("application/json; codec=protobuf"),
+            body.as_bytes(),
+        )
+        .unwrap();
+    assert_eq!(status, 415, "{}", String::from_utf8_lossy(&resp));
+
+    // Negotiation is scoped to data-plane POSTs: a metadata GET with an
+    // exotic Accept still answers JSON.
+    let (status, resp) = c
+        .request_with("GET", "/v1/models/syn", None, Some("application/msgpack"), &[])
+        .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    server.stop();
+}
+
+#[test]
+fn binary_rest_content_type_matches_json_predict() {
+    let server = gateway_server(&[2]);
+    let mut c = http(&server);
+
+    // JSON column-format reference answer (keys outputs by name, the
+    // same shape the binary path produces).
+    let (status, jbody) = c
+        .post_json(
+            "/v1/models/syn:predict",
+            &format!("{{\"inputs\": {{\"x\": {}}}}}", rows_json()),
+        )
+        .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&jbody));
+    let jout = json_of(&jbody);
+    let jlp: Vec<f64> = jout
+        .get("outputs")
+        .unwrap()
+        .get("log_probs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .flat_map(|row| {
+            row.as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect::<Vec<_>>()
+        })
+        .collect();
+
+    // The same rows as an application/x-tensorserve payload: binary in,
+    // binary out, decoded with the RPC plane's own Response::decode.
+    let tensor_rows: Vec<Vec<f32>> = rows()
+        .iter()
+        .map(|r| r.iter().map(|&x| x as f32).collect())
+        .collect();
+    let mut payload = Vec::new();
+    encode_predict_payload(
+        &mut payload,
+        "",
+        &[("x".into(), Tensor::matrix(tensor_rows).unwrap())],
+    );
+    let (status, bbody) = c.post_binary("/v1/models/syn:predict", &payload).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&bbody));
+    match Response::decode(&bbody).unwrap() {
+        Response::Predict { model_version, outputs } => {
+            assert_eq!(model_version, 2);
+            let lp = outputs
+                .iter()
+                .find_map(|(name, t)| match t {
+                    OutTensor::F32(t) if name == "log_probs" => Some(t.clone()),
+                    _ => None,
+                })
+                .unwrap();
+            assert_eq!(lp.data().len(), jlp.len());
+            for (a, b) in lp.data().iter().zip(&jlp) {
+                assert!((*a as f64 - b).abs() < 1e-6, "{a} vs {b}");
+            }
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // Binary ingress with a JSON Accept crosses codecs: same model,
+    // column-format JSON reply.
+    let (status, xbody) = c
+        .request_with(
+            "POST",
+            "/v1/models/syn:predict",
+            Some("application/x-tensorserve"),
+            Some("application/json"),
+            &payload,
+        )
+        .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&xbody));
+    let xout = json_of(&xbody);
+    assert!(xout.get("outputs").unwrap().get("class").is_some());
+
+    // A garbage binary body is a 400 with the JSON error envelope, not
+    // a hang or a binary error blob.
+    let (status, resp) = c
+        .post_binary("/v1/models/syn:predict", &[0xff, 0xff, 0xff, 0xff, 1, 2])
+        .unwrap();
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&resp));
+    assert!(json_of(&resp).get("error").is_some());
+    server.stop();
+}
+
+#[test]
+fn chunked_bodies_decode_identically_to_unchunked() {
+    let server = gateway_server(&[2]);
+    let addr = server.http_addr().unwrap().to_string();
+    let mut c = http(&server);
+
+    // Chunk boundaries mid-number: 1-byte chunks split every float
+    // literal; the larger strides hit other offsets.
+    let plain = format!("{{\"instances\": {}}}", rows_json());
+    let (ustatus, ubody) = c.post_json("/v1/models/syn:predict", &plain).unwrap();
+    assert_eq!(ustatus, 200, "{}", String::from_utf8_lossy(&ubody));
+    for chunk in [1, 3, 7, 64] {
+        let (status, body) = post_chunked(&addr, "/v1/models/syn:predict", plain.as_bytes(), chunk);
+        assert_eq!((status, &body), (ustatus, &ubody), "chunk size {chunk}");
+    }
+
+    // Chunk boundaries mid-escape: the unicode escape decodes to an
+    // underscore, so this names the real serving_default signature and
+    // must answer exactly like the unescaped body.
+    let escaped = format!(
+        "{{\"signature_name\": \"serving\\u005Fdefault\", \"instances\": {}}}",
+        rows_json()
+    );
+    let named = format!(
+        "{{\"signature_name\": \"serving_default\", \"instances\": {}}}",
+        rows_json()
+    );
+    let (estatus, ebody) = c.post_json("/v1/models/syn:predict", &named).unwrap();
+    assert_eq!(estatus, 200, "{}", String::from_utf8_lossy(&ebody));
+    for chunk in [1, 5] {
+        let (status, body) =
+            post_chunked(&addr, "/v1/models/syn:predict", escaped.as_bytes(), chunk);
+        assert_eq!((status, &body), (estatus, &ebody), "chunk size {chunk}");
+    }
+
+    // Chunk boundaries mid-UTF-8-sequence: the snowman is three bytes,
+    // so 1- and 2-byte chunks split it. The signature doesn't exist, so
+    // both paths answer the same error, byte for byte.
+    let snowman = format!(
+        "{{\"signature_name\": \"sn\u{2603}w\", \"instances\": {}}}",
+        rows_json()
+    );
+    let (sstatus, sbody) = c.post_json("/v1/models/syn:predict", &snowman).unwrap();
+    assert!(sstatus >= 400, "{}", String::from_utf8_lossy(&sbody));
+    assert!(json_of(&sbody).get("error").is_some());
+    for chunk in [1, 2] {
+        let (status, body) =
+            post_chunked(&addr, "/v1/models/syn:predict", snowman.as_bytes(), chunk);
+        assert_eq!((status, &body), (sstatus, &sbody), "chunk size {chunk}");
+    }
     server.stop();
 }
 

@@ -30,6 +30,14 @@ cargo test -q
 echo "==> cargo test -q --test http_gateway"
 cargo test -q --test http_gateway
 
+# Differential codec fuzz: seeded random valid + adversarial predict
+# bodies through the SIMD/SWAR fast path and the scalar JSON codec;
+# results must be bit-identical (or the same error), in one shot and
+# under arbitrary chunking. Named explicitly so a wire-codec
+# divergence is its own failing step.
+echo "==> cargo test -q --test codec_fuzz"
+cargo test -q --test codec_fuzz
+
 # Cross-request batching on the live serving path: concurrent requests
 # must merge (executions < requests), unloads must drain queued work
 # cleanly, and the lane-isolation guarantees (fast-model p99 bounded
