@@ -91,6 +91,10 @@ pub struct SessionOptions {
     /// Optional histogram recording each task's enqueue→execute delay
     /// in nanoseconds (the latency cost of waiting for batch-mates).
     pub queue_delay_ns: Option<Arc<Histogram>>,
+    /// Optional *windowed* sibling of `queue_delay_ns`: same samples,
+    /// but over a rotating window, so scrapers (fleet autoscaling) see
+    /// recent queue pressure instead of the cumulative distribution.
+    pub queue_delay_window: Option<Arc<crate::util::metrics::WindowedHistogram>>,
     /// Optional histogram recording merged task rows per device batch
     /// (pre-padding — the actual cross-request merge factor).
     pub merged_batch_rows: Option<Arc<Histogram>>,
@@ -102,6 +106,7 @@ impl Default for SessionOptions {
             queue: QueueOptions::default(),
             allowed_batch_sizes: vec![1, 4, 16],
             queue_delay_ns: None,
+            queue_delay_window: None,
             merged_batch_rows: None,
         }
     }
@@ -148,6 +153,7 @@ impl BatchingSession {
         let counters = Arc::new(AssemblyCounters::default());
         let max_batch_size = options.queue.max_batch_size;
         let delay_hist = options.queue_delay_ns.clone();
+        let delay_window = options.queue_delay_window.clone();
         let rows_hist = options.merged_batch_rows.clone();
         let process_pool = Arc::clone(&pool);
         let process_counters = Arc::clone(&counters);
@@ -158,6 +164,7 @@ impl BatchingSession {
                 &process_pool,
                 &process_counters,
                 delay_hist.as_deref(),
+                delay_window.as_deref(),
                 rows_hist.as_deref(),
                 batch,
             );
@@ -173,13 +180,20 @@ impl BatchingSession {
         pool: &BufferPool,
         counters: &AssemblyCounters,
         delay_hist: Option<&Histogram>,
+        delay_window: Option<&crate::util::metrics::WindowedHistogram>,
         rows_hist: Option<&Histogram>,
         batch: Batch<PendingRun>,
     ) {
         let all = batch.into_tasks();
-        if let Some(h) = delay_hist {
+        if delay_hist.is_some() || delay_window.is_some() {
             for t in &all {
-                h.record_duration(t.enqueued_at.elapsed());
+                let waited = t.enqueued_at.elapsed();
+                if let Some(h) = delay_hist {
+                    h.record_duration(waited);
+                }
+                if let Some(w) = delay_window {
+                    w.record_duration(waited);
+                }
             }
         }
         // Deadline check at the last possible moment before device

@@ -479,12 +479,16 @@ pub fn metadata_json(model: &str, versions: &[VersionMetadata]) -> Json {
 
 /// `GET /v1/models` reply: every model the server holds, with
 /// per-version state and labels (no signatures — the listing is the
-/// fleet inventory; drill into `/v1/models/{name}` for defs).
-pub fn models_list_json(models: &[(String, Vec<(u64, String, Vec<String>)>)]) -> Json {
+/// fleet inventory; drill into `/v1/models/{name}` for defs). A model
+/// the fleet rollout engine has touched additionally carries a
+/// `rollout_status` string (phase, or the auto-rollback reason).
+pub fn models_list_json(
+    models: &[(String, Vec<(u64, String, Vec<String>)>, Option<String>)],
+) -> Json {
     let models: Vec<Json> = models
         .iter()
-        .map(|(name, versions)| {
-            Json::obj(vec![
+        .map(|(name, versions, rollout)| {
+            let mut fields = vec![
                 ("name", Json::str(name)),
                 (
                     "versions",
@@ -504,7 +508,11 @@ pub fn models_list_json(models: &[(String, Vec<(u64, String, Vec<String>)>)]) ->
                             .collect(),
                     ),
                 ),
-            ])
+            ];
+            if let Some(status) = rollout {
+                fields.push(("rollout_status", Json::str(status)));
+            }
+            Json::obj(fields)
         })
         .collect();
     Json::obj(vec![("models", Json::Arr(models))])
@@ -742,6 +750,40 @@ mod tests {
             &Json::Arr(vec![Json::Num(-1.0), Json::Num(8.0)])
         );
         // The whole reply serializes to parseable JSON.
+        assert!(Json::parse(&json.to_string()).is_ok());
+    }
+
+    #[test]
+    fn models_list_carries_rollout_status_only_when_present() {
+        let models = vec![
+            (
+                "plain".to_string(),
+                vec![(1u64, "ready".to_string(), vec![])],
+                None,
+            ),
+            (
+                "rolling".to_string(),
+                vec![
+                    (1u64, "ready".to_string(), vec!["stable".to_string()]),
+                    (2u64, "ready".to_string(), vec!["canary".to_string()]),
+                ],
+                Some("rolled_back: error-rate 0.41 > 0.10".to_string()),
+            ),
+        ];
+        let json = models_list_json(&models);
+        let arr = json.get("models").unwrap().as_arr().unwrap();
+        // Untouched models omit the key entirely.
+        assert!(arr[0].get("rollout_status").is_none());
+        assert_eq!(
+            arr[1].get("rollout_status").unwrap().as_str(),
+            Some("rolled_back: error-rate 0.41 > 0.10")
+        );
+        assert_eq!(
+            arr[1].get("versions").unwrap().as_arr().unwrap()[1]
+                .get("labels")
+                .unwrap(),
+            &Json::Arr(vec![Json::str("canary")])
+        );
         assert!(Json::parse(&json.to_string()).is_ok());
     }
 

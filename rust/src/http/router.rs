@@ -473,11 +473,14 @@ fn models_list(core: &ServerCore) -> HttpResponse {
             .or_default()
             .push((id.version, state.describe(), labels));
     }
-    let models: Vec<(String, Vec<(u64, String, Vec<String>)>)> = by_model
+    let models: Vec<(String, Vec<(u64, String, Vec<String>)>, Option<String>)> = by_model
         .into_iter()
         .map(|(name, mut versions)| {
             versions.sort_by_key(|(v, _, _)| *v);
-            (name, versions)
+            // Fleet rollout status (canary phase / rollback reason),
+            // when the control plane has pushed one to this replica.
+            let rollout = core.rollout_status_of(&name);
+            (name, versions, rollout)
         })
         .collect();
     HttpResponse::json(200, &codec::models_list_json(&models))

@@ -38,52 +38,97 @@ impl HedgedClient {
     /// First successful response wins; losers are discarded (their
     /// connections are dropped, not pooled, to avoid response skew).
     pub fn call(&self, replicas: &[String], req: &Request) -> Result<Response> {
-        self.calls.fetch_add(1, Ordering::Relaxed);
-        let first = replicas
-            .first()
-            .ok_or_else(|| anyhow!("no replicas to call"))?;
-
-        let (tx, rx) = mpsc::channel::<Result<Response>>();
-        self.spawn_attempt(first.clone(), req.clone(), tx.clone());
-
-        // Wait for the primary up to the hedge delay.
-        match rx.recv_timeout(self.hedge_delay) {
-            Ok(Ok(resp)) => return Ok(resp),
-            Ok(Err(primary_err)) => {
-                // Primary failed fast: go straight to a backup if any.
-                match replicas.get(1) {
-                    Some(backup) => {
-                        self.hedges_fired.fetch_add(1, Ordering::Relaxed);
-                        self.spawn_attempt(backup.clone(), req.clone(), tx);
-                        return rx
-                            .recv_timeout(Duration::from_secs(30))
-                            .map_err(|_| anyhow!("backup timed out"))?;
-                    }
-                    None => return Err(primary_err),
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(e) => return Err(anyhow!("hedge channel: {e}")),
-        }
-
-        // Primary is slow: fire the backup, take whichever lands first.
-        if let Some(backup) = replicas.get(1) {
-            self.hedges_fired.fetch_add(1, Ordering::Relaxed);
-            self.spawn_attempt(backup.clone(), req.clone(), tx);
-        }
-        let mut last_err = None;
-        // Up to two outstanding attempts can report.
-        for _ in 0..2 {
-            match rx.recv_timeout(Duration::from_secs(30)) {
-                Ok(Ok(resp)) => return Ok(resp),
-                Ok(Err(e)) => last_err = Some(e),
-                Err(_) => break,
-            }
-        }
-        Err(last_err.unwrap_or_else(|| anyhow!("all hedged attempts timed out")))
+        self.call_observed(replicas, req, &mut |_, _| {})
     }
 
-    fn spawn_attempt(&self, addr: String, req: Request, tx: mpsc::Sender<Result<Response>>) {
+    /// [`HedgedClient::call`] with a per-attempt outcome observer:
+    /// `observe(addr, result)` fires once for every attempt that
+    /// *completed* (never for an attempt still in flight when a rival
+    /// won) — the Router's circuit breakers feed on this.
+    ///
+    /// Attempt policy: the request walks the replica list in order and
+    /// **never re-sends to a replica that already failed it** — a
+    /// failure immediately fails over to the next *untried* replica
+    /// (so a dead replica costs one attempt, not the whole hedge
+    /// budget), while a *slow* primary hedges to the next untried
+    /// replica once after `hedge_delay`.
+    pub fn call_observed(
+        &self,
+        replicas: &[String],
+        req: &Request,
+        observe: &mut dyn FnMut(&str, &Result<Response>),
+    ) -> Result<Response> {
+        const ATTEMPT_TIMEOUT: Duration = Duration::from_secs(30);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        if replicas.is_empty() {
+            return Err(anyhow!("no replicas to call"));
+        }
+
+        let (tx, rx) = mpsc::channel::<(usize, Result<Response>)>();
+        let mut next = 0usize; // next untried replica
+        let mut outstanding = 0usize;
+        let mut timeout_hedged = false; // at most one latency hedge
+
+        self.spawn_attempt(next, replicas[next].clone(), req.clone(), tx.clone());
+        next += 1;
+        outstanding += 1;
+
+        let mut last_err: Option<anyhow::Error> = None;
+        loop {
+            // A latency hedge is worth waiting for only while an
+            // untried replica exists and we haven't already fired one.
+            let can_hedge = !timeout_hedged && next < replicas.len();
+            let wait = if can_hedge { self.hedge_delay } else { ATTEMPT_TIMEOUT };
+            match rx.recv_timeout(wait) {
+                Ok((idx, Ok(resp))) => {
+                    let won = Ok(resp);
+                    observe(&replicas[idx], &won);
+                    return won;
+                }
+                Ok((idx, Err(e))) => {
+                    // Observe the original error so classification by
+                    // ErrorKind still works downstream.
+                    let failed: Result<Response> = Err(e);
+                    observe(&replicas[idx], &failed);
+                    outstanding -= 1;
+                    last_err = failed.err();
+                    // Fast failover: skip the failed replica for the
+                    // rest of this request, try the next untried one.
+                    if next < replicas.len() {
+                        self.hedges_fired.fetch_add(1, Ordering::Relaxed);
+                        self.spawn_attempt(next, replicas[next].clone(), req.clone(), tx.clone());
+                        next += 1;
+                        outstanding += 1;
+                    } else if outstanding == 0 {
+                        return Err(last_err.unwrap());
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if can_hedge {
+                        // Slow primary: hedge once to a fresh replica;
+                        // first response (either attempt) wins.
+                        timeout_hedged = true;
+                        self.hedges_fired.fetch_add(1, Ordering::Relaxed);
+                        self.spawn_attempt(next, replicas[next].clone(), req.clone(), tx.clone());
+                        next += 1;
+                        outstanding += 1;
+                    } else {
+                        return Err(last_err
+                            .unwrap_or_else(|| anyhow!("all hedged attempts timed out")));
+                    }
+                }
+                Err(e) => return Err(anyhow!("hedge channel: {e}")),
+            }
+        }
+    }
+
+    fn spawn_attempt(
+        &self,
+        idx: usize,
+        addr: String,
+        req: Request,
+        tx: mpsc::Sender<(usize, Result<Response>)>,
+    ) {
         let pool = Arc::clone(&self.pool);
         std::thread::Builder::new()
             .name("hedge-attempt".to_string())
@@ -98,7 +143,7 @@ impl HedgedClient {
                         r
                     })
                     .and_then(Response::into_result);
-                let _ = tx.send(result);
+                let _ = tx.send((idx, result));
             })
             .expect("spawn hedge attempt");
     }
@@ -172,6 +217,60 @@ mod tests {
         let h = HedgedClient::new(Arc::new(ClientPool::new()), Duration::from_millis(50));
         let replicas = vec!["127.0.0.1:1".to_string(), backup.addr().to_string()];
         assert_eq!(h.call(&replicas, &Request::Ping).unwrap(), Response::Pong);
+    }
+
+    #[test]
+    fn failed_replicas_are_skipped_not_rehedged() {
+        // Two dead replicas before a live one: the request must walk
+        // the list (one attempt per dead replica, never re-sending to
+        // a replica that already failed it) and succeed via the third.
+        let live = server(Arc::new(AtomicBool::new(false)), Duration::ZERO);
+        let h = HedgedClient::new(Arc::new(ClientPool::new()), Duration::from_millis(50));
+        let replicas = vec![
+            "127.0.0.1:1".to_string(),
+            "127.0.0.1:1".to_string(),
+            live.addr().to_string(),
+        ];
+        let mut attempts: Vec<(String, bool)> = Vec::new();
+        let resp = h
+            .call_observed(&replicas, &Request::Ping, &mut |addr, result| {
+                attempts.push((addr.to_string(), result.is_ok()));
+            })
+            .unwrap();
+        assert_eq!(resp, Response::Pong);
+        // Exactly three attempts: dead, dead, live — no replica tried
+        // twice within the request.
+        assert_eq!(attempts.len(), 3, "{attempts:?}");
+        assert_eq!(attempts[0], ("127.0.0.1:1".to_string(), false));
+        assert_eq!(attempts[1], ("127.0.0.1:1".to_string(), false));
+        assert_eq!(attempts[2], (live.addr().to_string(), true));
+    }
+
+    #[test]
+    fn app_errors_reported_to_observer_with_kind() {
+        // A server that answers with a typed app error: the observer
+        // must see the original ErrorKind, not a flattened transport
+        // failure — breakers must not trip on client mistakes.
+        let s = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(|_| Response::Error {
+                kind: crate::base::error::ErrorKind::InvalidArgument,
+                message: "bad shape".into(),
+            }),
+        )
+        .unwrap();
+        let h = HedgedClient::new(Arc::new(ClientPool::new()), Duration::from_millis(50));
+        let mut kinds = Vec::new();
+        let _ = h.call_observed(
+            &[s.addr().to_string()],
+            &Request::Ping,
+            &mut |_, result| {
+                if let Err(e) = result {
+                    kinds.push(crate::base::error::ErrorKind::of(e));
+                }
+            },
+        );
+        assert_eq!(kinds, vec![crate::base::error::ErrorKind::InvalidArgument]);
     }
 
     #[test]

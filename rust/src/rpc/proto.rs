@@ -58,6 +58,10 @@ pub enum Request {
     /// Admin: structured metric samples (what the TFS² Synchronizer
     /// scrapes for autoscaling — lane depths, queue delays, sheds).
     Metrics,
+    /// Admin: fleet-pushed rollout status for `model` (canary phase,
+    /// auto-rollback reason), surfaced in `GET /v1/models`. An empty
+    /// `status` clears the entry.
+    SetRolloutStatus { model: String, status: String },
     /// Liveness probe / no-op (used by benches to measure RPC floor).
     Ping,
     /// Deadline envelope: the inner request must complete within
@@ -666,6 +670,11 @@ impl Request {
                 inner.encode_body(out);
             }
             Request::Metrics => out.push(13),
+            Request::SetRolloutStatus { model, status } => {
+                out.push(14);
+                put_str(out, model);
+                put_str(out, status);
+            }
         }
     }
 
@@ -732,6 +741,7 @@ impl Request {
                 }
             }
             13 => Request::Metrics,
+            14 => Request::SetRolloutStatus { model: r.str()?, status: r.str()? },
             t => bail!("unknown request tag {t}"),
         };
         Ok(req)
@@ -1098,6 +1108,11 @@ mod tests {
         roundtrip_req(Request::ModelStatus { model: "m".into() });
         roundtrip_req(Request::Status);
         roundtrip_req(Request::Metrics);
+        roundtrip_req(Request::SetRolloutStatus {
+            model: "m".into(),
+            status: "rolled_back: error-rate 0.41 > 0.10".into(),
+        });
+        roundtrip_req(Request::SetRolloutStatus { model: "m".into(), status: String::new() });
         roundtrip_req(Request::Ping);
         roundtrip_req(
             Request::predict("m", None, Tensor::zeros(vec![2, 4])).with_deadline_ms(150),

@@ -111,6 +111,13 @@ impl HloServable {
         // nothing is armed). Consulted before the executions counter so
         // an injected *failure* doesn't count as an execution.
         crate::util::fault::hit(&format!("exec:{}", self.spec.model_name))?;
+        // Version-scoped sibling: `exec:{model}@v{version}` faults one
+        // version only — how rollout tests break a canary while the
+        // stable version keeps serving from the same process.
+        crate::util::fault::hit(&format!(
+            "exec:{}@v{}",
+            self.spec.model_name, self.spec.version
+        ))?;
         self.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let rows = input.batch();
         if input.rank() != 2 || input.shape()[1] != self.spec.input_dim {

@@ -74,6 +74,10 @@ pub struct ServerCore {
     /// label mutations write through here and Ready events replay the
     /// persisted mappings, so canary/stable labels survive restarts.
     label_store: Option<Arc<Store>>,
+    /// Per-model rollout status pushed by the fleet control plane
+    /// (`SetRolloutStatus`), surfaced in `GET /v1/models` so operators
+    /// see canary progress and auto-rollback reasons on any replica.
+    rollout_status: std::sync::Mutex<HashMap<String, String>>,
 }
 
 /// The running canonical server.
@@ -182,7 +186,13 @@ impl ModelServer {
         // (sessions open on Ready, drain on the unload path). Both the
         // RPC and HTTP planes execute through this registry, so their
         // concurrent requests merge into shared device batches.
-        let registry = Registry::new();
+        // The registry's windowed series (health.*, *.window) rotate on
+        // `metrics_window_ms`, so the fleet Synchronizer scrapes recent
+        // error-rate/p99 instead of cumulative-since-boot distributions.
+        let registry = Registry::with_window(
+            crate::util::clock::RealClock::shared(),
+            Duration::from_millis(config.metrics_window_ms),
+        );
         let sessions = SessionRegistry::new(config.batching.clone(), Arc::clone(&registry));
         sessions.attach(avm.basic());
         let admission = AdmissionControl::new(config.admission.clone(), &registry);
@@ -204,6 +214,7 @@ impl ModelServer {
             registry,
             logger: Arc::new(RequestLogger::new(0.1, 4096, 42)),
             label_store,
+            rollout_status: std::sync::Mutex::new(HashMap::new()),
         });
 
         // Label GC: drop labels whose version leaves serving, so a
@@ -451,6 +462,16 @@ impl ServerCore {
             inner: self.avm.as_ref(),
             labels: self.labels.as_ref(),
         };
+        // Health attribution: the inference arms consume their specs,
+        // so clone the spec up front for per-(model, version) windowed
+        // outcome recording after the dispatch below.
+        let health_spec = match &req {
+            Request::Predict { spec, .. }
+            | Request::Classify { spec, .. }
+            | Request::Regress { spec, .. }
+            | Request::MultiInference { spec, .. } => Some(spec.clone()),
+            _ => None,
+        };
         let (api, resp) = match req {
             // Unwrapped above; a bare nested envelope can only be
             // constructed in-process and is answered, not panicked on.
@@ -676,6 +697,18 @@ impl ServerCore {
                 // the human-oriented text dump.
                 ("metrics", Response::Metrics { samples: self.registry.samples() })
             }
+            Request::SetRolloutStatus { model, status } => {
+                // Pushed by the fleet rollout engine after each
+                // evaluation tick; an empty status clears the entry.
+                // Purely informational — surfaced in `GET /v1/models`.
+                let mut map = self.rollout_status.lock().unwrap();
+                if status.is_empty() {
+                    map.remove(&model);
+                } else {
+                    map.insert(model, status);
+                }
+                ("set_rollout_status", Response::Ack)
+            }
             Request::Status => {
                 // Snapshot buffer-pool state into gauges so the dump
                 // shows the zero-allocation hot path working.
@@ -691,6 +724,45 @@ impl ServerCore {
                 ("status", Response::Status { text })
             }
         };
+        // Per-(model, version) windowed health: the rollout engine
+        // gates canaries on *recent* error-rate and p99, so outcomes
+        // land in rotating windows keyed by the version that served
+        // (or would have served) the request. Server-side errors only:
+        // client mistakes (bad signature, invalid argument) and
+        // retryable shedding must not trip a rollback.
+        if let Some(spec) = health_spec {
+            let version = match &resp {
+                Response::Predict { model_version, .. }
+                | Response::Classify { model_version, .. }
+                | Response::Regress { model_version, .. }
+                | Response::MultiInference { model_version, .. } => Some(*model_version),
+                // Errors carry no version: attribute via the spec's
+                // pin/label, falling back to the newest ready version
+                // (what Latest would have resolved to).
+                _ => crate::inference::predict::resolve_spec_version(&self.labels, &spec)
+                    .ok()
+                    .flatten()
+                    .or_else(|| {
+                        self.avm.basic().ready_versions(&spec.name).into_iter().max()
+                    }),
+            };
+            if let Some(v) = version {
+                let base = format!("health.{}.v{v}", spec.name);
+                self.registry
+                    .windowed_counter(&format!("{base}.requests.window"))
+                    .inc();
+                if let Response::Error { kind, .. } = &resp {
+                    if matches!(kind, ErrorKind::Internal | ErrorKind::DeadlineExceeded) {
+                        self.registry
+                            .windowed_counter(&format!("{base}.errors.window"))
+                            .inc();
+                    }
+                }
+                self.registry
+                    .windowed_histogram(&format!("{base}.latency_ns.window"))
+                    .record_duration(t0.elapsed());
+            }
+        }
         self.registry.counter(&format!("rpc.{api}.requests")).inc();
         if matches!(resp, Response::Error { .. }) {
             self.registry.counter(&format!("rpc.{api}.errors")).inc();
@@ -699,6 +771,12 @@ impl ServerCore {
             .histogram(&format!("rpc.{api}.latency_ns"))
             .record_duration(t0.elapsed());
         resp
+    }
+
+    /// Rollout status last pushed for `model` via `SetRolloutStatus`
+    /// (`None` when no rollout has touched this replica).
+    pub fn rollout_status_of(&self, model: &str) -> Option<String> {
+        self.rollout_status.lock().unwrap().get(model).cloned()
     }
 
     /// Write-through for the durable label store: `Some(version)`
@@ -802,6 +880,7 @@ fn api_of(req: &Request) -> &'static str {
         Request::ModelStatus { .. } => "model_status",
         Request::Status => "status",
         Request::Metrics => "metrics",
+        Request::SetRolloutStatus { .. } => "set_rollout_status",
         Request::WithDeadline { .. } => "with_deadline",
     }
 }
@@ -1349,6 +1428,11 @@ mod tests {
                 };
                 assert!(get("rpc.predict.requests") >= 1.0);
                 assert!(get("rpc.predict.latency_ns.count") >= 1.0);
+                // Per-(model, version) windowed health series, keyed by
+                // the version that served: what rollout gating scrapes.
+                assert!(get("health.syn.v1.requests.window") >= 1.0);
+                assert_eq!(get("health.syn.v1.errors.window"), 0.0);
+                assert!(get("health.syn.v1.latency_ns.window.p99") > 0.0);
                 // Name-sorted, so scrapers can binary-search or diff.
                 let names: Vec<&String> = samples.iter().map(|(n, _)| n).collect();
                 let mut sorted = names.clone();
@@ -1357,6 +1441,29 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+        server.stop();
+    }
+
+    #[test]
+    fn rollout_status_push_and_clear() {
+        let server = synthetic_server(&[1]);
+        let mut client = RpcClient::connect(&server.addr().to_string()).unwrap();
+        assert_eq!(server.core().rollout_status_of("syn"), None);
+        client
+            .call_ok(&Request::SetRolloutStatus {
+                model: "syn".into(),
+                status: "ramping: step 2/4 (25%)".into(),
+            })
+            .unwrap();
+        assert_eq!(
+            server.core().rollout_status_of("syn").as_deref(),
+            Some("ramping: step 2/4 (25%)")
+        );
+        // An empty status clears the entry (rollout finished).
+        client
+            .call_ok(&Request::SetRolloutStatus { model: "syn".into(), status: String::new() })
+            .unwrap();
+        assert_eq!(server.core().rollout_status_of("syn"), None);
         server.stop();
     }
 

@@ -90,6 +90,11 @@ pub struct ServerConfig {
     /// fail or slow ONE replica (the registry is process-global; the
     /// tag scopes it). `None` = no per-replica seam.
     pub fault_tag: Option<String>,
+    /// Rotation interval for windowed metrics (`*.window` series:
+    /// per-version health error rates / latency p99, recent queue
+    /// delay). A read covers 1–2 intervals, so this is the reaction
+    /// half-life of health gates and SLO autoscaling. Must be > 0.
+    pub metrics_window_ms: u64,
     pub models: Vec<ModelConfig>,
 }
 
@@ -110,6 +115,7 @@ impl Default for ServerConfig {
             net: NetConfig::default(),
             label_store_path: None,
             fault_tag: None,
+            metrics_window_ms: 1_000,
             models: Vec::new(),
         }
     }
@@ -133,6 +139,7 @@ impl ServerConfig {
             "net",
             "label_store_path",
             "fault_tag",
+            "metrics_window_ms",
             "models",
         ])?;
         let artifacts_root = PathBuf::from(conf.str_or(
@@ -209,6 +216,12 @@ impl ServerConfig {
         if fault_tag.as_deref() == Some("") {
             return Err(ErrorKind::InvalidArgument.err("fault_tag must not be empty"));
         }
+        // A zero window would divide every rotation by it; reject the
+        // typo at parse time like the other duration knobs.
+        let metrics_window_ms = conf.u64_or("metrics_window_ms", 1_000);
+        if metrics_window_ms == 0 {
+            return Err(ErrorKind::InvalidArgument.err("metrics_window_ms must be positive"));
+        }
         Ok(ServerConfig {
             port: conf.u64_or("port", 0) as u16,
             http_addr: conf
@@ -232,6 +245,7 @@ impl ServerConfig {
             net,
             label_store_path: label_store_path.map(PathBuf::from),
             fault_tag,
+            metrics_window_ms,
             models,
         })
     }
@@ -615,6 +629,7 @@ mod tests {
         assert_eq!(cfg.admission, AdmissionConfig::default());
         assert_eq!(cfg.load_retries, 0);
         assert_eq!(cfg.load_retry_backoff, Duration::from_millis(100));
+        assert_eq!(cfg.metrics_window_ms, 1_000);
 
         // Full parse.
         let cfg = ServerConfig::from_conf(
@@ -627,6 +642,7 @@ mod tests {
                   },
                   "load_retries": 3,
                   "load_retry_backoff_ms": 20,
+                  "metrics_window_ms": 250,
                   "models": [{"name": "x"}]
                 }"#,
                 "t",
@@ -639,6 +655,7 @@ mod tests {
         assert_eq!(cfg.admission.retry_after_ms, 250);
         assert_eq!(cfg.load_retries, 3);
         assert_eq!(cfg.load_retry_backoff, Duration::from_millis(20));
+        assert_eq!(cfg.metrics_window_ms, 250);
 
         // Config typos are parse-time InvalidArgument errors.
         for (bad, needle) in [
@@ -655,6 +672,10 @@ mod tests {
             (
                 r#"{"admission": {"max_in_flight": 4}, "models":[{"name":"x"}]}"#,
                 "unknown key",
+            ),
+            (
+                r#"{"metrics_window_ms": 0, "models":[{"name":"x"}]}"#,
+                "metrics_window_ms",
             ),
         ] {
             let err = ServerConfig::from_conf(&Conf::parse(bad, "t").unwrap()).unwrap_err();

@@ -323,6 +323,12 @@ impl SessionRegistry {
                 self.metrics
                     .histogram(&format!("batch.{}.queue_delay_ns", id.name)),
             ),
+            // Windowed sibling: what the fleet Synchronizer scrapes so
+            // SLO-breach autoscaling reacts to *recent* queue pressure.
+            queue_delay_window: Some(
+                self.metrics
+                    .windowed_histogram(&format!("batch.{}.queue_delay_ns.window", id.name)),
+            ),
             merged_batch_rows: Some(
                 self.metrics
                     .histogram(&format!("batch.{}.merged_rows", id.name)),

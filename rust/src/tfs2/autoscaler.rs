@@ -31,9 +31,12 @@ pub struct AutoscalerConfig {
     pub max_replicas: usize,
     /// Ticks to wait after a scaling action before acting again.
     pub cooldown_ticks: u32,
-    /// Queue-delay p99 SLO: a job whose scraped
-    /// `batch.*.queue_delay_ns.p99` exceeds this scales up regardless
-    /// of lane depth (signals path only). Default 50ms.
+    /// Queue-delay p99 SLO: a job whose scraped queue-delay p99
+    /// exceeds this scales up regardless of lane depth (signals path
+    /// only). The fleet feeds the *windowed* series
+    /// (`batch.*.queue_delay_ns.window.p99`) so the signal reflects
+    /// recent load, not lifetime history — the cumulative series
+    /// stays exported for `/metrics`. Default 50ms.
     pub queue_delay_slo_ns: f64,
     /// How much load each newly shed request adds on top of lane
     /// depth: sheds are demand the server refused, so they count as
@@ -61,7 +64,9 @@ impl Default for AutoscalerConfig {
 pub struct LoadSignal {
     /// Sum of batching lane depths across the job's replicas.
     pub lane_depth: f64,
-    /// Worst queue-delay p99 across the job's replicas (ns).
+    /// Worst *windowed* queue-delay p99 across the job's replicas
+    /// (ns) — recent behaviour, so a long-recovered startup spike
+    /// can't keep a job scaled up forever.
     pub queue_delay_p99_ns: f64,
     /// Requests shed by admission control since the last tick.
     pub shed_delta: f64,

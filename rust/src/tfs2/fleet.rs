@@ -15,16 +15,22 @@
 //!        │
 //! autoscale_once(): scrape_load ─► Autoscaler ─► Cluster.scale_to
 //!                                        └─► reconcile() again
+//!
+//! rollout_once(): scrape_health ─► RolloutEngine ─► split / promote /
+//!                                        auto-rollback + status push
 //! ```
 
 use super::autoscaler::{Autoscaler, AutoscalerConfig, Decision, LoadSignal};
 use super::cluster::Cluster;
 use super::controller::Controller;
-use super::router::Router;
+use super::rollout::{RolloutAction, RolloutEngine, RolloutPolicy, RolloutState};
+use super::router::{BreakerConfig, Router};
 use super::store::Store;
 use super::synchronizer::{SyncReport, Synchronizer};
 use crate::rpc::client::ClientPool;
-use anyhow::Result;
+use crate::rpc::proto::{Request, Response};
+use crate::util::clock::{Clock, RealClock};
+use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -40,6 +46,11 @@ pub struct FleetConfig {
     pub autoscaler: AutoscalerConfig,
     /// Hedged-routing backup delay (PR 6 machinery).
     pub hedge_delay: Duration,
+    /// Replica circuit-breaker thresholds for the Router.
+    pub breaker: BreakerConfig,
+    /// Clock driving breaker open→half-open transitions and rollout
+    /// bake timing (tests inject a [`crate::util::clock::ManualClock`]).
+    pub clock: Arc<dyn Clock>,
 }
 
 impl Default for FleetConfig {
@@ -50,6 +61,8 @@ impl Default for FleetConfig {
             artifacts_root: std::env::temp_dir(),
             autoscaler: AutoscalerConfig::default(),
             hedge_delay: Duration::from_millis(50),
+            breaker: BreakerConfig::default(),
+            clock: RealClock::shared(),
         }
     }
 }
@@ -59,7 +72,9 @@ pub struct Fleet {
     pub cluster: Cluster,
     pub synchronizer: Synchronizer,
     pub router: Arc<Router>,
+    pub rollouts: RolloutEngine,
     autoscaler: Mutex<Autoscaler>,
+    pool: Arc<ClientPool>,
 }
 
 impl Fleet {
@@ -75,13 +90,20 @@ impl Fleet {
             controller.set_job_replicas(&job, &cluster.replica_addrs(&job))?;
             autoscaler.track(&job, cluster.replica_addrs(&job).len());
         }
-        let synchronizer = Synchronizer::new(store, Arc::new(ClientPool::new()));
+        let pool = Arc::new(ClientPool::new());
+        let synchronizer = Synchronizer::new(store, Arc::clone(&pool));
         Ok(Fleet {
             controller,
             cluster,
             synchronizer,
-            router: Router::new(config.hedge_delay),
+            router: Router::with_config(
+                config.hedge_delay,
+                config.breaker,
+                Arc::clone(&config.clock),
+            ),
+            rollouts: RolloutEngine::new(config.clock),
             autoscaler: Mutex::new(autoscaler),
+            pool,
         })
     }
 
@@ -125,7 +147,12 @@ impl Fleet {
                     job,
                     LoadSignal {
                         lane_depth: load.lane_depth,
-                        queue_delay_p99_ns: load.queue_delay_p99_ns,
+                        // The *windowed* p99 drives scaling: the
+                        // cumulative series (kept for /metrics) never
+                        // forgets a startup spike, so a job that
+                        // recovered an hour ago would stay scaled up
+                        // forever on the lifetime percentile.
+                        queue_delay_p99_ns: load.queue_delay_window_p99_ns,
                         shed_delta: load.shed_delta,
                     },
                 )
@@ -147,6 +174,161 @@ impl Fleet {
         self.controller.set_version_label(model, label, version)?;
         self.reconcile()?;
         Ok(())
+    }
+
+    /// Begin a health-gated rollout of `version`: canary mode on, the
+    /// new version loads alongside the current primary (which becomes
+    /// the `stable` side), and the [`RolloutEngine`] takes over — call
+    /// [`Fleet::rollout_once`] each control-plane tick to ramp,
+    /// promote, or auto-rollback. No traffic reaches the canary until
+    /// it is ready on every replica.
+    pub fn start_rollout(
+        &self,
+        model: &str,
+        version: u64,
+        policy: RolloutPolicy,
+    ) -> Result<()> {
+        let stable = self
+            .controller
+            .desired_versions(model)?
+            .into_iter()
+            .max()
+            .ok_or_else(|| anyhow!("model '{model}' has no serving version to canary against"))?;
+        if stable == version {
+            return Err(anyhow!("version {version} is already the primary of '{model}'"));
+        }
+        self.controller.set_canary(model, true)?;
+        self.controller.add_version(model, version)?;
+        self.controller.set_version_label(model, "stable", stable)?;
+        self.controller.set_version_label(model, "canary", version)?;
+        // Pin all unpinned traffic to stable until the canary is ready
+        // and the engine opens the first ramp step — otherwise Latest
+        // would resolve to the canary the moment it loads.
+        self.router.set_split(model, stable, version, 0.0);
+        self.rollouts.begin(model, stable, version, policy);
+        self.reconcile()?;
+        self.push_rollout_status(model);
+        Ok(())
+    }
+
+    /// One rollout evaluation pass over every in-flight rollout: scrape
+    /// windowed health, let the engine decide, apply its actions
+    /// (traffic splits via the Router, promote/rollback via the
+    /// Controller), and push the human-readable status to the replicas
+    /// so `GET /v1/models` shows it. Returns the actions applied,
+    /// keyed by model.
+    pub fn rollout_once(&self) -> Result<Vec<(String, RolloutAction)>> {
+        let desired = self.controller.desired_state();
+        let health = self.synchronizer.scrape_health(&desired);
+        let mut applied = Vec::new();
+        let mut need_reconcile = false;
+        for model in self.rollouts.in_flight() {
+            let Some(state) = self.rollouts.state(&model) else { continue };
+            // No traffic before the canary version reports ready on
+            // EVERY replica of the placed job (polled explicitly — the
+            // routing table can't answer per-version questions).
+            let expected: Vec<String> = desired
+                .iter()
+                .find(|j| j.models.iter().any(|m| m.name == model))
+                .map(|j| j.replicas.clone())
+                .unwrap_or_default();
+            let canary_ready = !expected.is_empty()
+                && expected.iter().filter(|a| !a.is_empty()).all(|addr| {
+                    matches!(
+                        self.pool.call(addr, &Request::ModelStatus { model: model.clone() }),
+                        Ok(Response::ModelStatus { versions })
+                            if versions.iter().any(|(v, st)| *v == state.canary && st == "ready")
+                    )
+                });
+            let canary_h = health
+                .get(&(model.clone(), state.canary))
+                .copied()
+                .unwrap_or_default();
+            let stable_h = health
+                .get(&(model.clone(), state.stable))
+                .copied()
+                .unwrap_or_default();
+            for action in self.rollouts.tick(&model, canary_ready, &canary_h, &stable_h) {
+                self.apply_rollout_action(&model, &state, &action, &mut need_reconcile)?;
+                applied.push((model.clone(), action));
+            }
+            self.push_rollout_status(&model);
+        }
+        if need_reconcile {
+            self.reconcile()?;
+        }
+        Ok(applied)
+    }
+
+    fn apply_rollout_action(
+        &self,
+        model: &str,
+        state: &RolloutState,
+        action: &RolloutAction,
+        need_reconcile: &mut bool,
+    ) -> Result<()> {
+        match action {
+            RolloutAction::SetSplit { fraction } => {
+                crate::log_info!(
+                    "rollout: {model} canary v{} at {:.0}%",
+                    state.canary,
+                    fraction * 100.0
+                );
+                self.router.set_split(model, state.stable, state.canary, *fraction);
+            }
+            RolloutAction::Promote => {
+                crate::log_info!("rollout: {model} promoting v{}", state.canary);
+                // Move the stable label onto the canary while BOTH
+                // versions are still desired and loaded, and fan it
+                // out, so no stable-label request can land in the gap
+                // between the old primary unloading and the label
+                // moving. Only then shrink the desired set.
+                self.controller.set_version_label(model, "stable", state.canary)?;
+                self.reconcile()?;
+                self.controller.promote_canary(model)?;
+                let _ = self.controller.delete_version_label(model, "canary");
+                self.controller.set_canary(model, false)?;
+                self.router.clear_split(model);
+                *need_reconcile = true;
+            }
+            RolloutAction::Rollback { reason } => {
+                crate::log_warn!("rollout: {model} auto-rollback: {reason}");
+                // Pin everything to stable *before* the desired-set
+                // change: the canary stays transiently servable on the
+                // replicas until reconcile unloads it, and unpinned
+                // Latest would resolve to it in that window. The pin is
+                // harmless afterwards (stable is the only version) and
+                // the next rollout's split replaces it.
+                self.router.set_split(model, state.stable, state.stable, 0.0);
+                self.controller.rollback(model, state.stable)?;
+                self.controller.set_canary(model, false)?;
+                *need_reconcile = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Current rollout status line for a model ("ramping: …",
+    /// "rolled_back: …"), if a rollout was ever begun.
+    pub fn rollout_status(&self, model: &str) -> Option<String> {
+        self.rollouts.status_line(model)
+    }
+
+    /// Best-effort push of the status line to every replica serving the
+    /// model, so data-plane `GET /v1/models` surfaces it. Failures are
+    /// ignored — the next tick retries.
+    fn push_rollout_status(&self, model: &str) {
+        let Some(status) = self.rollouts.status_line(model) else { return };
+        let Some(job) = self.controller.placement(model) else { return };
+        for addr in self.cluster.replica_addrs(&job) {
+            let req = Request::SetRolloutStatus {
+                model: model.to_string(),
+                status: status.clone(),
+            };
+            if let Err(e) = self.pool.call(&addr, &req) {
+                crate::log_warn!("rollout: status push to {addr} failed: {e}");
+            }
+        }
     }
 
     pub fn stop(&self) {
@@ -187,6 +369,25 @@ mod tests {
         .unwrap();
         assert!(fleet.autoscale_once().unwrap().is_empty());
         assert_eq!(fleet.cluster.replica_addrs("job-0").len(), 1);
+        fleet.stop();
+    }
+
+    #[test]
+    fn rollout_requires_a_serving_primary() {
+        let fleet = Fleet::start(
+            Store::in_memory(0),
+            FleetConfig { jobs: 1, ..Default::default() },
+        )
+        .unwrap();
+        // Unknown model: the controller refuses.
+        assert!(fleet.start_rollout("ghost", 2, RolloutPolicy::default()).is_err());
+        assert_eq!(fleet.rollout_status("ghost"), None);
+        // Same version as the primary: nothing to canary.
+        fleet.deploy("m", "/m", 1, 1).unwrap();
+        let err = fleet.start_rollout("m", 1, RolloutPolicy::default()).unwrap_err();
+        assert!(err.to_string().contains("already the primary"), "{err}");
+        // No in-flight rollouts: the evaluation pass is a clean no-op.
+        assert!(fleet.rollout_once().unwrap().is_empty());
         fleet.stop();
     }
 

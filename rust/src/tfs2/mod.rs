@@ -18,6 +18,8 @@
 //!   hedged backup requests (§3.1).
 //! * [`autoscaler`] — reactive replica scaling from scraped metrics
 //!   (lane depth, queue-delay SLO, admission sheds).
+//! * [`rollout`] — health-gated canary rollouts: declarative policy,
+//!   ramp/bake/promote state machine, auto-rollback on gate breach.
 //! * [`cluster`] — in-process multi-job cluster over real sockets.
 //! * [`fleet`] — the assembled control plane: deploy → reconcile →
 //!   autoscale → route, one handle.
@@ -27,6 +29,7 @@ pub mod binpack;
 pub mod cluster;
 pub mod controller;
 pub mod fleet;
+pub mod rollout;
 pub mod router;
 pub mod store;
 pub mod synchronizer;

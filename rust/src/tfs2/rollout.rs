@@ -1,0 +1,434 @@
+//! Health-gated rollouts (§2.1.1 automated): the paper's canarying and
+//! rollback workflows exist as manual Controller verbs; this module
+//! closes the loop. A declarative [`RolloutPolicy`] is evaluated every
+//! sync tick against *windowed* health scraped from the fleet
+//! ([`super::synchronizer::Synchronizer::scrape_health`]): the canary
+//! fraction ramps while healthy, the version promotes after a bake
+//! period, and a gate breach auto-rolls back — the stable version keeps
+//! serving throughout, and the rollback reason surfaces in
+//! `GET /v1/models` via the `SetRolloutStatus` push.
+//!
+//! The state machine itself ([`evaluate`]) is a pure function of
+//! (state, clock, health) so every transition is unit-testable without
+//! sockets; [`RolloutEngine`] adds the per-model bookkeeping, and
+//! [`super::fleet::Fleet`] applies the emitted [`RolloutAction`]s to
+//! the Controller and Router.
+
+use super::synchronizer::VersionHealth;
+use crate::util::clock::Clock;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Declarative rollout policy: how fast to ramp, how long to bake,
+/// and the health gates that trigger auto-rollback.
+#[derive(Debug, Clone)]
+pub struct RolloutPolicy {
+    /// Canary traffic fractions walked one step per healthy evaluation
+    /// tick (e.g. `[0.05, 0.25, 0.5]`). The final fraction holds
+    /// during the bake period.
+    pub canary_fraction_ramp: Vec<f64>,
+    /// How long the canary must stay healthy at the final fraction
+    /// before promotion.
+    pub bake_ms: u64,
+    /// Gate: windowed canary error rate above this rolls back.
+    pub max_error_rate: f64,
+    /// Gate: canary windowed p99 above `stable_p99 × this` rolls back
+    /// (skipped while the stable side lacks `min_requests` of data).
+    pub max_p99_vs_stable: f64,
+    /// Gates evaluate only once the canary window holds at least this
+    /// many requests — no traffic is not evidence of health *or* harm.
+    pub min_requests: u64,
+}
+
+impl Default for RolloutPolicy {
+    fn default() -> Self {
+        RolloutPolicy {
+            canary_fraction_ramp: vec![0.05, 0.25, 0.5],
+            bake_ms: 2_000,
+            max_error_rate: 0.1,
+            max_p99_vs_stable: 3.0,
+            min_requests: 5,
+        }
+    }
+}
+
+impl RolloutPolicy {
+    /// Ramp length, treating an empty ramp as one 50% step.
+    fn steps(&self) -> usize {
+        self.canary_fraction_ramp.len().max(1)
+    }
+
+    /// Canary fraction at `step` (clamped into [0, 1]).
+    fn fraction_at(&self, step: usize) -> f64 {
+        self.canary_fraction_ramp
+            .get(step)
+            .copied()
+            .unwrap_or(0.5)
+            .clamp(0.0, 1.0)
+    }
+}
+
+/// Where a rollout currently stands.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RolloutPhase {
+    /// Canary version not yet ready on every replica; no traffic split.
+    Loading,
+    /// Serving `canary_fraction_ramp[step]` of traffic on the canary.
+    Ramping { step: usize },
+    /// Final fraction held; promotes once `bake_ms` elapses.
+    Baking { since_ns: u64 },
+    /// Terminal: the canary became the sole primary.
+    Promoted,
+    /// Terminal: a health gate fired; the stable version was restored.
+    RolledBack { reason: String },
+}
+
+/// What the fleet must do after an evaluation tick.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RolloutAction {
+    /// Install (or retune) the canary traffic split at `fraction`.
+    SetSplit { fraction: f64 },
+    /// Promote the canary to sole primary (controller verb + labels).
+    Promote,
+    /// Demote the canary, restore the stable primary, record `reason`.
+    Rollback { reason: String },
+}
+
+/// One model's in-flight rollout.
+#[derive(Debug, Clone)]
+pub struct RolloutState {
+    pub model: String,
+    pub stable: u64,
+    pub canary: u64,
+    pub policy: RolloutPolicy,
+    pub phase: RolloutPhase,
+}
+
+/// One evaluation tick, as a pure function: current state + clock +
+/// scraped health in, next phase + actions out. Gates are checked in
+/// every non-terminal phase that serves canary traffic; a breach wins
+/// over any ramp/bake progress in the same tick.
+pub fn evaluate(
+    state: &RolloutState,
+    now_ns: u64,
+    canary_ready: bool,
+    canary: &VersionHealth,
+    stable: &VersionHealth,
+) -> (RolloutPhase, Vec<RolloutAction>) {
+    let policy = &state.policy;
+    // Health gates: only with enough canary traffic in the window.
+    let breach = if canary.requests >= policy.min_requests {
+        if canary.error_rate() > policy.max_error_rate {
+            Some(format!(
+                "canary v{} error-rate {:.2} > {:.2} (window: {}/{} failed)",
+                state.canary,
+                canary.error_rate(),
+                policy.max_error_rate,
+                canary.errors,
+                canary.requests,
+            ))
+        } else if stable.requests >= policy.min_requests
+            && stable.p99_ns > 0.0
+            && canary.p99_ns > stable.p99_ns * policy.max_p99_vs_stable
+        {
+            Some(format!(
+                "canary v{} p99 {:.1}ms > {:.1}× stable p99 {:.1}ms",
+                state.canary,
+                canary.p99_ns / 1e6,
+                policy.max_p99_vs_stable,
+                stable.p99_ns / 1e6,
+            ))
+        } else {
+            None
+        }
+    } else {
+        None
+    };
+
+    match &state.phase {
+        RolloutPhase::Promoted | RolloutPhase::RolledBack { .. } => {
+            (state.phase.clone(), vec![])
+        }
+        RolloutPhase::Loading => {
+            if !canary_ready {
+                return (RolloutPhase::Loading, vec![]);
+            }
+            // First traffic: open the split at the first ramp step.
+            (
+                RolloutPhase::Ramping { step: 0 },
+                vec![RolloutAction::SetSplit { fraction: policy.fraction_at(0) }],
+            )
+        }
+        RolloutPhase::Ramping { step } => {
+            if let Some(reason) = breach {
+                return (
+                    RolloutPhase::RolledBack { reason: reason.clone() },
+                    vec![RolloutAction::Rollback { reason }],
+                );
+            }
+            // Advance only on evidence: a tick with too little canary
+            // traffic holds the current step rather than ramping blind.
+            if canary.requests < policy.min_requests {
+                return (RolloutPhase::Ramping { step: *step }, vec![]);
+            }
+            let next = step + 1;
+            if next < policy.steps() {
+                (
+                    RolloutPhase::Ramping { step: next },
+                    vec![RolloutAction::SetSplit { fraction: policy.fraction_at(next) }],
+                )
+            } else {
+                // Final fraction stays installed while baking.
+                (RolloutPhase::Baking { since_ns: now_ns }, vec![])
+            }
+        }
+        RolloutPhase::Baking { since_ns } => {
+            if let Some(reason) = breach {
+                return (
+                    RolloutPhase::RolledBack { reason: reason.clone() },
+                    vec![RolloutAction::Rollback { reason }],
+                );
+            }
+            if now_ns >= since_ns + state.policy.bake_ms * 1_000_000 {
+                (RolloutPhase::Promoted, vec![RolloutAction::Promote])
+            } else {
+                (RolloutPhase::Baking { since_ns: *since_ns }, vec![])
+            }
+        }
+    }
+}
+
+/// Per-model rollout bookkeeping. Terminal states stay queryable (the
+/// rollback reason must outlive the rollout) until the next `begin`
+/// for the same model replaces them.
+pub struct RolloutEngine {
+    clock: Arc<dyn Clock>,
+    active: Mutex<HashMap<String, RolloutState>>,
+}
+
+impl RolloutEngine {
+    pub fn new(clock: Arc<dyn Clock>) -> Self {
+        RolloutEngine { clock, active: Mutex::new(HashMap::new()) }
+    }
+
+    /// Start tracking a rollout (phase `Loading`). Replaces any prior
+    /// rollout for the model, including terminal ones.
+    pub fn begin(&self, model: &str, stable: u64, canary: u64, policy: RolloutPolicy) {
+        self.active.lock().unwrap().insert(
+            model.to_string(),
+            RolloutState {
+                model: model.to_string(),
+                stable,
+                canary,
+                policy,
+                phase: RolloutPhase::Loading,
+            },
+        );
+    }
+
+    /// Evaluate one tick for `model`; returns the actions the caller
+    /// must apply. No-op (empty) for models without an active rollout.
+    pub fn tick(
+        &self,
+        model: &str,
+        canary_ready: bool,
+        canary: &VersionHealth,
+        stable: &VersionHealth,
+    ) -> Vec<RolloutAction> {
+        let mut active = self.active.lock().unwrap();
+        let Some(state) = active.get_mut(model) else { return vec![] };
+        let (phase, actions) =
+            evaluate(state, self.clock.now_nanos(), canary_ready, canary, stable);
+        state.phase = phase;
+        actions
+    }
+
+    /// Current state of a model's rollout, if one was ever begun.
+    pub fn state(&self, model: &str) -> Option<RolloutState> {
+        self.active.lock().unwrap().get(model).cloned()
+    }
+
+    /// Models with a rollout still in a non-terminal phase.
+    pub fn in_flight(&self) -> Vec<String> {
+        let mut models: Vec<String> = self
+            .active
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, s)| {
+                !matches!(
+                    s.phase,
+                    RolloutPhase::Promoted | RolloutPhase::RolledBack { .. }
+                )
+            })
+            .map(|(m, _)| m.clone())
+            .collect();
+        models.sort();
+        models
+    }
+
+    /// Human-readable status for `SetRolloutStatus` / `GET /v1/models`.
+    pub fn status_line(&self, model: &str) -> Option<String> {
+        let active = self.active.lock().unwrap();
+        let s = active.get(model)?;
+        Some(match &s.phase {
+            RolloutPhase::Loading => {
+                format!("loading: canary v{} (stable v{})", s.canary, s.stable)
+            }
+            RolloutPhase::Ramping { step } => format!(
+                "ramping: canary v{} step {}/{} ({:.0}%)",
+                s.canary,
+                step + 1,
+                s.policy.steps(),
+                s.policy.fraction_at(*step) * 100.0
+            ),
+            RolloutPhase::Baking { .. } => format!(
+                "baking: canary v{} at {:.0}%",
+                s.canary,
+                s.policy.fraction_at(s.policy.steps() - 1) * 100.0
+            ),
+            RolloutPhase::Promoted => format!("promoted: v{}", s.canary),
+            RolloutPhase::RolledBack { reason } => {
+                format!("rolled_back: {reason} (stable v{} restored)", s.stable)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(phase: RolloutPhase) -> RolloutState {
+        RolloutState {
+            model: "m".into(),
+            stable: 1,
+            canary: 2,
+            policy: RolloutPolicy::default(),
+            phase,
+        }
+    }
+
+    fn health(requests: u64, errors: u64, p99_ns: f64) -> VersionHealth {
+        VersionHealth { requests, errors, p99_ns }
+    }
+
+    const HEALTHY: VersionHealth = VersionHealth { requests: 100, errors: 0, p99_ns: 1e6 };
+
+    #[test]
+    fn loading_waits_for_ready_then_opens_first_step() {
+        let s = state(RolloutPhase::Loading);
+        let (phase, actions) = evaluate(&s, 0, false, &HEALTHY, &HEALTHY);
+        assert_eq!(phase, RolloutPhase::Loading);
+        assert!(actions.is_empty());
+        let (phase, actions) = evaluate(&s, 0, true, &health(0, 0, 0.0), &HEALTHY);
+        assert_eq!(phase, RolloutPhase::Ramping { step: 0 });
+        assert_eq!(actions, vec![RolloutAction::SetSplit { fraction: 0.05 }]);
+    }
+
+    #[test]
+    fn ramp_advances_per_healthy_tick_then_bakes_then_promotes() {
+        let mut s = state(RolloutPhase::Ramping { step: 0 });
+        let (phase, actions) = evaluate(&s, 0, true, &HEALTHY, &HEALTHY);
+        assert_eq!(phase, RolloutPhase::Ramping { step: 1 });
+        assert_eq!(actions, vec![RolloutAction::SetSplit { fraction: 0.25 }]);
+        s.phase = phase;
+        let (phase, actions) = evaluate(&s, 0, true, &HEALTHY, &HEALTHY);
+        assert_eq!(phase, RolloutPhase::Ramping { step: 2 });
+        assert_eq!(actions, vec![RolloutAction::SetSplit { fraction: 0.5 }]);
+        s.phase = phase;
+        // Final step: healthy tick moves to baking (split stays).
+        let (phase, actions) = evaluate(&s, 7, true, &HEALTHY, &HEALTHY);
+        assert_eq!(phase, RolloutPhase::Baking { since_ns: 7 });
+        assert!(actions.is_empty());
+        s.phase = phase;
+        // Bake not yet elapsed: hold.
+        let bake_ns = s.policy.bake_ms * 1_000_000;
+        let (phase, actions) = evaluate(&s, 7 + bake_ns - 1, true, &HEALTHY, &HEALTHY);
+        assert_eq!(phase, RolloutPhase::Baking { since_ns: 7 });
+        assert!(actions.is_empty());
+        // Bake complete: promote.
+        let (phase, actions) = evaluate(&s, 7 + bake_ns, true, &HEALTHY, &HEALTHY);
+        assert_eq!(phase, RolloutPhase::Promoted);
+        assert_eq!(actions, vec![RolloutAction::Promote]);
+        // Terminal: further ticks are inert.
+        s.phase = phase;
+        let (phase, actions) = evaluate(&s, u64::MAX, true, &health(10, 10, 1e9), &HEALTHY);
+        assert_eq!(phase, RolloutPhase::Promoted);
+        assert!(actions.is_empty());
+    }
+
+    #[test]
+    fn error_rate_breach_rolls_back_from_ramp_and_bake() {
+        // 40% failures > 10% gate.
+        let sick = health(20, 8, 1e6);
+        for phase in [RolloutPhase::Ramping { step: 1 }, RolloutPhase::Baking { since_ns: 0 }] {
+            let s = state(phase);
+            let (next, actions) = evaluate(&s, 1, true, &sick, &HEALTHY);
+            match (&next, actions.as_slice()) {
+                (
+                    RolloutPhase::RolledBack { reason },
+                    [RolloutAction::Rollback { reason: r }],
+                ) => {
+                    assert_eq!(reason, r);
+                    assert!(reason.contains("error-rate"), "{reason}");
+                    assert!(reason.contains("v2"), "{reason}");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn p99_breach_rolls_back_only_with_stable_baseline() {
+        // Canary 10× slower than stable: breaches the 3× gate.
+        let slow = health(50, 0, 50e6);
+        let s = state(RolloutPhase::Baking { since_ns: 0 });
+        let (next, actions) = evaluate(&s, 1, true, &slow, &health(100, 0, 5e6));
+        assert!(matches!(next, RolloutPhase::RolledBack { .. }), "{next:?}");
+        assert_eq!(actions.len(), 1);
+        // Without a stable baseline (no stable traffic in window), the
+        // relative gate cannot fire — no false rollback.
+        let (next, actions) = evaluate(&s, 1, true, &slow, &health(0, 0, 0.0));
+        assert_eq!(next, RolloutPhase::Baking { since_ns: 0 });
+        assert!(actions.is_empty());
+    }
+
+    #[test]
+    fn too_little_canary_traffic_holds_everything() {
+        // 4 requests, all failed — still below min_requests=5: neither
+        // a rollback nor a ramp advance may happen on that evidence.
+        let sparse = health(4, 4, 1e9);
+        let s = state(RolloutPhase::Ramping { step: 1 });
+        let (next, actions) = evaluate(&s, 1, true, &sparse, &HEALTHY);
+        assert_eq!(next, RolloutPhase::Ramping { step: 1 });
+        assert!(actions.is_empty());
+    }
+
+    #[test]
+    fn engine_tracks_state_and_status_lines() {
+        let clock = crate::util::clock::ManualClock::new();
+        let engine = RolloutEngine::new(clock.clone());
+        assert!(engine.tick("m", true, &HEALTHY, &HEALTHY).is_empty());
+        assert_eq!(engine.status_line("m"), None);
+
+        engine.begin("m", 1, 2, RolloutPolicy::default());
+        assert_eq!(engine.in_flight(), vec!["m".to_string()]);
+        assert!(engine.status_line("m").unwrap().starts_with("loading"));
+        // Ready → first split.
+        let actions = engine.tick("m", true, &health(0, 0, 0.0), &HEALTHY);
+        assert_eq!(actions, vec![RolloutAction::SetSplit { fraction: 0.05 }]);
+        assert!(engine.status_line("m").unwrap().contains("step 1/3"));
+        // Sick canary → rollback action, terminal state keeps reason.
+        let actions = engine.tick("m", true, &health(50, 40, 1e6), &HEALTHY);
+        assert!(matches!(actions.as_slice(), [RolloutAction::Rollback { .. }]));
+        let line = engine.status_line("m").unwrap();
+        assert!(line.starts_with("rolled_back:"), "{line}");
+        assert!(line.contains("stable v1 restored"), "{line}");
+        assert!(engine.in_flight().is_empty());
+        // Terminal states are inert but queryable until the next begin.
+        assert!(engine.tick("m", true, &HEALTHY, &HEALTHY).is_empty());
+        engine.begin("m", 1, 3, RolloutPolicy::default());
+        assert!(engine.status_line("m").unwrap().contains("v3"));
+    }
+}

@@ -2,20 +2,210 @@
 //! job holds the model, "using hedged backup requests to mitigate
 //! latency spikes from transient server issues or inter-request or
 //! -model interference".
+//!
+//! Two robustness layers sit between the routing table and the wire:
+//!
+//! * **Per-replica circuit breakers** — a replica that keeps failing
+//!   transport-level is ejected (closed → open) so neither primary nor
+//!   hedged attempts burn budget on it; after `open_ms` a single
+//!   half-open probe decides readmission. Transitions surface as
+//!   `router.breaker.*` counters.
+//! * **Canary traffic splits** — during a rollout the fleet pins a
+//!   deterministic fraction of *unpinned* data-plane requests to the
+//!   canary version and the rest to the stable version, so health is
+//!   measured under real traffic while the blast radius stays bounded.
 
+use crate::base::error::ErrorKind;
 use crate::rpc::hedged::HedgedClient;
 use crate::rpc::proto::{Request, Response};
-use crate::util::metrics::Registry;
+use crate::util::clock::{Clock, RealClock};
+use crate::util::metrics::{Registry, WindowedCounter};
 use crate::util::rcu::Rcu;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Routing table: model → replica addresses (primary rotation applied
 /// per request).
 type Table = HashMap<String, Vec<String>>;
+
+/// Per-replica circuit-breaker thresholds.
+#[derive(Debug, Clone)]
+pub struct BreakerConfig {
+    /// Open after this many consecutive failures (trips fast on a
+    /// hard-dead replica regardless of rate).
+    pub consecutive_failures: u32,
+    /// Open when the windowed failure rate reaches this fraction …
+    pub error_rate: f64,
+    /// … but only once the window holds at least this many attempts
+    /// (one unlucky request must not eject a replica).
+    pub min_requests: u64,
+    /// How long an open breaker rejects before allowing a probe.
+    pub open_ms: u64,
+    /// Rotation interval of the per-replica attempt/failure windows.
+    pub window_ms: u64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            consecutive_failures: 5,
+            error_rate: 0.5,
+            min_requests: 10,
+            open_ms: 2_000,
+            window_ms: 2_000,
+        }
+    }
+}
+
+/// Breaker state machine. `HalfOpen` tracks a probe deadline rather
+/// than a boolean so a probe whose attempt never reports (lost to a
+/// faster hedge) cannot wedge the breaker shut forever.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum BreakerState {
+    Closed,
+    Open { until_ns: u64 },
+    HalfOpen { probe_until_ns: u64 },
+}
+
+enum Admit {
+    /// Closed: route freely.
+    Yes,
+    /// Half-open: admit exactly this one attempt as a probe.
+    Probe,
+    /// Open: skip this replica.
+    No,
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    consecutive: u32,
+}
+
+/// One replica's breaker: windowed attempt/failure counts plus the
+/// state machine.
+struct Breaker {
+    cfg: BreakerConfig,
+    clock: Arc<dyn Clock>,
+    requests: WindowedCounter,
+    failures: WindowedCounter,
+    inner: Mutex<BreakerInner>,
+}
+
+/// What a completed attempt did to the breaker (for metrics).
+#[derive(Debug, PartialEq)]
+enum Transition {
+    None,
+    Opened,
+    Reopened,
+    Closed,
+}
+
+impl Breaker {
+    fn new(cfg: BreakerConfig, clock: Arc<dyn Clock>) -> Self {
+        let window = Duration::from_millis(cfg.window_ms);
+        Breaker {
+            requests: WindowedCounter::new(Arc::clone(&clock), window),
+            failures: WindowedCounter::new(Arc::clone(&clock), window),
+            cfg,
+            clock,
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                consecutive: 0,
+            }),
+        }
+    }
+
+    /// May this replica receive the next attempt?
+    fn admit(&self) -> Admit {
+        let mut g = self.inner.lock().unwrap();
+        let now = self.clock.now_nanos();
+        match g.state {
+            BreakerState::Closed => Admit::Yes,
+            BreakerState::Open { until_ns } => {
+                if now >= until_ns {
+                    g.state = BreakerState::HalfOpen {
+                        probe_until_ns: now + self.cfg.open_ms * 1_000_000,
+                    };
+                    Admit::Probe
+                } else {
+                    Admit::No
+                }
+            }
+            BreakerState::HalfOpen { probe_until_ns } => {
+                if now >= probe_until_ns {
+                    // The previous probe never reported; allow another.
+                    g.state = BreakerState::HalfOpen {
+                        probe_until_ns: now + self.cfg.open_ms * 1_000_000,
+                    };
+                    Admit::Probe
+                } else {
+                    Admit::No
+                }
+            }
+        }
+    }
+
+    /// Record a completed attempt (`ok` = not a replica-side failure).
+    fn on_result(&self, ok: bool) -> Transition {
+        self.requests.inc();
+        if !ok {
+            self.failures.inc();
+        }
+        let mut g = self.inner.lock().unwrap();
+        if ok {
+            g.consecutive = 0;
+            if matches!(g.state, BreakerState::HalfOpen { .. }) {
+                g.state = BreakerState::Closed;
+                return Transition::Closed;
+            }
+            return Transition::None;
+        }
+        let until_ns = self.clock.now_nanos() + self.cfg.open_ms * 1_000_000;
+        match g.state {
+            BreakerState::HalfOpen { .. } => {
+                // Failed probe: straight back to open.
+                g.consecutive = g.consecutive.saturating_add(1);
+                g.state = BreakerState::Open { until_ns };
+                Transition::Reopened
+            }
+            BreakerState::Closed => {
+                g.consecutive = g.consecutive.saturating_add(1);
+                let reqs = self.requests.sum();
+                let rate_tripped = reqs >= self.cfg.min_requests
+                    && self.failures.sum() as f64 / reqs as f64 >= self.cfg.error_rate;
+                if g.consecutive >= self.cfg.consecutive_failures || rate_tripped {
+                    g.state = BreakerState::Open { until_ns };
+                    Transition::Opened
+                } else {
+                    Transition::None
+                }
+            }
+            BreakerState::Open { .. } => Transition::None,
+        }
+    }
+
+    fn state_name(&self) -> &'static str {
+        match self.inner.lock().unwrap().state {
+            BreakerState::Closed => "closed",
+            BreakerState::Open { .. } => "open",
+            BreakerState::HalfOpen { .. } => "half_open",
+        }
+    }
+}
+
+/// An active canary traffic split for one model.
+struct Split {
+    stable: u64,
+    canary: u64,
+    /// Fraction of unpinned data-plane requests sent to the canary.
+    fraction: f64,
+    /// Bresenham sequence: request `n` goes canary iff
+    /// `floor((n+1)·f) > floor(n·f)` — exact proportions, no RNG.
+    seq: AtomicU64,
+}
 
 pub struct Router {
     /// RCU: the table is read per request, replaced by the Synchronizer.
@@ -23,10 +213,24 @@ pub struct Router {
     hedged: HedgedClient,
     rr: AtomicUsize,
     pub registry: Arc<Registry>,
+    breaker_cfg: BreakerConfig,
+    clock: Arc<dyn Clock>,
+    breakers: Mutex<HashMap<String, Arc<Breaker>>>,
+    splits: Mutex<HashMap<String, Arc<Split>>>,
 }
 
 impl Router {
     pub fn new(hedge_delay: Duration) -> Arc<Self> {
+        Self::with_config(hedge_delay, BreakerConfig::default(), RealClock::shared())
+    }
+
+    /// Full-control constructor (tests pass a [`crate::util::clock::ManualClock`]
+    /// so open→half-open transitions don't need wall-clock sleeps).
+    pub fn with_config(
+        hedge_delay: Duration,
+        breaker_cfg: BreakerConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Arc<Self> {
         Arc::new(Router {
             table: Rcu::new(Table::new()),
             hedged: HedgedClient::new(
@@ -35,12 +239,34 @@ impl Router {
             ),
             rr: AtomicUsize::new(0),
             registry: Registry::new(),
+            breaker_cfg,
+            clock,
+            breakers: Mutex::new(HashMap::new()),
+            splits: Mutex::new(HashMap::new()),
         })
     }
 
     /// Install a new routing table (from [`super::synchronizer`]).
     pub fn update_table(&self, entries: Vec<(String, Vec<String>)>) {
         self.table.update(entries.into_iter().collect());
+    }
+
+    /// Start (or retune) a canary split: `fraction` of unpinned
+    /// data-plane requests for `model` pin to `canary`, the rest to
+    /// `stable`. Both sides pin — otherwise unlabeled traffic would
+    /// resolve `Latest` and land 100% on the canary once it loads.
+    pub fn set_split(&self, model: &str, stable: u64, canary: u64, fraction: f64) {
+        let fraction = fraction.clamp(0.0, 1.0);
+        self.splits.lock().unwrap().insert(
+            model.to_string(),
+            Arc::new(Split { stable, canary, fraction, seq: AtomicU64::new(0) }),
+        );
+    }
+
+    /// End a split (promotion or rollback): traffic flows unpinned
+    /// again, resolving whatever the replicas now consider latest.
+    pub fn clear_split(&self, model: &str) {
+        self.splits.lock().unwrap().remove(model);
     }
 
     /// Replicas for a model, rotated so load spreads round-robin.
@@ -53,6 +279,95 @@ impl Router {
         let n = replicas.len();
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
         Ok((0..n).map(|i| replicas[(start + i) % n].clone()).collect())
+    }
+
+    fn breaker_for(&self, addr: &str) -> Arc<Breaker> {
+        let mut map = self.breakers.lock().unwrap();
+        Arc::clone(map.entry(addr.to_string()).or_insert_with(|| {
+            Arc::new(Breaker::new(self.breaker_cfg.clone(), Arc::clone(&self.clock)))
+        }))
+    }
+
+    /// Current breaker state of a replica, if it has ever been routed
+    /// to ("closed" / "open" / "half_open").
+    pub fn breaker_state(&self, addr: &str) -> Option<&'static str> {
+        self.breakers.lock().unwrap().get(addr).map(|b| b.state_name())
+    }
+
+    /// Breaker-filtered attempt order: probes first (a probe must
+    /// actually reach the wire, so it rides as primary), closed
+    /// replicas next, open ones skipped. All-ejected fails open to the
+    /// full rotation — degraded attempts beat a guaranteed error.
+    fn admit_replicas(&self, rotated: Vec<String>) -> Vec<String> {
+        let mut probes = Vec::new();
+        let mut closed = Vec::new();
+        let mut skipped = 0u64;
+        for addr in &rotated {
+            match self.breaker_for(addr).admit() {
+                Admit::Probe => probes.push(addr.clone()),
+                Admit::Yes => closed.push(addr.clone()),
+                Admit::No => skipped += 1,
+            }
+        }
+        if skipped > 0 {
+            self.registry.counter("router.breaker.skipped").add(skipped);
+        }
+        probes.extend(closed);
+        if probes.is_empty() {
+            self.registry.counter("router.breaker.failopen").inc();
+            return rotated;
+        }
+        probes
+    }
+
+    fn observe_attempt(&self, addr: &str, result: &Result<Response>) {
+        // Replica-side failure = transport error or an Internal the
+        // server itself raised. Client mistakes (InvalidArgument …),
+        // shedding (Unavailable), and deadline expiry never trip a
+        // breaker — they say nothing about *this replica's* health.
+        let ok = match result {
+            Ok(_) => true,
+            Err(e) => ErrorKind::of(e) != ErrorKind::Internal,
+        };
+        match self.breaker_for(addr).on_result(ok) {
+            Transition::None => {}
+            Transition::Opened => self.registry.counter("router.breaker.open").inc(),
+            Transition::Reopened => self.registry.counter("router.breaker.reopen").inc(),
+            Transition::Closed => self.registry.counter("router.breaker.close").inc(),
+        }
+    }
+
+    /// Apply the model's canary split, if any: an *unpinned, unlabeled*
+    /// data-plane request is rewritten to pin either the canary or the
+    /// stable version (deadline envelope preserved). Pinned or labeled
+    /// requests pass through untouched — the caller chose a side.
+    fn apply_split(&self, model: &str, req: &Request) -> Option<Request> {
+        let split = Arc::clone(self.splits.lock().unwrap().get(model)?);
+        // Only rewrite when the innermost request is unpinned.
+        let mut inner = req;
+        while let Request::WithDeadline { inner: i, .. } = inner {
+            inner = i;
+        }
+        let unpinned = match inner {
+            Request::Predict { spec, .. }
+            | Request::Classify { spec, .. }
+            | Request::Regress { spec, .. }
+            | Request::MultiInference { spec, .. } => {
+                spec.version.is_none() && spec.label.is_none()
+            }
+            _ => false,
+        };
+        if !unpinned {
+            return None;
+        }
+        let n = split.seq.fetch_add(1, Ordering::Relaxed);
+        let to_canary = ((n + 1) as f64 * split.fraction).floor()
+            > (n as f64 * split.fraction).floor();
+        let version = if to_canary { split.canary } else { split.stable };
+        self.registry
+            .counter(if to_canary { "router.split.canary" } else { "router.split.stable" })
+            .inc();
+        Some(pin_version(req, version))
     }
 
     /// Route one inference request. The model name is extracted from
@@ -75,8 +390,13 @@ impl Router {
             _ => return Err(anyhow!("router only forwards inference requests")),
         };
         let t0 = std::time::Instant::now();
-        let replicas = self.replicas_for(&model)?;
-        let result = self.hedged.call(&replicas, req);
+        let replicas = self.admit_replicas(self.replicas_for(&model)?);
+        let forwarded = self.apply_split(&model, req);
+        let result = self.hedged.call_observed(
+            &replicas,
+            forwarded.as_ref().unwrap_or(req),
+            &mut |addr, r| self.observe_attempt(addr, r),
+        );
         self.registry.counter("router.requests").inc();
         if result.is_err() {
             self.registry.counter("router.errors").inc();
@@ -106,11 +426,53 @@ impl Router {
     }
 }
 
+/// Rebuild `req` with its data-plane spec pinned to `version`,
+/// recursing through deadline envelopes so the budget survives the
+/// rewrite. Non-data-plane requests clone through unchanged.
+fn pin_version(req: &Request, version: u64) -> Request {
+    match req {
+        Request::WithDeadline { deadline_ms, inner } => Request::WithDeadline {
+            deadline_ms: *deadline_ms,
+            inner: Box::new(pin_version(inner, version)),
+        },
+        Request::Predict { spec, signature, inputs } => Request::Predict {
+            spec: pinned(spec, version),
+            signature: signature.clone(),
+            inputs: inputs.clone(),
+        },
+        Request::Classify { spec, signature, examples } => Request::Classify {
+            spec: pinned(spec, version),
+            signature: signature.clone(),
+            examples: examples.clone(),
+        },
+        Request::Regress { spec, signature, examples } => Request::Regress {
+            spec: pinned(spec, version),
+            signature: signature.clone(),
+            examples: examples.clone(),
+        },
+        Request::MultiInference { spec, tasks, examples } => Request::MultiInference {
+            spec: pinned(spec, version),
+            tasks: tasks.clone(),
+            examples: examples.clone(),
+        },
+        other => other.clone(),
+    }
+}
+
+fn pinned(spec: &crate::inference::ModelSpec, version: u64) -> crate::inference::ModelSpec {
+    crate::inference::ModelSpec {
+        name: spec.name.clone(),
+        version: Some(version),
+        label: None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::rpc::server::RpcServer;
-    use std::sync::atomic::AtomicU64;
+    use crate::util::clock::ManualClock;
+    use std::sync::atomic::{AtomicBool, AtomicU64};
 
     fn counting_job() -> (Arc<RpcServer>, Arc<AtomicU64>) {
         let count = Arc::new(AtomicU64::new(0));
@@ -215,5 +577,225 @@ mod tests {
         assert!(router.route(&regress_req()).is_ok());
         router.update_table(vec![]); // model withdrawn
         assert!(router.route(&regress_req()).is_err());
+    }
+
+    // ---- breaker state machine (no sockets) ----
+
+    #[test]
+    fn breaker_trips_on_consecutive_failures_then_recovers() {
+        let clock = Arc::new(ManualClock::new());
+        let cfg = BreakerConfig { consecutive_failures: 3, ..Default::default() };
+        let b = Breaker::new(cfg, clock.clone());
+        assert!(matches!(b.admit(), Admit::Yes));
+        assert_eq!(b.on_result(false), Transition::None);
+        assert_eq!(b.on_result(false), Transition::None);
+        assert_eq!(b.on_result(false), Transition::Opened);
+        assert!(matches!(b.admit(), Admit::No));
+        // Still open before the cooldown elapses.
+        clock.advance(Duration::from_millis(1_999));
+        assert!(matches!(b.admit(), Admit::No));
+        clock.advance(Duration::from_millis(1));
+        // Half-open: exactly one probe admitted.
+        assert!(matches!(b.admit(), Admit::Probe));
+        assert!(matches!(b.admit(), Admit::No));
+        assert_eq!(b.on_result(true), Transition::Closed);
+        assert!(matches!(b.admit(), Admit::Yes));
+    }
+
+    #[test]
+    fn breaker_trips_on_windowed_error_rate() {
+        let clock = Arc::new(ManualClock::new());
+        // Rate gate only: consecutive threshold out of reach.
+        let cfg = BreakerConfig {
+            consecutive_failures: u32::MAX,
+            error_rate: 0.5,
+            min_requests: 10,
+            ..Default::default()
+        };
+        let b = Breaker::new(cfg, clock.clone());
+        // Alternate ok/fail: rate 0.5, trips once min_requests hit.
+        let mut opened = false;
+        for i in 0..10 {
+            let t = b.on_result(i % 2 == 0);
+            opened |= t == Transition::Opened;
+        }
+        assert!(opened, "breaker should trip at 50% failure over >=10 attempts");
+        // A failed probe goes straight back to open.
+        clock.advance(Duration::from_millis(2_000));
+        assert!(matches!(b.admit(), Admit::Probe));
+        assert_eq!(b.on_result(false), Transition::Reopened);
+        assert!(matches!(b.admit(), Admit::No));
+    }
+
+    #[test]
+    fn breaker_rate_gate_forgets_old_windows() {
+        let clock = Arc::new(ManualClock::new());
+        let cfg = BreakerConfig {
+            consecutive_failures: u32::MAX,
+            error_rate: 0.5,
+            min_requests: 10,
+            window_ms: 1_000,
+            ..Default::default()
+        };
+        let b = Breaker::new(cfg, clock.clone());
+        // 9 failures — under min_requests, stays closed.
+        for _ in 0..9 {
+            assert_eq!(b.on_result(false), Transition::None);
+        }
+        // Rotate far past both buckets: old failures age out.
+        clock.advance(Duration::from_secs(10));
+        // Healthy traffic plus one failure: rate 1/10 < 0.5.
+        for _ in 0..9 {
+            b.on_result(true);
+        }
+        assert_eq!(b.on_result(false), Transition::None);
+        assert!(matches!(b.admit(), Admit::Yes));
+    }
+
+    // ---- breaker wired into routing (real sockets) ----
+
+    /// Server whose handler fails with Internal while `fail` is set.
+    fn flaky_job(fail: Arc<AtomicBool>) -> (Arc<RpcServer>, Arc<AtomicU64>) {
+        let count = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&count);
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(move |req| {
+                c.fetch_add(1, Ordering::SeqCst);
+                if fail.load(Ordering::SeqCst) {
+                    return Response::Error {
+                        kind: crate::base::error::ErrorKind::Internal,
+                        message: "injected".into(),
+                    };
+                }
+                match req {
+                    Request::Regress { .. } | Request::WithDeadline { .. } => {
+                        Response::Regress { model_version: 1, values: vec![0.0] }
+                    }
+                    _ => Response::Error {
+                        kind: crate::base::error::ErrorKind::Internal,
+                        message: "no".into(),
+                    },
+                }
+            }),
+        )
+        .unwrap();
+        (server, count)
+    }
+
+    #[test]
+    fn routing_ejects_failing_replica_then_readmits() {
+        let clock = Arc::new(ManualClock::new());
+        let fail = Arc::new(AtomicBool::new(true));
+        let (bad, bad_count) = flaky_job(Arc::clone(&fail));
+        let (good, _good_count) = counting_job();
+        let cfg = BreakerConfig { consecutive_failures: 3, ..Default::default() };
+        let router = Router::with_config(Duration::from_millis(200), cfg, clock.clone());
+        router.update_table(vec![(
+            "m".into(),
+            vec![bad.addr().to_string(), good.addr().to_string()],
+        )]);
+        // Every request succeeds (failover covers the bad replica);
+        // after 3 completed failures the bad replica's breaker opens.
+        for _ in 0..8 {
+            router.route(&regress_req()).unwrap();
+        }
+        assert_eq!(router.breaker_state(&bad.addr().to_string()), Some("open"));
+        let open = router.registry.counter("router.breaker.open").get();
+        assert!(open >= 1, "open transitions: {open}");
+        // While open, the bad replica receives no traffic at all.
+        let before = bad_count.load(Ordering::SeqCst);
+        for _ in 0..10 {
+            router.route(&regress_req()).unwrap();
+        }
+        assert_eq!(bad_count.load(Ordering::SeqCst), before, "ejected replica was routed to");
+        assert!(router.registry.counter("router.breaker.skipped").get() >= 10);
+        // Heal the replica, expire the cooldown: one probe readmits it.
+        fail.store(false, Ordering::SeqCst);
+        clock.advance(Duration::from_millis(2_000));
+        for _ in 0..4 {
+            router.route(&regress_req()).unwrap();
+        }
+        assert_eq!(router.breaker_state(&bad.addr().to_string()), Some("closed"));
+        assert!(router.registry.counter("router.breaker.close").get() >= 1);
+        assert!(bad_count.load(Ordering::SeqCst) > before, "healed replica still ejected");
+    }
+
+    // ---- canary splits ----
+
+    /// Job that tallies which pinned version each regress carries.
+    fn version_tally_job() -> (Arc<RpcServer>, Arc<Mutex<HashMap<Option<u64>, u64>>>) {
+        let tally: Arc<Mutex<HashMap<Option<u64>, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+        let t = Arc::clone(&tally);
+        let server = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(move |req| {
+                let mut r = &req;
+                while let Request::WithDeadline { inner, .. } = r {
+                    r = inner;
+                }
+                match r {
+                    Request::Regress { spec, .. } => {
+                        *t.lock().unwrap().entry(spec.version).or_insert(0) += 1;
+                        Response::Regress {
+                            model_version: spec.version.unwrap_or(9),
+                            values: vec![0.0],
+                        }
+                    }
+                    _ => Response::Error {
+                        kind: crate::base::error::ErrorKind::Internal,
+                        message: "no".into(),
+                    },
+                }
+            }),
+        )
+        .unwrap();
+        (server, tally)
+    }
+
+    #[test]
+    fn split_pins_exact_canary_fraction() {
+        let (job, tally) = version_tally_job();
+        let router = Router::new(Duration::from_millis(200));
+        router.update_table(vec![("m".into(), vec![job.addr().to_string()])]);
+        router.set_split("m", 1, 2, 0.25);
+        for _ in 0..40 {
+            router.route(&regress_req()).unwrap();
+        }
+        let t = tally.lock().unwrap().clone();
+        // Bresenham: exactly 25% canary, 75% stable, nothing unpinned.
+        assert_eq!(t.get(&Some(2)), Some(&10), "{t:?}");
+        assert_eq!(t.get(&Some(1)), Some(&30), "{t:?}");
+        assert_eq!(t.get(&None), None, "{t:?}");
+        assert_eq!(router.registry.counter("router.split.canary").get(), 10);
+        assert_eq!(router.registry.counter("router.split.stable").get(), 30);
+        // Clearing the split stops the rewrite.
+        router.clear_split("m");
+        router.route(&regress_req()).unwrap();
+        assert_eq!(*tally.lock().unwrap().get(&None).unwrap(), 1);
+    }
+
+    #[test]
+    fn split_leaves_pinned_and_labeled_requests_alone() {
+        let (job, tally) = version_tally_job();
+        let router = Router::new(Duration::from_millis(200));
+        router.update_table(vec![("m".into(), vec![job.addr().to_string()])]);
+        router.set_split("m", 1, 2, 1.0); // everything unpinned → canary
+        // An explicitly pinned request keeps its version.
+        let pinned_req = Request::Regress {
+            spec: crate::inference::ModelSpec {
+                name: "m".into(),
+                version: Some(7),
+                label: None,
+            },
+            signature: String::new(),
+            examples: vec![crate::inference::example::Example::new()],
+        };
+        router.route(&pinned_req).unwrap();
+        assert_eq!(*tally.lock().unwrap().get(&Some(7)).unwrap(), 1);
+        // The deadline envelope survives the rewrite (the tally job
+        // unwraps it and sees the pinned canary version).
+        router.route_with_deadline(&regress_req(), 5_000).unwrap();
+        assert_eq!(*tally.lock().unwrap().get(&Some(2)).unwrap(), 1);
     }
 }

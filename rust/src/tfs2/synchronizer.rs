@@ -50,10 +50,38 @@ pub struct JobLoad {
     /// Sum of `batch.*.lane_depth` across replicas: work sitting in
     /// batching lanes right now, the primary scaling signal.
     pub lane_depth: f64,
-    /// Worst `batch.*.queue_delay_ns.p99` across replicas.
+    /// Worst *cumulative* `batch.*.queue_delay_ns.p99` across replicas
+    /// (since-boot distribution; kept for dashboards and `/metrics`).
     pub queue_delay_p99_ns: f64,
+    /// Worst *windowed* `batch.*.queue_delay_ns.window.p99` across
+    /// replicas — recent queue pressure, what SLO-breach scaling keys
+    /// on (a long-healed spike must not pin the fleet scaled up).
+    pub queue_delay_window_p99_ns: f64,
     /// Requests shed by admission control since the previous scrape.
     pub shed_delta: f64,
+}
+
+/// Windowed health of one (model, version) aggregated across every
+/// replica serving it: what rollout gates evaluate each tick.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct VersionHealth {
+    /// Requests observed in the current window (summed over replicas).
+    pub requests: u64,
+    /// Server-side failures (Internal / DeadlineExceeded) in window.
+    pub errors: u64,
+    /// Worst windowed latency p99 across replicas, nanoseconds.
+    pub p99_ns: f64,
+}
+
+impl VersionHealth {
+    /// Windowed error rate; 0 when no traffic was observed.
+    pub fn error_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.errors as f64 / self.requests as f64
+        }
+    }
 }
 
 impl Synchronizer {
@@ -94,24 +122,36 @@ impl Synchronizer {
                     job_unreachable = true;
                     continue;
                 }
-                // Poll status: a model counts as loaded on a replica
-                // when every desired version reports ready there.
+                // Poll status. A replica enters the *routing table* as
+                // soon as ANY desired version is ready — a canary that
+                // is still loading must not eject the stable version
+                // from routing (hedged failover covers the rare
+                // partially-loaded replica). `report.ready` keeps the
+                // stricter all-versions-ready meaning reconcile loops
+                // wait on.
                 for model in &job.models {
                     let status = self
                         .pool
                         .call(addr, &Request::ModelStatus { model: model.name.clone() });
                     if let Ok(Response::ModelStatus { versions: states }) = status {
-                        let all_ready = model.versions.iter().all(|v| {
+                        let ready_of = |v: &u64| {
                             states.iter().any(|(sv, st)| sv == v && st == "ready")
-                        });
-                        if all_ready && !model.versions.is_empty() {
+                        };
+                        let any_ready = model.versions.iter().any(ready_of);
+                        let all_ready = model.versions.iter().all(ready_of);
+                        if any_ready {
                             loaded.push((model.name.clone(), addr.clone()));
-                            report.ready += 1;
                             // Labels attach only to serving versions,
-                            // so they fan out after the ready check; a
+                            // so they fan out once those are ready; a
                             // replica that just (re)started re-learns
-                            // its canary/stable mappings here.
+                            // its canary/stable mappings here. Labels
+                            // naming a still-loading version are
+                            // rejected replica-side and retried next
+                            // pass.
                             self.push_labels(&job.job, addr, model);
+                        }
+                        if all_ready && !model.versions.is_empty() {
+                            report.ready += 1;
                         }
                     }
                 }
@@ -192,6 +232,11 @@ impl Synchronizer {
                     } else if name.starts_with("batch.") && name.ends_with(".queue_delay_ns.p99")
                     {
                         load.queue_delay_p99_ns = load.queue_delay_p99_ns.max(*value);
+                    } else if name.starts_with("batch.")
+                        && name.ends_with(".queue_delay_ns.window.p99")
+                    {
+                        load.queue_delay_window_p99_ns =
+                            load.queue_delay_window_p99_ns.max(*value);
                     } else if name == "admission.shed" {
                         let prev = self
                             .last_shed
@@ -204,6 +249,56 @@ impl Synchronizer {
                 }
             }
             out.insert(job.job.clone(), load);
+        }
+        out
+    }
+
+    /// Scrape the per-(model, version) windowed health series
+    /// (`health.{model}.v{version}.*.window`) from every replica and
+    /// aggregate: requests/errors summed, latency p99 maxed (the worst
+    /// replica is the one a rollout gate must respect). Unreachable
+    /// replicas contribute nothing.
+    pub fn scrape_health(
+        &self,
+        desired: &[JobAssignment],
+    ) -> HashMap<(String, u64), VersionHealth> {
+        let mut out: HashMap<(String, u64), VersionHealth> = HashMap::new();
+        for job in desired {
+            for addr in job.replicas.iter().filter(|a| !a.is_empty()) {
+                let samples = match self.pool.call(addr, &Request::Metrics) {
+                    Ok(Response::Metrics { samples }) => samples,
+                    _ => continue,
+                };
+                for (name, value) in &samples {
+                    let Some(rest) = name.strip_prefix("health.") else { continue };
+                    enum Field {
+                        Requests,
+                        Errors,
+                        P99,
+                    }
+                    let (base, field) = if let Some(b) = rest.strip_suffix(".requests.window")
+                    {
+                        (b, Field::Requests)
+                    } else if let Some(b) = rest.strip_suffix(".errors.window") {
+                        (b, Field::Errors)
+                    } else if let Some(b) = rest.strip_suffix(".latency_ns.window.p99") {
+                        (b, Field::P99)
+                    } else {
+                        continue;
+                    };
+                    // `health.{model}.v{version}.…`; model names may
+                    // themselves contain dots, so split on the *last*
+                    // ".v" whose tail parses as a number.
+                    let Some((model, ver)) = base.rsplit_once(".v") else { continue };
+                    let Ok(version) = ver.parse::<u64>() else { continue };
+                    let h = out.entry((model.to_string(), version)).or_default();
+                    match field {
+                        Field::Requests => h.requests += *value as u64,
+                        Field::Errors => h.errors += *value as u64,
+                        Field::P99 => h.p99_ns = h.p99_ns.max(*value),
+                    }
+                }
+            }
         }
         out
     }
@@ -269,6 +364,13 @@ mod tests {
                         ("admission.shed".into(), shed),
                         ("batch.m.lane_depth".into(), 4.0),
                         ("batch.m.queue_delay_ns.p99".into(), 7.5e6),
+                        ("batch.m.queue_delay_ns.window.p99".into(), 2.5e6),
+                        ("health.m.v1.errors.window".into(), 1.0),
+                        ("health.m.v1.latency_ns.window.p99".into(), 3.0e6),
+                        ("health.m.v1.requests.window".into(), 20.0),
+                        ("health.m.v2.errors.window".into(), 9.0),
+                        ("health.m.v2.latency_ns.window.p99".into(), 8.0e6),
+                        ("health.m.v2.requests.window".into(), 10.0),
                     ],
                 },
                 _ => Response::Error {
@@ -347,6 +449,44 @@ mod tests {
     }
 
     #[test]
+    fn partially_ready_replica_stays_routable_but_not_ready() {
+        // Stable v1 serving, canary v2 still loading: the replica must
+        // stay in the routing table (stable traffic keeps flowing and
+        // the labels keep fanning out), while `report.ready` — the
+        // all-versions bar reconcile loops wait on — stays 0.
+        let labels = Arc::new(Mutex::new(Vec::new()));
+        let labels2 = Arc::clone(&labels);
+        let job = RpcServer::start(
+            "127.0.0.1:0",
+            Arc::new(move |req| match req {
+                Request::SetAspired { .. } => Response::Ack,
+                Request::SetVersionLabel { label, version, .. } => {
+                    labels2.lock().unwrap().push((label, version));
+                    Response::Ack
+                }
+                Request::ModelStatus { .. } => Response::ModelStatus {
+                    versions: vec![(1, "ready".into()), (2, "loading".into())],
+                },
+                _ => Response::Error {
+                    kind: crate::base::error::ErrorKind::Internal,
+                    message: "no".into(),
+                },
+            }),
+        )
+        .unwrap();
+        let store = Store::in_memory(0);
+        let sync = Synchronizer::new(store, Arc::new(ClientPool::new()));
+        let mut desired = assignment(&[job.addr().to_string()]);
+        desired[0].models[0].versions = vec![1, 2];
+        let report = sync.sync_once(&desired).unwrap();
+        assert_eq!(report.ready, 0);
+        let table = sync.routing_table();
+        assert_eq!(table.len(), 1);
+        assert_eq!(table[0].1, vec![job.addr().to_string()]);
+        assert_eq!(labels.lock().unwrap().as_slice(), &[("stable".to_string(), 1)]);
+    }
+
+    #[test]
     fn unreachable_job_reported() {
         let store = Store::in_memory(0);
         let sync = Synchronizer::new(store, Arc::new(ClientPool::new()));
@@ -385,12 +525,41 @@ mod tests {
         assert_eq!(load.replicas, 2);
         assert_eq!(load.lane_depth, 8.0); // 4.0 per replica, summed
         assert_eq!(load.queue_delay_p99_ns, 7.5e6); // max, not sum
+        assert_eq!(load.queue_delay_window_p99_ns, 2.5e6); // windowed sibling
         assert_eq!(load.shed_delta, 13.0); // first scrape: full counters
 
         // Counters unchanged → second scrape reports zero new sheds.
         let load = &sync.scrape_load(&desired)["job-0"];
         assert_eq!(load.shed_delta, 0.0);
         assert_eq!(load.lane_depth, 8.0);
+    }
+
+    #[test]
+    fn scrape_health_aggregates_per_version_across_replicas() {
+        let (a, _, _) = fake_job(true, 0.0);
+        let (b, _, _) = fake_job(true, 0.0);
+        let store = Store::in_memory(0);
+        let sync = Synchronizer::new(store, Arc::new(ClientPool::new()));
+        let desired = assignment(&[
+            a.addr().to_string(),
+            b.addr().to_string(),
+            "127.0.0.1:1".to_string(), // unreachable: contributes nothing
+        ]);
+        let health = sync.scrape_health(&desired);
+        let v1 = &health[&("m".to_string(), 1)];
+        // Counts summed over the two live replicas, p99 maxed.
+        assert_eq!(v1.requests, 40);
+        assert_eq!(v1.errors, 2);
+        assert_eq!(v1.p99_ns, 3.0e6);
+        assert!((v1.error_rate() - 0.05).abs() < 1e-9);
+        let v2 = &health[&("m".to_string(), 2)];
+        assert_eq!(v2.requests, 20);
+        assert_eq!(v2.errors, 18);
+        assert_eq!(v2.p99_ns, 8.0e6);
+        assert!((v2.error_rate() - 0.9).abs() < 1e-9);
+        // No traffic at all reads as healthy-by-absence (rate 0); the
+        // rollout gate separately requires min_requests before acting.
+        assert_eq!(VersionHealth::default().error_rate(), 0.0);
     }
 
     #[test]

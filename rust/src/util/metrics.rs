@@ -5,10 +5,20 @@
 //! log-linear buckets — per power-of-two range, `SUB_BUCKETS` linear
 //! sub-buckets — giving <= ~3% relative quantile error across ns..minutes
 //! with a fixed 2.5KB footprint and lock-free recording.
+//!
+//! Cumulative series answer "what happened since boot"; the windowed
+//! variants ([`WindowedCounter`], [`WindowedHistogram`]) answer "what
+//! is happening *now*": two buckets rotate on a [`Clock`] interval, so
+//! a read always covers between one and two intervals of history and a
+//! burst from an hour ago can never pin today's p99. Health gates
+//! (rollout engine, circuit breakers) and SLO-breach autoscaling read
+//! the windowed series; `/metrics` keeps exporting both.
 
+use crate::util::clock::{Clock, RealClock};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 const SUB_BUCKET_BITS: u32 = 5; // 32 linear sub-buckets per octave
 const SUB_BUCKETS: usize = 1 << SUB_BUCKET_BITS;
@@ -161,6 +171,20 @@ impl Histogram {
         )
     }
 
+    /// Zero every bucket and statistic. Only meaningful while no
+    /// concurrent recorder is mid-`record` (the windowed rotator calls
+    /// this under its rotation lock; a racing sample may land in the
+    /// freshly-cleared bucket, which just makes the window fractionally
+    /// wider — never wrong by more than one sample).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+
     /// Merge counts of `other` into `self` (for per-thread recorders).
     pub fn merge(&self, other: &Histogram) {
         for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
@@ -212,17 +236,165 @@ pub fn fmt_nanos(ns: u64) -> String {
     }
 }
 
+/// Shared two-bucket rotation state: `epoch` is the window index
+/// (`now / interval`) the *current* bucket belongs to; slot `epoch % 2`
+/// is current, the other slot holds the previous full window. Readers
+/// combine both, so a value covers 1–2 intervals of recent history.
+struct Rotation {
+    clock: Arc<dyn Clock>,
+    interval_ns: u64,
+    epoch: AtomicU64,
+    lock: Mutex<()>,
+}
+
+impl Rotation {
+    fn new(clock: Arc<dyn Clock>, interval: Duration) -> Self {
+        Rotation {
+            clock,
+            interval_ns: (interval.as_nanos() as u64).max(1),
+            epoch: AtomicU64::new(0),
+            lock: Mutex::new(()),
+        }
+    }
+
+    /// Advance to the current window if the clock moved past the
+    /// recorded epoch, resetting whichever slots went stale. Returns
+    /// the current slot index. `reset(i)` must clear slot `i`.
+    fn advance(&self, reset: impl Fn(usize)) -> usize {
+        let now = self.clock.now_nanos() / self.interval_ns;
+        let seen = self.epoch.load(Ordering::Acquire);
+        if now != seen {
+            let _g = self.lock.lock().unwrap();
+            let seen = self.epoch.load(Ordering::Acquire);
+            if now == seen + 1 {
+                // One interval elapsed: the slot about to become
+                // current holds window `seen - 1` — stale, clear it.
+                reset((now % 2) as usize);
+                self.epoch.store(now, Ordering::Release);
+            } else if now > seen {
+                // Idle for 2+ intervals: everything is stale.
+                reset(0);
+                reset(1);
+                self.epoch.store(now, Ordering::Release);
+            }
+        }
+        (self.epoch.load(Ordering::Acquire) % 2) as usize
+    }
+}
+
+/// Rolling counter: `sum()` reports events from the last 1–2 rotation
+/// intervals instead of since boot. Backs recent error-rate gates.
+pub struct WindowedCounter {
+    rotation: Rotation,
+    slots: [AtomicU64; 2],
+}
+
+impl WindowedCounter {
+    pub fn new(clock: Arc<dyn Clock>, interval: Duration) -> Self {
+        WindowedCounter {
+            rotation: Rotation::new(clock, interval),
+            slots: [AtomicU64::new(0), AtomicU64::new(0)],
+        }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        let slot = self.rotation.advance(|i| self.slots[i].store(0, Ordering::Relaxed));
+        self.slots[slot].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Events recorded in the current + previous window.
+    pub fn sum(&self) -> u64 {
+        self.rotation.advance(|i| self.slots[i].store(0, Ordering::Relaxed));
+        self.slots[0].load(Ordering::Relaxed) + self.slots[1].load(Ordering::Relaxed)
+    }
+}
+
+/// Rolling histogram: quantiles/count/mean cover the last 1–2 rotation
+/// intervals. The canonical source for "recent p99" — SLO autoscaling
+/// and canary latency gates read this, never the cumulative series.
+pub struct WindowedHistogram {
+    rotation: Rotation,
+    slots: [Histogram; 2],
+}
+
+impl WindowedHistogram {
+    pub fn new(clock: Arc<dyn Clock>, interval: Duration) -> Self {
+        WindowedHistogram {
+            rotation: Rotation::new(clock, interval),
+            slots: [Histogram::new(), Histogram::new()],
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        let slot = self.rotation.advance(|i| self.slots[i].reset());
+        self.slots[slot].record(v);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    /// Materialize the rolling view (current + previous window) as a
+    /// plain histogram for quantile reads. ~5KB of atomic loads — fine
+    /// at scrape frequency, not meant for per-request paths.
+    pub fn snapshot(&self) -> Histogram {
+        self.rotation.advance(|i| self.slots[i].reset());
+        let out = Histogram::new();
+        out.merge(&self.slots[0]);
+        out.merge(&self.slots[1]);
+        out
+    }
+
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.snapshot().quantile(q)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.rotation.advance(|i| self.slots[i].reset());
+        self.slots[0].count() + self.slots[1].count()
+    }
+}
+
 /// Named metric registry, used by the server's `/metrics`-style dump.
-#[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
     gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    windowed_counters: Mutex<BTreeMap<String, Arc<WindowedCounter>>>,
+    windowed_histograms: Mutex<BTreeMap<String, Arc<WindowedHistogram>>>,
+    /// Clock + rotation interval for every windowed metric this
+    /// registry creates (one knob per server: `metrics_window_ms`).
+    clock: Arc<dyn Clock>,
+    window: Duration,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+            windowed_counters: Mutex::new(BTreeMap::new()),
+            windowed_histograms: Mutex::new(BTreeMap::new()),
+            clock: RealClock::shared(),
+            window: Duration::from_secs(1),
+        }
+    }
 }
 
 impl Registry {
     pub fn new() -> Arc<Self> {
         Arc::new(Registry::default())
+    }
+
+    /// Registry whose windowed metrics rotate on `window` of `clock`
+    /// (tests drive a `ManualClock` for deterministic windows).
+    pub fn with_window(clock: Arc<dyn Clock>, window: Duration) -> Arc<Self> {
+        Arc::new(Registry { clock, window, ..Registry::default() })
     }
 
     pub fn counter(&self, name: &str) -> Arc<Counter> {
@@ -251,6 +423,25 @@ impl Registry {
             h.entry(name.to_string())
                 .or_insert_with(|| Arc::new(Histogram::new())),
         )
+    }
+
+    /// Rolling counter on this registry's window. Convention: name the
+    /// series with a `.window` suffix (`…requests.window`) so readers
+    /// can tell recent from cumulative at a glance.
+    pub fn windowed_counter(&self, name: &str) -> Arc<WindowedCounter> {
+        let mut w = self.windowed_counters.lock().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_insert_with(|| {
+            Arc::new(WindowedCounter::new(Arc::clone(&self.clock), self.window))
+        }))
+    }
+
+    /// Rolling histogram on this registry's window (same `.window`
+    /// naming convention as [`Registry::windowed_counter`]).
+    pub fn windowed_histogram(&self, name: &str) -> Arc<WindowedHistogram> {
+        let mut w = self.windowed_histograms.lock().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_insert_with(|| {
+            Arc::new(WindowedHistogram::new(Arc::clone(&self.clock), self.window))
+        }))
     }
 
     /// Prometheus-style text exposition (what the HTTP gateway's
@@ -288,6 +479,26 @@ impl Registry {
             out.push_str(&format!("{prefix}_{n}_sum {}\n", h.sum()));
             out.push_str(&format!("{prefix}_{n}_count {}\n", h.count()));
         }
+        // Windowed series are non-monotonic by construction, so they
+        // export as gauges/summaries regardless of what they count.
+        for (k, c) in self.windowed_counters.lock().unwrap().iter() {
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE {prefix}_{n} gauge\n"));
+            out.push_str(&format!("{prefix}_{n} {}\n", c.sum()));
+        }
+        for (k, w) in self.windowed_histograms.lock().unwrap().iter() {
+            let n = sanitize(k);
+            let h = w.snapshot();
+            out.push_str(&format!("# TYPE {prefix}_{n} summary\n"));
+            for q in [0.5, 0.9, 0.99, 0.999] {
+                out.push_str(&format!(
+                    "{prefix}_{n}{{quantile=\"{q}\"}} {}\n",
+                    h.quantile(q)
+                ));
+            }
+            out.push_str(&format!("{prefix}_{n}_sum {}\n", h.sum()));
+            out.push_str(&format!("{prefix}_{n}_count {}\n", h.count()));
+        }
         out
     }
 
@@ -311,6 +522,17 @@ impl Registry {
             out.push((format!("{k}.p99"), h.quantile(0.99) as f64));
             out.push((format!("{k}.max"), h.max() as f64));
         }
+        for (k, c) in self.windowed_counters.lock().unwrap().iter() {
+            out.push((k.clone(), c.sum() as f64));
+        }
+        for (k, w) in self.windowed_histograms.lock().unwrap().iter() {
+            let h = w.snapshot();
+            out.push((format!("{k}.count"), h.count() as f64));
+            out.push((format!("{k}.mean"), h.mean()));
+            out.push((format!("{k}.p50"), h.quantile(0.5) as f64));
+            out.push((format!("{k}.p99"), h.quantile(0.99) as f64));
+            out.push((format!("{k}.max"), h.max() as f64));
+        }
         out.sort_by(|a, b| a.0.cmp(&b.0));
         out
     }
@@ -326,6 +548,12 @@ impl Registry {
         }
         for (k, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!("histogram {k} {}\n", h.summary()));
+        }
+        for (k, c) in self.windowed_counters.lock().unwrap().iter() {
+            out.push_str(&format!("windowed_counter {k} {}\n", c.sum()));
+        }
+        for (k, w) in self.windowed_histograms.lock().unwrap().iter() {
+            out.push_str(&format!("windowed_histogram {k} {}\n", w.snapshot().summary()));
         }
         out
     }
@@ -510,5 +738,96 @@ mod tests {
         assert_eq!(h.quantile(0.99), 0);
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn histogram_reset_clears_everything() {
+        let h = Histogram::new();
+        h.record(100);
+        h.record(1_000_000);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.quantile(0.99), 0);
+        // Fully usable after a reset.
+        h.record(7);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max(), 7);
+    }
+
+    #[test]
+    fn windowed_counter_forgets_old_windows() {
+        use crate::util::clock::ManualClock;
+        let clock = ManualClock::new();
+        let c = WindowedCounter::new(clock.clone(), Duration::from_secs(1));
+        c.add(5);
+        assert_eq!(c.sum(), 5);
+        // One interval later: old window still visible (previous slot).
+        clock.advance(Duration::from_secs(1));
+        c.add(2);
+        assert_eq!(c.sum(), 7);
+        // Another interval: the first window's 5 rotates out.
+        clock.advance(Duration::from_secs(1));
+        assert_eq!(c.sum(), 2);
+        // Long idle gap: everything rotates out.
+        clock.advance(Duration::from_secs(10));
+        assert_eq!(c.sum(), 0);
+    }
+
+    #[test]
+    fn windowed_histogram_p99_reflects_recent_not_cumulative() {
+        use crate::util::clock::ManualClock;
+        let clock = ManualClock::new();
+        let w = WindowedHistogram::new(clock.clone(), Duration::from_secs(1));
+        // A slow burst...
+        for _ in 0..100 {
+            w.record(1_000_000_000);
+        }
+        assert!(w.quantile(0.99) >= 900_000_000);
+        // ...then two quiet intervals of fast traffic: the cumulative
+        // p99 would still read ~1s, the windowed one recovers.
+        clock.advance(Duration::from_secs(2));
+        for _ in 0..100 {
+            w.record(1_000);
+        }
+        assert!(w.quantile(0.99) < 10_000, "p99={}", w.quantile(0.99));
+        assert_eq!(w.count(), 100);
+    }
+
+    #[test]
+    fn registry_exports_windowed_series() {
+        use crate::util::clock::ManualClock;
+        let clock = ManualClock::new();
+        let r = Registry::with_window(clock.clone(), Duration::from_secs(1));
+        r.windowed_counter("health.m.v2.errors.window").add(3);
+        r.windowed_histogram("health.m.v2.latency_ns.window").record(40);
+        r.counter("health.m.v2.total").inc();
+        let samples = r.samples();
+        let get = |name: &str| {
+            samples
+                .iter()
+                .find(|(k, _)| k == name)
+                .unwrap_or_else(|| panic!("missing sample {name} in {samples:?}"))
+                .1
+        };
+        assert_eq!(get("health.m.v2.errors.window"), 3.0);
+        assert_eq!(get("health.m.v2.latency_ns.window.count"), 1.0);
+        assert_eq!(get("health.m.v2.latency_ns.window.max"), 40.0);
+        // Name-sorted alongside everything else.
+        let names: Vec<&String> = samples.iter().map(|(k, _)| k).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        // After the window rotates out, the samples read zero but stay
+        // present (scrapers see a quiet series, not a vanished one).
+        clock.advance(Duration::from_secs(3));
+        let samples = r.samples();
+        let get = |name: &str| samples.iter().find(|(k, _)| k == name).unwrap().1;
+        assert_eq!(get("health.m.v2.errors.window"), 0.0);
+        assert_eq!(get("health.m.v2.latency_ns.window.count"), 0.0);
+        // Prometheus exposition carries them as gauge/summary.
+        let text = r.render_prometheus("ts");
+        assert!(text.contains("# TYPE ts_health_m_v2_errors_window gauge\n"), "{text}");
+        assert!(text.contains("ts_health_m_v2_latency_ns_window_count 0\n"), "{text}");
     }
 }

@@ -1,0 +1,257 @@
+//! Rollout chaos soak: the health-gated rollout loop closed end to
+//! end, with NO manual controller verbs after `start_rollout`.
+//!
+//! * a healthy canary ramps, bakes, and promotes on its own;
+//! * the next canary is broken (`exec:` faults scoped to THAT version
+//!   only) — the windowed health gate auto-rolls it back and the
+//!   reason lands in the rollout status;
+//! * the faulted replicas' circuit breakers open under the error rate,
+//!   then half-open-probe back to closed once the bad version is gone;
+//! * a background client pinned to the `stable` label sees ZERO errors
+//!   through all of it — version churn, forced replica churn, and
+//!   autoscaler passes included.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+use tensorserve::base::tensor::Tensor;
+use tensorserve::inference::ModelSpec;
+use tensorserve::rpc::proto::{Request, Response};
+use tensorserve::runtime::artifacts::ArtifactSpec;
+use tensorserve::tfs2::autoscaler::AutoscalerConfig;
+use tensorserve::tfs2::fleet::{Fleet, FleetConfig};
+use tensorserve::tfs2::rollout::RolloutPolicy;
+use tensorserve::tfs2::router::BreakerConfig;
+use tensorserve::tfs2::store::Store;
+use tensorserve::util::fault::{arm, reset, Fault};
+
+/// The fault registry is process-global, so fault-using tests in this
+/// binary run one at a time.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_faults() -> std::sync::MutexGuard<'static, ()> {
+    FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn synthetic_artifacts(root: &Path, model: &str, versions: &[u64]) -> u64 {
+    let mut ram = 0;
+    for &v in versions {
+        let spec = ArtifactSpec::synthetic_multi_head(model, v, 8, 3);
+        ram = spec.ram_estimate_bytes;
+        spec.write_to(&root.join(model).join(v.to_string())).unwrap();
+    }
+    ram
+}
+
+fn temp_root(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ts-rollout-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn reconcile_until_ready(fleet: &Fleet, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let report = fleet.reconcile().unwrap();
+        if report.ready >= want {
+            return;
+        }
+        assert!(Instant::now() < deadline, "fleet never ready: {report:?}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+fn predict(spec: ModelSpec) -> Request {
+    Request::Predict {
+        spec,
+        signature: String::new(),
+        inputs: vec![("x".into(), Tensor::zeros(vec![1, 8]))],
+    }
+}
+
+/// The policy both phases run: one 50% step, short bake, tight error
+/// gate. The latency gate is effectively off — synthetic versions have
+/// identical cost, so only the error gate should ever fire here.
+fn policy() -> RolloutPolicy {
+    RolloutPolicy {
+        canary_fraction_ramp: vec![0.5],
+        bake_ms: 300,
+        max_error_rate: 0.2,
+        max_p99_vs_stable: 1e9,
+        min_requests: 5,
+    }
+}
+
+#[test]
+fn churn_soak_promotes_healthy_canary_and_auto_rolls_back_broken_one() {
+    let _guard = lock_faults();
+    reset();
+    let root = temp_root("soak");
+    let ram = synthetic_artifacts(&root, "roll_m", &[1, 2, 3]);
+
+    let fleet = Arc::new(
+        Fleet::start(
+            Store::in_memory(0),
+            FleetConfig {
+                jobs: 1,
+                artifacts_root: root.clone(),
+                hedge_delay: Duration::from_millis(25),
+                // Rate-gate dominated: stable/canary traffic alternates,
+                // so a consecutive-failure gate can never trip here; the
+                // windowed error rate under a broken 50% canary (~half
+                // of all attempts failing) must.
+                breaker: BreakerConfig {
+                    consecutive_failures: 50,
+                    error_rate: 0.25,
+                    min_requests: 5,
+                    open_ms: 400,
+                    window_ms: 1_000,
+                },
+                autoscaler: AutoscalerConfig { cooldown_ticks: 1, ..Default::default() },
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    fleet.deploy("roll_m", root.to_str().unwrap(), ram, 1).unwrap();
+    reconcile_until_ready(&fleet, 1);
+    fleet.set_label("roll_m", "stable", 1).unwrap();
+
+    // Background client pinned to the stable label: it must never see
+    // an error, through promotion, rollback, and replica churn alike.
+    let stop = Arc::new(AtomicBool::new(false));
+    let stable_ok = Arc::new(AtomicU64::new(0));
+    let stable_errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let stable_client = {
+        let (fleet, stop) = (Arc::clone(&fleet), Arc::clone(&stop));
+        let (ok, errors) = (Arc::clone(&stable_ok), Arc::clone(&stable_errors));
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                match fleet.router.route(&predict(ModelSpec::with_label("roll_m", "stable"))) {
+                    Ok(Response::Predict { .. }) => {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(other) => errors.lock().unwrap().push(format!("{other:?}")),
+                    Err(e) => errors.lock().unwrap().push(format!("{e:#}")),
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        })
+    };
+
+    // Unlabeled traffic feeding the canary split + one full control-
+    // plane tick (rollout evaluation AND an autoscaler pass).
+    let tick = |fleet: &Fleet| -> String {
+        for _ in 0..60 {
+            let _ = fleet.router.route(&predict(ModelSpec::latest("roll_m")));
+        }
+        fleet.autoscale_once().unwrap();
+        fleet.rollout_once().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        fleet.rollout_status("roll_m").unwrap()
+    };
+
+    // ---- Phase A: healthy canary v2 ramps, bakes, promotes. --------
+    fleet.start_rollout("roll_m", 2, policy()).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut churned = false;
+    loop {
+        let status = tick(&fleet);
+        if status.starts_with("promoted") {
+            break;
+        }
+        assert!(
+            !status.starts_with("rolled_back"),
+            "healthy canary rolled back: {status}"
+        );
+        // Replica churn mid-rollout: once traffic is ramping, grow the
+        // job; the partially-loaded newcomer must not drop a request.
+        if !churned && status.starts_with("ramping") {
+            fleet.cluster.scale_to("job-0", 2).unwrap();
+            churned = true;
+        }
+        assert!(Instant::now() < deadline, "rollout stuck: {status}");
+    }
+    assert!(churned, "rollout promoted before the churn step ran");
+    assert_eq!(fleet.controller.desired_versions("roll_m").unwrap(), vec![2]);
+    assert_eq!(fleet.controller.resolve_label("roll_m", "stable").unwrap(), 2);
+    assert!(fleet.controller.resolve_label("roll_m", "canary").is_err());
+
+    // ---- Phase B: v3 is broken — faults scoped to v3 ONLY. ---------
+    arm(
+        "exec:roll_m@v3",
+        Fault::Fail { message: "v3 crashes on execute".into() },
+        1_000_000,
+    );
+    fleet.start_rollout("roll_m", 3, policy()).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut breaker_opened = false;
+    let status = loop {
+        let status = tick(&fleet);
+        // The broken canary's failures push the per-replica windowed
+        // error rate past the breaker gate before the rollout gate has
+        // even scraped: catch the open state while the fault is live.
+        for addr in fleet.cluster.replica_addrs("job-0") {
+            if fleet.router.breaker_state(&addr) == Some("open") {
+                breaker_opened = true;
+            }
+        }
+        if status.starts_with("rolled_back") {
+            break status;
+        }
+        assert!(!status.starts_with("promoted"), "broken canary promoted");
+        assert!(Instant::now() < deadline, "rollback never happened: {status}");
+    };
+    // The gate, the version, and the reason all surface in the status.
+    assert!(status.contains("error-rate"), "{status}");
+    assert!(status.contains("v3"), "{status}");
+    assert!(status.contains("stable v2 restored"), "{status}");
+    assert!(breaker_opened, "no replica breaker opened under the broken canary");
+    // Auto-rollback restored the stable desired set and pruned the
+    // canary label — all without a single manual controller call.
+    assert_eq!(fleet.controller.desired_versions("roll_m").unwrap(), vec![2]);
+    assert_eq!(fleet.controller.resolve_label("roll_m", "stable").unwrap(), 2);
+    assert!(fleet.controller.resolve_label("roll_m", "canary").is_err());
+
+    // ---- Breaker recovery + scale back down. -----------------------
+    // v3 is unloaded, so the (still-armed) fault never fires again:
+    // open breakers must half-open-probe on live traffic and close.
+    fleet.cluster.scale_to("job-0", 1).unwrap();
+    fleet.reconcile().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        for _ in 0..20 {
+            let _ = fleet.router.route(&predict(ModelSpec::latest("roll_m")));
+        }
+        let healed = fleet
+            .cluster
+            .replica_addrs("job-0")
+            .iter()
+            .all(|a| matches!(fleet.router.breaker_state(a), None | Some("closed")));
+        if healed {
+            break;
+        }
+        assert!(Instant::now() < deadline, "breakers never closed again");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    stable_client.join().unwrap();
+    let errors = stable_errors.lock().unwrap();
+    assert!(
+        errors.is_empty(),
+        "stable-label client saw {} errors, first: {}",
+        errors.len(),
+        errors[0]
+    );
+    assert!(
+        stable_ok.load(Ordering::Relaxed) > 100,
+        "stable-label client barely ran"
+    );
+
+    reset();
+    fleet.stop();
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -157,11 +157,11 @@ fn autoscaler_scales_on_real_lane_depth_and_drains_back() {
                     min_replicas: 1,
                     max_replicas: 3,
                     cooldown_ticks: 1,
-                    // The queue-delay histogram is cumulative, so the
-                    // SLO trigger would pin scale-ups long after the
-                    // load stops; this test isolates the lane-depth
-                    // (gauge) signal, which drains with the queue.
-                    queue_delay_slo_ns: f64::INFINITY,
+                    // The SLO trigger now reads the *windowed*
+                    // queue-delay p99, which empties once load stops —
+                    // so the default threshold no longer pins
+                    // scale-ups after the drain and needs no opt-out.
+                    queue_delay_slo_ns: 5e7,
                     shed_weight: 1.0,
                 },
                 ..Default::default()

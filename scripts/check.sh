@@ -76,6 +76,15 @@ cargo test -q --test tfs2_integration
 echo "==> cargo test -q --test tfs2_fleet"
 cargo test -q --test tfs2_fleet
 
+# Health-gated rollout chaos soak: a healthy canary promotes on its
+# own, a version-scoped exec fault forces an auto-rollback with the
+# reason surfaced, replica breakers open and half-open-recover, and a
+# stable-label client sees zero errors through version + replica
+# churn. Named explicitly so a rollout regression is its own failing
+# step.
+echo "==> cargo test -q --test rollout_chaos"
+cargo test -q --test rollout_chaos
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "==> cargo fmt --check"
     cargo fmt --check
